@@ -1,0 +1,95 @@
+//! Deployment pipeline study (experiment E3): accuracy of the four
+//! representations across weight/activation bit widths, plus the
+//! threshold-merge variant (E2's deployment form).
+//!
+//!     cargo run --release --example deploy_pipeline [-- --ckpt ck.json]
+//!
+//! Without a checkpoint this trains nothing — it uses a fixed seed net
+//! whose accuracy is low; pass a `nemo train` checkpoint for the real
+//! Table-1 analog (examples/e2e_qat.rs automates the whole flow).
+
+use nemo::cli::Args;
+use nemo::data::SynthDigits;
+use nemo::io::Checkpoint;
+use nemo::model::synthnet::{SynthNet, EPS_IN};
+use nemo::train::{eval_float, eval_integer};
+use nemo::transform::{calibrate_percentile, deploy, DeployOptions};
+use nemo::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&std::iter::once("deploy_pipeline".to_string())
+        .chain(argv)
+        .collect::<Vec<_>>())?;
+
+    let mut rng = Rng::new(9);
+    let mut net = match args.str_opt("ckpt") {
+        Some(p) => SynthNet::from_checkpoint(&Checkpoint::load(p)?)?,
+        None => {
+            eprintln!("note: no --ckpt given; using an untrained net");
+            SynthNet::init(&mut rng)
+        }
+    };
+
+    let (eval_x, eval_l) = SynthDigits::eval_set(123, 512);
+    let mut cal = SynthDigits::new(77);
+    let (cal_x, _) = cal.batch(64);
+    net.act_betas =
+        calibrate_percentile(&net.to_fp_graph(), &[cal_x], 0.995);
+
+    let fp_acc = eval_float(&net.to_fp_graph(), &eval_x, &eval_l);
+    println!("\nE3: accuracy across representations (512 eval samples)");
+    println!("{:<18} {:>8} {:>8} {:>8} {:>8}", "bits (W/A)", "FP", "FQ", "QD", "ID");
+    for bits in [8u32, 4, 2] {
+        let fq = net.to_pact_graph(bits);
+        let fq_h = nemo::transform::quantize_pact(
+            &net.to_fp_graph(),
+            bits,
+            bits,
+            &net.act_betas,
+        );
+        let fq_acc = eval_float(&fq_h, &eval_x, &eval_l);
+        let dep = deploy(
+            &fq,
+            DeployOptions { wbits: bits, abits: bits, ..DeployOptions::default() },
+        )?;
+        let qd_acc = eval_float(&dep.qd, &eval_x, &eval_l);
+        let id_acc = eval_integer(&dep.id, &eval_x, &eval_l, EPS_IN);
+        println!(
+            "{:<18} {:>7.1}% {:>7.1}% {:>7.1}% {:>7.1}%",
+            format!("{bits}/{bits}"),
+            fp_acc * 100.0,
+            fq_acc * 100.0,
+            qd_acc * 100.0,
+            id_acc * 100.0
+        );
+    }
+
+    // Threshold-merge deployment (sec. 3.4): exact BN+act, no IntBn.
+    println!("\nE2 deployment form: threshold-merged BN+activation");
+    for bits in [4u32, 2] {
+        let fq = net.to_pact_graph(bits);
+        let dep = deploy(
+            &fq,
+            DeployOptions {
+                wbits: bits,
+                abits: bits,
+                use_thresholds: true,
+                ..DeployOptions::default()
+            },
+        )?;
+        let id_acc = eval_integer(&dep.id, &eval_x, &eval_l, EPS_IN);
+        let n_th: usize = dep
+            .id
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op, nemo::graph::int::IntOp::ThreshAct { .. }))
+            .count();
+        println!(
+            "  {bits}/{bits} bits: ID-thresholds accuracy {:>5.1}%  ({n_th} threshold acts, {} thresholds/channel)",
+            id_acc * 100.0,
+            (1u32 << bits) - 1
+        );
+    }
+    Ok(())
+}

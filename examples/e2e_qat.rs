@@ -1,0 +1,117 @@
+//! END-TO-END driver (the repository's headline validation; experiments
+//! E3 + E4): proves all three layers compose on a real workload.
+//!
+//!     make artifacts && cargo run --release --example e2e_qat
+//!
+//! Flow (Python never runs — all compute goes through the AOT artifacts
+//! or the Rust engines):
+//!   1. train SynthNet in FullPrecision for several hundred steps via the
+//!      PJRT-compiled train step, logging the loss curve;
+//!   2. calibrate PACT clipping bounds from the FP stage (sec. 2);
+//!   3. QAT fine-tune in FakeQuantized at 4 bits (STE + trainable beta);
+//!   4. deploy: harden_weights -> bn_quantizer -> set_deployment ->
+//!      integerize (sec. 3);
+//!   5. evaluate all four representations + the PJRT IntegerDeployable
+//!      artifact, and check engine-vs-PJRT bit-exactness.
+//!
+//! Results land in EXPERIMENTS.md (E3/E4).
+
+use nemo::data::SynthDigits;
+use nemo::io::artifacts_dir;
+use nemo::model::artifact_args::synthnet_id_args;
+use nemo::model::synthnet::{SynthNet, EPS_IN};
+use nemo::quant::quantize_input;
+use nemo::runtime::Runtime;
+use nemo::engine::IntegerEngine;
+use nemo::train::{eval_float, eval_integer, train_fp, train_fq, TrainConfig};
+use nemo::transform::{calibrate_percentile, deploy, DeployOptions};
+use nemo::util::rng::Rng;
+
+fn curve(losses: &[f64], buckets: usize) -> String {
+    let chunk = (losses.len() / buckets).max(1);
+    losses
+        .chunks(chunk)
+        .map(|c| format!("{:.3}", c.iter().sum::<f64>() / c.len() as f64))
+        .collect::<Vec<_>>()
+        .join(" -> ")
+}
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new(artifacts_dir())?;
+    let seed = 1u64;
+    let mut rng = Rng::new(seed);
+    let mut net = SynthNet::init(&mut rng);
+    let mut data = SynthDigits::new(seed);
+    let bits = 4u32;
+
+    // -- 1. FullPrecision training ---------------------------------------
+    let fp_cfg = TrainConfig { steps: 600, lr: 0.3, lr_decay: true, seed, log_every: 100 };
+    println!("== stage 1: FullPrecision training ({} steps, b=32) ==", fp_cfg.steps);
+    let t0 = std::time::Instant::now();
+    let fp_rep = train_fp(&rt, &mut net, &mut data, &fp_cfg)?;
+    println!("loss curve: {}", curve(&fp_rep.losses, 8));
+    println!("wall: {:.1}s ({:.1} steps/s)", t0.elapsed().as_secs_f64(),
+             fp_cfg.steps as f64 / t0.elapsed().as_secs_f64());
+
+    let (eval_x, eval_l) = SynthDigits::eval_set(seed, 1024);
+    let fp_acc = eval_float(&net.to_fp_graph(), &eval_x, &eval_l);
+    println!("FP accuracy: {:.1}%", fp_acc * 100.0);
+
+    // -- 2. calibration ----------------------------------------------------
+    let (cal_x, _) = data.batch(128);
+    net.act_betas = calibrate_percentile(&net.to_fp_graph(), &[cal_x], 0.995);
+    println!("\n== stage 2: calibrated PACT betas {:?}", net.act_betas);
+
+    // Pre-QAT deployment at 4 bits (ablation: what QAT buys us, E4).
+    let dep0 = deploy(
+        &net.to_pact_graph(bits),
+        DeployOptions { wbits: bits, abits: bits, ..DeployOptions::default() },
+    )?;
+    let id_acc_pre = eval_integer(&dep0.id, &eval_x, &eval_l, EPS_IN);
+
+    // -- 3. QAT fine-tune at 4 bits (STE, trainable beta) ------------------
+    let fq_cfg = TrainConfig { steps: 300, lr: 0.06, lr_decay: true, seed, log_every: 100 };
+    println!("\n== stage 3: FakeQuantized QAT w{bits}a{bits} ({} steps) ==", fq_cfg.steps);
+    let fq_rep = train_fq(&rt, &mut net, &mut data, bits, bits, &fq_cfg)?;
+    println!("loss curve: {}", curve(&fq_rep.losses, 8));
+    println!("betas after QAT: {:?}", net.act_betas);
+
+    // -- 4. deployment ------------------------------------------------------
+    println!("\n== stage 4: deployment (sec. 3 pipeline) ==");
+    let dep = deploy(
+        &net.to_pact_graph(bits),
+        DeployOptions { wbits: bits, abits: bits, ..DeployOptions::default() },
+    )?;
+    for l in &dep.layers {
+        println!(
+            "  {:<6} eps_w {:.3e}  eps_phi_out {:.3e}  eps_y {:.3e}  m {} d {}",
+            l.name, l.eps_w, l.eps_phi_out, l.eps_y, l.m, l.d
+        );
+    }
+
+    // -- 5. evaluation -------------------------------------------------------
+    println!("\n== stage 5: evaluation (1024 samples) ==");
+    let fq_acc = eval_float(&dep.qd, &eval_x, &eval_l); // QD == hardened FQ
+    let id_acc = eval_integer(&dep.id, &eval_x, &eval_l, EPS_IN);
+    println!("  FP  (float32)           : {:.1}%", fp_acc * 100.0);
+    println!("  ID  w{bits}a{bits} pre-QAT      : {:.1}%", id_acc_pre * 100.0);
+    println!("  QD  w{bits}a{bits} post-QAT     : {:.1}%", fq_acc * 100.0);
+    println!("  ID  w{bits}a{bits} post-QAT     : {:.1}%", id_acc * 100.0);
+
+    // PJRT (Pallas kernels) vs integer engine: bit-exact on a batch.
+    let qx = quantize_input(&eval_x.slice_batch(0, 16), EPS_IN);
+    let engine_out = IntegerEngine::new().run(&dep.id, &qx);
+    let exe = rt.load("synthnet_id_fwd_b16")?;
+    let mut args = synthnet_id_args(&dep)?;
+    args.push(qx.into());
+    let pjrt_out = exe.run(&args)?;
+    assert_eq!(
+        pjrt_out[0].as_i32()?.data(),
+        engine_out.data(),
+        "PJRT and IntegerEngine must agree bit-exactly"
+    );
+    println!("  PJRT(Pallas) == IntegerEngine on integer logits: bit-exact ✓");
+
+    println!("\nE2E OK");
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! Quickstart: the four NEMO representations in ~60 lines.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Builds a small MLP, walks it FullPrecision -> FakeQuantized ->
+//! QuantizedDeployable -> IntegerDeployable, and shows that the final
+//! integer-only network (no floats anywhere on the value path) agrees
+//! with the float pipeline. No AOT artifacts required.
+
+use nemo::engine::{FloatEngine, IntegerEngine};
+use nemo::model::mlp;
+use nemo::quant::quantize_input;
+use nemo::tensor::Tensor;
+use nemo::transform::{calibrate, deploy, quantize_pact, DeployOptions};
+use nemo::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(42);
+    let eps_in = 1.0 / 255.0;
+
+    // 1. FullPrecision: an ordinary float network (sec. 1).
+    let fp = mlp(&mut rng, 64, 48, 10, eps_in);
+    let x = Tensor::from_vec(
+        &[4, 64],
+        (0..256).map(|_| rng.uniform(0.0, 1.0) as f32).collect(),
+    );
+    let fp_out = FloatEngine::new().run(&fp, &x);
+
+    // 2. FakeQuantized: PACT clipping bounds from FP calibration (sec. 2).
+    let betas = calibrate(&fp, &[x.clone()]);
+    println!("calibrated PACT betas: {betas:?}");
+    let fq = quantize_pact(&fp, 8, 8, &betas);
+    let fq_out = FloatEngine::new().run(&fq, &x);
+
+    // 3+4. QuantizedDeployable + IntegerDeployable in one transform
+    //      (harden_weights + bn_quantizer + set_deployment + integerize).
+    let dep = deploy(&fq, DeployOptions::default())?;
+    let qd_out = FloatEngine::new().run(&dep.qd, &x);
+
+    // Integer-only inference: quantize the input image (eps_in = 1/255,
+    // sec. 3.7) and run on integer images end to end.
+    let qx = quantize_input(&x, eps_in);
+    let id_out = IntegerEngine::new().run(&dep.id, &qx);
+
+    println!("\nlogits for sample 0:");
+    println!("  FP : {:?}", &fp_out.data()[..10]);
+    println!("  FQ : {:?}", &fq_out.data()[..10]);
+    println!("  QD : {:?}", &qd_out.data()[..10]);
+    let id_real: Vec<f32> = id_out.data()[..10]
+        .iter()
+        .map(|q| (*q as f64 * dep.eps_out) as f32)
+        .collect();
+    println!("  ID : {id_real:?}  (eps_out * integer image)");
+    println!("  ID integer image: {:?}", &id_out.data()[..10]);
+
+    assert_eq!(
+        fp_out.argmax_rows(),
+        id_out.argmax_rows(),
+        "integer-only deployment changed the predictions!"
+    );
+    println!("\nargmax agreement FP == ID on all {} samples ✓", x.shape()[0]);
+    println!("max |QD - eps*ID| = {:.2e}", {
+        let mut m = 0f64;
+        for (a, b) in qd_out.data().iter().zip(id_out.data()) {
+            m = m.max((*a as f64 - *b as f64 * dep.eps_out).abs());
+        }
+        m
+    });
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! Serving demo (experiment E8): the coordinator batching requests over
+//! the AOT-compiled IntegerDeployable executables, swept over batching
+//! configurations.
+//!
+//!     make artifacts && cargo run --release --example serve_quantized
+//!
+//! Prints a latency/throughput table per (max_batch, clients) point —
+//! the data behind EXPERIMENTS.md E8.
+
+use std::time::{Duration, Instant};
+
+use nemo::coordinator::{ModelVariant, Server, ServerConfig};
+use nemo::data::SynthDigits;
+use nemo::io::artifacts_dir;
+use nemo::model::artifact_args::synthnet_id_args;
+use nemo::model::synthnet::{SynthNet, EPS_IN};
+use nemo::quant::quantize_input;
+use nemo::runtime::Runtime;
+use nemo::transform::{deploy, DeployOptions};
+use nemo::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new(artifacts_dir())?;
+    let mut rng = Rng::new(4);
+    let net = SynthNet::init(&mut rng);
+    let dep = deploy(&net.to_pact_graph(8), DeployOptions::default())?;
+    let base_args = synthnet_id_args(&dep)?;
+
+    println!(
+        "{:<10} {:>8} {:>10} {:>10} {:>10} {:>12} {:>10}",
+        "max_batch", "clients", "p50 (ms)", "p95 (ms)", "p99 (ms)", "thruput r/s", "mean batch"
+    );
+    let n_requests = 1024usize;
+    for max_batch in [1usize, 4, 16] {
+        for clients in [1usize, 8, 32] {
+            let model = ModelVariant::load(&rt, "synthnet", "id_fwd_xla", base_args.clone())?;
+            let server = Server::start(
+                vec![model],
+                ServerConfig {
+                    max_batch,
+                    batch_timeout: Duration::from_micros(300),
+                    n_workers: 2,
+                },
+            );
+            let t0 = Instant::now();
+            let mut joins = Vec::new();
+            for c in 0..clients {
+                let h = server.handle();
+                let per = n_requests / clients;
+                joins.push(std::thread::spawn(move || {
+                    let mut data = SynthDigits::new(500 + c as u64);
+                    for _ in 0..per {
+                        let (x, _) = data.batch(1);
+                        let qx = quantize_input(&x, EPS_IN);
+                        h.infer("synthnet", qx).expect("infer");
+                    }
+                }));
+            }
+            for j in joins {
+                j.join().unwrap();
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            let mut m = server.stop();
+            println!(
+                "{:<10} {:>8} {:>10.3} {:>10.3} {:>10.3} {:>12.0} {:>10.2}",
+                max_batch,
+                clients,
+                m.e2e_latency.percentile(0.50) * 1e3,
+                m.e2e_latency.percentile(0.95) * 1e3,
+                m.e2e_latency.percentile(0.99) * 1e3,
+                m.throughput(wall),
+                m.batch_sizes.mean()
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,390 @@
+"""AOT exporter: lower every L2 graph to HLO *text* + write manifest/goldens.
+
+Run once by `make artifacts`:
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Outputs:
+  artifacts/<name>.hlo.txt   — HLO text modules (the interchange format:
+                               jax >= 0.5 serialized protos use 64-bit ids
+                               which xla_extension 0.5.1 rejects; the text
+                               parser reassigns ids and round-trips).
+  artifacts/manifest.json    — arch config + per-artifact argument list
+                               (name/shape/dtype) + output counts, so the
+                               Rust runtime assembles buffers by name.
+  artifacts/goldens.json     — cross-language golden vectors: derived
+                               integer deployment parameters and expected
+                               outputs for bit-exact Rust validation.
+
+Python never runs after this; the Rust binary is self-contained.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import deploy as dp
+from . import model as M
+from . import quantlib as ql
+from .kernels import ref as kref
+from .kernels.avgpool import avgpool as k_avgpool
+from .kernels.intbn import intbn as k_intbn
+from .kernels.qgemm import qgemm as k_qgemm
+from .kernels.requant import requant as k_requant
+from .kernels.thresh import thresh as k_thresh
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _arg_entries(names, specs):
+    return [dict(name=n, shape=list(s.shape), dtype=str(np.dtype(s.dtype)))
+            for n, s in zip(names, specs)]
+
+
+class Exporter:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.manifest = dict(arch=M.ARCH, artifacts=[])
+
+    def export(self, name: str, fn, arg_names, arg_specs, n_outputs: int,
+               meta=None):
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        entry = dict(name=name, file=fname,
+                     args=_arg_entries(arg_names, arg_specs),
+                     n_outputs=n_outputs)
+        if meta:
+            entry.update(meta)
+        self.manifest["artifacts"].append(entry)
+        print(f"  {fname:48s} {len(text) // 1024:6d} KiB, "
+              f"{len(arg_specs)} args -> {n_outputs} outputs")
+
+
+# ---------------------------------------------------------------------------
+# Model artifact definitions
+# ---------------------------------------------------------------------------
+
+
+def export_models(ex: Exporter):
+    pspec = M.param_spec()
+    sspec = M.bn_state_spec()
+    aspec = M.act_beta_spec()
+    np_, ns_, na_ = len(pspec), len(sspec), len(aspec)
+
+    def fp_fwd_flat(*flat):
+        x = flat[-1]
+        return tuple([M.fp_fwd(flat[:np_], flat[np_:np_ + ns_], x)])
+
+    def fq_fwd_flat(wbits, abits, *flat):
+        x = flat[-1]
+        return tuple([M.fq_fwd(flat[:np_], flat[np_:np_ + ns_],
+                               flat[np_ + ns_:np_ + ns_ + na_], x,
+                               wbits=wbits, abits=abits)])
+
+    def qd_fwd_flat(*flat):
+        return tuple([M.qd_fwd(flat[:-1], flat[-1])])
+
+    def id_fwd_flat(*flat):
+        return tuple([M.id_fwd(flat[:-1], flat[-1])])
+
+    def fp_train_flat(*flat):
+        params = flat[:np_]
+        state = flat[np_:np_ + ns_]
+        x, y, lr = flat[-3], flat[-2], flat[-1]
+        p2, s2, loss = M.fp_train_step(params, state, x, y, lr)
+        return tuple(list(p2) + list(s2) + [loss])
+
+    def fq_train_flat(wbits, abits, *flat):
+        params = flat[:np_]
+        state = flat[np_:np_ + ns_]
+        betas = flat[np_ + ns_:np_ + ns_ + na_]
+        x, y, lr = flat[-3], flat[-2], flat[-1]
+        p2, s2, b2, loss = M.fq_train_step(params, state, betas, x, y, lr,
+                                           wbits=wbits, abits=abits)
+        return tuple(list(p2) + list(s2) + list(b2) + [loss])
+
+    pnames = [n for n, _ in pspec]
+    pspecs = [_spec(s, F32) for _, s in pspec]
+    snames = [n for n, _ in sspec]
+    sspecs = [_spec(s, F32) for _, s in sspec]
+    anames = [n for n, _ in aspec]
+    aspecs = [_spec(s, F32) for _, s in aspec]
+
+    def xin(b):
+        return _spec((b, *M.IN_SHAPE), F32)
+
+    # FullPrecision forward.
+    for b in (1, 8, 16):
+        ex.export(f"synthnet_fp_fwd_b{b}", fp_fwd_flat,
+                  pnames + snames + ["x"], pspecs + sspecs + [xin(b)],
+                  n_outputs=1, meta=dict(kind="fp_fwd", batch=b))
+
+    # FullPrecision train step.
+    b = 32
+    ex.export("synthnet_fp_train_b32", fp_train_flat,
+              pnames + snames + ["x", "y", "lr"],
+              pspecs + sspecs + [xin(b), _spec((b,), I32), _spec((), F32)],
+              n_outputs=np_ + ns_ + 1, meta=dict(kind="fp_train", batch=b))
+
+    # FakeQuantized forward + train, per bit config.
+    for wb, ab in ((8, 8), (4, 4), (2, 2)):
+        for b in (1, 8):
+            ex.export(f"synthnet_fq_fwd_w{wb}a{ab}_b{b}",
+                      functools.partial(fq_fwd_flat, wb, ab),
+                      pnames + snames + anames + ["x"],
+                      pspecs + sspecs + aspecs + [xin(b)],
+                      n_outputs=1,
+                      meta=dict(kind="fq_fwd", batch=b, wbits=wb, abits=ab))
+        b = 32
+        ex.export(f"synthnet_fq_train_w{wb}a{ab}_b32",
+                  functools.partial(fq_train_flat, wb, ab),
+                  pnames + snames + anames + ["x", "y", "lr"],
+                  pspecs + sspecs + aspecs + [xin(b), _spec((b,), I32),
+                                              _spec((), F32)],
+                  n_outputs=np_ + ns_ + na_ + 1,
+                  meta=dict(kind="fq_train", batch=b, wbits=wb, abits=ab))
+
+    # QuantizedDeployable forward.
+    qspec = M.qd_spec()
+    qnames = [n for n, _ in qspec]
+    qspecs = [_spec(s, F32) for _, s in qspec]
+    for b in (1, 8):
+        ex.export(f"synthnet_qd_fwd_b{b}", qd_fwd_flat, qnames + ["x"],
+                  qspecs + [xin(b)], n_outputs=1,
+                  meta=dict(kind="qd_fwd", batch=b))
+
+    # IntegerDeployable forward: the Pallas-kernel build (kernel-identity
+    # and TPU-shaped) and the XLA-native build (CPU serving fast path) —
+    # bit-exact same function, same argument spec.
+    ispec = M.id_spec()
+    inames = [n for n, _ in ispec]
+    ispecs = [_spec(s, I32) for _, s in ispec]
+
+    def id_xla_flat(*flat):
+        return tuple([M.id_fwd_xla(flat[:-1], flat[-1])])
+
+    for b in (1, 2, 4, 8, 16):
+        ex.export(f"synthnet_id_fwd_b{b}", id_fwd_flat, inames + ["qx"],
+                  ispecs + [_spec((b, *M.IN_SHAPE), I32)], n_outputs=1,
+                  meta=dict(kind="id_fwd", batch=b))
+        ex.export(f"synthnet_id_xla_b{b}", id_xla_flat, inames + ["qx"],
+                  ispecs + [_spec((b, *M.IN_SHAPE), I32)], n_outputs=1,
+                  meta=dict(kind="id_fwd_xla", batch=b))
+
+
+# ---------------------------------------------------------------------------
+# Micro-kernel artifacts (per-kernel benches / tests from rust)
+# ---------------------------------------------------------------------------
+
+
+def export_kernels(ex: Exporter):
+    ex.export("kernel_qgemm_256", lambda a, b: (k_qgemm(a, b),),
+              ["a", "b"], [_spec((256, 256), I32), _spec((256, 256), I32)],
+              n_outputs=1, meta=dict(kind="kernel"))
+    ex.export("kernel_requant_64k",
+              lambda q, m, d, lo, hi: (k_requant(q, m, d, lo, hi),),
+              ["q", "m", "d", "lo", "hi"],
+              [_spec((65536,), I32)] + [_spec((), I32)] * 4,
+              n_outputs=1, meta=dict(kind="kernel"))
+    ex.export("kernel_intbn_4096x64",
+              lambda q, k, l: (k_intbn(q, k, l),),
+              ["q", "kappa_q", "lambda_q"],
+              [_spec((4096, 64), I32), _spec((64,), I32), _spec((64,), I32)],
+              n_outputs=1, meta=dict(kind="kernel"))
+    ex.export("kernel_thresh_4096x32",
+              lambda q, th: (k_thresh(q, th),),
+              ["q", "thresholds"],
+              [_spec((4096, 32), I32), _spec((32, 15), I32)],
+              n_outputs=1, meta=dict(kind="kernel"))
+    ex.export("kernel_avgpool_8x32",
+              lambda q: (k_avgpool(q, 4, 4, M.POOL_D),),
+              ["q"], [_spec((8, 32, 16, 16), I32)],
+              n_outputs=1, meta=dict(kind="kernel"))
+
+
+# ---------------------------------------------------------------------------
+# Goldens: cross-language validation vectors
+# ---------------------------------------------------------------------------
+
+
+def init_params(seed: int = 42):
+    """He-ish init; goldens carry the actual values, so the cross-language
+    match is exact. Every value is rounded through float32 before use:
+    NEMO stores everything in float32 (paper sec. 3 note), and the Rust
+    side keeps weights in f32 — rounding here makes the f64 transform
+    arithmetic bit-identical on both sides."""
+    rng = np.random.default_rng(seed)
+    params, state = [], []
+    for c in M.CONVS:
+        fan_in = c["cin"] * c["k"] * c["k"]
+        params.append(rng.normal(0, np.sqrt(2.0 / fan_in),
+                                 (c["cout"], c["cin"], c["k"], c["k"])))
+        params.append(np.abs(rng.normal(1.0, 0.1, (c["cout"],))))  # gamma>0
+        params.append(rng.normal(0.0, 0.1, (c["cout"],)))          # beta
+        state.append(rng.normal(0.0, 0.2, (c["cout"],)))           # mu
+        state.append(np.abs(rng.normal(1.0, 0.2, (c["cout"],))))   # var
+    params.append(rng.normal(0, np.sqrt(2.0 / M.FC_IN),
+                             (M.FC_IN, M.N_CLASSES)))
+    params.append(rng.normal(0, 0.05, (M.N_CLASSES,)))
+    return ([a.astype(np.float32).astype(np.float64) for a in params],
+            [a.astype(np.float32).astype(np.float64) for a in state])
+
+
+def _tolist(a):
+    return np.asarray(a).tolist()
+
+
+def make_goldens():
+    rng = np.random.default_rng(7)
+    g = {}
+
+    # choose_d / multiplier cases (transform determinism cross-check).
+    cases = []
+    for _ in range(64):
+        eps_a = float(np.exp(rng.uniform(-14, -2)))
+        eps_b = float(np.exp(rng.uniform(-10, -1)))
+        factor = int(rng.choice([16, 64, 256]))
+        d = ql.choose_d(eps_a, eps_b, factor)
+        m = ql.requant_multiplier(eps_a, eps_b, d)
+        cases.append(dict(eps_a=eps_a, eps_b=eps_b, factor=factor, d=d, m=m))
+    g["requant_param_cases"] = cases
+
+    # BN quantization + thresholds case.
+    cout = 16
+    gamma = np.abs(rng.normal(1, 0.3, cout)) + 0.05
+    sigma = np.abs(rng.normal(1, 0.3, cout)) + 0.05
+    beta = rng.normal(0, 0.4, cout)
+    mu = rng.normal(0, 0.4, cout)
+    eps_phi = 3.1e-5
+    bnq = ql.quantize_bn(gamma, sigma, beta, mu, eps_phi, kappa_bits=8)
+    th = ql.bn_thresholds(gamma, sigma, beta, mu, eps_phi, eps_y=0.02,
+                          n_levels=16)
+    g["bn_quant_case"] = dict(
+        gamma=_tolist(gamma), sigma=_tolist(sigma), beta=_tolist(beta),
+        mu=_tolist(mu), eps_phi=eps_phi, kappa_bits=8,
+        kappa_q=list(bnq.kappa_q), lambda_q=list(bnq.lambda_q),
+        eps_kappa=bnq.eps_kappa, eps_phi_out=bnq.eps_phi_out)
+    g["thresholds_case"] = dict(
+        gamma=_tolist(gamma), sigma=_tolist(sigma), beta=_tolist(beta),
+        mu=_tolist(mu), eps_phi=eps_phi, eps_y=0.02, n_levels=16,
+        thresholds=_tolist(th))
+
+    # fold_bn case (Eq. 18).
+    w = rng.normal(0, 0.5, (4, 3, 3, 3))
+    wf, bf = ql.fold_bn(w, None, gamma[:4], sigma[:4], beta[:4], mu[:4])
+    g["fold_bn_case"] = dict(w=_tolist(w), gamma=_tolist(gamma[:4]),
+                             sigma=_tolist(sigma[:4]), beta=_tolist(beta[:4]),
+                             mu=_tolist(mu[:4]), w_folded=_tolist(wf),
+                             b_folded=_tolist(bf))
+
+    # Full model: FP params -> deployment -> QD/ID goldens.
+    params, state = init_params(42)
+    xs = rng.uniform(0, 1, (16, *M.IN_SHAPE))
+    act_betas = dp.calibrate_act_betas(
+        [jnp.asarray(p, jnp.float32) for p in params],
+        [jnp.asarray(s, jnp.float32) for s in state],
+        xs.astype(np.float32), M.fp_fwd)
+    dep = dp.deploy(params, state, act_betas, wbits=8, abits=8)
+
+    x2 = xs[:2].astype(np.float32)
+    qx2 = dp.quantize_input(x2)  # quantize the f32-rounded values (NEMO is float32)
+    fp_out = M.fp_fwd([jnp.asarray(p, jnp.float32) for p in params],
+                      [jnp.asarray(s, jnp.float32) for s in state],
+                      jnp.asarray(x2))
+    qd_out = M.qd_fwd([jnp.asarray(a) for a in dep.qd_args],
+                      jnp.asarray(qx2.astype(np.float32) * M.EPS_IN))
+    id_out = M.id_fwd([jnp.asarray(a) for a in dep.id_args],
+                      jnp.asarray(qx2))
+
+    g["model_case"] = dict(
+        params={n: _tolist(p) for (n, _), p in zip(M.param_spec(), params)},
+        bn_state={n: _tolist(s) for (n, _), s in zip(M.bn_state_spec(), state)},
+        act_betas=[float(b) for b in act_betas],
+        wbits=8, abits=8,
+        layers=[dataclass_dict(l) for l in dep.layers],
+        eps_out=dep.eps_out,
+        id_args={n: _tolist(a) for (n, _), a in zip(M.id_spec(), dep.id_args)},
+        x=_tolist(x2), qx=_tolist(qx2),
+        fp_logits=_tolist(fp_out), qd_logits=_tolist(qd_out),
+        id_qlogits=_tolist(id_out))
+
+    # Kernel-level integer goldens (small, exact).
+    a = rng.integers(0, 256, (7, 18)).astype(np.int32)
+    b = rng.integers(-128, 128, (18, 5)).astype(np.int32)
+    g["qgemm_case"] = dict(a=_tolist(a), b=_tolist(b),
+                           out=_tolist(kref.qgemm_ref(a, b)))
+    q = rng.integers(-2**26, 2**26, (64,)).astype(np.int32)
+    g["requant_case"] = dict(q=_tolist(q), m=29, d=21, lo=0, hi=255,
+                             out=_tolist(kref.requant_ref(q, 29, 21, 0, 255)))
+    q2 = rng.integers(-2**20, 2**20, (9, 6)).astype(np.int32)
+    kq = rng.integers(-127, 127, (6,)).astype(np.int32)
+    lq = rng.integers(-2**24, 2**24, (6,)).astype(np.int32)
+    g["intbn_case"] = dict(q=_tolist(q2), kappa_q=_tolist(kq),
+                           lambda_q=_tolist(lq),
+                           out=_tolist(kref.intbn_ref(q2, kq, lq)))
+    th2 = np.sort(rng.integers(-500, 500, (6, 15)), axis=1).astype(np.int32)
+    g["thresh_case"] = dict(q=_tolist(q2 % 700 - 350), thresholds=_tolist(th2),
+                            out=_tolist(kref.thresh_ref(q2 % 700 - 350, th2)))
+    q4 = rng.integers(0, 255, (2, 3, 8, 8)).astype(np.int32)
+    g["avgpool_case"] = dict(q=_tolist(q4), k=4, d=M.POOL_D,
+                             out=_tolist(kref.avgpool_ref(q4, 4, 4, M.POOL_D)))
+    return g
+
+
+def dataclass_dict(l):
+    import dataclasses
+    return dataclasses.asdict(l)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--skip-models", action="store_true",
+                    help="only kernels+goldens (fast dev cycle)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    ex = Exporter(args.out)
+    print("exporting kernel artifacts:")
+    export_kernels(ex)
+    if not args.skip_models:
+        print("exporting model artifacts:")
+        export_models(ex)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(ex.manifest, f, indent=1)
+    print("writing goldens...")
+    goldens = make_goldens()
+    with open(os.path.join(args.out, "goldens.json"), "w") as f:
+        json.dump(goldens, f)
+    print(f"manifest: {len(ex.manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

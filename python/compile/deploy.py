@@ -1,0 +1,185 @@
+"""Python mirror of the Rust deployment pipeline (rust/src/transform/).
+
+Turns trained FullPrecision/FakeQuantized parameters into
+QuantizedDeployable and IntegerDeployable argument lists for model.qd_fwd /
+model.id_fwd. This mirror exists for two reasons:
+
+  1. golden generation: aot.py exports (inputs, derived integer params,
+     expected outputs) so the Rust pipeline can be validated bit-exactly;
+  2. python-side representation-consistency tests (python/tests/).
+
+Every numeric choice here (floor-based quantization, the exact-doubling
+choose_d loop, kappa_bits=8 default, lambda stored directly in the target
+format) matches rust/src/quant/ and rust/src/transform/ line for line —
+f64 arithmetic with identical operation order, so both sides derive
+identical integers from identical floats.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Sequence
+
+import numpy as np
+
+from . import quantlib as ql
+from .model import ARCH, CONVS, EPS_IN, FC_IN, N_CLASSES, BN_EPS
+
+
+@dataclasses.dataclass
+class LayerQuant:
+    """Derived quantization record for one conv+BN+act layer."""
+
+    name: str
+    beta_w: float
+    eps_w: float
+    eps_phi: float          # eps_w * eps_x (Eq. 15)
+    eps_kappa: float
+    eps_phi_out: float      # eps_kappa * eps_phi (integer BN output)
+    beta_y: float
+    eps_y: float
+    d: int                  # Eq. 14
+    m: int                  # Eq. 13
+    act_hi: int
+
+
+@dataclasses.dataclass
+class DeployedModel:
+    """Everything needed to run QD (float) and ID (integer) inference."""
+
+    layers: List[LayerQuant]
+    qd_args: List[np.ndarray]
+    id_args: List[np.ndarray]
+    eps_out: float          # quantum of the integer logits
+
+
+def _np(x):
+    return np.asarray(x, np.float64)
+
+
+def calibrate_act_betas(params, bn_state, xs, fp_fwd,
+                        percentile: float = 1.0) -> List[float]:
+    """Set the PACT clipping bound beta_y of each activation from the
+    FullPrecision stage statistics (sec. 2, "In NEMO": "the maximum value
+    of y in the FullPrecision stage").
+
+    percentile=1.0 reproduces NEMO's max policy; <1.0 uses a percentile,
+    which is more robust to outliers (documented deviation, DESIGN.md).
+    xs: calibration batch [B,1,16,16]. Returns one beta per conv layer.
+    """
+    import jax.numpy as jnp
+
+    betas = []
+    h = jnp.asarray(xs, jnp.float32)
+    p = list(params)
+    s = list(bn_state)
+    import jax
+
+    for i, c in enumerate(CONVS):
+        w, gamma, beta = p[3 * i], p[3 * i + 1], p[3 * i + 2]
+        mu, var = s[2 * i], s[2 * i + 1]
+        sigma = jnp.sqrt(var + BN_EPS)
+        phi = jax.lax.conv_general_dilated(
+            h, w, (c["stride"], c["stride"]),
+            ((c["pad"], c["pad"]), (c["pad"], c["pad"])),
+            dimension_numbers=("NCHW", "OIHW", "NCHW"))
+        shape = (1, -1, 1, 1)
+        phi = (gamma / sigma).reshape(shape) * (phi - mu.reshape(shape)) + beta.reshape(shape)
+        h = jax.nn.relu(phi)
+        if percentile >= 1.0:
+            betas.append(float(jnp.max(h)) or 1.0)
+        else:
+            betas.append(float(jnp.quantile(h.reshape(-1), percentile)) or 1.0)
+    return betas
+
+
+def deploy(params: Sequence[np.ndarray], bn_state: Sequence[np.ndarray],
+           act_betas: Sequence[float], *, wbits: int = 8, abits: int = 8,
+           kappa_bits: int = 8,
+           requantization_factor: int = 16) -> DeployedModel:
+    """FP/FQ parameters -> QD + ID argument lists (sec. 3 pipeline).
+
+    Steps (NEMO API): harden_weights -> bn_quantizer -> set_deployment
+    (eps propagation) -> integerize.
+    """
+    p = [_np(a) for a in params]
+    s = [_np(a) for a in bn_state]
+    n_act = (1 << abits) - 1
+
+    qd_args: List[np.ndarray] = []
+    id_args: List[np.ndarray] = []
+    layers: List[LayerQuant] = []
+    eps_x = EPS_IN
+    for i, c in enumerate(CONVS):
+        w, gamma, beta = p[3 * i], p[3 * i + 1], p[3 * i + 2]
+        mu, var = s[2 * i], s[2 * i + 1]
+        sigma = np.sqrt(var + BN_EPS)
+
+        # harden_weights: w <- w_hat on the symmetric eps_w grid.
+        beta_w = float(np.max(np.abs(w)))
+        if beta_w == 0.0:
+            beta_w = 1.0
+        wspec = ql.QuantSpec.weight(beta_w, wbits)
+        wq = np.clip(np.floor(w / wspec.eps), wspec.lo, wspec.hi)
+        w_hat = wq * wspec.eps
+
+        # set_deployment: eps propagation through the Linear op (Eq. 15).
+        eps_phi = wspec.eps * eps_x
+
+        # bn_quantizer (Eq. 21-22).
+        bnq = ql.quantize_bn(gamma, sigma, beta, mu, eps_phi, kappa_bits)
+        kappa_q = np.asarray(bnq.kappa_q, np.int64)
+        lambda_q = np.asarray(bnq.lambda_q, np.int64)
+        kappa_hat = kappa_q * bnq.eps_kappa
+        lambda_hat = lambda_q * bnq.eps_phi_out
+
+        # integer activation (Eq. 11/13/14).
+        beta_y = float(act_betas[i])
+        eps_y = beta_y / n_act
+        d = ql.choose_d(bnq.eps_phi_out, eps_y, requantization_factor)
+        m = ql.requant_multiplier(bnq.eps_phi_out, eps_y, d)
+
+        layers.append(LayerQuant(
+            name=c["name"], beta_w=beta_w, eps_w=wspec.eps, eps_phi=eps_phi,
+            eps_kappa=bnq.eps_kappa, eps_phi_out=bnq.eps_phi_out,
+            beta_y=beta_y, eps_y=eps_y, d=d, m=m, act_hi=n_act))
+
+        qd_args += [w_hat.astype(np.float32),
+                    kappa_hat.astype(np.float32),
+                    lambda_hat.astype(np.float32),
+                    np.float32(beta_y), np.float32(eps_y)]
+
+        wq_mat = wq.transpose(1, 2, 3, 0).reshape(c["cin"] * c["k"] * c["k"],
+                                                  c["cout"])
+        id_args += [wq_mat.astype(np.int32),
+                    kappa_q.astype(np.int32),
+                    lambda_q.astype(np.int32),
+                    np.int32(m), np.int32(d), np.int32(n_act)]
+        # Propagate the REALIZED quantum: the requant multiplier encodes
+        # m/2^d ~ eps_phi_out/eps_y, so the integer image downstream
+        # carries eps_eff = eps_phi_out * 2^d / m (mirrors
+        # rust/src/transform/deploy.rs; removes compounding scale error).
+        eps_x = bnq.eps_phi_out * float(1 << d) / m
+
+    # fc layer: hardened weights + bias on eps_w*eps_x grid.
+    wf, bf = p[-2], p[-1]
+    beta_wf = float(np.max(np.abs(wf)))
+    if beta_wf == 0.0:
+        beta_wf = 1.0
+    wfspec = ql.QuantSpec.weight(beta_wf, wbits)
+    wfq = np.clip(np.floor(wf / wfspec.eps), wfspec.lo, wfspec.hi)
+    eps_out = wfspec.eps * eps_x
+    bfq = np.floor(bf / eps_out)
+
+    qd_args += [(wfq * wfspec.eps).astype(np.float32),
+                (bfq * eps_out).astype(np.float32)]
+    id_args += [wfq.astype(np.int32), bfq.astype(np.int32)]
+
+    return DeployedModel(layers=layers, qd_args=qd_args, id_args=id_args,
+                         eps_out=eps_out)
+
+
+def quantize_input(x: np.ndarray) -> np.ndarray:
+    """Input image in [0,1) -> 8-bit integer image (eps_in = 1/255)."""
+    return np.clip(np.floor(_np(x) / EPS_IN), 0, 255).astype(np.int32)

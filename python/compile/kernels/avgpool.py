@@ -1,0 +1,43 @@
+"""Integer average-pooling Pallas kernel (Eq. 25).
+
+    Q(p) = (floor(2^d / (K1*K2)) * sum_window Q(t)) >> d
+
+Window = stride (non-overlapping), the layout used by the paper's target
+networks (global average pooling heads). One grid step processes one
+(batch, channel-tile) slab, summing the window by an in-VMEM reshape.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INT, WIDE, INTERPRET, cdiv, pad_to
+
+
+def _avgpool_kernel(q_ref, o_ref, *, k1: int, k2: int, d: int):
+    q = q_ref[...]                      # [1, bc, H, W]
+    _, bc, h, w = q.shape
+    r = q.reshape(1, bc, h // k1, k1, w // k2, k2).astype(WIDE)
+    acc = jnp.sum(r, axis=(3, 5))
+    m = (1 << d) // (k1 * k2)
+    o_ref[...] = jnp.right_shift(acc * WIDE(m), WIDE(d)).astype(INT)
+
+
+def avgpool(q: jnp.ndarray, k1: int, k2: int, d: int, *, bc: int = 16) -> jnp.ndarray:
+    """q: [B, C, H, W] int32 with H % k1 == 0 and W % k2 == 0."""
+    b, c, h, w = q.shape
+    assert h % k1 == 0 and w % k2 == 0, "window must tile the input"
+    qp = pad_to(q, 1, bc)
+    out = pl.pallas_call(
+        functools.partial(_avgpool_kernel, k1=k1, k2=k2, d=d),
+        grid=(b, cdiv(c, bc)),
+        in_specs=[pl.BlockSpec((1, bc, h, w), lambda i, j: (i, j, 0, 0))],
+        out_specs=pl.BlockSpec((1, bc, h // k1, w // k2), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, qp.shape[1], h // k1, w // k2), INT),
+        interpret=INTERPRET,
+    )(qp)
+    return out[:, :c]

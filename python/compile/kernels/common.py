@@ -1,0 +1,36 @@
+"""Shared helpers for the Pallas kernels.
+
+All kernels run with interpret=True: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so interpret mode is the correctness (and AOT) path;
+TPU performance is *estimated* from BlockSpec geometry (DESIGN.md #Perf).
+
+Tile sizes default to MXU-friendly shapes (multiples of 8x128 lanes would
+be the TPU layout; we use 32..128 squares which keep the VMEM footprint of
+a (bm x bk) + (bk x bn) + (bm x bn) int32 working set under 4 MiB).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+INT = jnp.int32
+WIDE = jnp.int64
+
+# Flag threaded into every pallas_call; kept in one place so a TPU build
+# only has to flip it here.
+INTERPRET = True
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def pad_to(x: jnp.ndarray, axis: int, multiple: int, value: int = 0) -> jnp.ndarray:
+    """Zero-pad `axis` of x up to the next multiple of `multiple`."""
+    size = x.shape[axis]
+    rem = size % multiple
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, multiple - rem)
+    return jnp.pad(x, pads, constant_values=value)

@@ -1,0 +1,48 @@
+"""Integer batch-normalization Pallas kernel (Eq. 22).
+
+    Q(phi) = Q(kappa) * Q(varphi) + Q(lambda)       per output channel
+
+Operates on a [rows, C] view (NCHW tensors are transposed/reshaped by the
+caller so channels are the minor axis — the TPU lane axis, letting the
+per-channel kappa/lambda broadcast across sublanes). The product is
+computed in int64 and narrowed back after a range check: with the default
+kappa_bits = 8 the result fits int32 (|kappa| < 2^7, |varphi| < 2^24 by the
+pipeline's range analysis).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INT, WIDE, INTERPRET, cdiv, pad_to
+
+
+def _intbn_kernel(q_ref, kappa_ref, lambda_ref, o_ref):
+    q = q_ref[...].astype(WIDE)
+    kq = kappa_ref[...].astype(WIDE)[None, :]
+    lq = lambda_ref[...].astype(WIDE)[None, :]
+    o_ref[...] = (q * kq + lq).astype(INT)
+
+
+def intbn(q: jnp.ndarray, kappa_q: jnp.ndarray, lambda_q: jnp.ndarray, *,
+          br: int = 256, bc: int = 64) -> jnp.ndarray:
+    """q: [R, C] int32; kappa_q, lambda_q: [C] int32."""
+    r, c = q.shape
+    qp = pad_to(pad_to(q, 0, br), 1, bc)
+    kp = pad_to(kappa_q, 0, bc)
+    lp = pad_to(lambda_q, 0, bc)
+    out = pl.pallas_call(
+        _intbn_kernel,
+        grid=(cdiv(r, br), cdiv(c, bc)),
+        in_specs=[
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((bc,), lambda i, j: (j,)),
+            pl.BlockSpec((bc,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(qp.shape, INT),
+        interpret=INTERPRET,
+    )(qp, kp, lp)
+    return out[:r, :c]

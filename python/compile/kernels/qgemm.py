@@ -1,0 +1,130 @@
+"""Integer-image GEMM Pallas kernels (Eq. 16) with fused ID-layer epilogues.
+
+The hot path of every IntegerDeployable layer is
+
+    Q(varphi) = sum_n Q_w(w_n) * Q_x(x_n)                      (Eq. 16)
+    Q(phi)    = Q(kappa) * Q(varphi) + Q(lambda)               (Eq. 22)
+    Q(y)      = clip((m * Q(phi)) >> d, 0, 2^Q - 1)            (Eq. 11)
+
+`qgemm` computes the first line; `qgemm_bn_requant` fuses all three so the
+int32 accumulator tile never leaves VMEM between the matmul and the
+epilogue — this is the TPU re-think of the paper's MCU inner loop (see
+DESIGN.md #Hardware-Adaptation).
+
+Tiling: grid (M/bm, N/bn, K/bk) with the K axis innermost; the output tile
+is accumulated across K steps and the epilogue fires on the last K step.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INT, WIDE, INTERPRET, cdiv, pad_to
+
+
+def _qgemm_kernel(a_ref, b_ref, o_ref, *, nk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jax.lax.dot_general(
+        a_ref[...], b_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=INT,
+    )
+
+
+def qgemm(a: jnp.ndarray, b: jnp.ndarray, *, bm: int = 64, bk: int = 64,
+          bn: int = 64) -> jnp.ndarray:
+    """C[M,N] = A[M,K] @ B[K,N] over int32 integer images.
+
+    The int32 accumulator is safe by the range analysis the deployment
+    pipeline performs (rust/src/transform/range.rs): |A| < 2^8, |B| < 2^8,
+    K <= 2^14 keeps |C| < 2^31.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"qgemm: inner dims {k} != {k2}"
+    ap = pad_to(pad_to(a, 0, bm), 1, bk)
+    bp = pad_to(pad_to(b, 0, bk), 1, bn)
+    nk = cdiv(k, bk)
+    out = pl.pallas_call(
+        functools.partial(_qgemm_kernel, nk=nk),
+        grid=(cdiv(m, bm), cdiv(n, bn), nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((ap.shape[0], bp.shape[1]), INT),
+        interpret=INTERPRET,
+    )(ap, bp)
+    return out[:m, :n]
+
+
+def _qgemm_bn_requant_kernel(a_ref, b_ref, kappa_ref, lambda_ref, mdlh_ref,
+                             o_ref, *, nk: int):
+    # The int32 output tile itself is the accumulator: it stays resident
+    # across the K grid steps, and the epilogue rewrites it in place on the
+    # last step, so the partial sums never travel back to HBM.
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jax.lax.dot_general(
+        a_ref[...], b_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=INT,
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _epilogue():
+        acc = o_ref[...].astype(WIDE)
+        kq = kappa_ref[...].astype(WIDE)[None, :]
+        lq = lambda_ref[...].astype(WIDE)[None, :]
+        bn = acc * kq + lq
+        m = mdlh_ref[0].astype(WIDE)
+        d = mdlh_ref[1].astype(WIDE)
+        lo = mdlh_ref[2].astype(WIDE)
+        hi = mdlh_ref[3].astype(WIDE)
+        y = jnp.clip(jnp.right_shift(bn * m, d), lo, hi)
+        o_ref[...] = y.astype(INT)
+
+
+def qgemm_bn_requant(a: jnp.ndarray, b: jnp.ndarray, kappa_q: jnp.ndarray,
+                     lambda_q: jnp.ndarray, m: jnp.ndarray, d: jnp.ndarray,
+                     lo: jnp.ndarray, hi: jnp.ndarray, *, bm: int = 64,
+                     bk: int = 64, bn: int = 64) -> jnp.ndarray:
+    """Fused ID layer: requant(intbn(A @ B)) (Eq. 16 + 22 + 11).
+
+    kappa_q/lambda_q: [N] per-output-channel int32; m,d,lo,hi: int32
+    scalars (m,d chosen by the deployment pipeline per Eq. 13-14).
+    """
+    mm, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    ap = pad_to(pad_to(a, 0, bm), 1, bk)
+    bp = pad_to(pad_to(b, 0, bk), 1, bn)
+    kp = pad_to(kappa_q, 0, bn)
+    lp = pad_to(lambda_q, 0, bn)
+    mdlh = jnp.stack([m, d, lo, hi]).astype(INT)
+    nk = cdiv(k, bk)
+    out = pl.pallas_call(
+        functools.partial(_qgemm_bn_requant_kernel, nk=nk),
+        grid=(cdiv(mm, bm), cdiv(n, bn), nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+            pl.BlockSpec((4,), lambda i, j, kk: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((ap.shape[0], bp.shape[1]), INT),
+        interpret=INTERPRET,
+    )(ap, bp, kp, lp, mdlh)
+    return out[:mm, :n]

@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for the Pallas kernels (correctness reference).
+
+Every kernel in this package is validated against these functions by
+python/tests/test_kernels.py (hypothesis sweeps over shapes/values) before
+anything is AOT-exported. These are the "ground truth" implementations of
+the paper's integer-domain equations; they are deliberately written as
+straight transcriptions with no tiling or fusion.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+INT = jnp.int32
+WIDE = jnp.int64
+
+
+def qgemm_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Integer-image GEMM, Eq. 16: Q(varphi) = sum_n Q_w * Q_x. [M,K]x[K,N]."""
+    return jnp.matmul(a.astype(WIDE), b.astype(WIDE)).astype(INT)
+
+
+def requant_ref(q, m: int, d: int, lo: int, hi: int):
+    """clip((m * q) >> d, lo, hi) with floor semantics (Eq. 11/13)."""
+    wide = q.astype(WIDE) * WIDE(m)
+    shifted = jnp.right_shift(wide, WIDE(d))
+    return jnp.clip(shifted, lo, hi).astype(INT)
+
+
+def intbn_ref(q, kappa_q, lambda_q):
+    """Q(kappa)*Q(varphi) + Q(lambda) per channel (Eq. 22). q: [R, C]."""
+    out = q.astype(WIDE) * kappa_q.astype(WIDE)[None, :] + lambda_q.astype(WIDE)[None, :]
+    return out.astype(INT)
+
+
+def intbn_requant_ref(q, kappa_q, lambda_q, m: int, d: int, lo: int, hi: int):
+    """Fused integer BN + requantization + clip (the ID layer epilogue)."""
+    bn = q.astype(WIDE) * kappa_q.astype(WIDE)[None, :] + lambda_q.astype(WIDE)[None, :]
+    wide = bn * WIDE(m)
+    shifted = jnp.right_shift(wide, WIDE(d))
+    return jnp.clip(shifted, lo, hi).astype(INT)
+
+
+def thresh_ref(q, thresholds):
+    """Threshold activation (Eq. 20). q: [R, C]; thresholds: [C, N] ascending.
+
+    Output integer = #{i : q >= TH_i}, i.e. the staircase sum_i i*chi over
+    consecutive threshold intervals, clipped to [0, N] by construction.
+    """
+    cmp = q[:, :, None] >= thresholds[None, :, :]
+    return jnp.sum(cmp.astype(INT), axis=-1)
+
+
+def avgpool_ref(q, k1: int, k2: int, d: int):
+    """Integer average pool (Eq. 25), window (k1,k2), stride = window.
+
+    q: [B, C, H, W] int32; H % k1 == 0, W % k2 == 0.
+    """
+    b, c, h, w = q.shape
+    r = q.reshape(b, c, h // k1, k1, w // k2, k2)
+    acc = jnp.sum(r.astype(WIDE), axis=(3, 5))
+    m = (1 << d) // (k1 * k2)
+    return jnp.right_shift(acc * WIDE(m), WIDE(d)).astype(INT)
+
+
+def im2col_ref(x, kh: int, kw: int, stride: int, pad: int):
+    """im2col for NCHW integer tensors.
+
+    Returns patches [B*OH*OW, C*kh*kw] so conv = qgemm(patches, w_mat) with
+    w_mat [C*kh*kw, C_out].
+    """
+    b, c, h, w = x.shape
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (w + 2 * pad - kw) // stride + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            patch = xp[:, :, i:i + stride * oh:stride, j:j + stride * ow:stride]
+            cols.append(patch)
+    stacked = jnp.stack(cols, axis=-1)  # [B, C, OH, OW, kh*kw]
+    out = stacked.transpose(0, 2, 3, 1, 4).reshape(b * oh * ow, c * kh * kw)
+    return out, (b, oh, ow)

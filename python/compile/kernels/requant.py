@@ -1,0 +1,49 @@
+"""Requantization Pallas kernel (Def. 3.1, Eq. 13).
+
+    RQ(q) = clip((floor(eps_a * 2^d / eps_b) * q) >> d, lo, hi)
+
+m = floor(eps_a*2^d/eps_b), d are derived at deployment time by the Rust
+pipeline (quant/requant.rs mirrors quantlib.choose_d). The multiply is
+widened to int64 in-kernel: with the Eq. 14 minimal d, m is in
+[factor, 2*factor) and q after integer BN can reach ~2^28, so m*q can
+exceed int32. The arithmetic right shift implements floor toward -inf.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INT, WIDE, INTERPRET, cdiv, pad_to
+
+
+def _requant_kernel(q_ref, mdlh_ref, o_ref):
+    q = q_ref[...].astype(WIDE)
+    m = mdlh_ref[0].astype(WIDE)
+    d = mdlh_ref[1].astype(WIDE)
+    lo = mdlh_ref[2].astype(WIDE)
+    hi = mdlh_ref[3].astype(WIDE)
+    o_ref[...] = jnp.clip(jnp.right_shift(q * m, d), lo, hi).astype(INT)
+
+
+def requant(q: jnp.ndarray, m: jnp.ndarray, d: jnp.ndarray, lo: jnp.ndarray,
+            hi: jnp.ndarray, *, block: int = 4096) -> jnp.ndarray:
+    """Elementwise requantization over a flattened int32 tensor."""
+    shape = q.shape
+    flat = q.reshape(-1)
+    n = flat.shape[0]
+    fp = pad_to(flat, 0, block)
+    mdlh = jnp.stack([m, d, lo, hi]).astype(INT)
+    out = pl.pallas_call(
+        _requant_kernel,
+        grid=(cdiv(n, block),),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((4,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(fp.shape, INT),
+        interpret=INTERPRET,
+    )(fp, mdlh)
+    return out[:n].reshape(shape)

@@ -1,0 +1,47 @@
+"""Threshold-activation Pallas kernel (Eq. 19-20, BN+act merge — exact).
+
+    Q_y(varphi) = sum_i i * chi_[TH_i, TH_{i+1})(Q(varphi))
+
+realized as a popcount of satisfied thresholds: out = #{i : q >= TH_i},
+with per-channel ascending thresholds TH (shape [C, N]). This is the
+paper's "especially effective when the cardinality of Z_y is small" path:
+a 2-bit output needs N = 3 comparisons, no multiplier at all.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INT, INTERPRET, cdiv, pad_to
+
+
+def _thresh_kernel(q_ref, th_ref, o_ref):
+    q = q_ref[...]                      # [br, bc]
+    th = th_ref[...]                    # [bc, N]
+    cmp = q[:, :, None] >= th[None, :, :]
+    o_ref[...] = jnp.sum(cmp.astype(INT), axis=-1)
+
+
+def thresh(q: jnp.ndarray, thresholds: jnp.ndarray, *, br: int = 256,
+           bc: int = 32) -> jnp.ndarray:
+    """q: [R, C] int32; thresholds: [C, N] int32 ascending per channel."""
+    r, c = q.shape
+    c2, n = thresholds.shape
+    assert c == c2
+    qp = pad_to(pad_to(q, 0, br), 1, bc)
+    # Pad channels with +inf-like thresholds so padded columns emit 0.
+    thp = pad_to(thresholds, 0, bc, value=2**31 - 1)
+    out = pl.pallas_call(
+        _thresh_kernel,
+        grid=(cdiv(r, br), cdiv(c, bc)),
+        in_specs=[
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((bc, n), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(qp.shape, INT),
+        interpret=INTERPRET,
+    )(qp, thp)
+    return out[:r, :c]

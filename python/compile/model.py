@@ -1,0 +1,375 @@
+"""L2: the "SynthNet" model in all four NEMO representations, plus QAT
+train steps.
+
+SynthNet is the paper-scale CNN used throughout the repo (the Rust model
+zoo mirrors this config exactly, see rust/src/model/synthnet.rs):
+
+    input  1 x 16 x 16, 8-bit (eps_in = 1/255, alpha = 0)        sec. 3.7
+    conv1  3x3 s1 p1   1 ->  8   + BN + PACT act
+    conv2  3x3 s2 p1   8 -> 16   + BN + PACT act
+    conv3  3x3 s2 p1  16 -> 32   + BN + PACT act
+    avgpool 4x4 (global)                                         Eq. 25
+    fc     32 -> 10 (+ bias)
+
+Representations (paper sec. 1-3):
+  * fp_fwd  — FullPrecision float forward.
+  * fq_fwd  — FakeQuantized: PACT weight/act fake-quantization with
+              static (wbits, abits); BN stays float (sec. 2, "In NEMO").
+  * qd_fwd  — QuantizedDeployable: hardened weights, quantized BN
+              (kappa_hat, lambda_hat), Eq. 10 activations — float tensors
+              but every value lies on its quantized grid.
+  * id_fwd  — IntegerDeployable: int32 integer images only; every linear
+              operator routes through the Pallas qgemm (+ fused BN/requant
+              epilogue), pooling through the Pallas avgpool kernel.
+
+Train steps (SGD, BN batch statistics with running-stat update):
+  * fp_train_step — FullPrecision.
+  * fq_train_step — FakeQuantized QAT with STE; PACT act clipping bounds
+                    (beta) are trained by backprop (sec. 2.2).
+
+All functions take flat *lists* of arrays in the orders given by the
+*_spec() functions; aot.py records those orders in the artifact manifest
+so the Rust runtime can assemble buffers by name.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import quantlib as ql
+from .kernels.avgpool import avgpool as k_avgpool
+from .kernels.qgemm import qgemm, qgemm_bn_requant
+from .kernels.ref import im2col_ref
+
+# --------------------------------------------------------------------------
+# Architecture config (single source of truth; exported in manifest.json)
+# --------------------------------------------------------------------------
+
+CONVS = [
+    dict(name="conv1", cin=1, cout=8, k=3, stride=1, pad=1, oh=16, ow=16),
+    dict(name="conv2", cin=8, cout=16, k=3, stride=2, pad=1, oh=8, ow=8),
+    dict(name="conv3", cin=16, cout=32, k=3, stride=2, pad=1, oh=4, ow=4),
+]
+IN_SHAPE = (1, 16, 16)
+N_CLASSES = 10
+FC_IN = 32
+POOL_K = 4
+POOL_D = 12          # static d of Eq. 25; mirrored by rust transform
+EPS_IN = 1.0 / 255.0  # 8-bit input, sec. 3.7
+BN_EPS = 1e-5
+
+ARCH = dict(convs=CONVS, in_shape=IN_SHAPE, n_classes=N_CLASSES,
+            fc_in=FC_IN, pool_k=POOL_K, pool_d=POOL_D, eps_in=EPS_IN,
+            bn_eps=BN_EPS)
+
+
+def param_spec() -> List[Tuple[str, Tuple[int, ...]]]:
+    """Trainable FP/FQ parameters, in flattened artifact order."""
+    spec = []
+    for c in CONVS:
+        spec.append((f"{c['name']}.w", (c["cout"], c["cin"], c["k"], c["k"])))
+        spec.append((f"{c['name']}.bn_gamma", (c["cout"],)))
+        spec.append((f"{c['name']}.bn_beta", (c["cout"],)))
+    spec.append(("fc.w", (FC_IN, N_CLASSES)))
+    spec.append(("fc.b", (N_CLASSES,)))
+    return spec
+
+
+def bn_state_spec() -> List[Tuple[str, Tuple[int, ...]]]:
+    """Running BN statistics (state, not trained by the optimizer)."""
+    spec = []
+    for c in CONVS:
+        spec.append((f"{c['name']}.bn_mu", (c["cout"],)))
+        spec.append((f"{c['name']}.bn_var", (c["cout"],)))
+    return spec
+
+
+def act_beta_spec() -> List[Tuple[str, Tuple[int, ...]]]:
+    """PACT activation clipping bounds, one scalar per activation."""
+    return [(f"act{i+1}.beta", ()) for i in range(len(CONVS))]
+
+
+N_PARAMS = len(param_spec())
+N_BN_STATE = len(bn_state_spec())
+N_ACT = len(CONVS)
+
+
+# --------------------------------------------------------------------------
+# Shared pieces
+# --------------------------------------------------------------------------
+
+
+def _conv(x, w, stride, pad):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride),
+        padding=((pad, pad), (pad, pad)),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def _bn_inference(phi, gamma, beta, mu, var):
+    sigma = jnp.sqrt(var + BN_EPS)
+    shape = (1, -1, 1, 1)
+    return (gamma / sigma).reshape(shape) * (phi - mu.reshape(shape)) + beta.reshape(shape)
+
+
+def _softmax_xent(logits, labels):
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+# --------------------------------------------------------------------------
+# FullPrecision (sec. 1)
+# --------------------------------------------------------------------------
+
+
+def fp_fwd(params: Sequence[jax.Array], bn_state: Sequence[jax.Array],
+           x: jax.Array) -> jax.Array:
+    """FullPrecision inference forward: x [B,1,16,16] f32 -> logits [B,10]."""
+    p = list(params)
+    s = list(bn_state)
+    h = x
+    for i, c in enumerate(CONVS):
+        w, gamma, beta = p[3 * i], p[3 * i + 1], p[3 * i + 2]
+        mu, var = s[2 * i], s[2 * i + 1]
+        phi = _conv(h, w, c["stride"], c["pad"])
+        phi = _bn_inference(phi, gamma, beta, mu, var)
+        h = jax.nn.relu(phi)
+    h = jnp.mean(h, axis=(2, 3))  # global average pool
+    wf, bf = p[-2], p[-1]
+    return h @ wf + bf
+
+
+def _fp_loss(params, bn_state_in, x, y):
+    """Training-mode forward (batch BN stats) -> (loss, new_bn_state)."""
+    p = list(params)
+    s = list(bn_state_in)
+    new_state = []
+    h = x
+    for i, c in enumerate(CONVS):
+        w, gamma, beta = p[3 * i], p[3 * i + 1], p[3 * i + 2]
+        phi = _conv(h, w, c["stride"], c["pad"])
+        mu_b = jnp.mean(phi, axis=(0, 2, 3))
+        var_b = jnp.var(phi, axis=(0, 2, 3))
+        mu_r, var_r = s[2 * i], s[2 * i + 1]
+        momentum = 0.1
+        new_state.append((1 - momentum) * mu_r + momentum * mu_b)
+        new_state.append((1 - momentum) * var_r + momentum * var_b)
+        phi = _bn_inference(phi, gamma, beta, jax.lax.stop_gradient(mu_b),
+                            jax.lax.stop_gradient(var_b))
+        h = jax.nn.relu(phi)
+    h = jnp.mean(h, axis=(2, 3))
+    logits = h @ p[-2] + p[-1]
+    return _softmax_xent(logits, y), new_state
+
+
+def fp_train_step(params, bn_state, x, y, lr):
+    """One SGD step. Returns (params', bn_state', loss)."""
+    (loss, new_state), grads = jax.value_and_grad(_fp_loss, has_aux=True)(
+        list(params), list(bn_state), x, y)
+    new_params = [p - lr * g for p, g in zip(params, grads)]
+    return new_params, new_state, loss
+
+
+# --------------------------------------------------------------------------
+# FakeQuantized (sec. 2)
+# --------------------------------------------------------------------------
+
+
+def _fq_body(params, bn_state, act_betas, x, wbits, abits, train_bn):
+    p = list(params)
+    s = list(bn_state)
+    n_levels = (1 << abits) - 1
+    new_state = []
+    h = x
+    for i, c in enumerate(CONVS):
+        w, gamma, beta = p[3 * i], p[3 * i + 1], p[3 * i + 2]
+        # Weight fake-quantization: symmetric PACT grid, beta_w from the
+        # current weight statistics (NEMO's reset_alpha_weights policy).
+        beta_w = jax.lax.stop_gradient(jnp.max(jnp.abs(w)))
+        wq = ql.pact_weight(w, beta_w, wbits)
+        phi = _conv(h, wq, c["stride"], c["pad"])
+        if train_bn:
+            mu_b = jnp.mean(phi, axis=(0, 2, 3))
+            var_b = jnp.var(phi, axis=(0, 2, 3))
+            mu_r, var_r = s[2 * i], s[2 * i + 1]
+            momentum = 0.1
+            new_state.append((1 - momentum) * mu_r + momentum * mu_b)
+            new_state.append((1 - momentum) * var_r + momentum * var_b)
+            phi = _bn_inference(phi, gamma, beta, jax.lax.stop_gradient(mu_b),
+                                jax.lax.stop_gradient(var_b))
+        else:
+            phi = _bn_inference(phi, gamma, beta, s[2 * i], s[2 * i + 1])
+        ab = act_betas[i]
+        eps_y = ab / n_levels
+        h = ql.pact_act(phi, ab, eps_y)
+    h = jnp.mean(h, axis=(2, 3))
+    logits = h @ p[-2] + p[-1]
+    return logits, new_state
+
+
+def fq_fwd(params, bn_state, act_betas, x, *, wbits=8, abits=8):
+    """FakeQuantized inference forward."""
+    logits, _ = _fq_body(params, bn_state, act_betas, x, wbits, abits,
+                         train_bn=False)
+    return logits
+
+
+def fq_train_step(params, bn_state, act_betas, x, y, lr, *, wbits=8, abits=8):
+    """One QAT SGD step (STE). Trains params AND the PACT act betas.
+
+    Returns (params', bn_state', act_betas', loss).
+    """
+
+    def loss_fn(p, ab):
+        logits, new_state = _fq_body(p, bn_state, ab, x, wbits, abits,
+                                     train_bn=True)
+        return _softmax_xent(logits, y), new_state
+
+    (loss, new_state), (gp, gab) = jax.value_and_grad(
+        loss_fn, argnums=(0, 1), has_aux=True)(list(params), list(act_betas))
+    new_params = [p - lr * g for p, g in zip(params, gp)]
+    # Small decay pulls unused clipping headroom down (PACT sec. 3).
+    new_betas = [b - lr * (g + 1e-4 * b) for b, g in zip(act_betas, gab)]
+    return new_params, new_state, new_betas, loss
+
+
+# --------------------------------------------------------------------------
+# QuantizedDeployable (sec. 3): float tensors, all on quantized grids
+# --------------------------------------------------------------------------
+
+
+def qd_spec() -> List[Tuple[str, Tuple[int, ...]]]:
+    """Flattened QD argument order (per layer, then fc, then input)."""
+    spec = []
+    for c in CONVS:
+        spec.append((f"{c['name']}.w_hat", (c["cout"], c["cin"], c["k"], c["k"])))
+        spec.append((f"{c['name']}.kappa_hat", (c["cout"],)))
+        spec.append((f"{c['name']}.lambda_hat", (c["cout"],)))
+        spec.append((f"act.beta_y", ()))
+        spec.append((f"act.eps_y", ()))
+    spec.append(("fc.w_hat", (FC_IN, N_CLASSES)))
+    spec.append(("fc.b_hat", (N_CLASSES,)))
+    return spec
+
+
+def qd_fwd(args: Sequence[jax.Array], x: jax.Array) -> jax.Array:
+    """QuantizedDeployable forward (Eq. 10 activations, quantized BN).
+
+    args order per conv layer: w_hat, kappa_hat, lambda_hat, beta_y, eps_y;
+    then fc.w_hat, fc.b_hat. x is the quantized input (multiple of eps_in).
+    """
+    a = list(args)
+    h = x
+    idx = 0
+    for c in CONVS:
+        w_hat, kappa_hat, lambda_hat, beta_y, eps_y = a[idx:idx + 5]
+        idx += 5
+        phi = _conv(h, w_hat, c["stride"], c["pad"])
+        shape = (1, -1, 1, 1)
+        phi = kappa_hat.reshape(shape) * phi + lambda_hat.reshape(shape)
+        # Eq. 10: linear quantization as clipped floor.
+        h = jnp.floor(jnp.clip(phi, 0.0, beta_y) / eps_y) * eps_y
+    h = jnp.mean(h, axis=(2, 3))
+    return h @ a[idx] + a[idx + 1]
+
+
+# --------------------------------------------------------------------------
+# IntegerDeployable (sec. 3): int32 integer images only
+# --------------------------------------------------------------------------
+
+
+def id_spec() -> List[Tuple[str, Tuple[int, ...]]]:
+    """Flattened ID argument order (integer images + requant params)."""
+    spec = []
+    for c in CONVS:
+        spec.append((f"{c['name']}.wq", (c["cin"] * c["k"] * c["k"], c["cout"])))
+        spec.append((f"{c['name']}.kappa_q", (c["cout"],)))
+        spec.append((f"{c['name']}.lambda_q", (c["cout"],)))
+        spec.append((f"{c['name']}.m", ()))
+        spec.append((f"{c['name']}.d", ()))
+        spec.append((f"{c['name']}.act_hi", ()))
+    spec.append(("fc.wq", (FC_IN, N_CLASSES)))
+    spec.append(("fc.bq", (N_CLASSES,)))
+    return spec
+
+
+def id_fwd(args: Sequence[jax.Array], qx: jax.Array) -> jax.Array:
+    """IntegerDeployable forward: qx [B,1,16,16] i32 -> qlogits [B,10] i32.
+
+    Every linear operator routes through the Pallas fused kernel
+    (qgemm + integer BN + requantization, Eq. 16/22/11); pooling through
+    the Pallas integer avgpool (Eq. 25). No float ops anywhere.
+
+    Block sizes are tuned per layer (#Perf): bm covers all rows of a
+    batch<=16 lowering in few grid steps, bk spans the whole reduction,
+    bn the whole channel dim — interpret-mode grids lower to XLA while
+    loops, so fewer/fatter steps dominate wall-clock on CPU (on TPU the
+    same shapes keep the working set under ~1.5 MiB VMEM).
+    """
+    a = list(args)
+    h = qx
+    idx = 0
+    zero = jnp.int32(0)
+    for c in CONVS:
+        wq, kappa_q, lambda_q, m, d, act_hi = a[idx:idx + 6]
+        idx += 6
+        cols, (b, oh, ow) = im2col_ref(h, c["k"], c["k"], c["stride"], c["pad"])
+        kdim = c["cin"] * c["k"] * c["k"]
+        y = qgemm_bn_requant(
+            cols, wq, kappa_q, lambda_q, m, d, zero, act_hi,
+            bm=min(1024, _ceil_mult(cols.shape[0], 128)),
+            bk=_ceil_mult(kdim, 8),
+            bn=_ceil_mult(c["cout"], 8),
+        )
+        h = y.reshape(b, oh, ow, c["cout"]).transpose(0, 3, 1, 2)
+    h = k_avgpool(h, POOL_K, POOL_K, POOL_D)
+    b = h.shape[0]
+    h = h.reshape(b, FC_IN)
+    wq_fc, bq_fc = a[idx], a[idx + 1]
+    return qgemm(h, wq_fc, bm=_ceil_mult(b, 8), bk=FC_IN, bn=16) + bq_fc[None, :]
+
+
+def _ceil_mult(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def id_fwd_xla(args: Sequence[jax.Array], qx: jax.Array) -> jax.Array:
+    """IntegerDeployable forward on native XLA integer ops (no Pallas).
+
+    Same argument spec and bit-exact same function as id_fwd; this is the
+    deployment variant for hardware whose compiler has first-class integer
+    support (the serving fast path on CPU), and the honest comparator for
+    E9's "ID on general-purpose hardware" overhead measurement.
+    """
+    a = list(args)
+    h = qx
+    idx = 0
+    for c in CONVS:
+        wq, kappa_q, lambda_q, m, d, act_hi = a[idx:idx + 6]
+        idx += 6
+        # wq is [cin*k*k, cout]; rebuild OIHW for lax.conv.
+        w = wq.reshape(c["cin"], c["k"], c["k"], c["cout"]).transpose(3, 0, 1, 2)
+        phi = jax.lax.conv_general_dilated(
+            h, w, (c["stride"], c["stride"]),
+            ((c["pad"], c["pad"]), (c["pad"], c["pad"])),
+            dimension_numbers=("NCHW", "OIHW", "NCHW"),
+            preferred_element_type=jnp.int32)
+        bn = phi.astype(jnp.int64) * kappa_q.astype(jnp.int64)[None, :, None, None] \
+            + lambda_q.astype(jnp.int64)[None, :, None, None]
+        y = jnp.right_shift(bn * m.astype(jnp.int64), d.astype(jnp.int64))
+        h = jnp.clip(y, 0, act_hi.astype(jnp.int64)).astype(jnp.int32)
+    b, cc, hh, ww = h.shape
+    r = h.reshape(b, cc, hh // POOL_K, POOL_K, ww // POOL_K, POOL_K)
+    acc = jnp.sum(r.astype(jnp.int64), axis=(3, 5))
+    mp = (1 << POOL_D) // (POOL_K * POOL_K)
+    h = jnp.right_shift(acc * jnp.int64(mp), jnp.int64(POOL_D)).astype(jnp.int32)
+    h = h.reshape(b, FC_IN)
+    wq_fc, bq_fc = a[idx], a[idx + 1]
+    out = jnp.matmul(h.astype(jnp.int64), wq_fc.astype(jnp.int64)).astype(jnp.int32)
+    return out + bq_fc[None, :]

@@ -1,0 +1,331 @@
+"""NEMO quantization math in JAX (build-time library).
+
+Implements the formal model of Conti, "Technical Report: NEMO Quantization
+for Deployment Model" (2020):
+
+  * PACT fake-quantization of activations (eq. in sec. 2.2) with the
+    straight-through estimator (STE), including the PACT gradient w.r.t.
+    the clipping bound beta.
+  * Symmetric PACT-like fake-quantization of weights with STE.
+  * Requantization  RQ(q) = floor(eps_a * 2^d / eps_b) * q >> d
+    (Def. 3.1, Eq. 12-14), with d chosen from a relative-error target
+    eta = 1/requantization_factor.
+  * Quantized batch-norm  Q(phi) = Q(kappa) * Q(varphi) + Q(lambda)
+    (Eq. 21-22) with symmetric quantization of kappa and lambda stored
+    directly in the target format (the "deployment backend" choice the
+    paper explicitly allows, sec. 3.4).
+  * Threshold merging of BN + linear quantization (Eq. 19-20) - exact.
+  * Integer average pooling (Eq. 25).
+
+Conventions (mirrored bit-exactly by the Rust side, rust/src/quant/):
+
+  * activations: alpha = 0, eps_y = beta_y / (2^Q - 1),
+    integer image in [0, 2^Q - 1].
+  * weights: symmetric grid, eps_w = 2*beta_w / (2^Q - 1),
+    integer image in [-2^(Q-1), 2^(Q-1) - 1]; the offset alpha_w is a
+    multiple of eps_w so the correction term of Eq. 15 folds into a
+    single integer image (this is what NEMO's integerize does).
+  * all "floor" operations on integer images are arithmetic right
+    shifts (floor toward -inf), matching two's-complement >> in Rust.
+  * d is computed by an exact doubling loop, NOT log2, so that Rust and
+    Python derive identical d from identical f64 inputs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+# Integer dtype used for integer images. Accumulations that can exceed
+# 2^31 (the requant multiply, kappa*phi products) are widened to int64
+# locally and narrowed back after clipping.
+INT = jnp.int32
+WIDE = jnp.int64
+
+# ---------------------------------------------------------------------------
+# Quantum / space bookkeeping (scalar, python-side: runs at transform time)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """A quantized space Z_t with its quantum (Def. 2.1).
+
+    eps: the quantum epsilon_t (f64 scalar).
+    lo, hi: inclusive integer bounds of Z_t.
+    """
+
+    eps: float
+    lo: int
+    hi: int
+
+    @property
+    def levels(self) -> int:
+        return self.hi - self.lo + 1
+
+    @staticmethod
+    def activation(beta: float, bits: int) -> "QuantSpec":
+        """alpha=0 activation space: eps = beta/(2^Q - 1), Z = [0, 2^Q-1]."""
+        n = (1 << bits) - 1
+        return QuantSpec(eps=beta / n, lo=0, hi=n)
+
+    @staticmethod
+    def weight(beta: float, bits: int) -> "QuantSpec":
+        """Symmetric weight space: eps = 2*beta/(2^Q - 1)."""
+        n = (1 << bits) - 1
+        return QuantSpec(eps=2.0 * beta / n, lo=-(1 << (bits - 1)), hi=(1 << (bits - 1)) - 1)
+
+    @staticmethod
+    def symmetric(beta: float, bits: int) -> "QuantSpec":
+        """Symmetric space used for BN kappa (sec. 3.4): eps = 2*beta/(2^Q-1)."""
+        n = (1 << bits) - 1
+        return QuantSpec(eps=2.0 * beta / n, lo=-(1 << (bits - 1)), hi=(1 << (bits - 1)) - 1)
+
+
+def choose_d(eps_a: float, eps_b: float, requantization_factor: int = 16,
+             d_max: int = 40) -> int:
+    """Smallest d with 2^d >= requantization_factor * eps_b / eps_a (Eq. 14).
+
+    Uses an exact doubling loop (not log2) so Rust derives the same d from
+    the same f64 inputs.
+    """
+    assert eps_a > 0.0 and eps_b > 0.0
+    target = requantization_factor * eps_b
+    d = 0
+    p = eps_a  # eps_a * 2^d, exact doubling
+    while p < target and d < d_max:
+        p *= 2.0
+        d += 1
+    return d
+
+
+def requant_multiplier(eps_a: float, eps_b: float, d: int) -> int:
+    """m = floor(eps_a * 2^d / eps_b)  (Eq. 13)."""
+    return int(math.floor(eps_a * float(1 << d) / eps_b))
+
+
+# ---------------------------------------------------------------------------
+# Fake quantization with STE (FakeQuantized representation, sec. 2.2)
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def pact_act(x: jax.Array, beta: jax.Array, eps: jax.Array) -> jax.Array:
+    """PACT activation fake-quantization.
+
+    y = floor(clip(x, 0, beta) / eps) * eps     (sec. 2.2, "In NEMO")
+
+    The clip keeps the integer image within [0, beta/eps]; eps is passed
+    explicitly (eps = beta / (2^Q - 1)) so the same primitive serves both
+    trainable-beta and frozen-beta uses.
+    """
+    y = jnp.clip(x, 0.0, beta)
+    return jnp.floor(y / eps) * eps
+
+
+def _pact_act_fwd(x, beta, eps):
+    return pact_act(x, beta, eps), (x, beta)
+
+
+def _pact_act_bwd(res, g):
+    x, beta = res
+    # STE: grad wrt x passes where 0 <= x < beta (indicator chi_[0,beta)).
+    in_range = jnp.logical_and(x >= 0.0, x < beta)
+    gx = jnp.where(in_range, g, 0.0)
+    # PACT gradient wrt beta: 1 where x >= beta (clipped at the top).
+    gbeta = jnp.sum(jnp.where(x >= beta, g, 0.0))
+    return gx, gbeta.reshape(jnp.shape(beta)), None
+
+
+pact_act.defvjp(_pact_act_fwd, _pact_act_bwd)
+
+
+@jax.custom_vjp
+def pact_weight(w: jax.Array, beta: jax.Array, bits: int) -> jax.Array:
+    """Symmetric PACT-like weight fake-quantization with STE.
+
+    eps_w = 2*beta/(2^Q-1); w_hat = clip_int(floor(w/eps)) * eps.
+    """
+    n = (1 << bits) - 1
+    eps = 2.0 * beta / n
+    lo = -(1 << (bits - 1))
+    hi = (1 << (bits - 1)) - 1
+    q = jnp.clip(jnp.floor(w / eps), lo, hi)
+    return q * eps
+
+
+def _pact_weight_fwd(w, beta, bits):
+    return pact_weight(w, beta, bits), (w, beta)
+
+
+def _pact_weight_bwd(res, g):
+    w, beta = res
+    # STE on the clipping interval [-beta, beta).
+    in_range = jnp.logical_and(w >= -beta, w < beta)
+    gw = jnp.where(in_range, g, 0.0)
+    return gw, None, None
+
+
+pact_weight.defvjp(_pact_weight_fwd, _pact_weight_bwd)
+
+
+def quantize_weight_image(w: jax.Array, beta: float, bits: int) -> jax.Array:
+    """Integer image Q_w(w) of a weight tensor (used at integerize time)."""
+    spec = QuantSpec.weight(beta, bits)
+    q = jnp.clip(jnp.floor(w / spec.eps), spec.lo, spec.hi)
+    return q.astype(INT)
+
+
+def quantize_act_image(x: jax.Array, beta: float, bits: int) -> jax.Array:
+    """Integer image Q_y(x) of an (already non-negative) activation tensor."""
+    spec = QuantSpec.activation(beta, bits)
+    q = jnp.clip(jnp.floor(x / spec.eps), spec.lo, spec.hi)
+    return q.astype(INT)
+
+
+# ---------------------------------------------------------------------------
+# Integer-domain primitives (IntegerDeployable representation, sec. 3)
+# ---------------------------------------------------------------------------
+
+
+def requant(q: jax.Array, m: jax.Array, d: jax.Array,
+            lo: int | jax.Array, hi: int | jax.Array) -> jax.Array:
+    """RQ + clip: clip((m * q) >> d, lo, hi)  (Eq. 11 / Eq. 13).
+
+    The multiply is widened to int64: m*q can exceed 2^31 (m is around
+    requantization_factor..2*requantization_factor but q after integer BN
+    can reach ~2^28). The arithmetic right shift floors toward -inf,
+    matching the floor() in Eq. 13 for negative values too.
+    """
+    wide = q.astype(WIDE) * jnp.asarray(m, WIDE)
+    shifted = jnp.right_shift(wide, jnp.asarray(d, WIDE))
+    return jnp.clip(shifted, jnp.asarray(lo, WIDE), jnp.asarray(hi, WIDE)).astype(INT)
+
+
+def integer_bn(q: jax.Array, kappa_q: jax.Array, lambda_q: jax.Array) -> jax.Array:
+    """Q(phi) = Q(kappa) * Q(varphi) + Q(lambda)  (Eq. 22), per-channel.
+
+    kappa_q, lambda_q have shape [C]; q has layout NCHW (or [N, C] for
+    linear). Accumulation is widened to int64, the caller requantizes.
+    """
+    c = kappa_q.shape[0]
+    if q.ndim == 4:
+        kq = kappa_q.reshape(1, c, 1, 1).astype(WIDE)
+        lq = lambda_q.reshape(1, c, 1, 1).astype(WIDE)
+    elif q.ndim == 2:
+        kq = kappa_q.reshape(1, c).astype(WIDE)
+        lq = lambda_q.reshape(1, c).astype(WIDE)
+    else:
+        raise ValueError(f"integer_bn: unsupported rank {q.ndim}")
+    return q.astype(WIDE) * kq + lq
+
+
+def threshold_act(q: jax.Array, thresholds: jax.Array) -> jax.Array:
+    """Q_y(varphi) = sum_i i * chi_[TH_i, TH_{i+1})(Q(varphi))  (Eq. 20).
+
+    thresholds has shape [C, N] (per-channel because BN parameters are
+    per-channel): output integer = number of thresholds <= q, i.e. the
+    staircase of Eq. 20 with TH_0 = -inf implied by clipping at 0.
+    """
+    c, n = thresholds.shape
+    if q.ndim == 4:
+        qe = q[:, :, :, :, None]  # [N, C, H, W, 1]
+        th = thresholds.reshape(1, c, 1, 1, n)
+    elif q.ndim == 2:
+        qe = q[:, :, None]
+        th = thresholds.reshape(1, c, n)
+    else:
+        raise ValueError(f"threshold_act: unsupported rank {q.ndim}")
+    return jnp.sum((qe >= th).astype(INT), axis=-1) - 1
+
+
+def avgpool_requant(acc: jax.Array, k1: int, k2: int, d: int) -> jax.Array:
+    """Integer average pooling scaling (Eq. 25): (floor(2^d/(K1*K2))*acc) >> d."""
+    m = (1 << d) // (k1 * k2)
+    wide = acc.astype(WIDE) * jnp.asarray(m, WIDE)
+    return jnp.right_shift(wide, jnp.asarray(d, WIDE)).astype(INT)
+
+
+# ---------------------------------------------------------------------------
+# Transform-time parameter derivation (python mirror of rust/src/transform/)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BnQuantParams:
+    """Quantized batch-norm parameters (sec. 3.4, Integer BN)."""
+
+    kappa_q: Sequence[int]
+    lambda_q: Sequence[int]
+    eps_kappa: float
+    eps_phi_out: float  # eps_kappa * eps_phi_in
+
+
+def quantize_bn(gamma, sigma, beta, mu, eps_phi: float, kappa_bits: int = 8):
+    """Derive (Q(kappa), Q(lambda)) from BN parameters (Eq. 21).
+
+    kappa = gamma/sigma quantized symmetrically with kappa_bits;
+    lambda = beta - kappa*mu stored directly in the target format
+    eps_kappa*eps_phi (D=1 wiring; the paper leaves this to the backend).
+    """
+    import numpy as np
+
+    gamma = np.asarray(gamma, np.float64)
+    sigma = np.asarray(sigma, np.float64)
+    beta = np.asarray(beta, np.float64)
+    mu = np.asarray(mu, np.float64)
+    kappa = gamma / sigma
+    lam = beta - kappa * mu
+    bmax = float(np.max(np.abs(kappa)))
+    if bmax == 0.0:
+        bmax = 1.0
+    spec = QuantSpec.symmetric(bmax, kappa_bits)
+    kappa_q = np.clip(np.floor(kappa / spec.eps), spec.lo, spec.hi).astype(np.int64)
+    eps_phi_out = spec.eps * eps_phi
+    lambda_q = np.floor(lam / eps_phi_out).astype(np.int64)
+    return BnQuantParams(
+        kappa_q=[int(v) for v in kappa_q],
+        lambda_q=[int(v) for v in lambda_q],
+        eps_kappa=spec.eps,
+        eps_phi_out=eps_phi_out,
+    )
+
+
+def bn_thresholds(gamma, sigma, beta, mu, eps_phi: float, eps_y: float,
+                  n_levels: int):
+    """Integer thresholds TH_i of Eq. 19 (exact BN+act merge), per channel.
+
+    TH_i = ceil( (sigma/gamma * i * eps_y - beta*sigma/gamma + mu) / eps_phi )
+    for i = 1..n_levels-1 (TH_0 is implied by clipping at integer 0).
+    Requires gamma/sigma > 0 (paper assumption).
+    """
+    import numpy as np
+
+    gamma = np.asarray(gamma, np.float64)
+    sigma = np.asarray(sigma, np.float64)
+    beta = np.asarray(beta, np.float64)
+    mu = np.asarray(mu, np.float64)
+    inv = sigma / gamma  # > 0 by assumption
+    i = np.arange(1, n_levels)[None, :]  # [1, N-1]
+    th = (inv[:, None] * i * eps_y - (beta * inv)[:, None] + mu[:, None]) / eps_phi
+    return np.ceil(th).astype(np.int64)
+
+
+def fold_bn(w, b, gamma, sigma, beta, mu):
+    """BN folding (Eq. 18): w <- gamma/sigma * w ; b <- b + beta - gamma/sigma*mu.
+
+    w layout: [C_out, ...]; all BN params have shape [C_out].
+    """
+    import numpy as np
+
+    w = np.asarray(w, np.float64)
+    k = np.asarray(gamma, np.float64) / np.asarray(sigma, np.float64)
+    shape = (-1,) + (1,) * (w.ndim - 1)
+    w_f = w * k.reshape(shape)
+    b0 = np.zeros_like(k) if b is None else np.asarray(b, np.float64)
+    b_f = b0 + np.asarray(beta, np.float64) - k * np.asarray(mu, np.float64)
+    return w_f, b_f

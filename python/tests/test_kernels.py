@@ -1,0 +1,120 @@
+"""Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes, values, and tile sizes; every comparison is
+exact (integer) equality — these are integer kernels, allclose would hide
+real bugs.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.avgpool import avgpool
+from compile.kernels.intbn import intbn
+from compile.kernels.qgemm import qgemm, qgemm_bn_requant
+from compile.kernels.requant import requant
+from compile.kernels.thresh import thresh
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+@given(m=st.integers(1, 90), k=st.integers(1, 90), n=st.integers(1, 40),
+       bm=st.sampled_from([8, 32, 64]), seed=st.integers(0, 2**31))
+@settings(**SETTINGS)
+def test_qgemm_matches_ref(m, k, n, bm, seed):
+    r = _rng(seed)
+    a = jnp.asarray(r.integers(-255, 256, (m, k)), jnp.int32)
+    b = jnp.asarray(r.integers(-128, 128, (k, n)), jnp.int32)
+    got = qgemm(a, b, bm=bm, bk=bm, bn=bm)
+    assert np.array_equal(got, ref.qgemm_ref(a, b))
+
+
+@given(m=st.integers(1, 60), k=st.integers(1, 60), n=st.integers(1, 30),
+       d=st.integers(4, 24), seed=st.integers(0, 2**31))
+@settings(**SETTINGS)
+def test_qgemm_fused_matches_ref(m, k, n, d, seed):
+    r = _rng(seed)
+    a = jnp.asarray(r.integers(0, 256, (m, k)), jnp.int32)
+    b = jnp.asarray(r.integers(-128, 128, (k, n)), jnp.int32)
+    kq = jnp.asarray(r.integers(-127, 128, (n,)), jnp.int32)
+    lq = jnp.asarray(r.integers(-2**20, 2**20, (n,)), jnp.int32)
+    mm = int(r.integers(16, 64))
+    got = qgemm_bn_requant(a, b, kq, lq, jnp.int32(mm), jnp.int32(d),
+                           jnp.int32(0), jnp.int32(255), bm=32, bk=32, bn=32)
+    want = ref.intbn_requant_ref(ref.qgemm_ref(a, b), kq, lq, mm, d, 0, 255)
+    assert np.array_equal(got, want)
+
+
+@given(n=st.integers(1, 10000), m=st.integers(1, 64), d=st.integers(0, 30),
+       neg=st.booleans(), seed=st.integers(0, 2**31))
+@settings(**SETTINGS)
+def test_requant_matches_ref(n, m, d, neg, seed):
+    r = _rng(seed)
+    lo = -2**27 if neg else 0
+    q = jnp.asarray(r.integers(lo, 2**27, (n,)), jnp.int32)
+    got = requant(q, jnp.int32(m), jnp.int32(d), jnp.int32(0), jnp.int32(255))
+    assert np.array_equal(got, ref.requant_ref(q, m, d, 0, 255))
+
+
+def test_requant_negative_floor_semantics():
+    # (m*q) >> d must floor toward -inf, not truncate toward zero.
+    q = jnp.asarray([-1, -3, -255, -256, -257], jnp.int32)
+    got = requant(q, jnp.int32(1), jnp.int32(8), jnp.int32(-100),
+                  jnp.int32(100))
+    assert got.tolist() == [-1, -1, -1, -1, -2]
+
+
+@given(rows=st.integers(1, 300), c=st.integers(1, 70),
+       seed=st.integers(0, 2**31))
+@settings(**SETTINGS)
+def test_intbn_matches_ref(rows, c, seed):
+    r = _rng(seed)
+    q = jnp.asarray(r.integers(-2**22, 2**22, (rows, c)), jnp.int32)
+    kq = jnp.asarray(r.integers(-127, 128, (c,)), jnp.int32)
+    lq = jnp.asarray(r.integers(-2**26, 2**26, (c,)), jnp.int32)
+    got = intbn(q, kq, lq, br=64, bc=16)
+    assert np.array_equal(got, ref.intbn_ref(q, kq, lq))
+
+
+@given(rows=st.integers(1, 200), c=st.integers(1, 40),
+       nlev=st.sampled_from([3, 15, 255]), seed=st.integers(0, 2**31))
+@settings(**SETTINGS)
+def test_thresh_matches_ref(rows, c, nlev, seed):
+    r = _rng(seed)
+    th = np.sort(r.integers(-1000, 1000, (c, nlev)), axis=1).astype(np.int32)
+    q = jnp.asarray(r.integers(-1500, 1500, (rows, c)), jnp.int32)
+    got = thresh(q, jnp.asarray(th), br=64, bc=8)
+    assert np.array_equal(got, ref.thresh_ref(q, jnp.asarray(th)))
+
+
+@given(b=st.integers(1, 4), c=st.integers(1, 40),
+       k=st.sampled_from([2, 4]), tiles=st.integers(1, 3),
+       d=st.integers(8, 20), seed=st.integers(0, 2**31))
+@settings(**SETTINGS)
+def test_avgpool_matches_ref(b, c, k, tiles, d, seed):
+    r = _rng(seed)
+    hw = k * tiles
+    q = jnp.asarray(r.integers(0, 256, (b, c, hw, hw)), jnp.int32)
+    got = avgpool(q, k, k, d, bc=8)
+    assert np.array_equal(got, ref.avgpool_ref(q, k, k, d))
+
+
+def test_im2col_matches_conv():
+    # im2col + gemm must equal lax.conv on the same integer data.
+    import jax
+
+    r = _rng(0)
+    x = jnp.asarray(r.integers(0, 256, (2, 3, 8, 8)), jnp.int32)
+    w = jnp.asarray(r.integers(-128, 128, (5, 3, 3, 3)), jnp.int32)
+    cols, (b, oh, ow) = ref.im2col_ref(x, 3, 3, 2, 1)
+    wmat = w.transpose(1, 2, 3, 0).reshape(27, 5)
+    got = ref.qgemm_ref(cols, wmat).reshape(b, oh, ow, 5).transpose(0, 3, 1, 2)
+    want = jax.lax.conv_general_dilated(
+        x, w, (2, 2), ((1, 1), (1, 1)),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    assert np.array_equal(got, np.asarray(want, np.int32))

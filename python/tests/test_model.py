@@ -1,0 +1,135 @@
+"""Representation-consistency tests over the full SynthNet model
+(sec. 3: QD completes FQ; ID is the integer image of QD)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import deploy as dp
+from compile import model as M
+from compile.aot import init_params
+
+
+@pytest.fixture(scope="module")
+def deployed():
+    params, state = init_params(seed=42)
+    rng = np.random.default_rng(11)
+    xs = rng.uniform(0, 1, (16, *M.IN_SHAPE)).astype(np.float32)
+    betas = dp.calibrate_act_betas(
+        [jnp.asarray(p, jnp.float32) for p in params],
+        [jnp.asarray(s, jnp.float32) for s in state], xs, M.fp_fwd)
+    dep = dp.deploy(params, state, betas, wbits=8, abits=8)
+    return params, state, betas, dep, xs
+
+
+def test_qd_close_to_fp(deployed):
+    """QD == FP up to accumulated quantization error (small at 8 bits)."""
+    params, state, betas, dep, xs = deployed
+    x = xs[:8]
+    qx = dp.quantize_input(x)
+    fp = np.asarray(M.fp_fwd([jnp.asarray(p, jnp.float32) for p in params],
+                             [jnp.asarray(s, jnp.float32) for s in state],
+                             jnp.asarray(x)))
+    qd = np.asarray(M.qd_fwd([jnp.asarray(a) for a in dep.qd_args],
+                             jnp.asarray(qx.astype(np.float32) * M.EPS_IN)))
+    # logits live on an O(1) scale; 8-bit pipeline keeps them close.
+    assert np.max(np.abs(fp - qd)) < 0.35
+    # argmax agreement on a clear majority of samples
+    agree = np.mean(np.argmax(fp, -1) == np.argmax(qd, -1))
+    assert agree >= 0.75
+
+
+def test_id_matches_qd_within_requant_error(deployed):
+    """eps_out * Q(logits) approximates the QD logits within the
+    requantization error bound (eta = 1/16 per stage)."""
+    params, state, betas, dep, xs = deployed
+    x = xs[:8]
+    qx = dp.quantize_input(x)
+    qd = np.asarray(M.qd_fwd([jnp.asarray(a) for a in dep.qd_args],
+                             jnp.asarray(qx.astype(np.float32) * M.EPS_IN)))
+    qlog = np.asarray(M.id_fwd([jnp.asarray(a) for a in dep.id_args],
+                               jnp.asarray(qx)))
+    id_logits = qlog.astype(np.float64) * dep.eps_out
+    # per-stage relative error 1/16, three stages + pooling: be generous
+    # on the absolute tolerance but demand argmax agreement.
+    assert np.max(np.abs(id_logits - qd)) < 0.5
+    agree = np.mean(np.argmax(qd, -1) == np.argmax(id_logits, -1))
+    assert agree >= 0.75
+
+
+def test_id_is_deterministic_integer(deployed):
+    params, state, betas, dep, xs = deployed
+    qx = dp.quantize_input(xs[:2])
+    a = np.asarray(M.id_fwd([jnp.asarray(v) for v in dep.id_args],
+                            jnp.asarray(qx)))
+    b = np.asarray(M.id_fwd([jnp.asarray(v) for v in dep.id_args],
+                            jnp.asarray(qx)))
+    assert a.dtype == np.int32
+    assert np.array_equal(a, b)
+
+
+def test_fq_fwd_runs_all_bitwidths(deployed):
+    params, state, betas, dep, xs = deployed
+    x = jnp.asarray(xs[:4])
+    p = [jnp.asarray(v, jnp.float32) for v in params]
+    s = [jnp.asarray(v, jnp.float32) for v in state]
+    b = [jnp.asarray(v, jnp.float32) for v in betas]
+    for wb, ab in ((8, 8), (4, 4), (2, 2)):
+        out = M.fq_fwd(p, s, b, x, wbits=wb, abits=ab)
+        assert np.isfinite(np.asarray(out)).all()
+
+
+def test_fq_train_step_reduces_loss():
+    """A few QAT steps on a fixed batch must reduce the loss (STE works)."""
+    params, state = init_params(seed=1)
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.uniform(0, 1, (32, *M.IN_SHAPE)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, M.N_CLASSES, (32,)), jnp.int32)
+    p = [jnp.asarray(v, jnp.float32) for v in params]
+    s = [jnp.asarray(v, jnp.float32) for v in state]
+    b = [jnp.float32(4.0)] * M.N_ACT
+    losses = []
+    for _ in range(12):
+        p, s, b, loss = M.fq_train_step(p, s, b, x, y, jnp.float32(0.05),
+                                        wbits=4, abits=4)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0]
+
+
+def test_fp_train_step_reduces_loss():
+    params, state = init_params(seed=2)
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(rng.uniform(0, 1, (32, *M.IN_SHAPE)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, M.N_CLASSES, (32,)), jnp.int32)
+    p = [jnp.asarray(v, jnp.float32) for v in params]
+    s = [jnp.asarray(v, jnp.float32) for v in state]
+    losses = []
+    for _ in range(12):
+        p, s, loss = M.fp_train_step(p, s, x, y, jnp.float32(0.05))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0]
+
+
+def test_deploy_range_analysis(deployed):
+    """Worst-case accumulators stay within int32 (the pipeline's safety
+    contract for the Pallas kernels and the MCU-style engine)."""
+    _, _, _, dep, _ = deployed
+    for lay, c in zip(dep.layers, M.CONVS):
+        k_elems = c["cin"] * c["k"] * c["k"]
+        acc_max = k_elems * 255 * 128           # |Q_x| <= 255, |Q_w| <= 128
+        assert acc_max < 2**31
+        bn_max = acc_max * 128 + 2**26          # |kappa_q| < 2^7
+        assert bn_max < 2**63
+        assert lay.m * bn_max < 2**63           # requant multiply in i64
+
+
+def test_id_xla_matches_pallas_bit_exactly(deployed):
+    """The XLA-native ID build and the Pallas-kernel ID build are the same
+    integer function (same args, bit-exact outputs)."""
+    import jax.numpy as jnp
+
+    params, state, betas, dep, xs = deployed
+    qx = dp.quantize_input(xs[:4])
+    a = np.asarray(M.id_fwd([jnp.asarray(v) for v in dep.id_args], jnp.asarray(qx)))
+    b = np.asarray(M.id_fwd_xla([jnp.asarray(v) for v in dep.id_args], jnp.asarray(qx)))
+    assert np.array_equal(a, b)

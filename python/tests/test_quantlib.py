@@ -1,0 +1,169 @@
+"""Formal-claim tests for the quantization math (paper sec. 2-3)."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import quantlib as ql
+
+SETTINGS = dict(max_examples=50, deadline=None)
+eps_strategy = st.floats(1e-7, 1e-1, allow_nan=False, allow_infinity=False)
+
+
+@given(eps_a=eps_strategy, eps_b=eps_strategy,
+       factor=st.sampled_from([16, 64, 256]))
+@settings(**SETTINGS)
+def test_choose_d_satisfies_eq14(eps_a, eps_b, factor):
+    """d >= log2(eps_b / (eps_a * eta)), eta = 1/factor (Eq. 14)."""
+    d = ql.choose_d(eps_a, eps_b, factor)
+    if d < 40:  # not saturated at d_max
+        assert eps_a * (2.0 ** d) >= factor * eps_b
+        if d > 0:  # minimality: d-1 must violate the bound
+            assert eps_a * (2.0 ** (d - 1)) < factor * eps_b
+
+
+@given(eps_a=eps_strategy, eps_b=eps_strategy,
+       factor=st.sampled_from([16, 256]), seed=st.integers(0, 2**31))
+@settings(**SETTINGS)
+def test_requant_relative_error_bound(eps_a, eps_b, factor, seed):
+    """|eps_a/eps_b - m/2^d| * 2^d/m <= ... the paper's bound: the ratio
+    error is < 1/D relative to eps_a/eps_b scaled by eta (sec. 3.2)."""
+    d = ql.choose_d(eps_a, eps_b, factor)
+    if d >= 40:
+        return
+    m = ql.requant_multiplier(eps_a, eps_b, d)
+    ratio = eps_a / eps_b
+    approx = m / (2.0 ** d)
+    # error bound: |ratio - approx| < 1/2^d, and relative error <= 1/factor
+    assert abs(ratio - approx) < 1.0 / (2.0 ** d) * (1 + 1e-12)
+    assert abs(ratio - approx) / ratio <= 1.0 / factor + 1e-12
+
+
+@given(seed=st.integers(0, 2**31), bits=st.sampled_from([2, 4, 8]))
+@settings(**SETTINGS)
+def test_pact_act_on_grid(seed, bits):
+    """FakeQuantized activations take values on the eps_y grid in [0, beta]."""
+    r = np.random.default_rng(seed)
+    beta = float(r.uniform(0.5, 6.0))
+    eps = beta / ((1 << bits) - 1)
+    x = jnp.asarray(r.normal(0, 2, (500,)), jnp.float32)
+    y = np.asarray(ql.pact_act(x, jnp.float32(beta), jnp.float32(eps)))
+    q = y / eps
+    assert np.allclose(q, np.round(q), atol=1e-3)
+    assert (y >= 0).all() and (y <= beta + 1e-6).all()
+
+
+def test_pact_act_ste_gradients():
+    """STE: dL/dx = chi_[0,beta)(x); dL/dbeta = sum over clipped-high."""
+    x = jnp.asarray([-1.0, 0.5, 1.5, 3.0], jnp.float32)
+    beta = jnp.float32(2.0)
+    eps = beta / 15.0
+
+    gx, gb = jax.grad(lambda x_, b_: jnp.sum(ql.pact_act(x_, b_, eps)),
+                      argnums=(0, 1))(x, beta)
+    assert np.array_equal(np.asarray(gx), [0.0, 1.0, 1.0, 0.0])
+    assert float(gb) == 1.0  # only x=3.0 is clipped at the top
+
+
+def test_pact_weight_ste_gradients():
+    w = jnp.asarray([-3.0, -0.5, 0.5, 3.0], jnp.float32)
+    beta = jnp.float32(1.0)
+    gw = jax.grad(lambda w_: jnp.sum(ql.pact_weight(w_, beta, 4)))(w)
+    assert np.array_equal(np.asarray(gw), [0.0, 1.0, 1.0, 0.0])
+
+
+@given(seed=st.integers(0, 2**31), bits=st.sampled_from([2, 4, 8]))
+@settings(**SETTINGS)
+def test_weight_quantization_error_bound(seed, bits):
+    """|w - w_hat| <= eps_w inside the clipping range."""
+    r = np.random.default_rng(seed)
+    w = r.normal(0, 1, (200,))
+    beta = float(np.max(np.abs(w)))
+    spec = ql.QuantSpec.weight(beta, bits)
+    q = np.clip(np.floor(w / spec.eps), spec.lo, spec.hi)
+    w_hat = q * spec.eps
+    inside = np.abs(w) < beta - spec.eps
+    assert np.all(np.abs(w - w_hat)[inside] <= spec.eps * (1 + 1e-9))
+
+
+@given(seed=st.integers(0, 2**31), nlev=st.sampled_from([3, 15, 255]))
+@settings(max_examples=25, deadline=None)
+def test_threshold_merge_exact(seed, nlev):
+    """Eq. 19-20: integer thresholds reproduce BN + linear quantization
+    EXACTLY over the full integer input range (the paper's proof)."""
+    r = np.random.default_rng(seed)
+    c = 4
+    gamma = np.abs(r.normal(1, 0.3, c)) + 0.05
+    sigma = np.abs(r.normal(1, 0.3, c)) + 0.05
+    beta = r.normal(0, 0.5, c)
+    mu = r.normal(0, 0.5, c)
+    eps_phi = float(r.uniform(1e-5, 1e-3))
+    eps_y = float(r.uniform(5e-3, 5e-2))
+
+    th = ql.bn_thresholds(gamma, sigma, beta, mu, eps_phi, eps_y, nlev + 1)
+    q_phi = r.integers(-2**18, 2**18, (300, c))
+
+    # Reference: float BN then Eq. 10 linear quantization.
+    phi_hat = eps_phi * q_phi
+    bn = (gamma / sigma)[None, :] * (phi_hat - mu[None, :]) + beta[None, :]
+    want = np.clip(np.floor(bn / eps_y), 0, nlev).astype(np.int64)
+
+    got = np.clip(np.sum(q_phi[:, :, None] >= th.T[None, :, :].transpose(0, 2, 1),
+                         axis=-1), 0, nlev)
+    assert np.array_equal(got, want)
+
+
+def test_fold_bn_exact():
+    """Eq. 18: folded conv == conv + BN in full precision."""
+    import jax
+
+    r = np.random.default_rng(3)
+    w = jnp.asarray(r.normal(0, 0.5, (4, 3, 3, 3)), jnp.float64)
+    x = jnp.asarray(r.normal(0, 1, (2, 3, 8, 8)), jnp.float64)
+    gamma = np.abs(r.normal(1, 0.2, 4)) + 0.05
+    sigma = np.abs(r.normal(1, 0.2, 4)) + 0.05
+    beta = r.normal(0, 0.3, 4)
+    mu = r.normal(0, 0.3, 4)
+
+    conv = lambda x_, w_: jax.lax.conv_general_dilated(
+        x_, w_, (1, 1), ((1, 1), (1, 1)),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    phi = np.asarray(conv(x, w))
+    want = (gamma / sigma)[None, :, None, None] * (phi - mu[None, :, None, None]) \
+        + beta[None, :, None, None]
+
+    wf, bf = ql.fold_bn(np.asarray(w), None, gamma, sigma, beta, mu)
+    got = np.asarray(conv(x, jnp.asarray(wf))) + bf[None, :, None, None]
+    assert np.allclose(got, want, rtol=1e-12, atol=1e-12)
+
+
+@given(seed=st.integers(0, 2**31))
+@settings(**SETTINGS)
+def test_maxpool_order_preservation(seed):
+    """Sec. 3.6: quantization preserves relative order, so MaxPool commutes
+    with the integer image."""
+    r = np.random.default_rng(seed)
+    t = r.normal(0, 1, (100,))
+    eps = 0.03
+    q = np.floor(np.clip(t, 0, 2.0) / eps)
+    i, j = r.integers(0, 100, 2)
+    if q[i] > q[j]:
+        assert np.clip(t, 0, 2.0)[i] >= np.clip(t, 0, 2.0)[j] - eps
+
+
+@given(k=st.sampled_from([2, 3, 4, 7]), d=st.integers(8, 24),
+       seed=st.integers(0, 2**31))
+@settings(**SETTINGS)
+def test_avgpool_scaling_error(k, d, seed):
+    """Eq. 25: the 2^d/(K1K2) approximation error is bounded by
+    sum * (1/(K1K2) - floor(2^d/(K1K2))/2^d) < sum * K1K2 / 2^d."""
+    r = np.random.default_rng(seed)
+    acc = int(r.integers(0, 255 * k * k))
+    m = (1 << d) // (k * k)
+    got = (acc * m) >> d
+    exact = acc / (k * k)
+    assert got <= exact + 1e-9
+    assert exact - got <= acc * (k * k) / (1 << d) / (k * k) + 1.0

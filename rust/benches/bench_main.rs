@@ -1,0 +1,609 @@
+//! Experiment/bench harness: one sub-bench per experiment in DESIGN.md §6
+//! (the tables/figures the tech report implies). Run all:
+//!
+//!     cargo bench
+//!
+//! or a subset: `cargo bench -- E1 E5`. Results are recorded in
+//! EXPERIMENTS.md. criterion is not in the offline vendor set; timing
+//! uses util::timer::bench (warmup + min-time loop).
+
+use std::time::Duration;
+
+use nemo::data::SynthDigits;
+use nemo::engine::{FloatEngine, IntegerEngine};
+use nemo::io::artifacts_dir;
+use nemo::model::artifact_args::synthnet_id_args;
+use nemo::model::synthnet::{SynthNet, EPS_IN};
+use nemo::model::residual_net;
+use nemo::quant::bn::{BnParams, BnQuant, Thresholds};
+use nemo::quant::requant::{choose_d, multiplier, Requant};
+use nemo::quant::quantize_input;
+use nemo::runtime::Runtime;
+use nemo::tensor::{ops, Tensor, TensorI};
+use nemo::train::{eval_float, eval_integer, train_fp, train_fq, TrainConfig};
+use nemo::transform::{calibrate_percentile, deploy, fold_bn, DeployOptions};
+use nemo::util::rng::Rng;
+use nemo::util::timer::{bench, fmt_time};
+
+fn main() {
+    let filters: Vec<String> = std::env::args()
+        .skip(1)
+        .filter(|a| a.starts_with('E') || a.starts_with("perf"))
+        .collect();
+    let run = |tag: &str| filters.is_empty() || filters.iter().any(|f| tag.starts_with(f.as_str()));
+
+    let rt = Runtime::new(artifacts_dir()).ok();
+    if rt.is_none() {
+        eprintln!("NOTE: artifacts not built; PJRT-dependent benches are skipped");
+    }
+
+    if run("E1") {
+        e1_requant_error();
+    }
+    if run("E2") {
+        e2_threshold_exactness();
+    }
+    if run("E3") || run("E4") {
+        e3_e4_representations_and_qat(rt.as_ref());
+    }
+    if run("E5") {
+        e5_avgpool_error();
+    }
+    if run("E6") {
+        e6_add_requant();
+    }
+    if run("E7") {
+        e7_bn_folding();
+    }
+    if run("E8") {
+        e8_engine_and_serving(rt.as_ref());
+    }
+    if run("E9") {
+        e9_float_hardware(rt.as_ref());
+    }
+    if run("perf") {
+        perf_microbench(rt.as_ref());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// E1: requantization relative error vs d (Eq. 12-14)
+// ---------------------------------------------------------------------------
+
+fn e1_requant_error() {
+    println!("\n=== E1: requantization error vs d (Eq. 13-14 bound) ===");
+    println!(
+        "{:>4} {:>14} {:>14} {:>10}",
+        "d", "max rel err", "bound 1/2^d*r", "ok"
+    );
+    let mut rng = Rng::new(1);
+    for d in [2u32, 4, 8, 12, 16, 20, 24] {
+        let mut max_rel = 0f64;
+        let mut bound = 0f64;
+        for _ in 0..2000 {
+            let eps_a = rng.uniform(1e-6, 1e-2);
+            let eps_b = rng.uniform(1e-4, 1e-1);
+            let ratio = eps_a / eps_b;
+            let m = multiplier(eps_a, eps_b, d);
+            if m == 0 {
+                continue; // d too small for this ratio: out of Eq. 14 regime
+            }
+            let approx = m as f64 / (1u64 << d) as f64;
+            max_rel = max_rel.max((ratio - approx).abs() / ratio);
+            bound = bound.max(1.0 / ((1u64 << d) as f64 * ratio));
+        }
+        println!(
+            "{:>4} {:>14.3e} {:>14.3e} {:>10}",
+            d,
+            max_rel,
+            bound,
+            if max_rel <= bound * (1.0 + 1e-9) { "within" } else { "VIOLATED" }
+        );
+    }
+    // The Eq. 14 d-selection hits the eta target:
+    let mut worst = 0f64;
+    for _ in 0..5000 {
+        let eps_a = rng.uniform(1e-7, 1e-1);
+        let eps_b = rng.uniform(1e-7, 1e-1);
+        let d = choose_d(eps_a, eps_b, 16);
+        if d >= 40 {
+            continue;
+        }
+        let m = multiplier(eps_a, eps_b, d);
+        let rel = (eps_a / eps_b - m as f64 / (1u64 << d) as f64).abs() / (eps_a / eps_b);
+        worst = worst.max(rel);
+    }
+    println!("choose_d(factor=16): worst rel err {worst:.4} (target <= 0.0625)");
+}
+
+// ---------------------------------------------------------------------------
+// E2: threshold merge exactness + cost (Eq. 19-20)
+// ---------------------------------------------------------------------------
+
+fn e2_threshold_exactness() {
+    println!("\n=== E2: threshold BN+act merge — exactness & cost (Eq. 19-20) ===");
+    let mut rng = Rng::new(2);
+    let c = 32;
+    let bn = BnParams {
+        gamma: (0..c).map(|_| rng.uniform(0.05, 2.0)).collect(),
+        sigma: (0..c).map(|_| rng.uniform(0.05, 2.0)).collect(),
+        beta: (0..c).map(|_| rng.normal(0.0, 0.5)).collect(),
+        mu: (0..c).map(|_| rng.normal(0.0, 0.5)).collect(),
+    };
+    let eps_phi = 1e-4;
+    println!(
+        "{:>6} {:>12} {:>14} {:>14}",
+        "bits", "mismatches", "thresh t/el", "intbn+rq t/el"
+    );
+    for bits in [2u32, 4, 8] {
+        let n = (1i64 << bits) - 1;
+        let eps_y = 2.0 / n as f64;
+        let th = Thresholds::derive(&bn, eps_phi, eps_y, n);
+        let bq = BnQuant::derive(&bn, eps_phi, 8);
+        let rq = Requant::derive(bq.eps_phi_out, eps_y, 16, 0, n);
+        // exactness vs the float BN + Eq. 10 path
+        let mut mismatches = 0u64;
+        let mut qs = Vec::new();
+        for _ in 0..100_000 {
+            let ch = rng.int(0, c as i64) as usize;
+            let q = rng.int(-(1 << 20), 1 << 20);
+            qs.push((ch, q));
+            let float_bn = bn.gamma[ch] / bn.sigma[ch] * (eps_phi * q as f64 - bn.mu[ch])
+                + bn.beta[ch];
+            let want = ((float_bn / eps_y).floor() as i64).clamp(0, n);
+            if th.apply(ch, q) != want {
+                mismatches += 1;
+            }
+        }
+        // cost per element
+        let (t_th, _) = bench(1, 0.2, || {
+            let mut acc = 0i64;
+            for (ch, q) in &qs {
+                acc = acc.wrapping_add(th.apply(*ch, *q));
+            }
+            std::hint::black_box(acc);
+        });
+        let (t_rq, _) = bench(1, 0.2, || {
+            let mut acc = 0i64;
+            for (ch, q) in &qs {
+                acc = acc.wrapping_add(rq.apply(bq.apply(*ch, *q)));
+            }
+            std::hint::black_box(acc);
+        });
+        println!(
+            "{:>6} {:>12} {:>14} {:>14}",
+            bits,
+            mismatches,
+            fmt_time(t_th / qs.len() as f64),
+            fmt_time(t_rq / qs.len() as f64)
+        );
+    }
+    println!("(threshold path is exact by construction; mismatches must be 0)");
+}
+
+// ---------------------------------------------------------------------------
+// E3+E4: representation accuracy table + QAT recovery
+// ---------------------------------------------------------------------------
+
+fn e3_e4_representations_and_qat(rt: Option<&Runtime>) {
+    println!("\n=== E3: accuracy across representations / E4: QAT recovery ===");
+    let Some(rt) = rt else {
+        println!("skipped (no artifacts)");
+        return;
+    };
+    let seed = 3u64;
+    let mut rng = Rng::new(seed);
+    let mut net = SynthNet::init(&mut rng);
+    let mut data = SynthDigits::new(seed);
+    let cfg = TrainConfig { steps: 500, lr: 0.3, lr_decay: true, seed, log_every: 0 };
+    train_fp(&rt, &mut net, &mut data, &cfg).expect("fp train");
+    let (cal_x, _) = data.batch(128);
+    net.act_betas = calibrate_percentile(&net.to_fp_graph(), &[cal_x], 0.995);
+    let (eval_x, eval_l) = SynthDigits::eval_set(seed, 1024);
+    let fp_acc = eval_float(&net.to_fp_graph(), &eval_x, &eval_l);
+
+    println!(
+        "{:<8} {:>8} {:>10} {:>10} {:>12} {:>12}",
+        "bits", "FP", "QD preQAT", "ID preQAT", "QD postQAT", "ID postQAT"
+    );
+    for bits in [8u32, 4, 2] {
+        let dep0 = deploy(
+            &net.to_pact_graph(bits),
+            DeployOptions { wbits: bits, abits: bits, ..DeployOptions::default() },
+        )
+        .expect("deploy");
+        let qd0 = eval_float(&dep0.qd, &eval_x, &eval_l);
+        let id0 = eval_integer(&dep0.id, &eval_x, &eval_l, EPS_IN);
+
+        // E4: QAT fine-tune at this bit width (fresh copy of the FP net)
+        let mut qat_net = net.clone();
+        let mut qat_data = SynthDigits::new(seed + 100);
+        let qcfg = TrainConfig { steps: 200, lr: 0.06, lr_decay: true, seed, log_every: 0 };
+        train_fq(&rt, &mut qat_net, &mut qat_data, bits, bits, &qcfg).expect("fq");
+        let dep1 = deploy(
+            &qat_net.to_pact_graph(bits),
+            DeployOptions { wbits: bits, abits: bits, ..DeployOptions::default() },
+        )
+        .expect("deploy");
+        let qd1 = eval_float(&dep1.qd, &eval_x, &eval_l);
+        let id1 = eval_integer(&dep1.id, &eval_x, &eval_l, EPS_IN);
+        println!(
+            "{:<8} {:>7.1}% {:>9.1}% {:>9.1}% {:>11.1}% {:>11.1}%",
+            format!("{bits}/{bits}"),
+            fp_acc * 100.0,
+            qd0 * 100.0,
+            id0 * 100.0,
+            qd1 * 100.0,
+            id1 * 100.0
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// E5: integer AvgPool error vs d (Eq. 25)
+// ---------------------------------------------------------------------------
+
+fn e5_avgpool_error() {
+    println!("\n=== E5: integer AvgPool scaling error vs d (Eq. 25) ===");
+    println!("{:>4} {:>4} {:>14} {:>14}", "K", "d", "max abs err", "mean abs err");
+    let mut rng = Rng::new(5);
+    for k in [2usize, 3, 4, 7] {
+        for d in [8u32, 12, 16, 20] {
+            let m = (1i64 << d) / (k * k) as i64;
+            let mut max_err = 0f64;
+            let mut sum_err = 0f64;
+            let trials = 20_000;
+            for _ in 0..trials {
+                let acc: i64 = (0..k * k).map(|_| rng.int(0, 256)).sum();
+                let got = ((acc * m) >> d) as f64;
+                let exact = acc as f64 / (k * k) as f64;
+                let e = (exact - got).abs();
+                max_err = max_err.max(e);
+                sum_err += e;
+            }
+            println!(
+                "{:>4} {:>4} {:>14.4} {:>14.4}",
+                k,
+                d,
+                max_err,
+                sum_err / trials as f64
+            );
+        }
+    }
+    println!("(error -> floor-only (<1) as d grows; K=4 with d>=4 is exact scaling)");
+}
+
+// ---------------------------------------------------------------------------
+// E6: Add requantization (Eq. 24) on the residual net
+// ---------------------------------------------------------------------------
+
+fn e6_add_requant() {
+    println!("\n=== E6: integer Add with per-branch requantization (Eq. 24) ===");
+    let mut rng = Rng::new(6);
+    let g = residual_net(&mut rng, EPS_IN);
+    let mut cal = SynthDigits::new(60);
+    let (cal_x, _) = cal.batch(32);
+    let betas = calibrate_percentile(&g, &[cal_x.clone()], 0.999);
+    let fq = nemo::transform::quantize_pact(&g, 8, 8, &betas);
+    println!("{:>8} {:>16} {:>16}", "factor", "max |QD-ID| out", "argmax agree");
+    for factor in [16u32, 64, 256, 1024] {
+        let dep = deploy(
+            &fq,
+            DeployOptions { add_requant_factor: factor, ..DeployOptions::default() },
+        )
+        .expect("deploy residual");
+        let (x, _) = SynthDigits::eval_set(61, 128);
+        let qx = quantize_input(&x, EPS_IN);
+        let x_grid = qx.map(|q| q as f32 / 255.0);
+        let qd = FloatEngine::new().run(&dep.qd, &x_grid);
+        let id = IntegerEngine::new().run(&dep.id, &qx);
+        let mut max_diff = 0f64;
+        for (a, b) in qd.data().iter().zip(id.data()) {
+            max_diff = max_diff.max((*a as f64 - *b as f64 * dep.eps_out).abs());
+        }
+        let agree = qd
+            .argmax_rows()
+            .iter()
+            .zip(id.argmax_rows())
+            .filter(|(a, b)| **a == *b)
+            .count();
+        println!(
+            "{:>8} {:>16.4e} {:>13}/128",
+            factor, max_diff, agree
+        );
+    }
+    println!("(NEMO default factor = 256)");
+}
+
+// ---------------------------------------------------------------------------
+// E7: BN folding (Eq. 18)
+// ---------------------------------------------------------------------------
+
+fn e7_bn_folding() {
+    println!("\n=== E7: BN folding exactness + inference cost (Eq. 18) ===");
+    let mut rng = Rng::new(7);
+    let net = SynthNet::init(&mut rng);
+    let g = net.to_fp_graph();
+    let folded = fold_bn(&g, None).expect("fold");
+    let (x, _) = SynthDigits::eval_set(70, 64);
+    let e = FloatEngine::new();
+    let a = e.run(&g, &x);
+    let b = e.run(&folded, &x);
+    println!("max |unfolded - folded| = {:.3e} (float assoc. error only)", a.max_abs_diff(&b));
+    let (t_bn, _) = bench(1, 0.5, || {
+        std::hint::black_box(e.run(&g, &x));
+    });
+    let (t_fold, _) = bench(1, 0.5, || {
+        std::hint::black_box(e.run(&folded, &x));
+    });
+    println!(
+        "inference: with BN {}  folded {}  ({:.1}% faster, {} fewer nodes)",
+        fmt_time(t_bn),
+        fmt_time(t_fold),
+        100.0 * (t_bn - t_fold) / t_bn,
+        g.nodes.len() - folded.nodes.len()
+    );
+}
+
+// ---------------------------------------------------------------------------
+// E8: engine throughput + serving sweep
+// ---------------------------------------------------------------------------
+
+fn e8_engine_and_serving(rt: Option<&Runtime>) {
+    println!("\n=== E8: deployment throughput (engines + serving) ===");
+    let mut rng = Rng::new(8);
+    let net = SynthNet::init(&mut rng);
+    let dep = deploy(&net.to_pact_graph(8), DeployOptions::default()).expect("deploy");
+    let (x, _) = SynthDigits::eval_set(80, 16);
+    let qx = quantize_input(&x, EPS_IN);
+    let fe = FloatEngine::new();
+    let ie = IntegerEngine::new();
+    let fp_g = net.to_fp_graph();
+
+    let (t_fp, _) = bench(2, 1.0, || {
+        std::hint::black_box(fe.run(&fp_g, &x));
+    });
+    let (t_qd, _) = bench(2, 1.0, || {
+        std::hint::black_box(fe.run(&dep.qd, &x));
+    });
+    let (t_id, _) = bench(2, 1.0, || {
+        std::hint::black_box(ie.run(&dep.id, &qx));
+    });
+    println!("batch=16 inference:");
+    println!("  FloatEngine FP   : {} / batch ({:.0} img/s)", fmt_time(t_fp), 16.0 / t_fp);
+    println!("  FloatEngine QD   : {} / batch ({:.0} img/s)", fmt_time(t_qd), 16.0 / t_qd);
+    println!("  IntegerEngine ID : {} / batch ({:.0} img/s)", fmt_time(t_id), 16.0 / t_id);
+
+    let Some(rt) = rt else {
+        println!("(PJRT + serving skipped: no artifacts)");
+        return;
+    };
+    let exe = rt.load("synthnet_id_fwd_b16").expect("load");
+    let mut args = synthnet_id_args(&dep).expect("args");
+    args.push(qx.clone().into());
+    let (t_pjrt, _) = bench(2, 1.0, || {
+        std::hint::black_box(exe.run(&args).expect("run"));
+    });
+    println!("  PJRT id_fwd b16  : {} / batch ({:.0} img/s)  [Pallas interpret]", fmt_time(t_pjrt), 16.0 / t_pjrt);
+    if let Ok(exe_xla) = rt.load("synthnet_id_xla_b16") {
+        let (t_xla, _) = bench(2, 1.0, || {
+            std::hint::black_box(exe_xla.run(&args).expect("run"));
+        });
+        println!(
+            "  PJRT id_xla b16  : {} / batch ({:.0} img/s)  [XLA-native integer]",
+            fmt_time(t_xla),
+            16.0 / t_xla
+        );
+    }
+
+    // serving sweep (condensed; full sweep in examples/serve_quantized.rs)
+    use nemo::coordinator::{ModelVariant, Server, ServerConfig};
+    println!("serving over id_fwd_xla (512 req, 2 workers):");
+    println!(
+        "  {:>9} {:>8} {:>10} {:>10} {:>12}",
+        "max_batch", "clients", "p50 (ms)", "p99 (ms)", "thruput r/s"
+    );
+    for (max_batch, clients) in [(1usize, 8usize), (16, 8), (16, 32)] {
+        let base_args = synthnet_id_args(&dep).expect("args");
+        let kind = if rt.manifest.by_kind("id_fwd_xla").is_empty() { "id_fwd" } else { "id_fwd_xla" };
+        let model = ModelVariant::load(rt, "synthnet", kind, base_args).expect("mv");
+        let server = Server::start(
+            vec![model],
+            ServerConfig {
+                max_batch,
+                batch_timeout: Duration::from_micros(300),
+                n_workers: 2,
+            },
+        );
+        let t0 = std::time::Instant::now();
+        let mut joins = Vec::new();
+        for c in 0..clients {
+            let h = server.handle();
+            joins.push(std::thread::spawn(move || {
+                let mut d = SynthDigits::new(800 + c as u64);
+                for _ in 0..512 / clients {
+                    let (x, _) = d.batch(1);
+                    h.infer("synthnet", quantize_input(&x, EPS_IN)).unwrap();
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let mut m = server.stop();
+        println!(
+            "  {:>9} {:>8} {:>10.3} {:>10.3} {:>12.0}",
+            max_batch,
+            clients,
+            m.e2e_latency.percentile(0.5) * 1e3,
+            m.e2e_latency.percentile(0.99) * 1e3,
+            m.throughput(wall)
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// E9: ID on float hardware (PJRT) — exactness + overhead
+// ---------------------------------------------------------------------------
+
+fn e9_float_hardware(rt: Option<&Runtime>) {
+    println!("\n=== E9: IntegerDeployable on general-purpose hardware (sec. 3 note) ===");
+    let Some(rt) = rt else {
+        println!("skipped (no artifacts)");
+        return;
+    };
+    let mut rng = Rng::new(9);
+    let net = SynthNet::init(&mut rng);
+    let dep = deploy(&net.to_pact_graph(8), DeployOptions::default()).expect("deploy");
+    let (x, _) = SynthDigits::eval_set(90, 8);
+    let qx = quantize_input(&x, EPS_IN);
+    let x_grid = qx.map(|q| q as f32 / 255.0);
+
+    // exactness: integer engine vs BOTH PJRT integer graphs
+    let engine_out = IntegerEngine::new().run(&dep.id, &qx);
+    let id_exe = rt.load("synthnet_id_fwd_b8").expect("load id");
+    let mut id_args = synthnet_id_args(&dep).expect("args");
+    id_args.push(qx.clone().into());
+    let pjrt_out = id_exe.run(&id_args).expect("run");
+    let exact = pjrt_out[0].as_i32().unwrap().data() == engine_out.data();
+    println!("bit-exactness IntegerEngine vs PJRT(Pallas): {}", if exact { "EXACT ✓" } else { "MISMATCH ✗" });
+    let id_xla = rt.load("synthnet_id_xla_b8").ok();
+    if let Some(x_exe) = &id_xla {
+        let o = x_exe.run(&id_args).expect("run xla");
+        let exact2 = o[0].as_i32().unwrap().data() == engine_out.data();
+        println!(
+            "bit-exactness IntegerEngine vs PJRT(XLA-native): {}",
+            if exact2 { "EXACT ✓" } else { "MISMATCH ✗" }
+        );
+    }
+
+    // overhead: integer graph vs float QD graph on the same PJRT backend
+    let (t_id, _) = bench(2, 1.0, || {
+        std::hint::black_box(id_exe.run(&id_args).expect("run"));
+    });
+    let t_id_xla = id_xla.as_ref().map(|x_exe| {
+        bench(2, 1.0, || {
+            std::hint::black_box(x_exe.run(&id_args).expect("run"));
+        })
+        .0
+    });
+    let qd_exe = rt.load("synthnet_qd_fwd_b8").expect("load qd");
+    // qd args: w_hat/kappa_hat/lambda_hat/beta/eps per conv + fc + x
+    let mut qd_args: Vec<nemo::runtime::Arg> = Vec::new();
+    {
+        use nemo::graph::Op;
+        let mut per_conv: Vec<(Tensor<f32>, Vec<f64>, Vec<f64>)> = Vec::new();
+        let mut fc: Option<(Tensor<f32>, Vec<f64>)> = None;
+        for n in &dep.qd.nodes {
+            match &n.op {
+                Op::Conv2d { w, .. } => per_conv.push((w.clone(), vec![], vec![])),
+                Op::QuantBn { kappa_hat, lambda_hat } => {
+                    let last = per_conv.last_mut().unwrap();
+                    last.1 = kappa_hat.clone();
+                    last.2 = lambda_hat.clone();
+                }
+                Op::Linear { w, bias } => {
+                    fc = Some((w.clone(), bias.clone().unwrap_or_default()))
+                }
+                _ => {}
+            }
+        }
+        for (i, (w, k, l)) in per_conv.into_iter().enumerate() {
+            qd_args.push(w.into());
+            qd_args.push(Tensor::from_f64(&[k.len()], &k).into());
+            qd_args.push(Tensor::from_f64(&[l.len()], &l).into());
+            let lay = &dep.layers[i];
+            qd_args.push(Tensor::scalar(lay.beta_y as f32).into());
+            qd_args.push(Tensor::scalar(lay.eps_y as f32).into());
+        }
+        let (w, b) = fc.unwrap();
+        qd_args.push(w.into());
+        qd_args.push(Tensor::from_f64(&[b.len()], &b).into());
+        qd_args.push(x_grid.clone().into());
+    }
+    let (t_qd, _) = bench(2, 1.0, || {
+        std::hint::black_box(qd_exe.run(&qd_args).expect("run qd"));
+    });
+    println!(
+        "PJRT b=8: Pallas-interpret integer graph {}  float (QD) graph {}  -> {:.2}x",
+        fmt_time(t_id),
+        fmt_time(t_qd),
+        t_id / t_qd
+    );
+    if let Some(t_x) = t_id_xla {
+        println!(
+            "PJRT b=8: XLA-native integer graph {}  float (QD) graph {}  -> {:.2}x",
+            fmt_time(t_x),
+            fmt_time(t_qd),
+            t_x / t_qd
+        );
+    }
+    println!("(the paper predicts a small penalty for running ID on non-integer hardware;\n the XLA-native build is the faithful comparison — interpret-mode Pallas adds loop overhead)");
+}
+
+// ---------------------------------------------------------------------------
+// perf: micro-benchmarks for the optimization pass (§Perf)
+// ---------------------------------------------------------------------------
+
+fn perf_microbench(rt: Option<&Runtime>) {
+    println!("\n=== perf: hot-path micro-benchmarks ===");
+    let mut rng = Rng::new(99);
+    // integer GEMM (the engine hot path)
+    for (m, k, n) in [(256usize, 72usize, 16usize), (2048, 144, 32), (256, 256, 256)] {
+        let a = Tensor::from_vec(&[m, k], (0..m * k).map(|_| rng.int(0, 256) as i32).collect());
+        let b = Tensor::from_vec(&[k, n], (0..k * n).map(|_| rng.int(-128, 128) as i32).collect());
+        let (t, _) = bench(2, 0.5, || {
+            std::hint::black_box(ops::matmul_i32(&a, &b));
+        });
+        let (tf, _) = bench(2, 0.5, || {
+            std::hint::black_box(ops::matmul_i32_fast(&a, &b));
+        });
+        let flops = 2.0 * (m * k * n) as f64;
+        println!(
+            "  matmul_i32 {m}x{k}x{n}: checked {} ({:.2} Gop/s)  fast {} ({:.2} Gop/s)",
+            fmt_time(t),
+            flops / t / 1e9,
+            fmt_time(tf),
+            flops / tf / 1e9
+        );
+    }
+    // im2col
+    let x: TensorI = Tensor::from_vec(
+        &[16, 8, 16, 16],
+        (0..16 * 8 * 256).map(|_| rng.int(0, 256) as i32).collect(),
+    );
+    let (t, _) = bench(2, 0.5, || {
+        std::hint::black_box(ops::im2col(&x, 3, 3, 1, 1));
+    });
+    println!("  im2col 16x8x16x16 k3: {}", fmt_time(t));
+    // requant
+    let q: TensorI = Tensor::from_vec(&[1 << 16], (0..1 << 16).map(|_| rng.int(-(1 << 24), 1 << 24) as i32).collect());
+    let rq = Requant { m: 29, d: 21, lo: 0, hi: 255 };
+    let (t, _) = bench(2, 0.5, || {
+        std::hint::black_box(rq.apply_tensor(&q));
+    });
+    println!("  requant 64k: {}  ({:.0} Mel/s)", fmt_time(t), (1 << 16) as f64 / t / 1e6);
+    if let Some(rt) = rt {
+        for name in ["kernel_qgemm_256", "kernel_requant_64k", "kernel_intbn_4096x64",
+                     "kernel_thresh_4096x32", "kernel_avgpool_8x32"] {
+            let exe = rt.load(name).expect("load");
+            let args: Vec<nemo::runtime::Arg> = exe
+                .spec
+                .args
+                .iter()
+                .map(|a| {
+                    if a.dtype == "int32" {
+                        nemo::runtime::Arg::I32(Tensor::full(&a.shape, 3))
+                    } else {
+                        nemo::runtime::Arg::F32(Tensor::full(&a.shape, 1.0))
+                    }
+                })
+                .collect();
+            let (t, _) = bench(2, 0.5, || {
+                std::hint::black_box(exe.run(&args).expect("run"));
+            });
+            println!("  PJRT {name}: {}", fmt_time(t));
+        }
+    }
+}

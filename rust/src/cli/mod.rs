@@ -1,0 +1,101 @@
+//! Minimal CLI argument parser (no clap in the offline vendor set).
+//!
+//! Grammar: `nemo <subcommand> [--key value|--key=value|--switch] ...`
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub flags: HashMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(sub) = it.next() {
+            if sub.starts_with("--") {
+                bail!("expected a subcommand before flags, got '{sub}'");
+            }
+            out.subcommand = sub.clone();
+        }
+        while let Some(tok) = it.next() {
+            let Some(key) = tok.strip_prefix("--") else {
+                bail!("unexpected positional argument '{tok}'");
+            };
+            if let Some((k, v)) = key.split_once('=') {
+                out.flags.insert(k.to_string(), v.to_string());
+            } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                out.flags.insert(key.to_string(), it.next().unwrap().clone());
+            } else {
+                out.flags.insert(key.to_string(), "true".to_string());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv)
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} {v}: not an integer")),
+        }
+    }
+
+    pub fn u32_or(&self, key: &str, default: u32) -> Result<u32> {
+        Ok(self.usize_or(key, default as usize)? as u32)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} {v}: not a number")),
+        }
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.flags.get(key).map(|s| s.as_str()), Some("true") | Some("1"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(&s.iter().map(|x| x.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn basic_parsing() {
+        let a = parse(&["train", "--steps", "100", "--lr=0.1", "--quiet"]);
+        assert_eq!(a.subcommand, "train");
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 100);
+        assert_eq!(a.f64_or("lr", 0.0).unwrap(), 0.1);
+        assert!(a.bool("quiet"));
+        assert!(!a.bool("verbose"));
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(Args::parse(&["--flag-first".to_string()]).is_err());
+        let a = parse(&["x", "--n", "abc"]);
+        assert!(a.usize_or("n", 0).is_err());
+    }
+}

@@ -1,0 +1,66 @@
+//! Serving metrics: latency distributions, batch-size mix, counters.
+
+use crate::util::stats::Samples;
+
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    /// seconds each request waited in the batcher queue
+    pub queue_wait: Samples,
+    /// seconds per executable invocation
+    pub exec_time: Samples,
+    /// request end-to-end seconds (enqueue -> reply)
+    pub e2e_latency: Samples,
+    /// real (unpadded) samples per dispatched batch
+    pub batch_sizes: Samples,
+    pub completed: u64,
+    pub failed: u64,
+    /// padding waste (samples executed but discarded)
+    pub padded: u64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Human-readable multi-line report.
+    pub fn report(&mut self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "completed={} failed={} padded={}\n",
+            self.completed, self.failed, self.padded
+        ));
+        out.push_str(&format!("queue_wait  (s): {}\n", self.queue_wait.summary()));
+        out.push_str(&format!("exec_time   (s): {}\n", self.exec_time.summary()));
+        out.push_str(&format!("e2e_latency (s): {}\n", self.e2e_latency.summary()));
+        out.push_str(&format!(
+            "batch size: mean={:.2} p50={:.0}\n",
+            self.batch_sizes.mean(),
+            self.batch_sizes.percentile(0.5)
+        ));
+        out
+    }
+
+    /// Throughput given a wall-clock window.
+    pub fn throughput(&self, wall_secs: f64) -> f64 {
+        self.completed as f64 / wall_secs.max(1e-9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_renders() {
+        let mut m = Metrics::new();
+        m.completed = 10;
+        m.e2e_latency.push(0.001);
+        m.exec_time.push(0.0005);
+        m.queue_wait.push(0.0001);
+        m.batch_sizes.push(4.0);
+        let r = m.report();
+        assert!(r.contains("completed=10"));
+        assert!(m.throughput(2.0) == 5.0);
+    }
+}

@@ -1,0 +1,350 @@
+//! Serving coordinator (S7): request router + dynamic batcher + worker
+//! pool over AOT-compiled IntegerDeployable executables.
+//!
+//! Deployment shape (vLLM-router-like, scaled to this paper): callers
+//! submit single-sample integer images; the batcher coalesces them up to
+//! `max_batch` or `batch_timeout`, picks the smallest compiled batch
+//! variant that fits (artifacts are lowered at batch sizes 1/2/4/8/16),
+//! pads, executes on a worker thread, and scatters the per-sample
+//! results. Python is never involved; the executables were compiled once
+//! from the JAX/Pallas graphs.
+
+pub mod metrics;
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::runtime::{Arg, Executable, Runtime};
+use crate::tensor::{Tensor, TensorI};
+
+pub use metrics::Metrics;
+
+/// A deployable model: shared deployment parameters + per-batch-size
+/// compiled variants.
+pub struct ModelVariant {
+    pub name: String,
+    /// (batch, executable), ascending by batch
+    pub variants: Vec<(usize, Arc<Executable>)>,
+    /// the non-input arguments (integer deployment params)
+    pub base_args: Vec<Arg>,
+    /// per-sample input shape (e.g. [1, 16, 16])
+    pub input_shape: Vec<usize>,
+}
+
+impl ModelVariant {
+    /// Load every `kind` artifact (e.g. "id_fwd") from the runtime.
+    pub fn load(
+        rt: &Runtime,
+        name: &str,
+        kind: &str,
+        base_args: Vec<Arg>,
+    ) -> Result<Self> {
+        let specs = rt.manifest.by_kind(kind);
+        if specs.is_empty() {
+            bail!("no artifacts of kind '{kind}' in manifest");
+        }
+        let mut variants = Vec::new();
+        let mut input_shape = Vec::new();
+        for s in specs {
+            let b = s.batch.context("artifact missing batch")?;
+            input_shape = s.args.last().unwrap().shape[1..].to_vec();
+            variants.push((b, rt.load(&s.name)?));
+        }
+        variants.sort_by_key(|(b, _)| *b);
+        Ok(ModelVariant { name: name.to_string(), variants, base_args, input_shape })
+    }
+
+    fn pick(&self, n: usize) -> &(usize, Arc<Executable>) {
+        self.variants
+            .iter()
+            .find(|(b, _)| *b >= n)
+            .unwrap_or_else(|| self.variants.last().unwrap())
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.variants.last().map(|(b, _)| *b).unwrap_or(1)
+    }
+}
+
+struct Request {
+    model: String,
+    qx: TensorI, // [1, ...]
+    reply: SyncSender<Result<TensorI>>,
+    enqueued: Instant,
+}
+
+/// Coordinator configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ServerConfig {
+    pub max_batch: usize,
+    pub batch_timeout: Duration,
+    pub n_workers: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            max_batch: 16,
+            batch_timeout: Duration::from_micros(500),
+            n_workers: 2,
+        }
+    }
+}
+
+/// Clonable client handle.
+#[derive(Clone)]
+pub struct ServerHandle {
+    tx: Sender<Request>,
+}
+
+impl ServerHandle {
+    /// Blocking single-sample inference; returns the [1, C_out] integer
+    /// logits image.
+    pub fn infer(&self, model: &str, qx: TensorI) -> Result<TensorI> {
+        let (rtx, rrx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Request {
+                model: model.to_string(),
+                qx,
+                reply: rtx,
+                enqueued: Instant::now(),
+            })
+            .map_err(|_| anyhow!("server stopped"))?;
+        rrx.recv().map_err(|_| anyhow!("server dropped request"))?
+    }
+}
+
+/// The running server; dropping it (after all handles) stops the threads.
+pub struct Server {
+    handle: ServerHandle,
+    stop: Arc<AtomicBool>,
+    pub metrics: Arc<Mutex<Metrics>>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+struct Job {
+    exec: Arc<Executable>,
+    args: Vec<Arg>,
+    waiters: Vec<(SyncSender<Result<TensorI>>, Instant)>,
+    n_real: usize,
+    batch: usize,
+}
+
+impl Server {
+    pub fn start(models: Vec<ModelVariant>, cfg: ServerConfig) -> Server {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (jtx, jrx) = mpsc::channel::<Job>();
+        let jrx = Arc::new(Mutex::new(jrx));
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let stop = Arc::new(AtomicBool::new(false));
+        let registry: Arc<HashMap<String, ModelVariant>> = Arc::new(
+            models.into_iter().map(|m| (m.name.clone(), m)).collect(),
+        );
+
+        let mut threads = Vec::new();
+        // Batcher thread
+        {
+            let registry = registry.clone();
+            let metrics = metrics.clone();
+            let stop = stop.clone();
+            threads.push(std::thread::spawn(move || {
+                batcher_loop(rx, jtx, registry, metrics, stop, cfg);
+            }));
+        }
+        // Worker pool
+        for wid in 0..cfg.n_workers {
+            let jrx = jrx.clone();
+            let metrics = metrics.clone();
+            threads.push(std::thread::spawn(move || {
+                worker_loop(wid, jrx, metrics);
+            }));
+        }
+        Server { handle: ServerHandle { tx }, stop, metrics, threads }
+    }
+
+    pub fn handle(&self) -> ServerHandle {
+        self.handle.clone()
+    }
+
+    pub fn stop(self) -> Metrics {
+        self.stop.store(true, Ordering::SeqCst);
+        let Server { handle, metrics, threads, .. } = self;
+        drop(handle); // close the request channel so the batcher exits
+        for t in threads {
+            let _ = t.join();
+        }
+        let m = metrics.lock().unwrap().clone();
+        m
+    }
+}
+
+fn batcher_loop(
+    rx: Receiver<Request>,
+    jtx: Sender<Job>,
+    registry: Arc<HashMap<String, ModelVariant>>,
+    metrics: Arc<Mutex<Metrics>>,
+    stop: Arc<AtomicBool>,
+    cfg: ServerConfig,
+) {
+    loop {
+        // Block for the first request (or exit when all senders dropped).
+        let first = match rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(r) => r,
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                if stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                continue;
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => return,
+        };
+        let deadline = Instant::now() + cfg.batch_timeout;
+        let mut bucket: HashMap<String, Vec<Request>> = HashMap::new();
+        let cap = cfg.max_batch;
+        bucket.entry(first.model.clone()).or_default().push(first);
+        // Coalesce until the timeout or the cap for some model.
+        loop {
+            let full = bucket.values().any(|v| v.len() >= cap);
+            let now = Instant::now();
+            if full || now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => bucket.entry(r.model.clone()).or_default().push(r),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        for (model, reqs) in bucket {
+            let Some(mv) = registry.get(&model) else {
+                for r in reqs {
+                    let _ = r
+                        .reply
+                        .send(Err(anyhow!("unknown model '{model}'")));
+                }
+                continue;
+            };
+            // Split into chunks of at most the largest compiled batch.
+            for chunk in reqs.chunks(mv.max_batch().min(cap)) {
+                dispatch(mv, chunk, &jtx, &metrics);
+            }
+        }
+    }
+}
+
+fn dispatch(
+    mv: &ModelVariant,
+    reqs: &[Request],
+    jtx: &Sender<Job>,
+    metrics: &Arc<Mutex<Metrics>>,
+) {
+    let n = reqs.len();
+    let (batch, exec) = mv.pick(n);
+    // Gather: [n, ...] + zero padding to the variant batch.
+    let mut sample_len = 1usize;
+    for d in &mv.input_shape {
+        sample_len *= d;
+    }
+    let mut data = Vec::with_capacity(batch * sample_len);
+    for r in reqs {
+        debug_assert_eq!(&r.qx.shape()[1..], &mv.input_shape[..]);
+        data.extend_from_slice(r.qx.data());
+    }
+    data.resize(batch * sample_len, 0);
+    let mut shape = vec![*batch];
+    shape.extend_from_slice(&mv.input_shape);
+    let qx = Tensor::from_vec(&shape, data);
+
+    let mut args = mv.base_args.clone();
+    args.push(qx.into());
+
+    {
+        let mut m = metrics.lock().unwrap();
+        m.batch_sizes.push(n as f64);
+        let now = Instant::now();
+        for r in reqs {
+            m.queue_wait
+                .push(now.duration_since(r.enqueued).as_secs_f64());
+        }
+    }
+    let job = Job {
+        exec: exec.clone(),
+        args,
+        waiters: reqs.iter().map(|r| (r.reply.clone(), r.enqueued)).collect(),
+        n_real: n,
+        batch: *batch,
+    };
+    let _ = jtx.send(job);
+}
+
+fn worker_loop(
+    _wid: usize,
+    jrx: Arc<Mutex<Receiver<Job>>>,
+    metrics: Arc<Mutex<Metrics>>,
+) {
+    loop {
+        let job = {
+            let guard = jrx.lock().unwrap();
+            match guard.recv() {
+                Ok(j) => j,
+                Err(_) => return,
+            }
+        };
+        let t0 = Instant::now();
+        let result = job.exec.run(&job.args);
+        let exec_s = t0.elapsed().as_secs_f64();
+        match result {
+            Ok(outs) => {
+                let logits = outs.into_iter().next().unwrap();
+                let t = match logits {
+                    Arg::I32(t) => t,
+                    Arg::F32(t) => t.map(|v| v as i32),
+                };
+                let done = Instant::now();
+                let mut m = metrics.lock().unwrap();
+                m.exec_time.push(exec_s);
+                m.completed += job.n_real as u64;
+                m.padded += (job.batch - job.n_real) as u64;
+                drop(m);
+                for (i, (reply, enq)) in job.waiters.iter().enumerate() {
+                    let row = t.slice_batch(i, i + 1);
+                    let _ = reply.send(Ok(row));
+                    metrics
+                        .lock()
+                        .unwrap()
+                        .e2e_latency
+                        .push(done.duration_since(*enq).as_secs_f64());
+                }
+            }
+            Err(e) => {
+                let msg = format!("execution failed: {e:#}");
+                let mut m = metrics.lock().unwrap();
+                m.failed += job.n_real as u64;
+                drop(m);
+                for (reply, _) in &job.waiters {
+                    let _ = reply.send(Err(anyhow!(msg.clone())));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pick_selects_smallest_fitting_variant() {
+        // Synthetic ModelVariant sans executables is hard to build (needs
+        // a runtime); pick() logic is exercised via serving integration
+        // tests. Here: config defaults sanity.
+        let cfg = ServerConfig::default();
+        assert!(cfg.max_batch >= 1);
+        assert!(cfg.n_workers >= 1);
+    }
+}

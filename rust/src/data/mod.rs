@@ -1,0 +1,186 @@
+//! Synthetic dataset: "synthdigits" (S9 in DESIGN.md).
+//!
+//! Substitution note (DESIGN.md sec. 5): the paper's target inputs are
+//! 8-bit camera-style images. No image dataset ships in this environment,
+//! so we generate a deterministic 10-class pattern-classification set
+//! whose inputs are naturally 8-bit (eps_in = 1/255, alpha = 0, sec. 3.7):
+//! each class is a fixed smoothed random glyph; samples apply a random
+//! translation, contrast jitter, and Gaussian pixel noise. The quantity
+//! the paper cares about — accuracy *deltas across representations* — is
+//! preserved by any separable-but-nontrivial classification task.
+
+use crate::tensor::{Tensor, TensorF};
+use crate::util::rng::Rng;
+
+pub const IMG: usize = 16;
+pub const N_CLASSES: usize = 10;
+
+/// Deterministic dataset generator.
+pub struct SynthDigits {
+    /// base glyph per class, IMG x IMG in [0, 1]
+    glyphs: Vec<Vec<f64>>,
+    rng: Rng,
+    /// pixel noise sigma
+    pub noise: f64,
+    /// max |translation| in pixels
+    pub max_shift: i64,
+}
+
+impl SynthDigits {
+    pub fn new(seed: u64) -> Self {
+        // Class glyphs are UNIVERSAL (fixed seed): every generator, train
+        // or eval, sees the same 10 classes; `seed` only drives the
+        // per-sample jitter/noise stream.
+        let mut grng = Rng::new(0xD1617);
+        let glyphs = (0..N_CLASSES)
+            .map(|c| Self::make_glyph(&mut grng, c))
+            .collect();
+        SynthDigits {
+            glyphs,
+            rng: Rng::new(seed),
+            noise: 0.08,
+            max_shift: 2,
+        }
+    }
+
+    /// Class glyph: sparse random seeds smoothed by a box blur — blobby,
+    /// class-distinctive patterns with full [0,1] dynamic range.
+    fn make_glyph(rng: &mut Rng, _class: usize) -> Vec<f64> {
+        let mut img = vec![0f64; IMG * IMG];
+        // 6 random bright seeds
+        for _ in 0..6 {
+            let y = rng.int(2, (IMG - 2) as i64) as usize;
+            let x = rng.int(2, (IMG - 2) as i64) as usize;
+            img[y * IMG + x] = 1.0;
+        }
+        // two box-blur passes (3x3)
+        for _ in 0..2 {
+            let mut out = vec![0f64; IMG * IMG];
+            for y in 0..IMG {
+                for x in 0..IMG {
+                    let mut acc = 0f64;
+                    let mut n = 0f64;
+                    for dy in -1i64..=1 {
+                        for dx in -1i64..=1 {
+                            let yy = y as i64 + dy;
+                            let xx = x as i64 + dx;
+                            if (0..IMG as i64).contains(&yy) && (0..IMG as i64).contains(&xx) {
+                                acc += img[yy as usize * IMG + xx as usize];
+                                n += 1.0;
+                            }
+                        }
+                    }
+                    out[y * IMG + x] = acc / n * 3.0;
+                }
+            }
+            img = out;
+        }
+        let m = img.iter().cloned().fold(0.0f64, f64::max).max(1e-9);
+        img.iter().map(|v| (v / m).min(1.0)).collect()
+    }
+
+    /// One sample of class `label`: translated, contrast-jittered, noisy,
+    /// clamped to [0, 1). Values land on the 8-bit grid when quantized.
+    pub fn sample(&mut self, label: usize) -> Vec<f32> {
+        let dy = self.rng.int(-self.max_shift, self.max_shift + 1);
+        let dx = self.rng.int(-self.max_shift, self.max_shift + 1);
+        let contrast = self.rng.uniform(0.7, 1.0);
+        let glyph = &self.glyphs[label];
+        let mut out = vec![0f32; IMG * IMG];
+        for y in 0..IMG as i64 {
+            for x in 0..IMG as i64 {
+                let sy = y - dy;
+                let sx = x - dx;
+                let base = if (0..IMG as i64).contains(&sy) && (0..IMG as i64).contains(&sx) {
+                    glyph[(sy * IMG as i64 + sx) as usize]
+                } else {
+                    0.0
+                };
+                let v = base * contrast + self.rng.normal(0.0, self.noise);
+                out[(y * IMG as i64 + x) as usize] = v.clamp(0.0, 0.999) as f32;
+            }
+        }
+        out
+    }
+
+    /// A batch: ([B,1,16,16] images in [0,1), labels).
+    pub fn batch(&mut self, b: usize) -> (TensorF, Vec<usize>) {
+        let mut data = Vec::with_capacity(b * IMG * IMG);
+        let mut labels = Vec::with_capacity(b);
+        for _ in 0..b {
+            let label = self.rng.int(0, N_CLASSES as i64) as usize;
+            data.extend_from_slice(&self.sample(label));
+            labels.push(label);
+        }
+        (Tensor::from_vec(&[b, 1, IMG, IMG], data), labels)
+    }
+
+    /// A fixed evaluation set (fresh generator, disjoint seed).
+    pub fn eval_set(seed: u64, n: usize) -> (TensorF, Vec<usize>) {
+        let mut gen = SynthDigits::new(seed ^ 0xE7A1_5EED);
+        gen.batch(n)
+    }
+}
+
+/// Classification accuracy from logits argmax vs labels.
+pub fn accuracy(pred: &[usize], labels: &[usize]) -> f64 {
+    assert_eq!(pred.len(), labels.len());
+    let correct = pred.iter().zip(labels).filter(|(p, l)| p == l).count();
+    correct as f64 / labels.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_batches() {
+        let mut a = SynthDigits::new(1);
+        let mut b = SynthDigits::new(1);
+        let (xa, la) = a.batch(8);
+        let (xb, lb) = b.batch(8);
+        assert_eq!(xa.data(), xb.data());
+        assert_eq!(la, lb);
+    }
+
+    #[test]
+    fn values_in_unit_range() {
+        let mut g = SynthDigits::new(2);
+        let (x, _) = g.batch(16);
+        assert!(x.data().iter().all(|v| (0.0..1.0).contains(v)));
+    }
+
+    #[test]
+    fn classes_are_distinguishable_by_nearest_glyph() {
+        // A trivial nearest-template classifier should beat chance by a
+        // lot — otherwise the dataset carries no signal.
+        let mut g = SynthDigits::new(3);
+        let glyphs = g.glyphs.clone();
+        let (x, labels) = g.batch(200);
+        let mut correct = 0;
+        for (i, &label) in labels.iter().enumerate() {
+            let img = &x.data()[i * IMG * IMG..(i + 1) * IMG * IMG];
+            let mut best = (f64::INFINITY, 0usize);
+            for (c, glyph) in glyphs.iter().enumerate() {
+                let d: f64 = img
+                    .iter()
+                    .zip(glyph)
+                    .map(|(a, b)| (*a as f64 - b) * (*a as f64 - b))
+                    .sum();
+                if d < best.0 {
+                    best = (d, c);
+                }
+            }
+            if best.1 == label {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / 200.0;
+        assert!(acc > 0.4, "nearest-glyph accuracy only {acc}"); // >4x chance
+    }
+
+    #[test]
+    fn accuracy_helper() {
+        assert_eq!(accuracy(&[1, 2, 3], &[1, 0, 3]), 2.0 / 3.0);
+    }
+}

@@ -1,0 +1,210 @@
+//! Float-domain executor for FP / FQ / QD graphs.
+
+use crate::graph::{Graph, Op};
+use crate::quant::QuantSpec;
+use crate::tensor::ops;
+use crate::tensor::TensorF;
+#[cfg(test)]
+use crate::tensor::Tensor;
+
+/// Executes a float [`Graph`] on NCHW batches. Also exposes activation
+/// capture for calibration (transform::calibrate).
+#[derive(Default)]
+pub struct FloatEngine;
+
+impl FloatEngine {
+    pub fn new() -> Self {
+        FloatEngine
+    }
+
+    /// Run the graph; `x` is [B, C, H, W] (or [B, F] for MLP graphs).
+    pub fn run(&self, g: &Graph, x: &TensorF) -> TensorF {
+        self.run_inner(g, x, None)
+    }
+
+    /// Run and record the output tensor of every node (used by
+    /// calibration and by debugging tools).
+    pub fn run_traced(&self, g: &Graph, x: &TensorF) -> Vec<TensorF> {
+        let mut trace: Vec<TensorF> = Vec::with_capacity(g.nodes.len());
+        self.run_inner(g, x, Some(&mut trace));
+        trace
+    }
+
+    fn run_inner(
+        &self,
+        g: &Graph,
+        x: &TensorF,
+        mut trace: Option<&mut Vec<TensorF>>,
+    ) -> TensorF {
+        let mut outs: Vec<Option<TensorF>> = vec![None; g.nodes.len()];
+        for n in &g.nodes {
+            let out = match &n.op {
+                Op::Input { .. } => x.clone(),
+                Op::Conv2d { w, bias, stride, pad } => {
+                    let mut y = ops::conv2d_f32(
+                        outs[n.inputs[0]].as_ref().unwrap(),
+                        w,
+                        *stride,
+                        *pad,
+                    );
+                    if let Some(b) = bias {
+                        add_channel_bias(&mut y, b);
+                    }
+                    y
+                }
+                Op::Linear { w, bias } => {
+                    let mut y =
+                        ops::matmul_f32(outs[n.inputs[0]].as_ref().unwrap(), w);
+                    if let Some(b) = bias {
+                        let c = y.shape()[1];
+                        for (i, v) in y.data_mut().iter_mut().enumerate() {
+                            *v += b[i % c] as f32;
+                        }
+                    }
+                    y
+                }
+                Op::BatchNorm { bn } => {
+                    let mut y = outs[n.inputs[0]].as_ref().unwrap().clone();
+                    let (kappa, lambda) = bn.affine();
+                    apply_channel_affine(&mut y, &kappa, &lambda);
+                    y
+                }
+                Op::QuantBn { kappa_hat, lambda_hat } => {
+                    let mut y = outs[n.inputs[0]].as_ref().unwrap().clone();
+                    apply_channel_affine(&mut y, kappa_hat, lambda_hat);
+                    y
+                }
+                Op::ReLU => outs[n.inputs[0]]
+                    .as_ref()
+                    .unwrap()
+                    .map(|v| v.max(0.0)),
+                Op::PactAct { beta, bits } => {
+                    let spec = QuantSpec::activation(*beta, *bits);
+                    outs[n.inputs[0]]
+                        .as_ref()
+                        .unwrap()
+                        .map(|v| spec.fake_quantize(v as f64) as f32)
+                }
+                Op::MaxPool { k } => {
+                    ops::maxpool(outs[n.inputs[0]].as_ref().unwrap(), *k)
+                }
+                Op::AvgPool { k } => {
+                    ops::avgpool_f32(outs[n.inputs[0]].as_ref().unwrap(), *k)
+                }
+                Op::GlobalAvgPool => {
+                    ops::global_mean_f32(outs[n.inputs[0]].as_ref().unwrap())
+                }
+                Op::Flatten => {
+                    let t = outs[n.inputs[0]].as_ref().unwrap();
+                    let b = t.shape()[0];
+                    let f: usize = t.shape()[1..].iter().product();
+                    t.reshape(&[b, f])
+                }
+                Op::Add => {
+                    let first = outs[n.inputs[0]].as_ref().unwrap();
+                    let mut acc = first.clone();
+                    for &i in &n.inputs[1..] {
+                        let t = outs[i].as_ref().unwrap();
+                        assert_eq!(t.shape(), acc.shape(), "Add shape mismatch");
+                        for (a, b) in acc.data_mut().iter_mut().zip(t.data()) {
+                            *a += *b;
+                        }
+                    }
+                    acc
+                }
+            };
+            if let Some(tr) = trace.as_deref_mut() {
+                tr.push(out.clone());
+            }
+            outs[n.id] = Some(out);
+        }
+        outs[g.output].take().unwrap()
+    }
+}
+
+/// y[:, c, ...] = kappa[c] * y[:, c, ...] + lambda[c] for NCHW or [B, C].
+fn apply_channel_affine(y: &mut TensorF, kappa: &[f64], lambda: &[f64]) {
+    match y.ndim() {
+        4 => {
+            let (b, c, h, w) =
+                (y.shape()[0], y.shape()[1], y.shape()[2], y.shape()[3]);
+            let hw = h * w;
+            let data = y.data_mut();
+            for bi in 0..b {
+                for ci in 0..c {
+                    let base = (bi * c + ci) * hw;
+                    let k = kappa[ci] as f32;
+                    let l = lambda[ci] as f32;
+                    for v in &mut data[base..base + hw] {
+                        *v = k * *v + l;
+                    }
+                }
+            }
+        }
+        2 => {
+            let c = y.shape()[1];
+            for (i, v) in y.data_mut().iter_mut().enumerate() {
+                *v = kappa[i % c] as f32 * *v + lambda[i % c] as f32;
+            }
+        }
+        d => panic!("channel affine on rank-{d} tensor"),
+    }
+}
+
+fn add_channel_bias(y: &mut TensorF, bias: &[f64]) {
+    let zeros = vec![1.0f64; bias.len()];
+    // reuse affine with kappa = 1
+    apply_channel_affine(y, &zeros, bias);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+    use crate::quant::bn::BnParams;
+
+    #[test]
+    fn identity_conv_bn_relu() {
+        let mut g = Graph::new(1.0 / 255.0);
+        let x = g.push("in", Op::Input { shape: vec![1, 3, 3] }, &[]);
+        let mut wd = vec![0f32; 9];
+        wd[4] = 1.0; // identity 3x3
+        let w = Tensor::from_vec(&[1, 1, 3, 3], wd);
+        let c = g.push("conv", Op::Conv2d { w, bias: None, stride: 1, pad: 1 }, &[x]);
+        let b = g.push("bn", Op::BatchNorm { bn: BnParams::identity(1) }, &[c]);
+        g.push("act", Op::ReLU, &[b]);
+
+        let input = Tensor::from_vec(&[1, 1, 3, 3],
+            vec![-1.0f32, 2.0, -3.0, 4.0, -5.0, 6.0, -7.0, 8.0, 0.0]);
+        let out = FloatEngine::new().run(&g, &input);
+        assert_eq!(
+            out.data(),
+            &[0.0, 2.0, 0.0, 4.0, 0.0, 6.0, 0.0, 8.0, 0.0]
+        );
+    }
+
+    #[test]
+    fn pact_act_quantizes_to_grid() {
+        let mut g = Graph::new(1.0 / 255.0);
+        let x = g.push("in", Op::Input { shape: vec![4] }, &[]);
+        g.push("act", Op::PactAct { beta: 1.5, bits: 4 }, &[x]);
+        let input = Tensor::from_vec(&[1, 4], vec![-0.3f32, 0.49, 1.0, 7.0]);
+        let out = FloatEngine::new().run(&g, &input);
+        let eps = 1.5 / 15.0;
+        assert_eq!(out.data()[0], 0.0);
+        assert!((out.data()[1] - (0.49f32 / eps).floor() * eps).abs() < 1e-6);
+        assert_eq!(out.data()[3], 15.0 * eps); // clipped to beta
+    }
+
+    #[test]
+    fn add_and_trace() {
+        let mut g = Graph::new(1.0);
+        let x = g.push("in", Op::Input { shape: vec![2] }, &[]);
+        let r = g.push("relu", Op::ReLU, &[x]);
+        g.push("add", Op::Add, &[r, r]);
+        let out = FloatEngine::new().run(&g, &Tensor::from_vec(&[1, 2], vec![1.0f32, -2.0]));
+        assert_eq!(out.data(), &[2.0, 0.0]);
+        let trace = FloatEngine::new().run_traced(&g, &Tensor::from_vec(&[1, 2], vec![1.0f32, -2.0]));
+        assert_eq!(trace.len(), 3);
+    }
+}

@@ -1,0 +1,255 @@
+//! Integer-only executor for IntegerDeployable graphs — the MCU-datapath
+//! simulator (DESIGN.md §Hardware-Adaptation).
+//!
+//! Invariant: no floating-point arithmetic touches the value path. All
+//! tensors are i32 integer images; products and accumulations widen to
+//! i64 exactly like the Pallas kernels and narrow back behind checked
+//! casts (the transform pipeline's range analysis proves they fit).
+
+use crate::graph::int::{IntGraph, IntOp};
+use crate::tensor::ops;
+use crate::tensor::{Tensor, TensorI};
+
+#[derive(Default)]
+pub struct IntegerEngine;
+
+impl IntegerEngine {
+    pub fn new() -> Self {
+        IntegerEngine
+    }
+
+    /// Run the integer graph on an integer-image batch ([B,C,H,W] or [B,F]).
+    pub fn run(&self, g: &IntGraph, qx: &TensorI) -> TensorI {
+        self.run_inner(g, qx, None)
+    }
+
+    /// Run and record every node's output (deployment diagnostics).
+    pub fn run_traced(&self, g: &IntGraph, qx: &TensorI) -> Vec<TensorI> {
+        let mut trace = Vec::with_capacity(g.nodes.len());
+        self.run_inner(g, qx, Some(&mut trace));
+        trace
+    }
+
+    fn run_inner(
+        &self,
+        g: &IntGraph,
+        qx: &TensorI,
+        mut trace: Option<&mut Vec<TensorI>>,
+    ) -> TensorI {
+        let mut outs: Vec<Option<TensorI>> = vec![None; g.nodes.len()];
+        for n in &g.nodes {
+            let out = match &n.op {
+                IntOp::Input { .. } => qx.clone(),
+                IntOp::ConvInt { wq, bias_q, kh, kw, stride, pad, .. } => {
+                    // Fast i32-accumulating path: IntGraphs only come from
+                    // transform::deploy, whose range analysis proved every
+                    // accumulator fits i32 (overflow would have aborted
+                    // the transform). Debug builds double-check via the
+                    // engine's checked per-op arithmetic elsewhere.
+                    let mut y = ops::conv2d_i32_wmat_fast(
+                        outs[n.inputs[0]].as_ref().unwrap(),
+                        wq,
+                        *kh,
+                        *kw,
+                        *stride,
+                        *pad,
+                    );
+                    if let Some(b) = bias_q {
+                        add_channel_bias_i32(&mut y, b);
+                    }
+                    y
+                }
+                IntOp::LinearInt { wq, bias_q } => {
+                    let mut y =
+                        ops::matmul_i32_fast(outs[n.inputs[0]].as_ref().unwrap(), wq);
+                    if let Some(b) = bias_q {
+                        let c = y.shape()[1];
+                        for (i, v) in y.data_mut().iter_mut().enumerate() {
+                            *v = (*v as i64 + b[i % c]) as i32;
+                        }
+                    }
+                    y
+                }
+                IntOp::IntBn { bn } => {
+                    let t = outs[n.inputs[0]].as_ref().unwrap();
+                    apply_per_channel(t, |c, q| {
+                        let v = bn.apply(c, q);
+                        debug_assert!(
+                            v >= i32::MIN as i64 && v <= i32::MAX as i64,
+                            "IntBn overflow: {v}"
+                        );
+                        v as i32
+                    })
+                }
+                IntOp::RequantAct { rq } => outs[n.inputs[0]]
+                    .as_ref()
+                    .unwrap()
+                    .map(|q| rq.apply(q as i64) as i32),
+                IntOp::ThreshAct { th } => {
+                    let t = outs[n.inputs[0]].as_ref().unwrap();
+                    apply_per_channel(t, |c, q| th.apply(c, q) as i32)
+                }
+                IntOp::AvgPoolInt { k, d } => {
+                    ops::avgpool_i32(outs[n.inputs[0]].as_ref().unwrap(), *k, *d)
+                }
+                IntOp::MaxPoolInt { k } => {
+                    ops::maxpool(outs[n.inputs[0]].as_ref().unwrap(), *k)
+                }
+                IntOp::Flatten => {
+                    let t = outs[n.inputs[0]].as_ref().unwrap();
+                    let b = t.shape()[0];
+                    let f: usize = t.shape()[1..].iter().product();
+                    t.reshape(&[b, f])
+                }
+                IntOp::AddRequant { rqs } => {
+                    // Branch 0 is the reference space (Eq. 24).
+                    let mut acc = outs[n.inputs[0]].as_ref().unwrap().clone();
+                    assert_eq!(rqs.len(), n.inputs.len() - 1);
+                    for (bi, &i) in n.inputs[1..].iter().enumerate() {
+                        let t = outs[i].as_ref().unwrap();
+                        assert_eq!(t.shape(), acc.shape(), "Add shape mismatch");
+                        let rq = &rqs[bi];
+                        for (a, b) in acc.data_mut().iter_mut().zip(t.data()) {
+                            let sum = *a as i64 + rq.apply(*b as i64);
+                            debug_assert!(
+                                sum >= i32::MIN as i64 && sum <= i32::MAX as i64
+                            );
+                            *a = sum as i32;
+                        }
+                    }
+                    acc
+                }
+            };
+            if let Some(tr) = trace.as_deref_mut() {
+                tr.push(out.clone());
+            }
+            outs[n.id] = Some(out);
+        }
+        outs[g.output].take().unwrap()
+    }
+}
+
+/// Apply f(channel, value) over NCHW or [B, C] integer tensors.
+fn apply_per_channel(t: &TensorI, f: impl Fn(usize, i64) -> i32) -> TensorI {
+    match t.ndim() {
+        4 => {
+            let (b, c, h, w) =
+                (t.shape()[0], t.shape()[1], t.shape()[2], t.shape()[3]);
+            let hw = h * w;
+            let mut out = TensorI::zeros(t.shape());
+            let src = t.data();
+            let dst = out.data_mut();
+            for bi in 0..b {
+                for ci in 0..c {
+                    let base = (bi * c + ci) * hw;
+                    for k in 0..hw {
+                        dst[base + k] = f(ci, src[base + k] as i64);
+                    }
+                }
+            }
+            out
+        }
+        2 => {
+            let c = t.shape()[1];
+            let data = t
+                .data()
+                .iter()
+                .enumerate()
+                .map(|(i, s)| f(i % c, *s as i64))
+                .collect();
+            Tensor::from_vec(t.shape(), data)
+        }
+        d => panic!("per-channel op on rank-{d} tensor"),
+    }
+}
+
+fn add_channel_bias_i32(y: &mut TensorI, bias: &[i64]) {
+    let (b, c, h, w) = (y.shape()[0], y.shape()[1], y.shape()[2], y.shape()[3]);
+    let hw = h * w;
+    let data = y.data_mut();
+    for bi in 0..b {
+        for ci in 0..c {
+            let base = (bi * c + ci) * hw;
+            for v in &mut data[base..base + hw] {
+                *v = (*v as i64 + bias[ci]) as i32;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::int::IntGraph;
+    use crate::quant::bn::{BnQuant, Thresholds};
+    use crate::quant::requant::Requant;
+    use crate::quant::QuantSpec;
+
+    #[test]
+    fn conv_bn_requant_pipeline() {
+        let mut g = IntGraph::default();
+        let spec = QuantSpec { eps: 1.0 / 255.0, lo: 0, hi: 255 };
+        let x = g.push("in", IntOp::Input { shape: vec![1, 2, 2], spec }, &[]);
+        // 1x1 conv, 1 -> 1 channel... use 2 channels to exercise layout
+        let wq = Tensor::from_vec(&[1, 2], vec![2, -1]);
+        let c = g.push(
+            "conv",
+            IntOp::ConvInt { wq, bias_q: None, cin: 1, kh: 1, kw: 1, stride: 1, pad: 0 },
+            &[x],
+        );
+        let bn = BnQuant {
+            kappa_q: vec![3, 1],
+            lambda_q: vec![10, -10],
+            eps_kappa: 0.01,
+            eps_phi_out: 0.0001,
+        };
+        let b = g.push("bn", IntOp::IntBn { bn }, &[c]);
+        let rq = Requant { m: 1, d: 1, lo: 0, hi: 255 };
+        g.push("act", IntOp::RequantAct { rq }, &[b]);
+
+        let qx = Tensor::from_vec(&[1, 1, 2, 2], vec![10, 20, 30, 40]);
+        let out = IntegerEngine::new().run(&g, &qx);
+        assert_eq!(out.shape(), &[1, 2, 2, 2]);
+        // channel 0: (10*2*3 + 10) >> 1 = 35 ; channel 1: (10*-1 -10)>>1 -> clip 0
+        assert_eq!(out.at4(0, 0, 0, 0), 35);
+        assert_eq!(out.at4(0, 1, 0, 0), 0);
+    }
+
+    #[test]
+    fn thresh_act_in_graph() {
+        let mut g = IntGraph::default();
+        let spec = QuantSpec { eps: 1.0, lo: 0, hi: 255 };
+        let x = g.push("in", IntOp::Input { shape: vec![1, 1, 2], spec }, &[]);
+        let th = Thresholds { th: vec![vec![5, 10, 20]], n_levels: 3 };
+        g.push("act", IntOp::ThreshAct { th }, &[x]);
+        let qx = Tensor::from_vec(&[1, 1, 1, 2], vec![7, 25]);
+        let out = IntegerEngine::new().run(&g, &qx);
+        assert_eq!(out.data(), &[1, 3]);
+    }
+
+    #[test]
+    fn add_requant_combines_branches() {
+        let mut g = IntGraph::default();
+        let spec = QuantSpec { eps: 0.5, lo: 0, hi: 255 };
+        let x = g.push("in", IntOp::Input { shape: vec![2], spec }, &[]);
+        // branch 1 lives at eps=0.25 -> requant by ~1/2 into eps=0.5 space
+        let rq = Requant { m: 128, d: 8, lo: i64::MIN, hi: i64::MAX };
+        g.push("add", IntOp::AddRequant { rqs: vec![rq] }, &[x, x]);
+        let qx = Tensor::from_vec(&[1, 2], vec![100, 7]);
+        let out = IntegerEngine::new().run(&g, &qx);
+        assert_eq!(out.data(), &[150, 10]); // 100 + 50, 7 + 3
+    }
+
+    #[test]
+    fn flatten_and_linear() {
+        let mut g = IntGraph::default();
+        let spec = QuantSpec { eps: 1.0, lo: 0, hi: 255 };
+        let x = g.push("in", IntOp::Input { shape: vec![2, 1, 1], spec }, &[]);
+        let f = g.push("fl", IntOp::Flatten, &[x]);
+        let wq = Tensor::from_vec(&[2, 2], vec![1, 2, 3, 4]);
+        g.push("fc", IntOp::LinearInt { wq, bias_q: Some(vec![5, -5]) }, &[f]);
+        let qx = Tensor::from_vec(&[1, 2, 1, 1], vec![10, 20]);
+        let out = IntegerEngine::new().run(&g, &qx);
+        assert_eq!(out.data(), &[75, 95]); // [10*1+20*3+5, 10*2+20*4-5]
+    }
+}

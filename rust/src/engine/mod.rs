@@ -1,0 +1,13 @@
+//! Graph executors (S5 in DESIGN.md).
+//!
+//! * [`FloatEngine`] runs FP / FQ / QD graphs on f32 tensors.
+//! * [`IntegerEngine`] runs IntegerDeployable graphs using i32 integer
+//!   images with i64 widening — no floating point on the value path. It
+//!   is the simulator standing in for the paper's MCU integer datapath
+//!   (DESIGN.md §Hardware-Adaptation).
+
+pub mod float;
+pub mod integer;
+
+pub use float::FloatEngine;
+pub use integer::IntegerEngine;

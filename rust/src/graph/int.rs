@@ -1,0 +1,97 @@
+//! IntegerDeployable graph: integer-image operators only (paper sec. 3).
+//!
+//! Produced by `transform::integerize`; executed by
+//! `engine::IntegerEngine` (the MCU-datapath simulator) and — through the
+//! equivalent HLO artifact — by the PJRT runtime.
+
+use crate::quant::bn::{BnQuant, Thresholds};
+use crate::quant::requant::Requant;
+use crate::quant::QuantSpec;
+use crate::tensor::TensorI;
+
+pub type NodeId = usize;
+
+/// Integer-domain operator.
+#[derive(Clone, Debug)]
+pub enum IntOp {
+    /// Integer input image, NCHW shape (without batch).
+    Input { shape: Vec<usize>, spec: QuantSpec },
+    /// Convolution with weights in matrix layout [C_in*KH*KW, C_out]
+    /// (Eq. 16). Bias (if any) is already in the eps_phi space.
+    ConvInt {
+        wq: TensorI,
+        bias_q: Option<Vec<i64>>,
+        cin: usize,
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        pad: usize,
+    },
+    /// Fully-connected: weights [in, out] (Eq. 16).
+    LinearInt { wq: TensorI, bias_q: Option<Vec<i64>> },
+    /// Integer batch-norm (Eq. 22).
+    IntBn { bn: BnQuant },
+    /// Requantizing activation (Eq. 11): clip((m*q) >> d, 0, 2^Q-1).
+    RequantAct { rq: Requant },
+    /// Threshold activation (Eq. 19-20) — the exact BN+act merge.
+    ThreshAct { th: Thresholds },
+    /// Integer average pooling (Eq. 25).
+    AvgPoolInt { k: usize, d: u32 },
+    /// Max pooling (untouched by quantization, sec. 3.6).
+    MaxPoolInt { k: usize },
+    Flatten,
+    /// Add with per-branch requantization (Eq. 24): branch 0 is the
+    /// reference space; rqs[i] requantizes branch i+1 into it.
+    AddRequant { rqs: Vec<Requant> },
+}
+
+impl IntOp {
+    pub fn name(&self) -> &'static str {
+        match self {
+            IntOp::Input { .. } => "Input",
+            IntOp::ConvInt { .. } => "ConvInt",
+            IntOp::LinearInt { .. } => "LinearInt",
+            IntOp::IntBn { .. } => "IntBn",
+            IntOp::RequantAct { .. } => "RequantAct",
+            IntOp::ThreshAct { .. } => "ThreshAct",
+            IntOp::AvgPoolInt { .. } => "AvgPoolInt",
+            IntOp::MaxPoolInt { .. } => "MaxPoolInt",
+            IntOp::Flatten => "Flatten",
+            IntOp::AddRequant { .. } => "AddRequant",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct IntNode {
+    pub id: NodeId,
+    pub op: IntOp,
+    pub inputs: Vec<NodeId>,
+    pub name: String,
+}
+
+/// IntegerDeployable graph plus the eps bookkeeping needed to interpret
+/// its (integer) output in the real domain.
+#[derive(Clone, Debug, Default)]
+pub struct IntGraph {
+    pub nodes: Vec<IntNode>,
+    pub output: NodeId,
+    /// Quantum of the output integer image: logits_real ~ eps_out * Q.
+    pub eps_out: f64,
+}
+
+impl IntGraph {
+    pub fn push(&mut self, name: &str, op: IntOp, inputs: &[NodeId]) -> NodeId {
+        let id = self.nodes.len();
+        for &i in inputs {
+            assert!(i < id, "forward reference");
+        }
+        self.nodes.push(IntNode { id, op, inputs: inputs.to_vec(), name: name.into() });
+        self.output = id;
+        id
+    }
+
+    pub fn node(&self, id: NodeId) -> &IntNode {
+        &self.nodes[id]
+    }
+}

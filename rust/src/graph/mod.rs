@@ -1,0 +1,279 @@
+//! DNN graph IR (S2 in DESIGN.md).
+//!
+//! Two graph flavours carry the four representations:
+//!
+//! * [`Graph`] (float ops) — FullPrecision, FakeQuantized and
+//!   QuantizedDeployable. The representation is encoded by *which* ops
+//!   appear: `BatchNorm`+`ReLU` (FP), `PactAct` + hardened weights (FQ),
+//!   `QuantBn`+`PactAct` (QD).
+//! * [`IntGraph`](crate::transform::IntGraph) (integer ops) —
+//!   IntegerDeployable; built by the transform pipeline.
+//!
+//! The paper's layer rule (sec. 1: a layer is a linear sequence ending at
+//! the first Activation; branches may only start at Activation outputs)
+//! is enforced by [`Graph::validate`].
+
+use crate::quant::bn::BnParams;
+use crate::quant::QuantSpec;
+use crate::tensor::TensorF;
+
+pub type NodeId = usize;
+
+/// Float-domain operator (FP / FQ / QD representations).
+#[derive(Clone, Debug)]
+pub enum Op {
+    /// Network input, NCHW shape (without batch) or [features].
+    Input { shape: Vec<usize> },
+    /// Convolution, weights OIHW. Bias is per-output-channel.
+    Conv2d {
+        w: TensorF,
+        bias: Option<Vec<f64>>,
+        stride: usize,
+        pad: usize,
+    },
+    /// Fully-connected, weights [in, out].
+    Linear { w: TensorF, bias: Option<Vec<f64>> },
+    /// Batch normalization (inference form, sec. 1.2).
+    BatchNorm { bn: BnParams },
+    /// Quantized BN for the QD representation: phi*kappa_hat + lambda_hat
+    /// where both parameters are on their quantized grids (sec. 3.4).
+    QuantBn { kappa_hat: Vec<f64>, lambda_hat: Vec<f64> },
+    /// Plain ReLU (FP).
+    ReLU,
+    /// PACT quantization/activation (FQ and QD; Eq. 10):
+    /// y = eps_y * clip(floor(t/eps_y), 0, (2^bits)-1), eps_y = beta/(2^bits-1).
+    PactAct { beta: f64, bits: u32 },
+    MaxPool { k: usize },
+    AvgPool { k: usize },
+    GlobalAvgPool,
+    Flatten,
+    /// Element-wise addition of all inputs (sec. 3.5).
+    Add,
+}
+
+impl Op {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Op::Input { .. } => "Input",
+            Op::Conv2d { .. } => "Conv2d",
+            Op::Linear { .. } => "Linear",
+            Op::BatchNorm { .. } => "BatchNorm",
+            Op::QuantBn { .. } => "QuantBn",
+            Op::ReLU => "ReLU",
+            Op::PactAct { .. } => "PactAct",
+            Op::MaxPool { .. } => "MaxPool",
+            Op::AvgPool { .. } => "AvgPool",
+            Op::GlobalAvgPool => "GlobalAvgPool",
+            Op::Flatten => "Flatten",
+            Op::Add => "Add",
+        }
+    }
+
+    /// Linear class per sec. 1 (Linear operators).
+    pub fn is_linear(&self) -> bool {
+        matches!(self, Op::Conv2d { .. } | Op::Linear { .. })
+    }
+
+    /// Activation class per sec. 1.
+    pub fn is_activation(&self) -> bool {
+        matches!(self, Op::ReLU | Op::PactAct { .. })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub id: NodeId,
+    pub op: Op,
+    pub inputs: Vec<NodeId>,
+    /// Optional label for diagnostics / transform bookkeeping.
+    pub name: String,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Graph {
+    pub nodes: Vec<Node>,
+    /// Node whose output is the network output.
+    pub output: NodeId,
+    /// Quantum of the network input (sec. 3.7); informs set_deployment.
+    pub eps_in: f64,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum GraphError {
+    #[error("graph has a cycle or forward reference at node {0}")]
+    NotTopological(NodeId),
+    #[error("node {0} ({1}) has {2} inputs, expected {3}")]
+    Arity(NodeId, &'static str, usize, usize),
+    #[error("layer rule violated: branch from non-activation node {0} ({1}) (sec. 1)")]
+    BranchRule(NodeId, &'static str),
+    #[error("graph has no Input node")]
+    NoInput,
+}
+
+impl Graph {
+    pub fn new(eps_in: f64) -> Self {
+        Graph { nodes: Vec::new(), output: 0, eps_in }
+    }
+
+    /// Append a node; returns its id. Inputs must already exist
+    /// (construction is therefore always topological).
+    pub fn push(&mut self, name: &str, op: Op, inputs: &[NodeId]) -> NodeId {
+        let id = self.nodes.len();
+        for &i in inputs {
+            assert!(i < id, "forward reference {i} >= {id}");
+        }
+        self.nodes.push(Node { id, op, inputs: inputs.to_vec(), name: name.to_string() });
+        self.output = id;
+        id
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id]
+    }
+
+    /// Number of consumers of each node.
+    pub fn fanout(&self) -> Vec<usize> {
+        let mut f = vec![0usize; self.nodes.len()];
+        for n in &self.nodes {
+            for &i in &n.inputs {
+                f[i] += 1;
+            }
+        }
+        f
+    }
+
+    /// Validate topology, arities, and the paper's layer/branch rule.
+    pub fn validate(&self) -> Result<(), GraphError> {
+        if !self.nodes.iter().any(|n| matches!(n.op, Op::Input { .. })) {
+            return Err(GraphError::NoInput);
+        }
+        for n in &self.nodes {
+            for &i in &n.inputs {
+                if i >= n.id {
+                    return Err(GraphError::NotTopological(n.id));
+                }
+            }
+            let want = match n.op {
+                Op::Input { .. } => 0,
+                Op::Add => n.inputs.len().max(2), // >= 2
+                _ => 1,
+            };
+            if matches!(n.op, Op::Add) {
+                if n.inputs.len() < 2 {
+                    return Err(GraphError::Arity(n.id, n.op.name(), n.inputs.len(), 2));
+                }
+            } else if n.inputs.len() != want {
+                return Err(GraphError::Arity(n.id, n.op.name(), n.inputs.len(), want));
+            }
+        }
+        // Branch rule (sec. 1): any node with fanout > 1 must be an
+        // Activation (or the Input itself).
+        let fanout = self.fanout();
+        for n in &self.nodes {
+            if fanout[n.id] > 1
+                && !n.op.is_activation()
+                && !matches!(n.op, Op::Input { .. })
+            {
+                return Err(GraphError::BranchRule(n.id, n.op.name()));
+            }
+        }
+        Ok(())
+    }
+
+    /// Extract the paper's layers: maximal linear chains each ending at
+    /// the first Activation (sec. 1). Returns slices of node ids.
+    pub fn layers(&self) -> Vec<Vec<NodeId>> {
+        let mut layers = Vec::new();
+        let mut current: Vec<NodeId> = Vec::new();
+        for n in &self.nodes {
+            if matches!(n.op, Op::Input { .. }) {
+                continue;
+            }
+            current.push(n.id);
+            if n.op.is_activation() {
+                layers.push(std::mem::take(&mut current));
+            }
+        }
+        if !current.is_empty() {
+            layers.push(current);
+        }
+        layers
+    }
+
+    /// Ids of all activation nodes in order (calibration points).
+    pub fn activations(&self) -> Vec<NodeId> {
+        self.nodes
+            .iter()
+            .filter(|n| n.op.is_activation())
+            .map(|n| n.id)
+            .collect()
+    }
+
+    /// Input quantization spec implied by eps_in (8-bit camera-style
+    /// input: eps = 1/255 -> [0, 255]).
+    pub fn input_spec(&self) -> QuantSpec {
+        let hi = (1.0 / self.eps_in).round() as i64;
+        QuantSpec { eps: self.eps_in, lo: 0, hi }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn tiny_graph() -> Graph {
+        let mut g = Graph::new(1.0 / 255.0);
+        let x = g.push("in", Op::Input { shape: vec![1, 4, 4] }, &[]);
+        let w = Tensor::zeros(&[2, 1, 3, 3]);
+        let c = g.push(
+            "conv",
+            Op::Conv2d { w, bias: None, stride: 1, pad: 1 },
+            &[x],
+        );
+        let b = g.push("bn", Op::BatchNorm { bn: BnParams::identity(2) }, &[c]);
+        g.push("act", Op::ReLU, &[b]);
+        g
+    }
+
+    #[test]
+    fn build_and_validate() {
+        let g = tiny_graph();
+        assert!(g.validate().is_ok());
+        assert_eq!(g.layers().len(), 1);
+        assert_eq!(g.layers()[0].len(), 3);
+    }
+
+    #[test]
+    fn branch_from_activation_is_legal() {
+        let mut g = tiny_graph();
+        let act = g.output;
+        let w = Tensor::zeros(&[2, 2, 3, 3]);
+        let c1 = g.push("c1", Op::Conv2d { w: w.clone(), bias: None, stride: 1, pad: 1 }, &[act]);
+        let r1 = g.push("r1", Op::ReLU, &[c1]);
+        g.push("add", Op::Add, &[act, r1]);
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn branch_from_linear_is_rejected() {
+        let mut g = Graph::new(1.0 / 255.0);
+        let x = g.push("in", Op::Input { shape: vec![1, 4, 4] }, &[]);
+        let w = Tensor::zeros(&[2, 1, 3, 3]);
+        let c = g.push("conv", Op::Conv2d { w, bias: None, stride: 1, pad: 1 }, &[x]);
+        let r1 = g.push("r1", Op::ReLU, &[c]);
+        let r2 = g.push("r2", Op::ReLU, &[c]); // second consumer of conv
+        g.push("add", Op::Add, &[r1, r2]);
+        assert!(matches!(g.validate(), Err(GraphError::BranchRule(_, _))));
+    }
+
+    #[test]
+    fn add_arity_enforced() {
+        let mut g = tiny_graph();
+        let act = g.output;
+        g.push("add", Op::Add, &[act]);
+        assert!(matches!(g.validate(), Err(GraphError::Arity(_, _, 1, 2))));
+    }
+}
+
+pub mod int;

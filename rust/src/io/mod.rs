@@ -1,0 +1,289 @@
+//! Artifact manifest, golden vectors, and checkpoint I/O (S11).
+//!
+//! The build-time Python side (`python/compile/aot.py`) writes
+//! `artifacts/manifest.json` (per-artifact argument lists) and
+//! `artifacts/goldens.json` (cross-language validation vectors); this
+//! module loads both. Checkpoints (trained parameters) are stored as JSON
+//! with full-precision f64 values — small models, exact round-trips.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::tensor::{Tensor, TensorF, TensorI};
+use crate::util::json::{self, Value};
+
+/// One argument of an AOT artifact.
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One AOT-compiled artifact (an HLO text module).
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub args: Vec<ArgSpec>,
+    pub n_outputs: usize,
+    pub kind: String,
+    pub batch: Option<usize>,
+    pub wbits: Option<u32>,
+    pub abits: Option<u32>,
+}
+
+/// Parsed artifacts/manifest.json.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactSpec>,
+    pub arch: Value,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let v = json::parse(&text).context("parsing manifest.json")?;
+        let mut artifacts = Vec::new();
+        for a in v.get("artifacts")?.as_arr()? {
+            let args = a
+                .get("args")?
+                .as_arr()?
+                .iter()
+                .map(|e| {
+                    Ok(ArgSpec {
+                        name: e.get("name")?.as_str()?.to_string(),
+                        shape: e
+                            .get("shape")?
+                            .as_arr()?
+                            .iter()
+                            .map(|s| Ok(s.as_i64()? as usize))
+                            .collect::<Result<Vec<_>>>()?,
+                        dtype: e.get("dtype")?.as_str()?.to_string(),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.push(ArtifactSpec {
+                name: a.get("name")?.as_str()?.to_string(),
+                file: dir.join(a.get("file")?.as_str()?),
+                args,
+                n_outputs: a.get("n_outputs")?.as_i64()? as usize,
+                kind: a
+                    .get_opt("kind")
+                    .and_then(|k| k.as_str().ok())
+                    .unwrap_or("")
+                    .to_string(),
+                batch: a.get_opt("batch").and_then(|b| b.as_i64().ok()).map(|b| b as usize),
+                wbits: a.get_opt("wbits").and_then(|b| b.as_i64().ok()).map(|b| b as u32),
+                abits: a.get_opt("abits").and_then(|b| b.as_i64().ok()).map(|b| b as u32),
+            });
+        }
+        let arch = v.get("arch")?.clone();
+        Ok(Manifest { artifacts, arch, dir })
+    }
+
+    pub fn find(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))
+    }
+
+    /// All artifacts of a kind, sorted by batch size.
+    pub fn by_kind(&self, kind: &str) -> Vec<&ArtifactSpec> {
+        let mut v: Vec<&ArtifactSpec> =
+            self.artifacts.iter().filter(|a| a.kind == kind).collect();
+        v.sort_by_key(|a| a.batch.unwrap_or(0));
+        v
+    }
+}
+
+/// Parsed artifacts/goldens.json (kept as raw JSON; tests pull what they
+/// need via the tensor helpers).
+pub struct Goldens(pub Value);
+
+impl Goldens {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Goldens> {
+        let text = std::fs::read_to_string(dir.as_ref().join("goldens.json"))
+            .context("reading goldens.json (run `make artifacts`)")?;
+        Ok(Goldens(json::parse(&text).context("parsing goldens.json")?))
+    }
+
+    pub fn tensor_f32(&self, path: &[&str]) -> Result<TensorF> {
+        let v = self.walk(path)?;
+        let (data, shape) = v.as_f64_tensor()?;
+        Ok(TensorF::from_f64(&shape, &data))
+    }
+
+    pub fn tensor_i32(&self, path: &[&str]) -> Result<TensorI> {
+        let v = self.walk(path)?;
+        let (data, shape) = v.as_i32_tensor()?;
+        Ok(Tensor::from_vec(&shape, data))
+    }
+
+    pub fn f64(&self, path: &[&str]) -> Result<f64> {
+        Ok(self.walk(path)?.as_f64()?)
+    }
+
+    pub fn i64(&self, path: &[&str]) -> Result<i64> {
+        Ok(self.walk(path)?.as_i64()?)
+    }
+
+    pub fn walk(&self, path: &[&str]) -> Result<&Value> {
+        let mut v = &self.0;
+        for p in path {
+            v = v.get(p)?;
+        }
+        Ok(v)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoints: named f64 tensors, exact JSON round-trip
+// ---------------------------------------------------------------------------
+
+/// A named-tensor checkpoint (trained parameters + BN state + act betas).
+#[derive(Clone, Debug, Default)]
+pub struct Checkpoint {
+    pub tensors: BTreeMap<String, (Vec<usize>, Vec<f64>)>,
+    pub meta: BTreeMap<String, f64>,
+}
+
+impl Checkpoint {
+    pub fn insert_f32(&mut self, name: &str, t: &TensorF) {
+        self.tensors.insert(
+            name.to_string(),
+            (t.shape().to_vec(), t.data().iter().map(|v| *v as f64).collect()),
+        );
+    }
+
+    pub fn insert_f64(&mut self, name: &str, shape: &[usize], data: Vec<f64>) {
+        self.tensors.insert(name.to_string(), (shape.to_vec(), data));
+    }
+
+    pub fn get_f32(&self, name: &str) -> Result<TensorF> {
+        let (shape, data) = self
+            .tensors
+            .get(name)
+            .with_context(|| format!("checkpoint missing tensor '{name}'"))?;
+        Ok(TensorF::from_f64(shape, data))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<(&[usize], &[f64])> {
+        let (shape, data) = self
+            .tensors
+            .get(name)
+            .with_context(|| format!("checkpoint missing tensor '{name}'"))?;
+        Ok((shape, data))
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut tensors = BTreeMap::new();
+        for (name, (shape, data)) in &self.tensors {
+            tensors.insert(
+                name.clone(),
+                json::obj(vec![
+                    ("shape", json::arr_i64(&shape.iter().map(|s| *s as i64).collect::<Vec<_>>())),
+                    ("data", json::arr_f64(data)),
+                ]),
+            );
+        }
+        let mut meta = BTreeMap::new();
+        for (k, v) in &self.meta {
+            meta.insert(k.clone(), Value::Num(*v));
+        }
+        let root = json::obj(vec![
+            ("tensors", Value::Obj(tensors)),
+            ("meta", Value::Obj(meta)),
+        ]);
+        std::fs::write(path, json::write(&root))?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading checkpoint {}", path.as_ref().display()))?;
+        let v = json::parse(&text)?;
+        let mut ck = Checkpoint::default();
+        for (name, t) in v.get("tensors")?.as_obj()? {
+            let shape: Vec<usize> = t
+                .get("shape")?
+                .as_arr()?
+                .iter()
+                .map(|s| Ok(s.as_i64()? as usize))
+                .collect::<Result<Vec<_>>>()?;
+            let data: Vec<f64> = t
+                .get("data")?
+                .as_arr()?
+                .iter()
+                .map(|d| Ok(d.as_f64()?))
+                .collect::<Result<Vec<_>>>()?;
+            ck.tensors.insert(name.clone(), (shape, data));
+        }
+        if let Some(meta) = v.get_opt("meta") {
+            for (k, mv) in meta.as_obj()? {
+                ck.meta.insert(k.clone(), mv.as_f64()?);
+            }
+        }
+        Ok(ck)
+    }
+}
+
+/// Default artifacts directory: $NEMO_ARTIFACTS or ./artifacts.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("NEMO_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkpoint_roundtrip_is_exact() {
+        let mut ck = Checkpoint::default();
+        ck.insert_f64("w", &[2, 2], vec![1.0 / 3.0, -2.5e-7, 0.0, 1e300]);
+        ck.meta.insert("loss".into(), 0.125);
+        let dir = std::env::temp_dir().join("nemo_ck_test.json");
+        ck.save(&dir).unwrap();
+        let back = Checkpoint::load(&dir).unwrap();
+        let (shape, data) = back.get_f64("w").unwrap();
+        assert_eq!(shape, &[2, 2]);
+        assert_eq!(data, &[1.0 / 3.0, -2.5e-7, 0.0, 1e300]);
+        assert_eq!(back.meta["loss"], 0.125);
+        let _ = std::fs::remove_file(dir);
+    }
+
+    #[test]
+    fn manifest_loads_if_artifacts_built() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(!m.artifacts.is_empty());
+        let id = m.find("synthnet_id_fwd_b1").unwrap();
+        assert_eq!(id.kind, "id_fwd");
+        assert_eq!(id.args.last().unwrap().name, "qx");
+        assert!(!m.by_kind("id_fwd").is_empty());
+    }
+
+    #[test]
+    fn goldens_load_if_built() {
+        let dir = artifacts_dir();
+        if !dir.join("goldens.json").exists() {
+            return;
+        }
+        let g = Goldens::load(&dir).unwrap();
+        let qx = g.tensor_i32(&["model_case", "qx"]).unwrap();
+        assert_eq!(qx.shape()[0], 2);
+        assert!(g.f64(&["model_case", "eps_out"]).unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,40 @@
+//! # NEMO-rs: integer-only DNN quantization for deployment
+//!
+//! A Rust + JAX + Pallas reproduction of Conti, *"Technical Report: NEMO
+//! Quantization for Deployment Model"* (2020).
+//!
+//! The paper defines four DNN representations — FullPrecision,
+//! FakeQuantized, QuantizedDeployable, IntegerDeployable — and the
+//! transforms between them; the last one runs inference using *only*
+//! integers. This crate implements:
+//!
+//! * the full representation pipeline over a graph IR
+//!   ([`graph`], [`transform`]);
+//! * the quantization/requantization math of paper secs. 2-3 ([`quant`]);
+//! * two executors ([`engine`]): a float engine for FP/FQ/QD and an
+//!   integer-only engine for ID (the MCU-datapath simulator);
+//! * a PJRT runtime ([`runtime`]) that loads the AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`) produced by `python/compile/`;
+//! * a serving coordinator ([`coordinator`]) with dynamic batching over
+//!   the compiled IntegerDeployable executables;
+//! * a QAT training driver ([`train`]) that runs the compiled
+//!   FakeQuantized train step — Python is never on the request path;
+//! * model zoo, synthetic dataset, checkpoint/manifest I/O
+//!   ([`model`], [`data`], [`io`]).
+//!
+//! See DESIGN.md for the paper-to-module map and EXPERIMENTS.md for the
+//! reproduced experiment suite.
+
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod engine;
+pub mod graph;
+pub mod io;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod train;
+pub mod transform;
+pub mod util;

@@ -1,0 +1,86 @@
+//! Glue between the Rust-side model/transform state and the flat
+//! positional argument lists the AOT artifacts expect (orders defined by
+//! python/compile/model.py *_spec functions, recorded in manifest.json).
+
+use anyhow::{bail, ensure, Result};
+
+use crate::graph::int::IntOp;
+use crate::runtime::Arg;
+use crate::tensor::Tensor;
+use crate::transform::Deployed;
+
+use super::synthnet::SynthNet;
+
+/// FP/FQ artifact parameter list: params [11] ++ bn_state [6].
+pub fn synthnet_fp_args(net: &SynthNet) -> Vec<Arg> {
+    let mut args: Vec<Arg> = Vec::new();
+    for t in net.param_list() {
+        args.push(t.into());
+    }
+    for t in net.bn_state_list() {
+        args.push(t.into());
+    }
+    args
+}
+
+/// FQ artifacts additionally take the PACT act betas [3].
+pub fn synthnet_fq_args(net: &SynthNet) -> Vec<Arg> {
+    let mut args = synthnet_fp_args(net);
+    for t in net.act_beta_list() {
+        args.push(t.into());
+    }
+    args
+}
+
+/// ID artifact argument list (python model.id_spec order):
+/// per conv: wq, kappa_q, lambda_q, m, d, act_hi; then fc.wq, fc.bq.
+///
+/// Extracted from the IntegerDeployable graph produced by
+/// [`crate::transform::deploy`] — validates that the graph has the
+/// SynthNet topology (3x [ConvInt, IntBn, RequantAct], AvgPool, Flatten,
+/// LinearInt).
+pub fn synthnet_id_args(dep: &Deployed) -> Result<Vec<Arg>> {
+    let mut args: Vec<Arg> = Vec::new();
+    let nodes = &dep.id.nodes;
+    let mut i = 0usize;
+    ensure!(
+        matches!(nodes[i].op, IntOp::Input { .. }),
+        "node 0 must be Input"
+    );
+    i += 1;
+    for conv in 0..3 {
+        let IntOp::ConvInt { wq, .. } = &nodes[i].op else {
+            bail!("expected ConvInt at node {i} (conv {conv})");
+        };
+        let IntOp::IntBn { bn } = &nodes[i + 1].op else {
+            bail!(
+                "expected IntBn at node {} (use_thresholds graphs have no \
+                 id_fwd artifact)",
+                i + 1
+            );
+        };
+        let IntOp::RequantAct { rq } = &nodes[i + 2].op else {
+            bail!("expected RequantAct at node {}", i + 2);
+        };
+        args.push(wq.clone().into());
+        args.push(Tensor::from_vec(&[bn.kappa_q.len()], bn.kappa_q.clone()).into());
+        args.push(Tensor::from_vec(&[bn.lambda_q.len()], bn.lambda_q.clone()).into());
+        args.push(Tensor::scalar(rq.m as i32).into());
+        args.push(Tensor::scalar(rq.d as i32).into());
+        args.push(Tensor::scalar(rq.hi as i32).into());
+        i += 3;
+    }
+    ensure!(matches!(nodes[i].op, IntOp::AvgPoolInt { .. }), "expected AvgPoolInt");
+    ensure!(matches!(nodes[i + 1].op, IntOp::Flatten), "expected Flatten");
+    i += 2;
+    let IntOp::LinearInt { wq, bias_q } = &nodes[i].op else {
+        bail!("expected LinearInt at node {i}");
+    };
+    args.push(wq.clone().into());
+    let bq: Vec<i32> = match bias_q {
+        Some(b) => b.iter().map(|v| *v as i32).collect(),
+        None => vec![0; wq.shape()[1]],
+    };
+    args.push(Tensor::from_vec(&[bq.len()], bq).into());
+    Ok(args)
+}

@@ -1,0 +1,103 @@
+//! Model zoo (S10): SynthNet (mirrors python/compile/model.py exactly),
+//! a residual variant (exercises the Add path, sec. 3.5), and an MLP.
+
+pub mod synthnet;
+
+pub use synthnet::{SynthNet, ConvCfg, SYNTHNET_CONVS};
+
+use crate::graph::{Graph, Op};
+use crate::quant::bn::BnParams;
+use crate::tensor::TensorF;
+use crate::util::rng::Rng;
+
+/// A small residual CNN: two conv-bn-act blocks whose outputs are Added
+/// (both branches fed from the same activation, per the sec. 1 branch
+/// rule), then pooled and classified. Engine-only (no AOT artifact);
+/// used by the Add-requantization experiments (E6).
+pub fn residual_net(rng: &mut Rng, eps_in: f64) -> Graph {
+    let mut g = Graph::new(eps_in);
+    let x = g.push("in", Op::Input { shape: vec![1, 16, 16] }, &[]);
+
+    let w0 = rand_w(rng, &[8, 1, 3, 3]);
+    let c0 = g.push("c0", Op::Conv2d { w: w0, bias: None, stride: 1, pad: 1 }, &[x]);
+    let b0 = g.push("bn0", Op::BatchNorm { bn: rand_bn(rng, 8) }, &[c0]);
+    let a0 = g.push("a0", Op::ReLU, &[b0]);
+
+    // branch 1: conv-bn-act; branch 2: identity from a0
+    let w1 = rand_w(rng, &[8, 8, 3, 3]);
+    let c1 = g.push("c1", Op::Conv2d { w: w1, bias: None, stride: 1, pad: 1 }, &[a0]);
+    let b1 = g.push("bn1", Op::BatchNorm { bn: rand_bn(rng, 8) }, &[c1]);
+    let a1 = g.push("a1", Op::ReLU, &[b1]);
+
+    let add = g.push("add", Op::Add, &[a0, a1]);
+    // post-add activation re-quantizes the sum
+    let a2 = g.push("a2", Op::ReLU, &[add]);
+    let p = g.push("gap", Op::GlobalAvgPool, &[a2]);
+    let wf = rand_w(rng, &[8, 10]);
+    g.push("fc", Op::Linear { w: wf, bias: None }, &[p]);
+    g
+}
+
+/// 2-layer MLP over flat inputs (quickstart-sized).
+pub fn mlp(rng: &mut Rng, in_dim: usize, hidden: usize, out_dim: usize, eps_in: f64) -> Graph {
+    let mut g = Graph::new(eps_in);
+    let x = g.push("in", Op::Input { shape: vec![in_dim] }, &[]);
+    let w1 = rand_w(rng, &[in_dim, hidden]);
+    let l1 = g.push("fc1", Op::Linear { w: w1, bias: None }, &[x]);
+    let bn = g.push("bn1", Op::BatchNorm { bn: rand_bn(rng, hidden) }, &[l1]);
+    let a1 = g.push("a1", Op::ReLU, &[bn]);
+    let w2 = rand_w(rng, &[hidden, out_dim]);
+    g.push("fc2", Op::Linear { w: w2, bias: Some(vec![0.0; out_dim]) }, &[a1]);
+    g
+}
+
+pub(crate) fn rand_w(rng: &mut Rng, shape: &[usize]) -> TensorF {
+    let fan_in: usize = if shape.len() == 4 {
+        shape[1] * shape[2] * shape[3]
+    } else {
+        shape[0]
+    };
+    let std = (2.0 / fan_in as f64).sqrt();
+    let n: usize = shape.iter().product();
+    TensorF::from_vec(shape, (0..n).map(|_| rng.normal(0.0, std) as f32).collect())
+}
+
+pub(crate) fn rand_bn(rng: &mut Rng, c: usize) -> BnParams {
+    BnParams {
+        gamma: (0..c).map(|_| rng.uniform(0.5, 1.5)).collect(),
+        sigma: (0..c).map(|_| rng.uniform(0.5, 1.5)).collect(),
+        beta: (0..c).map(|_| rng.normal(0.0, 0.1)).collect(),
+        mu: (0..c).map(|_| rng.normal(0.0, 0.1)).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::FloatEngine;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn residual_net_validates_and_runs() {
+        let mut rng = Rng::new(5);
+        let g = residual_net(&mut rng, 1.0 / 255.0);
+        g.validate().unwrap();
+        let x = Tensor::from_vec(
+            &[2, 1, 16, 16],
+            (0..512).map(|i| (i % 255) as f32 / 255.0).collect(),
+        );
+        let out = FloatEngine::new().run(&g, &x);
+        assert_eq!(out.shape(), &[2, 10]);
+    }
+
+    #[test]
+    fn mlp_runs() {
+        let mut rng = Rng::new(6);
+        let g = mlp(&mut rng, 64, 32, 10, 1.0 / 255.0);
+        g.validate().unwrap();
+        let x = Tensor::from_vec(&[3, 64], vec![0.5f32; 192]);
+        assert_eq!(FloatEngine::new().run(&g, &x).shape(), &[3, 10]);
+    }
+}
+
+pub mod artifact_args;

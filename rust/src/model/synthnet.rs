@@ -1,0 +1,287 @@
+//! SynthNet: the Rust twin of `python/compile/model.py`.
+//!
+//! Layer hyper-parameters are duplicated as constants and asserted
+//! against the artifact manifest at load time (io::Manifest carries the
+//! Python-side arch dict). Parameter *order* matters: the flat lists fed
+//! to the PJRT artifacts follow `param_spec()` exactly.
+
+use anyhow::{ensure, Result};
+
+use crate::graph::{Graph, Op};
+use crate::io::Checkpoint;
+use crate::quant::bn::BnParams;
+use crate::tensor::{Tensor, TensorF};
+use crate::util::rng::Rng;
+
+pub const BN_EPS: f64 = 1e-5;
+pub const EPS_IN: f64 = 1.0 / 255.0;
+pub const POOL_K: usize = 4;
+pub const POOL_D: u32 = 12;
+pub const N_CLASSES: usize = 10;
+pub const FC_IN: usize = 32;
+pub const IN_SHAPE: [usize; 3] = [1, 16, 16];
+
+#[derive(Clone, Copy, Debug)]
+pub struct ConvCfg {
+    pub name: &'static str,
+    pub cin: usize,
+    pub cout: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+pub const SYNTHNET_CONVS: [ConvCfg; 3] = [
+    ConvCfg { name: "conv1", cin: 1, cout: 8, k: 3, stride: 1, pad: 1 },
+    ConvCfg { name: "conv2", cin: 8, cout: 16, k: 3, stride: 2, pad: 1 },
+    ConvCfg { name: "conv3", cin: 16, cout: 32, k: 3, stride: 2, pad: 1 },
+];
+
+/// Trainable parameters + BN running stats + PACT act betas.
+#[derive(Clone, Debug)]
+pub struct SynthNet {
+    /// per conv: (w OIHW, gamma, beta)
+    pub convs: Vec<(TensorF, Vec<f64>, Vec<f64>)>,
+    /// per conv: (mu, var) running statistics
+    pub bn_state: Vec<(Vec<f64>, Vec<f64>)>,
+    pub fc_w: TensorF,
+    pub fc_b: Vec<f64>,
+    /// PACT clipping bounds, one per activation (trained in FQ mode)
+    pub act_betas: Vec<f64>,
+}
+
+impl SynthNet {
+    /// Random initialization (He-style, gamma ~ 1, var = 1).
+    pub fn init(rng: &mut Rng) -> Self {
+        let mut convs = Vec::new();
+        let mut bn_state = Vec::new();
+        for c in SYNTHNET_CONVS {
+            convs.push((
+                super::rand_w(rng, &[c.cout, c.cin, c.k, c.k]),
+                (0..c.cout).map(|_| (rng.normal(1.0, 0.1) as f64).abs()).collect(),
+                (0..c.cout).map(|_| rng.normal(0.0, 0.1)).collect(),
+            ));
+            bn_state.push((vec![0.0; c.cout], vec![1.0; c.cout]));
+        }
+        SynthNet {
+            convs,
+            bn_state,
+            fc_w: super::rand_w(rng, &[FC_IN, N_CLASSES]),
+            fc_b: vec![0.0; N_CLASSES],
+            act_betas: vec![4.0; SYNTHNET_CONVS.len()],
+        }
+    }
+
+    /// Build the FullPrecision inference graph (BN from running stats,
+    /// plain ReLU).
+    pub fn to_fp_graph(&self) -> Graph {
+        self.to_graph(false)
+    }
+
+    /// Build the FakeQuantized-style graph with PACT activations at the
+    /// stored act_betas (weights are NOT hardened here; use
+    /// transform::quantize_pact for that).
+    pub fn to_pact_graph(&self, abits: u32) -> Graph {
+        let mut g = self.to_graph(true);
+        let mut i = 0;
+        for n in &mut g.nodes {
+            if let Op::PactAct { beta, bits } = &mut n.op {
+                *beta = self.act_betas[i];
+                *bits = abits;
+                i += 1;
+            }
+        }
+        g
+    }
+
+    fn to_graph(&self, pact: bool) -> Graph {
+        let mut g = Graph::new(EPS_IN);
+        let mut prev = g.push("in", Op::Input { shape: IN_SHAPE.to_vec() }, &[]);
+        for (i, c) in SYNTHNET_CONVS.iter().enumerate() {
+            let (w, gamma, beta) = &self.convs[i];
+            let (mu, var) = &self.bn_state[i];
+            let conv = g.push(
+                c.name,
+                Op::Conv2d { w: w.clone(), bias: None, stride: c.stride, pad: c.pad },
+                &[prev],
+            );
+            let sigma: Vec<f64> = var.iter().map(|v| (v + BN_EPS).sqrt()).collect();
+            let bn = BnParams {
+                gamma: gamma.clone(),
+                sigma,
+                beta: beta.clone(),
+                mu: mu.clone(),
+            };
+            let bnn = g.push(&format!("bn{}", i + 1), Op::BatchNorm { bn }, &[conv]);
+            prev = if pact {
+                g.push(
+                    &format!("act{}", i + 1),
+                    Op::PactAct { beta: self.act_betas[i], bits: 8 },
+                    &[bnn],
+                )
+            } else {
+                g.push(&format!("act{}", i + 1), Op::ReLU, &[bnn])
+            };
+        }
+        let p = g.push("gap", Op::GlobalAvgPool, &[prev]);
+        g.push(
+            "fc",
+            Op::Linear { w: self.fc_w.clone(), bias: Some(self.fc_b.clone()) },
+            &[p],
+        );
+        g
+    }
+
+    /// Flat parameter list in artifact order (python model.param_spec):
+    /// conv{i}.w, conv{i}.bn_gamma, conv{i}.bn_beta, ..., fc.w, fc.b.
+    pub fn param_list(&self) -> Vec<TensorF> {
+        let mut out = Vec::new();
+        for (w, gamma, beta) in &self.convs {
+            out.push(w.clone());
+            out.push(vec_to_tensor(gamma));
+            out.push(vec_to_tensor(beta));
+        }
+        out.push(self.fc_w.clone());
+        out.push(vec_to_tensor(&self.fc_b));
+        out
+    }
+
+    /// Flat BN running-state list (python model.bn_state_spec order).
+    pub fn bn_state_list(&self) -> Vec<TensorF> {
+        let mut out = Vec::new();
+        for (mu, var) in &self.bn_state {
+            out.push(vec_to_tensor(mu));
+            out.push(vec_to_tensor(var));
+        }
+        out
+    }
+
+    pub fn act_beta_list(&self) -> Vec<TensorF> {
+        self.act_betas.iter().map(|b| Tensor::scalar(*b as f32)).collect()
+    }
+
+    /// Rebuild from flat lists (the outputs of a PJRT train step).
+    pub fn update_from_flat(
+        &mut self,
+        params: &[TensorF],
+        bn_state: &[TensorF],
+        act_betas: Option<&[TensorF]>,
+    ) -> Result<()> {
+        ensure!(params.len() == 3 * self.convs.len() + 2, "param count");
+        ensure!(bn_state.len() == 2 * self.convs.len(), "bn state count");
+        for (i, c) in self.convs.iter_mut().enumerate() {
+            c.0 = params[3 * i].clone();
+            c.1 = params[3 * i + 1].data().iter().map(|v| *v as f64).collect();
+            c.2 = params[3 * i + 2].data().iter().map(|v| *v as f64).collect();
+        }
+        self.fc_w = params[params.len() - 2].clone();
+        self.fc_b = params[params.len() - 1].data().iter().map(|v| *v as f64).collect();
+        for (i, s) in self.bn_state.iter_mut().enumerate() {
+            s.0 = bn_state[2 * i].data().iter().map(|v| *v as f64).collect();
+            s.1 = bn_state[2 * i + 1].data().iter().map(|v| *v as f64).collect();
+        }
+        if let Some(betas) = act_betas {
+            ensure!(betas.len() == self.act_betas.len(), "beta count");
+            for (i, b) in betas.iter().enumerate() {
+                self.act_betas[i] = b.data()[0] as f64;
+            }
+        }
+        Ok(())
+    }
+
+    // -- checkpointing --------------------------------------------------
+
+    pub fn to_checkpoint(&self) -> Checkpoint {
+        let mut ck = Checkpoint::default();
+        for (i, c) in SYNTHNET_CONVS.iter().enumerate() {
+            let (w, gamma, beta) = &self.convs[i];
+            ck.insert_f32(&format!("{}.w", c.name), w);
+            ck.insert_f64(&format!("{}.bn_gamma", c.name), &[c.cout], gamma.clone());
+            ck.insert_f64(&format!("{}.bn_beta", c.name), &[c.cout], beta.clone());
+            let (mu, var) = &self.bn_state[i];
+            ck.insert_f64(&format!("{}.bn_mu", c.name), &[c.cout], mu.clone());
+            ck.insert_f64(&format!("{}.bn_var", c.name), &[c.cout], var.clone());
+        }
+        ck.insert_f32("fc.w", &self.fc_w);
+        ck.insert_f64("fc.b", &[N_CLASSES], self.fc_b.clone());
+        ck.insert_f64(
+            "act_betas",
+            &[self.act_betas.len()],
+            self.act_betas.clone(),
+        );
+        ck
+    }
+
+    pub fn from_checkpoint(ck: &Checkpoint) -> Result<Self> {
+        let mut convs = Vec::new();
+        let mut bn_state = Vec::new();
+        for c in SYNTHNET_CONVS {
+            let w = ck.get_f32(&format!("{}.w", c.name))?;
+            let (_, gamma) = ck.get_f64(&format!("{}.bn_gamma", c.name))?;
+            let (_, beta) = ck.get_f64(&format!("{}.bn_beta", c.name))?;
+            convs.push((w, gamma.to_vec(), beta.to_vec()));
+            let (_, mu) = ck.get_f64(&format!("{}.bn_mu", c.name))?;
+            let (_, var) = ck.get_f64(&format!("{}.bn_var", c.name))?;
+            bn_state.push((mu.to_vec(), var.to_vec()));
+        }
+        let fc_w = ck.get_f32("fc.w")?;
+        let (_, fc_b) = ck.get_f64("fc.b")?;
+        let (_, act_betas) = ck.get_f64("act_betas")?;
+        Ok(SynthNet {
+            convs,
+            bn_state,
+            fc_w,
+            fc_b: fc_b.to_vec(),
+            act_betas: act_betas.to_vec(),
+        })
+    }
+}
+
+fn vec_to_tensor(v: &[f64]) -> TensorF {
+    TensorF::from_f64(&[v.len()], v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::FloatEngine;
+
+    #[test]
+    fn init_and_run() {
+        let mut rng = Rng::new(7);
+        let net = SynthNet::init(&mut rng);
+        let g = net.to_fp_graph();
+        g.validate().unwrap();
+        let x = Tensor::from_vec(&[2, 1, 16, 16], vec![0.5f32; 512]);
+        let out = FloatEngine::new().run(&g, &x);
+        assert_eq!(out.shape(), &[2, N_CLASSES]);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let mut rng = Rng::new(8);
+        let net = SynthNet::init(&mut rng);
+        let ck = net.to_checkpoint();
+        let back = SynthNet::from_checkpoint(&ck).unwrap();
+        assert_eq!(net.fc_w.data(), back.fc_w.data());
+        assert_eq!(net.act_betas, back.act_betas);
+        // graphs produce identical outputs
+        let x = Tensor::from_vec(&[1, 1, 16, 16], vec![0.3f32; 256]);
+        let e = FloatEngine::new();
+        let a = e.run(&net.to_fp_graph(), &x);
+        let b = e.run(&back.to_fp_graph(), &x);
+        assert_eq!(a.data(), b.data());
+    }
+
+    #[test]
+    fn param_list_order_matches_spec() {
+        let mut rng = Rng::new(9);
+        let net = SynthNet::init(&mut rng);
+        let p = net.param_list();
+        assert_eq!(p.len(), 11); // 3 convs x 3 + fc.w + fc.b
+        assert_eq!(p[0].shape(), &[8, 1, 3, 3]);
+        assert_eq!(p[9].shape(), &[FC_IN, N_CLASSES]);
+        assert_eq!(net.bn_state_list().len(), 6);
+        assert_eq!(net.act_beta_list().len(), 3);
+    }
+}

@@ -1,0 +1,232 @@
+//! Batch-normalization quantization (paper sec. 3.4): the three
+//! strategies — folding (Eq. 18), integer BN (Eq. 21-22), and exact
+//! threshold merging (Eq. 19-20).
+
+use super::QuantSpec;
+
+/// Full-precision BN parameters for one channel group (all length C).
+#[derive(Clone, Debug)]
+pub struct BnParams {
+    pub gamma: Vec<f64>,
+    pub sigma: Vec<f64>,
+    pub beta: Vec<f64>,
+    pub mu: Vec<f64>,
+}
+
+impl BnParams {
+    pub fn identity(c: usize) -> Self {
+        BnParams {
+            gamma: vec![1.0; c],
+            sigma: vec![1.0; c],
+            beta: vec![0.0; c],
+            mu: vec![0.0; c],
+        }
+    }
+
+    pub fn channels(&self) -> usize {
+        self.gamma.len()
+    }
+
+    /// kappa = gamma/sigma, lambda = beta - kappa*mu (Eq. 21).
+    pub fn affine(&self) -> (Vec<f64>, Vec<f64>) {
+        let kappa: Vec<f64> = self
+            .gamma
+            .iter()
+            .zip(&self.sigma)
+            .map(|(g, s)| g / s)
+            .collect();
+        let lambda: Vec<f64> = self
+            .beta
+            .iter()
+            .zip(kappa.iter().zip(&self.mu))
+            .map(|(b, (k, m))| b - k * m)
+            .collect();
+        (kappa, lambda)
+    }
+
+    /// BN folding (Eq. 18): returns per-channel (w_scale, bias_add) to
+    /// apply to the preceding Linear operator:
+    ///   w <- gamma/sigma * w ;  b <- b + beta - gamma/sigma * mu.
+    pub fn fold(&self) -> (Vec<f64>, Vec<f64>) {
+        self.affine() // identical algebra; named separately for intent
+    }
+}
+
+/// Quantized integer BN (Eq. 22): Q(phi) = Q(kappa)*Q(varphi) + Q(lambda).
+#[derive(Clone, Debug)]
+pub struct BnQuant {
+    pub kappa_q: Vec<i32>,
+    pub lambda_q: Vec<i32>,
+    pub eps_kappa: f64,
+    /// eps of the BN output: eps_kappa * eps_phi
+    pub eps_phi_out: f64,
+}
+
+impl BnQuant {
+    /// Mirror of quantlib.quantize_bn: symmetric kappa quantizer
+    /// (kappa_bits, default 8); lambda stored directly in the target
+    /// format eps_kappa*eps_phi (the D=1 wiring of sec. 3.4 "In NEMO").
+    pub fn derive(bn: &BnParams, eps_phi: f64, kappa_bits: u32) -> Self {
+        let (kappa, lambda) = bn.affine();
+        let mut bmax = kappa.iter().fold(0f64, |m, k| m.max(k.abs()));
+        if bmax == 0.0 {
+            bmax = 1.0;
+        }
+        let spec = QuantSpec::symmetric(bmax, kappa_bits);
+        let kappa_q: Vec<i32> = kappa
+            .iter()
+            .map(|k| ((k / spec.eps).floor() as i64).clamp(spec.lo, spec.hi) as i32)
+            .collect();
+        let eps_phi_out = spec.eps * eps_phi;
+        let lambda_q: Vec<i32> = lambda
+            .iter()
+            .map(|l| (l / eps_phi_out).floor() as i32)
+            .collect();
+        BnQuant { kappa_q, lambda_q, eps_kappa: spec.eps, eps_phi_out }
+    }
+
+    /// Apply to one integer value of channel c (engine hot path uses the
+    /// fused version in engine/integer.rs; this is the reference).
+    #[inline]
+    pub fn apply(&self, c: usize, q: i64) -> i64 {
+        self.kappa_q[c] as i64 * q + self.lambda_q[c] as i64
+    }
+}
+
+/// Exact BN+activation merge (Eq. 19-20): per-channel integer thresholds
+///   TH_i = ceil((sigma/gamma * i * eps_y - beta*sigma/gamma + mu)/eps_phi)
+/// for i = 1..n_levels; output integer = #{i : Q(varphi) >= TH_i}.
+#[derive(Clone, Debug)]
+pub struct Thresholds {
+    /// [C][N] ascending per channel
+    pub th: Vec<Vec<i64>>,
+    pub n_levels: i64,
+}
+
+impl Thresholds {
+    /// Requires gamma, sigma > 0 (paper assumption "by construction or
+    /// simple transformations").
+    pub fn derive(bn: &BnParams, eps_phi: f64, eps_y: f64, n_levels: i64) -> Self {
+        assert!(
+            bn.gamma.iter().all(|g| *g > 0.0) && bn.sigma.iter().all(|s| *s > 0.0),
+            "threshold merge requires gamma, sigma > 0 (sec. 3.4)"
+        );
+        let th = (0..bn.channels())
+            .map(|c| {
+                let inv = bn.sigma[c] / bn.gamma[c];
+                (1..=n_levels)
+                    .map(|i| {
+                        ((inv * i as f64 * eps_y - bn.beta[c] * inv + bn.mu[c]) / eps_phi)
+                            .ceil() as i64
+                    })
+                    .collect()
+            })
+            .collect();
+        Thresholds { th, n_levels }
+    }
+
+    /// Q_y(varphi) for channel c — counts satisfied thresholds. The
+    /// thresholds are ascending so a binary search gives O(log N); N is
+    /// small (paper: "especially effective when the cardinality of Z_y is
+    /// small") so linear scan wins for N <= 15 and we pick by size.
+    #[inline]
+    pub fn apply(&self, c: usize, q: i64) -> i64 {
+        let t = &self.th[c];
+        if t.len() <= 16 {
+            t.iter().take_while(|th| q >= **th).count() as i64
+        } else {
+            t.partition_point(|th| q >= *th) as i64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    fn random_bn(rng: &mut crate::util::rng::Rng, c: usize) -> BnParams {
+        BnParams {
+            gamma: (0..c).map(|_| rng.uniform(0.05, 2.0)).collect(),
+            sigma: (0..c).map(|_| rng.uniform(0.05, 2.0)).collect(),
+            beta: (0..c).map(|_| rng.normal(0.0, 0.5)).collect(),
+            mu: (0..c).map(|_| rng.normal(0.0, 0.5)).collect(),
+        }
+    }
+
+    #[test]
+    fn identity_bn_is_identity() {
+        let bn = BnParams::identity(4);
+        let (k, l) = bn.affine();
+        assert_eq!(k, vec![1.0; 4]);
+        assert_eq!(l, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn integer_bn_approximates_float_bn() {
+        // |eps_out * Q(phi) - (kappa*phi_hat + lambda)| bounded by the
+        // kappa quantization step and one lambda ulp (Eq. 21 approx).
+        prop_check(200, |rng| {
+            let c = rng.int(1, 8) as usize;
+            let bn = random_bn(rng, c);
+            let eps_phi = rng.uniform(1e-6, 1e-3);
+            let bq = BnQuant::derive(&bn, eps_phi, 8);
+            let (kappa, lambda) = bn.affine();
+            let ch = rng.int(0, c as i64) as usize;
+            let q = rng.int(-(1 << 20), 1 << 20);
+            let phi_hat = eps_phi * q as f64;
+            let want = kappa[ch] * phi_hat + lambda[ch];
+            let got = bq.eps_phi_out * bq.apply(ch, q) as f64;
+            // kappa error <= eps_kappa => output error <= eps_kappa*|phi| +
+            // one lambda quantum (eps_phi_out)
+            let bound = bq.eps_kappa * phi_hat.abs() + bq.eps_phi_out * (1.0 + 1e-9);
+            if (got - want).abs() > bound {
+                return Err(format!("|{got} - {want}| > {bound}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn thresholds_exactly_match_float_path() {
+        // The Eq. 19-20 proof: thresholding Q(varphi) == quantizing the
+        // float BN output with Eq. 10, exactly, for every integer input.
+        prop_check(100, |rng| {
+            let c = rng.int(1, 6) as usize;
+            let bn = random_bn(rng, c);
+            let eps_phi = rng.uniform(1e-5, 1e-3);
+            let eps_y = rng.uniform(5e-3, 5e-2);
+            let n = [3i64, 15, 255][rng.int(0, 3) as usize];
+            let th = Thresholds::derive(&bn, eps_phi, eps_y, n);
+            for _ in 0..50 {
+                let ch = rng.int(0, c as i64) as usize;
+                let q = rng.int(-(1 << 18), 1 << 18);
+                let phi_hat = eps_phi * q as f64;
+                let bnv = bn.gamma[ch] / bn.sigma[ch] * (phi_hat - bn.mu[ch]) + bn.beta[ch];
+                let want = ((bnv / eps_y).floor() as i64).clamp(0, n);
+                let got = th.apply(ch, q);
+                if got != want {
+                    return Err(format!(
+                        "ch {ch} q {q}: thresholds {got} != float path {want}"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn threshold_apply_linear_equals_binary_search() {
+        prop_check(100, |rng| {
+            let mut t: Vec<i64> = (0..300).map(|_| rng.int(-1000, 1000)).collect();
+            t.sort();
+            let th = Thresholds { th: vec![t.clone()], n_levels: 300 };
+            let q = rng.int(-1200, 1200);
+            let lin = t.iter().take_while(|v| q >= **v).count() as i64;
+            if th.apply(0, q) != lin {
+                return Err("binary search mismatch".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,188 @@
+//! Quantization math (paper sec. 2-3), the Rust mirror of
+//! `python/compile/quantlib.py`.
+//!
+//! Numerical contract: every function here performs the *same f64
+//! operations in the same order* as its Python counterpart, so both sides
+//! derive identical integer parameters from identical float inputs (IEEE
+//! 754 f64 arithmetic is deterministic; we avoid libm-dependent functions
+//! like log2 on the shared paths). Cross-language goldens in
+//! `artifacts/goldens.json` pin this contract down in tests.
+
+pub mod bn;
+pub mod requant;
+
+use crate::tensor::{TensorF, TensorI};
+#[cfg(test)]
+use crate::tensor::Tensor;
+
+/// A quantized space Z_t with its quantum epsilon_t (Def. 2.1).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QuantSpec {
+    /// the quantum epsilon_t
+    pub eps: f64,
+    /// inclusive integer bounds of Z_t
+    pub lo: i64,
+    pub hi: i64,
+}
+
+impl QuantSpec {
+    /// alpha=0 activation space: eps = beta/(2^Q - 1), Z = [0, 2^Q - 1].
+    pub fn activation(beta: f64, bits: u32) -> Self {
+        let n = (1i64 << bits) - 1;
+        QuantSpec { eps: beta / n as f64, lo: 0, hi: n }
+    }
+
+    /// Symmetric weight space: eps = 2*beta/(2^Q - 1),
+    /// Z = [-2^(Q-1), 2^(Q-1) - 1]. The offset alpha_w is a multiple of
+    /// eps_w so Eq. 15's correction term folds into one integer image.
+    pub fn weight(beta: f64, bits: u32) -> Self {
+        let n = (1i64 << bits) - 1;
+        QuantSpec {
+            eps: 2.0 * beta / n as f64,
+            lo: -(1i64 << (bits - 1)),
+            hi: (1i64 << (bits - 1)) - 1,
+        }
+    }
+
+    /// Symmetric space for BN kappa (sec. 3.4) — same grid as weights.
+    pub fn symmetric(beta: f64, bits: u32) -> Self {
+        Self::weight(beta, bits)
+    }
+
+    pub fn levels(&self) -> i64 {
+        self.hi - self.lo + 1
+    }
+
+    /// Integer image of a scalar: clip(floor(t/eps), lo, hi) (Eq. 10).
+    #[inline]
+    pub fn quantize(&self, t: f64) -> i64 {
+        let q = (t / self.eps).floor();
+        (q as i64).clamp(self.lo, self.hi)
+    }
+
+    /// Quantized version t_hat = eps * Q(t) (Def. 2.2, alpha = 0).
+    #[inline]
+    pub fn dequantize(&self, q: i64) -> f64 {
+        self.eps * q as f64
+    }
+
+    /// Fake-quantize: t -> eps*Q(t) in one step (FakeQuantized fwd path).
+    #[inline]
+    pub fn fake_quantize(&self, t: f64) -> f64 {
+        self.dequantize(self.quantize(t))
+    }
+}
+
+/// Quantize an f32 tensor to its integer image under `spec`.
+pub fn quantize_tensor(t: &TensorF, spec: &QuantSpec) -> TensorI {
+    t.map(|x| spec.quantize(x as f64) as i32)
+}
+
+/// Replace every value by its quantized version (harden_weights).
+pub fn harden_tensor(t: &TensorF, spec: &QuantSpec) -> TensorF {
+    t.map(|x| spec.fake_quantize(x as f64) as f32)
+}
+
+/// Dequantize an integer image back to the real domain.
+pub fn dequantize_tensor(q: &TensorI, spec: &QuantSpec) -> TensorF {
+    q.map(|v| spec.dequantize(v as i64) as f32)
+}
+
+/// max|t| — the statistic NEMO's reset_alpha_weights uses for beta_w.
+pub fn max_abs(t: &TensorF) -> f64 {
+    let m = t.data().iter().fold(0f32, |m, x| m.max(x.abs()));
+    if m == 0.0 {
+        1.0
+    } else {
+        m as f64
+    }
+}
+
+/// max(t) — calibration statistic for activation beta_y (sec. 2).
+pub fn max_val(t: &TensorF) -> f64 {
+    let m = t.data().iter().fold(f32::NEG_INFINITY, |m, x| m.max(*x));
+    if m <= 0.0 {
+        1.0
+    } else {
+        m as f64
+    }
+}
+
+/// Integer image of an input in [0,1) at eps_in = 1/255 (sec. 3.7).
+pub fn quantize_input(x: &TensorF, eps_in: f64) -> TensorI {
+    let hi = (1.0 / eps_in).round() as i64;
+    x.map(|v| ((v as f64 / eps_in).floor() as i64).clamp(0, hi) as i32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn activation_spec_8bit() {
+        let s = QuantSpec::activation(2.55, 8);
+        assert!((s.eps - 0.01).abs() < 1e-12);
+        assert_eq!((s.lo, s.hi), (0, 255));
+        assert_eq!(s.quantize(1.004), 100);
+        assert_eq!(s.quantize(-3.0), 0);
+        assert_eq!(s.quantize(99.0), 255);
+    }
+
+    #[test]
+    fn weight_spec_symmetric() {
+        let s = QuantSpec::weight(1.0, 8);
+        assert_eq!((s.lo, s.hi), (-128, 127));
+        assert_eq!(s.quantize(-1.0), -128);
+        assert_eq!(s.quantize(0.999), 127);
+        assert_eq!(s.quantize(0.0), 0);
+    }
+
+    #[test]
+    fn quantization_function_is_monotonic_pointwise_piecewise_constant() {
+        // Def. 2.2's requirements, checked as properties.
+        prop_check(200, |rng| {
+            let bits = [2u32, 4, 8][rng.int(0, 3) as usize];
+            let beta = rng.uniform(0.1, 10.0);
+            let s = QuantSpec::activation(beta, bits);
+            let a = rng.uniform(-2.0 * beta, 2.0 * beta);
+            let b = rng.uniform(-2.0 * beta, 2.0 * beta);
+            let (qa, qb) = (s.quantize(a), s.quantize(b));
+            if a <= b && qa > qb {
+                return Err(format!("not monotonic: Q({a})={qa} > Q({b})={qb}"));
+            }
+            // quantized version error bound inside the clip range
+            if a >= 0.0 && a < beta - s.eps {
+                let err = (a - s.fake_quantize(a)).abs();
+                if err > s.eps * (1.0 + 1e-12) {
+                    return Err(format!("error {err} > eps {}", s.eps));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fake_quantize_is_stable_within_one_quantum() {
+        // floor-based quantization is idempotent only up to one ulp of
+        // the division (q*eps)/eps; re-quantizing may drop at most one
+        // grid step (same behaviour as NEMO's floor-based PACT_QuantFunc).
+        prop_check(200, |rng| {
+            let s = QuantSpec::weight(rng.uniform(0.1, 5.0), 4);
+            let t = rng.normal(0.0, 2.0);
+            let once = s.fake_quantize(t);
+            let twice = s.fake_quantize(once);
+            if (once - twice).abs() > s.eps * (1.0 + 1e-12) {
+                return Err(format!("moved more than eps: {once} vs {twice}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn input_quantization() {
+        let x = Tensor::from_vec(&[3], vec![0.0f32, 0.5, 1.5]);
+        let q = quantize_input(&x, 1.0 / 255.0);
+        assert_eq!(q.data(), &[0, 127, 255]);
+    }
+}

@@ -1,0 +1,151 @@
+//! Requantization (Def. 3.1, Eq. 12-14): moving an integer image from one
+//! quantized space to another using only an integer multiply and an
+//! arithmetic right shift.
+
+use crate::tensor::TensorI;
+
+/// Smallest d with eps_a * 2^d >= factor * eps_b (Eq. 14 with
+/// eta = 1/factor). Exact doubling loop — identical to
+/// quantlib.choose_d so both languages derive the same d.
+pub fn choose_d(eps_a: f64, eps_b: f64, requantization_factor: u32) -> u32 {
+    assert!(eps_a > 0.0 && eps_b > 0.0, "quanta must be positive");
+    const D_MAX: u32 = 40;
+    let target = requantization_factor as f64 * eps_b;
+    let mut d = 0u32;
+    let mut p = eps_a;
+    while p < target && d < D_MAX {
+        p *= 2.0;
+        d += 1;
+    }
+    d
+}
+
+/// m = floor(eps_a * 2^d / eps_b) (Eq. 13).
+pub fn multiplier(eps_a: f64, eps_b: f64, d: u32) -> i64 {
+    (eps_a * (1u64 << d) as f64 / eps_b).floor() as i64
+}
+
+/// Requantization parameters for one space transition.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Requant {
+    pub m: i64,
+    pub d: u32,
+    pub lo: i64,
+    pub hi: i64,
+}
+
+impl Requant {
+    /// Derive (m, d) from the source/target quanta and clip bounds
+    /// (Eq. 13-14). `factor` is NEMO's requantization_factor (1/eta):
+    /// 16 for activations, 256 for Adds.
+    pub fn derive(eps_a: f64, eps_b: f64, factor: u32, lo: i64, hi: i64) -> Self {
+        let d = choose_d(eps_a, eps_b, factor);
+        Requant { m: multiplier(eps_a, eps_b, d), d, lo, hi }
+    }
+
+    /// clip((m * q) >> d, lo, hi). The shift is arithmetic (floor toward
+    /// -inf), matching Eq. 13's floor for negative values.
+    #[inline]
+    pub fn apply(&self, q: i64) -> i64 {
+        (((self.m * q) >> self.d) as i64).clamp(self.lo, self.hi)
+    }
+
+    /// Requantize a whole integer tensor.
+    pub fn apply_tensor(&self, q: &TensorI) -> TensorI {
+        q.map(|v| self.apply(v as i64) as i32)
+    }
+
+    /// The real-valued ratio this requant approximates.
+    pub fn approx_ratio(&self) -> f64 {
+        self.m as f64 / (1u64 << self.d) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn eq14_bound_and_minimality() {
+        prop_check(500, |rng| {
+            let eps_a = (-rng.uniform(2.0, 14.0)).exp2();
+            let eps_b = (-rng.uniform(1.0, 10.0)).exp2();
+            let factor = [16u32, 64, 256][rng.int(0, 3) as usize];
+            let d = choose_d(eps_a, eps_b, factor);
+            if d >= 40 {
+                return Ok(()); // saturated
+            }
+            if eps_a * ((1u64 << d) as f64) < factor as f64 * eps_b {
+                return Err(format!("bound violated: d={d}"));
+            }
+            if d > 0 && eps_a * ((1u64 << (d - 1)) as f64) >= factor as f64 * eps_b {
+                return Err(format!("not minimal: d={d}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn relative_error_bounded_by_eta() {
+        // |eps_a/eps_b - m/2^d| / (eps_a/eps_b) <= 1/factor (sec. 3.2)
+        prop_check(500, |rng| {
+            let eps_a = rng.uniform(1e-7, 1e-1);
+            let eps_b = rng.uniform(1e-7, 1e-1);
+            let factor = 16u32;
+            let d = choose_d(eps_a, eps_b, factor);
+            if d >= 40 {
+                return Ok(());
+            }
+            let m = multiplier(eps_a, eps_b, d);
+            let ratio = eps_a / eps_b;
+            let approx = m as f64 / (1u64 << d) as f64;
+            let rel = (ratio - approx).abs() / ratio;
+            if rel > 1.0 / factor as f64 + 1e-12 {
+                return Err(format!("rel err {rel} > 1/{factor}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn arithmetic_shift_floors_negatives() {
+        let rq = Requant { m: 1, d: 8, lo: -100, hi: 100 };
+        assert_eq!(rq.apply(-1), -1);
+        assert_eq!(rq.apply(-256), -1);
+        assert_eq!(rq.apply(-257), -2);
+        assert_eq!(rq.apply(255), 0);
+        assert_eq!(rq.apply(256), 1);
+    }
+
+    #[test]
+    fn requant_approximates_ideal_scaling() {
+        // RQ(q) ~ q * eps_a/eps_b within |q|/D + 1 (sec. 3.2 error bound).
+        prop_check(300, |rng| {
+            let eps_a = rng.uniform(1e-6, 1e-2);
+            let eps_b = rng.uniform(1e-4, 1e-1);
+            let rq = Requant::derive(eps_a, eps_b, 16, i64::MIN, i64::MAX);
+            let q = rng.int(-(1 << 24), 1 << 24);
+            let got = rq.apply(q) as f64;
+            let ideal = q as f64 * eps_a / eps_b;
+            let bound = (q.abs() as f64) / (1u64 << rq.d) as f64 + 1.0;
+            if (got - ideal).abs() > bound {
+                return Err(format!(
+                    "ideal {ideal} got {got} bound {bound} (m={} d={})",
+                    rq.m, rq.d
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn derive_matches_python_constants() {
+        // One pinned case also present in goldens (belt and braces).
+        let d = choose_d(3.1e-5, 0.02, 16);
+        let m = multiplier(3.1e-5, 0.02, d);
+        // 0.02*16/3.1e-5 = 10322.6 -> 2^14 = 16384 -> d = 14
+        assert_eq!(d, 14);
+        assert_eq!(m, (3.1e-5 * 16384.0f64 / 0.02) as i64);
+    }
+}

@@ -1,0 +1,233 @@
+//! PJRT runtime (S6): loads the AOT-compiled HLO-text artifacts emitted by
+//! `python/compile/aot.py` and executes them on the PJRT CPU client.
+//!
+//! HLO *text* is the interchange format: jax >= 0.5 serializes
+//! HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+//! rejects; the text parser reassigns ids and round-trips cleanly (see
+//! /opt/xla-example/README.md and DESIGN.md).
+//!
+//! All modules are lowered with `return_tuple=True`, so outputs always
+//! arrive as one tuple literal that [`Executable::run`] decomposes.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::io::{ArtifactSpec, Manifest};
+use crate::tensor::{Tensor, TensorF, TensorI};
+
+/// A host-side value crossing the PJRT boundary.
+#[derive(Clone, Debug)]
+pub enum Arg {
+    F32(TensorF),
+    I32(TensorI),
+}
+
+impl Arg {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Arg::F32(t) => t.shape(),
+            Arg::I32(t) => t.shape(),
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&TensorF> {
+        match self {
+            Arg::F32(t) => Ok(t),
+            Arg::I32(_) => bail!("expected f32 tensor, got i32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&TensorI> {
+        match self {
+            Arg::I32(t) => Ok(t),
+            Arg::F32(_) => bail!("expected i32 tensor, got f32"),
+        }
+    }
+}
+
+impl From<TensorF> for Arg {
+    fn from(t: TensorF) -> Self {
+        Arg::F32(t)
+    }
+}
+
+impl From<TensorI> for Arg {
+    fn from(t: TensorI) -> Self {
+        Arg::I32(t)
+    }
+}
+
+fn to_literal(a: &Arg) -> Result<xla::Literal> {
+    let dims: Vec<i64> = a.shape().iter().map(|d| *d as i64).collect();
+    let lit = match a {
+        Arg::F32(t) => xla::Literal::vec1(t.data()).reshape(&dims)?,
+        Arg::I32(t) => xla::Literal::vec1(t.data()).reshape(&dims)?,
+    };
+    Ok(lit)
+}
+
+fn from_literal(lit: &xla::Literal) -> Result<Arg> {
+    let shape = lit.array_shape().context("output literal shape")?;
+    let dims: Vec<usize> = shape.dims().iter().map(|d| *d as usize).collect();
+    match shape.ty() {
+        xla::ElementType::F32 => {
+            let v = lit.to_vec::<f32>()?;
+            Ok(Arg::F32(Tensor::from_vec(&dims, v)))
+        }
+        xla::ElementType::S32 => {
+            let v = lit.to_vec::<i32>()?;
+            Ok(Arg::I32(Tensor::from_vec(&dims, v)))
+        }
+        ty => bail!("unsupported output element type {ty:?}"),
+    }
+}
+
+/// A compiled artifact bound to its argument specification.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+// SAFETY: the PJRT C API guarantees PJRT_Client and PJRT_LoadedExecutable
+// are thread-safe for concurrent Execute calls. The `xla` crate wraps them
+// in `Rc` + raw pointers (hence !Send/!Sync), but this crate never clones
+// the inner Rc across threads: `Executable` is shared via `Arc`, the Rc
+// refcount is only touched at construction (runtime thread) and at final
+// drop (after worker threads have joined — the Runtime cache outlives all
+// workers). Concurrent `run()` only calls Execute, which is thread-safe.
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+impl Executable {
+    /// Execute with positional arguments; validates shapes/dtypes against
+    /// the manifest before crossing the FFI boundary.
+    pub fn run(&self, args: &[Arg]) -> Result<Vec<Arg>> {
+        ensure!(
+            args.len() == self.spec.args.len(),
+            "{}: got {} args, manifest says {}",
+            self.spec.name,
+            args.len(),
+            self.spec.args.len()
+        );
+        for (a, s) in args.iter().zip(&self.spec.args) {
+            ensure!(
+                a.shape() == &s.shape[..],
+                "{}: arg '{}' shape {:?} != manifest {:?}",
+                self.spec.name,
+                s.name,
+                a.shape(),
+                s.shape
+            );
+            let ok = matches!(
+                (a, s.dtype.as_str()),
+                (Arg::F32(_), "float32") | (Arg::I32(_), "int32")
+            );
+            ensure!(ok, "{}: arg '{}' dtype mismatch ({})", self.spec.name, s.name, s.dtype);
+        }
+        let lits: Vec<xla::Literal> =
+            args.iter().map(to_literal).collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&lits)?[0][0]
+            .to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        ensure!(
+            outs.len() == self.spec.n_outputs,
+            "{}: got {} outputs, manifest says {}",
+            self.spec.name,
+            outs.len(),
+            self.spec.n_outputs
+        );
+        outs.iter().map(from_literal).collect()
+    }
+}
+
+/// PJRT CPU runtime with a compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+// The xla PJRT CPU client is internally synchronized; executables are
+// immutable after compilation. We gate shared access through Arc anyway.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    /// Create a CPU runtime over an artifacts directory.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact by manifest name (cached).
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.find(name)?.clone();
+        let path = spec.file.to_str().context("artifact path utf8")?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        let arc = std::sync::Arc::new(Executable { spec, exe });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), arc.clone());
+        Ok(arc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::artifacts_dir;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        Some(Runtime::new(dir).unwrap())
+    }
+
+    #[test]
+    fn kernel_qgemm_roundtrip() {
+        let Some(rt) = runtime() else { return };
+        let exe = rt.load("kernel_qgemm_256").unwrap();
+        let a = TensorI::full(&[256, 256], 2);
+        let b = TensorI::full(&[256, 256], 3);
+        let out = exe.run(&[a.into(), b.into()]).unwrap();
+        let y = out[0].as_i32().unwrap();
+        assert_eq!(y.shape(), &[256, 256]);
+        assert!(y.data().iter().all(|v| *v == 2 * 3 * 256));
+    }
+
+    #[test]
+    fn arg_validation_catches_mistakes() {
+        let Some(rt) = runtime() else { return };
+        let exe = rt.load("kernel_qgemm_256").unwrap();
+        // wrong count
+        assert!(exe.run(&[]).is_err());
+        // wrong shape
+        let a = TensorI::full(&[4, 4], 1);
+        let b = TensorI::full(&[256, 256], 1);
+        assert!(exe.run(&[a.into(), b.clone().into()]).is_err());
+        // wrong dtype
+        let af = TensorF::full(&[256, 256], 1.0);
+        assert!(exe.run(&[af.into(), b.into()]).is_err());
+    }
+}

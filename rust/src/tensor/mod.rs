@@ -1,0 +1,260 @@
+//! Dense row-major tensor substrate (S1 in DESIGN.md).
+//!
+//! The offline vendor set has no `ndarray`, so the engines run on this
+//! small, fully-tested implementation. Two element types are used across
+//! the crate: `f32` for FullPrecision/FakeQuantized/QuantizedDeployable
+//! values and `i32` for IntegerDeployable integer images (with `i64`
+//! widening inside the ops that need it, mirroring the Pallas kernels).
+
+pub mod ops;
+
+use std::fmt;
+
+#[derive(Clone, PartialEq)]
+pub struct Tensor<T> {
+    shape: Vec<usize>,
+    data: Vec<T>,
+}
+
+pub type TensorF = Tensor<f32>;
+pub type TensorI = Tensor<i32>;
+
+impl<T: Copy + Default> Tensor<T> {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![T::default(); n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<T>) -> Self {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, data.len(), "shape {:?} != data len {}", shape, data.len());
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn full(shape: &[usize], v: T) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    pub fn scalar(v: T) -> Self {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    #[inline]
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    #[inline]
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<T> {
+        self.data
+    }
+
+    /// Reshape without moving data (total size must match).
+    pub fn reshape(&self, shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, self.data.len(), "reshape {:?} -> {:?}", self.shape, shape);
+        Tensor { shape: shape.to_vec(), data: self.data.clone() }
+    }
+
+    pub fn into_reshape(mut self, shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> T {
+        debug_assert_eq!(self.ndim(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    #[inline]
+    pub fn at4(&self, n: usize, c: usize, h: usize, w: usize) -> T {
+        debug_assert_eq!(self.ndim(), 4);
+        let (sc, sh, sw) = (self.shape[1], self.shape[2], self.shape[3]);
+        self.data[((n * sc + c) * sh + h) * sw + w]
+    }
+
+    #[inline]
+    pub fn set4(&mut self, n: usize, c: usize, h: usize, w: usize, v: T) {
+        let (sc, sh, sw) = (self.shape[1], self.shape[2], self.shape[3]);
+        self.data[((n * sc + c) * sh + h) * sw + w] = v;
+    }
+
+    pub fn map<U: Copy + Default>(&self, f: impl Fn(T) -> U) -> Tensor<U> {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|x| f(*x)).collect(),
+        }
+    }
+
+    /// Batch-slice of a 4-D (NCHW) or 2-D tensor: rows [lo, hi).
+    pub fn slice_batch(&self, lo: usize, hi: usize) -> Self {
+        assert!(!self.shape.is_empty() && hi <= self.shape[0] && lo <= hi);
+        let row: usize = self.shape[1..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[0] = hi - lo;
+        Tensor { shape, data: self.data[lo * row..hi * row].to_vec() }
+    }
+
+    /// Concatenate along axis 0.
+    pub fn cat_batch(parts: &[&Tensor<T>]) -> Self {
+        assert!(!parts.is_empty());
+        let inner = &parts[0].shape[1..];
+        let mut shape = parts[0].shape.clone();
+        shape[0] = parts.iter().map(|p| p.shape[0]).sum();
+        let mut data = Vec::with_capacity(shape.iter().product());
+        for p in parts {
+            assert_eq!(&p.shape[1..], inner, "cat_batch shape mismatch");
+            data.extend_from_slice(&p.data);
+        }
+        Tensor { shape, data }
+    }
+}
+
+impl Tensor<f32> {
+    pub fn from_f64(shape: &[usize], data: &[f64]) -> Self {
+        Tensor::from_vec(shape, data.iter().map(|x| *x as f32).collect())
+    }
+
+    pub fn allclose(&self, other: &Self, atol: f32, rtol: f32) -> bool {
+        self.shape == other.shape
+            && self
+                .data
+                .iter()
+                .zip(&other.data)
+                .all(|(a, b)| (a - b).abs() <= atol + rtol * b.abs())
+    }
+
+    pub fn max_abs_diff(&self, other: &Self) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+impl Tensor<i32> {
+    /// Per-row argmax of a [N, C] tensor (integer images preserve order,
+    /// sec. 3.6, so classification works directly on Q(logits)).
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        assert_eq!(self.ndim(), 2);
+        let c = self.shape[1];
+        self.data
+            .chunks(c)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by_key(|(_, v)| **v)
+                    .map(|(i, _)| i)
+                    .unwrap()
+            })
+            .collect()
+    }
+}
+
+impl Tensor<f32> {
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        assert_eq!(self.ndim(), 2);
+        let c = self.shape[1];
+        self.data
+            .chunks(c)
+            .map(|row| {
+                let mut best = 0;
+                for (i, v) in row.iter().enumerate() {
+                    if *v > row[best] {
+                        best = i;
+                    }
+                }
+                best
+            })
+            .collect()
+    }
+}
+
+impl<T: fmt::Debug + Copy + Default> fmt::Debug for Tensor<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}", self.shape)?;
+        if self.len() <= 16 {
+            write!(f, " {:?}", self.data)
+        } else {
+            write!(f, " [{:?}, {:?}, ...]", self.data[0], self.data[1])
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_index() {
+        let t = Tensor::from_vec(&[2, 3], vec![1, 2, 3, 4, 5, 6]);
+        assert_eq!(t.at2(1, 2), 6);
+        assert_eq!(t.shape(), &[2, 3]);
+    }
+
+    #[test]
+    fn at4_layout_is_nchw() {
+        let mut t = Tensor::<i32>::zeros(&[2, 3, 4, 5]);
+        t.set4(1, 2, 3, 4, 99);
+        assert_eq!(t.at4(1, 2, 3, 4), 99);
+        assert_eq!(t.data()[t.len() - 1], 99); // last element
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        Tensor::from_vec(&[2, 2], vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn slice_and_cat_roundtrip() {
+        let t = Tensor::from_vec(&[4, 2], (0..8).collect());
+        let a = t.slice_batch(0, 1);
+        let b = t.slice_batch(1, 4);
+        let back = Tensor::cat_batch(&[&a, &b]);
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn argmax_rows_int() {
+        let t = Tensor::from_vec(&[2, 3], vec![1, 5, 2, -7, -3, -9]);
+        assert_eq!(t.argmax_rows(), vec![1, 1]);
+    }
+
+    #[test]
+    fn allclose() {
+        let a = Tensor::from_vec(&[2], vec![1.0f32, 2.0]);
+        let b = Tensor::from_vec(&[2], vec![1.0f32, 2.0 + 1e-6]);
+        assert!(a.allclose(&b, 1e-5, 0.0));
+        assert!(!a.allclose(&b, 1e-8, 0.0));
+    }
+}

@@ -1,0 +1,191 @@
+//! QAT training driver (S8): runs the AOT-compiled train-step artifacts
+//! (FullPrecision or FakeQuantized/STE) from Rust — Python authored the
+//! graph once at build time and is not in the loop.
+//!
+//! The FQ train step implements the paper's quantization-aware training
+//! (sec. 2.2): PACT fake-quantization in forward, STE gradients backward,
+//! trainable clipping bounds beta.
+
+use anyhow::{ensure, Context, Result};
+
+use crate::data::SynthDigits;
+use crate::model::artifact_args::{synthnet_fp_args, synthnet_fq_args};
+use crate::model::synthnet::SynthNet;
+use crate::runtime::Runtime;
+use crate::tensor::{Tensor, TensorF};
+
+#[derive(Clone, Copy, Debug)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub lr: f64,
+    /// linear LR decay to lr*0.1 over the run
+    pub lr_decay: bool,
+    pub seed: u64,
+    /// log every n steps (0 = silent)
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig { steps: 300, lr: 0.05, lr_decay: true, seed: 1, log_every: 50 }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct TrainReport {
+    pub losses: Vec<f64>,
+    pub steps: usize,
+}
+
+impl TrainReport {
+    pub fn final_loss(&self) -> f64 {
+        self.losses.last().copied().unwrap_or(f64::NAN)
+    }
+
+    /// Mean loss over the first/last k steps (loss-curve summary).
+    pub fn head_tail(&self, k: usize) -> (f64, f64) {
+        let k = k.min(self.losses.len());
+        let head = self.losses[..k].iter().sum::<f64>() / k as f64;
+        let tail = self.losses[self.losses.len() - k..].iter().sum::<f64>() / k as f64;
+        (head, tail)
+    }
+}
+
+/// The batch size all train artifacts were lowered with.
+pub const TRAIN_BATCH: usize = 32;
+
+/// Train in FullPrecision via the `synthnet_fp_train_b32` artifact.
+/// Mutates `net` in place; returns the loss curve.
+pub fn train_fp(
+    rt: &Runtime,
+    net: &mut SynthNet,
+    data: &mut SynthDigits,
+    cfg: &TrainConfig,
+) -> Result<TrainReport> {
+    let exe = rt.load("synthnet_fp_train_b32")?;
+    let n_params = net.param_list().len();
+    let n_state = net.bn_state_list().len();
+    let mut report = TrainReport::default();
+    for step in 0..cfg.steps {
+        let (x, labels) = data.batch(TRAIN_BATCH);
+        let y: Vec<i32> = labels.iter().map(|l| *l as i32).collect();
+        let lr = effective_lr(cfg, step);
+        let mut args = synthnet_fp_args(net);
+        args.push(x.into());
+        args.push(Tensor::from_vec(&[TRAIN_BATCH], y).into());
+        args.push(TensorF::scalar(lr as f32).into());
+        let outs = exe.run(&args).context("fp train step")?;
+        ensure!(outs.len() == n_params + n_state + 1);
+        let params: Vec<TensorF> =
+            outs[..n_params].iter().map(|a| a.as_f32().unwrap().clone()).collect();
+        let state: Vec<TensorF> = outs[n_params..n_params + n_state]
+            .iter()
+            .map(|a| a.as_f32().unwrap().clone())
+            .collect();
+        let loss = outs.last().unwrap().as_f32()?.data()[0] as f64;
+        net.update_from_flat(&params, &state, None)?;
+        report.losses.push(loss);
+        report.steps += 1;
+        if cfg.log_every > 0 && step % cfg.log_every == 0 {
+            eprintln!("[fp  step {step:4}] loss = {loss:.4} lr = {lr:.4}");
+        }
+    }
+    Ok(report)
+}
+
+/// QAT fine-tuning via the `synthnet_fq_train_w{W}a{A}_b32` artifact.
+/// Trains weights, BN parameters AND the PACT act betas (STE, sec. 2.2).
+pub fn train_fq(
+    rt: &Runtime,
+    net: &mut SynthNet,
+    data: &mut SynthDigits,
+    wbits: u32,
+    abits: u32,
+    cfg: &TrainConfig,
+) -> Result<TrainReport> {
+    let name = format!("synthnet_fq_train_w{wbits}a{abits}_b32");
+    let exe = rt.load(&name)?;
+    let n_params = net.param_list().len();
+    let n_state = net.bn_state_list().len();
+    let n_betas = net.act_betas.len();
+    let mut report = TrainReport::default();
+    for step in 0..cfg.steps {
+        let (x, labels) = data.batch(TRAIN_BATCH);
+        let y: Vec<i32> = labels.iter().map(|l| *l as i32).collect();
+        let lr = effective_lr(cfg, step);
+        let mut args = synthnet_fq_args(net);
+        args.push(x.into());
+        args.push(Tensor::from_vec(&[TRAIN_BATCH], y).into());
+        args.push(TensorF::scalar(lr as f32).into());
+        let outs = exe.run(&args).with_context(|| name.clone())?;
+        ensure!(outs.len() == n_params + n_state + n_betas + 1);
+        let params: Vec<TensorF> =
+            outs[..n_params].iter().map(|a| a.as_f32().unwrap().clone()).collect();
+        let state: Vec<TensorF> = outs[n_params..n_params + n_state]
+            .iter()
+            .map(|a| a.as_f32().unwrap().clone())
+            .collect();
+        let betas: Vec<TensorF> = outs[n_params + n_state..n_params + n_state + n_betas]
+            .iter()
+            .map(|a| a.as_f32().unwrap().clone())
+            .collect();
+        let loss = outs.last().unwrap().as_f32()?.data()[0] as f64;
+        net.update_from_flat(&params, &state, Some(&betas))?;
+        report.losses.push(loss);
+        report.steps += 1;
+        if cfg.log_every > 0 && step % cfg.log_every == 0 {
+            eprintln!("[fq{wbits} step {step:4}] loss = {loss:.4} lr = {lr:.4}");
+        }
+    }
+    Ok(report)
+}
+
+fn effective_lr(cfg: &TrainConfig, step: usize) -> f64 {
+    if cfg.lr_decay && cfg.steps > 1 {
+        let f = step as f64 / (cfg.steps - 1) as f64;
+        cfg.lr * (1.0 - 0.9 * f)
+    } else {
+        cfg.lr
+    }
+}
+
+/// Evaluate classification accuracy of a float graph on (x, labels).
+pub fn eval_float(
+    g: &crate::graph::Graph,
+    x: &TensorF,
+    labels: &[usize],
+) -> f64 {
+    let out = crate::engine::FloatEngine::new().run(g, x);
+    crate::data::accuracy(&out.argmax_rows(), labels)
+}
+
+/// Evaluate accuracy of an IntegerDeployable graph via the integer engine.
+pub fn eval_integer(
+    g: &crate::graph::int::IntGraph,
+    x: &TensorF,
+    labels: &[usize],
+    eps_in: f64,
+) -> f64 {
+    let qx = crate::quant::quantize_input(x, eps_in);
+    let out = crate::engine::IntegerEngine::new().run(g, &qx);
+    crate::data::accuracy(&out.argmax_rows(), labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_decays_linearly() {
+        let cfg = TrainConfig { steps: 11, lr: 1.0, lr_decay: true, ..Default::default() };
+        assert!((effective_lr(&cfg, 0) - 1.0).abs() < 1e-12);
+        assert!((effective_lr(&cfg, 10) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn report_head_tail() {
+        let r = TrainReport { losses: vec![4.0, 3.0, 2.0, 1.0], steps: 4 };
+        let (h, t) = r.head_tail(2);
+        assert_eq!((h, t), (3.5, 1.5));
+    }
+}

@@ -1,0 +1,89 @@
+//! Activation calibration: set each PACT clipping bound beta_y to the max
+//! value of y observed in the FullPrecision stage (paper sec. 2,
+//! "In NEMO": beta "can be set to the maximum value of y in the
+//! FullPrecision stage").
+
+use crate::engine::FloatEngine;
+use crate::graph::Graph;
+use crate::tensor::TensorF;
+
+/// Run the float graph over calibration batches and return, for each
+/// activation node (in [`Graph::activations`] order), the maximum output
+/// value observed (floored at a tiny positive value so eps_y > 0).
+pub fn calibrate(g: &Graph, batches: &[TensorF]) -> Vec<f64> {
+    let engine = FloatEngine::new();
+    let acts = g.activations();
+    let mut betas = vec![1e-6f64; acts.len()];
+    for x in batches {
+        let trace = engine.run_traced(g, x);
+        for (ai, &node) in acts.iter().enumerate() {
+            let m = trace[node]
+                .data()
+                .iter()
+                .fold(f32::NEG_INFINITY, |m, v| m.max(*v)) as f64;
+            if m > betas[ai] {
+                betas[ai] = m;
+            }
+        }
+    }
+    betas
+}
+
+/// Percentile calibration: beta_y = the q-quantile of each activation's
+/// outputs over the calibration batches. NEMO's policy is max (q = 1.0);
+/// percentiles are far more robust to the single-outlier-channel problem
+/// on trained networks (documented deviation, DESIGN.md sec. 5) — the
+/// clipped tail is exactly what PACT's trainable beta would learn to cut.
+pub fn calibrate_percentile(g: &Graph, batches: &[TensorF], q: f64) -> Vec<f64> {
+    if q >= 1.0 {
+        return calibrate(g, batches);
+    }
+    let engine = FloatEngine::new();
+    let acts = g.activations();
+    let mut collected: Vec<Vec<f32>> = vec![Vec::new(); acts.len()];
+    for x in batches {
+        let trace = engine.run_traced(g, x);
+        for (ai, &node) in acts.iter().enumerate() {
+            collected[ai].extend_from_slice(trace[node].data());
+        }
+    }
+    collected
+        .into_iter()
+        .map(|mut vals| {
+            vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            if vals.is_empty() {
+                return 1.0;
+            }
+            let idx = ((vals.len() - 1) as f64 * q).round() as usize;
+            (vals[idx] as f64).max(1e-6)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Op;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn calibration_tracks_max() {
+        let mut g = Graph::new(1.0);
+        let x = g.push("in", Op::Input { shape: vec![2] }, &[]);
+        g.push("act", Op::ReLU, &[x]);
+        let b1 = Tensor::from_vec(&[1, 2], vec![0.5f32, -1.0]);
+        let b2 = Tensor::from_vec(&[1, 2], vec![3.25f32, 0.0]);
+        let betas = calibrate(&g, &[b1, b2]);
+        assert_eq!(betas, vec![3.25f64]);
+    }
+
+    #[test]
+    fn all_negative_gives_positive_floor() {
+        let mut g = Graph::new(1.0);
+        let x = g.push("in", Op::Input { shape: vec![2] }, &[]);
+        g.push("act", Op::ReLU, &[x]);
+        let b = Tensor::from_vec(&[1, 2], vec![-1.0f32, -2.0]);
+        let betas = calibrate(&g, &[b]);
+        assert!(betas[0] > 0.0);
+    }
+}

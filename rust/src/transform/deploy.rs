@@ -1,0 +1,727 @@
+//! The QuantizedDeployable / IntegerDeployable transform (paper sec. 3).
+//!
+//! Takes a FakeQuantized graph (PACT activations everywhere) and produces
+//! BOTH deployment representations in one walk:
+//!
+//! * a QD float graph — hardened weights, quantized BN (`QuantBn`),
+//!   Eq. 10 activations; every tensor value lies on its quantized grid;
+//! * an ID integer graph — integer images only, with per-layer
+//!   requantization parameters (Eq. 11/13/14), integer BN (Eq. 22) or
+//!   exact thresholds (Eq. 19-20), integer AvgPool (Eq. 25) and
+//!   requantizing Adds (Eq. 24).
+//!
+//! The walk also performs the paper's `set_deployment` eps propagation
+//! and an integer *range analysis*: worst-case accumulator magnitudes are
+//! tracked per node and any i32 overflow aborts the transform — this is
+//! the safety contract the Pallas kernels and the integer engine rely on
+//! for their checked narrowing.
+
+use super::TransformError;
+use crate::graph::int::{IntGraph, IntOp};
+use crate::graph::{Graph, NodeId, Op};
+use crate::quant::bn::{BnQuant, Thresholds};
+use crate::quant::requant::Requant;
+use crate::quant::{harden_tensor, max_abs, quantize_tensor, QuantSpec};
+use crate::tensor::{Tensor, TensorI};
+
+#[derive(Clone, Copy, Debug)]
+pub struct DeployOptions {
+    pub wbits: u32,
+    pub abits: u32,
+    /// BN kappa quantizer bits (sec. 3.4; 8 keeps kappa*phi inside i32).
+    pub kappa_bits: u32,
+    /// 1/eta for activations (NEMO PACT_IntegerAct default: 16).
+    pub requant_factor: u32,
+    /// 1/eta for Add branches (NEMO PACT_IntegerAdd default: 256).
+    pub add_requant_factor: u32,
+    /// Merge BN+act into exact integer thresholds (Eq. 19-20) instead of
+    /// IntBn+RequantAct. Paper: best when 2^abits is small.
+    pub use_thresholds: bool,
+    /// Static d of the integer AvgPool (Eq. 25).
+    pub pool_d: u32,
+}
+
+impl Default for DeployOptions {
+    fn default() -> Self {
+        DeployOptions {
+            wbits: 8,
+            abits: 8,
+            kappa_bits: 8,
+            requant_factor: 16,
+            add_requant_factor: 256,
+            use_thresholds: false,
+            pool_d: 12,
+        }
+    }
+}
+
+/// Per-layer quantization record (mirrors python deploy.LayerQuant; used
+/// for reporting and for assembling PJRT artifact arguments).
+#[derive(Clone, Debug)]
+pub struct LayerQuant {
+    pub name: String,
+    pub beta_w: f64,
+    pub eps_w: f64,
+    pub eps_phi: f64,
+    pub eps_kappa: f64,
+    pub eps_phi_out: f64,
+    pub beta_y: f64,
+    pub eps_y: f64,
+    pub d: u32,
+    pub m: i64,
+    pub act_hi: i64,
+}
+
+/// Result of the deployment transform.
+#[derive(Clone, Debug)]
+pub struct Deployed {
+    pub qd: Graph,
+    pub id: IntGraph,
+    pub layers: Vec<LayerQuant>,
+    pub eps_out: f64,
+    /// Worst-case integer magnitude seen at each ID node (range analysis).
+    pub worst_case: Vec<i64>,
+    /// Quantum of each ID node's output (diagnostics: real ~ eps * Q).
+    pub node_eps: Vec<f64>,
+}
+
+#[derive(Clone, Copy, Debug)]
+enum ShapeInfo {
+    Chw(usize, usize, usize),
+    #[allow(dead_code)]
+    Flat(usize),
+}
+
+/// Node state carried through the eps-propagation walk.
+#[derive(Clone, Debug)]
+struct NodeState {
+    /// quantum of this node's output integer image
+    eps: f64,
+    /// integer image value bounds (inclusive)
+    qmin: i64,
+    qmax: i64,
+    shape: ShapeInfo,
+    id_node: NodeId,
+    /// BN parameters still pending a threshold merge
+    pending_bn: Option<(crate::quant::bn::BnParams, f64)>,
+}
+
+pub fn deploy(g: &Graph, opts: DeployOptions) -> Result<Deployed, TransformError> {
+    g.validate()?;
+    let mut qd = Graph::new(g.eps_in);
+    let mut id = IntGraph::default();
+    let mut layers = Vec::new();
+    let mut states: Vec<Option<NodeState>> = vec![None; g.nodes.len()];
+    let mut qd_map: Vec<NodeId> = vec![usize::MAX; g.nodes.len()];
+    let mut worst_case: Vec<i64> = Vec::new();
+    let n_act = (1i64 << opts.abits) - 1;
+
+    for n in &g.nodes {
+        let st = match &n.op {
+            Op::Input { shape } => {
+                let spec = g.input_spec();
+                qd_map[n.id] = qd.push(&n.name, n.op.clone(), &[]);
+                let id_node = id.push(
+                    &n.name,
+                    IntOp::Input { shape: shape.clone(), spec },
+                    &[],
+                );
+                let sh = match shape.len() {
+                    3 => ShapeInfo::Chw(shape[0], shape[1], shape[2]),
+                    1 => ShapeInfo::Flat(shape[0]),
+                    d => {
+                        let _ = d;
+                        return Err(TransformError::Unsupported("deploy", "input rank"));
+                    }
+                };
+                NodeState {
+                    eps: spec.eps,
+                    qmin: spec.lo,
+                    qmax: spec.hi,
+                    shape: sh,
+                    id_node,
+                    pending_bn: None,
+                }
+            }
+            Op::Conv2d { w, bias, stride, pad } => {
+                let prev = states[n.inputs[0]].as_ref().unwrap().clone();
+                let spec = QuantSpec::weight(max_abs(w), opts.wbits);
+                let w_hat = harden_tensor(w, &spec);
+                let wq_oihw = quantize_tensor(w, &spec);
+                let eps_phi = spec.eps * prev.eps;
+                let (co, ci, kh, kw) =
+                    (w.shape()[0], w.shape()[1], w.shape()[2], w.shape()[3]);
+                // OIHW -> [C_in*KH*KW, C_out] (artifact layout)
+                let mut wmat = vec![0i32; ci * kh * kw * co];
+                for o in 0..co {
+                    for i in 0..ci {
+                        for y in 0..kh {
+                            for z in 0..kw {
+                                wmat[(i * kh * kw + y * kw + z) * co + o] =
+                                    wq_oihw.data()[((o * ci + i) * kh + y) * kw + z];
+                            }
+                        }
+                    }
+                }
+                let wq = Tensor::from_vec(&[ci * kh * kw, co], wmat);
+                let bias_q: Option<Vec<i64>> = bias.as_ref().map(|b| {
+                    b.iter().map(|v| (v / eps_phi).floor() as i64).collect()
+                });
+                let b_hat: Option<Vec<f64>> = bias_q
+                    .as_ref()
+                    .map(|bq| bq.iter().map(|q| *q as f64 * eps_phi).collect());
+                // range analysis per output channel
+                let (qmin, qmax) =
+                    conv_range(&wq, prev.qmin, prev.qmax, bias_q.as_deref());
+                check_range(&n.name, qmin, qmax)?;
+                let (h, wd) = match prev.shape {
+                    ShapeInfo::Chw(_, h, w) => (h, w),
+                    _ => return Err(TransformError::Unsupported("deploy", "conv on flat")),
+                };
+                let oh = (h + 2 * pad - kh) / stride + 1;
+                let ow = (wd + 2 * pad - kw) / stride + 1;
+                qd_map[n.id] = qd.push(
+                    &n.name,
+                    Op::Conv2d {
+                        w: w_hat,
+                        bias: b_hat,
+                        stride: *stride,
+                        pad: *pad,
+                    },
+                    &[qd_map[n.inputs[0]]],
+                );
+                let id_node = id.push(
+                    &n.name,
+                    IntOp::ConvInt {
+                        wq,
+                        bias_q,
+                        cin: ci,
+                        kh,
+                        kw,
+                        stride: *stride,
+                        pad: *pad,
+                    },
+                    &[prev.id_node],
+                );
+                layers.push(LayerQuant {
+                    name: n.name.clone(),
+                    beta_w: max_abs(w),
+                    eps_w: spec.eps,
+                    eps_phi,
+                    eps_kappa: 1.0,
+                    eps_phi_out: eps_phi,
+                    beta_y: 0.0,
+                    eps_y: 0.0,
+                    d: 0,
+                    m: 0,
+                    act_hi: n_act,
+                });
+                NodeState {
+                    eps: eps_phi,
+                    qmin,
+                    qmax,
+                    shape: ShapeInfo::Chw(co, oh, ow),
+                    id_node,
+                    pending_bn: None,
+                }
+            }
+            Op::Linear { w, bias } => {
+                let prev = states[n.inputs[0]].as_ref().unwrap().clone();
+                let spec = QuantSpec::weight(max_abs(w), opts.wbits);
+                let w_hat = harden_tensor(w, &spec);
+                let wq = quantize_tensor(w, &spec);
+                let eps_phi = spec.eps * prev.eps;
+                let bias_q: Option<Vec<i64>> = bias.as_ref().map(|b| {
+                    b.iter().map(|v| (v / eps_phi).floor() as i64).collect()
+                });
+                let b_hat: Option<Vec<f64>> = bias_q
+                    .as_ref()
+                    .map(|bq| bq.iter().map(|q| *q as f64 * eps_phi).collect());
+                let (qmin, qmax) =
+                    linear_range(&wq, prev.qmin, prev.qmax, bias_q.as_deref());
+                check_range(&n.name, qmin, qmax)?;
+                let fo = w.shape()[1];
+                qd_map[n.id] = qd.push(
+                    &n.name,
+                    Op::Linear { w: w_hat, bias: b_hat },
+                    &[qd_map[n.inputs[0]]],
+                );
+                let id_node = id.push(
+                    &n.name,
+                    IntOp::LinearInt { wq, bias_q },
+                    &[prev.id_node],
+                );
+                layers.push(LayerQuant {
+                    name: n.name.clone(),
+                    beta_w: max_abs(w),
+                    eps_w: spec.eps,
+                    eps_phi,
+                    eps_kappa: 1.0,
+                    eps_phi_out: eps_phi,
+                    beta_y: 0.0,
+                    eps_y: 0.0,
+                    d: 0,
+                    m: 0,
+                    act_hi: n_act,
+                });
+                NodeState {
+                    eps: eps_phi,
+                    qmin,
+                    qmax,
+                    shape: ShapeInfo::Flat(fo),
+                    id_node,
+                    pending_bn: None,
+                }
+            }
+            Op::BatchNorm { bn } => {
+                let prev = states[n.inputs[0]].as_ref().unwrap().clone();
+                let bq = BnQuant::derive(bn, prev.eps, opts.kappa_bits);
+                let kappa_hat: Vec<f64> =
+                    bq.kappa_q.iter().map(|q| *q as f64 * bq.eps_kappa).collect();
+                let lambda_hat: Vec<f64> = bq
+                    .lambda_q
+                    .iter()
+                    .map(|q| *q as f64 * bq.eps_phi_out)
+                    .collect();
+                qd_map[n.id] = qd.push(
+                    &n.name,
+                    Op::QuantBn { kappa_hat, lambda_hat },
+                    &[qd_map[n.inputs[0]]],
+                );
+                // range: kappa*q + lambda, per channel extremes
+                let kmax = bq.kappa_q.iter().map(|k| (*k as i64).abs()).max().unwrap_or(0);
+                let lmax = bq.lambda_q.iter().map(|l| (*l as i64).abs()).max().unwrap_or(0);
+                let w = kmax * prev.qmax.abs().max(prev.qmin.abs()) + lmax;
+                check_range(&n.name, -w, w)?;
+                if let Some(l) = layers.last_mut() {
+                    l.eps_kappa = bq.eps_kappa;
+                    l.eps_phi_out = bq.eps_phi_out;
+                }
+                if opts.use_thresholds {
+                    // Defer: the following PactAct will absorb this BN into
+                    // exact integer thresholds (Eq. 19-20). ID graph gets
+                    // no node here.
+                    NodeState {
+                        eps: bq.eps_phi_out,
+                        qmin: -w,
+                        qmax: w,
+                        shape: prev.shape,
+                        id_node: prev.id_node,
+                        pending_bn: Some((bn.clone(), prev.eps)),
+                    }
+                } else {
+                    let eps_phi_out = bq.eps_phi_out;
+                    let id_node =
+                        id.push(&n.name, IntOp::IntBn { bn: bq }, &[prev.id_node]);
+                    NodeState {
+                        eps: eps_phi_out,
+                        qmin: -w,
+                        qmax: w,
+                        shape: prev.shape,
+                        id_node,
+                        pending_bn: None,
+                    }
+                }
+            }
+            Op::PactAct { beta, bits } => {
+                let prev = states[n.inputs[0]].as_ref().unwrap().clone();
+                let bits = if *bits == 0 { opts.abits } else { *bits };
+                let hi = (1i64 << bits) - 1;
+                let eps_y = beta / hi as f64;
+                qd_map[n.id] = qd.push(
+                    &n.name,
+                    Op::PactAct { beta: *beta, bits },
+                    &[qd_map[n.inputs[0]]],
+                );
+        let mut requant_md: Option<(i64, u32)> = None;
+                let id_node = if let Some((bn, eps_phi)) = &prev.pending_bn {
+                    let th = Thresholds::derive(bn, *eps_phi, eps_y, hi);
+                    id.push(&n.name, IntOp::ThreshAct { th }, &[prev.id_node])
+                } else {
+                    let rq = Requant::derive(prev.eps, eps_y, opts.requant_factor, 0, hi);
+                    requant_md = Some((rq.m, rq.d));
+                    // requant multiply must fit i64
+                    let worst = rq.m.saturating_mul(prev.qmax.abs().max(prev.qmin.abs()));
+                    if worst == i64::MAX {
+                        return Err(TransformError::RangeOverflow {
+                            node: n.name.clone(),
+                            worst,
+                        });
+                    }
+                    if let Some(l) = layers.last_mut() {
+                        l.beta_y = *beta;
+                        l.eps_y = eps_y;
+                        l.d = rq.d;
+                        l.m = rq.m;
+                        l.act_hi = hi;
+                    }
+                    id.push(&n.name, IntOp::RequantAct { rq }, &[prev.id_node])
+                };
+                // Propagate the REALIZED output quantum. The requant
+                // multiplier approximates eps_a/eps_y by m/2^d, so the
+                // integer image actually carries eps_eff = eps_a*2^d/m,
+                // not the nominal eps_y (equal when thresholds are used —
+                // they are exact). Propagating eps_eff removes the
+                // systematic per-layer scale error (up to eta) that would
+                // otherwise compound; the paper leaves this bookkeeping
+                // to the deployment backend (sec. 3.2/3.4 notes).
+                let eps_eff = match requant_md {
+                    None => eps_y, // thresholds are exact
+                    Some((m, d)) => prev.eps * (1u64 << d) as f64 / m as f64,
+                };
+                if let Some(l) = layers.last_mut() {
+                    if prev.pending_bn.is_some() {
+                        l.beta_y = *beta;
+                        l.eps_y = eps_y;
+                        l.act_hi = hi;
+                    }
+                }
+                NodeState {
+                    eps: eps_eff,
+                    qmin: 0,
+                    qmax: hi,
+                    shape: prev.shape,
+                    id_node,
+                    pending_bn: None,
+                }
+            }
+            Op::ReLU => return Err(TransformError::NeedsFakeQuant("ReLU")),
+            Op::QuantBn { .. } => {
+                return Err(TransformError::Unsupported("deploy", "QuantBn input"))
+            }
+            Op::MaxPool { k } => {
+                let prev = states[n.inputs[0]].as_ref().unwrap().clone();
+                qd_map[n.id] =
+                    qd.push(&n.name, Op::MaxPool { k: *k }, &[qd_map[n.inputs[0]]]);
+                let id_node =
+                    id.push(&n.name, IntOp::MaxPoolInt { k: *k }, &[prev.id_node]);
+                let shape = pool_shape(prev.shape, *k)?;
+                NodeState { shape, id_node, pending_bn: None, ..prev }
+            }
+            Op::AvgPool { .. } | Op::GlobalAvgPool => {
+                let prev = states[n.inputs[0]].as_ref().unwrap().clone();
+                let k = match &n.op {
+                    Op::AvgPool { k } => *k,
+                    _ => match prev.shape {
+                        ShapeInfo::Chw(_, h, w) => {
+                            if h != w {
+                                return Err(TransformError::Unsupported(
+                                    "deploy",
+                                    "global pool on non-square",
+                                ));
+                            }
+                            h
+                        }
+                        _ => {
+                            return Err(TransformError::Unsupported(
+                                "deploy",
+                                "global pool on flat",
+                            ))
+                        }
+                    },
+                };
+                qd_map[n.id] = qd.push(&n.name, n.op.clone(), &[qd_map[n.inputs[0]]]);
+                let mut id_node = id.push(
+                    &n.name,
+                    IntOp::AvgPoolInt { k, d: opts.pool_d },
+                    &[prev.id_node],
+                );
+                // sum of k*k values then ~/k^2: range preserved (slightly
+                // shrunk by the floor); worst case during accumulation:
+                let acc = prev.qmax.abs().max(prev.qmin.abs()) * (k * k) as i64;
+                check_range(&n.name, -acc, acc)?;
+                // Realized quantum after the Eq. 25 scaling: the ideal
+                // 1/K^2 is approximated by m/2^d, so eps scales by
+                // m*K^2/2^d (exactly 1 when K^2 divides 2^d).
+                let m_pool = (1i64 << opts.pool_d) / (k * k) as i64;
+                let eps_eff = prev.eps * (m_pool * (k * k) as i64) as f64
+                    / (1i64 << opts.pool_d) as f64;
+                let shape = if matches!(n.op, Op::GlobalAvgPool) {
+                    // Global pooling flattens [B,C,1,1] -> [B,C]; the float
+                    // engine's GlobalAvgPool does this implicitly, so the
+                    // ID graph needs an explicit Flatten to match.
+                    id_node = id.push(
+                        &format!("{}_flatten", n.name),
+                        IntOp::Flatten,
+                        &[id_node],
+                    );
+                    match prev.shape {
+                        ShapeInfo::Chw(c, _, _) => ShapeInfo::Flat(c),
+                        f => f,
+                    }
+                } else {
+                    pool_shape(prev.shape, k)?
+                };
+                NodeState { shape, id_node, pending_bn: None, eps: eps_eff, ..prev }
+            }
+            Op::Flatten => {
+                let prev = states[n.inputs[0]].as_ref().unwrap().clone();
+                qd_map[n.id] = qd.push(&n.name, Op::Flatten, &[qd_map[n.inputs[0]]]);
+                let id_node = id.push(&n.name, IntOp::Flatten, &[prev.id_node]);
+                let shape = match prev.shape {
+                    ShapeInfo::Chw(c, h, w) => ShapeInfo::Flat(c * h * w),
+                    f => f,
+                };
+                NodeState { shape, id_node, pending_bn: None, ..prev }
+            }
+            Op::Add => {
+                // Branch 0 is the reference space (Eq. 24).
+                let ref_st = states[n.inputs[0]].as_ref().unwrap().clone();
+                let mut rqs = Vec::new();
+                let mut qmin = ref_st.qmin;
+                let mut qmax = ref_st.qmax;
+                let mut id_inputs = vec![ref_st.id_node];
+                for &i in &n.inputs[1..] {
+                    let bst = states[i].as_ref().unwrap();
+                    let rq = Requant::derive(
+                        bst.eps,
+                        ref_st.eps,
+                        opts.add_requant_factor,
+                        i32::MIN as i64,
+                        i32::MAX as i64,
+                    );
+                    qmin += rq.apply(bst.qmin).min(rq.apply(bst.qmax));
+                    qmax += rq.apply(bst.qmax).max(rq.apply(bst.qmin));
+                    rqs.push(rq);
+                    id_inputs.push(bst.id_node);
+                }
+                check_range(&n.name, qmin, qmax)?;
+                let qd_inputs: Vec<NodeId> =
+                    n.inputs.iter().map(|&i| qd_map[i]).collect();
+                qd_map[n.id] = qd.push(&n.name, Op::Add, &qd_inputs);
+                let id_node = id.push(&n.name, IntOp::AddRequant { rqs }, &id_inputs);
+                NodeState {
+                    eps: ref_st.eps,
+                    qmin,
+                    qmax,
+                    shape: ref_st.shape,
+                    id_node,
+                    pending_bn: None,
+                }
+            }
+        };
+        worst_case.push(st.qmax.abs().max(st.qmin.abs()));
+        states[n.id] = Some(st);
+    }
+
+    let out_state = states[g.output].as_ref().unwrap();
+    qd.output = qd_map[g.output];
+    id.output = out_state.id_node;
+    id.eps_out = out_state.eps;
+    // Per-ID-node eps (diagnostics): fill from node states, then forward-
+    // fill helper nodes (e.g. the Flatten inserted after global pooling).
+    let mut node_eps = vec![f64::NAN; id.nodes.len()];
+    for st in states.iter().flatten() {
+        node_eps[st.id_node] = st.eps;
+    }
+    for i in 1..node_eps.len() {
+        if node_eps[i].is_nan() {
+            node_eps[i] = node_eps[i - 1];
+        }
+    }
+    Ok(Deployed {
+        qd,
+        id,
+        layers,
+        eps_out: out_state.eps,
+        worst_case,
+        node_eps,
+    })
+}
+
+fn pool_shape(s: ShapeInfo, k: usize) -> Result<ShapeInfo, TransformError> {
+    match s {
+        ShapeInfo::Chw(c, h, w) => Ok(ShapeInfo::Chw(c, h / k, w / k)),
+        _ => Err(TransformError::Unsupported("deploy", "pool on flat")),
+    }
+}
+
+fn check_range(node: &str, qmin: i64, qmax: i64) -> Result<(), TransformError> {
+    let worst = qmax.abs().max(qmin.abs());
+    if worst > i32::MAX as i64 {
+        return Err(TransformError::RangeOverflow { node: node.to_string(), worst });
+    }
+    Ok(())
+}
+
+/// Worst-case output range of an integer conv/linear over input range
+/// [xlo, xhi]: per output channel, sum per-weight extremes.
+fn conv_range(
+    wq: &TensorI,
+    xlo: i64,
+    xhi: i64,
+    bias: Option<&[i64]>,
+) -> (i64, i64) {
+    let (rows, co) = (wq.shape()[0], wq.shape()[1]);
+    let mut worst_min = 0i64;
+    let mut worst_max = 0i64;
+    for oc in 0..co {
+        let mut lo = 0i64;
+        let mut hi = 0i64;
+        for r in 0..rows {
+            let w = wq.at2(r, oc) as i64;
+            let a = w * xlo;
+            let b = w * xhi;
+            lo += a.min(b);
+            hi += a.max(b);
+        }
+        if let Some(bq) = bias {
+            lo += bq[oc];
+            hi += bq[oc];
+        }
+        worst_min = worst_min.min(lo);
+        worst_max = worst_max.max(hi);
+    }
+    (worst_min, worst_max)
+}
+
+fn linear_range(wq: &TensorI, xlo: i64, xhi: i64, bias: Option<&[i64]>) -> (i64, i64) {
+    conv_range(wq, xlo, xhi, bias)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{FloatEngine, IntegerEngine};
+    use crate::quant::bn::BnParams;
+    use crate::quant::quantize_input;
+    use crate::tensor::TensorF;
+    use crate::transform::{calibrate, quantize_pact};
+    use crate::util::rng::Rng;
+
+    /// conv-bn-act -> conv-bn-act -> gap -> flatten -> fc test net.
+    fn small_net(rng: &mut Rng) -> Graph {
+        let mut g = Graph::new(1.0 / 255.0);
+        let x = g.push("in", Op::Input { shape: vec![1, 8, 8] }, &[]);
+        let w1 = TensorF::from_vec(
+            &[4, 1, 3, 3],
+            (0..36).map(|_| rng.normal(0.0, 0.5) as f32).collect(),
+        );
+        let c1 = g.push("c1", Op::Conv2d { w: w1, bias: None, stride: 1, pad: 1 }, &[x]);
+        let bn1 = BnParams {
+            gamma: (0..4).map(|_| rng.uniform(0.3, 1.5)).collect(),
+            sigma: (0..4).map(|_| rng.uniform(0.3, 1.5)).collect(),
+            beta: (0..4).map(|_| rng.normal(0.0, 0.2)).collect(),
+            mu: (0..4).map(|_| rng.normal(0.0, 0.2)).collect(),
+        };
+        let b1 = g.push("bn1", Op::BatchNorm { bn: bn1 }, &[c1]);
+        let a1 = g.push("a1", Op::ReLU, &[b1]);
+        let w2 = TensorF::from_vec(
+            &[8, 4, 3, 3],
+            (0..288).map(|_| rng.normal(0.0, 0.3) as f32).collect(),
+        );
+        let c2 = g.push("c2", Op::Conv2d { w: w2, bias: None, stride: 2, pad: 1 }, &[a1]);
+        let bn2 = BnParams {
+            gamma: (0..8).map(|_| rng.uniform(0.3, 1.5)).collect(),
+            sigma: (0..8).map(|_| rng.uniform(0.3, 1.5)).collect(),
+            beta: (0..8).map(|_| rng.normal(0.0, 0.2)).collect(),
+            mu: (0..8).map(|_| rng.normal(0.0, 0.2)).collect(),
+        };
+        let b2 = g.push("bn2", Op::BatchNorm { bn: bn2 }, &[c2]);
+        let a2 = g.push("a2", Op::ReLU, &[b2]);
+        let p = g.push("gap", Op::GlobalAvgPool, &[a2]);
+        let wf = TensorF::from_vec(
+            &[8, 5],
+            (0..40).map(|_| rng.normal(0.0, 0.5) as f32).collect(),
+        );
+        g.push("fc", Op::Linear { w: wf, bias: Some(vec![0.1, -0.1, 0.0, 0.2, 0.05]) }, &[p]);
+        g
+    }
+
+    fn rand_batch(rng: &mut Rng, b: usize) -> TensorF {
+        TensorF::from_vec(
+            &[b, 1, 8, 8],
+            (0..b * 64).map(|_| rng.uniform(0.0, 1.0) as f32).collect(),
+        )
+    }
+
+    fn pipeline(use_thresholds: bool) -> (Graph, Deployed, TensorF) {
+        let mut rng = Rng::new(99);
+        let g = small_net(&mut rng);
+        let cal = rand_batch(&mut rng, 16);
+        let betas = calibrate(&g, &[cal]);
+        let fq = quantize_pact(&g, 8, 8, &betas);
+        let dep = deploy(
+            &fq,
+            DeployOptions { use_thresholds, ..DeployOptions::default() },
+        )
+        .unwrap();
+        let x = rand_batch(&mut rng, 4);
+        (fq, dep, x)
+    }
+
+    #[test]
+    fn deploy_rejects_relu() {
+        let mut rng = Rng::new(1);
+        let g = small_net(&mut rng);
+        assert!(matches!(
+            deploy(&g, DeployOptions::default()),
+            Err(TransformError::NeedsFakeQuant(_))
+        ));
+    }
+
+    #[test]
+    fn qd_close_to_fq_and_id_matches_qd() {
+        let (fq, dep, x) = pipeline(false);
+        let fe = FloatEngine::new();
+        let qx = quantize_input(&x, 1.0 / 255.0);
+        let x_grid = qx.map(|q| q as f32 / 255.0);
+        let fq_out = fe.run(&fq, &x_grid);
+        let qd_out = fe.run(&dep.qd, &x_grid);
+        // QD == FQ up to BN quantization (kappa_bits=8) error
+        assert!(
+            fq_out.max_abs_diff(&qd_out) < 0.25,
+            "FQ vs QD diff {}",
+            fq_out.max_abs_diff(&qd_out)
+        );
+        // ID integer output * eps_out tracks QD within requant error
+        let ie = IntegerEngine::new();
+        let id_out = ie.run(&dep.id, &qx);
+        let id_real = id_out.map(|q| (q as f64 * dep.eps_out) as f32);
+        assert!(
+            qd_out.max_abs_diff(&id_real) < 0.25,
+            "QD vs ID diff {}",
+            qd_out.max_abs_diff(&id_real)
+        );
+    }
+
+    #[test]
+    fn threshold_variant_agrees_with_requant_variant() {
+        let (_, dep_rq, x) = pipeline(false);
+        let (_, dep_th, _) = pipeline(true);
+        let qx = quantize_input(&x, 1.0 / 255.0);
+        let ie = IntegerEngine::new();
+        let a = ie.run(&dep_rq.id, &qx);
+        let b = ie.run(&dep_th.id, &qx);
+        // Thresholds are EXACT; requant has eta<=1/16 error. Outputs are
+        // close but not identical; argmax must agree.
+        assert_eq!(a.shape(), b.shape());
+        assert_eq!(a.argmax_rows(), b.argmax_rows());
+        // threshold path drops IntBn nodes
+        assert!(dep_th.id.nodes.len() < dep_rq.id.nodes.len());
+    }
+
+    #[test]
+    fn eps_out_is_product_of_quanta() {
+        let (_, dep, _) = pipeline(false);
+        let last = dep.layers.last().unwrap();
+        // fc: eps_out = eps_w_fc * eps_x(last act)
+        assert!((dep.eps_out - last.eps_phi).abs() < 1e-15);
+    }
+
+    #[test]
+    fn range_analysis_flags_overflow() {
+        // A pathological net: huge weights * deep accumulation at 8 bits
+        // input 255 -> conv with 2^20-ish integer weights would overflow.
+        let mut g = Graph::new(1.0 / 255.0);
+        let x = g.push("in", Op::Input { shape: vec![64, 8, 8] }, &[]);
+        // Weight values all at the max grid point with huge fan-in.
+        let w = TensorF::full(&[8, 64, 3, 3], 100.0);
+        let c = g.push("c", Op::Conv2d { w, bias: None, stride: 1, pad: 1 }, &[x]);
+        g.push("a", Op::PactAct { beta: 1.0, bits: 8 }, &[c]);
+        // 64*9 * 127 * 255 = 18.6M fits; make it not fit via 32x scale:
+        // use wbits=16 -> |Q_w| up to 32767, acc ~ 4.8e9 > 2^31.
+        let err = deploy(&g, DeployOptions { wbits: 16, ..Default::default() });
+        assert!(matches!(err, Err(TransformError::RangeOverflow { .. })));
+    }
+}

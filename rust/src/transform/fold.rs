@@ -1,0 +1,238 @@
+//! BN folding (Eq. 18) and input-bias translation (sec. 3.7).
+
+use super::TransformError;
+use crate::graph::{Graph, NodeId, Op};
+
+/// Fold every BatchNorm into its preceding Linear operator (Eq. 18):
+///
+///   w <- gamma/sigma * w ;  b <- b + beta - gamma/sigma * mu
+///
+/// `only` optionally restricts folding to the named BN nodes (NEMO's
+/// optional dictionary argument). After folding, weight clipping bounds
+/// must be re-derived (NEMO's `reset_alpha_weights`) — that happens
+/// naturally here because `quantize_pact`/`deploy` recompute beta_w from
+/// the folded weights.
+pub fn fold_bn(g: &Graph, only: Option<&[&str]>) -> Result<Graph, TransformError> {
+    g.validate()?;
+    let fanout = g.fanout();
+    // Which BN nodes to fold: preceded by a Linear op with fanout 1.
+    let mut fold_into: Vec<Option<NodeId>> = vec![None; g.nodes.len()];
+    for n in &g.nodes {
+        if let Op::BatchNorm { .. } = n.op {
+            if let Some(name_filter) = only {
+                if !name_filter.contains(&n.name.as_str()) {
+                    continue;
+                }
+            }
+            let prev = n.inputs[0];
+            if g.nodes[prev].op.is_linear() && fanout[prev] == 1 {
+                fold_into[n.id] = Some(prev);
+            }
+        }
+    }
+
+    // Rebuild the graph without the folded BN nodes.
+    let mut out = Graph::new(g.eps_in);
+    let mut remap: Vec<NodeId> = vec![usize::MAX; g.nodes.len()];
+    for n in &g.nodes {
+        if let Some(linear_id) = fold_into[n.id] {
+            // Skip the BN node; its effect lands on the linear's weights.
+            remap[n.id] = remap[linear_id];
+            continue;
+        }
+        let mut op = n.op.clone();
+        // If some BN folds into *this* linear node, transform its params.
+        if n.op.is_linear() {
+            if let Some(bn_id) = fold_into
+                .iter()
+                .position(|f| *f == Some(n.id))
+            {
+                if let Op::BatchNorm { bn } = &g.nodes[bn_id].op {
+                    let (kappa, lambda) = bn.fold();
+                    match &mut op {
+                        Op::Conv2d { w, bias, .. } => {
+                            let co = w.shape()[0];
+                            let per: usize = w.shape()[1..].iter().product();
+                            for oc in 0..co {
+                                let k = kappa[oc] as f32;
+                                for v in &mut w.data_mut()[oc * per..(oc + 1) * per] {
+                                    *v *= k;
+                                }
+                            }
+                            let mut b = bias.clone().unwrap_or_else(|| vec![0.0; co]);
+                            for oc in 0..co {
+                                b[oc] += lambda[oc];
+                            }
+                            *bias = Some(b);
+                        }
+                        Op::Linear { w, bias } => {
+                            // weights [in, out]: scale per output column
+                            let (fi, fo) = (w.shape()[0], w.shape()[1]);
+                            for i in 0..fi {
+                                for o in 0..fo {
+                                    w.data_mut()[i * fo + o] *= kappa[o] as f32;
+                                }
+                            }
+                            let mut b = bias.clone().unwrap_or_else(|| vec![0.0; fo]);
+                            for o in 0..fo {
+                                b[o] += lambda[o];
+                            }
+                            *bias = Some(b);
+                        }
+                        _ => unreachable!(),
+                    }
+                }
+            }
+        }
+        let inputs: Vec<NodeId> = n.inputs.iter().map(|&i| remap[i]).collect();
+        remap[n.id] = out.push(&n.name, op, &inputs);
+    }
+    out.output = remap[g.output];
+    Ok(out)
+}
+
+/// Input representation translation (sec. 3.7): when the "natural" input
+/// has offset alpha != 0 (t = alpha + eps*Q), rewrite the first Linear
+/// node so the network consumes the canonical [0, beta) image:
+///
+///   phi = <w, alpha + x_hat> = <w, x_hat> + alpha * sum(w)
+///
+/// Exact for fully-connected first layers and for convolutions without
+/// zero padding (padding would inject canonical zeros that should have
+/// been alpha).
+pub fn add_input_bias(g: &Graph, alpha: f64) -> Result<Graph, TransformError> {
+    if alpha == 0.0 {
+        return Ok(g.clone());
+    }
+    let mut out = g.clone();
+    // first Linear consumer of the Input node
+    let input_id = out
+        .nodes
+        .iter()
+        .position(|n| matches!(n.op, Op::Input { .. }))
+        .ok_or_else(|| TransformError::InputBias("no input node".into()))?;
+    let first_linear = out
+        .nodes
+        .iter()
+        .position(|n| n.inputs.contains(&input_id) && n.op.is_linear())
+        .ok_or_else(|| {
+            TransformError::InputBias("input is not consumed by a Linear node".into())
+        })?;
+    match &mut out.nodes[first_linear].op {
+        Op::Conv2d { w, bias, pad, .. } => {
+            if *pad != 0 {
+                return Err(TransformError::InputBias(
+                    "conv with zero padding cannot absorb an input offset exactly"
+                        .into(),
+                ));
+            }
+            let co = w.shape()[0];
+            let per: usize = w.shape()[1..].iter().product();
+            let mut b = bias.clone().unwrap_or_else(|| vec![0.0; co]);
+            for oc in 0..co {
+                let s: f64 = w.data()[oc * per..(oc + 1) * per]
+                    .iter()
+                    .map(|v| *v as f64)
+                    .sum();
+                b[oc] += alpha * s;
+            }
+            *bias = Some(b);
+        }
+        Op::Linear { w, bias } => {
+            let (fi, fo) = (w.shape()[0], w.shape()[1]);
+            let mut b = bias.clone().unwrap_or_else(|| vec![0.0; fo]);
+            for o in 0..fo {
+                let mut s = 0f64;
+                for i in 0..fi {
+                    s += w.data()[i * fo + o] as f64;
+                }
+                b[o] += alpha * s;
+            }
+            *bias = Some(b);
+        }
+        _ => unreachable!(),
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::FloatEngine;
+    use crate::quant::bn::BnParams;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    fn conv_bn_relu_graph(rng: &mut Rng) -> Graph {
+        let mut g = Graph::new(1.0 / 255.0);
+        let x = g.push("in", Op::Input { shape: vec![2, 6, 6] }, &[]);
+        let w = Tensor::from_vec(
+            &[3, 2, 3, 3],
+            (0..54).map(|_| rng.normal(0.0, 0.4) as f32).collect(),
+        );
+        let c = g.push("conv", Op::Conv2d { w, bias: None, stride: 1, pad: 1 }, &[x]);
+        let bn = BnParams {
+            gamma: (0..3).map(|_| rng.uniform(0.2, 2.0)).collect(),
+            sigma: (0..3).map(|_| rng.uniform(0.2, 2.0)).collect(),
+            beta: (0..3).map(|_| rng.normal(0.0, 0.3)).collect(),
+            mu: (0..3).map(|_| rng.normal(0.0, 0.3)).collect(),
+        };
+        let b = g.push("bn", Op::BatchNorm { bn }, &[c]);
+        g.push("act", Op::ReLU, &[b]);
+        g
+    }
+
+    #[test]
+    fn fold_bn_preserves_function() {
+        let mut rng = Rng::new(42);
+        let g = conv_bn_relu_graph(&mut rng);
+        let folded = fold_bn(&g, None).unwrap();
+        assert_eq!(folded.nodes.len(), g.nodes.len() - 1);
+        let x = Tensor::from_vec(
+            &[2, 2, 6, 6],
+            (0..144).map(|_| rng.uniform(0.0, 1.0) as f32).collect(),
+        );
+        let e = FloatEngine::new();
+        let a = e.run(&g, &x);
+        let b = e.run(&folded, &x);
+        assert!(a.allclose(&b, 1e-4, 1e-4), "max diff {}", a.max_abs_diff(&b));
+    }
+
+    #[test]
+    fn fold_bn_respects_name_filter() {
+        let mut rng = Rng::new(1);
+        let g = conv_bn_relu_graph(&mut rng);
+        let kept = fold_bn(&g, Some(&["other"])).unwrap();
+        assert_eq!(kept.nodes.len(), g.nodes.len()); // nothing folded
+    }
+
+    #[test]
+    fn input_bias_translates_offset() {
+        // network over t = alpha + x_hat must equal rewritten network
+        // over x_hat alone.
+        let mut rng = Rng::new(2);
+        let mut g = Graph::new(1.0 / 255.0);
+        let x = g.push("in", Op::Input { shape: vec![4] }, &[]);
+        let w = Tensor::from_vec(
+            &[4, 3],
+            (0..12).map(|_| rng.normal(0.0, 1.0) as f32).collect(),
+        );
+        g.push("fc", Op::Linear { w, bias: Some(vec![0.1, 0.2, 0.3]) }, &[x]);
+
+        let alpha = -0.5f64;
+        let g2 = add_input_bias(&g, alpha).unwrap();
+        let e = FloatEngine::new();
+        let xhat = Tensor::from_vec(&[1, 4], vec![0.1f32, 0.9, 0.4, 0.7]);
+        let xoff = xhat.map(|v| v + alpha as f32);
+        let want = e.run(&g, &xoff);
+        let got = e.run(&g2, &xhat);
+        assert!(want.allclose(&got, 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn input_bias_rejects_padded_conv() {
+        let mut rng = Rng::new(3);
+        let g = conv_bn_relu_graph(&mut rng); // pad = 1
+        assert!(add_input_bias(&g, -0.5).is_err());
+    }
+}

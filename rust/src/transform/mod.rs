@@ -1,0 +1,110 @@
+//! Representation pipeline (S4 in DESIGN.md) — the NEMO API surface:
+//!
+//! | NEMO (paper "In NEMO" boxes)          | here                        |
+//! |---------------------------------------|-----------------------------|
+//! | `nemo.transform.quantize_pact`        | [`quantize_pact`]           |
+//! | `net.fold_bn()` + `reset_alpha...`    | [`fold::fold_bn`]           |
+//! | `nemo.transform.bn_quantizer`         | inside [`deploy::deploy`]   |
+//! | `net.harden_weights()`                | inside [`deploy::deploy`]   |
+//! | `net.set_deployment(eps_in=...)`      | eps propagation in deploy   |
+//! | `nemo.transform.integerize_pact`      | [`deploy::deploy`] (ID out) |
+//! | `net.add_input_bias()`                | [`fold::add_input_bias`]    |
+//!
+//! The pipeline's extra safety pass — integer range analysis proving all
+//! i32 narrowing is sound — has no NEMO equivalent; it stands in for the
+//! "deployment backend" checks the paper delegates to the target.
+
+pub mod calibrate;
+pub mod deploy;
+pub mod fold;
+
+pub use calibrate::{calibrate, calibrate_percentile};
+pub use deploy::{deploy, DeployOptions, Deployed};
+pub use fold::{add_input_bias, fold_bn};
+
+use crate::graph::{Graph, Op};
+use crate::quant::{harden_tensor, max_abs, QuantSpec};
+
+#[derive(Debug, thiserror::Error)]
+pub enum TransformError {
+    #[error("deployment requires PACT activations; found {0} (run quantize_pact first)")]
+    NeedsFakeQuant(&'static str),
+    #[error("integer range overflow in {node}: worst-case |acc| = {worst} > 2^31")]
+    RangeOverflow { node: String, worst: i64 },
+    #[error("unsupported op in {0} representation: {1}")]
+    Unsupported(&'static str, &'static str),
+    #[error("graph error: {0}")]
+    Graph(#[from] crate::graph::GraphError),
+    #[error("add_input_bias: {0}")]
+    InputBias(String),
+}
+
+/// FullPrecision -> FakeQuantized (sec. 2): replace every ReLU with a
+/// PACT quantization/activation at the calibrated clipping bound, and
+/// put Linear weights on their symmetric fake-quantization grid.
+///
+/// `act_betas` must have one entry per activation node (see
+/// [`Graph::activations`]), typically from [`calibrate`].
+pub fn quantize_pact(g: &Graph, wbits: u32, abits: u32, act_betas: &[f64]) -> Graph {
+    let mut out = g.clone();
+    let mut act_i = 0usize;
+    for n in &mut out.nodes {
+        match &mut n.op {
+            Op::Conv2d { w, .. } | Op::Linear { w, .. } => {
+                let spec = QuantSpec::weight(max_abs(w), wbits);
+                *w = harden_tensor(w, &spec);
+            }
+            Op::ReLU => {
+                n.op = Op::PactAct { beta: act_betas[act_i], bits: abits };
+                act_i += 1;
+            }
+            Op::PactAct { beta, bits } => {
+                *beta = act_betas[act_i];
+                *bits = abits;
+                act_i += 1;
+            }
+            _ => {}
+        }
+    }
+    assert_eq!(act_i, act_betas.len(), "one beta per activation");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::FloatEngine;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn quantize_pact_replaces_relu_and_hardens() {
+        let mut g = Graph::new(1.0 / 255.0);
+        let x = g.push("in", Op::Input { shape: vec![2] }, &[]);
+        let w = Tensor::from_vec(&[2, 2], vec![0.31f32, -0.77, 0.5, 0.2]);
+        let l = g.push("fc", Op::Linear { w, bias: None }, &[x]);
+        g.push("act", Op::ReLU, &[l]);
+
+        let fq = quantize_pact(&g, 4, 4, &[2.0]);
+        match &fq.nodes[2].op {
+            Op::PactAct { beta, bits } => {
+                assert_eq!(*beta, 2.0);
+                assert_eq!(*bits, 4);
+            }
+            op => panic!("expected PactAct, got {}", op.name()),
+        }
+        // hardened weights live on the eps_w grid
+        match &fq.nodes[1].op {
+            Op::Linear { w, .. } => {
+                let spec = QuantSpec::weight(0.77, 4);
+                for v in w.data() {
+                    let q = (*v as f64) / spec.eps;
+                    assert!((q - q.round()).abs() < 1e-6, "{v} not on grid");
+                }
+            }
+            _ => unreachable!(),
+        }
+        // still runs
+        let out = FloatEngine::new().run(&fq, &Tensor::from_vec(&[1, 2], vec![0.5f32, 0.5]));
+        assert_eq!(out.shape(), &[1, 2]);
+    }
+}

@@ -1,0 +1,509 @@
+//! Minimal JSON: parser + writer.
+//!
+//! The offline vendor set lacks the `serde` facade crate, so artifact
+//! manifests, goldens and checkpoints go through this hand-rolled module.
+//! Scope: full JSON spec minus exotic escapes (\u surrogate pairs are
+//! supported); numbers parse to f64 (with exact i64 fast path) which is
+//! what the interchange files contain.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    /// Integers are kept exact when the token has no '.', 'e' or 'E'.
+    Int(i64),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    Obj(BTreeMap<String, Value>),
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum JsonError {
+    #[error("json parse error at byte {0}: {1}")]
+    Parse(usize, String),
+    #[error("json type error: expected {expected}, found {found}")]
+    Type { expected: &'static str, found: &'static str },
+    #[error("json missing key: {0}")]
+    MissingKey(String),
+}
+
+type Result<T> = std::result::Result<T, JsonError>;
+
+impl Value {
+    fn kind(&self) -> &'static str {
+        match self {
+            Value::Null => "null",
+            Value::Bool(_) => "bool",
+            Value::Int(_) => "int",
+            Value::Num(_) => "number",
+            Value::Str(_) => "string",
+            Value::Arr(_) => "array",
+            Value::Obj(_) => "object",
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Value::Int(i) => Ok(*i as f64),
+            Value::Num(n) => Ok(*n),
+            v => Err(JsonError::Type { expected: "number", found: v.kind() }),
+        }
+    }
+
+    pub fn as_i64(&self) -> Result<i64> {
+        match self {
+            Value::Int(i) => Ok(*i),
+            Value::Num(n) if n.fract() == 0.0 => Ok(*n as i64),
+            v => Err(JsonError::Type { expected: "int", found: v.kind() }),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            v => Err(JsonError::Type { expected: "string", found: v.kind() }),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            v => Err(JsonError::Type { expected: "bool", found: v.kind() }),
+        }
+    }
+
+    pub fn as_arr(&self) -> Result<&[Value]> {
+        match self {
+            Value::Arr(a) => Ok(a),
+            v => Err(JsonError::Type { expected: "array", found: v.kind() }),
+        }
+    }
+
+    pub fn as_obj(&self) -> Result<&BTreeMap<String, Value>> {
+        match self {
+            Value::Obj(o) => Ok(o),
+            v => Err(JsonError::Type { expected: "object", found: v.kind() }),
+        }
+    }
+
+    pub fn get(&self, key: &str) -> Result<&Value> {
+        self.as_obj()?
+            .get(key)
+            .ok_or_else(|| JsonError::MissingKey(key.to_string()))
+    }
+
+    pub fn get_opt(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Obj(o) => o.get(key),
+            _ => None,
+        }
+    }
+
+    /// Flatten an arbitrarily nested numeric array into (data, shape).
+    pub fn as_f64_tensor(&self) -> Result<(Vec<f64>, Vec<usize>)> {
+        let mut shape = Vec::new();
+        let mut node = self;
+        loop {
+            match node {
+                Value::Arr(a) => {
+                    shape.push(a.len());
+                    if a.is_empty() {
+                        return Ok((vec![], shape));
+                    }
+                    node = &a[0];
+                }
+                _ => break,
+            }
+        }
+        let mut data = Vec::new();
+        fn walk(v: &Value, depth: usize, shape: &[usize], out: &mut Vec<f64>) -> Result<()> {
+            if depth == shape.len() {
+                out.push(v.as_f64()?);
+                return Ok(());
+            }
+            let a = v.as_arr()?;
+            if a.len() != shape[depth] {
+                return Err(JsonError::Parse(0, "ragged tensor".into()));
+            }
+            for e in a {
+                walk(e, depth + 1, shape, out)?;
+            }
+            Ok(())
+        }
+        walk(self, 0, &shape, &mut data)?;
+        Ok((data, shape))
+    }
+
+    pub fn as_i32_tensor(&self) -> Result<(Vec<i32>, Vec<usize>)> {
+        let (data, shape) = self.as_f64_tensor()?;
+        Ok((data.into_iter().map(|x| x as i32).collect(), shape))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Parser
+// ---------------------------------------------------------------------------
+
+pub fn parse(input: &str) -> Result<Value> {
+    let mut p = Parser { b: input.as_bytes(), pos: 0 };
+    p.skip_ws();
+    let v = p.value()?;
+    p.skip_ws();
+    if p.pos != p.b.len() {
+        return Err(p.err("trailing characters"));
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn err(&self, msg: &str) -> JsonError {
+        JsonError::Parse(self.pos, msg.to_string())
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, c: u8) -> Result<()> {
+        if self.peek() == Some(c) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected '{}'", c as char)))
+        }
+    }
+
+    fn value(&mut self) -> Result<Value> {
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Value::Str(self.string()?)),
+            Some(b't') => self.lit("true", Value::Bool(true)),
+            Some(b'f') => self.lit("false", Value::Bool(false)),
+            Some(b'n') => self.lit("null", Value::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            Some(b'N') => self.lit("NaN", Value::Num(f64::NAN)),
+            Some(b'I') => self.lit("Infinity", Value::Num(f64::INFINITY)),
+            _ => Err(self.err("unexpected character")),
+        }
+    }
+
+    fn lit(&mut self, s: &str, v: Value) -> Result<Value> {
+        if self.b[self.pos..].starts_with(s.as_bytes()) {
+            self.pos += s.len();
+            Ok(v)
+        } else {
+            Err(self.err("bad literal"))
+        }
+    }
+
+    fn number(&mut self) -> Result<Value> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+            // python json may emit -Infinity
+            if self.peek() == Some(b'I') {
+                return self.lit("Infinity", Value::Num(f64::NEG_INFINITY));
+            }
+        }
+        let mut is_float = false;
+        while let Some(c) = self.peek() {
+            match c {
+                b'0'..=b'9' => self.pos += 1,
+                b'.' | b'e' | b'E' | b'+' | b'-' => {
+                    is_float = true;
+                    self.pos += 1;
+                }
+                _ => break,
+            }
+        }
+        let tok = std::str::from_utf8(&self.b[start..self.pos]).unwrap();
+        if is_float {
+            tok.parse::<f64>().map(Value::Num).map_err(|_| self.err("bad number"))
+        } else {
+            // exact integer if it fits, f64 otherwise
+            match tok.parse::<i64>() {
+                Ok(i) => Ok(Value::Int(i)),
+                Err(_) => tok.parse::<f64>().map(Value::Num).map_err(|_| self.err("bad number")),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    match self.peek() {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'b') => out.push('\u{8}'),
+                        Some(b'f') => out.push('\u{c}'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'u') => {
+                            self.pos += 1;
+                            let cp = self.hex4()?;
+                            // surrogate pair
+                            if (0xD800..0xDC00).contains(&cp) {
+                                self.expect(b'\\')?;
+                                self.expect(b'u')?;
+                                let lo = self.hex4()?;
+                                let c = 0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
+                                out.push(char::from_u32(c).ok_or_else(|| self.err("bad codepoint"))?);
+                            } else {
+                                out.push(char::from_u32(cp).ok_or_else(|| self.err("bad codepoint"))?);
+                            }
+                            continue; // pos already advanced by hex4
+                        }
+                        _ => return Err(self.err("bad escape")),
+                    }
+                    self.pos += 1;
+                }
+                Some(_) => {
+                    // consume one UTF-8 scalar
+                    let s = std::str::from_utf8(&self.b[self.pos..])
+                        .map_err(|_| self.err("bad utf8"))?;
+                    let ch = s.chars().next().unwrap();
+                    out.push(ch);
+                    self.pos += ch.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32> {
+        if self.pos + 4 > self.b.len() {
+            return Err(self.err("short \\u escape"));
+        }
+        let s = std::str::from_utf8(&self.b[self.pos..self.pos + 4])
+            .map_err(|_| self.err("bad utf8"))?;
+        let v = u32::from_str_radix(s, 16).map_err(|_| self.err("bad hex"))?;
+        self.pos += 4;
+        Ok(v)
+    }
+
+    fn array(&mut self) -> Result<Value> {
+        self.expect(b'[')?;
+        let mut out = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Value::Arr(out));
+        }
+        loop {
+            self.skip_ws();
+            out.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Value::Arr(out));
+                }
+                _ => return Err(self.err("expected ',' or ']'")),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Value> {
+        self.expect(b'{')?;
+        let mut out = BTreeMap::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Value::Obj(out));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let val = self.value()?;
+            out.insert(key, val);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Value::Obj(out));
+                }
+                _ => return Err(self.err("expected ',' or '}'")),
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Writer
+// ---------------------------------------------------------------------------
+
+pub fn write(v: &Value) -> String {
+    let mut s = String::new();
+    write_into(v, &mut s);
+    s
+}
+
+fn write_into(v: &Value, out: &mut String) {
+    match v {
+        Value::Null => out.push_str("null"),
+        Value::Bool(true) => out.push_str("true"),
+        Value::Bool(false) => out.push_str("false"),
+        Value::Int(i) => {
+            let _ = write!(out, "{i}");
+        }
+        Value::Num(n) => {
+            if n.is_nan() {
+                out.push_str("NaN");
+            } else if n.is_infinite() {
+                out.push_str(if *n > 0.0 { "Infinity" } else { "-Infinity" });
+            } else if n.fract() == 0.0 && n.abs() < 1e15 {
+                let _ = write!(out, "{:.1}", n);
+            } else {
+                // Rust's shortest round-trip float formatting
+                let _ = write!(out, "{n}");
+            }
+        }
+        Value::Str(s) => write_str(s, out),
+        Value::Arr(a) => {
+            out.push('[');
+            for (i, e) in a.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_into(e, out);
+            }
+            out.push(']');
+        }
+        Value::Obj(o) => {
+            out.push('{');
+            for (i, (k, e)) in o.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_str(k, out);
+                out.push(':');
+                write_into(e, out);
+            }
+            out.push('}');
+        }
+    }
+}
+
+fn write_str(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Convenience builders used by checkpoint/metrics writers.
+pub fn arr_f64(v: &[f64]) -> Value {
+    Value::Arr(v.iter().map(|x| Value::Num(*x)).collect())
+}
+
+pub fn arr_i64(v: &[i64]) -> Value {
+    Value::Arr(v.iter().map(|x| Value::Int(*x)).collect())
+}
+
+pub fn obj(pairs: Vec<(&str, Value)>) -> Value {
+    Value::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_basic() {
+        let src = r#"{"a": [1, 2.5, -3], "b": {"c": "x\ny", "d": null, "e": true}}"#;
+        let v = parse(src).unwrap();
+        assert_eq!(v.get("a").unwrap().as_arr().unwrap()[0].as_i64().unwrap(), 1);
+        assert_eq!(v.get("b").unwrap().get("c").unwrap().as_str().unwrap(), "x\ny");
+        let again = parse(&write(&v)).unwrap();
+        assert_eq!(v, again);
+    }
+
+    #[test]
+    fn float_roundtrip_is_exact() {
+        for x in [1.0 / 255.0, 3.1e-5, std::f64::consts::PI, 1e-300, -0.0] {
+            let s = write(&Value::Num(x));
+            let v = parse(&s).unwrap();
+            assert_eq!(v.as_f64().unwrap().to_bits(), x.to_bits(), "{s}");
+        }
+    }
+
+    #[test]
+    fn big_ints_are_exact() {
+        let v = parse("[9007199254740993, -9007199254740993]").unwrap();
+        assert_eq!(v.as_arr().unwrap()[0].as_i64().unwrap(), 9007199254740993);
+    }
+
+    #[test]
+    fn tensor_flatten() {
+        let v = parse("[[1,2,3],[4,5,6]]").unwrap();
+        let (data, shape) = v.as_f64_tensor().unwrap();
+        assert_eq!(shape, vec![2, 3]);
+        assert_eq!(data, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn unicode_escape() {
+        let v = parse(r#""é😀""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "é😀");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("{").is_err());
+        assert!(parse("[1,]").is_err());
+        assert!(parse("tru").is_err());
+        assert!(parse("1 2").is_err());
+    }
+
+    #[test]
+    fn parses_special_floats() {
+        // python json.dump emits these for nan/inf
+        let v = parse("[NaN, Infinity, -Infinity]").unwrap();
+        let a = v.as_arr().unwrap();
+        assert!(a[0].as_f64().unwrap().is_nan());
+        assert_eq!(a[1].as_f64().unwrap(), f64::INFINITY);
+        assert_eq!(a[2].as_f64().unwrap(), f64::NEG_INFINITY);
+    }
+}

@@ -1,0 +1,12 @@
+//! Self-contained utilities: PRNG, JSON, statistics, timing, mini property
+//! testing.
+//!
+//! The offline vendor set has no `rand`, `serde` (facade), `criterion`,
+//! `clap` or `proptest`, so this crate carries small, well-tested
+//! replacements for exactly the slices of those it needs.
+
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod timer;

@@ -1,0 +1,61 @@
+//! Tiny timing helpers shared by the bench harness and the coordinator.
+
+use std::time::Instant;
+
+/// Measure `f` `iters` times and return per-iteration seconds.
+pub fn time_iters<F: FnMut()>(iters: usize, mut f: F) -> f64 {
+    let start = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    start.elapsed().as_secs_f64() / iters as f64
+}
+
+/// Run `f` repeatedly until `min_time` seconds elapse (after `warmup`
+/// iterations), returning (mean_secs, iters). criterion-lite.
+pub fn bench<F: FnMut()>(warmup: usize, min_time: f64, mut f: F) -> (f64, usize) {
+    for _ in 0..warmup {
+        f();
+    }
+    let start = Instant::now();
+    let mut iters = 0usize;
+    while start.elapsed().as_secs_f64() < min_time {
+        f();
+        iters += 1;
+    }
+    (start.elapsed().as_secs_f64() / iters.max(1) as f64, iters)
+}
+
+/// Pretty time formatting for bench output.
+pub fn fmt_time(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{:.3} s", secs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn bench_runs() {
+        let mut x = 0u64;
+        let (t, iters) = super::bench(1, 0.01, || {
+            x = x.wrapping_add(1);
+        });
+        assert!(t > 0.0);
+        assert!(iters > 0);
+    }
+
+    #[test]
+    fn fmt() {
+        assert!(super::fmt_time(2e-9).contains("ns"));
+        assert!(super::fmt_time(2e-6).contains("µs"));
+        assert!(super::fmt_time(2e-3).contains("ms"));
+        assert!(super::fmt_time(2.0).contains(" s"));
+    }
+}

@@ -1,0 +1,276 @@
+//! Cross-language golden validation: the Rust deployment pipeline must
+//! reproduce the Python reference (python/compile/deploy.py) bit-exactly
+//! on integer outputs, and the three execution paths —
+//! IntegerEngine (Rust), PJRT id_fwd artifact (Pallas kernels), Python
+//! golden — must agree exactly (experiment E9's exactness half).
+//!
+//! Requires `make artifacts`. Tests skip (with a note) if absent.
+
+use nemo::engine::{FloatEngine, IntegerEngine};
+use nemo::io::{artifacts_dir, Goldens};
+use nemo::model::artifact_args::synthnet_id_args;
+use nemo::model::synthnet::SynthNet;
+use nemo::quant::bn::{BnParams, BnQuant, Thresholds};
+use nemo::quant::requant::{choose_d, multiplier};
+use nemo::runtime::Runtime;
+use nemo::tensor::{Tensor, TensorF};
+use nemo::transform::{deploy, DeployOptions};
+
+fn goldens() -> Option<Goldens> {
+    let dir = artifacts_dir();
+    if !dir.join("goldens.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Goldens::load(dir).unwrap())
+}
+
+fn net_from_goldens(g: &Goldens) -> SynthNet {
+    let p = |name: &str| g.tensor_f32(&["model_case", "params", name]).unwrap();
+    let v64 = |name: &str| -> Vec<f64> {
+        g.walk(&["model_case", "params", name])
+            .unwrap()
+            .as_f64_tensor()
+            .unwrap()
+            .0
+    };
+    let s64 = |name: &str| -> Vec<f64> {
+        g.walk(&["model_case", "bn_state", name])
+            .unwrap()
+            .as_f64_tensor()
+            .unwrap()
+            .0
+    };
+    let mut net = SynthNet {
+        convs: vec![
+            (p("conv1.w"), v64("conv1.bn_gamma"), v64("conv1.bn_beta")),
+            (p("conv2.w"), v64("conv2.bn_gamma"), v64("conv2.bn_beta")),
+            (p("conv3.w"), v64("conv3.bn_gamma"), v64("conv3.bn_beta")),
+        ],
+        bn_state: vec![
+            (s64("conv1.bn_mu"), s64("conv1.bn_var")),
+            (s64("conv2.bn_mu"), s64("conv2.bn_var")),
+            (s64("conv3.bn_mu"), s64("conv3.bn_var")),
+        ],
+        fc_w: p("fc.w"),
+        fc_b: v64("fc.b"),
+        act_betas: vec![],
+    };
+    let (betas, _) = g
+        .walk(&["model_case", "act_betas"])
+        .unwrap()
+        .as_f64_tensor()
+        .unwrap();
+    net.act_betas = betas;
+    net
+}
+
+fn deployed_from_goldens(g: &Goldens) -> nemo::transform::Deployed {
+    let net = net_from_goldens(g);
+    let fq = net.to_pact_graph(8);
+    deploy(&fq, DeployOptions::default()).unwrap()
+}
+
+#[test]
+fn requant_params_match_python() {
+    let Some(g) = goldens() else { return };
+    let cases = g.walk(&["requant_param_cases"]).unwrap().as_arr().unwrap();
+    assert!(cases.len() >= 32);
+    for c in cases {
+        let eps_a = c.get("eps_a").unwrap().as_f64().unwrap();
+        let eps_b = c.get("eps_b").unwrap().as_f64().unwrap();
+        let factor = c.get("factor").unwrap().as_i64().unwrap() as u32;
+        let d = choose_d(eps_a, eps_b, factor);
+        let m = multiplier(eps_a, eps_b, d);
+        assert_eq!(d as i64, c.get("d").unwrap().as_i64().unwrap(), "d mismatch");
+        assert_eq!(m, c.get("m").unwrap().as_i64().unwrap(), "m mismatch");
+    }
+}
+
+#[test]
+fn bn_quantization_matches_python() {
+    let Some(g) = goldens() else { return };
+    let case = g.walk(&["bn_quant_case"]).unwrap();
+    let bn = BnParams {
+        gamma: case.get("gamma").unwrap().as_f64_tensor().unwrap().0,
+        sigma: case.get("sigma").unwrap().as_f64_tensor().unwrap().0,
+        beta: case.get("beta").unwrap().as_f64_tensor().unwrap().0,
+        mu: case.get("mu").unwrap().as_f64_tensor().unwrap().0,
+    };
+    let eps_phi = case.get("eps_phi").unwrap().as_f64().unwrap();
+    let bq = BnQuant::derive(&bn, eps_phi, 8);
+    let want_k: Vec<i64> = case
+        .get("kappa_q").unwrap().as_arr().unwrap()
+        .iter().map(|v| v.as_i64().unwrap()).collect();
+    let want_l: Vec<i64> = case
+        .get("lambda_q").unwrap().as_arr().unwrap()
+        .iter().map(|v| v.as_i64().unwrap()).collect();
+    assert_eq!(bq.kappa_q.iter().map(|v| *v as i64).collect::<Vec<_>>(), want_k);
+    assert_eq!(bq.lambda_q.iter().map(|v| *v as i64).collect::<Vec<_>>(), want_l);
+    assert_eq!(
+        bq.eps_kappa.to_bits(),
+        case.get("eps_kappa").unwrap().as_f64().unwrap().to_bits(),
+        "eps_kappa must match to the last bit"
+    );
+}
+
+#[test]
+fn thresholds_match_python() {
+    let Some(g) = goldens() else { return };
+    let case = g.walk(&["thresholds_case"]).unwrap();
+    let bn = BnParams {
+        gamma: case.get("gamma").unwrap().as_f64_tensor().unwrap().0,
+        sigma: case.get("sigma").unwrap().as_f64_tensor().unwrap().0,
+        beta: case.get("beta").unwrap().as_f64_tensor().unwrap().0,
+        mu: case.get("mu").unwrap().as_f64_tensor().unwrap().0,
+    };
+    let eps_phi = case.get("eps_phi").unwrap().as_f64().unwrap();
+    let eps_y = case.get("eps_y").unwrap().as_f64().unwrap();
+    let n = case.get("n_levels").unwrap().as_i64().unwrap();
+    // python bn_thresholds emits TH_1..TH_{n-1} (range(1, n_levels))
+    let th = Thresholds::derive(&bn, eps_phi, eps_y, n - 1);
+    let (want, shape) = case.get("thresholds").unwrap().as_f64_tensor().unwrap();
+    assert_eq!(shape[0], th.th.len());
+    for (c, row) in th.th.iter().enumerate() {
+        for (i, v) in row.iter().enumerate() {
+            assert_eq!(*v as f64, want[c * shape[1] + i], "TH[{c}][{i}]");
+        }
+    }
+}
+
+#[test]
+fn fold_bn_matches_python() {
+    let Some(g) = goldens() else { return };
+    let case = g.walk(&["fold_bn_case"]).unwrap();
+    let bn = BnParams {
+        gamma: case.get("gamma").unwrap().as_f64_tensor().unwrap().0,
+        sigma: case.get("sigma").unwrap().as_f64_tensor().unwrap().0,
+        beta: case.get("beta").unwrap().as_f64_tensor().unwrap().0,
+        mu: case.get("mu").unwrap().as_f64_tensor().unwrap().0,
+    };
+    let (w, wshape) = case.get("w").unwrap().as_f64_tensor().unwrap();
+    let (kappa, lambda) = bn.fold();
+    let (want_w, _) = case.get("w_folded").unwrap().as_f64_tensor().unwrap();
+    let (want_b, _) = case.get("b_folded").unwrap().as_f64_tensor().unwrap();
+    let per: usize = wshape[1..].iter().product();
+    for oc in 0..wshape[0] {
+        for k in 0..per {
+            let got = kappa[oc] * w[oc * per + k];
+            assert!((got - want_w[oc * per + k]).abs() < 1e-15);
+        }
+        assert!((lambda[oc] - want_b[oc]).abs() < 1e-15);
+    }
+}
+
+#[test]
+fn deployment_params_match_python_exactly() {
+    // The full-pipeline contract: identical integer deployment parameters
+    // from identical float weights.
+    let Some(g) = goldens() else { return };
+    let dep = deployed_from_goldens(&g);
+    let args = synthnet_id_args(&dep).unwrap();
+    let names = [
+        "conv1.wq", "conv1.kappa_q", "conv1.lambda_q", "conv1.m", "conv1.d",
+        "conv1.act_hi", "conv2.wq", "conv2.kappa_q", "conv2.lambda_q",
+        "conv2.m", "conv2.d", "conv2.act_hi", "conv3.wq", "conv3.kappa_q",
+        "conv3.lambda_q", "conv3.m", "conv3.d", "conv3.act_hi", "fc.wq",
+        "fc.bq",
+    ];
+    assert_eq!(args.len(), names.len());
+    for (arg, name) in args.iter().zip(names) {
+        let want = g.tensor_i32(&["model_case", "id_args", name]).unwrap();
+        let got = arg.as_i32().unwrap();
+        assert_eq!(
+            got.data(),
+            want.data(),
+            "integer deployment param '{name}' diverges from python"
+        );
+    }
+    let want_eps = g.f64(&["model_case", "eps_out"]).unwrap();
+    assert_eq!(dep.eps_out.to_bits(), want_eps.to_bits(), "eps_out");
+}
+
+#[test]
+fn integer_engine_matches_python_golden() {
+    let Some(g) = goldens() else { return };
+    let dep = deployed_from_goldens(&g);
+    let qx = g.tensor_i32(&["model_case", "qx"]).unwrap();
+    let want = g.tensor_i32(&["model_case", "id_qlogits"]).unwrap();
+    let got = IntegerEngine::new().run(&dep.id, &qx);
+    assert_eq!(got.data(), want.data(), "integer logits must be bit-exact");
+}
+
+#[test]
+fn float_engine_matches_python_fp() {
+    let Some(g) = goldens() else { return };
+    let net = net_from_goldens(&g);
+    let x = g.tensor_f32(&["model_case", "x"]).unwrap();
+    let want = g.tensor_f32(&["model_case", "fp_logits"]).unwrap();
+    let got = FloatEngine::new().run(&net.to_fp_graph(), &x);
+    assert!(
+        got.allclose(&want, 1e-3, 1e-3),
+        "FP logits diverge: max diff {}",
+        got.max_abs_diff(&want)
+    );
+}
+
+#[test]
+fn qd_engine_matches_python_qd() {
+    let Some(g) = goldens() else { return };
+    let dep = deployed_from_goldens(&g);
+    let qx = g.tensor_i32(&["model_case", "qx"]).unwrap();
+    let x_grid: TensorF = qx.map(|q| q as f32 / 255.0);
+    let want = g.tensor_f32(&["model_case", "qd_logits"]).unwrap();
+    let got = FloatEngine::new().run(&dep.qd, &x_grid);
+    assert!(
+        got.allclose(&want, 2e-3, 2e-3),
+        "QD logits diverge: max diff {}",
+        got.max_abs_diff(&want)
+    );
+}
+
+#[test]
+fn pjrt_id_artifact_matches_integer_engine_bit_exactly() {
+    // E9: the Pallas-kernel HLO graph (via PJRT) and the Rust integer
+    // engine are the same function — bit-exact integer outputs.
+    let Some(g) = goldens() else { return };
+    let dir = artifacts_dir();
+    let rt = Runtime::new(&dir).unwrap();
+    let dep = deployed_from_goldens(&g);
+    let qx = g.tensor_i32(&["model_case", "qx"]).unwrap();
+
+    let exe = rt.load("synthnet_id_fwd_b2").unwrap();
+    let mut args = synthnet_id_args(&dep).unwrap();
+    args.push(qx.clone().into());
+    let outs = exe.run(&args).unwrap();
+    let pjrt_out = outs[0].as_i32().unwrap();
+
+    let engine_out = IntegerEngine::new().run(&dep.id, &qx);
+    assert_eq!(pjrt_out.data(), engine_out.data(), "PJRT vs engine");
+
+    let want = g.tensor_i32(&["model_case", "id_qlogits"]).unwrap();
+    assert_eq!(pjrt_out.data(), want.data(), "PJRT vs python golden");
+}
+
+#[test]
+fn kernel_goldens_roundtrip_through_pjrt() {
+    let Some(g) = goldens() else { return };
+    let rt = Runtime::new(artifacts_dir()).unwrap();
+
+    // requant kernel over golden case (padded to the artifact's 64k shape)
+    let q = g.tensor_i32(&["requant_case", "q"]).unwrap();
+    let want = g.tensor_i32(&["requant_case", "out"]).unwrap();
+    let exe = rt.load("kernel_requant_64k").unwrap();
+    let mut data = q.data().to_vec();
+    data.resize(65536, 0);
+    let args = vec![
+        Tensor::from_vec(&[65536], data).into(),
+        Tensor::scalar(29i32).into(),
+        Tensor::scalar(21i32).into(),
+        Tensor::scalar(0i32).into(),
+        Tensor::scalar(255i32).into(),
+    ];
+    let outs = exe.run(&args).unwrap();
+    let got = outs[0].as_i32().unwrap();
+    assert_eq!(&got.data()[..q.len()], want.data());
+}

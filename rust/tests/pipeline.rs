@@ -1,0 +1,238 @@
+//! Integration tests over the full representation pipeline
+//! (FP -> FQ -> QD -> ID) on multiple architectures, including failure
+//! injection. No artifacts required (engine-only).
+
+use nemo::engine::{FloatEngine, IntegerEngine};
+use nemo::graph::{Graph, Op};
+use nemo::model::synthnet::{SynthNet, EPS_IN};
+use nemo::model::{mlp, residual_net};
+use nemo::quant::quantize_input;
+use nemo::tensor::{Tensor, TensorF};
+use nemo::transform::{
+    add_input_bias, calibrate, calibrate_percentile, deploy, fold_bn,
+    quantize_pact, DeployOptions, TransformError,
+};
+use nemo::util::rng::Rng;
+
+fn synth_input(rng: &mut Rng, b: usize) -> TensorF {
+    Tensor::from_vec(
+        &[b, 1, 16, 16],
+        (0..b * 256).map(|_| rng.uniform(0.0, 1.0) as f32).collect(),
+    )
+}
+
+#[test]
+fn synthnet_full_pipeline_all_bitwidths() {
+    let mut rng = Rng::new(21);
+    let net = SynthNet::init(&mut rng);
+    let x = synth_input(&mut rng, 8);
+    let betas = calibrate_percentile(&net.to_fp_graph(), &[x.clone()], 0.999);
+    for bits in [8u32, 4, 2] {
+        let mut n2 = net.clone();
+        n2.act_betas = betas.clone();
+        let fq = n2.to_pact_graph(bits);
+        let dep = deploy(
+            &fq,
+            DeployOptions { wbits: bits, abits: bits, ..DeployOptions::default() },
+        )
+        .unwrap_or_else(|e| panic!("deploy at {bits} bits: {e}"));
+        let qx = quantize_input(&x, EPS_IN);
+        let id_out = IntegerEngine::new().run(&dep.id, &qx);
+        assert_eq!(id_out.shape(), &[8, 10]);
+        // QD and ID agree within a few output quanta at 8 bits
+        if bits == 8 {
+            let x_grid = qx.map(|q| q as f32 / 255.0);
+            let qd_out = FloatEngine::new().run(&dep.qd, &x_grid);
+            let mut max_diff = 0f64;
+            for (a, b) in qd_out.data().iter().zip(id_out.data()) {
+                max_diff = max_diff.max((*a as f64 - *b as f64 * dep.eps_out).abs());
+            }
+            let scale = qd_out.data().iter().fold(0f32, |m, v| m.max(v.abs())) as f64;
+            assert!(
+                max_diff < 0.05 * scale.max(1.0),
+                "QD-ID divergence {max_diff} at scale {scale}"
+            );
+        }
+    }
+}
+
+#[test]
+fn residual_net_deploys_and_runs_integer_only() {
+    let mut rng = Rng::new(22);
+    let g = residual_net(&mut rng, EPS_IN);
+    let x = synth_input(&mut rng, 4);
+    let betas = calibrate(&g, &[x.clone()]);
+    let fq = quantize_pact(&g, 8, 8, &betas);
+    let dep = deploy(&fq, DeployOptions::default()).unwrap();
+    // The Add became AddRequant with one per-extra-branch requant.
+    let adds: Vec<_> = dep
+        .id
+        .nodes
+        .iter()
+        .filter_map(|n| match &n.op {
+            nemo::graph::int::IntOp::AddRequant { rqs } => Some(rqs.len()),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(adds, vec![1]);
+    let qx = quantize_input(&x, EPS_IN);
+    let out = IntegerEngine::new().run(&dep.id, &qx);
+    assert_eq!(out.shape(), &[4, 10]);
+    // argmax agreement with the QD float path
+    let x_grid = qx.map(|q| q as f32 / 255.0);
+    let qd = FloatEngine::new().run(&dep.qd, &x_grid);
+    assert_eq!(qd.argmax_rows(), out.argmax_rows());
+}
+
+#[test]
+fn mlp_pipeline_with_input_bias() {
+    let mut rng = Rng::new(23);
+    let g = mlp(&mut rng, 32, 24, 5, EPS_IN);
+    // input with natural offset alpha = -0.25 translated into the fc bias
+    let g2 = add_input_bias(&g, -0.25).unwrap();
+    let x = Tensor::from_vec(
+        &[4, 32],
+        (0..128).map(|_| rng.uniform(0.0, 1.0) as f32).collect(),
+    );
+    let betas = calibrate(&g2, &[x.clone()]);
+    let fq = quantize_pact(&g2, 8, 8, &betas);
+    let dep = deploy(&fq, DeployOptions::default()).unwrap();
+    let qx = quantize_input(&x, EPS_IN);
+    let out = IntegerEngine::new().run(&dep.id, &qx);
+    assert_eq!(out.shape(), &[4, 5]);
+}
+
+#[test]
+fn fold_bn_then_deploy_matches_unfolded_argmax() {
+    let mut rng = Rng::new(24);
+    let net = SynthNet::init(&mut rng);
+    let g = net.to_fp_graph();
+    let folded = fold_bn(&g, None).unwrap();
+    let x = synth_input(&mut rng, 8);
+    let betas_a = calibrate(&g, &[x.clone()]);
+    let betas_b = calibrate(&folded, &[x.clone()]);
+    let dep_a = deploy(&quantize_pact(&g, 8, 8, &betas_a), DeployOptions::default()).unwrap();
+    let dep_b =
+        deploy(&quantize_pact(&folded, 8, 8, &betas_b), DeployOptions::default()).unwrap();
+    let qx = quantize_input(&x, EPS_IN);
+    let ie = IntegerEngine::new();
+    let a = ie.run(&dep_a.id, &qx);
+    let b = ie.run(&dep_b.id, &qx);
+    assert_eq!(a.argmax_rows(), b.argmax_rows(), "folding changed predictions");
+}
+
+#[test]
+fn threshold_and_requant_variants_agree() {
+    let mut rng = Rng::new(25);
+    let net = SynthNet::init(&mut rng);
+    let x = synth_input(&mut rng, 8);
+    let mut n2 = net.clone();
+    n2.act_betas = calibrate_percentile(&net.to_fp_graph(), &[x.clone()], 0.999);
+    for bits in [4u32, 2] {
+        let fq = n2.to_pact_graph(bits);
+        let mk = |th| {
+            deploy(
+                &fq,
+                DeployOptions {
+                    wbits: bits,
+                    abits: bits,
+                    use_thresholds: th,
+                    ..DeployOptions::default()
+                },
+            )
+            .unwrap()
+        };
+        let dep_rq = mk(false);
+        let dep_th = mk(true);
+        let qx = quantize_input(&x, EPS_IN);
+        let ie = IntegerEngine::new();
+        let a = ie.run(&dep_rq.id, &qx);
+        let b = ie.run(&dep_th.id, &qx);
+        assert_eq!(a.argmax_rows(), b.argmax_rows(), "bits={bits}");
+    }
+}
+
+// -- failure injection ------------------------------------------------------
+
+#[test]
+fn deploy_refuses_unquantized_network() {
+    let mut rng = Rng::new(26);
+    let net = SynthNet::init(&mut rng);
+    match deploy(&net.to_fp_graph(), DeployOptions::default()) {
+        Err(TransformError::NeedsFakeQuant(_)) => {}
+        other => panic!("expected NeedsFakeQuant, got {other:?}"),
+    }
+}
+
+#[test]
+fn deploy_rejects_overflowing_bitwidths() {
+    // 24-bit weights with a wide-fanin conv overflow i32 accumulators;
+    // the range analysis must reject rather than deploy silently.
+    let mut g = Graph::new(1.0 / 255.0);
+    let x = g.push("in", Op::Input { shape: vec![256, 8, 8] }, &[]);
+    let w = Tensor::full(&[8, 256, 3, 3], 1.0f32);
+    let c = g.push("c", Op::Conv2d { w, bias: None, stride: 1, pad: 1 }, &[x]);
+    g.push("a", Op::PactAct { beta: 1.0, bits: 8 }, &[c]);
+    match deploy(&g, DeployOptions { wbits: 24, ..DeployOptions::default() }) {
+        Err(TransformError::RangeOverflow { .. }) => {}
+        other => panic!("expected RangeOverflow, got {other:?}"),
+    }
+}
+
+#[test]
+fn calibration_with_empty_batch_list_gives_positive_betas() {
+    let mut rng = Rng::new(27);
+    let net = SynthNet::init(&mut rng);
+    let betas = calibrate(&net.to_fp_graph(), &[]);
+    assert!(betas.iter().all(|b| *b > 0.0));
+}
+
+#[test]
+fn integer_engine_is_deterministic_across_runs() {
+    let mut rng = Rng::new(28);
+    let net = SynthNet::init(&mut rng);
+    let mut n2 = net.clone();
+    let x = synth_input(&mut rng, 4);
+    n2.act_betas = calibrate(&net.to_fp_graph(), &[x.clone()]);
+    let dep = deploy(&n2.to_pact_graph(8), DeployOptions::default()).unwrap();
+    let qx = quantize_input(&x, EPS_IN);
+    let ie = IntegerEngine::new();
+    let a = ie.run(&dep.id, &qx);
+    let b = ie.run(&dep.id, &qx);
+    assert_eq!(a.data(), b.data());
+}
+
+#[test]
+fn mixed_precision_per_layer_bits() {
+    // Memory-driven mixed precision (the paper's ref [4]): each activation
+    // carries its own bit width — bits is a per-PactAct-node property, so
+    // the pipeline supports heterogeneous configs natively.
+    let mut rng = Rng::new(29);
+    let net = SynthNet::init(&mut rng);
+    let x = synth_input(&mut rng, 4);
+    let betas = calibrate(&net.to_fp_graph(), &[x.clone()]);
+    let mut g = net.to_fp_graph();
+    let mixed_bits = [8u32, 4, 2];
+    let mut ai = 0;
+    for n in &mut g.nodes {
+        if matches!(n.op, Op::ReLU) {
+            n.op = Op::PactAct { beta: betas[ai], bits: mixed_bits[ai] };
+            ai += 1;
+        }
+    }
+    let dep = deploy(&g, DeployOptions::default()).unwrap();
+    // each RequantAct clips at its own 2^bits - 1
+    let his: Vec<i64> = dep
+        .id
+        .nodes
+        .iter()
+        .filter_map(|n| match &n.op {
+            nemo::graph::int::IntOp::RequantAct { rq } => Some(rq.hi),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(his, vec![255, 15, 3]);
+    let qx = quantize_input(&x, EPS_IN);
+    let out = IntegerEngine::new().run(&dep.id, &qx);
+    assert_eq!(out.shape(), &[4, 10]);
+}

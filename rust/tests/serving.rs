@@ -1,0 +1,131 @@
+//! Coordinator integration tests: correctness under concurrency, batching
+//! behaviour, failure handling. Requires artifacts (skips otherwise).
+
+use std::time::Duration;
+
+use nemo::coordinator::{ModelVariant, Server, ServerConfig};
+use nemo::data::SynthDigits;
+use nemo::engine::IntegerEngine;
+use nemo::io::artifacts_dir;
+use nemo::model::artifact_args::synthnet_id_args;
+use nemo::model::synthnet::{SynthNet, EPS_IN};
+use nemo::quant::quantize_input;
+use nemo::runtime::Runtime;
+use nemo::transform::{deploy, DeployOptions};
+use nemo::util::rng::Rng;
+
+fn setup() -> Option<(Runtime, nemo::transform::Deployed)> {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built");
+        return None;
+    }
+    let rt = Runtime::new(dir).unwrap();
+    let mut rng = Rng::new(31);
+    let net = SynthNet::init(&mut rng);
+    let dep = deploy(&net.to_pact_graph(8), DeployOptions::default()).unwrap();
+    Some((rt, dep))
+}
+
+fn start_server(rt: &Runtime, dep: &nemo::transform::Deployed, cfg: ServerConfig) -> Server {
+    let base_args = synthnet_id_args(dep).unwrap();
+    let model = ModelVariant::load(rt, "synthnet", "id_fwd", base_args).unwrap();
+    Server::start(vec![model], cfg)
+}
+
+#[test]
+fn served_results_match_local_engine_exactly() {
+    let Some((rt, dep)) = setup() else { return };
+    let server = start_server(&rt, &dep, ServerConfig::default());
+    let h = server.handle();
+    let engine = IntegerEngine::new();
+    let mut data = SynthDigits::new(32);
+    for _ in 0..32 {
+        let (x, _) = data.batch(1);
+        let qx = quantize_input(&x, EPS_IN);
+        let served = h.infer("synthnet", qx.clone()).unwrap();
+        let local = engine.run(&dep.id, &qx);
+        assert_eq!(served.data(), local.data(), "serving must not change results");
+    }
+    let m = server.stop();
+    assert_eq!(m.completed, 32);
+    assert_eq!(m.failed, 0);
+}
+
+#[test]
+fn concurrent_clients_all_get_correct_answers() {
+    let Some((rt, dep)) = setup() else { return };
+    let server = start_server(
+        &rt,
+        &dep,
+        ServerConfig { max_batch: 16, batch_timeout: Duration::from_micros(400), n_workers: 2 },
+    );
+    let dep = std::sync::Arc::new(dep);
+    let mut joins = Vec::new();
+    for c in 0..8u64 {
+        let h = server.handle();
+        let dep = dep.clone();
+        joins.push(std::thread::spawn(move || {
+            let engine = IntegerEngine::new();
+            let mut data = SynthDigits::new(100 + c);
+            for _ in 0..24 {
+                let (x, _) = data.batch(1);
+                let qx = quantize_input(&x, EPS_IN);
+                let served = h.infer("synthnet", qx.clone()).unwrap();
+                let local = engine.run(&dep.id, &qx);
+                assert_eq!(served.data(), local.data());
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let mut m = server.stop();
+    assert_eq!(m.completed, 8 * 24);
+    // with 8 concurrent clients the batcher should coalesce
+    assert!(
+        m.batch_sizes.mean() > 1.0,
+        "batcher never batched: mean {}",
+        m.batch_sizes.mean()
+    );
+}
+
+#[test]
+fn unknown_model_is_rejected_not_hung() {
+    let Some((rt, dep)) = setup() else { return };
+    let server = start_server(&rt, &dep, ServerConfig::default());
+    let h = server.handle();
+    let qx = nemo::tensor::TensorI::zeros(&[1, 1, 16, 16]);
+    let err = h.infer("nonexistent", qx).unwrap_err();
+    assert!(err.to_string().contains("unknown model"));
+    server.stop();
+}
+
+#[test]
+fn batch_variant_selection_pads_correctly() {
+    // 3 requests -> the b=4 variant with 1 padded sample; results for the
+    // 3 real samples must be identical to local execution.
+    let Some((rt, dep)) = setup() else { return };
+    let server = start_server(
+        &rt,
+        &dep,
+        ServerConfig { max_batch: 4, batch_timeout: Duration::from_millis(20), n_workers: 1 },
+    );
+    let engine = IntegerEngine::new();
+    let mut data = SynthDigits::new(33);
+    let mut handles = Vec::new();
+    for _ in 0..3 {
+        let (x, _) = data.batch(1);
+        let qx = quantize_input(&x, EPS_IN);
+        let h = server.handle();
+        let qx2 = qx.clone();
+        handles.push((qx, std::thread::spawn(move || h.infer("synthnet", qx2).unwrap())));
+    }
+    for (qx, j) in handles {
+        let served = j.join().unwrap();
+        let local = engine.run(&dep.id, &qx);
+        assert_eq!(served.data(), local.data());
+    }
+    let m = server.stop();
+    assert_eq!(m.completed, 3);
+}

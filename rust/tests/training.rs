@@ -1,0 +1,85 @@
+//! Training-driver integration tests: the PJRT-compiled FP and FQ (QAT)
+//! train steps must actually learn, and training must be deterministic.
+//! Requires artifacts (skips otherwise).
+
+use nemo::data::SynthDigits;
+use nemo::io::artifacts_dir;
+use nemo::model::synthnet::SynthNet;
+use nemo::runtime::Runtime;
+use nemo::train::{train_fp, train_fq, TrainConfig};
+use nemo::util::rng::Rng;
+
+fn runtime() -> Option<Runtime> {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built");
+        return None;
+    }
+    Some(Runtime::new(dir).unwrap())
+}
+
+#[test]
+fn fp_training_reduces_loss() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(41);
+    let mut net = SynthNet::init(&mut rng);
+    let mut data = SynthDigits::new(41);
+    let cfg = TrainConfig { steps: 60, lr: 0.2, lr_decay: false, seed: 41, log_every: 0 };
+    let rep = train_fp(&rt, &mut net, &mut data, &cfg).unwrap();
+    let (head, tail) = rep.head_tail(10);
+    assert!(
+        tail < head - 0.1,
+        "FP loss did not decrease: {head:.3} -> {tail:.3}"
+    );
+    // BN running stats actually moved away from init
+    assert!(net.bn_state[0].0.iter().any(|m| m.abs() > 1e-3));
+}
+
+#[test]
+fn fq_training_reduces_loss_and_updates_betas() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(42);
+    let mut net = SynthNet::init(&mut rng);
+    let mut data = SynthDigits::new(42);
+    let betas_before = net.act_betas.clone();
+    let cfg = TrainConfig { steps: 60, lr: 0.1, lr_decay: false, seed: 42, log_every: 0 };
+    let rep = train_fq(&rt, &mut net, &mut data, 4, 4, &cfg).unwrap();
+    let (head, tail) = rep.head_tail(10);
+    assert!(
+        tail < head,
+        "FQ loss did not decrease: {head:.3} -> {tail:.3}"
+    );
+    // PACT betas are trainable (sec. 2.2) — they must have moved
+    assert_ne!(betas_before, net.act_betas, "act betas were not trained");
+}
+
+#[test]
+fn training_is_deterministic() {
+    let Some(rt) = runtime() else { return };
+    let run = || {
+        let mut rng = Rng::new(43);
+        let mut net = SynthNet::init(&mut rng);
+        let mut data = SynthDigits::new(43);
+        let cfg =
+            TrainConfig { steps: 12, lr: 0.1, lr_decay: true, seed: 43, log_every: 0 };
+        let rep = train_fp(&rt, &mut net, &mut data, &cfg).unwrap();
+        (rep.losses, net.fc_w.data().to_vec())
+    };
+    let (l1, w1) = run();
+    let (l2, w2) = run();
+    assert_eq!(l1, l2, "loss curves diverge across identical runs");
+    assert_eq!(w1, w2, "weights diverge across identical runs");
+}
+
+#[test]
+fn all_fq_bitwidth_artifacts_are_usable() {
+    let Some(rt) = runtime() else { return };
+    for (wb, ab) in [(8u32, 8u32), (4, 4), (2, 2)] {
+        let mut rng = Rng::new(44);
+        let mut net = SynthNet::init(&mut rng);
+        let mut data = SynthDigits::new(44);
+        let cfg = TrainConfig { steps: 3, lr: 0.05, lr_decay: false, seed: 44, log_every: 0 };
+        let rep = train_fq(&rt, &mut net, &mut data, wb, ab, &cfg).unwrap();
+        assert!(rep.final_loss().is_finite(), "w{wb}a{ab} diverged");
+    }
+}
