@@ -1,6 +1,7 @@
 //! Deployment pipeline study (experiment E3): accuracy of the four
 //! representations across weight/activation bit widths, plus the
-//! threshold-merge variant (E2's deployment form).
+//! threshold-merge variant (E2's deployment form). Everything goes
+//! through the typestate pipeline (`Network<Stage>`).
 //!
 //!     cargo run --release --example deploy_pipeline [-- --ckpt ck.json]
 //!
@@ -12,8 +13,9 @@ use nemo::cli::Args;
 use nemo::data::SynthDigits;
 use nemo::io::Checkpoint;
 use nemo::model::synthnet::{SynthNet, EPS_IN};
+use nemo::network::Network;
 use nemo::train::{eval_float, eval_integer};
-use nemo::transform::{calibrate_percentile, deploy, DeployOptions};
+use nemo::transform::DeployOptions;
 use nemo::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
@@ -34,27 +36,27 @@ fn main() -> anyhow::Result<()> {
     let (eval_x, eval_l) = SynthDigits::eval_set(123, 512);
     let mut cal = SynthDigits::new(77);
     let (cal_x, _) = cal.batch(64);
-    net.act_betas =
-        calibrate_percentile(&net.to_fp_graph(), &[cal_x], 0.995);
+    let fp = Network::from_graph(net.to_fp_graph())?;
+    net.act_betas = fp.calibrate_percentile(&[cal_x], 0.995);
 
-    let fp_acc = eval_float(&net.to_fp_graph(), &eval_x, &eval_l);
+    let fp_acc = eval_float(fp.graph(), &eval_x, &eval_l);
     println!("\nE3: accuracy across representations (512 eval samples)");
     println!("{:<18} {:>8} {:>8} {:>8} {:>8}", "bits (W/A)", "FP", "FQ", "QD", "ID");
     for bits in [8u32, 4, 2] {
-        let fq = net.to_pact_graph(bits);
-        let fq_h = nemo::transform::quantize_pact(
-            &net.to_fp_graph(),
-            bits,
-            bits,
-            &net.act_betas,
-        );
-        let fq_acc = eval_float(&fq_h, &eval_x, &eval_l);
-        let dep = deploy(
-            &fq,
-            DeployOptions { wbits: bits, abits: bits, ..DeployOptions::default() },
-        )?;
-        let qd_acc = eval_float(&dep.qd, &eval_x, &eval_l);
-        let id_acc = eval_integer(&dep.id, &eval_x, &eval_l, EPS_IN);
+        // FQ with weights hardened up front (the QAT-style forward pass).
+        let fq_h = Network::from_graph(net.to_fp_graph())?
+            .quantize_pact(bits, bits, &net.act_betas)?;
+        let fq_acc = eval_float(fq_h.graph(), &eval_x, &eval_l);
+        // Deployment path: FQ (unhardened, bit-exact with the Python
+        // reference) -> QD -> ID.
+        let qd = net.to_network(bits)?.deploy(DeployOptions {
+            wbits: bits,
+            abits: bits,
+            ..DeployOptions::default()
+        })?;
+        let qd_acc = eval_float(qd.graph(), &eval_x, &eval_l);
+        let id = qd.integerize();
+        let id_acc = eval_integer(id.int_graph(), &eval_x, &eval_l, EPS_IN);
         println!(
             "{:<18} {:>7.1}% {:>7.1}% {:>7.1}% {:>7.1}%",
             format!("{bits}/{bits}"),
@@ -68,19 +70,18 @@ fn main() -> anyhow::Result<()> {
     // Threshold-merge deployment (sec. 3.4): exact BN+act, no IntBn.
     println!("\nE2 deployment form: threshold-merged BN+activation");
     for bits in [4u32, 2] {
-        let fq = net.to_pact_graph(bits);
-        let dep = deploy(
-            &fq,
-            DeployOptions {
+        let id = net
+            .to_network(bits)?
+            .deploy(DeployOptions {
                 wbits: bits,
                 abits: bits,
                 use_thresholds: true,
                 ..DeployOptions::default()
-            },
-        )?;
-        let id_acc = eval_integer(&dep.id, &eval_x, &eval_l, EPS_IN);
-        let n_th: usize = dep
-            .id
+            })?
+            .integerize();
+        let id_acc = eval_integer(id.int_graph(), &eval_x, &eval_l, EPS_IN);
+        let n_th: usize = id
+            .int_graph()
             .nodes
             .iter()
             .filter(|n| matches!(n.op, nemo::graph::int::IntOp::ThreshAct { .. }))

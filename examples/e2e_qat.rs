@@ -1,7 +1,8 @@
 //! END-TO-END driver (the repository's headline validation; experiments
 //! E3 + E4): proves all three layers compose on a real workload.
+//! Requires the `pjrt` feature (training runs through AOT artifacts):
 //!
-//!     make artifacts && cargo run --release --example e2e_qat
+//!     make artifacts && cargo run --release --features pjrt --example e2e_qat
 //!
 //! Flow (Python never runs — all compute goes through the AOT artifacts
 //! or the Rust engines):
@@ -9,8 +10,8 @@
 //!      PJRT-compiled train step, logging the loss curve;
 //!   2. calibrate PACT clipping bounds from the FP stage (sec. 2);
 //!   3. QAT fine-tune in FakeQuantized at 4 bits (STE + trainable beta);
-//!   4. deploy: harden_weights -> bn_quantizer -> set_deployment ->
-//!      integerize (sec. 3);
+//!   4. deploy through the typestate pipeline: FakeQuantized ->
+//!      QuantizedDeployable -> IntegerDeployable (sec. 3);
 //!   5. evaluate all four representations + the PJRT IntegerDeployable
 //!      artifact, and check engine-vs-PJRT bit-exactness.
 //!
@@ -20,11 +21,11 @@ use nemo::data::SynthDigits;
 use nemo::io::artifacts_dir;
 use nemo::model::artifact_args::synthnet_id_args;
 use nemo::model::synthnet::{SynthNet, EPS_IN};
+use nemo::network::Network;
 use nemo::quant::quantize_input;
 use nemo::runtime::Runtime;
-use nemo::engine::IntegerEngine;
 use nemo::train::{eval_float, eval_integer, train_fp, train_fq, TrainConfig};
-use nemo::transform::{calibrate_percentile, deploy, DeployOptions};
+use nemo::transform::DeployOptions;
 use nemo::util::rng::Rng;
 
 fn curve(losses: &[f64], buckets: usize) -> String {
@@ -43,6 +44,7 @@ fn main() -> anyhow::Result<()> {
     let mut net = SynthNet::init(&mut rng);
     let mut data = SynthDigits::new(seed);
     let bits = 4u32;
+    let opts = DeployOptions { wbits: bits, abits: bits, ..DeployOptions::default() };
 
     // -- 1. FullPrecision training ---------------------------------------
     let fp_cfg = TrainConfig { steps: 600, lr: 0.3, lr_decay: true, seed, log_every: 100 };
@@ -59,15 +61,13 @@ fn main() -> anyhow::Result<()> {
 
     // -- 2. calibration ----------------------------------------------------
     let (cal_x, _) = data.batch(128);
-    net.act_betas = calibrate_percentile(&net.to_fp_graph(), &[cal_x], 0.995);
+    net.act_betas = Network::from_graph(net.to_fp_graph())?
+        .calibrate_percentile(&[cal_x], 0.995);
     println!("\n== stage 2: calibrated PACT betas {:?}", net.act_betas);
 
     // Pre-QAT deployment at 4 bits (ablation: what QAT buys us, E4).
-    let dep0 = deploy(
-        &net.to_pact_graph(bits),
-        DeployOptions { wbits: bits, abits: bits, ..DeployOptions::default() },
-    )?;
-    let id_acc_pre = eval_integer(&dep0.id, &eval_x, &eval_l, EPS_IN);
+    let id0 = net.to_network(bits)?.deploy(opts)?.integerize();
+    let id_acc_pre = eval_integer(id0.int_graph(), &eval_x, &eval_l, EPS_IN);
 
     // -- 3. QAT fine-tune at 4 bits (STE, trainable beta) ------------------
     let fq_cfg = TrainConfig { steps: 300, lr: 0.06, lr_decay: true, seed, log_every: 100 };
@@ -76,13 +76,10 @@ fn main() -> anyhow::Result<()> {
     println!("loss curve: {}", curve(&fq_rep.losses, 8));
     println!("betas after QAT: {:?}", net.act_betas);
 
-    // -- 4. deployment ------------------------------------------------------
+    // -- 4. deployment (typestate pipeline FQ -> QD -> ID) -----------------
     println!("\n== stage 4: deployment (sec. 3 pipeline) ==");
-    let dep = deploy(
-        &net.to_pact_graph(bits),
-        DeployOptions { wbits: bits, abits: bits, ..DeployOptions::default() },
-    )?;
-    for l in &dep.layers {
+    let nid = net.to_network(bits)?.deploy(opts)?.integerize();
+    for l in nid.layers() {
         println!(
             "  {:<6} eps_w {:.3e}  eps_phi_out {:.3e}  eps_y {:.3e}  m {} d {}",
             l.name, l.eps_w, l.eps_phi_out, l.eps_y, l.m, l.d
@@ -91,8 +88,8 @@ fn main() -> anyhow::Result<()> {
 
     // -- 5. evaluation -------------------------------------------------------
     println!("\n== stage 5: evaluation (1024 samples) ==");
-    let fq_acc = eval_float(&dep.qd, &eval_x, &eval_l); // QD == hardened FQ
-    let id_acc = eval_integer(&dep.id, &eval_x, &eval_l, EPS_IN);
+    let fq_acc = eval_float(&nid.deployed().qd, &eval_x, &eval_l); // QD == hardened FQ
+    let id_acc = eval_integer(nid.int_graph(), &eval_x, &eval_l, EPS_IN);
     println!("  FP  (float32)           : {:.1}%", fp_acc * 100.0);
     println!("  ID  w{bits}a{bits} pre-QAT      : {:.1}%", id_acc_pre * 100.0);
     println!("  QD  w{bits}a{bits} post-QAT     : {:.1}%", fq_acc * 100.0);
@@ -100,9 +97,9 @@ fn main() -> anyhow::Result<()> {
 
     // PJRT (Pallas kernels) vs integer engine: bit-exact on a batch.
     let qx = quantize_input(&eval_x.slice_batch(0, 16), EPS_IN);
-    let engine_out = IntegerEngine::new().run(&dep.id, &qx);
+    let engine_out = nid.run(&qx);
     let exe = rt.load("synthnet_id_fwd_b16")?;
-    let mut args = synthnet_id_args(&dep)?;
+    let mut args = synthnet_id_args(nid.deployed())?;
     args.push(qx.into());
     let pjrt_out = exe.run(&args)?;
     assert_eq!(

@@ -2,16 +2,19 @@
 //!
 //!     cargo run --release --example quickstart
 //!
-//! Builds a small MLP, walks it FullPrecision -> FakeQuantized ->
-//! QuantizedDeployable -> IntegerDeployable, and shows that the final
-//! integer-only network (no floats anywhere on the value path) agrees
-//! with the float pipeline. No AOT artifacts required.
+//! Builds a small MLP and walks it through the typestate pipeline
+//! FullPrecision -> FakeQuantized -> QuantizedDeployable ->
+//! IntegerDeployable. Each stage is a distinct *type* — the only methods
+//! available are the paper's legal transforms, and every transition
+//! consumes the previous stage. The final integer-only network (no
+//! floats anywhere on the value path) agrees with the float pipeline.
+//! No AOT artifacts required.
 
-use nemo::engine::{FloatEngine, IntegerEngine};
 use nemo::model::mlp;
+use nemo::network::Network;
 use nemo::quant::quantize_input;
 use nemo::tensor::Tensor;
-use nemo::transform::{calibrate, deploy, quantize_pact, DeployOptions};
+use nemo::transform::DeployOptions;
 use nemo::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
@@ -19,28 +22,29 @@ fn main() -> anyhow::Result<()> {
     let eps_in = 1.0 / 255.0;
 
     // 1. FullPrecision: an ordinary float network (sec. 1).
-    let fp = mlp(&mut rng, 64, 48, 10, eps_in);
+    let fp = Network::from_graph(mlp(&mut rng, 64, 48, 10, eps_in))?;
     let x = Tensor::from_vec(
         &[4, 64],
         (0..256).map(|_| rng.uniform(0.0, 1.0) as f32).collect(),
     );
-    let fp_out = FloatEngine::new().run(&fp, &x);
+    let fp_out = fp.run(&x);
 
     // 2. FakeQuantized: PACT clipping bounds from FP calibration (sec. 2).
-    let betas = calibrate(&fp, &[x.clone()]);
+    let betas = fp.calibrate(&[x.clone()]);
     println!("calibrated PACT betas: {betas:?}");
-    let fq = quantize_pact(&fp, 8, 8, &betas);
-    let fq_out = FloatEngine::new().run(&fq, &x);
+    let fq = fp.quantize_pact(8, 8, &betas)?;
+    let fq_out = fq.run(&x);
 
-    // 3+4. QuantizedDeployable + IntegerDeployable in one transform
-    //      (harden_weights + bn_quantizer + set_deployment + integerize).
-    let dep = deploy(&fq, DeployOptions::default())?;
-    let qd_out = FloatEngine::new().run(&dep.qd, &x);
+    // 3. QuantizedDeployable (harden_weights + bn_quantizer +
+    //    set_deployment): still float, every value on its grid.
+    let qd = fq.deploy(DeployOptions::default())?;
+    let qd_out = qd.run(&x);
 
-    // Integer-only inference: quantize the input image (eps_in = 1/255,
-    // sec. 3.7) and run on integer images end to end.
+    // 4. IntegerDeployable (integerize_pact): quantize the input image
+    //    (eps_in = 1/255, sec. 3.7) and run on integer images end to end.
+    let id = qd.integerize();
     let qx = quantize_input(&x, eps_in);
-    let id_out = IntegerEngine::new().run(&dep.id, &qx);
+    let id_out = id.run(&qx);
 
     println!("\nlogits for sample 0:");
     println!("  FP : {:?}", &fp_out.data()[..10]);
@@ -48,7 +52,7 @@ fn main() -> anyhow::Result<()> {
     println!("  QD : {:?}", &qd_out.data()[..10]);
     let id_real: Vec<f32> = id_out.data()[..10]
         .iter()
-        .map(|q| (*q as f64 * dep.eps_out) as f32)
+        .map(|q| (*q as f64 * id.eps_out()) as f32)
         .collect();
     println!("  ID : {id_real:?}  (eps_out * integer image)");
     println!("  ID integer image: {:?}", &id_out.data()[..10]);
@@ -62,7 +66,7 @@ fn main() -> anyhow::Result<()> {
     println!("max |QD - eps*ID| = {:.2e}", {
         let mut m = 0f64;
         for (a, b) in qd_out.data().iter().zip(id_out.data()) {
-            m = m.max((*a as f64 - *b as f64 * dep.eps_out).abs());
+            m = m.max((*a as f64 - *b as f64 * id.eps_out()).abs());
         }
         m
     });

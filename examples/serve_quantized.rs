@@ -1,30 +1,68 @@
 //! Serving demo (experiment E8): the coordinator batching requests over
-//! the AOT-compiled IntegerDeployable executables, swept over batching
-//! configurations.
+//! an [`Executor`] backend, swept over batching configurations.
 //!
-//!     make artifacts && cargo run --release --example serve_quantized
+//!     cargo run --release --example serve_quantized
+//!     cargo run --release --features pjrt --example serve_quantized -- --backend pjrt
 //!
+//! `--backend native` (the default) serves the in-process integer engine
+//! — no artifacts needed. `--backend pjrt` serves the AOT-compiled
+//! IntegerDeployable executables through the identical coordinator path.
 //! Prints a latency/throughput table per (max_batch, clients) point —
 //! the data behind EXPERIMENTS.md E8.
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use nemo::cli::Args;
 use nemo::coordinator::{ModelVariant, Server, ServerConfig};
 use nemo::data::SynthDigits;
-use nemo::io::artifacts_dir;
-use nemo::model::artifact_args::synthnet_id_args;
+use nemo::exec::Executor;
 use nemo::model::synthnet::{SynthNet, EPS_IN};
+use nemo::network::{IntegerDeployable, Network};
 use nemo::quant::quantize_input;
-use nemo::runtime::Runtime;
-use nemo::transform::{deploy, DeployOptions};
+use nemo::transform::DeployOptions;
 use nemo::util::rng::Rng;
 
+#[cfg(feature = "pjrt")]
+fn pjrt_exec(nid: &Network<IntegerDeployable>) -> anyhow::Result<Arc<dyn Executor>> {
+    use nemo::model::artifact_args::synthnet_id_args;
+    let rt = nemo::runtime::Runtime::new(nemo::io::artifacts_dir())?;
+    let base_args = synthnet_id_args(nid.deployed())?;
+    let kind = if rt.manifest.by_kind("id_fwd_xla").is_empty() {
+        "id_fwd"
+    } else {
+        "id_fwd_xla"
+    };
+    Ok(Arc::new(nemo::exec::PjrtExecutor::load(&rt, kind, base_args)?))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_exec(_nid: &Network<IntegerDeployable>) -> anyhow::Result<Arc<dyn Executor>> {
+    anyhow::bail!(
+        "built without the `pjrt` feature; rerun with \
+         `cargo run --features pjrt --example serve_quantized -- --backend pjrt`"
+    )
+}
+
 fn main() -> anyhow::Result<()> {
-    let rt = Runtime::new(artifacts_dir())?;
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(
+        &std::iter::once("serve_quantized".to_string())
+            .chain(argv)
+            .collect::<Vec<_>>(),
+    )?;
+
     let mut rng = Rng::new(4);
     let net = SynthNet::init(&mut rng);
-    let dep = deploy(&net.to_pact_graph(8), DeployOptions::default())?;
-    let base_args = synthnet_id_args(&dep)?;
+    let nid = net.to_network(8)?.deploy(DeployOptions::default())?.integerize();
+
+    let backend = args.str_or("backend", "native");
+    let exec: Arc<dyn Executor> = match backend.as_str() {
+        "native" => Arc::new(nid.to_executor(16)?),
+        "pjrt" => pjrt_exec(&nid)?,
+        b => anyhow::bail!("unknown backend '{b}' (expected native|pjrt)"),
+    };
+    println!("backend: {}", exec.name());
 
     println!(
         "{:<10} {:>8} {:>10} {:>10} {:>10} {:>12} {:>10}",
@@ -33,7 +71,7 @@ fn main() -> anyhow::Result<()> {
     let n_requests = 1024usize;
     for max_batch in [1usize, 4, 16] {
         for clients in [1usize, 8, 32] {
-            let model = ModelVariant::load(&rt, "synthnet", "id_fwd_xla", base_args.clone())?;
+            let model = ModelVariant::new("synthnet", exec.clone());
             let server = Server::start(
                 vec![model],
                 ServerConfig {

@@ -5,7 +5,9 @@
 //!
 //! or a subset: `cargo bench -- E1 E5`. Results are recorded in
 //! EXPERIMENTS.md. criterion is not in the offline vendor set; timing
-//! uses util::timer::bench (warmup + min-time loop).
+//! uses util::timer::bench (warmup + min-time loop). Requires the `pjrt`
+//! feature (PJRT-dependent benches skip gracefully without artifacts).
+#![allow(deprecated)] // benches time the legacy shims alongside the new API
 
 use std::time::Duration;
 

@@ -5,6 +5,10 @@
 //!   images with i64 widening — no floating point on the value path. It
 //!   is the simulator standing in for the paper's MCU integer datapath
 //!   (DESIGN.md §Hardware-Adaptation).
+//!
+//! These are the raw single-call engines; for batched serving and
+//! backend-interchangeable execution they are wrapped by the
+//! [`crate::exec::Executor`] implementations.
 
 pub mod float;
 pub mod integer;

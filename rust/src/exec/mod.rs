@@ -1,0 +1,309 @@
+//! Unified executor backend abstraction (S5/S6 in DESIGN.md).
+//!
+//! Every way of running a network — the float engine (FP/FQ/QD), the
+//! integer engine (ID, the MCU-datapath simulator) and the PJRT-compiled
+//! artifacts — sits behind one [`Executor`] trait, so the serving
+//! coordinator, benchmarks and tools can drive any backend through the
+//! same `run_batch` call:
+//!
+//! * [`NativeIntExecutor`] — the in-process integer engine over an
+//!   [`IntGraph`]; no artifacts, no FFI, always available.
+//! * [`NativeFloatExecutor`] — the float engine over a FP/FQ/QD [`Graph`].
+//! * `PjrtExecutor` (feature `pjrt`) — AOT-compiled HLO artifacts on the
+//!   PJRT CPU client, with per-batch-size compiled variants and
+//!   transparent zero-padding.
+//!
+//! [`Arg`] is the host-side tensor value crossing any executor boundary
+//! (it also crosses the PJRT FFI boundary when the `pjrt` feature is on).
+
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtExecutor;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::engine::{FloatEngine, IntegerEngine};
+use crate::graph::int::{IntGraph, IntOp};
+use crate::graph::{Graph, Op};
+use crate::tensor::{TensorF, TensorI};
+
+/// A host-side tensor value crossing an executor boundary.
+#[derive(Clone, Debug)]
+pub enum Arg {
+    F32(TensorF),
+    I32(TensorI),
+}
+
+impl Arg {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Arg::F32(t) => t.shape(),
+            Arg::I32(t) => t.shape(),
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&TensorF> {
+        match self {
+            Arg::F32(t) => Ok(t),
+            Arg::I32(_) => bail!("expected f32 tensor, got i32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&TensorI> {
+        match self {
+            Arg::I32(t) => Ok(t),
+            Arg::F32(_) => bail!("expected i32 tensor, got f32"),
+        }
+    }
+}
+
+impl From<TensorF> for Arg {
+    fn from(t: TensorF) -> Self {
+        Arg::F32(t)
+    }
+}
+
+impl From<TensorI> for Arg {
+    fn from(t: TensorI) -> Self {
+        Arg::I32(t)
+    }
+}
+
+/// One gathered batch of inputs for an executor. The leading dimension of
+/// `batch` is the batch size.
+#[derive(Clone, Debug)]
+pub struct ExecInput {
+    pub batch: Arg,
+}
+
+impl ExecInput {
+    pub fn i32(t: TensorI) -> Self {
+        ExecInput { batch: Arg::I32(t) }
+    }
+
+    pub fn f32(t: TensorF) -> Self {
+        ExecInput { batch: Arg::F32(t) }
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch.shape().first().copied().unwrap_or(0)
+    }
+}
+
+/// Result of one `run_batch`: the per-sample logits batch, with the same
+/// batch size as the input (executors strip any internal padding).
+#[derive(Clone, Debug)]
+pub struct ExecOutput {
+    pub logits: Arg,
+}
+
+impl ExecOutput {
+    pub fn int_logits(&self) -> Result<&TensorI> {
+        self.logits.as_i32()
+    }
+}
+
+/// A batched inference backend. Implementations must be shareable across
+/// the coordinator's worker threads.
+pub trait Executor: Send + Sync {
+    /// Short backend name for logs/metrics ("native-int", "pjrt", ...).
+    fn name(&self) -> &str;
+
+    /// Per-sample input shape (without the batch dimension).
+    fn input_shape(&self) -> &[usize];
+
+    /// Largest batch accepted by a single `run_batch` call.
+    fn max_batch(&self) -> usize;
+
+    /// Batch size actually executed for `n` gathered samples (backends
+    /// with compiled batch variants round up and zero-pad internally).
+    fn effective_batch(&self, n: usize) -> usize {
+        n
+    }
+
+    /// Execute one gathered batch and return per-sample outputs.
+    fn run_batch(&self, input: &ExecInput) -> Result<ExecOutput>;
+}
+
+fn check_batch_shape(
+    name: &str,
+    got: &[usize],
+    want_sample: &[usize],
+    max_batch: usize,
+) -> Result<usize> {
+    ensure!(
+        got.len() == want_sample.len() + 1 && &got[1..] == want_sample,
+        "{name}: input shape {got:?} does not match per-sample shape {want_sample:?} (plus batch dim)",
+    );
+    let n = got[0];
+    ensure!(n >= 1, "{name}: empty batch");
+    ensure!(
+        n <= max_batch,
+        "{name}: batch {n} exceeds max_batch {max_batch}",
+    );
+    Ok(n)
+}
+
+/// The in-process integer engine behind the [`Executor`] trait: runs an
+/// IntegerDeployable graph with no artifacts and no FFI. This is the
+/// `serve --backend native` path.
+pub struct NativeIntExecutor {
+    graph: IntGraph,
+    input_shape: Vec<usize>,
+    max_batch: usize,
+    engine: IntegerEngine,
+}
+
+impl NativeIntExecutor {
+    pub fn new(graph: IntGraph, max_batch: usize) -> Result<Self> {
+        let input_shape = match graph.nodes.first().map(|n| &n.op) {
+            Some(IntOp::Input { shape, .. }) => shape.clone(),
+            _ => bail!("integer graph has no leading Input node"),
+        };
+        ensure!(max_batch >= 1, "max_batch must be >= 1");
+        Ok(NativeIntExecutor {
+            graph,
+            input_shape,
+            max_batch,
+            engine: IntegerEngine::new(),
+        })
+    }
+
+    /// Quantum of the output integer image (real logits ~ eps_out * Q).
+    pub fn eps_out(&self) -> f64 {
+        self.graph.eps_out
+    }
+}
+
+impl Executor for NativeIntExecutor {
+    fn name(&self) -> &str {
+        "native-int"
+    }
+
+    fn input_shape(&self) -> &[usize] {
+        &self.input_shape
+    }
+
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    fn run_batch(&self, input: &ExecInput) -> Result<ExecOutput> {
+        let qx = input.batch.as_i32()?;
+        check_batch_shape("native-int", qx.shape(), &self.input_shape, self.max_batch)?;
+        let out = self.engine.run(&self.graph, qx);
+        Ok(ExecOutput { logits: Arg::I32(out) })
+    }
+}
+
+/// The float engine behind the [`Executor`] trait: runs FP / FQ / QD
+/// graphs on f32 batches. Note the serving coordinator's request
+/// protocol carries integer images only, so this backend is for direct
+/// `run_batch` callers (tools, benches, comparisons), not for
+/// `coordinator::ModelVariant`.
+pub struct NativeFloatExecutor {
+    graph: Graph,
+    input_shape: Vec<usize>,
+    max_batch: usize,
+    engine: FloatEngine,
+}
+
+impl NativeFloatExecutor {
+    pub fn new(graph: Graph, max_batch: usize) -> Result<Self> {
+        let input_shape = match graph.nodes.first().map(|n| &n.op) {
+            Some(Op::Input { shape }) => shape.clone(),
+            _ => bail!("float graph has no leading Input node"),
+        };
+        ensure!(max_batch >= 1, "max_batch must be >= 1");
+        Ok(NativeFloatExecutor {
+            graph,
+            input_shape,
+            max_batch,
+            engine: FloatEngine::new(),
+        })
+    }
+}
+
+impl Executor for NativeFloatExecutor {
+    fn name(&self) -> &str {
+        "native-float"
+    }
+
+    fn input_shape(&self) -> &[usize] {
+        &self.input_shape
+    }
+
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    fn run_batch(&self, input: &ExecInput) -> Result<ExecOutput> {
+        let x = input.batch.as_f32()?;
+        check_batch_shape("native-float", x.shape(), &self.input_shape, self.max_batch)?;
+        let out = self.engine.run(&self.graph, x);
+        Ok(ExecOutput { logits: Arg::F32(out) })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::QuantSpec;
+    use crate::tensor::Tensor;
+
+    fn identity_int_graph() -> IntGraph {
+        let mut g = IntGraph::default();
+        let spec = QuantSpec { eps: 1.0, lo: 0, hi: 255 };
+        let x = g.push("in", IntOp::Input { shape: vec![2], spec }, &[]);
+        let wq = Tensor::from_vec(&[2, 2], vec![1, 0, 0, 1]);
+        g.push("fc", IntOp::LinearInt { wq, bias_q: None }, &[x]);
+        g.eps_out = 1.0;
+        g
+    }
+
+    #[test]
+    fn native_int_executor_runs_a_batch() {
+        let exec = NativeIntExecutor::new(identity_int_graph(), 8).unwrap();
+        assert_eq!(exec.input_shape(), &[2]);
+        assert_eq!(exec.max_batch(), 8);
+        assert_eq!(exec.effective_batch(3), 3);
+        let qx = Tensor::from_vec(&[2, 2], vec![1, 2, 3, 4]);
+        let out = exec.run_batch(&ExecInput::i32(qx)).unwrap();
+        assert_eq!(out.int_logits().unwrap().data(), &[1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn native_int_executor_rejects_bad_shapes() {
+        let exec = NativeIntExecutor::new(identity_int_graph(), 2).unwrap();
+        // wrong sample shape
+        let qx = Tensor::from_vec(&[1, 3], vec![1, 2, 3]);
+        assert!(exec.run_batch(&ExecInput::i32(qx)).is_err());
+        // over max batch
+        let qx = Tensor::from_vec(&[3, 2], vec![0; 6]);
+        assert!(exec.run_batch(&ExecInput::i32(qx)).is_err());
+        // wrong dtype
+        let x = TensorF::from_vec(&[1, 2], vec![0.0, 1.0]);
+        assert!(exec.run_batch(&ExecInput::f32(x)).is_err());
+    }
+
+    #[test]
+    fn native_int_executor_requires_input_node() {
+        let mut g = IntGraph::default();
+        let wq = Tensor::from_vec(&[1, 1], vec![1]);
+        g.push("fc", IntOp::LinearInt { wq, bias_q: None }, &[]);
+        assert!(NativeIntExecutor::new(g, 4).is_err());
+    }
+
+    #[test]
+    fn native_float_executor_runs_a_batch() {
+        let mut g = Graph::new(1.0 / 255.0);
+        let x = g.push("in", Op::Input { shape: vec![2] }, &[]);
+        g.push("act", Op::ReLU, &[x]);
+        let exec = NativeFloatExecutor::new(g, 4).unwrap();
+        let x = TensorF::from_vec(&[1, 2], vec![-1.0, 2.0]);
+        let out = exec.run_batch(&ExecInput::f32(x)).unwrap();
+        assert_eq!(out.logits.as_f32().unwrap().data(), &[0.0, 2.0]);
+    }
+}

@@ -1,0 +1,91 @@
+//! PJRT-backed [`Executor`]: serves the AOT-compiled IntegerDeployable
+//! artifacts through the same interface as the native engines.
+//!
+//! Artifacts are lowered at several batch sizes (1/2/4/8/16); `run_batch`
+//! picks the smallest compiled variant that fits, zero-pads the gathered
+//! batch up to it, and slices the padding back off the outputs, so
+//! callers see exactly the batch they submitted.
+
+use std::sync::Arc;
+
+use anyhow::{ensure, Context, Result};
+
+use super::{Arg, ExecInput, ExecOutput, Executor};
+use crate::runtime::{Executable, Runtime};
+use crate::tensor::Tensor;
+
+pub struct PjrtExecutor {
+    /// (batch, executable), ascending by batch.
+    variants: Vec<(usize, Arc<Executable>)>,
+    /// The non-input arguments (integer deployment parameters).
+    base_args: Vec<Arg>,
+    /// Per-sample input shape (e.g. [1, 16, 16]).
+    input_shape: Vec<usize>,
+}
+
+impl PjrtExecutor {
+    /// Load every `kind` artifact (e.g. "id_fwd") from the runtime.
+    pub fn load(rt: &Runtime, kind: &str, base_args: Vec<Arg>) -> Result<Self> {
+        let specs = rt.manifest.by_kind(kind);
+        ensure!(!specs.is_empty(), "no artifacts of kind '{kind}' in manifest");
+        let mut variants = Vec::new();
+        let mut input_shape = Vec::new();
+        for s in specs {
+            let b = s
+                .batch
+                .with_context(|| format!("artifact '{}' missing batch size", s.name))?;
+            input_shape = s.sample_input_shape()?;
+            variants.push((b, rt.load(&s.name)?));
+        }
+        variants.sort_by_key(|(b, _)| *b);
+        Ok(PjrtExecutor { variants, base_args, input_shape })
+    }
+
+    /// Smallest compiled variant with batch >= n (largest otherwise).
+    fn pick(&self, n: usize) -> &(usize, Arc<Executable>) {
+        self.variants
+            .iter()
+            .find(|(b, _)| *b >= n)
+            .unwrap_or_else(|| self.variants.last().unwrap())
+    }
+}
+
+impl Executor for PjrtExecutor {
+    fn name(&self) -> &str {
+        "pjrt"
+    }
+
+    fn input_shape(&self) -> &[usize] {
+        &self.input_shape
+    }
+
+    fn max_batch(&self) -> usize {
+        self.variants.last().map(|(b, _)| *b).unwrap_or(1)
+    }
+
+    fn effective_batch(&self, n: usize) -> usize {
+        self.pick(n).0
+    }
+
+    fn run_batch(&self, input: &ExecInput) -> Result<ExecOutput> {
+        let qx = input.batch.as_i32()?;
+        let n =
+            super::check_batch_shape("pjrt", qx.shape(), &self.input_shape, self.max_batch())?;
+        let (batch, exe) = self.pick(n);
+        // Zero-pad the gathered batch up to the compiled variant.
+        let sample_len: usize = self.input_shape.iter().product();
+        let mut data = qx.data().to_vec();
+        data.resize(batch * sample_len, 0);
+        let mut shape = vec![*batch];
+        shape.extend_from_slice(&self.input_shape);
+        let mut args = self.base_args.clone();
+        args.push(Tensor::from_vec(&shape, data).into());
+        let outs = exe.run(&args)?;
+        // First output is the logits batch; strip the padding rows.
+        let logits = match outs.into_iter().next().context("executable produced no outputs")? {
+            Arg::I32(t) => Arg::I32(t.slice_batch(0, n)),
+            Arg::F32(t) => Arg::F32(t.slice_batch(0, n)),
+        };
+        Ok(ExecOutput { logits })
+    }
+}

@@ -153,17 +153,23 @@ impl Graph {
                     return Err(GraphError::NotTopological(n.id));
                 }
             }
-            let want = match n.op {
-                Op::Input { .. } => 0,
-                Op::Add => n.inputs.len().max(2), // >= 2
-                _ => 1,
-            };
-            if matches!(n.op, Op::Add) {
-                if n.inputs.len() < 2 {
-                    return Err(GraphError::Arity(n.id, n.op.name(), n.inputs.len(), 2));
+            match n.op {
+                // Add is variadic with a lower bound of two inputs.
+                Op::Add => {
+                    if n.inputs.len() < 2 {
+                        return Err(GraphError::Arity(n.id, n.op.name(), n.inputs.len(), 2));
+                    }
                 }
-            } else if n.inputs.len() != want {
-                return Err(GraphError::Arity(n.id, n.op.name(), n.inputs.len(), want));
+                Op::Input { .. } => {
+                    if !n.inputs.is_empty() {
+                        return Err(GraphError::Arity(n.id, n.op.name(), n.inputs.len(), 0));
+                    }
+                }
+                _ => {
+                    if n.inputs.len() != 1 {
+                        return Err(GraphError::Arity(n.id, n.op.name(), n.inputs.len(), 1));
+                    }
+                }
             }
         }
         // Branch rule (sec. 1): any node with fanout > 1 must be an

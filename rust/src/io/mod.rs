@@ -43,6 +43,31 @@ pub struct Manifest {
     pub dir: PathBuf,
 }
 
+impl ArtifactSpec {
+    /// Per-sample input shape of the artifact: the trailing argument is
+    /// the batched input image, so strip its batch dimension. Artifacts
+    /// with no arguments (or a scalar trailing argument) are malformed
+    /// manifests and yield a contextful error instead of a panic.
+    pub fn sample_input_shape(&self) -> Result<Vec<usize>> {
+        let last = self.args.last().with_context(|| {
+            format!(
+                "artifact '{}' has no arguments (expected the batched input \
+                 image as the last argument)",
+                self.name
+            )
+        })?;
+        if last.shape.is_empty() {
+            anyhow::bail!(
+                "artifact '{}': trailing argument '{}' is a scalar, not a \
+                 batched input image",
+                self.name,
+                last.name
+            );
+        }
+        Ok(last.shape[1..].to_vec())
+    }
+}
+
 impl Manifest {
     pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
         let dir = dir.as_ref().to_path_buf();
@@ -244,6 +269,59 @@ pub fn artifacts_dir() -> PathBuf {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn sample_input_shape_strips_batch_dim() {
+        let spec = ArtifactSpec {
+            name: "m_b4".into(),
+            file: PathBuf::from("m_b4.hlo.txt"),
+            args: vec![
+                ArgSpec { name: "w".into(), shape: vec![8, 8], dtype: "int32".into() },
+                ArgSpec { name: "qx".into(), shape: vec![4, 1, 16, 16], dtype: "int32".into() },
+            ],
+            n_outputs: 1,
+            kind: "id_fwd".into(),
+            batch: Some(4),
+            wbits: None,
+            abits: None,
+        };
+        assert_eq!(spec.sample_input_shape().unwrap(), vec![1, 16, 16]);
+    }
+
+    #[test]
+    fn sample_input_shape_errors_on_empty_args() {
+        // Previously this panicked via args.last().unwrap(); a malformed
+        // manifest must produce a contextful error naming the artifact.
+        let spec = ArtifactSpec {
+            name: "broken".into(),
+            file: PathBuf::from("broken.hlo.txt"),
+            args: vec![],
+            n_outputs: 1,
+            kind: "id_fwd".into(),
+            batch: Some(1),
+            wbits: None,
+            abits: None,
+        };
+        let err = spec.sample_input_shape().unwrap_err();
+        assert!(err.to_string().contains("broken"), "{err}");
+        assert!(err.to_string().contains("no arguments"), "{err}");
+    }
+
+    #[test]
+    fn sample_input_shape_errors_on_scalar_input() {
+        let spec = ArtifactSpec {
+            name: "scalar_in".into(),
+            file: PathBuf::from("s.hlo.txt"),
+            args: vec![ArgSpec { name: "lr".into(), shape: vec![], dtype: "float32".into() }],
+            n_outputs: 1,
+            kind: "id_fwd".into(),
+            batch: Some(1),
+            wbits: None,
+            abits: None,
+        };
+        let err = spec.sample_input_shape().unwrap_err();
+        assert!(err.to_string().contains("scalar"), "{err}");
+    }
 
     #[test]
     fn checkpoint_roundtrip_is_exact() {

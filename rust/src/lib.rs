@@ -8,31 +8,48 @@
 //! transforms between them; the last one runs inference using *only*
 //! integers. This crate implements:
 //!
-//! * the full representation pipeline over a graph IR
-//!   ([`graph`], [`transform`]);
-//! * the quantization/requantization math of paper secs. 2-3 ([`quant`]);
-//! * two executors ([`engine`]): a float engine for FP/FQ/QD and an
-//!   integer-only engine for ID (the MCU-datapath simulator);
-//! * a PJRT runtime ([`runtime`]) that loads the AOT-compiled JAX/Pallas
-//!   artifacts (`artifacts/*.hlo.txt`) produced by `python/compile/`;
+//! * the representation pipeline as a **typestate API** ([`network`]):
+//!   `Network<FullPrecision> -> Network<FakeQuantized> ->
+//!   Network<QuantizedDeployable> -> Network<IntegerDeployable>`, where
+//!   only the paper's legal transforms exist between adjacent stages and
+//!   illegal pipelines are compile errors;
+//! * the transform math behind those transitions over a graph IR
+//!   ([`graph`], [`transform`]) and the quantization/requantization math
+//!   of paper secs. 2-3 ([`quant`]);
+//! * a unified **[`exec::Executor`] backend trait** with three
+//!   implementations: the float engine (FP/FQ/QD), the integer-only
+//!   engine (ID — the MCU-datapath simulator; both in [`engine`]/
+//!   [`exec`]), and a PJRT-backed executor over the AOT-compiled
+//!   JAX/Pallas artifacts (feature `pjrt`);
+//! * a PJRT runtime ([`runtime`], feature `pjrt`) that loads the
+//!   HLO-text artifacts produced by `python/compile/`;
 //! * a serving coordinator ([`coordinator`]) with dynamic batching over
-//!   the compiled IntegerDeployable executables;
-//! * a QAT training driver ([`train`]) that runs the compiled
-//!   FakeQuantized train step — Python is never on the request path;
+//!   *any* executor — `serve --backend native` needs no artifacts at
+//!   all, `--backend pjrt` serves the compiled ones through the same
+//!   path;
+//! * a QAT training driver ([`train`], feature `pjrt`) that runs the
+//!   compiled FakeQuantized train step — Python is never on the request
+//!   path;
 //! * model zoo, synthetic dataset, checkpoint/manifest I/O
 //!   ([`model`], [`data`], [`io`]).
 //!
-//! See DESIGN.md for the paper-to-module map and EXPERIMENTS.md for the
-//! reproduced experiment suite.
+//! Feature `pjrt` gates everything that needs the `xla` FFI crate; the
+//! default build is pure Rust (native engines + coordinator + pipeline).
+//!
+//! See DESIGN.md for the paper-to-module map and the typestate pipeline
+//! diagram, and EXPERIMENTS.md for the reproduced experiment suite.
 
 pub mod cli;
 pub mod coordinator;
 pub mod data;
 pub mod engine;
+pub mod exec;
 pub mod graph;
 pub mod io;
 pub mod model;
+pub mod network;
 pub mod quant;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod tensor;
 pub mod train;

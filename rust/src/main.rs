@@ -3,30 +3,35 @@
 //! Subcommands:
 //!   train     train SynthNet (FP, then optional FQ fine-tune) via the
 //!             AOT-compiled PJRT train steps; writes a checkpoint
-//!   deploy    run the quantization pipeline on a checkpoint; prints the
-//!             per-layer quantization table and validates QD/ID agreement
+//!             (requires the `pjrt` feature)
+//!   deploy    run the typestate quantization pipeline on a checkpoint;
+//!             prints the per-layer quantization table and validates
+//!             QD/ID agreement
 //!   infer     classify synthetic samples with the IntegerDeployable
-//!             engine from a checkpoint
+//!             network from a checkpoint
 //!   serve     start the serving coordinator and run a self-driving load
-//!             test; prints latency/throughput metrics
+//!             test; `--backend native` serves the in-process integer
+//!             engine (no artifacts needed), `--backend pjrt` the
+//!             compiled executables
 //!   validate  re-run the cross-language golden checks
 //!   info      list artifacts and platform info
 //!
 //! `nemo <sub> --help-less`: flags are documented in README.md.
+
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use nemo::cli::Args;
 use nemo::coordinator::{ModelVariant, Server, ServerConfig};
 use nemo::data::SynthDigits;
-use nemo::engine::IntegerEngine;
+use nemo::exec::Executor as _;
 use nemo::io::{artifacts_dir, Checkpoint, Goldens};
-use nemo::model::artifact_args::{synthnet_id_args, synthnet_fp_args};
 use nemo::model::synthnet::{SynthNet, EPS_IN};
+use nemo::network::{IntegerDeployable, Network};
 use nemo::quant::quantize_input;
-use nemo::runtime::Runtime;
-use nemo::train::{eval_float, eval_integer, train_fp, train_fq, TrainConfig};
-use nemo::transform::{deploy, DeployOptions};
+use nemo::train::{eval_float, eval_integer};
+use nemo::transform::DeployOptions;
 use nemo::util::rng::Rng;
 
 fn main() {
@@ -63,13 +68,9 @@ const USAGE: &str = "usage: nemo <train|deploy|infer|serve|validate|info> [--fla
   train    --steps N --fq-steps N --bits B --lr F --seed N --out ck.json
   deploy   --ckpt ck.json --bits B --thresholds
   infer    --ckpt ck.json --n N --bits B
-  serve    --ckpt ck.json --requests N --clients C --max-batch B --timeout-us T
+  serve    --ckpt ck.json --backend native|pjrt --requests N --clients C --max-batch B --timeout-us T
   validate
   info";
-
-fn runtime() -> Result<Runtime> {
-    Runtime::new(artifacts_dir())
-}
 
 fn load_or_init_net(args: &Args, rng: &mut Rng) -> Result<SynthNet> {
     match args.str_opt("ckpt") {
@@ -82,8 +83,11 @@ fn load_or_init_net(args: &Args, rng: &mut Rng) -> Result<SynthNet> {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_train(args: &Args) -> Result<()> {
-    let rt = runtime()?;
+    use nemo::train::{train_fp, train_fq, TrainConfig};
+
+    let rt = nemo::runtime::Runtime::new(artifacts_dir())?;
     let seed = args.usize_or("seed", 1)? as u64;
     let mut rng = Rng::new(seed);
     let mut net = SynthNet::init(&mut rng);
@@ -109,8 +113,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     // reads them from the checkpoint even without QAT fine-tuning.
     let (cal_x, _) = data.batch(64);
     let pctl = args.f64_or("calib-pctl", 0.995)?;
-    net.act_betas =
-        nemo::transform::calibrate_percentile(&net.to_fp_graph(), &[cal_x], pctl);
+    let fp = Network::from_graph(net.to_fp_graph())?;
+    net.act_betas = fp.calibrate_percentile(&[cal_x], pctl);
     println!("calibrated act betas: {:?}", net.act_betas);
 
     if fq_steps > 0 {
@@ -131,7 +135,17 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn deploy_from_args(args: &Args, net: &SynthNet) -> Result<nemo::transform::Deployed> {
+#[cfg(not(feature = "pjrt"))]
+fn cmd_train(_args: &Args) -> Result<()> {
+    bail!(
+        "`nemo train` runs the AOT-compiled PJRT train steps; this binary \
+         was built without the `pjrt` feature (rebuild with \
+         `--features pjrt`)"
+    )
+}
+
+/// Run the typestate pipeline FakeQuantized -> QD -> ID on a net.
+fn deploy_from_args(args: &Args, net: &SynthNet) -> Result<Network<IntegerDeployable>> {
     let bits = args.u32_or("bits", 8)?;
     let opts = DeployOptions {
         wbits: bits,
@@ -139,37 +153,37 @@ fn deploy_from_args(args: &Args, net: &SynthNet) -> Result<nemo::transform::Depl
         use_thresholds: args.bool("thresholds"),
         ..DeployOptions::default()
     };
-    let fq = net.to_pact_graph(opts.abits);
-    Ok(deploy(&fq, opts)?)
+    Ok(net.to_network(opts.abits)?.deploy(opts)?.integerize())
 }
 
 fn cmd_deploy(args: &Args) -> Result<()> {
     let mut rng = Rng::new(7);
     let net = load_or_init_net(args, &mut rng)?;
-    let dep = deploy_from_args(args, &net)?;
+    let nid = deploy_from_args(args, &net)?;
     println!("per-layer quantization (paper sec. 3 pipeline):");
     println!(
         "{:<8} {:>12} {:>12} {:>12} {:>12} {:>4} {:>8}",
         "layer", "eps_w", "eps_phi", "eps_phi_out", "eps_y", "d", "m"
     );
-    for l in &dep.layers {
+    for l in nid.layers() {
         println!(
             "{:<8} {:>12.3e} {:>12.3e} {:>12.3e} {:>12.3e} {:>4} {:>8}",
             l.name, l.eps_w, l.eps_phi, l.eps_phi_out, l.eps_y, l.d, l.m
         );
     }
-    println!("eps_out = {:.6e}", dep.eps_out);
+    println!("eps_out = {:.6e}", nid.eps_out());
+    let worst = *nid.deployed().worst_case.iter().max().unwrap();
     println!(
         "worst-case integer magnitude: {} (i32 headroom {:.1}%)",
-        dep.worst_case.iter().max().unwrap(),
-        100.0 * *dep.worst_case.iter().max().unwrap() as f64 / i32::MAX as f64
+        worst,
+        100.0 * worst as f64 / i32::MAX as f64
     );
 
     // quick QD vs ID agreement check on synthetic data
     let (x, labels) = SynthDigits::eval_set(11, 256);
     let fp_acc = eval_float(&net.to_fp_graph(), &x, &labels);
-    let qd_acc = eval_float(&dep.qd, &x, &labels);
-    let id_acc = eval_integer(&dep.id, &x, &labels, EPS_IN);
+    let qd_acc = eval_float(&nid.deployed().qd, &x, &labels);
+    let id_acc = eval_integer(nid.int_graph(), &x, &labels, EPS_IN);
     println!(
         "FP accuracy {:.1}%  QD accuracy {:.1}%  ID accuracy {:.1}%",
         fp_acc * 100.0,
@@ -178,7 +192,7 @@ fn cmd_deploy(args: &Args) -> Result<()> {
     );
 
     if args.bool("debug") {
-        debug_layerwise(&dep, &x);
+        debug_layerwise(nid.deployed(), &x);
     }
     Ok(())
 }
@@ -186,7 +200,7 @@ fn cmd_deploy(args: &Args) -> Result<()> {
 /// Per-node QD (float, on-grid) vs ID (integer image * eps) comparison —
 /// pinpoints which operator introduces requantization error.
 fn debug_layerwise(dep: &nemo::transform::Deployed, x: &nemo::tensor::TensorF) {
-    use nemo::engine::FloatEngine;
+    use nemo::engine::{FloatEngine, IntegerEngine};
     let x = x.slice_batch(0, 8.min(x.shape()[0]));
     let qx = quantize_input(&x, EPS_IN);
     let x_grid = qx.map(|q| q as f32 / 255.0);
@@ -229,15 +243,14 @@ fn debug_layerwise(dep: &nemo::transform::Deployed, x: &nemo::tensor::TensorF) {
 fn cmd_infer(args: &Args) -> Result<()> {
     let mut rng = Rng::new(3);
     let net = load_or_init_net(args, &mut rng)?;
-    let dep = deploy_from_args(args, &net)?;
+    let nid = deploy_from_args(args, &net)?;
     let n = args.usize_or("n", 8)?;
     let mut data = SynthDigits::new(args.usize_or("seed", 5)? as u64);
-    let engine = IntegerEngine::new();
     let mut correct = 0;
     for _ in 0..n {
         let (x, labels) = data.batch(1);
         let qx = quantize_input(&x, EPS_IN);
-        let out = engine.run(&dep.id, &qx);
+        let out = nid.run(&qx);
         let pred = out.argmax_rows()[0];
         if pred == labels[0] {
             correct += 1;
@@ -249,14 +262,27 @@ fn cmd_infer(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
+fn pjrt_model(args: &Args, nid: &Network<IntegerDeployable>) -> Result<ModelVariant> {
+    use nemo::model::artifact_args::synthnet_id_args;
+    let rt = nemo::runtime::Runtime::new(artifacts_dir())?;
+    let base_args = synthnet_id_args(nid.deployed())?;
+    let kind = args.str_or("kind", "id_fwd_xla");
+    ModelVariant::load(&rt, "synthnet", &kind, base_args)
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_model(_args: &Args, _nid: &Network<IntegerDeployable>) -> Result<ModelVariant> {
+    bail!(
+        "this binary was built without the `pjrt` feature; rebuild with \
+         `--features pjrt` or use `--backend native`"
+    )
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
-    let rt = runtime()?;
     let mut rng = Rng::new(7);
     let net = load_or_init_net(args, &mut rng)?;
-    let dep = deploy_from_args(args, &net)?;
-    let base_args = synthnet_id_args(&dep)?;
-    let kind = args.str_or("kind", "id_fwd_xla");
-    let model = ModelVariant::load(&rt, "synthnet", &kind, base_args)?;
+    let nid = deploy_from_args(args, &net)?;
 
     let cfg = ServerConfig {
         max_batch: args.usize_or("max-batch", 16)?,
@@ -265,10 +291,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ),
         n_workers: args.usize_or("workers", 2)?,
     };
+    let backend = args.str_or("backend", "native");
+    let model = match backend.as_str() {
+        "native" => {
+            // The in-process integer engine: no artifacts, no FFI.
+            let exec = nid.to_executor(cfg.max_batch)?;
+            ModelVariant::new("synthnet", Arc::new(exec))
+        }
+        "pjrt" => pjrt_model(args, &nid)?,
+        b => bail!("unknown backend '{b}' (expected native|pjrt)"),
+    };
+    let backend_name = model.exec.name().to_string();
+
     let n_requests = args.usize_or("requests", 512)?;
     let n_clients = args.usize_or("clients", 8)?;
     println!(
-        "serving synthnet id_fwd: {n_requests} requests, {n_clients} clients, {:?}",
+        "serving synthnet on {backend_name}: {n_requests} requests, {n_clients} clients, {:?}",
         cfg
     );
 
@@ -311,18 +349,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
 fn cmd_validate(_args: &Args) -> Result<()> {
     let dir = artifacts_dir();
     let g = Goldens::load(&dir).context("goldens")?;
-    let rt = runtime()?;
     // spot-check the cross-language contract (full suite: cargo test)
     let qx = g.tensor_i32(&["model_case", "qx"])?;
     let want = g.tensor_i32(&["model_case", "id_qlogits"])?;
-    // rebuild the net from goldens and deploy in rust
+    // rebuild the net from goldens and deploy through the typed pipeline
     let ck_net = {
-        use nemo::quant::bn::BnParams;
-        let _ = BnParams::identity(1);
-        // reuse the test-path logic via goldens directly
         let p = |name: &str| g.tensor_f32(&["model_case", "params", name]).unwrap();
-        let v = |name: &str| g.walk(&["model_case", "params", name]).unwrap().as_f64_tensor().unwrap().0;
-        let s = |name: &str| g.walk(&["model_case", "bn_state", name]).unwrap().as_f64_tensor().unwrap().0;
+        let v = |name: &str| {
+            g.walk(&["model_case", "params", name])
+                .unwrap()
+                .as_f64_tensor()
+                .unwrap()
+                .0
+        };
+        let s = |name: &str| {
+            g.walk(&["model_case", "bn_state", name])
+                .unwrap()
+                .as_f64_tensor()
+                .unwrap()
+                .0
+        };
         SynthNet {
             convs: vec![
                 (p("conv1.w"), v("conv1.bn_gamma"), v("conv1.bn_beta")),
@@ -339,30 +385,46 @@ fn cmd_validate(_args: &Args) -> Result<()> {
             act_betas: g.walk(&["model_case", "act_betas"])?.as_f64_tensor()?.0,
         }
     };
-    let dep = deploy(&ck_net.to_pact_graph(8), DeployOptions::default())?;
-    let got = IntegerEngine::new().run(&dep.id, &qx);
+    let nid = ck_net
+        .to_network(8)?
+        .deploy(DeployOptions::default())?
+        .integerize();
+    let got = nid.run(&qx);
     if got.data() != want.data() {
         bail!("integer engine diverges from python golden");
     }
     println!("integer engine vs python golden: bit-exact ✓");
 
-    let exe = rt.load("synthnet_id_fwd_b2")?;
-    let mut a = synthnet_id_args(&dep)?;
-    a.push(qx.into());
-    let outs = exe.run(&a)?;
-    if outs[0].as_i32()?.data() != want.data() {
-        bail!("PJRT artifact diverges from python golden");
+    #[cfg(feature = "pjrt")]
+    {
+        use nemo::model::artifact_args::synthnet_id_args;
+        let rt = nemo::runtime::Runtime::new(&dir)?;
+        let exe = rt.load("synthnet_id_fwd_b2")?;
+        let mut a = synthnet_id_args(nid.deployed())?;
+        a.push(qx.into());
+        let outs = exe.run(&a)?;
+        if outs[0].as_i32()?.data() != want.data() {
+            bail!("PJRT artifact diverges from python golden");
+        }
+        println!("PJRT (Pallas) vs python golden:  bit-exact ✓");
     }
-    println!("PJRT (Pallas) vs python golden:  bit-exact ✓");
+    #[cfg(not(feature = "pjrt"))]
+    println!("PJRT check skipped (built without the `pjrt` feature)");
     println!("validation OK");
     Ok(())
 }
 
 fn cmd_info(_args: &Args) -> Result<()> {
-    let rt = runtime()?;
-    println!("platform: {}", rt.platform());
-    println!("artifacts ({}):", rt.manifest.artifacts.len());
-    for a in &rt.manifest.artifacts {
+    #[cfg(feature = "pjrt")]
+    {
+        let rt = nemo::runtime::Runtime::new(artifacts_dir())?;
+        println!("platform: {}", rt.platform());
+    }
+    #[cfg(not(feature = "pjrt"))]
+    println!("platform: native (built without the `pjrt` feature)");
+    let manifest = nemo::io::Manifest::load(artifacts_dir())?;
+    println!("artifacts ({}):", manifest.artifacts.len());
+    for a in &manifest.artifacts {
         println!(
             "  {:<36} kind={:<9} args={:<2} outs={}",
             a.name,
@@ -371,7 +433,5 @@ fn cmd_info(_args: &Args) -> Result<()> {
             a.n_outputs
         );
     }
-    // silence unused import in case of refactors
-    let _ = synthnet_fp_args;
     Ok(())
 }

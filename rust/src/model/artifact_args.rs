@@ -5,7 +5,7 @@
 use anyhow::{bail, ensure, Result};
 
 use crate::graph::int::IntOp;
-use crate::runtime::Arg;
+use crate::exec::Arg;
 use crate::tensor::Tensor;
 use crate::transform::Deployed;
 

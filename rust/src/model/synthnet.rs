@@ -9,7 +9,9 @@ use anyhow::{ensure, Result};
 
 use crate::graph::{Graph, Op};
 use crate::io::Checkpoint;
+use crate::network::{FakeQuantized, Network};
 use crate::quant::bn::BnParams;
+use crate::transform::TransformError;
 use crate::tensor::{Tensor, TensorF};
 use crate::util::rng::Rng;
 
@@ -92,6 +94,15 @@ impl SynthNet {
             }
         }
         g
+    }
+
+    /// Enter the typestate pipeline at the FakeQuantized stage: the PACT
+    /// graph at the stored (possibly QAT-trained) act betas, ready for
+    /// `.deploy(opts)`. Weights are not pre-hardened — deploy derives the
+    /// weight grids itself, keeping this path bit-exact with the Python
+    /// reference deployment.
+    pub fn to_network(&self, abits: u32) -> Result<Network<FakeQuantized>, TransformError> {
+        Network::from_pact_graph(self.to_pact_graph(abits))
     }
 
     fn to_graph(&self, pact: bool) -> Graph {

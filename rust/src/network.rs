@@ -1,0 +1,466 @@
+//! Typestate representation pipeline (S4 in DESIGN.md): the paper's four
+//! DNN representations as *types*, with the legal transforms between
+//! adjacent stages as the only available (self-consuming) transitions:
+//!
+//! ```text
+//!  Network<FullPrecision>
+//!      |  calibrate(..) -> quantize_pact(wbits, abits, betas)
+//!      v
+//!  Network<FakeQuantized>          (fold_bn() allowed here and above,
+//!      |  deploy(opts)              tracked so it cannot run twice)
+//!      v
+//!  Network<QuantizedDeployable>
+//!      |  integerize()
+//!      v
+//!  Network<IntegerDeployable>  --> NativeIntExecutor / PJRT artifacts
+//! ```
+//!
+//! Illegal transitions are compile errors, not runtime checks. A
+//! FullPrecision network has no `deploy`:
+//!
+//! ```compile_fail
+//! use nemo::graph::{Graph, Op};
+//! use nemo::network::Network;
+//! use nemo::transform::DeployOptions;
+//!
+//! let mut g = Graph::new(1.0 / 255.0);
+//! g.push("in", Op::Input { shape: vec![4] }, &[]);
+//! let fp = Network::from_graph(g).unwrap();
+//! let _ = fp.deploy(DeployOptions::default()); // no such method on FP
+//! ```
+//!
+//! and every transition consumes the network, so a stage cannot be
+//! transformed twice:
+//!
+//! ```compile_fail
+//! use nemo::graph::{Graph, Op};
+//! use nemo::network::Network;
+//!
+//! let mut g = Graph::new(1.0 / 255.0);
+//! let x = g.push("in", Op::Input { shape: vec![4] }, &[]);
+//! g.push("act", Op::ReLU, &[x]);
+//! let fp = Network::from_graph(g).unwrap();
+//! let fq = fp.quantize_pact(8, 8, &[1.0]).unwrap();
+//! let _again = fp.quantize_pact(8, 8, &[1.0]); // error: use of moved `fp`
+//! ```
+//!
+//! The legal chain end to end (runs as a doc-test):
+//!
+//! ```
+//! use nemo::model::mlp;
+//! use nemo::network::Network;
+//! use nemo::quant::quantize_input;
+//! use nemo::tensor::Tensor;
+//! use nemo::transform::DeployOptions;
+//! use nemo::util::rng::Rng;
+//!
+//! let mut rng = Rng::new(1);
+//! let fp = Network::from_graph(mlp(&mut rng, 8, 6, 4, 1.0 / 255.0)).unwrap();
+//! let x = Tensor::from_vec(&[2, 8], vec![0.5f32; 16]);
+//! let betas = fp.calibrate(&[x.clone()]);
+//! let id = fp
+//!     .quantize_pact(8, 8, &betas).unwrap()
+//!     .deploy(DeployOptions::default()).unwrap()
+//!     .integerize();
+//! let q = id.run(&quantize_input(&x, 1.0 / 255.0));
+//! assert_eq!(q.shape(), &[2, 4]);
+//! ```
+
+use crate::engine::{FloatEngine, IntegerEngine};
+use crate::exec::NativeIntExecutor;
+use crate::graph::int::IntGraph;
+use crate::graph::{Graph, Op};
+use crate::tensor::{TensorF, TensorI};
+use crate::transform::{self, DeployOptions, Deployed, LayerQuant, TransformError};
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for super::FullPrecision {}
+    impl Sealed for super::FakeQuantized {}
+    impl Sealed for super::QuantizedDeployable {}
+    impl Sealed for super::IntegerDeployable {}
+}
+
+/// Pipeline stage marker (sealed: the paper defines exactly four).
+pub trait Stage: sealed::Sealed {
+    /// The representation data carried at this stage.
+    type Repr;
+    const NAME: &'static str;
+}
+
+/// Ordinary float network: BatchNorm + ReLU, float weights (sec. 1).
+pub struct FullPrecision;
+/// PACT activations at calibrated clipping bounds; weights on (or bound
+/// for) their symmetric quantization grid (sec. 2).
+pub struct FakeQuantized;
+/// Every tensor on its quantized grid, BN parameters quantized — still a
+/// float graph, numerically a twin of the integer one (sec. 3).
+pub struct QuantizedDeployable;
+/// Integer images only; runs with no floating point on the value path.
+pub struct IntegerDeployable;
+
+impl Stage for FullPrecision {
+    type Repr = Graph;
+    const NAME: &'static str = "FullPrecision";
+}
+impl Stage for FakeQuantized {
+    type Repr = Graph;
+    const NAME: &'static str = "FakeQuantized";
+}
+impl Stage for QuantizedDeployable {
+    type Repr = Deployed;
+    const NAME: &'static str = "QuantizedDeployable";
+}
+impl Stage for IntegerDeployable {
+    type Repr = Deployed;
+    const NAME: &'static str = "IntegerDeployable";
+}
+
+/// Stage metadata accumulated along the pipeline (what used to live ad
+/// hoc in `SynthNet` fields and `Deployed`).
+#[derive(Clone, Debug, Default)]
+pub struct StageMeta {
+    /// PACT clipping bounds recorded when entering FakeQuantized.
+    pub act_betas: Vec<f64>,
+    /// Weight bits chosen at quantize_pact (0 = not yet hardened).
+    pub wbits: u32,
+    /// Activation bits chosen at quantize_pact.
+    pub abits: u32,
+    /// Whether fold_bn already ran — the fold is not idempotent, so a
+    /// second application is rejected instead of corrupting weights.
+    pub bn_folded: bool,
+}
+
+/// A network pinned to one representation stage. See the module docs for
+/// the transition diagram.
+pub struct Network<S: Stage> {
+    repr: S::Repr,
+    meta: StageMeta,
+}
+
+impl<S: Stage> Network<S> {
+    /// Name of the current stage ("FullPrecision", ...).
+    pub fn stage_name(&self) -> &'static str {
+        S::NAME
+    }
+
+    /// Stage metadata accumulated so far.
+    pub fn meta(&self) -> &StageMeta {
+        &self.meta
+    }
+}
+
+impl Network<FullPrecision> {
+    /// Enter the pipeline with a validated FullPrecision graph. A graph
+    /// that already carries PACT activations is *not* FullPrecision — it
+    /// must enter via [`Network::<FakeQuantized>::from_pact_graph`], so
+    /// that `quantize_pact` can never silently overwrite QAT-trained
+    /// clipping bounds.
+    pub fn from_graph(graph: Graph) -> Result<Self, TransformError> {
+        graph.validate()?;
+        if graph.nodes.iter().any(|n| matches!(n.op, Op::PactAct { .. })) {
+            return Err(TransformError::Stage(
+                "graph already contains PactAct nodes; enter the pipeline \
+                 at FakeQuantized via Network::from_pact_graph instead"
+                    .into(),
+            ));
+        }
+        Ok(Network { repr: graph, meta: StageMeta::default() })
+    }
+
+    pub fn graph(&self) -> &Graph {
+        &self.repr
+    }
+
+    /// Run the float engine on a batch.
+    pub fn run(&self, x: &TensorF) -> TensorF {
+        FloatEngine::new().run(&self.repr, x)
+    }
+
+    /// Max-observed calibration of the PACT clipping bounds (sec. 2):
+    /// one beta per activation, feed them to [`Self::quantize_pact`].
+    pub fn calibrate(&self, batches: &[TensorF]) -> Vec<f64> {
+        transform::calibrate(&self.repr, batches)
+    }
+
+    /// Percentile calibration (robust to outlier channels; DESIGN.md §5).
+    pub fn calibrate_percentile(&self, batches: &[TensorF], q: f64) -> Vec<f64> {
+        transform::calibrate_percentile(&self.repr, batches, q)
+    }
+
+    /// Fold every BatchNorm into its preceding Linear operator (Eq. 18).
+    /// Tracked in the metadata: folding twice is an error, not silent
+    /// weight corruption.
+    pub fn fold_bn(mut self, only: Option<&[&str]>) -> Result<Self, TransformError> {
+        if self.meta.bn_folded {
+            return Err(TransformError::AlreadyFolded);
+        }
+        self.repr = transform::fold::fold_bn_impl(&self.repr, only)?;
+        self.meta.bn_folded = true;
+        Ok(self)
+    }
+
+    /// FullPrecision -> FakeQuantized (sec. 2): PACT activations at the
+    /// calibrated bounds, weights hardened to their symmetric grid.
+    pub fn quantize_pact(
+        self,
+        wbits: u32,
+        abits: u32,
+        act_betas: &[f64],
+    ) -> Result<Network<FakeQuantized>, TransformError> {
+        let n_act = self.repr.activations().len();
+        if act_betas.len() != n_act {
+            return Err(TransformError::Stage(format!(
+                "quantize_pact needs one beta per activation: got {}, graph has {n_act}",
+                act_betas.len()
+            )));
+        }
+        let graph = transform::quantize_pact_impl(&self.repr, wbits, abits, act_betas);
+        Ok(Network {
+            repr: graph,
+            meta: StageMeta {
+                act_betas: act_betas.to_vec(),
+                wbits,
+                abits,
+                bn_folded: self.meta.bn_folded,
+            },
+        })
+    }
+}
+
+impl Network<FakeQuantized> {
+    /// Wrap an existing PACT graph (e.g. the output of a QAT training
+    /// loop, [`crate::model::SynthNet::to_pact_graph`]) without
+    /// re-hardening weights — `deploy` derives the weight grids itself,
+    /// which keeps this path bit-exact with the Python reference.
+    pub fn from_pact_graph(graph: Graph) -> Result<Self, TransformError> {
+        graph.validate()?;
+        if graph.nodes.iter().any(|n| matches!(n.op, Op::ReLU)) {
+            return Err(TransformError::NeedsFakeQuant("ReLU"));
+        }
+        let mut meta = StageMeta::default();
+        for n in &graph.nodes {
+            if let Op::PactAct { beta, bits } = n.op {
+                meta.act_betas.push(beta);
+                meta.abits = meta.abits.max(bits);
+            }
+        }
+        Ok(Network { repr: graph, meta })
+    }
+
+    pub fn graph(&self) -> &Graph {
+        &self.repr
+    }
+
+    /// PACT clipping bounds carried by this stage.
+    pub fn act_betas(&self) -> &[f64] {
+        &self.meta.act_betas
+    }
+
+    /// Run the float engine (fake-quantized forward pass) on a batch.
+    pub fn run(&self, x: &TensorF) -> TensorF {
+        FloatEngine::new().run(&self.repr, x)
+    }
+
+    /// Fold BatchNorm into the preceding Linear ops (Eq. 18); rejected if
+    /// the pipeline already folded.
+    pub fn fold_bn(mut self, only: Option<&[&str]>) -> Result<Self, TransformError> {
+        if self.meta.bn_folded {
+            return Err(TransformError::AlreadyFolded);
+        }
+        self.repr = transform::fold::fold_bn_impl(&self.repr, only)?;
+        self.meta.bn_folded = true;
+        Ok(self)
+    }
+
+    /// FakeQuantized -> QuantizedDeployable (sec. 3): harden_weights +
+    /// bn_quantizer + set_deployment eps propagation + integer range
+    /// analysis. The integer twin is derived in the same walk and carried
+    /// along for the final `integerize` step.
+    pub fn deploy(
+        self,
+        opts: DeployOptions,
+    ) -> Result<Network<QuantizedDeployable>, TransformError> {
+        let mut meta = self.meta;
+        meta.wbits = opts.wbits;
+        meta.abits = opts.abits;
+        let dep = transform::deploy::deploy_impl(&self.repr, opts)?;
+        Ok(Network { repr: dep, meta })
+    }
+}
+
+impl Network<QuantizedDeployable> {
+    /// The QD float graph: every value on its quantized grid.
+    pub fn graph(&self) -> &Graph {
+        &self.repr.qd
+    }
+
+    /// Per-layer quantization table (eps chain, requant m/d, clip bounds).
+    pub fn layers(&self) -> &[LayerQuant] {
+        &self.repr.layers
+    }
+
+    /// Run the float engine on the QD graph.
+    pub fn run(&self, x: &TensorF) -> TensorF {
+        FloatEngine::new().run(&self.repr.qd, x)
+    }
+
+    /// QuantizedDeployable -> IntegerDeployable: release the integer twin
+    /// derived during `deploy` (nemo.transform.integerize_pact).
+    pub fn integerize(self) -> Network<IntegerDeployable> {
+        Network { repr: self.repr, meta: self.meta }
+    }
+}
+
+impl Network<IntegerDeployable> {
+    /// The integer-image graph executed by the integer engine / Pallas
+    /// kernels.
+    pub fn int_graph(&self) -> &IntGraph {
+        &self.repr.id
+    }
+
+    /// Quantum of the output integer image: logits_real ~ eps_out * Q.
+    pub fn eps_out(&self) -> f64 {
+        self.repr.eps_out
+    }
+
+    /// Per-layer quantization table (eps chain, requant m/d, clip bounds).
+    pub fn layers(&self) -> &[LayerQuant] {
+        &self.repr.layers
+    }
+
+    /// Full deployment record (QD twin, range analysis, per-node eps) —
+    /// the bridge to artifact-argument assembly and diagnostics.
+    pub fn deployed(&self) -> &Deployed {
+        &self.repr
+    }
+
+    pub fn into_deployed(self) -> Deployed {
+        self.repr
+    }
+
+    /// Run the integer engine on an integer-image batch.
+    pub fn run(&self, qx: &TensorI) -> TensorI {
+        IntegerEngine::new().run(&self.repr.id, qx)
+    }
+
+    /// A shareable native [`crate::exec::Executor`] over this network
+    /// (clones the integer graph; the network stays usable).
+    pub fn to_executor(&self, max_batch: usize) -> anyhow::Result<NativeIntExecutor> {
+        NativeIntExecutor::new(self.repr.id.clone(), max_batch)
+    }
+
+    /// Consume the network into a native [`crate::exec::Executor`].
+    pub fn into_executor(self, max_batch: usize) -> anyhow::Result<NativeIntExecutor> {
+        NativeIntExecutor::new(self.repr.id, max_batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::mlp;
+    use crate::quant::quantize_input;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    fn fp_net(seed: u64) -> (Network<FullPrecision>, TensorF) {
+        let mut rng = Rng::new(seed);
+        let g = mlp(&mut rng, 16, 12, 5, 1.0 / 255.0);
+        let x = Tensor::from_vec(
+            &[4, 16],
+            (0..64).map(|_| rng.uniform(0.0, 1.0) as f32).collect(),
+        );
+        (Network::from_graph(g).unwrap(), x)
+    }
+
+    #[test]
+    fn legal_chain_reaches_integer_deployable() {
+        let (fp, x) = fp_net(11);
+        let betas = fp.calibrate(&[x.clone()]);
+        let id = fp
+            .quantize_pact(8, 8, &betas)
+            .unwrap()
+            .deploy(DeployOptions::default())
+            .unwrap()
+            .integerize();
+        assert_eq!(id.stage_name(), "IntegerDeployable");
+        assert_eq!(id.meta().wbits, 8);
+        let out = id.run(&quantize_input(&x, 1.0 / 255.0));
+        assert_eq!(out.shape(), &[4, 5]);
+        assert!(id.eps_out() > 0.0);
+        assert!(!id.layers().is_empty());
+    }
+
+    #[test]
+    fn quantize_pact_rejects_wrong_beta_count() {
+        let (fp, _) = fp_net(12);
+        match fp.quantize_pact(8, 8, &[1.0, 2.0, 3.0]) {
+            Err(TransformError::Stage(msg)) => {
+                assert!(msg.contains("one beta per activation"), "{msg}");
+            }
+            other => panic!("expected Stage error, got {:?}", other.map(|n| n.stage_name())),
+        }
+    }
+
+    #[test]
+    fn fold_bn_twice_is_rejected() {
+        let (fp, _) = fp_net(13);
+        let folded = fp.fold_bn(None).unwrap();
+        assert!(folded.meta().bn_folded);
+        match folded.fold_bn(None) {
+            Err(TransformError::AlreadyFolded) => {}
+            other => panic!("expected AlreadyFolded, got {:?}", other.map(|n| n.stage_name())),
+        }
+    }
+
+    #[test]
+    fn fold_flag_survives_quantize_pact() {
+        let (fp, x) = fp_net(14);
+        let betas = fp.calibrate(&[x]);
+        let fq = fp.fold_bn(None).unwrap().quantize_pact(8, 8, &betas).unwrap();
+        assert!(fq.meta().bn_folded);
+        match fq.fold_bn(None) {
+            Err(TransformError::AlreadyFolded) => {}
+            other => panic!("expected AlreadyFolded, got {:?}", other.map(|n| n.stage_name())),
+        }
+    }
+
+    #[test]
+    fn from_graph_rejects_pact_graphs() {
+        // A QAT-trained PACT graph must not enter at FullPrecision —
+        // quantize_pact would silently overwrite its trained betas.
+        let (fp, x) = fp_net(17);
+        let betas = fp.calibrate(&[x]);
+        let fq = fp.quantize_pact(8, 8, &betas).unwrap();
+        match Network::from_graph(fq.graph().clone()) {
+            Err(TransformError::Stage(msg)) => {
+                assert!(msg.contains("PactAct"), "{msg}");
+            }
+            other => panic!(
+                "expected Stage error, got {:?}",
+                other.map(|n| n.stage_name())
+            ),
+        }
+    }
+
+    #[test]
+    fn from_pact_graph_rejects_relu() {
+        let (fp, _) = fp_net(15);
+        let g = fp.graph().clone();
+        assert!(matches!(
+            Network::<FakeQuantized>::from_pact_graph(g),
+            Err(TransformError::NeedsFakeQuant(_))
+        ));
+    }
+
+    #[test]
+    fn from_pact_graph_collects_betas() {
+        let (fp, x) = fp_net(16);
+        let betas = fp.calibrate(&[x]);
+        let fq = fp.quantize_pact(8, 8, &betas).unwrap();
+        let rewrapped = Network::<FakeQuantized>::from_pact_graph(fq.graph().clone()).unwrap();
+        assert_eq!(rewrapped.act_betas(), &betas[..]);
+        assert_eq!(rewrapped.meta().abits, 8);
+    }
+}

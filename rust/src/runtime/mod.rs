@@ -16,49 +16,11 @@ use std::sync::Mutex;
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::io::{ArtifactSpec, Manifest};
-use crate::tensor::{Tensor, TensorF, TensorI};
+use crate::tensor::Tensor;
 
-/// A host-side value crossing the PJRT boundary.
-#[derive(Clone, Debug)]
-pub enum Arg {
-    F32(TensorF),
-    I32(TensorI),
-}
-
-impl Arg {
-    pub fn shape(&self) -> &[usize] {
-        match self {
-            Arg::F32(t) => t.shape(),
-            Arg::I32(t) => t.shape(),
-        }
-    }
-
-    pub fn as_f32(&self) -> Result<&TensorF> {
-        match self {
-            Arg::F32(t) => Ok(t),
-            Arg::I32(_) => bail!("expected f32 tensor, got i32"),
-        }
-    }
-
-    pub fn as_i32(&self) -> Result<&TensorI> {
-        match self {
-            Arg::I32(t) => Ok(t),
-            Arg::F32(_) => bail!("expected i32 tensor, got f32"),
-        }
-    }
-}
-
-impl From<TensorF> for Arg {
-    fn from(t: TensorF) -> Self {
-        Arg::F32(t)
-    }
-}
-
-impl From<TensorI> for Arg {
-    fn from(t: TensorI) -> Self {
-        Arg::I32(t)
-    }
-}
+/// Re-exported for compatibility: [`Arg`] now lives in [`crate::exec`],
+/// shared by every executor backend (it is no longer PJRT-specific).
+pub use crate::exec::Arg;
 
 fn to_literal(a: &Arg) -> Result<xla::Literal> {
     let dims: Vec<i64> = a.shape().iter().map(|d| *d as i64).collect();
@@ -194,6 +156,7 @@ impl Runtime {
 mod tests {
     use super::*;
     use crate::io::artifacts_dir;
+    use crate::tensor::{TensorF, TensorI};
 
     fn runtime() -> Option<Runtime> {
         let dir = artifacts_dir();

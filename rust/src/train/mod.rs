@@ -5,14 +5,25 @@
 //! The FQ train step implements the paper's quantization-aware training
 //! (sec. 2.2): PACT fake-quantization in forward, STE gradients backward,
 //! trainable clipping bounds beta.
+//!
+//! `train_fp`/`train_fq` require the `pjrt` feature (they execute PJRT
+//! artifacts); the evaluation helpers run on the native engines and are
+//! always available.
 
+#[cfg(feature = "pjrt")]
 use anyhow::{ensure, Context, Result};
 
+#[cfg(feature = "pjrt")]
 use crate::data::SynthDigits;
+#[cfg(feature = "pjrt")]
 use crate::model::artifact_args::{synthnet_fp_args, synthnet_fq_args};
+#[cfg(feature = "pjrt")]
 use crate::model::synthnet::SynthNet;
+#[cfg(feature = "pjrt")]
 use crate::runtime::Runtime;
-use crate::tensor::{Tensor, TensorF};
+use crate::tensor::TensorF;
+#[cfg(feature = "pjrt")]
+use crate::tensor::Tensor;
 
 #[derive(Clone, Copy, Debug)]
 pub struct TrainConfig {
@@ -56,6 +67,7 @@ pub const TRAIN_BATCH: usize = 32;
 
 /// Train in FullPrecision via the `synthnet_fp_train_b32` artifact.
 /// Mutates `net` in place; returns the loss curve.
+#[cfg(feature = "pjrt")]
 pub fn train_fp(
     rt: &Runtime,
     net: &mut SynthNet,
@@ -95,6 +107,7 @@ pub fn train_fp(
 
 /// QAT fine-tuning via the `synthnet_fq_train_w{W}a{A}_b32` artifact.
 /// Trains weights, BN parameters AND the PACT act betas (STE, sec. 2.2).
+#[cfg(feature = "pjrt")]
 pub fn train_fq(
     rt: &Runtime,
     net: &mut SynthNet,
@@ -140,6 +153,7 @@ pub fn train_fq(
     Ok(report)
 }
 
+#[cfg(any(test, feature = "pjrt"))]
 fn effective_lr(cfg: &TrainConfig, step: usize) -> f64 {
     if cfg.lr_decay && cfg.steps > 1 {
         let f = step as f64 / (cfg.steps - 1) as f64;

@@ -106,7 +106,19 @@ struct NodeState {
     pending_bn: Option<(crate::quant::bn::BnParams, f64)>,
 }
 
+#[deprecated(
+    since = "0.2.0",
+    note = "use network::Network::<FakeQuantized>::deploy, which makes an \
+            un-fake-quantized input graph unrepresentable"
+)]
 pub fn deploy(g: &Graph, opts: DeployOptions) -> Result<Deployed, TransformError> {
+    deploy_impl(g, opts)
+}
+
+pub(crate) fn deploy_impl(
+    g: &Graph,
+    opts: DeployOptions,
+) -> Result<Deployed, TransformError> {
     g.validate()?;
     let mut qd = Graph::new(g.eps_in);
     let mut id = IntGraph::default();
@@ -580,6 +592,7 @@ fn linear_range(wq: &TensorI, xlo: i64, xhi: i64, bias: Option<&[i64]>) -> (i64,
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the shims stay covered until they are removed
 mod tests {
     use super::*;
     use crate::engine::{FloatEngine, IntegerEngine};

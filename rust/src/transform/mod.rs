@@ -1,14 +1,21 @@
-//! Representation pipeline (S4 in DESIGN.md) — the NEMO API surface:
+//! Representation transforms (S4 in DESIGN.md) — the math behind the
+//! typed pipeline in [`crate::network`]:
 //!
-//! | NEMO (paper "In NEMO" boxes)          | here                        |
-//! |---------------------------------------|-----------------------------|
-//! | `nemo.transform.quantize_pact`        | [`quantize_pact`]           |
-//! | `net.fold_bn()` + `reset_alpha...`    | [`fold::fold_bn`]           |
-//! | `nemo.transform.bn_quantizer`         | inside [`deploy::deploy`]   |
-//! | `net.harden_weights()`                | inside [`deploy::deploy`]   |
-//! | `net.set_deployment(eps_in=...)`      | eps propagation in deploy   |
-//! | `nemo.transform.integerize_pact`      | [`deploy::deploy`] (ID out) |
-//! | `net.add_input_bias()`                | [`fold::add_input_bias`]    |
+//! | NEMO (paper "In NEMO" boxes)          | here                          |
+//! |---------------------------------------|-------------------------------|
+//! | `nemo.transform.quantize_pact`        | `Network::quantize_pact`      |
+//! | `net.fold_bn()` + `reset_alpha...`    | `Network::fold_bn`            |
+//! | `nemo.transform.bn_quantizer`         | inside `Network::deploy`      |
+//! | `net.harden_weights()`                | inside `Network::deploy`      |
+//! | `net.set_deployment(eps_in=...)`      | eps propagation in deploy     |
+//! | `nemo.transform.integerize_pact`      | `Network::integerize`         |
+//! | `net.add_input_bias()`                | [`fold::add_input_bias`]      |
+//!
+//! The free functions ([`quantize_pact`], [`fold_bn`], [`deploy`]) are
+//! deprecated shims kept for one release: they operate on untyped
+//! [`Graph`]s, so nothing stops a caller from deploying an uncalibrated
+//! FP graph or folding BN twice. Use [`crate::network::Network`], which
+//! makes such pipelines unrepresentable.
 //!
 //! The pipeline's extra safety pass — integer range analysis proving all
 //! i32 narrowing is sound — has no NEMO equivalent; it stands in for the
@@ -19,8 +26,12 @@ pub mod deploy;
 pub mod fold;
 
 pub use calibrate::{calibrate, calibrate_percentile};
-pub use deploy::{deploy, DeployOptions, Deployed};
-pub use fold::{add_input_bias, fold_bn};
+#[allow(deprecated)]
+pub use deploy::deploy;
+pub use deploy::{DeployOptions, Deployed, LayerQuant};
+pub use fold::add_input_bias;
+#[allow(deprecated)]
+pub use fold::fold_bn;
 
 use crate::graph::{Graph, Op};
 use crate::quant::{harden_tensor, max_abs, QuantSpec};
@@ -37,6 +48,10 @@ pub enum TransformError {
     Graph(#[from] crate::graph::GraphError),
     #[error("add_input_bias: {0}")]
     InputBias(String),
+    #[error("batch norm already folded in this network (fold_bn is not idempotent)")]
+    AlreadyFolded,
+    #[error("stage transition: {0}")]
+    Stage(String),
 }
 
 /// FullPrecision -> FakeQuantized (sec. 2): replace every ReLU with a
@@ -45,7 +60,21 @@ pub enum TransformError {
 ///
 /// `act_betas` must have one entry per activation node (see
 /// [`Graph::activations`]), typically from [`calibrate`].
+#[deprecated(
+    since = "0.2.0",
+    note = "use network::Network::<FullPrecision>::quantize_pact, which \
+            checks the beta count and records stage metadata"
+)]
 pub fn quantize_pact(g: &Graph, wbits: u32, abits: u32, act_betas: &[f64]) -> Graph {
+    quantize_pact_impl(g, wbits, abits, act_betas)
+}
+
+pub(crate) fn quantize_pact_impl(
+    g: &Graph,
+    wbits: u32,
+    abits: u32,
+    act_betas: &[f64],
+) -> Graph {
     let mut out = g.clone();
     let mut act_i = 0usize;
     for n in &mut out.nodes {
@@ -71,6 +100,7 @@ pub fn quantize_pact(g: &Graph, wbits: u32, abits: u32, act_betas: &[f64]) -> Gr
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the shims stay covered until they are removed
 mod tests {
     use super::*;
     use crate::engine::FloatEngine;

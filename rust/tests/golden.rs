@@ -12,9 +12,12 @@ use nemo::model::artifact_args::synthnet_id_args;
 use nemo::model::synthnet::SynthNet;
 use nemo::quant::bn::{BnParams, BnQuant, Thresholds};
 use nemo::quant::requant::{choose_d, multiplier};
+#[cfg(feature = "pjrt")]
 use nemo::runtime::Runtime;
-use nemo::tensor::{Tensor, TensorF};
-use nemo::transform::{deploy, DeployOptions};
+#[cfg(feature = "pjrt")]
+use nemo::tensor::Tensor;
+use nemo::tensor::TensorF;
+use nemo::transform::DeployOptions;
 
 fn goldens() -> Option<Goldens> {
     let dir = artifacts_dir();
@@ -67,8 +70,12 @@ fn net_from_goldens(g: &Goldens) -> SynthNet {
 
 fn deployed_from_goldens(g: &Goldens) -> nemo::transform::Deployed {
     let net = net_from_goldens(g);
-    let fq = net.to_pact_graph(8);
-    deploy(&fq, DeployOptions::default()).unwrap()
+    net.to_network(8)
+        .unwrap()
+        .deploy(DeployOptions::default())
+        .unwrap()
+        .integerize()
+        .into_deployed()
 }
 
 #[test]
@@ -229,6 +236,7 @@ fn qd_engine_matches_python_qd() {
     );
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_id_artifact_matches_integer_engine_bit_exactly() {
     // E9: the Pallas-kernel HLO graph (via PJRT) and the Rust integer
@@ -252,6 +260,7 @@ fn pjrt_id_artifact_matches_integer_engine_bit_exactly() {
     assert_eq!(pjrt_out.data(), want.data(), "PJRT vs python golden");
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn kernel_goldens_roundtrip_through_pjrt() {
     let Some(g) = goldens() else { return };

@@ -1,6 +1,12 @@
 //! Integration tests over the full representation pipeline
 //! (FP -> FQ -> QD -> ID) on multiple architectures, including failure
 //! injection. No artifacts required (engine-only).
+//!
+//! These tests intentionally exercise the deprecated free-function shims
+//! (`transform::{quantize_pact, fold_bn, deploy}`) to pin their behaviour
+//! during the deprecation window; the typed pipeline is covered in
+//! tests/typestate.rs and proven bit-identical to this path there.
+#![allow(deprecated)]
 
 use nemo::engine::{FloatEngine, IntegerEngine};
 use nemo::graph::{Graph, Op};

@@ -1,50 +1,46 @@
 //! Coordinator integration tests: correctness under concurrency, batching
-//! behaviour, failure handling. Requires artifacts (skips otherwise).
+//! behaviour, failure handling. These run over the *native* integer
+//! executor — no artifacts, no PJRT — because the coordinator is backend
+//! agnostic; a PJRT round-trip rides along behind the `pjrt` feature.
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use nemo::coordinator::{ModelVariant, Server, ServerConfig};
 use nemo::data::SynthDigits;
-use nemo::engine::IntegerEngine;
-use nemo::io::artifacts_dir;
-use nemo::model::artifact_args::synthnet_id_args;
 use nemo::model::synthnet::{SynthNet, EPS_IN};
+use nemo::network::{IntegerDeployable, Network};
 use nemo::quant::quantize_input;
-use nemo::runtime::Runtime;
-use nemo::transform::{deploy, DeployOptions};
+use nemo::transform::DeployOptions;
 use nemo::util::rng::Rng;
 
-fn setup() -> Option<(Runtime, nemo::transform::Deployed)> {
-    let dir = artifacts_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("SKIP: artifacts not built");
-        return None;
-    }
-    let rt = Runtime::new(dir).unwrap();
-    let mut rng = Rng::new(31);
+fn deployed_net(seed: u64) -> Network<IntegerDeployable> {
+    let mut rng = Rng::new(seed);
     let net = SynthNet::init(&mut rng);
-    let dep = deploy(&net.to_pact_graph(8), DeployOptions::default()).unwrap();
-    Some((rt, dep))
+    net.to_network(8)
+        .unwrap()
+        .deploy(DeployOptions::default())
+        .unwrap()
+        .integerize()
 }
 
-fn start_server(rt: &Runtime, dep: &nemo::transform::Deployed, cfg: ServerConfig) -> Server {
-    let base_args = synthnet_id_args(dep).unwrap();
-    let model = ModelVariant::load(rt, "synthnet", "id_fwd", base_args).unwrap();
+fn start_native_server(nid: &Network<IntegerDeployable>, cfg: ServerConfig) -> Server {
+    let exec = nid.to_executor(cfg.max_batch.max(1)).unwrap();
+    let model = ModelVariant::new("synthnet", Arc::new(exec));
     Server::start(vec![model], cfg)
 }
 
 #[test]
 fn served_results_match_local_engine_exactly() {
-    let Some((rt, dep)) = setup() else { return };
-    let server = start_server(&rt, &dep, ServerConfig::default());
+    let nid = deployed_net(31);
+    let server = start_native_server(&nid, ServerConfig::default());
     let h = server.handle();
-    let engine = IntegerEngine::new();
     let mut data = SynthDigits::new(32);
     for _ in 0..32 {
         let (x, _) = data.batch(1);
         let qx = quantize_input(&x, EPS_IN);
         let served = h.infer("synthnet", qx.clone()).unwrap();
-        let local = engine.run(&dep.id, &qx);
+        let local = nid.run(&qx);
         assert_eq!(served.data(), local.data(), "serving must not change results");
     }
     let m = server.stop();
@@ -54,25 +50,26 @@ fn served_results_match_local_engine_exactly() {
 
 #[test]
 fn concurrent_clients_all_get_correct_answers() {
-    let Some((rt, dep)) = setup() else { return };
-    let server = start_server(
-        &rt,
-        &dep,
-        ServerConfig { max_batch: 16, batch_timeout: Duration::from_micros(400), n_workers: 2 },
+    let nid = Arc::new(deployed_net(33));
+    let server = start_native_server(
+        &nid,
+        ServerConfig {
+            max_batch: 16,
+            batch_timeout: Duration::from_micros(400),
+            n_workers: 2,
+        },
     );
-    let dep = std::sync::Arc::new(dep);
     let mut joins = Vec::new();
     for c in 0..8u64 {
         let h = server.handle();
-        let dep = dep.clone();
+        let nid = nid.clone();
         joins.push(std::thread::spawn(move || {
-            let engine = IntegerEngine::new();
             let mut data = SynthDigits::new(100 + c);
             for _ in 0..24 {
                 let (x, _) = data.batch(1);
                 let qx = quantize_input(&x, EPS_IN);
                 let served = h.infer("synthnet", qx.clone()).unwrap();
-                let local = engine.run(&dep.id, &qx);
+                let local = nid.run(&qx);
                 assert_eq!(served.data(), local.data());
             }
         }));
@@ -80,7 +77,7 @@ fn concurrent_clients_all_get_correct_answers() {
     for j in joins {
         j.join().unwrap();
     }
-    let mut m = server.stop();
+    let m = server.stop();
     assert_eq!(m.completed, 8 * 24);
     // with 8 concurrent clients the batcher should coalesce
     assert!(
@@ -92,8 +89,8 @@ fn concurrent_clients_all_get_correct_answers() {
 
 #[test]
 fn unknown_model_is_rejected_not_hung() {
-    let Some((rt, dep)) = setup() else { return };
-    let server = start_server(&rt, &dep, ServerConfig::default());
+    let nid = deployed_net(34);
+    let server = start_native_server(&nid, ServerConfig::default());
     let h = server.handle();
     let qx = nemo::tensor::TensorI::zeros(&[1, 1, 16, 16]);
     let err = h.infer("nonexistent", qx).unwrap_err();
@@ -102,19 +99,48 @@ fn unknown_model_is_rejected_not_hung() {
 }
 
 #[test]
-fn batch_variant_selection_pads_correctly() {
-    // 3 requests -> the b=4 variant with 1 padded sample; results for the
-    // 3 real samples must be identical to local execution.
-    let Some((rt, dep)) = setup() else { return };
-    let server = start_server(
-        &rt,
-        &dep,
-        ServerConfig { max_batch: 4, batch_timeout: Duration::from_millis(20), n_workers: 1 },
+fn wrong_shaped_request_gets_an_error_not_garbage() {
+    // Regression: dispatch() used to only debug_assert the per-sample
+    // shape — in release builds a wrong-shaped infer() silently padded or
+    // truncated the gathered batch. It must reply with an Err.
+    let nid = deployed_net(35);
+    let server = start_native_server(&nid, ServerConfig::default());
+    let h = server.handle();
+    // wrong spatial shape
+    let bad = nemo::tensor::TensorI::zeros(&[1, 1, 8, 8]);
+    let err = h.infer("synthnet", bad).unwrap_err();
+    assert!(
+        err.to_string().contains("does not match"),
+        "unexpected error: {err}"
     );
-    let engine = IntegerEngine::new();
-    let mut data = SynthDigits::new(33);
+    // multi-sample request (must be [1, ...])
+    let multi = nemo::tensor::TensorI::zeros(&[2, 1, 16, 16]);
+    assert!(h.infer("synthnet", multi).is_err());
+    // a good request still works afterwards
+    let good = nemo::tensor::TensorI::zeros(&[1, 1, 16, 16]);
+    assert!(h.infer("synthnet", good).is_ok());
+    let m = server.stop();
+    // rejected requests are visible in the metrics, not silently dropped
+    assert_eq!(m.completed, 1);
+    assert_eq!(m.failed, 2);
+}
+
+#[test]
+fn batch_chunking_respects_executor_max_batch() {
+    // Executor allows at most 4 per run; push 11 concurrent requests and
+    // make sure every one is answered correctly.
+    let nid = Arc::new(deployed_net(36));
+    let server = start_native_server(
+        &nid,
+        ServerConfig {
+            max_batch: 4,
+            batch_timeout: Duration::from_millis(20),
+            n_workers: 1,
+        },
+    );
     let mut handles = Vec::new();
-    for _ in 0..3 {
+    let mut data = SynthDigits::new(37);
+    for _ in 0..11 {
         let (x, _) = data.batch(1);
         let qx = quantize_input(&x, EPS_IN);
         let h = server.handle();
@@ -123,9 +149,94 @@ fn batch_variant_selection_pads_correctly() {
     }
     for (qx, j) in handles {
         let served = j.join().unwrap();
-        let local = engine.run(&dep.id, &qx);
+        let local = nid.run(&qx);
         assert_eq!(served.data(), local.data());
     }
     let m = server.stop();
-    assert_eq!(m.completed, 3);
+    assert_eq!(m.completed, 11);
+    assert_eq!(m.failed, 0);
+}
+
+// -- PJRT parity (requires artifacts + the `pjrt` feature) -----------------
+
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use super::*;
+    use nemo::io::artifacts_dir;
+    use nemo::model::artifact_args::synthnet_id_args;
+    use nemo::runtime::Runtime;
+
+    /// The same requests served by the native engine and the compiled
+    /// PJRT executables must produce bit-identical integer logits.
+    #[test]
+    fn native_and_pjrt_backends_agree_bit_exactly() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("SKIP: artifacts not built");
+            return;
+        }
+        let rt = Runtime::new(dir).unwrap();
+        let nid = deployed_net(38);
+        let base_args = synthnet_id_args(nid.deployed()).unwrap();
+        let pjrt_model = ModelVariant::load(&rt, "synthnet", "id_fwd", base_args).unwrap();
+        let pjrt_server = Server::start(vec![pjrt_model], ServerConfig::default());
+        let native_server = start_native_server(&nid, ServerConfig::default());
+
+        let hp = pjrt_server.handle();
+        let hn = native_server.handle();
+        let mut data = SynthDigits::new(39);
+        for _ in 0..16 {
+            let (x, _) = data.batch(1);
+            let qx = quantize_input(&x, EPS_IN);
+            let a = hp.infer("synthnet", qx.clone()).unwrap();
+            let b = hn.infer("synthnet", qx).unwrap();
+            assert_eq!(a.data(), b.data(), "backends must be interchangeable");
+        }
+        pjrt_server.stop();
+        native_server.stop();
+    }
+
+    /// 3 requests -> the b=4 compiled variant with 1 padded sample; the
+    /// executor's pad-and-slice logic must return exactly the 3 real
+    /// rows, identical to local execution.
+    #[test]
+    fn batch_variant_selection_pads_correctly() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("SKIP: artifacts not built");
+            return;
+        }
+        let rt = Runtime::new(dir).unwrap();
+        let nid = Arc::new(deployed_net(40));
+        let base_args = synthnet_id_args(nid.deployed()).unwrap();
+        let model = ModelVariant::load(&rt, "synthnet", "id_fwd", base_args).unwrap();
+        let server = Server::start(
+            vec![model],
+            ServerConfig {
+                max_batch: 4,
+                batch_timeout: Duration::from_millis(20),
+                n_workers: 1,
+            },
+        );
+        let mut data = SynthDigits::new(41);
+        let mut handles = Vec::new();
+        for _ in 0..3 {
+            let (x, _) = data.batch(1);
+            let qx = quantize_input(&x, EPS_IN);
+            let h = server.handle();
+            let qx2 = qx.clone();
+            handles
+                .push((qx, std::thread::spawn(move || h.infer("synthnet", qx2).unwrap())));
+        }
+        for (qx, j) in handles {
+            let served = j.join().unwrap();
+            let local = nid.run(&qx);
+            assert_eq!(served.data(), local.data());
+        }
+        let m = server.stop();
+        assert_eq!(m.completed, 3);
+        // (m.padded is usually 1 here, but batching under timing jitter
+        // may split the requests — correctness of the pad/slice path is
+        // what the per-sample equality above pins down.)
+    }
 }

@@ -1,6 +1,7 @@
 //! Training-driver integration tests: the PJRT-compiled FP and FQ (QAT)
 //! train steps must actually learn, and training must be deterministic.
-//! Requires artifacts (skips otherwise).
+//! Requires the `pjrt` feature and artifacts (skips otherwise).
+#![cfg(feature = "pjrt")]
 
 use nemo::data::SynthDigits;
 use nemo::io::artifacts_dir;
