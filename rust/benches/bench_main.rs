@@ -3,41 +3,70 @@
 //!
 //!     cargo bench
 //!
-//! or a subset: `cargo bench -- E1 E5`. Results are recorded in
-//! EXPERIMENTS.md. criterion is not in the offline vendor set; timing
-//! uses util::timer::bench (warmup + min-time loop). Requires the `pjrt`
-//! feature (PJRT-dependent benches skip gracefully without artifacts).
-#![allow(deprecated)] // benches time the legacy shims alongside the new API
+//! or a subset: `cargo bench -- E1 E5 plan`. Results are recorded in
+//! EXPERIMENTS.md; the `plan` bench additionally writes BENCH_plan.json
+//! (planned-vs-interpreted integer inference throughput) so CI and the
+//! perf log can track the compiled-plan speedup. criterion is not in the
+//! offline vendor set; timing uses util::timer::bench (warmup + min-time
+//! loop). The default build needs no artifacts and no `pjrt` feature —
+//! PJRT-dependent benches compile out (and print a skip note) without it.
 
+use std::sync::Arc;
 use std::time::Duration;
 
+use nemo::coordinator::{ModelVariant, Server, ServerConfig};
 use nemo::data::SynthDigits;
-use nemo::engine::{FloatEngine, IntegerEngine};
-use nemo::io::artifacts_dir;
-use nemo::model::artifact_args::synthnet_id_args;
-use nemo::model::synthnet::{SynthNet, EPS_IN};
+use nemo::engine::plan::IntArena;
+use nemo::engine::{FloatEngine, IntPlan, IntegerEngine};
+use nemo::exec::{ExecInput, Executor, NativeIntExecutor};
+use nemo::graph::Graph;
 use nemo::model::residual_net;
+use nemo::model::synthnet::{SynthNet, EPS_IN};
+use nemo::network::{FakeQuantized, Network};
 use nemo::quant::bn::{BnParams, BnQuant, Thresholds};
-use nemo::quant::requant::{choose_d, multiplier, Requant};
 use nemo::quant::quantize_input;
-use nemo::runtime::Runtime;
+use nemo::quant::requant::{choose_d, multiplier, Requant};
 use nemo::tensor::{ops, Tensor, TensorI};
-use nemo::train::{eval_float, eval_integer, train_fp, train_fq, TrainConfig};
-use nemo::transform::{calibrate_percentile, deploy, fold_bn, DeployOptions};
+use nemo::transform::{calibrate_percentile, DeployOptions, Deployed};
+use nemo::util::json::{self, Value};
 use nemo::util::rng::Rng;
 use nemo::util::timer::{bench, fmt_time};
+
+#[cfg(feature = "pjrt")]
+use nemo::io::artifacts_dir;
+#[cfg(feature = "pjrt")]
+use nemo::runtime::Runtime;
+
+/// PACT graph -> deployment record via the typed pipeline (the untyped
+/// `transform::deploy` shim is gone).
+fn deploy_pact(g: Graph, opts: DeployOptions) -> Deployed {
+    Network::<FakeQuantized>::from_pact_graph(g)
+        .expect("pact graph")
+        .deploy(opts)
+        .expect("deploy")
+        .integerize()
+        .into_deployed()
+}
 
 fn main() {
     let filters: Vec<String> = std::env::args()
         .skip(1)
-        .filter(|a| a.starts_with('E') || a.starts_with("perf"))
+        .filter(|a| {
+            a.starts_with('E') || a.starts_with("perf") || a.starts_with("plan")
+        })
         .collect();
-    let run = |tag: &str| filters.is_empty() || filters.iter().any(|f| tag.starts_with(f.as_str()));
+    let run = |tag: &str| {
+        filters.is_empty() || filters.iter().any(|f| tag.starts_with(f.as_str()))
+    };
 
+    #[cfg(feature = "pjrt")]
     let rt = Runtime::new(artifacts_dir()).ok();
+    #[cfg(feature = "pjrt")]
     if rt.is_none() {
         eprintln!("NOTE: artifacts not built; PJRT-dependent benches are skipped");
     }
+    #[cfg(not(feature = "pjrt"))]
+    eprintln!("NOTE: built without `pjrt`; PJRT-dependent benches are skipped");
 
     if run("E1") {
         e1_requant_error();
@@ -45,6 +74,7 @@ fn main() {
     if run("E2") {
         e2_threshold_exactness();
     }
+    #[cfg(feature = "pjrt")]
     if run("E3") || run("E4") {
         e3_e4_representations_and_qat(rt.as_ref());
     }
@@ -58,13 +88,19 @@ fn main() {
         e7_bn_folding();
     }
     if run("E8") {
-        e8_engine_and_serving(rt.as_ref());
+        e8_engine_and_serving();
     }
+    #[cfg(feature = "pjrt")]
     if run("E9") {
         e9_float_hardware(rt.as_ref());
     }
+    if run("plan") {
+        plan_vs_interpreted();
+    }
     if run("perf") {
-        perf_microbench(rt.as_ref());
+        perf_microbench();
+        #[cfg(feature = "pjrt")]
+        perf_pjrt_kernels(rt.as_ref());
     }
 }
 
@@ -184,10 +220,13 @@ fn e2_threshold_exactness() {
 }
 
 // ---------------------------------------------------------------------------
-// E3+E4: representation accuracy table + QAT recovery
+// E3+E4: representation accuracy table + QAT recovery (needs pjrt)
 // ---------------------------------------------------------------------------
 
+#[cfg(feature = "pjrt")]
 fn e3_e4_representations_and_qat(rt: Option<&Runtime>) {
+    use nemo::train::{eval_float, eval_integer, train_fp, train_fq, TrainConfig};
+
     println!("\n=== E3: accuracy across representations / E4: QAT recovery ===");
     let Some(rt) = rt else {
         println!("skipped (no artifacts)");
@@ -198,7 +237,7 @@ fn e3_e4_representations_and_qat(rt: Option<&Runtime>) {
     let mut net = SynthNet::init(&mut rng);
     let mut data = SynthDigits::new(seed);
     let cfg = TrainConfig { steps: 500, lr: 0.3, lr_decay: true, seed, log_every: 0 };
-    train_fp(&rt, &mut net, &mut data, &cfg).expect("fp train");
+    train_fp(rt, &mut net, &mut data, &cfg).expect("fp train");
     let (cal_x, _) = data.batch(128);
     net.act_betas = calibrate_percentile(&net.to_fp_graph(), &[cal_x], 0.995);
     let (eval_x, eval_l) = SynthDigits::eval_set(seed, 1024);
@@ -209,11 +248,10 @@ fn e3_e4_representations_and_qat(rt: Option<&Runtime>) {
         "bits", "FP", "QD preQAT", "ID preQAT", "QD postQAT", "ID postQAT"
     );
     for bits in [8u32, 4, 2] {
-        let dep0 = deploy(
-            &net.to_pact_graph(bits),
+        let dep0 = deploy_pact(
+            net.to_pact_graph(bits),
             DeployOptions { wbits: bits, abits: bits, ..DeployOptions::default() },
-        )
-        .expect("deploy");
+        );
         let qd0 = eval_float(&dep0.qd, &eval_x, &eval_l);
         let id0 = eval_integer(&dep0.id, &eval_x, &eval_l, EPS_IN);
 
@@ -221,12 +259,11 @@ fn e3_e4_representations_and_qat(rt: Option<&Runtime>) {
         let mut qat_net = net.clone();
         let mut qat_data = SynthDigits::new(seed + 100);
         let qcfg = TrainConfig { steps: 200, lr: 0.06, lr_decay: true, seed, log_every: 0 };
-        train_fq(&rt, &mut qat_net, &mut qat_data, bits, bits, &qcfg).expect("fq");
-        let dep1 = deploy(
-            &qat_net.to_pact_graph(bits),
+        train_fq(rt, &mut qat_net, &mut qat_data, bits, bits, &qcfg).expect("fq");
+        let dep1 = deploy_pact(
+            qat_net.to_pact_graph(bits),
             DeployOptions { wbits: bits, abits: bits, ..DeployOptions::default() },
-        )
-        .expect("deploy");
+        );
         let qd1 = eval_float(&dep1.qd, &eval_x, &eval_l);
         let id1 = eval_integer(&dep1.id, &eval_x, &eval_l, EPS_IN);
         println!(
@@ -286,14 +323,17 @@ fn e6_add_requant() {
     let mut cal = SynthDigits::new(60);
     let (cal_x, _) = cal.batch(32);
     let betas = calibrate_percentile(&g, &[cal_x.clone()], 0.999);
-    let fq = nemo::transform::quantize_pact(&g, 8, 8, &betas);
+    let fq = Network::from_graph(g)
+        .expect("fp")
+        .quantize_pact(8, 8, &betas)
+        .expect("fq");
+    let fq_graph = fq.graph().clone();
     println!("{:>8} {:>16} {:>16}", "factor", "max |QD-ID| out", "argmax agree");
     for factor in [16u32, 64, 256, 1024] {
-        let dep = deploy(
-            &fq,
+        let dep = deploy_pact(
+            fq_graph.clone(),
             DeployOptions { add_requant_factor: factor, ..DeployOptions::default() },
-        )
-        .expect("deploy residual");
+        );
         let (x, _) = SynthDigits::eval_set(61, 128);
         let qx = quantize_input(&x, EPS_IN);
         let x_grid = qx.map(|q| q as f32 / 255.0);
@@ -326,17 +366,21 @@ fn e7_bn_folding() {
     let mut rng = Rng::new(7);
     let net = SynthNet::init(&mut rng);
     let g = net.to_fp_graph();
-    let folded = fold_bn(&g, None).expect("fold");
+    let folded_net = Network::from_graph(g.clone())
+        .expect("fp")
+        .fold_bn(None)
+        .expect("fold");
+    let folded = folded_net.graph();
     let (x, _) = SynthDigits::eval_set(70, 64);
     let e = FloatEngine::new();
     let a = e.run(&g, &x);
-    let b = e.run(&folded, &x);
+    let b = e.run(folded, &x);
     println!("max |unfolded - folded| = {:.3e} (float assoc. error only)", a.max_abs_diff(&b));
     let (t_bn, _) = bench(1, 0.5, || {
         std::hint::black_box(e.run(&g, &x));
     });
     let (t_fold, _) = bench(1, 0.5, || {
-        std::hint::black_box(e.run(&folded, &x));
+        std::hint::black_box(e.run(folded, &x));
     });
     println!(
         "inference: with BN {}  folded {}  ({:.1}% faster, {} fewer nodes)",
@@ -348,14 +392,14 @@ fn e7_bn_folding() {
 }
 
 // ---------------------------------------------------------------------------
-// E8: engine throughput + serving sweep
+// E8: engine throughput + native serving sweep
 // ---------------------------------------------------------------------------
 
-fn e8_engine_and_serving(rt: Option<&Runtime>) {
-    println!("\n=== E8: deployment throughput (engines + serving) ===");
+fn e8_engine_and_serving() {
+    println!("\n=== E8: deployment throughput (engines + native serving) ===");
     let mut rng = Rng::new(8);
     let net = SynthNet::init(&mut rng);
-    let dep = deploy(&net.to_pact_graph(8), DeployOptions::default()).expect("deploy");
+    let dep = deploy_pact(net.to_pact_graph(8), DeployOptions::default());
     let (x, _) = SynthDigits::eval_set(80, 16);
     let qx = quantize_input(&x, EPS_IN);
     let fe = FloatEngine::new();
@@ -376,39 +420,16 @@ fn e8_engine_and_serving(rt: Option<&Runtime>) {
     println!("  FloatEngine QD   : {} / batch ({:.0} img/s)", fmt_time(t_qd), 16.0 / t_qd);
     println!("  IntegerEngine ID : {} / batch ({:.0} img/s)", fmt_time(t_id), 16.0 / t_id);
 
-    let Some(rt) = rt else {
-        println!("(PJRT + serving skipped: no artifacts)");
-        return;
-    };
-    let exe = rt.load("synthnet_id_fwd_b16").expect("load");
-    let mut args = synthnet_id_args(&dep).expect("args");
-    args.push(qx.clone().into());
-    let (t_pjrt, _) = bench(2, 1.0, || {
-        std::hint::black_box(exe.run(&args).expect("run"));
-    });
-    println!("  PJRT id_fwd b16  : {} / batch ({:.0} img/s)  [Pallas interpret]", fmt_time(t_pjrt), 16.0 / t_pjrt);
-    if let Ok(exe_xla) = rt.load("synthnet_id_xla_b16") {
-        let (t_xla, _) = bench(2, 1.0, || {
-            std::hint::black_box(exe_xla.run(&args).expect("run"));
-        });
-        println!(
-            "  PJRT id_xla b16  : {} / batch ({:.0} img/s)  [XLA-native integer]",
-            fmt_time(t_xla),
-            16.0 / t_xla
-        );
-    }
-
-    // serving sweep (condensed; full sweep in examples/serve_quantized.rs)
-    use nemo::coordinator::{ModelVariant, Server, ServerConfig};
-    println!("serving over id_fwd_xla (512 req, 2 workers):");
+    // Serving sweep over the planned native executor: no artifacts, no
+    // FFI — the coordinator's hot path does zero graph walking.
+    println!("serving over native-int (512 req, 2 workers):");
     println!(
         "  {:>9} {:>8} {:>10} {:>10} {:>12}",
         "max_batch", "clients", "p50 (ms)", "p99 (ms)", "thruput r/s"
     );
     for (max_batch, clients) in [(1usize, 8usize), (16, 8), (16, 32)] {
-        let base_args = synthnet_id_args(&dep).expect("args");
-        let kind = if rt.manifest.by_kind("id_fwd_xla").is_empty() { "id_fwd" } else { "id_fwd_xla" };
-        let model = ModelVariant::load(rt, "synthnet", kind, base_args).expect("mv");
+        let exec = NativeIntExecutor::new(dep.id.clone(), max_batch).expect("executor");
+        let model = ModelVariant::new("synthnet", Arc::new(exec));
         let server = Server::start(
             vec![model],
             ServerConfig {
@@ -446,10 +467,14 @@ fn e8_engine_and_serving(rt: Option<&Runtime>) {
 }
 
 // ---------------------------------------------------------------------------
-// E9: ID on float hardware (PJRT) — exactness + overhead
+// E9: ID on float hardware (PJRT) — exactness + overhead (needs pjrt)
 // ---------------------------------------------------------------------------
 
+#[cfg(feature = "pjrt")]
 fn e9_float_hardware(rt: Option<&Runtime>) {
+    use nemo::graph::Op;
+    use nemo::model::artifact_args::synthnet_id_args;
+
     println!("\n=== E9: IntegerDeployable on general-purpose hardware (sec. 3 note) ===");
     let Some(rt) = rt else {
         println!("skipped (no artifacts)");
@@ -457,7 +482,7 @@ fn e9_float_hardware(rt: Option<&Runtime>) {
     };
     let mut rng = Rng::new(9);
     let net = SynthNet::init(&mut rng);
-    let dep = deploy(&net.to_pact_graph(8), DeployOptions::default()).expect("deploy");
+    let dep = deploy_pact(net.to_pact_graph(8), DeployOptions::default());
     let (x, _) = SynthDigits::eval_set(90, 8);
     let qx = quantize_input(&x, EPS_IN);
     let x_grid = qx.map(|q| q as f32 / 255.0);
@@ -494,7 +519,6 @@ fn e9_float_hardware(rt: Option<&Runtime>) {
     // qd args: w_hat/kappa_hat/lambda_hat/beta/eps per conv + fc + x
     let mut qd_args: Vec<nemo::runtime::Arg> = Vec::new();
     {
-        use nemo::graph::Op;
         let mut per_conv: Vec<(Tensor<f32>, Vec<f64>, Vec<f64>)> = Vec::new();
         let mut fc: Option<(Tensor<f32>, Vec<f64>)> = None;
         for n in &dep.qd.nodes {
@@ -545,10 +569,92 @@ fn e9_float_hardware(rt: Option<&Runtime>) {
 }
 
 // ---------------------------------------------------------------------------
+// plan: compiled execution plans vs interpreted graph walking
+// ---------------------------------------------------------------------------
+
+fn plan_vs_interpreted() {
+    println!("\n=== plan: compiled plans vs per-request graph interpretation ===");
+    let mut rng = Rng::new(42);
+    let net = SynthNet::init(&mut rng);
+    let dep = deploy_pact(net.to_pact_graph(8), DeployOptions::default());
+    let ie = IntegerEngine::new();
+    let plan = IntPlan::compile(&dep.id).expect("plan");
+    println!(
+        "  synthnet ID graph: {} nodes -> {} plan steps ({} fused into GEMM epilogues)",
+        dep.id.nodes.len(),
+        plan.steps().len(),
+        plan.fused_nodes()
+    );
+
+    let mut results: Vec<Value> = Vec::new();
+    for batch in [1usize, 16] {
+        let (x, _) = SynthDigits::eval_set(800 + batch as u64, batch);
+        let qx = quantize_input(&x, EPS_IN);
+        let (t_interp, _) = bench(2, 0.7, || {
+            std::hint::black_box(ie.run_interpreted(&dep.id, &qx));
+        });
+        let layout = plan.layout(batch).expect("layout");
+        let mut arena = IntArena::new();
+        let (t_plan, _) = bench(2, 0.7, || {
+            std::hint::black_box(plan.execute(&layout, &mut arena, &qx));
+        });
+        // exactness sanity while we are here
+        assert_eq!(
+            plan.execute(&layout, &mut arena, &qx),
+            ie.run_interpreted(&dep.id, &qx),
+            "plan diverged from interpreter"
+        );
+        let speedup = t_interp / t_plan;
+        println!(
+            "  batch {batch:>2}: interpreted {} ({:>7.0} img/s)  planned {} ({:>7.0} img/s)  -> {speedup:.2}x  [arena {} KiB in {} slots]",
+            fmt_time(t_interp),
+            batch as f64 / t_interp,
+            fmt_time(t_plan),
+            batch as f64 / t_plan,
+            layout.arena_len() * 4 / 1024,
+            layout.arena_slots(),
+        );
+        results.push(json::obj(vec![
+            ("workload", Value::Str("synthnet_id".into())),
+            ("batch", Value::Int(batch as i64)),
+            ("interpreted_s", Value::Num(t_interp)),
+            ("planned_s", Value::Num(t_plan)),
+            ("speedup", Value::Num(speedup)),
+            ("planned_imgs_per_s", Value::Num(batch as f64 / t_plan)),
+            ("arena_slots", Value::Int(layout.arena_slots() as i64)),
+            ("arena_bytes", Value::Int((layout.arena_len() * 4) as i64)),
+        ]));
+    }
+
+    // Steady-state serving path: precompiled executor + pooled arenas.
+    let exec = NativeIntExecutor::new(dep.id.clone(), 16).expect("executor");
+    let (x, _) = SynthDigits::eval_set(900, 16);
+    let input = ExecInput::i32(quantize_input(&x, EPS_IN));
+    let (t_exec, _) = bench(2, 0.7, || {
+        std::hint::black_box(exec.run_batch(&input).expect("run"));
+    });
+    println!(
+        "  NativeIntExecutor b=16 (precompiled, pooled arenas): {} ({:.0} img/s)",
+        fmt_time(t_exec),
+        16.0 / t_exec
+    );
+    results.push(json::obj(vec![
+        ("workload", Value::Str("synthnet_id_executor".into())),
+        ("batch", Value::Int(16)),
+        ("planned_s", Value::Num(t_exec)),
+        ("planned_imgs_per_s", Value::Num(16.0 / t_exec)),
+    ]));
+
+    let doc = json::obj(vec![("plan_bench", Value::Arr(results))]);
+    std::fs::write("BENCH_plan.json", json::write(&doc)).expect("write BENCH_plan.json");
+    println!("  wrote BENCH_plan.json");
+}
+
+// ---------------------------------------------------------------------------
 // perf: micro-benchmarks for the optimization pass (§Perf)
 // ---------------------------------------------------------------------------
 
-fn perf_microbench(rt: Option<&Runtime>) {
+fn perf_microbench() {
     println!("\n=== perf: hot-path micro-benchmarks ===");
     let mut rng = Rng::new(99);
     // integer GEMM (the engine hot path)
@@ -563,7 +669,7 @@ fn perf_microbench(rt: Option<&Runtime>) {
         });
         let flops = 2.0 * (m * k * n) as f64;
         println!(
-            "  matmul_i32 {m}x{k}x{n}: checked {} ({:.2} Gop/s)  fast {} ({:.2} Gop/s)",
+            "  matmul_i32 {m}x{k}x{n}: checked {} ({:.2} Gop/s)  fast/threaded {} ({:.2} Gop/s)",
             fmt_time(t),
             flops / t / 1e9,
             fmt_time(tf),
@@ -579,6 +685,23 @@ fn perf_microbench(rt: Option<&Runtime>) {
         std::hint::black_box(ops::im2col(&x, 3, 3, 1, 1));
     });
     println!("  im2col 16x8x16x16 k3: {}", fmt_time(t));
+    // im2col into a reused arena buffer (the plan path)
+    let mut buf = vec![0i32; 16 * 16 * 16 * 8 * 9];
+    let (t, _) = bench(2, 0.5, || {
+        std::hint::black_box(ops::im2col_into(
+            x.data(),
+            16,
+            8,
+            16,
+            16,
+            3,
+            3,
+            1,
+            1,
+            &mut buf,
+        ));
+    });
+    println!("  im2col_into (arena reuse): {}", fmt_time(t));
     // requant
     let q: TensorI = Tensor::from_vec(&[1 << 16], (0..1 << 16).map(|_| rng.int(-(1 << 24), 1 << 24) as i32).collect());
     let rq = Requant { m: 29, d: 21, lo: 0, hi: 255 };
@@ -586,26 +709,29 @@ fn perf_microbench(rt: Option<&Runtime>) {
         std::hint::black_box(rq.apply_tensor(&q));
     });
     println!("  requant 64k: {}  ({:.0} Mel/s)", fmt_time(t), (1 << 16) as f64 / t / 1e6);
-    if let Some(rt) = rt {
-        for name in ["kernel_qgemm_256", "kernel_requant_64k", "kernel_intbn_4096x64",
-                     "kernel_thresh_4096x32", "kernel_avgpool_8x32"] {
-            let exe = rt.load(name).expect("load");
-            let args: Vec<nemo::runtime::Arg> = exe
-                .spec
-                .args
-                .iter()
-                .map(|a| {
-                    if a.dtype == "int32" {
-                        nemo::runtime::Arg::I32(Tensor::full(&a.shape, 3))
-                    } else {
-                        nemo::runtime::Arg::F32(Tensor::full(&a.shape, 1.0))
-                    }
-                })
-                .collect();
-            let (t, _) = bench(2, 0.5, || {
-                std::hint::black_box(exe.run(&args).expect("run"));
-            });
-            println!("  PJRT {name}: {}", fmt_time(t));
-        }
+}
+
+#[cfg(feature = "pjrt")]
+fn perf_pjrt_kernels(rt: Option<&Runtime>) {
+    let Some(rt) = rt else { return };
+    for name in ["kernel_qgemm_256", "kernel_requant_64k", "kernel_intbn_4096x64",
+                 "kernel_thresh_4096x32", "kernel_avgpool_8x32"] {
+        let exe = rt.load(name).expect("load");
+        let args: Vec<nemo::runtime::Arg> = exe
+            .spec
+            .args
+            .iter()
+            .map(|a| {
+                if a.dtype == "int32" {
+                    nemo::runtime::Arg::I32(Tensor::full(&a.shape, 3))
+                } else {
+                    nemo::runtime::Arg::F32(Tensor::full(&a.shape, 1.0))
+                }
+            })
+            .collect();
+        let (t, _) = bench(2, 0.5, || {
+            std::hint::black_box(exe.run(&args).expect("run"));
+        });
+        println!("  PJRT {name}: {}", fmt_time(t));
     }
 }

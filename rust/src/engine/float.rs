@@ -1,5 +1,12 @@
 //! Float-domain executor for FP / FQ / QD graphs.
+//!
+//! [`FloatEngine::run`] executes a freshly compiled fused [`FloatPlan`];
+//! [`FloatEngine::run_interpreted`] / [`FloatEngine::run_traced`] keep
+//! the unfused node-per-tensor interpreter (calibration captures
+//! per-node activations through the trace, and the plan property tests
+//! verify the two paths bit-identical).
 
+use crate::engine::plan::{FloatArena, FloatPlan};
 use crate::graph::{Graph, Op};
 use crate::quant::QuantSpec;
 use crate::tensor::ops;
@@ -19,11 +26,21 @@ impl FloatEngine {
 
     /// Run the graph; `x` is [B, C, H, W] (or [B, F] for MLP graphs).
     pub fn run(&self, g: &Graph, x: &TensorF) -> TensorF {
+        let plan = FloatPlan::compile(g).expect("float graph failed to plan");
+        let layout = plan
+            .layout(x.shape().first().copied().unwrap_or(0))
+            .expect("float plan layout");
+        let mut arena = FloatArena::new();
+        plan.execute(&layout, &mut arena, x)
+    }
+
+    /// Unfused reference interpreter (one tensor per node).
+    pub fn run_interpreted(&self, g: &Graph, x: &TensorF) -> TensorF {
         self.run_inner(g, x, None)
     }
 
-    /// Run and record the output tensor of every node (used by
-    /// calibration and by debugging tools).
+    /// Run the unfused interpreter and record the output tensor of every
+    /// node (used by calibration and by debugging tools).
     pub fn run_traced(&self, g: &Graph, x: &TensorF) -> Vec<TensorF> {
         let mut trace: Vec<TensorF> = Vec::with_capacity(g.nodes.len());
         self.run_inner(g, x, Some(&mut trace));
@@ -152,9 +169,9 @@ fn apply_channel_affine(y: &mut TensorF, kappa: &[f64], lambda: &[f64]) {
 }
 
 fn add_channel_bias(y: &mut TensorF, bias: &[f64]) {
-    let zeros = vec![1.0f64; bias.len()];
+    let ones = vec![1.0f64; bias.len()];
     // reuse affine with kappa = 1
-    apply_channel_affine(y, &zeros, bias);
+    apply_channel_affine(y, &ones, bias);
 }
 
 #[cfg(test)]
@@ -181,6 +198,9 @@ mod tests {
             out.data(),
             &[0.0, 2.0, 0.0, 4.0, 0.0, 6.0, 0.0, 8.0, 0.0]
         );
+        // fused plan path == unfused interpreter, bit-exactly
+        let interp = FloatEngine::new().run_interpreted(&g, &input);
+        assert_eq!(out.data(), interp.data());
     }
 
     #[test]

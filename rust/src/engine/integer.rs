@@ -5,7 +5,18 @@
 //! tensors are i32 integer images; products and accumulations widen to
 //! i64 exactly like the Pallas kernels and narrow back behind checked
 //! casts (the transform pipeline's range analysis proves they fit).
+//!
+//! Two execution paths, bit-identical by construction (and by the
+//! property tests in tests/plan.rs):
+//!
+//! * [`IntegerEngine::run`] compiles a fused [`IntPlan`] and executes it
+//!   (serving precompiles the plan once in
+//!   [`crate::exec::NativeIntExecutor`] instead of per call);
+//! * [`IntegerEngine::run_interpreted`] / [`IntegerEngine::run_traced`]
+//!   walk the graph node by node with one tensor per node — the unfused
+//!   diagnostic path the plan is verified against.
 
+use crate::engine::plan::{IntArena, IntPlan};
 use crate::graph::int::{IntGraph, IntOp};
 use crate::tensor::ops;
 use crate::tensor::{Tensor, TensorI};
@@ -18,12 +29,25 @@ impl IntegerEngine {
         IntegerEngine
     }
 
-    /// Run the integer graph on an integer-image batch ([B,C,H,W] or [B,F]).
+    /// Run the integer graph on an integer-image batch ([B,C,H,W] or
+    /// [B,F]) through a freshly compiled fused plan.
     pub fn run(&self, g: &IntGraph, qx: &TensorI) -> TensorI {
+        let plan = IntPlan::compile(g).expect("integer graph failed to plan");
+        let layout = plan
+            .layout(qx.shape().first().copied().unwrap_or(0))
+            .expect("integer plan layout");
+        let mut arena = IntArena::new();
+        plan.execute(&layout, &mut arena, qx)
+    }
+
+    /// Unfused reference interpreter: one tensor per node, no fusion, no
+    /// arena. The plan path is property-tested bit-identical to this.
+    pub fn run_interpreted(&self, g: &IntGraph, qx: &TensorI) -> TensorI {
         self.run_inner(g, qx, None)
     }
 
-    /// Run and record every node's output (deployment diagnostics).
+    /// Run the unfused interpreter and record every node's output
+    /// (deployment diagnostics; the trace indexes by graph node id).
     pub fn run_traced(&self, g: &IntGraph, qx: &TensorI) -> Vec<TensorI> {
         let mut trace = Vec::with_capacity(g.nodes.len());
         self.run_inner(g, qx, Some(&mut trace));
@@ -65,21 +89,14 @@ impl IntegerEngine {
                     if let Some(b) = bias_q {
                         let c = y.shape()[1];
                         for (i, v) in y.data_mut().iter_mut().enumerate() {
-                            *v = (*v as i64 + b[i % c]) as i32;
+                            *v = ops::narrow(*v as i64 + b[i % c]);
                         }
                     }
                     y
                 }
                 IntOp::IntBn { bn } => {
                     let t = outs[n.inputs[0]].as_ref().unwrap();
-                    apply_per_channel(t, |c, q| {
-                        let v = bn.apply(c, q);
-                        debug_assert!(
-                            v >= i32::MIN as i64 && v <= i32::MAX as i64,
-                            "IntBn overflow: {v}"
-                        );
-                        v as i32
-                    })
+                    apply_per_channel(t, |c, q| ops::narrow(bn.apply(c, q)))
                 }
                 IntOp::RequantAct { rq } => outs[n.inputs[0]]
                     .as_ref()
@@ -110,11 +127,7 @@ impl IntegerEngine {
                         assert_eq!(t.shape(), acc.shape(), "Add shape mismatch");
                         let rq = &rqs[bi];
                         for (a, b) in acc.data_mut().iter_mut().zip(t.data()) {
-                            let sum = *a as i64 + rq.apply(*b as i64);
-                            debug_assert!(
-                                sum >= i32::MIN as i64 && sum <= i32::MAX as i64
-                            );
-                            *a = sum as i32;
+                            *a = ops::narrow(*a as i64 + rq.apply(*b as i64));
                         }
                     }
                     acc
@@ -171,7 +184,7 @@ fn add_channel_bias_i32(y: &mut TensorI, bias: &[i64]) {
         for ci in 0..c {
             let base = (bi * c + ci) * hw;
             for v in &mut data[base..base + hw] {
-                *v = (*v as i64 + bias[ci]) as i32;
+                *v = ops::narrow(*v as i64 + bias[ci]);
             }
         }
     }
@@ -213,6 +226,9 @@ mod tests {
         // channel 0: (10*2*3 + 10) >> 1 = 35 ; channel 1: (10*-1 -10)>>1 -> clip 0
         assert_eq!(out.at4(0, 0, 0, 0), 35);
         assert_eq!(out.at4(0, 1, 0, 0), 0);
+        // fused plan path == unfused interpreter
+        let interp = IntegerEngine::new().run_interpreted(&g, &qx);
+        assert_eq!(out, interp);
     }
 
     #[test]

@@ -5,13 +5,22 @@
 //!   images with i64 widening — no floating point on the value path. It
 //!   is the simulator standing in for the paper's MCU integer datapath
 //!   (DESIGN.md §Hardware-Adaptation).
+//! * [`plan`] is the compile layer between graphs and engines: static
+//!   shape inference, liveness-planned buffer arenas, and fused
+//!   GEMM-epilogue kernels. `run` on either engine executes a compiled
+//!   plan; the unfused interpreters remain as `run_interpreted` /
+//!   `run_traced` diagnostic paths and as the bit-exactness reference.
 //!
 //! These are the raw single-call engines; for batched serving and
 //! backend-interchangeable execution they are wrapped by the
-//! [`crate::exec::Executor`] implementations.
+//! [`crate::exec::Executor`] implementations, which compile one plan (and
+//! one layout per batch variant) up front and pool arenas across
+//! requests.
 
 pub mod float;
 pub mod integer;
+pub mod plan;
 
 pub use float::FloatEngine;
 pub use integer::IntegerEngine;
+pub use plan::{FloatPlan, IntPlan, PlanError, PlanLayout};

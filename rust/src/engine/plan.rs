@@ -1,0 +1,1369 @@
+//! Compiled execution plans (DESIGN.md §Plan-compilation).
+//!
+//! The interpreters in [`super::integer`]/[`super::float`] walk the graph
+//! per call and allocate a fresh tensor per node. A [`IntPlan`] /
+//! [`FloatPlan`] instead compiles a graph **once**:
+//!
+//! 1. **Shape inference** ([`crate::graph::shape`]) — every node's output
+//!    shape is a static function of the graph (only the batch dimension
+//!    varies), so it is computed at compile time, not per request.
+//! 2. **Fusion** — the deployment pipeline guarantees that
+//!    `ConvInt/LinearInt → IntBn → RequantAct/ThreshAct` chains (and the
+//!    residual `AddRequant` equivalents) are pointwise per-channel
+//!    epilogues of the producing GEMM/Add. The planner collapses each
+//!    chain into a single step whose epilogue runs while the GEMM output
+//!    is narrowed i64→i32 — no intermediate tensors, bit-identical
+//!    results (the float pipeline fuses `Conv2d/Linear/Add → BatchNorm/
+//!    QuantBn → ReLU/PactAct` the same way).
+//! 3. **Liveness + arena planning** — a topological liveness pass assigns
+//!    every step output (and conv im2col/GEMM scratch) to a slot in a
+//!    reusable buffer arena; slots are recycled the moment their last
+//!    reader retires. Executing a plan performs zero graph walking and —
+//!    with a pooled [`Arena`] — zero steady-state allocation beyond the
+//!    returned output tensor.
+//!
+//! [`PlanLayout`] carries the per-batch-size slot assignment so executors
+//! can compile one layout per batch variant up front and share the plan
+//! (weights are held once, in the plan's steps).
+
+use crate::graph::int::{IntGraph, IntOp};
+use crate::graph::shape::{self, ShapeError};
+use crate::graph::{Graph, NodeId, Op};
+use crate::quant::bn::{BnQuant, Thresholds};
+use crate::quant::requant::Requant;
+use crate::quant::QuantSpec;
+use crate::tensor::{ops, Tensor, TensorF, TensorI};
+
+pub type StepId = usize;
+
+/// Sentinel slot meaning "this step's output is the request input".
+const INPUT_SLOT: usize = usize::MAX;
+
+#[derive(Debug, thiserror::Error)]
+pub enum PlanError {
+    #[error("shape inference: {0}")]
+    Shape(#[from] ShapeError),
+    #[error("plan: {0}")]
+    Invalid(String),
+}
+
+// ---------------------------------------------------------------------------
+// Arena + per-batch layout (shared by the int and float plans)
+// ---------------------------------------------------------------------------
+
+/// A pool of reusable buffers addressed by slot id. Arenas only ever
+/// grow; an arena prepared for batch 16 serves batch 1 without resizing.
+pub struct Arena<T> {
+    bufs: Vec<Vec<T>>,
+}
+
+pub type IntArena = Arena<i32>;
+pub type FloatArena = Arena<f32>;
+
+impl<T> Default for Arena<T> {
+    fn default() -> Self {
+        Arena { bufs: Vec::new() }
+    }
+}
+
+impl<T: Copy + Default> Arena<T> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Grow buffers to satisfy `layout`'s slot lengths.
+    fn prepare(&mut self, layout: &PlanLayout) {
+        if self.bufs.len() < layout.slot_lens.len() {
+            self.bufs.resize_with(layout.slot_lens.len(), Vec::new);
+        }
+        for (i, &len) in layout.slot_lens.iter().enumerate() {
+            if self.bufs[i].len() < len {
+                self.bufs[i].resize(len, T::default());
+            }
+        }
+    }
+
+    /// Total elements currently held (diagnostics).
+    pub fn len(&self) -> usize {
+        self.bufs.iter().map(|b| b.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Per-batch-size execution layout: full shapes, arena slot of every step
+/// output, conv scratch slots, and the required slot lengths.
+#[derive(Clone, Debug)]
+pub struct PlanLayout {
+    pub batch: usize,
+    shapes: Vec<Vec<usize>>,
+    out_slot: Vec<usize>,
+    scratch: Vec<Vec<usize>>,
+    /// Required length of each arena slot.
+    pub slot_lens: Vec<usize>,
+}
+
+impl PlanLayout {
+    /// Total arena elements this layout requires (perf introspection).
+    pub fn arena_len(&self) -> usize {
+        self.slot_lens.iter().sum()
+    }
+
+    /// Number of distinct arena slots (vs. one buffer per node in the
+    /// interpreter).
+    pub fn arena_slots(&self) -> usize {
+        self.slot_lens.len()
+    }
+}
+
+/// What the slot allocator needs to know about one step.
+struct StepSpec {
+    inputs: Vec<StepId>,
+    out_len: usize,
+    scratch: Vec<usize>,
+    is_input: bool,
+}
+
+/// Liveness-driven slot assignment: walk the schedule once, allocating
+/// output/scratch slots from a free list and recycling a slot as soon as
+/// its last reader has executed. Returns (out_slot, scratch_slots,
+/// slot_lens).
+fn assign_slots(
+    specs: &[StepSpec],
+    output: StepId,
+) -> (Vec<usize>, Vec<Vec<usize>>, Vec<usize>) {
+    let n = specs.len();
+    let mut last_use: Vec<usize> = (0..n).collect();
+    for (s, spec) in specs.iter().enumerate() {
+        for &i in &spec.inputs {
+            last_use[i] = last_use[i].max(s);
+        }
+    }
+    last_use[output] = usize::MAX; // the network output is read after the loop
+
+    fn alloc(len: usize, slot_lens: &mut Vec<usize>, free: &mut Vec<usize>) -> usize {
+        // Best fit: the smallest free slot already >= len; otherwise the
+        // largest free slot (least growth); otherwise a fresh slot.
+        let mut best: Option<usize> = None;
+        for (fi, &slot) in free.iter().enumerate() {
+            let better = match best {
+                None => true,
+                Some(b) => {
+                    let (cap, bcap) = (slot_lens[slot], slot_lens[free[b]]);
+                    match (cap >= len, bcap >= len) {
+                        (true, true) => cap < bcap,
+                        (true, false) => true,
+                        (false, true) => false,
+                        (false, false) => cap > bcap,
+                    }
+                }
+            };
+            if better {
+                best = Some(fi);
+            }
+        }
+        match best {
+            Some(fi) => {
+                let slot = free.swap_remove(fi);
+                if slot_lens[slot] < len {
+                    slot_lens[slot] = len;
+                }
+                slot
+            }
+            None => {
+                slot_lens.push(len);
+                slot_lens.len() - 1
+            }
+        }
+    }
+
+    let mut out_slot = vec![INPUT_SLOT; n];
+    let mut scratch_slots: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut slot_lens: Vec<usize> = Vec::new();
+    let mut free: Vec<usize> = Vec::new();
+    for (s, spec) in specs.iter().enumerate() {
+        if !spec.is_input {
+            // Scratch and output are allocated while every input is still
+            // live, so a step can never alias a buffer it reads.
+            for &sl in &spec.scratch {
+                let slot = alloc(sl, &mut slot_lens, &mut free);
+                scratch_slots[s].push(slot);
+            }
+            out_slot[s] = alloc(spec.out_len, &mut slot_lens, &mut free);
+            // Scratch dies with the step.
+            for &slot in &scratch_slots[s] {
+                free.push(slot);
+            }
+        }
+        // Inputs whose last reader is this step are dead now.
+        let mut freed: Vec<StepId> = Vec::new();
+        for &i in &spec.inputs {
+            if last_use[i] == s && !specs[i].is_input && !freed.contains(&i) {
+                freed.push(i);
+                free.push(out_slot[i]);
+            }
+        }
+    }
+    (out_slot, scratch_slots, slot_lens)
+}
+
+/// Read a step's output: the request input for Input steps, its arena
+/// slot otherwise.
+fn slot_data<'a, T: Copy + Default>(
+    arena: &'a Arena<T>,
+    layout: &PlanLayout,
+    sid: StepId,
+    qx: &'a Tensor<T>,
+) -> &'a [T] {
+    let slot = layout.out_slot[sid];
+    if slot == INPUT_SLOT {
+        qx.data()
+    } else {
+        &arena.bufs[slot]
+    }
+}
+
+/// channel-of-flat-index helper: NCHW -> (i / (H*W)) % C, [B, C] -> i % C.
+fn channel_stride(shape: &[usize]) -> (usize, usize) {
+    match shape.len() {
+        4 => (shape[1], shape[2] * shape[3]),
+        2 => (shape[1], 1),
+        d => panic!("per-channel op on rank-{d} tensor"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Integer plan
+// ---------------------------------------------------------------------------
+
+/// Fused per-channel integer epilogue, applied while a GEMM/Add output is
+/// narrowed i64 → i32: Eq. 22 integer BN, then Eq. 11 requantization or
+/// the Eq. 19-20 threshold activation. Each stage narrows through the
+/// shared checked [`ops::narrow`], exactly like the standalone ops, so
+/// fused execution is bit-identical to the interpreter.
+#[derive(Clone, Debug, Default)]
+pub struct IntEpilogue {
+    bn: Option<BnQuant>,
+    act: Option<IntAct>,
+}
+
+#[derive(Clone, Debug)]
+enum IntAct {
+    Requant(Requant),
+    Thresh(Thresholds),
+}
+
+impl IntEpilogue {
+    fn is_empty(&self) -> bool {
+        self.bn.is_none() && self.act.is_none()
+    }
+
+    /// Stages fused into this epilogue (diagnostics).
+    pub fn depth(&self) -> usize {
+        self.bn.is_some() as usize + self.act.is_some() as usize
+    }
+
+    #[inline]
+    fn apply(&self, c: usize, v: i64) -> i32 {
+        let v = match &self.bn {
+            Some(bn) => ops::narrow(bn.apply(c, v)) as i64,
+            None => v,
+        };
+        match &self.act {
+            Some(IntAct::Requant(rq)) => ops::narrow(rq.apply(v)),
+            Some(IntAct::Thresh(th)) => ops::narrow(th.apply(c, v)),
+            None => ops::narrow(v),
+        }
+    }
+}
+
+/// Per-channel bias + epilogue over a raw GEMM accumulator (the closure
+/// handed to [`ops::matmul_i32_fused_into`]; column index = channel).
+fn int_epi_fn<'a>(
+    bias: Option<&'a [i64]>,
+    epi: &'a IntEpilogue,
+) -> impl Fn(usize, i32) -> i32 + Sync + 'a {
+    move |c, acc| {
+        let mut v = acc as i64;
+        if let Some(b) = bias {
+            v = ops::narrow(v + b[c]) as i64;
+        }
+        epi.apply(c, v)
+    }
+}
+
+enum IntStepOp {
+    Input,
+    Conv {
+        wq: TensorI,
+        bias_q: Option<Vec<i64>>,
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        pad: usize,
+        epi: IntEpilogue,
+    },
+    Linear {
+        wq: TensorI,
+        bias_q: Option<Vec<i64>>,
+        epi: IntEpilogue,
+    },
+    Bn { bn: BnQuant },
+    Requant { rq: Requant },
+    Thresh { th: Thresholds },
+    AvgPool { k: usize, d: u32 },
+    MaxPool { k: usize },
+    Flatten,
+    Add { rqs: Vec<Requant>, epi: IntEpilogue },
+}
+
+/// One compiled step. `node` is the *last* graph node fused into the
+/// step — its output is bit-identical to that node's interpreter output,
+/// which is what `execute_traced` reports and the plan property tests
+/// check against `run_traced`.
+pub struct IntStep {
+    op: IntStepOp,
+    inputs: Vec<StepId>,
+    pub node: NodeId,
+    pub name: String,
+}
+
+impl IntStep {
+    /// Number of graph nodes fused into this step beyond the base op.
+    pub fn fused_depth(&self) -> usize {
+        match &self.op {
+            IntStepOp::Conv { epi, .. }
+            | IntStepOp::Linear { epi, .. }
+            | IntStepOp::Add { epi, .. } => epi.depth(),
+            _ => 0,
+        }
+    }
+}
+
+/// A compiled integer-graph execution plan. Compile once per graph;
+/// derive a [`PlanLayout`] per batch size; execute with a (pooled)
+/// [`IntArena`].
+pub struct IntPlan {
+    steps: Vec<IntStep>,
+    output: StepId,
+    /// Per-step output shape without the batch dimension.
+    sample_shapes: Vec<Vec<usize>>,
+    input_shape: Vec<usize>,
+    fused_away: usize,
+}
+
+impl IntPlan {
+    pub fn compile(g: &IntGraph) -> Result<IntPlan, PlanError> {
+        let input_shape = match g.nodes.first().map(|nd| &nd.op) {
+            Some(IntOp::Input { shape, .. }) => shape.clone(),
+            _ => {
+                return Err(PlanError::Invalid(
+                    "integer graph has no leading Input node".into(),
+                ))
+            }
+        };
+        let shapes1 = shape::infer_int(g, 1)?;
+        let n = g.nodes.len();
+        let mut fanout = vec![0usize; n];
+        let mut consumers: Vec<Vec<NodeId>> = vec![Vec::new(); n];
+        for nd in &g.nodes {
+            for &i in &nd.inputs {
+                fanout[i] += 1;
+                consumers[i].push(nd.id);
+            }
+        }
+
+        // Epilogue absorption: from `start`, keep absorbing the unique
+        // consumer while it is a pointwise per-channel op that extends
+        // the (bn? act?) epilogue. Stops at the graph output — an
+        // absorbed output would never be materialized.
+        let absorb = |absorbed: &mut Vec<bool>,
+                      chain: &mut Vec<NodeId>,
+                      start: NodeId|
+         -> (IntEpilogue, NodeId) {
+            let mut epi = IntEpilogue::default();
+            let mut cur = start;
+            loop {
+                if fanout[cur] != 1 || cur == g.output {
+                    break;
+                }
+                let c = consumers[cur][0];
+                match &g.nodes[c].op {
+                    IntOp::IntBn { bn } if epi.is_empty() => {
+                        epi.bn = Some(bn.clone());
+                    }
+                    IntOp::RequantAct { rq } if epi.act.is_none() => {
+                        epi.act = Some(IntAct::Requant(*rq));
+                    }
+                    IntOp::ThreshAct { th } if epi.act.is_none() => {
+                        epi.act = Some(IntAct::Thresh(th.clone()));
+                    }
+                    _ => break,
+                }
+                absorbed[c] = true;
+                chain.push(c);
+                cur = c;
+            }
+            (epi, cur)
+        };
+
+        let mut absorbed = vec![false; n];
+        let mut node_step: Vec<Option<StepId>> = vec![None; n];
+        let mut steps: Vec<IntStep> = Vec::new();
+        let mut sample_shapes: Vec<Vec<usize>> = Vec::new();
+        let mut fused_away = 0usize;
+        for nd in &g.nodes {
+            if absorbed[nd.id] {
+                continue;
+            }
+            let mut chain: Vec<NodeId> = Vec::new();
+            let op = match &nd.op {
+                IntOp::Input { .. } => IntStepOp::Input,
+                IntOp::ConvInt { wq, bias_q, kh, kw, stride, pad, .. } => {
+                    let (epi, _) = absorb(&mut absorbed, &mut chain, nd.id);
+                    IntStepOp::Conv {
+                        wq: wq.clone(),
+                        bias_q: bias_q.clone(),
+                        kh: *kh,
+                        kw: *kw,
+                        stride: *stride,
+                        pad: *pad,
+                        epi,
+                    }
+                }
+                IntOp::LinearInt { wq, bias_q } => {
+                    let (epi, _) = absorb(&mut absorbed, &mut chain, nd.id);
+                    IntStepOp::Linear {
+                        wq: wq.clone(),
+                        bias_q: bias_q.clone(),
+                        epi,
+                    }
+                }
+                IntOp::AddRequant { rqs } => {
+                    let (epi, _) = absorb(&mut absorbed, &mut chain, nd.id);
+                    IntStepOp::Add { rqs: rqs.clone(), epi }
+                }
+                IntOp::IntBn { bn } => IntStepOp::Bn { bn: bn.clone() },
+                IntOp::RequantAct { rq } => IntStepOp::Requant { rq: *rq },
+                IntOp::ThreshAct { th } => IntStepOp::Thresh { th: th.clone() },
+                IntOp::AvgPoolInt { k, d } => IntStepOp::AvgPool { k: *k, d: *d },
+                IntOp::MaxPoolInt { k } => IntStepOp::MaxPool { k: *k },
+                IntOp::Flatten => IntStepOp::Flatten,
+            };
+            let anchor = chain.last().copied().unwrap_or(nd.id);
+            let sid = steps.len();
+            node_step[nd.id] = Some(sid);
+            for &cid in &chain {
+                node_step[cid] = Some(sid);
+            }
+            fused_away += chain.len();
+            let inputs: Vec<StepId> = nd
+                .inputs
+                .iter()
+                .map(|&i| node_step[i].expect("graph is topological"))
+                .collect();
+            sample_shapes.push(shapes1[anchor][1..].to_vec());
+            steps.push(IntStep {
+                op,
+                inputs,
+                node: anchor,
+                name: g.nodes[anchor].name.clone(),
+            });
+        }
+        let output = node_step[g.output]
+            .ok_or_else(|| PlanError::Invalid("output node unmapped".into()))?;
+        Ok(IntPlan {
+            steps,
+            output,
+            sample_shapes,
+            input_shape,
+            fused_away,
+        })
+    }
+
+    pub fn input_shape(&self) -> &[usize] {
+        &self.input_shape
+    }
+
+    pub fn steps(&self) -> &[IntStep] {
+        &self.steps
+    }
+
+    /// Graph nodes eliminated by epilogue fusion.
+    pub fn fused_nodes(&self) -> usize {
+        self.fused_away
+    }
+
+    /// Derive the per-batch-size buffer layout.
+    pub fn layout(&self, batch: usize) -> Result<PlanLayout, PlanError> {
+        if batch == 0 {
+            return Err(PlanError::Invalid("batch size must be >= 1".into()));
+        }
+        let shapes: Vec<Vec<usize>> = self
+            .sample_shapes
+            .iter()
+            .map(|ss| {
+                let mut s = Vec::with_capacity(ss.len() + 1);
+                s.push(batch);
+                s.extend_from_slice(ss);
+                s
+            })
+            .collect();
+        let specs: Vec<StepSpec> = self
+            .steps
+            .iter()
+            .enumerate()
+            .map(|(i, st)| {
+                let out_len: usize = shapes[i].iter().product();
+                let scratch = match &st.op {
+                    IntStepOp::Conv { wq, .. } => {
+                        let rows = out_len / wq.shape()[1];
+                        // im2col patches + GEMM row output
+                        vec![rows * wq.shape()[0], out_len]
+                    }
+                    _ => Vec::new(),
+                };
+                StepSpec {
+                    inputs: st.inputs.clone(),
+                    out_len,
+                    scratch,
+                    is_input: matches!(st.op, IntStepOp::Input),
+                }
+            })
+            .collect();
+        let (out_slot, scratch, slot_lens) = assign_slots(&specs, self.output);
+        Ok(PlanLayout { batch, shapes, out_slot, scratch, slot_lens })
+    }
+
+    /// Execute the plan on a batch. `layout.batch` must match `qx`.
+    pub fn execute(
+        &self,
+        layout: &PlanLayout,
+        arena: &mut IntArena,
+        qx: &TensorI,
+    ) -> TensorI {
+        self.execute_inner(layout, arena, qx, None)
+    }
+
+    /// Execute and clone out every step's output, tagged with the graph
+    /// node it is bit-identical to (diagnostics / the fusion property
+    /// tests — pairs with the interpreter's `run_traced`).
+    pub fn execute_traced(
+        &self,
+        layout: &PlanLayout,
+        arena: &mut IntArena,
+        qx: &TensorI,
+    ) -> Vec<(NodeId, TensorI)> {
+        let mut trace = Vec::with_capacity(self.steps.len());
+        self.execute_inner(layout, arena, qx, Some(&mut trace));
+        trace
+    }
+
+    fn execute_inner(
+        &self,
+        layout: &PlanLayout,
+        arena: &mut IntArena,
+        qx: &TensorI,
+        mut trace: Option<&mut Vec<(NodeId, TensorI)>>,
+    ) -> TensorI {
+        assert_eq!(layout.batch, qx.shape()[0], "layout batch != input batch");
+        assert_eq!(
+            &qx.shape()[1..],
+            &self.input_shape[..],
+            "input sample shape mismatch"
+        );
+        arena.prepare(layout);
+        for (sid, st) in self.steps.iter().enumerate() {
+            let out_shape = &layout.shapes[sid];
+            let out_len: usize = out_shape.iter().product();
+            match &st.op {
+                IntStepOp::Input => {}
+                IntStepOp::Conv { wq, bias_q, kh, kw, stride, pad, epi } => {
+                    let (b, c, h, w) = {
+                        let s = &layout.shapes[st.inputs[0]];
+                        (s[0], s[1], s[2], s[3])
+                    };
+                    let co = wq.shape()[1];
+                    let kdim = wq.shape()[0];
+                    let m = out_len / co;
+                    let cols_slot = layout.scratch[sid][0];
+                    let rows_slot = layout.scratch[sid][1];
+                    let out_slot = layout.out_slot[sid];
+                    let mut cols = std::mem::take(&mut arena.bufs[cols_slot]);
+                    {
+                        let xin = slot_data(arena, layout, st.inputs[0], qx);
+                        ops::im2col_into(
+                            xin, b, c, h, w, *kh, *kw, *stride, *pad, &mut cols,
+                        );
+                    }
+                    let mut rows = std::mem::take(&mut arena.bufs[rows_slot]);
+                    let epi_fn = int_epi_fn(bias_q.as_deref(), epi);
+                    ops::matmul_i32_fused_into(
+                        &cols[..m * kdim],
+                        wq.data(),
+                        m,
+                        kdim,
+                        co,
+                        &epi_fn,
+                        &mut rows,
+                    );
+                    let mut out = std::mem::take(&mut arena.bufs[out_slot]);
+                    ops::rows_to_nchw_into(
+                        &rows[..m * co],
+                        b,
+                        co,
+                        out_shape[2],
+                        out_shape[3],
+                        &mut out,
+                    );
+                    arena.bufs[cols_slot] = cols;
+                    arena.bufs[rows_slot] = rows;
+                    arena.bufs[out_slot] = out;
+                }
+                IntStepOp::Linear { wq, bias_q, epi } => {
+                    let in_shape = &layout.shapes[st.inputs[0]];
+                    let (bsz, fi) = (in_shape[0], in_shape[1]);
+                    let fo = wq.shape()[1];
+                    let out_slot = layout.out_slot[sid];
+                    let mut out = std::mem::take(&mut arena.bufs[out_slot]);
+                    {
+                        let xin = slot_data(arena, layout, st.inputs[0], qx);
+                        let epi_fn = int_epi_fn(bias_q.as_deref(), epi);
+                        ops::matmul_i32_fused_into(
+                            &xin[..bsz * fi],
+                            wq.data(),
+                            bsz,
+                            fi,
+                            fo,
+                            &epi_fn,
+                            &mut out,
+                        );
+                    }
+                    arena.bufs[out_slot] = out;
+                }
+                IntStepOp::Bn { bn } => {
+                    self.unary(layout, arena, qx, sid, |in_shape, xin, out| {
+                        let (c, hw) = channel_stride(in_shape);
+                        for (i, o) in out.iter_mut().enumerate() {
+                            *o = ops::narrow(bn.apply((i / hw) % c, xin[i] as i64));
+                        }
+                    });
+                }
+                IntStepOp::Requant { rq } => {
+                    self.unary(layout, arena, qx, sid, |_, xin, out| {
+                        for (o, &x) in out.iter_mut().zip(xin) {
+                            *o = ops::narrow(rq.apply(x as i64));
+                        }
+                    });
+                }
+                IntStepOp::Thresh { th } => {
+                    self.unary(layout, arena, qx, sid, |in_shape, xin, out| {
+                        let (c, hw) = channel_stride(in_shape);
+                        for (i, o) in out.iter_mut().enumerate() {
+                            *o = ops::narrow(th.apply((i / hw) % c, xin[i] as i64));
+                        }
+                    });
+                }
+                IntStepOp::AvgPool { k, d } => {
+                    self.unary(layout, arena, qx, sid, |in_shape, xin, out| {
+                        let (b, c, h, w) =
+                            (in_shape[0], in_shape[1], in_shape[2], in_shape[3]);
+                        ops::avgpool_i32_into(xin, b, c, h, w, *k, *d, out);
+                    });
+                }
+                IntStepOp::MaxPool { k } => {
+                    self.unary(layout, arena, qx, sid, |in_shape, xin, out| {
+                        let (b, c, h, w) =
+                            (in_shape[0], in_shape[1], in_shape[2], in_shape[3]);
+                        ops::maxpool_into(xin, b, c, h, w, *k, out);
+                    });
+                }
+                IntStepOp::Flatten => {
+                    self.unary(layout, arena, qx, sid, |_, xin, out| {
+                        out.copy_from_slice(&xin[..out.len()]);
+                    });
+                }
+                IntStepOp::Add { rqs, epi } => {
+                    let out_slot = layout.out_slot[sid];
+                    let mut out = std::mem::take(&mut arena.bufs[out_slot]);
+                    {
+                        let out = &mut out[..out_len];
+                        // Branch 0 is the reference space (Eq. 24).
+                        let r0 = slot_data(arena, layout, st.inputs[0], qx);
+                        out.copy_from_slice(&r0[..out_len]);
+                        for (bi, &inp) in st.inputs.iter().skip(1).enumerate() {
+                            let bx = slot_data(arena, layout, inp, qx);
+                            let rq = &rqs[bi];
+                            for (a, &bv) in out.iter_mut().zip(&bx[..out_len]) {
+                                *a = ops::narrow(*a as i64 + rq.apply(bv as i64));
+                            }
+                        }
+                        if !epi.is_empty() {
+                            let (c, hw) = channel_stride(out_shape);
+                            for (i, v) in out.iter_mut().enumerate() {
+                                *v = epi.apply((i / hw) % c, *v as i64);
+                            }
+                        }
+                    }
+                    arena.bufs[out_slot] = out;
+                }
+            }
+            if let Some(tr) = trace.as_deref_mut() {
+                let data = slot_data(arena, layout, sid, qx)[..out_len].to_vec();
+                tr.push((st.node, Tensor::from_vec(out_shape, data)));
+            }
+        }
+        let shape = &layout.shapes[self.output];
+        let len: usize = shape.iter().product();
+        Tensor::from_vec(shape, slot_data(arena, layout, self.output, qx)[..len].to_vec())
+    }
+
+    /// Run a single-input step: take the output buffer, hand (input
+    /// shape, input data, output prefix) to `f`, put the buffer back.
+    fn unary(
+        &self,
+        layout: &PlanLayout,
+        arena: &mut IntArena,
+        qx: &TensorI,
+        sid: StepId,
+        f: impl FnOnce(&[usize], &[i32], &mut [i32]),
+    ) {
+        let st = &self.steps[sid];
+        let out_len: usize = layout.shapes[sid].iter().product();
+        let out_slot = layout.out_slot[sid];
+        let mut out = std::mem::take(&mut arena.bufs[out_slot]);
+        {
+            let in_shape = &layout.shapes[st.inputs[0]];
+            let xin = slot_data(arena, layout, st.inputs[0], qx);
+            f(in_shape, xin, &mut out[..out_len]);
+        }
+        arena.bufs[out_slot] = out;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Float plan
+// ---------------------------------------------------------------------------
+
+/// Fused float epilogue: per-channel affine (BatchNorm/QuantBn — the
+/// kappa/lambda are kept in f64 and cast per element exactly like the
+/// interpreter's `apply_channel_affine`) followed by ReLU or the Eq. 10
+/// PACT quantization/activation.
+#[derive(Clone, Debug, Default)]
+pub struct FloatEpilogue {
+    affine: Option<(Vec<f64>, Vec<f64>)>,
+    act: Option<FloatAct>,
+}
+
+#[derive(Clone, Debug)]
+enum FloatAct {
+    Relu,
+    Pact(QuantSpec),
+}
+
+impl FloatEpilogue {
+    fn is_empty(&self) -> bool {
+        self.affine.is_none() && self.act.is_none()
+    }
+
+    pub fn depth(&self) -> usize {
+        self.affine.is_some() as usize + self.act.is_some() as usize
+    }
+
+    #[inline]
+    fn apply(&self, c: usize, mut v: f32) -> f32 {
+        if let Some((kappa, lambda)) = &self.affine {
+            v = kappa[c] as f32 * v + lambda[c] as f32;
+        }
+        match &self.act {
+            Some(FloatAct::Relu) => v.max(0.0),
+            Some(FloatAct::Pact(spec)) => spec.fake_quantize(v as f64) as f32,
+            None => v,
+        }
+    }
+}
+
+/// Bias + epilogue over a float GEMM output column (channel). `v + bias`
+/// is bit-identical to the interpreter's `1.0 * v + bias` affine form.
+fn float_epi_fn<'a>(
+    bias: Option<&'a [f64]>,
+    epi: &'a FloatEpilogue,
+) -> impl Fn(usize, f32) -> f32 + 'a {
+    move |c, acc| {
+        let mut v = acc;
+        if let Some(b) = bias {
+            v += b[c] as f32;
+        }
+        epi.apply(c, v)
+    }
+}
+
+enum FloatStepOp {
+    Input,
+    Conv {
+        /// Weights pre-transposed to the [C_in*KH*KW, C_out] im2col
+        /// layout at compile time (the interpreter re-derives this every
+        /// call — same values, same GEMM).
+        wmat: TensorF,
+        bias: Option<Vec<f64>>,
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        pad: usize,
+        epi: FloatEpilogue,
+    },
+    Linear {
+        w: TensorF,
+        bias: Option<Vec<f64>>,
+        epi: FloatEpilogue,
+    },
+    Affine { kappa: Vec<f64>, lambda: Vec<f64> },
+    Relu,
+    Pact { spec: QuantSpec },
+    MaxPool { k: usize },
+    AvgPool { k: usize },
+    GlobalAvgPool,
+    Flatten,
+    Add { epi: FloatEpilogue },
+}
+
+pub struct FloatStep {
+    op: FloatStepOp,
+    inputs: Vec<StepId>,
+    pub node: NodeId,
+    pub name: String,
+}
+
+impl FloatStep {
+    pub fn fused_depth(&self) -> usize {
+        match &self.op {
+            FloatStepOp::Conv { epi, .. }
+            | FloatStepOp::Linear { epi, .. }
+            | FloatStepOp::Add { epi, .. } => epi.depth(),
+            _ => 0,
+        }
+    }
+}
+
+/// A compiled float-graph execution plan (FP / FQ / QD representations).
+pub struct FloatPlan {
+    steps: Vec<FloatStep>,
+    output: StepId,
+    sample_shapes: Vec<Vec<usize>>,
+    input_shape: Vec<usize>,
+    fused_away: usize,
+}
+
+impl FloatPlan {
+    pub fn compile(g: &Graph) -> Result<FloatPlan, PlanError> {
+        let input_shape = match g
+            .nodes
+            .iter()
+            .find_map(|nd| match &nd.op {
+                Op::Input { shape } => Some(shape.clone()),
+                _ => None,
+            }) {
+            Some(s) => s,
+            None => {
+                return Err(PlanError::Invalid("float graph has no Input node".into()))
+            }
+        };
+        let shapes1 = shape::infer_float(g, 1)?;
+        let n = g.nodes.len();
+        let mut fanout = vec![0usize; n];
+        let mut consumers: Vec<Vec<NodeId>> = vec![Vec::new(); n];
+        for nd in &g.nodes {
+            for &i in &nd.inputs {
+                fanout[i] += 1;
+                consumers[i].push(nd.id);
+            }
+        }
+
+        let absorb = |absorbed: &mut Vec<bool>,
+                      chain: &mut Vec<NodeId>,
+                      start: NodeId|
+         -> (FloatEpilogue, NodeId) {
+            let mut epi = FloatEpilogue::default();
+            let mut cur = start;
+            loop {
+                if fanout[cur] != 1 || cur == g.output {
+                    break;
+                }
+                let c = consumers[cur][0];
+                match &g.nodes[c].op {
+                    Op::BatchNorm { bn } if epi.is_empty() => {
+                        epi.affine = Some(bn.affine());
+                    }
+                    Op::QuantBn { kappa_hat, lambda_hat } if epi.is_empty() => {
+                        epi.affine = Some((kappa_hat.clone(), lambda_hat.clone()));
+                    }
+                    Op::ReLU if epi.act.is_none() => {
+                        epi.act = Some(FloatAct::Relu);
+                    }
+                    Op::PactAct { beta, bits } if epi.act.is_none() => {
+                        epi.act =
+                            Some(FloatAct::Pact(QuantSpec::activation(*beta, *bits)));
+                    }
+                    _ => break,
+                }
+                absorbed[c] = true;
+                chain.push(c);
+                cur = c;
+            }
+            (epi, cur)
+        };
+
+        let mut absorbed = vec![false; n];
+        let mut node_step: Vec<Option<StepId>> = vec![None; n];
+        let mut steps: Vec<FloatStep> = Vec::new();
+        let mut sample_shapes: Vec<Vec<usize>> = Vec::new();
+        let mut fused_away = 0usize;
+        for nd in &g.nodes {
+            if absorbed[nd.id] {
+                continue;
+            }
+            let mut chain: Vec<NodeId> = Vec::new();
+            let op = match &nd.op {
+                Op::Input { .. } => FloatStepOp::Input,
+                Op::Conv2d { w, bias, stride, pad } => {
+                    let (epi, _) = absorb(&mut absorbed, &mut chain, nd.id);
+                    FloatStepOp::Conv {
+                        wmat: ops::oihw_to_wmat(w),
+                        bias: bias.clone(),
+                        kh: w.shape()[2],
+                        kw: w.shape()[3],
+                        stride: *stride,
+                        pad: *pad,
+                        epi,
+                    }
+                }
+                Op::Linear { w, bias } => {
+                    let (epi, _) = absorb(&mut absorbed, &mut chain, nd.id);
+                    FloatStepOp::Linear { w: w.clone(), bias: bias.clone(), epi }
+                }
+                Op::Add => {
+                    let (epi, _) = absorb(&mut absorbed, &mut chain, nd.id);
+                    FloatStepOp::Add { epi }
+                }
+                Op::BatchNorm { bn } => {
+                    let (kappa, lambda) = bn.affine();
+                    FloatStepOp::Affine { kappa, lambda }
+                }
+                Op::QuantBn { kappa_hat, lambda_hat } => FloatStepOp::Affine {
+                    kappa: kappa_hat.clone(),
+                    lambda: lambda_hat.clone(),
+                },
+                Op::ReLU => FloatStepOp::Relu,
+                Op::PactAct { beta, bits } => FloatStepOp::Pact {
+                    spec: QuantSpec::activation(*beta, *bits),
+                },
+                Op::MaxPool { k } => FloatStepOp::MaxPool { k: *k },
+                Op::AvgPool { k } => FloatStepOp::AvgPool { k: *k },
+                Op::GlobalAvgPool => FloatStepOp::GlobalAvgPool,
+                Op::Flatten => FloatStepOp::Flatten,
+            };
+            let anchor = chain.last().copied().unwrap_or(nd.id);
+            let sid = steps.len();
+            node_step[nd.id] = Some(sid);
+            for &cid in &chain {
+                node_step[cid] = Some(sid);
+            }
+            fused_away += chain.len();
+            let inputs: Vec<StepId> = nd
+                .inputs
+                .iter()
+                .map(|&i| node_step[i].expect("graph is topological"))
+                .collect();
+            sample_shapes.push(shapes1[anchor][1..].to_vec());
+            steps.push(FloatStep {
+                op,
+                inputs,
+                node: anchor,
+                name: g.nodes[anchor].name.clone(),
+            });
+        }
+        let output = node_step[g.output]
+            .ok_or_else(|| PlanError::Invalid("output node unmapped".into()))?;
+        Ok(FloatPlan {
+            steps,
+            output,
+            sample_shapes,
+            input_shape,
+            fused_away,
+        })
+    }
+
+    pub fn input_shape(&self) -> &[usize] {
+        &self.input_shape
+    }
+
+    pub fn steps(&self) -> &[FloatStep] {
+        &self.steps
+    }
+
+    pub fn fused_nodes(&self) -> usize {
+        self.fused_away
+    }
+
+    pub fn layout(&self, batch: usize) -> Result<PlanLayout, PlanError> {
+        if batch == 0 {
+            return Err(PlanError::Invalid("batch size must be >= 1".into()));
+        }
+        let shapes: Vec<Vec<usize>> = self
+            .sample_shapes
+            .iter()
+            .map(|ss| {
+                let mut s = Vec::with_capacity(ss.len() + 1);
+                s.push(batch);
+                s.extend_from_slice(ss);
+                s
+            })
+            .collect();
+        let specs: Vec<StepSpec> = self
+            .steps
+            .iter()
+            .enumerate()
+            .map(|(i, st)| {
+                let out_len: usize = shapes[i].iter().product();
+                let scratch = match &st.op {
+                    FloatStepOp::Conv { wmat, .. } => {
+                        let rows = out_len / wmat.shape()[1];
+                        vec![rows * wmat.shape()[0], out_len]
+                    }
+                    _ => Vec::new(),
+                };
+                StepSpec {
+                    inputs: st.inputs.clone(),
+                    out_len,
+                    scratch,
+                    is_input: matches!(st.op, FloatStepOp::Input),
+                }
+            })
+            .collect();
+        let (out_slot, scratch, slot_lens) = assign_slots(&specs, self.output);
+        Ok(PlanLayout { batch, shapes, out_slot, scratch, slot_lens })
+    }
+
+    pub fn execute(
+        &self,
+        layout: &PlanLayout,
+        arena: &mut FloatArena,
+        x: &TensorF,
+    ) -> TensorF {
+        self.execute_inner(layout, arena, x, None)
+    }
+
+    pub fn execute_traced(
+        &self,
+        layout: &PlanLayout,
+        arena: &mut FloatArena,
+        x: &TensorF,
+    ) -> Vec<(NodeId, TensorF)> {
+        let mut trace = Vec::with_capacity(self.steps.len());
+        self.execute_inner(layout, arena, x, Some(&mut trace));
+        trace
+    }
+
+    fn execute_inner(
+        &self,
+        layout: &PlanLayout,
+        arena: &mut FloatArena,
+        x: &TensorF,
+        mut trace: Option<&mut Vec<(NodeId, TensorF)>>,
+    ) -> TensorF {
+        assert_eq!(layout.batch, x.shape()[0], "layout batch != input batch");
+        assert_eq!(
+            &x.shape()[1..],
+            &self.input_shape[..],
+            "input sample shape mismatch"
+        );
+        arena.prepare(layout);
+        for (sid, st) in self.steps.iter().enumerate() {
+            let out_shape = &layout.shapes[sid];
+            let out_len: usize = out_shape.iter().product();
+            match &st.op {
+                FloatStepOp::Input => {}
+                FloatStepOp::Conv { wmat, bias, kh, kw, stride, pad, epi } => {
+                    let (b, c, h, w) = {
+                        let s = &layout.shapes[st.inputs[0]];
+                        (s[0], s[1], s[2], s[3])
+                    };
+                    let co = wmat.shape()[1];
+                    let kdim = wmat.shape()[0];
+                    let m = out_len / co;
+                    let cols_slot = layout.scratch[sid][0];
+                    let rows_slot = layout.scratch[sid][1];
+                    let out_slot = layout.out_slot[sid];
+                    let mut cols = std::mem::take(&mut arena.bufs[cols_slot]);
+                    {
+                        let xin = slot_data(arena, layout, st.inputs[0], x);
+                        ops::im2col_into(
+                            xin, b, c, h, w, *kh, *kw, *stride, *pad, &mut cols,
+                        );
+                    }
+                    let mut rows = std::mem::take(&mut arena.bufs[rows_slot]);
+                    let epi_fn = float_epi_fn(bias.as_deref(), epi);
+                    ops::matmul_f32_fused_into(
+                        &cols[..m * kdim],
+                        wmat.data(),
+                        m,
+                        kdim,
+                        co,
+                        &epi_fn,
+                        &mut rows,
+                    );
+                    let mut out = std::mem::take(&mut arena.bufs[out_slot]);
+                    ops::rows_to_nchw_into(
+                        &rows[..m * co],
+                        b,
+                        co,
+                        out_shape[2],
+                        out_shape[3],
+                        &mut out,
+                    );
+                    arena.bufs[cols_slot] = cols;
+                    arena.bufs[rows_slot] = rows;
+                    arena.bufs[out_slot] = out;
+                }
+                FloatStepOp::Linear { w, bias, epi } => {
+                    let in_shape = &layout.shapes[st.inputs[0]];
+                    let (bsz, fi) = (in_shape[0], in_shape[1]);
+                    let fo = w.shape()[1];
+                    let out_slot = layout.out_slot[sid];
+                    let mut out = std::mem::take(&mut arena.bufs[out_slot]);
+                    {
+                        let xin = slot_data(arena, layout, st.inputs[0], x);
+                        let epi_fn = float_epi_fn(bias.as_deref(), epi);
+                        ops::matmul_f32_fused_into(
+                            &xin[..bsz * fi],
+                            w.data(),
+                            bsz,
+                            fi,
+                            fo,
+                            &epi_fn,
+                            &mut out,
+                        );
+                    }
+                    arena.bufs[out_slot] = out;
+                }
+                FloatStepOp::Affine { kappa, lambda } => {
+                    self.unary(layout, arena, x, sid, |in_shape, xin, out| {
+                        let (c, hw) = channel_stride(in_shape);
+                        for (i, o) in out.iter_mut().enumerate() {
+                            let ch = (i / hw) % c;
+                            *o = kappa[ch] as f32 * xin[i] + lambda[ch] as f32;
+                        }
+                    });
+                }
+                FloatStepOp::Relu => {
+                    self.unary(layout, arena, x, sid, |_, xin, out| {
+                        for (o, &v) in out.iter_mut().zip(xin) {
+                            *o = v.max(0.0);
+                        }
+                    });
+                }
+                FloatStepOp::Pact { spec } => {
+                    self.unary(layout, arena, x, sid, |_, xin, out| {
+                        for (o, &v) in out.iter_mut().zip(xin) {
+                            *o = spec.fake_quantize(v as f64) as f32;
+                        }
+                    });
+                }
+                FloatStepOp::MaxPool { k } => {
+                    self.unary(layout, arena, x, sid, |in_shape, xin, out| {
+                        let (b, c, h, w) =
+                            (in_shape[0], in_shape[1], in_shape[2], in_shape[3]);
+                        ops::maxpool_into(xin, b, c, h, w, *k, out);
+                    });
+                }
+                FloatStepOp::AvgPool { k } => {
+                    self.unary(layout, arena, x, sid, |in_shape, xin, out| {
+                        let (b, c, h, w) =
+                            (in_shape[0], in_shape[1], in_shape[2], in_shape[3]);
+                        ops::avgpool_f32_into(xin, b, c, h, w, *k, out);
+                    });
+                }
+                FloatStepOp::GlobalAvgPool => {
+                    self.unary(layout, arena, x, sid, |in_shape, xin, out| {
+                        let (b, c, h, w) =
+                            (in_shape[0], in_shape[1], in_shape[2], in_shape[3]);
+                        ops::global_mean_f32_into(xin, b, c, h, w, out);
+                    });
+                }
+                FloatStepOp::Flatten => {
+                    self.unary(layout, arena, x, sid, |_, xin, out| {
+                        out.copy_from_slice(&xin[..out.len()]);
+                    });
+                }
+                FloatStepOp::Add { epi } => {
+                    let out_slot = layout.out_slot[sid];
+                    let mut out = std::mem::take(&mut arena.bufs[out_slot]);
+                    {
+                        let out = &mut out[..out_len];
+                        let r0 = slot_data(arena, layout, st.inputs[0], x);
+                        out.copy_from_slice(&r0[..out_len]);
+                        for &inp in st.inputs.iter().skip(1) {
+                            let bx = slot_data(arena, layout, inp, x);
+                            for (a, &bv) in out.iter_mut().zip(&bx[..out_len]) {
+                                *a += bv;
+                            }
+                        }
+                        if !epi.is_empty() {
+                            let (c, hw) = channel_stride(out_shape);
+                            for (i, v) in out.iter_mut().enumerate() {
+                                *v = epi.apply((i / hw) % c, *v);
+                            }
+                        }
+                    }
+                    arena.bufs[out_slot] = out;
+                }
+            }
+            if let Some(tr) = trace.as_deref_mut() {
+                let data = slot_data(arena, layout, sid, x)[..out_len].to_vec();
+                tr.push((st.node, Tensor::from_vec(out_shape, data)));
+            }
+        }
+        let shape = &layout.shapes[self.output];
+        let len: usize = shape.iter().product();
+        Tensor::from_vec(shape, slot_data(arena, layout, self.output, x)[..len].to_vec())
+    }
+
+    fn unary(
+        &self,
+        layout: &PlanLayout,
+        arena: &mut FloatArena,
+        x: &TensorF,
+        sid: StepId,
+        f: impl FnOnce(&[usize], &[f32], &mut [f32]),
+    ) {
+        let st = &self.steps[sid];
+        let out_len: usize = layout.shapes[sid].iter().product();
+        let out_slot = layout.out_slot[sid];
+        let mut out = std::mem::take(&mut arena.bufs[out_slot]);
+        {
+            let in_shape = &layout.shapes[st.inputs[0]];
+            let xin = slot_data(arena, layout, st.inputs[0], x);
+            f(in_shape, xin, &mut out[..out_len]);
+        }
+        arena.bufs[out_slot] = out;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::bn::BnParams;
+
+    fn conv_bn_act_graph() -> IntGraph {
+        let mut g = IntGraph::default();
+        let spec = QuantSpec { eps: 1.0 / 255.0, lo: 0, hi: 255 };
+        let x = g.push("in", IntOp::Input { shape: vec![1, 4, 4], spec }, &[]);
+        let wq = Tensor::from_vec(&[9, 2], (0..18).map(|i| (i % 5) as i32 - 2).collect());
+        let c = g.push(
+            "conv",
+            IntOp::ConvInt {
+                wq,
+                bias_q: Some(vec![3, -3]),
+                cin: 1,
+                kh: 3,
+                kw: 3,
+                stride: 1,
+                pad: 1,
+            },
+            &[x],
+        );
+        let bn = BnQuant {
+            kappa_q: vec![2, 3],
+            lambda_q: vec![5, -5],
+            eps_kappa: 0.01,
+            eps_phi_out: 0.001,
+        };
+        let b = g.push("bn", IntOp::IntBn { bn }, &[c]);
+        let rq = Requant { m: 3, d: 2, lo: 0, hi: 255 };
+        g.push("act", IntOp::RequantAct { rq }, &[b]);
+        g
+    }
+
+    #[test]
+    fn conv_chain_fuses_into_one_step() {
+        let g = conv_bn_act_graph();
+        let plan = IntPlan::compile(&g).unwrap();
+        // Input + fused conv = 2 steps; bn + act absorbed.
+        assert_eq!(plan.steps().len(), 2);
+        assert_eq!(plan.fused_nodes(), 2);
+        assert_eq!(plan.steps()[1].fused_depth(), 2);
+        assert_eq!(plan.steps()[1].node, g.output);
+    }
+
+    #[test]
+    fn fused_execution_matches_interpreter() {
+        let g = conv_bn_act_graph();
+        let plan = IntPlan::compile(&g).unwrap();
+        let layout = plan.layout(2).unwrap();
+        let mut arena = IntArena::new();
+        let qx = Tensor::from_vec(&[2, 1, 4, 4], (0..32).map(|i| i * 7 % 256).collect());
+        let got = plan.execute(&layout, &mut arena, &qx);
+        let want = crate::engine::IntegerEngine::new().run_interpreted(&g, &qx);
+        assert_eq!(got, want);
+        // and again with the now-dirty arena (buffer reuse must not leak)
+        let got2 = plan.execute(&layout, &mut arena, &qx);
+        assert_eq!(got2, want);
+    }
+
+    #[test]
+    fn traced_execution_anchors_match_interpreter_nodes() {
+        let g = conv_bn_act_graph();
+        let plan = IntPlan::compile(&g).unwrap();
+        let layout = plan.layout(1).unwrap();
+        let mut arena = IntArena::new();
+        let qx = Tensor::from_vec(&[1, 1, 4, 4], (0..16).map(|i| i * 11 % 256).collect());
+        let interp = crate::engine::IntegerEngine::new().run_traced(&g, &qx);
+        for (node, t) in plan.execute_traced(&layout, &mut arena, &qx) {
+            assert_eq!(t, interp[node], "step anchored at node {node}");
+        }
+    }
+
+    #[test]
+    fn output_slot_is_never_recycled() {
+        // Chain long enough for slot reuse to kick in.
+        let g = conv_bn_act_graph();
+        let plan = IntPlan::compile(&g).unwrap();
+        let layout = plan.layout(1).unwrap();
+        // Arena is bounded: at most cols + rows + two live activations.
+        assert!(layout.arena_slots() <= 4, "slots = {}", layout.arena_slots());
+    }
+
+    #[test]
+    fn float_plan_matches_interpreter() {
+        let mut g = Graph::new(1.0 / 255.0);
+        let x = g.push("in", Op::Input { shape: vec![1, 4, 4] }, &[]);
+        let w = Tensor::from_vec(
+            &[2, 1, 3, 3],
+            (0..18).map(|i| (i as f32 - 9.0) * 0.1).collect(),
+        );
+        let c = g.push("c", Op::Conv2d { w, bias: Some(vec![0.1, -0.1]), stride: 1, pad: 1 }, &[x]);
+        let b = g.push("bn", Op::BatchNorm { bn: BnParams::identity(2) }, &[c]);
+        g.push("a", Op::ReLU, &[b]);
+        let plan = FloatPlan::compile(&g).unwrap();
+        assert_eq!(plan.steps().len(), 2);
+        let layout = plan.layout(3).unwrap();
+        let mut arena = FloatArena::new();
+        let xin = Tensor::from_vec(
+            &[3, 1, 4, 4],
+            (0..48).map(|i| (i as f32) * 0.02 - 0.4).collect(),
+        );
+        let got = plan.execute(&layout, &mut arena, &xin);
+        let want = crate::engine::FloatEngine::new().run_interpreted(&g, &xin);
+        assert_eq!(got.data(), want.data());
+    }
+
+    #[test]
+    fn compile_rejects_missing_input() {
+        let mut g = IntGraph::default();
+        let wq = Tensor::from_vec(&[1, 1], vec![1]);
+        g.push("fc", IntOp::LinearInt { wq, bias_q: None }, &[]);
+        assert!(IntPlan::compile(&g).is_err());
+    }
+}

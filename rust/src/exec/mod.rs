@@ -22,11 +22,13 @@ pub mod pjrt;
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtExecutor;
 
+use std::sync::Mutex;
+
 use anyhow::{bail, ensure, Result};
 
-use crate::engine::{FloatEngine, IntegerEngine};
-use crate::graph::int::{IntGraph, IntOp};
-use crate::graph::{Graph, Op};
+use crate::engine::plan::{Arena, FloatPlan, IntPlan, PlanLayout};
+use crate::graph::int::IntGraph;
+use crate::graph::Graph;
 use crate::tensor::{TensorF, TensorI};
 
 /// A host-side tensor value crossing an executor boundary.
@@ -146,34 +148,75 @@ fn check_batch_shape(
     Ok(n)
 }
 
+/// Shared plumbing of the two native executors: one compiled layout per
+/// batch variant (1..=max_batch, compiled at construction) and a pool of
+/// scratch arenas recycled across requests, so the steady-state request
+/// path performs no graph walking and no per-node allocation.
+struct PlanSet<T> {
+    layouts: Vec<PlanLayout>,
+    arenas: Mutex<Vec<Arena<T>>>,
+}
+
+impl<T: Copy + Default> PlanSet<T> {
+    fn compile(
+        layout_of: impl Fn(usize) -> std::result::Result<PlanLayout, crate::engine::PlanError>,
+        max_batch: usize,
+    ) -> Result<Self> {
+        let layouts = (1..=max_batch)
+            .map(&layout_of)
+            .collect::<std::result::Result<Vec<_>, _>>()?;
+        Ok(PlanSet { layouts, arenas: Mutex::new(Vec::new()) })
+    }
+
+    /// Run `f` with the layout for batch `n` and a pooled arena.
+    fn with_arena<R>(
+        &self,
+        n: usize,
+        f: impl FnOnce(&PlanLayout, &mut Arena<T>) -> R,
+    ) -> R {
+        let mut arena = self
+            .arenas
+            .lock()
+            .expect("arena pool poisoned")
+            .pop()
+            .unwrap_or_default();
+        let out = f(&self.layouts[n - 1], &mut arena);
+        self.arenas.lock().expect("arena pool poisoned").push(arena);
+        out
+    }
+}
+
 /// The in-process integer engine behind the [`Executor`] trait: runs an
 /// IntegerDeployable graph with no artifacts and no FFI. This is the
-/// `serve --backend native` path.
+/// `serve --backend native` path. The graph is compiled once into a
+/// fused [`IntPlan`] with per-batch-variant layouts; requests execute
+/// the plan over pooled arenas (see DESIGN.md §Plan-compilation).
 pub struct NativeIntExecutor {
-    graph: IntGraph,
+    plan: IntPlan,
+    plans: PlanSet<i32>,
     input_shape: Vec<usize>,
     max_batch: usize,
-    engine: IntegerEngine,
+    eps_out: f64,
 }
 
 impl NativeIntExecutor {
     pub fn new(graph: IntGraph, max_batch: usize) -> Result<Self> {
-        let input_shape = match graph.nodes.first().map(|n| &n.op) {
-            Some(IntOp::Input { shape, .. }) => shape.clone(),
-            _ => bail!("integer graph has no leading Input node"),
-        };
         ensure!(max_batch >= 1, "max_batch must be >= 1");
-        Ok(NativeIntExecutor {
-            graph,
-            input_shape,
-            max_batch,
-            engine: IntegerEngine::new(),
-        })
+        let eps_out = graph.eps_out;
+        let plan = IntPlan::compile(&graph)?;
+        let plans = PlanSet::compile(|b| plan.layout(b), max_batch)?;
+        let input_shape = plan.input_shape().to_vec();
+        Ok(NativeIntExecutor { plan, plans, input_shape, max_batch, eps_out })
     }
 
     /// Quantum of the output integer image (real logits ~ eps_out * Q).
     pub fn eps_out(&self) -> f64 {
-        self.graph.eps_out
+        self.eps_out
+    }
+
+    /// Graph nodes eliminated by epilogue fusion (diagnostics).
+    pub fn fused_nodes(&self) -> usize {
+        self.plan.fused_nodes()
     }
 }
 
@@ -192,8 +235,11 @@ impl Executor for NativeIntExecutor {
 
     fn run_batch(&self, input: &ExecInput) -> Result<ExecOutput> {
         let qx = input.batch.as_i32()?;
-        check_batch_shape("native-int", qx.shape(), &self.input_shape, self.max_batch)?;
-        let out = self.engine.run(&self.graph, qx);
+        let n =
+            check_batch_shape("native-int", qx.shape(), &self.input_shape, self.max_batch)?;
+        let out = self
+            .plans
+            .with_arena(n, |layout, arena| self.plan.execute(layout, arena, qx));
         Ok(ExecOutput { logits: Arg::I32(out) })
     }
 }
@@ -202,27 +248,22 @@ impl Executor for NativeIntExecutor {
 /// graphs on f32 batches. Note the serving coordinator's request
 /// protocol carries integer images only, so this backend is for direct
 /// `run_batch` callers (tools, benches, comparisons), not for
-/// `coordinator::ModelVariant`.
+/// `coordinator::ModelVariant`. Compiled exactly like the integer
+/// executor: one fused plan, per-batch layouts, pooled arenas.
 pub struct NativeFloatExecutor {
-    graph: Graph,
+    plan: FloatPlan,
+    plans: PlanSet<f32>,
     input_shape: Vec<usize>,
     max_batch: usize,
-    engine: FloatEngine,
 }
 
 impl NativeFloatExecutor {
     pub fn new(graph: Graph, max_batch: usize) -> Result<Self> {
-        let input_shape = match graph.nodes.first().map(|n| &n.op) {
-            Some(Op::Input { shape }) => shape.clone(),
-            _ => bail!("float graph has no leading Input node"),
-        };
         ensure!(max_batch >= 1, "max_batch must be >= 1");
-        Ok(NativeFloatExecutor {
-            graph,
-            input_shape,
-            max_batch,
-            engine: FloatEngine::new(),
-        })
+        let plan = FloatPlan::compile(&graph)?;
+        let plans = PlanSet::compile(|b| plan.layout(b), max_batch)?;
+        let input_shape = plan.input_shape().to_vec();
+        Ok(NativeFloatExecutor { plan, plans, input_shape, max_batch })
     }
 }
 
@@ -241,8 +282,15 @@ impl Executor for NativeFloatExecutor {
 
     fn run_batch(&self, input: &ExecInput) -> Result<ExecOutput> {
         let x = input.batch.as_f32()?;
-        check_batch_shape("native-float", x.shape(), &self.input_shape, self.max_batch)?;
-        let out = self.engine.run(&self.graph, x);
+        let n = check_batch_shape(
+            "native-float",
+            x.shape(),
+            &self.input_shape,
+            self.max_batch,
+        )?;
+        let out = self
+            .plans
+            .with_arena(n, |layout, arena| self.plan.execute(layout, arena, x));
         Ok(ExecOutput { logits: Arg::F32(out) })
     }
 }
@@ -250,6 +298,8 @@ impl Executor for NativeFloatExecutor {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::graph::int::IntOp;
+    use crate::graph::Op;
     use crate::quant::QuantSpec;
     use crate::tensor::Tensor;
 

@@ -283,3 +283,4 @@ mod tests {
 }
 
 pub mod int;
+pub mod shape;

@@ -1,0 +1,409 @@
+//! Static shape inference for both graph flavours (the first stage of
+//! plan compilation, DESIGN.md §Plan-compilation).
+//!
+//! Given a graph and a batch size, compute the full output shape
+//! (including the batch dimension) of every node *before* executing
+//! anything. The planner uses these shapes for liveness analysis and
+//! arena sizing; executors use them to validate inputs once at compile
+//! time instead of asserting per request.
+//!
+//! Only the batch dimension depends on the batch size — every other
+//! extent is a function of the graph alone — so plans cache the
+//! per-sample shapes and re-derive per-batch layouts cheaply.
+
+use crate::graph::int::{IntGraph, IntOp};
+use crate::graph::{Graph, NodeId, Op};
+
+#[derive(Debug, thiserror::Error)]
+pub enum ShapeError {
+    #[error("node {id} ({name}): {msg}")]
+    Node { id: NodeId, name: String, msg: String },
+    #[error("graph has no nodes")]
+    Empty,
+    #[error("batch size must be >= 1")]
+    EmptyBatch,
+}
+
+fn node_err(id: NodeId, name: &str, msg: impl Into<String>) -> ShapeError {
+    ShapeError::Node { id, name: name.to_string(), msg: msg.into() }
+}
+
+/// `shapes[inputs[i]]` with an explicit lifetime (the inference walk
+/// reads earlier entries of the table it is still building).
+fn nth<'s>(shapes: &'s [Vec<usize>], inputs: &[NodeId], i: usize) -> &'s [usize] {
+    &shapes[inputs[i]]
+}
+
+/// Output extents of a conv window: (H + 2*pad - K) / stride + 1,
+/// rejecting windows larger than the padded input.
+fn conv_extent(
+    id: NodeId,
+    name: &str,
+    dim: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+) -> Result<usize, ShapeError> {
+    if stride == 0 {
+        return Err(node_err(id, name, "stride must be >= 1"));
+    }
+    if dim + 2 * pad < k {
+        return Err(node_err(
+            id,
+            name,
+            format!("kernel {k} larger than padded input {dim}+2*{pad}"),
+        ));
+    }
+    Ok((dim + 2 * pad - k) / stride + 1)
+}
+
+fn pool_extents(
+    id: NodeId,
+    name: &str,
+    shape: &[usize],
+    k: usize,
+) -> Result<Vec<usize>, ShapeError> {
+    if shape.len() != 4 {
+        return Err(node_err(id, name, format!("pool on rank-{} tensor", shape.len())));
+    }
+    let (h, w) = (shape[2], shape[3]);
+    if k == 0 || h % k != 0 || w % k != 0 {
+        return Err(node_err(
+            id,
+            name,
+            format!("pool window {k} does not divide spatial dims {h}x{w}"),
+        ));
+    }
+    Ok(vec![shape[0], shape[1], h / k, w / k])
+}
+
+fn channels_of(shape: &[usize]) -> Option<usize> {
+    match shape.len() {
+        4 | 2 => Some(shape[1]),
+        _ => None,
+    }
+}
+
+fn want_channels(
+    id: NodeId,
+    name: &str,
+    shape: &[usize],
+    c: usize,
+    what: &str,
+) -> Result<(), ShapeError> {
+    match channels_of(shape) {
+        Some(got) if got == c => Ok(()),
+        Some(got) => Err(node_err(
+            id,
+            name,
+            format!("{what} has {c} channels but input has {got}"),
+        )),
+        None => Err(node_err(
+            id,
+            name,
+            format!("per-channel op on rank-{} tensor", shape.len()),
+        )),
+    }
+}
+
+/// Infer the full shape (batch dim included) of every node of a float
+/// [`Graph`] for batch size `batch`.
+pub fn infer_float(g: &Graph, batch: usize) -> Result<Vec<Vec<usize>>, ShapeError> {
+    if g.nodes.is_empty() {
+        return Err(ShapeError::Empty);
+    }
+    if batch == 0 {
+        return Err(ShapeError::EmptyBatch);
+    }
+    let mut shapes: Vec<Vec<usize>> = Vec::with_capacity(g.nodes.len());
+    for n in &g.nodes {
+        if !matches!(n.op, Op::Input { .. }) && n.inputs.is_empty() {
+            return Err(node_err(n.id, &n.name, "non-Input node has no inputs"));
+        }
+        let shape = match &n.op {
+            Op::Input { shape } => {
+                let mut s = vec![batch];
+                s.extend_from_slice(shape);
+                s
+            }
+            Op::Conv2d { w, stride, pad, .. } => {
+                let x = nth(&shapes, &n.inputs, 0);
+                if x.len() != 4 {
+                    return Err(node_err(n.id, &n.name, "conv on non-NCHW input"));
+                }
+                let (co, ci, kh, kw) =
+                    (w.shape()[0], w.shape()[1], w.shape()[2], w.shape()[3]);
+                if x[1] != ci {
+                    return Err(node_err(
+                        n.id,
+                        &n.name,
+                        format!("weights expect {ci} input channels, got {}", x[1]),
+                    ));
+                }
+                let oh = conv_extent(n.id, &n.name, x[2], kh, *stride, *pad)?;
+                let ow = conv_extent(n.id, &n.name, x[3], kw, *stride, *pad)?;
+                vec![x[0], co, oh, ow]
+            }
+            Op::Linear { w, .. } => {
+                let x = nth(&shapes, &n.inputs, 0);
+                let (fi, fo) = (w.shape()[0], w.shape()[1]);
+                if x.len() != 2 || x[1] != fi {
+                    return Err(node_err(
+                        n.id,
+                        &n.name,
+                        format!("linear expects [B, {fi}], got {x:?}"),
+                    ));
+                }
+                vec![x[0], fo]
+            }
+            Op::BatchNorm { bn } => {
+                let x = nth(&shapes, &n.inputs, 0);
+                want_channels(n.id, &n.name, x, bn.channels(), "BatchNorm")?;
+                x.to_vec()
+            }
+            Op::QuantBn { kappa_hat, .. } => {
+                let x = nth(&shapes, &n.inputs, 0);
+                want_channels(n.id, &n.name, x, kappa_hat.len(), "QuantBn")?;
+                x.to_vec()
+            }
+            Op::ReLU | Op::PactAct { .. } => nth(&shapes, &n.inputs, 0).to_vec(),
+            Op::MaxPool { k } | Op::AvgPool { k } => {
+                pool_extents(n.id, &n.name, nth(&shapes, &n.inputs, 0), *k)?
+            }
+            Op::GlobalAvgPool => {
+                let x = nth(&shapes, &n.inputs, 0);
+                if x.len() != 4 {
+                    return Err(node_err(n.id, &n.name, "global pool on non-NCHW input"));
+                }
+                vec![x[0], x[1]]
+            }
+            Op::Flatten => {
+                let x = nth(&shapes, &n.inputs, 0);
+                vec![x[0], x[1..].iter().product()]
+            }
+            Op::Add => {
+                let first = nth(&shapes, &n.inputs, 0).to_vec();
+                for (bi, &i) in n.inputs.iter().enumerate().skip(1) {
+                    if shapes[i] != first {
+                        return Err(node_err(
+                            n.id,
+                            &n.name,
+                            format!(
+                                "Add branch {bi} shape {:?} != branch 0 shape {first:?}",
+                                shapes[i]
+                            ),
+                        ));
+                    }
+                }
+                first
+            }
+        };
+        shapes.push(shape);
+    }
+    Ok(shapes)
+}
+
+/// Infer the full shape (batch dim included) of every node of an
+/// [`IntGraph`] for batch size `batch`.
+pub fn infer_int(g: &IntGraph, batch: usize) -> Result<Vec<Vec<usize>>, ShapeError> {
+    if g.nodes.is_empty() {
+        return Err(ShapeError::Empty);
+    }
+    if batch == 0 {
+        return Err(ShapeError::EmptyBatch);
+    }
+    let mut shapes: Vec<Vec<usize>> = Vec::with_capacity(g.nodes.len());
+    for n in &g.nodes {
+        if !matches!(n.op, IntOp::Input { .. }) && n.inputs.is_empty() {
+            return Err(node_err(n.id, &n.name, "non-Input node has no inputs"));
+        }
+        let shape = match &n.op {
+            IntOp::Input { shape, .. } => {
+                let mut s = vec![batch];
+                s.extend_from_slice(shape);
+                s
+            }
+            IntOp::ConvInt { wq, cin, kh, kw, stride, pad, .. } => {
+                let x = nth(&shapes, &n.inputs, 0);
+                if x.len() != 4 {
+                    return Err(node_err(n.id, &n.name, "conv on non-NCHW input"));
+                }
+                if x[1] != *cin {
+                    return Err(node_err(
+                        n.id,
+                        &n.name,
+                        format!("weights expect {cin} input channels, got {}", x[1]),
+                    ));
+                }
+                if wq.shape()[0] != cin * kh * kw {
+                    return Err(node_err(
+                        n.id,
+                        &n.name,
+                        format!(
+                            "weight matrix rows {} != cin*kh*kw {}",
+                            wq.shape()[0],
+                            cin * kh * kw
+                        ),
+                    ));
+                }
+                let co = wq.shape()[1];
+                let oh = conv_extent(n.id, &n.name, x[2], *kh, *stride, *pad)?;
+                let ow = conv_extent(n.id, &n.name, x[3], *kw, *stride, *pad)?;
+                vec![x[0], co, oh, ow]
+            }
+            IntOp::LinearInt { wq, .. } => {
+                let x = nth(&shapes, &n.inputs, 0);
+                let (fi, fo) = (wq.shape()[0], wq.shape()[1]);
+                if x.len() != 2 || x[1] != fi {
+                    return Err(node_err(
+                        n.id,
+                        &n.name,
+                        format!("linear expects [B, {fi}], got {x:?}"),
+                    ));
+                }
+                vec![x[0], fo]
+            }
+            IntOp::IntBn { bn } => {
+                let x = nth(&shapes, &n.inputs, 0);
+                want_channels(n.id, &n.name, x, bn.kappa_q.len(), "IntBn")?;
+                x.to_vec()
+            }
+            IntOp::ThreshAct { th } => {
+                let x = nth(&shapes, &n.inputs, 0);
+                want_channels(n.id, &n.name, x, th.th.len(), "ThreshAct")?;
+                x.to_vec()
+            }
+            IntOp::RequantAct { .. } => nth(&shapes, &n.inputs, 0).to_vec(),
+            IntOp::MaxPoolInt { k } => pool_extents(n.id, &n.name, nth(&shapes, &n.inputs, 0), *k)?,
+            IntOp::AvgPoolInt { k, .. } => pool_extents(n.id, &n.name, nth(&shapes, &n.inputs, 0), *k)?,
+            IntOp::Flatten => {
+                let x = nth(&shapes, &n.inputs, 0);
+                vec![x[0], x[1..].iter().product()]
+            }
+            IntOp::AddRequant { rqs } => {
+                if rqs.len() != n.inputs.len() - 1 {
+                    return Err(node_err(
+                        n.id,
+                        &n.name,
+                        format!(
+                            "{} requants for {} extra branches",
+                            rqs.len(),
+                            n.inputs.len() - 1
+                        ),
+                    ));
+                }
+                let first = nth(&shapes, &n.inputs, 0).to_vec();
+                for (bi, &i) in n.inputs.iter().enumerate().skip(1) {
+                    if shapes[i] != first {
+                        return Err(node_err(
+                            n.id,
+                            &n.name,
+                            format!(
+                                "Add branch {bi} shape {:?} != branch 0 shape {first:?}",
+                                shapes[i]
+                            ),
+                        ));
+                    }
+                }
+                first
+            }
+        };
+        shapes.push(shape);
+    }
+    Ok(shapes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::bn::BnParams;
+    use crate::quant::QuantSpec;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn float_conv_chain_shapes() {
+        let mut g = Graph::new(1.0 / 255.0);
+        let x = g.push("in", Op::Input { shape: vec![1, 16, 16] }, &[]);
+        let w = Tensor::zeros(&[8, 1, 3, 3]);
+        let c = g.push("c", Op::Conv2d { w, bias: None, stride: 2, pad: 1 }, &[x]);
+        let b = g.push("bn", Op::BatchNorm { bn: BnParams::identity(8) }, &[c]);
+        let a = g.push("a", Op::ReLU, &[b]);
+        let p = g.push("gap", Op::GlobalAvgPool, &[a]);
+        let w2 = Tensor::zeros(&[8, 10]);
+        g.push("fc", Op::Linear { w: w2, bias: None }, &[p]);
+        let shapes = infer_float(&g, 4).unwrap();
+        assert_eq!(shapes[0], vec![4, 1, 16, 16]);
+        assert_eq!(shapes[1], vec![4, 8, 8, 8]);
+        assert_eq!(shapes[3], vec![4, 8, 8, 8]);
+        assert_eq!(shapes[4], vec![4, 8]);
+        assert_eq!(shapes[5], vec![4, 10]);
+    }
+
+    #[test]
+    fn float_rejects_channel_mismatch() {
+        let mut g = Graph::new(1.0);
+        let x = g.push("in", Op::Input { shape: vec![2, 4, 4] }, &[]);
+        let w = Tensor::zeros(&[3, 1, 3, 3]); // expects 1 input channel
+        g.push("c", Op::Conv2d { w, bias: None, stride: 1, pad: 1 }, &[x]);
+        assert!(infer_float(&g, 1).is_err());
+    }
+
+    #[test]
+    fn float_rejects_linear_dim_mismatch() {
+        let mut g = Graph::new(1.0);
+        let x = g.push("in", Op::Input { shape: vec![5] }, &[]);
+        let w = Tensor::zeros(&[4, 2]);
+        g.push("fc", Op::Linear { w, bias: None }, &[x]);
+        assert!(infer_float(&g, 1).is_err());
+    }
+
+    #[test]
+    fn int_conv_pool_flatten_linear() {
+        let mut g = IntGraph::default();
+        let spec = QuantSpec { eps: 1.0 / 255.0, lo: 0, hi: 255 };
+        let x = g.push("in", IntOp::Input { shape: vec![1, 8, 8], spec }, &[]);
+        let wq = Tensor::zeros(&[9, 4]); // 1*3*3 -> 4 channels
+        let c = g.push(
+            "c",
+            IntOp::ConvInt { wq, bias_q: None, cin: 1, kh: 3, kw: 3, stride: 1, pad: 1 },
+            &[x],
+        );
+        let p = g.push("mp", IntOp::MaxPoolInt { k: 2 }, &[c]);
+        let f = g.push("fl", IntOp::Flatten, &[p]);
+        let wq2 = Tensor::zeros(&[4 * 4 * 4, 10]);
+        g.push("fc", IntOp::LinearInt { wq: wq2, bias_q: None }, &[f]);
+        let shapes = infer_int(&g, 2).unwrap();
+        assert_eq!(shapes[1], vec![2, 4, 8, 8]);
+        assert_eq!(shapes[2], vec![2, 4, 4, 4]);
+        assert_eq!(shapes[3], vec![2, 64]);
+        assert_eq!(shapes[4], vec![2, 10]);
+    }
+
+    #[test]
+    fn int_rejects_pool_indivisible() {
+        let mut g = IntGraph::default();
+        let spec = QuantSpec { eps: 1.0, lo: 0, hi: 255 };
+        let x = g.push("in", IntOp::Input { shape: vec![1, 5, 5], spec }, &[]);
+        g.push("mp", IntOp::MaxPoolInt { k: 2 }, &[x]);
+        assert!(infer_int(&g, 1).is_err());
+    }
+
+    #[test]
+    fn int_rejects_add_shape_mismatch() {
+        let mut g = IntGraph::default();
+        let spec = QuantSpec { eps: 1.0, lo: 0, hi: 255 };
+        let x = g.push("in", IntOp::Input { shape: vec![4], spec }, &[]);
+        let wq = Tensor::zeros(&[4, 2]);
+        let l = g.push("fc", IntOp::LinearInt { wq, bias_q: None }, &[x]);
+        let rq = crate::quant::requant::Requant { m: 1, d: 0, lo: 0, hi: 255 };
+        g.push("add", IntOp::AddRequant { rqs: vec![rq] }, &[x, l]);
+        assert!(infer_int(&g, 1).is_err());
+    }
+
+    #[test]
+    fn empty_batch_rejected() {
+        let mut g = Graph::new(1.0);
+        g.push("in", Op::Input { shape: vec![4] }, &[]);
+        assert!(matches!(infer_float(&g, 0), Err(ShapeError::EmptyBatch)));
+    }
+}

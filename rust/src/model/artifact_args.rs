@@ -36,7 +36,7 @@ pub fn synthnet_fq_args(net: &SynthNet) -> Vec<Arg> {
 /// per conv: wq, kappa_q, lambda_q, m, d, act_hi; then fc.wq, fc.bq.
 ///
 /// Extracted from the IntegerDeployable graph produced by
-/// [`crate::transform::deploy`] — validates that the graph has the
+/// `Network::<FakeQuantized>::deploy` — validates that the graph has the
 /// SynthNet topology (3x [ConvInt, IntBn, RequantAct], AvgPool, Flatten,
 /// LinearInt).
 pub fn synthnet_id_args(dep: &Deployed) -> Result<Vec<Arg>> {

@@ -81,8 +81,8 @@ impl SynthNet {
     }
 
     /// Build the FakeQuantized-style graph with PACT activations at the
-    /// stored act_betas (weights are NOT hardened here; use
-    /// transform::quantize_pact for that).
+    /// stored act_betas (weights are NOT hardened here; `Network::deploy`
+    /// derives the weight grids itself).
     pub fn to_pact_graph(&self, abits: u32) -> Graph {
         let mut g = self.to_graph(true);
         let mut i = 0;

@@ -1,14 +1,27 @@
 //! Tensor operations: GEMM, conv2d (direct + im2col), pooling.
 //!
 //! Integer variants accumulate in `i64` and narrow with a checked cast —
-//! the deployment pipeline's range analysis (transform/range.rs) proves
+//! the deployment pipeline's range analysis (transform/deploy.rs) proves
 //! narrowing is safe for deployed graphs, and the debug assertion catches
 //! violations in tests.
+//!
+//! Two call styles coexist:
+//!
+//! * tensor-in/tensor-out convenience functions (`matmul_i32`,
+//!   `conv2d_f32`, ...) used by the unfused interpreter paths; and
+//! * arena-aware `_into` variants operating on raw slices
+//!   (`im2col_into`, `matmul_i32_fused_into`, `maxpool_into`, ...) used
+//!   by the compiled execution plans (engine/plan.rs) — no allocation,
+//!   caller-provided scratch, optional fused per-channel epilogues
+//!   applied while the GEMM output is narrowed.
 
 use super::{Tensor, TensorF, TensorI};
 
+/// Checked i64 -> i32 narrowing for integer images. The deployment
+/// pipeline's range analysis proves every narrowed value fits; debug
+/// builds verify that proof at every narrowing site.
 #[inline]
-fn narrow(v: i64) -> i32 {
+pub fn narrow(v: i64) -> i32 {
     debug_assert!(
         v >= i32::MIN as i64 && v <= i32::MAX as i64,
         "integer image overflowed i32: {v}"
@@ -28,13 +41,34 @@ pub fn matmul_f32(a: &TensorF, b: &TensorF) -> TensorF {
     let (k2, n) = (b.shape()[0], b.shape()[1]);
     assert_eq!(k, k2, "matmul inner dims");
     let mut out = vec![0f32; m * n];
-    let ad = a.data();
-    let bd = b.data();
-    // ikj loop order: unit-stride inner loop over both B and C rows.
+    matmul_f32_fused_into(a.data(), b.data(), m, k, n, &|_, v| v, &mut out);
+    Tensor::from_vec(&[m, n], out)
+}
+
+/// f32 GEMM into a caller-provided buffer with a fused per-element
+/// epilogue: `out[i*n + j] = epi(j, sum_k a[i,k]*b[k,j])`. The column
+/// index `j` is the output-channel index for conv/linear layers, so
+/// per-channel bias/BN/activation epilogues fuse here. ikj loop order,
+/// unit-stride inner loops, zero-`a` rows skipped — identical arithmetic
+/// (and identical f32 summation order) to [`matmul_f32`].
+pub fn matmul_f32_fused_into<F>(
+    ad: &[f32],
+    bd: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    epi: &F,
+    out: &mut [f32],
+) where
+    F: Fn(usize, f32) -> f32,
+{
+    assert!(ad.len() >= m * k && bd.len() >= k * n);
+    let out = &mut out[..m * n];
     for i in 0..m {
         let crow = &mut out[i * n..(i + 1) * n];
-        for kk in 0..k {
-            let av = ad[i * k + kk];
+        crow.fill(0.0);
+        let arow = &ad[i * k..(i + 1) * k];
+        for (kk, &av) in arow.iter().enumerate() {
             if av == 0.0 {
                 continue;
             }
@@ -43,12 +77,15 @@ pub fn matmul_f32(a: &TensorF, b: &TensorF) -> TensorF {
                 crow[j] += av * brow[j];
             }
         }
+        for (j, v) in crow.iter_mut().enumerate() {
+            *v = epi(j, *v);
+        }
     }
-    Tensor::from_vec(&[m, n], out)
 }
 
 /// Integer-image GEMM (Eq. 16): C = A @ B with i64 accumulation,
-/// checked-narrowed to i32.
+/// checked-narrowed to i32. Reference implementation (unfused paths and
+/// tests); the plan hot path uses [`matmul_i32_fused_into`].
 pub fn matmul_i32(a: &TensorI, b: &TensorI) -> TensorI {
     assert_eq!(a.ndim(), 2);
     assert_eq!(b.ndim(), 2);
@@ -81,6 +118,9 @@ pub fn matmul_i32(a: &TensorI, b: &TensorI) -> TensorI {
 /// Per-product safety holds whenever |a| < 2^15 and |b| < 2^16 (true for
 /// all <=8-bit integer images). i32 accumulation lets LLVM autovectorize
 /// the inner loop (the i64-widening variant cannot), ~4x on this testbed.
+/// Large workloads additionally split across row-block worker threads
+/// (bit-identical: integer addition order per output element is
+/// unchanged; each row is computed by exactly one thread).
 pub fn matmul_i32_fast(a: &TensorI, b: &TensorI) -> TensorI {
     assert_eq!(a.ndim(), 2);
     assert_eq!(b.ndim(), 2);
@@ -88,10 +128,106 @@ pub fn matmul_i32_fast(a: &TensorI, b: &TensorI) -> TensorI {
     let (k2, n) = (b.shape()[0], b.shape()[1]);
     assert_eq!(k, k2, "matmul inner dims");
     let mut out = vec![0i32; m * n];
-    let ad = a.data();
-    let bd = b.data();
-    for i in 0..m {
-        let crow = &mut out[i * n..(i + 1) * n];
+    matmul_i32_into(a.data(), b.data(), m, k, n, &mut out);
+    Tensor::from_vec(&[m, n], out)
+}
+
+/// [`matmul_i32_fast`] into a caller-provided buffer (no allocation).
+pub fn matmul_i32_into(
+    ad: &[i32],
+    bd: &[i32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [i32],
+) {
+    matmul_i32_fused_into(ad, bd, m, k, n, &|_, v| v, out)
+}
+
+/// Integer GEMM with a fused per-element epilogue applied as each output
+/// element is finalized: `out[i*n + j] = epi(j, acc_i32)`. This is where
+/// the plan layer's ConvInt/LinearInt → IntBn → RequantAct/ThreshAct
+/// chains collapse: the epilogue widens the i32 accumulator to i64, runs
+/// the per-channel integer epilogue (bias, Eq. 22 BN, Eq. 11 requant or
+/// Eq. 19-20 thresholds) and narrows back — no intermediate tensors.
+///
+/// Row blocks are distributed over scoped worker threads when the MAC
+/// count is large enough to amortize the spawns; the per-element
+/// arithmetic (and therefore the result) is identical at any thread
+/// count. Same range-analysis precondition as [`matmul_i32_fast`].
+pub fn matmul_i32_fused_into<F>(
+    ad: &[i32],
+    bd: &[i32],
+    m: usize,
+    k: usize,
+    n: usize,
+    epi: &F,
+    out: &mut [i32],
+) where
+    F: Fn(usize, i32) -> i32 + Sync,
+{
+    assert!(ad.len() >= m * k && bd.len() >= k * n);
+    let out = &mut out[..m * n];
+    let threads = gemm_threads(m, k, n);
+    if threads <= 1 {
+        matmul_i32_block(ad, bd, 0, m, k, n, epi, out);
+        return;
+    }
+    let rows_per = m.div_ceil(threads);
+    std::thread::scope(|s| {
+        // Carve disjoint row-block output slices; the main thread takes
+        // the first block itself instead of idling on the join.
+        let mut blocks: Vec<(usize, &mut [i32])> = Vec::new();
+        let mut rest = out;
+        let mut row0 = 0usize;
+        while row0 < m {
+            let take = rows_per.min(m - row0);
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(take * n);
+            rest = tail;
+            blocks.push((row0, chunk));
+            row0 += take;
+        }
+        let mut blocks = blocks.into_iter();
+        let (lo0, chunk0) = blocks.next().expect("at least one row block");
+        for (lo, chunk) in blocks {
+            let rows = chunk.len() / n;
+            s.spawn(move || matmul_i32_block(ad, bd, lo, lo + rows, k, n, epi, chunk));
+        }
+        matmul_i32_block(ad, bd, lo0, lo0 + chunk0.len() / n, k, n, epi, chunk0);
+    });
+}
+
+/// Worker-thread count for an m*k*n MAC GEMM; 1 below the spawn-amortization
+/// threshold.
+fn gemm_threads(m: usize, k: usize, n: usize) -> usize {
+    // ~0.5M MACs per thread: at the ~1 Gmac/s scalar baseline that is
+    // ~0.5 ms of work against a ~20 µs spawn.
+    const MACS_PER_THREAD: usize = 1 << 19;
+    let work = m.saturating_mul(k).saturating_mul(n);
+    if work < 2 * MACS_PER_THREAD {
+        return 1;
+    }
+    let hw = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    (work / MACS_PER_THREAD).min(hw).min(m).max(1)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn matmul_i32_block<F>(
+    ad: &[i32],
+    bd: &[i32],
+    row_lo: usize,
+    row_hi: usize,
+    k: usize,
+    n: usize,
+    epi: &F,
+    out: &mut [i32],
+) where
+    F: Fn(usize, i32) -> i32,
+{
+    debug_assert_eq!(out.len(), (row_hi - row_lo) * n);
+    for i in row_lo..row_hi {
+        let crow = &mut out[(i - row_lo) * n..(i - row_lo + 1) * n];
+        crow.fill(0); // arena buffers are reused; start from zero
         let arow = &ad[i * k..(i + 1) * k];
         for (kk, &av) in arow.iter().enumerate() {
             if av == 0 {
@@ -102,8 +238,10 @@ pub fn matmul_i32_fast(a: &TensorI, b: &TensorI) -> TensorI {
                 crow[j] = crow[j].wrapping_add(av.wrapping_mul(brow[j]));
             }
         }
+        for (j, v) in crow.iter_mut().enumerate() {
+            *v = epi(j, *v);
+        }
     }
-    Tensor::from_vec(&[m, n], out)
 }
 
 // ---------------------------------------------------------------------------
@@ -129,7 +267,34 @@ pub fn im2col<T: Copy + Default>(
     let ow = (w + 2 * pad - kw) / stride + 1;
     let cols = c * kh * kw;
     let mut out = vec![T::default(); b * oh * ow * cols];
-    let xd = x.data();
+    im2col_into(x.data(), b, c, h, w, kh, kw, stride, pad, &mut out);
+    (Tensor::from_vec(&[b * oh * ow, cols], out), (b, oh, ow))
+}
+
+/// Arena-aware [`im2col`]: writes the patch matrix into a caller-provided
+/// buffer. The used prefix is zero-filled first (arena buffers are reused
+/// across requests and carry stale data where padding expects zeros).
+/// Returns (rows = B*OH*OW, cols = C*KH*KW, OH, OW).
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_into<T: Copy + Default>(
+    xd: &[T],
+    b: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    out: &mut [T],
+) -> (usize, usize, usize, usize) {
+    assert!(xd.len() >= b * c * h * w);
+    let oh = (h + 2 * pad - kh) / stride + 1;
+    let ow = (w + 2 * pad - kw) / stride + 1;
+    let cols = c * kh * kw;
+    let rows = b * oh * ow;
+    let out = &mut out[..rows * cols];
+    out.fill(T::default());
     // valid output index range for a kernel offset k: iy = o*stride+k-pad
     // must lie in [0, dim): o >= ceil((pad-k)/stride), o < ...
     let valid = |k: usize, dim: usize, omax: usize| -> (usize, usize) {
@@ -163,7 +328,7 @@ pub fn im2col<T: Copy + Default>(
             }
         }
     }
-    (Tensor::from_vec(&[b * oh * ow, cols], out), (b, oh, ow))
+    (rows, cols, oh, ow)
 }
 
 /// [B*OH*OW, C_out] rows -> NCHW.
@@ -177,17 +342,30 @@ pub fn rows_to_nchw<T: Copy + Default>(
     assert_eq!(rows.shape()[0], b * oh * ow);
     let c = rows.shape()[1];
     let mut out = Tensor::zeros(&[b, c, oh, ow]);
+    rows_to_nchw_into(rows.data(), b, c, oh, ow, out.data_mut());
+    out
+}
+
+/// Scatter a [B*OH*OW, C] GEMM-row buffer into an NCHW buffer.
+pub fn rows_to_nchw_into<T: Copy>(
+    rows: &[T],
+    b: usize,
+    c: usize,
+    oh: usize,
+    ow: usize,
+    out: &mut [T],
+) {
+    assert!(rows.len() >= b * oh * ow * c);
+    let hw = oh * ow;
+    let out = &mut out[..b * c * hw];
     for bi in 0..b {
-        for oy in 0..oh {
-            for ox in 0..ow {
-                let row = (bi * oh + oy) * ow + ox;
-                for ci in 0..c {
-                    out.set4(bi, ci, oy, ox, rows.at2(row, ci));
-                }
+        for pix in 0..hw {
+            let row = (bi * hw + pix) * c;
+            for ci in 0..c {
+                out[(bi * c + ci) * hw + pix] = rows[row + ci];
             }
         }
     }
-    out
 }
 
 // ---------------------------------------------------------------------------
@@ -202,8 +380,15 @@ pub fn conv2d_f32(
     pad: usize,
 ) -> TensorF {
     let (cols, (b, oh, ow)) = im2col(x, w.shape()[2], w.shape()[3], stride, pad);
+    let wt = oihw_to_wmat(w);
+    rows_to_nchw(&matmul_f32(&cols, &wt), b, oh, ow)
+}
+
+/// OIHW float weights -> the [C_in*KH*KW, C_out] matrix layout matching
+/// the im2col column order (the ID artifact layout).
+pub fn oihw_to_wmat(w: &TensorF) -> TensorF {
+    assert_eq!(w.ndim(), 4);
     let (co, ci, kh, kw) = (w.shape()[0], w.shape()[1], w.shape()[2], w.shape()[3]);
-    // OIHW -> [C_in*KH*KW, C_out] matching im2col column order.
     let mut wmat = vec![0f32; ci * kh * kw * co];
     for o in 0..co {
         for i in 0..ci {
@@ -215,8 +400,7 @@ pub fn conv2d_f32(
             }
         }
     }
-    let wt = Tensor::from_vec(&[ci * kh * kw, co], wmat);
-    rows_to_nchw(&matmul_f32(&cols, &wt), b, oh, ow)
+    Tensor::from_vec(&[ci * kh * kw, co], wmat)
 }
 
 /// Integer conv2d with weights already in matrix layout
@@ -255,96 +439,156 @@ pub fn conv2d_i32_wmat_fast(
 pub fn maxpool<T: Copy + Default + PartialOrd>(x: &Tensor<T>, k: usize) -> Tensor<T> {
     let (b, c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
     assert!(h % k == 0 && w % k == 0);
+    let mut out = Tensor::zeros(&[b, c, h / k, w / k]);
+    maxpool_into(x.data(), b, c, h, w, k, out.data_mut());
+    out
+}
+
+/// [`maxpool`] into a caller-provided buffer.
+pub fn maxpool_into<T: Copy + PartialOrd>(
+    xd: &[T],
+    b: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    k: usize,
+    out: &mut [T],
+) {
+    assert!(h % k == 0 && w % k == 0);
     let (oh, ow) = (h / k, w / k);
-    let mut out = Tensor::zeros(&[b, c, oh, ow]);
-    for bi in 0..b {
-        for ci in 0..c {
-            for oy in 0..oh {
-                for ox in 0..ow {
-                    let mut best = x.at4(bi, ci, oy * k, ox * k);
-                    for dy in 0..k {
-                        for dx in 0..k {
-                            let v = x.at4(bi, ci, oy * k + dy, ox * k + dx);
-                            if v > best {
-                                best = v;
-                            }
+    let out = &mut out[..b * c * oh * ow];
+    for bc in 0..b * c {
+        let xbase = bc * h * w;
+        let obase = bc * oh * ow;
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut best = xd[xbase + (oy * k) * w + ox * k];
+                for dy in 0..k {
+                    let xrow = xbase + (oy * k + dy) * w + ox * k;
+                    for dx in 0..k {
+                        let v = xd[xrow + dx];
+                        if v > best {
+                            best = v;
                         }
                     }
-                    out.set4(bi, ci, oy, ox, best);
                 }
+                out[obase + oy * ow + ox] = best;
             }
         }
     }
-    out
 }
 
 /// f32 average pool, window = stride.
 pub fn avgpool_f32(x: &TensorF, k: usize) -> TensorF {
     let (b, c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
     assert!(h % k == 0 && w % k == 0);
+    let mut out = Tensor::zeros(&[b, c, h / k, w / k]);
+    avgpool_f32_into(x.data(), b, c, h, w, k, out.data_mut());
+    out
+}
+
+/// [`avgpool_f32`] into a caller-provided buffer.
+pub fn avgpool_f32_into(
+    xd: &[f32],
+    b: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    k: usize,
+    out: &mut [f32],
+) {
+    assert!(h % k == 0 && w % k == 0);
     let (oh, ow) = (h / k, w / k);
-    let mut out = Tensor::zeros(&[b, c, oh, ow]);
     let inv = 1.0 / (k * k) as f32;
-    for bi in 0..b {
-        for ci in 0..c {
-            for oy in 0..oh {
-                for ox in 0..ow {
-                    let mut acc = 0f32;
-                    for dy in 0..k {
-                        for dx in 0..k {
-                            acc += x.at4(bi, ci, oy * k + dy, ox * k + dx);
-                        }
+    let out = &mut out[..b * c * oh * ow];
+    for bc in 0..b * c {
+        let xbase = bc * h * w;
+        let obase = bc * oh * ow;
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut acc = 0f32;
+                for dy in 0..k {
+                    let xrow = xbase + (oy * k + dy) * w + ox * k;
+                    for dx in 0..k {
+                        acc += xd[xrow + dx];
                     }
-                    out.set4(bi, ci, oy, ox, acc * inv);
                 }
+                out[obase + oy * ow + ox] = acc * inv;
             }
         }
     }
-    out
 }
 
 /// Integer average pool (Eq. 25): (floor(2^d/(K*K)) * sum) >> d.
 pub fn avgpool_i32(x: &TensorI, k: usize, d: u32) -> TensorI {
     let (b, c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
     assert!(h % k == 0 && w % k == 0);
+    let mut out = Tensor::zeros(&[b, c, h / k, w / k]);
+    avgpool_i32_into(x.data(), b, c, h, w, k, d, out.data_mut());
+    out
+}
+
+/// [`avgpool_i32`] into a caller-provided buffer.
+#[allow(clippy::too_many_arguments)]
+pub fn avgpool_i32_into(
+    xd: &[i32],
+    b: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    k: usize,
+    d: u32,
+    out: &mut [i32],
+) {
+    assert!(h % k == 0 && w % k == 0);
     let (oh, ow) = (h / k, w / k);
-    let m = ((1i64 << d) / (k * k) as i64) as i64;
-    let mut out = Tensor::zeros(&[b, c, oh, ow]);
-    for bi in 0..b {
-        for ci in 0..c {
-            for oy in 0..oh {
-                for ox in 0..ow {
-                    let mut acc = 0i64;
-                    for dy in 0..k {
-                        for dx in 0..k {
-                            acc += x.at4(bi, ci, oy * k + dy, ox * k + dx) as i64;
-                        }
+    let m = (1i64 << d) / (k * k) as i64;
+    let out = &mut out[..b * c * oh * ow];
+    for bc in 0..b * c {
+        let xbase = bc * h * w;
+        let obase = bc * oh * ow;
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut acc = 0i64;
+                for dy in 0..k {
+                    let xrow = xbase + (oy * k + dy) * w + ox * k;
+                    for dx in 0..k {
+                        acc += xd[xrow + dx] as i64;
                     }
-                    out.set4(bi, ci, oy, ox, narrow((acc * m) >> d));
                 }
+                out[obase + oy * ow + ox] = narrow((acc * m) >> d);
             }
         }
     }
-    out
 }
 
 /// Global mean over H,W: [B,C,H,W] f32 -> [B,C].
 pub fn global_mean_f32(x: &TensorF) -> TensorF {
     let (b, c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
-    let inv = 1.0 / (h * w) as f32;
     let mut out = Tensor::zeros(&[b, c]);
-    for bi in 0..b {
-        for ci in 0..c {
-            let mut acc = 0f32;
-            for y in 0..h {
-                for z in 0..w {
-                    acc += x.at4(bi, ci, y, z);
-                }
-            }
-            out.data_mut()[bi * c + ci] = acc * inv;
-        }
-    }
+    global_mean_f32_into(x.data(), b, c, h, w, out.data_mut());
     out
+}
+
+/// [`global_mean_f32`] into a caller-provided buffer.
+pub fn global_mean_f32_into(
+    xd: &[f32],
+    b: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    out: &mut [f32],
+) {
+    let inv = 1.0 / (h * w) as f32;
+    let hw = h * w;
+    let out = &mut out[..b * c];
+    for (bc, o) in out.iter_mut().enumerate() {
+        let mut acc = 0f32;
+        for v in &xd[bc * hw..(bc + 1) * hw] {
+            acc += *v;
+        }
+        *o = acc * inv;
+    }
 }
 
 #[cfg(test)]
@@ -372,6 +616,51 @@ mod tests {
             let a = rand_i(&mut rng, &[m, k], -255, 256);
             let b = rand_i(&mut rng, &[k, n], -128, 128);
             assert_eq!(matmul_i32(&a, &b), matmul_i32_fast(&a, &b));
+        }
+    }
+
+    #[test]
+    fn matmul_threaded_path_matches_checked() {
+        // Big enough to cross the row-block threading threshold.
+        let mut rng = Rng::new(12);
+        let (m, k, n) = (160, 96, 80);
+        let a = rand_i(&mut rng, &[m, k], -200, 200);
+        let b = rand_i(&mut rng, &[k, n], -100, 100);
+        assert!(gemm_threads(m, k, n) >= 1); // smoke the picker
+        assert_eq!(matmul_i32(&a, &b), matmul_i32_fast(&a, &b));
+    }
+
+    #[test]
+    fn matmul_into_reuses_dirty_buffers() {
+        let mut rng = Rng::new(13);
+        let a = rand_i(&mut rng, &[7, 9], -50, 50);
+        let b = rand_i(&mut rng, &[9, 5], -50, 50);
+        let want = matmul_i32(&a, &b);
+        let mut buf = vec![i32::MAX; 7 * 5 + 3]; // stale + oversized
+        matmul_i32_into(a.data(), b.data(), 7, 9, 5, &mut buf);
+        assert_eq!(&buf[..35], want.data());
+    }
+
+    #[test]
+    fn matmul_fused_epilogue_applies_per_column() {
+        let mut rng = Rng::new(14);
+        let a = rand_i(&mut rng, &[6, 8], -40, 40);
+        let b = rand_i(&mut rng, &[8, 4], -40, 40);
+        let plain = matmul_i32(&a, &b);
+        let mut out = vec![0i32; 6 * 4];
+        matmul_i32_fused_into(
+            a.data(),
+            b.data(),
+            6,
+            8,
+            4,
+            &|j, v| narrow(v as i64 * 2 + j as i64),
+            &mut out,
+        );
+        for i in 0..6 {
+            for j in 0..4 {
+                assert_eq!(out[i * 4 + j], plain.at2(i, j) * 2 + j as i32);
+            }
         }
     }
 
@@ -437,6 +726,20 @@ mod tests {
     }
 
     #[test]
+    fn im2col_into_zeroes_stale_padding() {
+        // padded conv over a dirty arena buffer must still read zeros in
+        // the halo region.
+        let x = Tensor::from_vec(&[1, 1, 2, 2], vec![1, 2, 3, 4]);
+        let mut dirty = vec![77i32; 2 * 2 * 9 + 5];
+        let (rows, cols, oh, ow) =
+            im2col_into(x.data(), 1, 1, 2, 2, 3, 3, 1, 1, &mut dirty);
+        assert_eq!((rows, cols, oh, ow), (4, 9, 2, 2));
+        let (want, _) = im2col(&x, 3, 3, 1, 1);
+        assert_eq!(&dirty[..36], want.data());
+        assert_eq!(dirty[36..], [77; 5]); // untouched tail
+    }
+
+    #[test]
     fn maxpool_and_avgpool() {
         let x = Tensor::from_vec(&[1, 1, 2, 2], vec![1, 5, 3, 4]);
         assert_eq!(maxpool(&x, 2).data(), &[5]);
@@ -447,10 +750,38 @@ mod tests {
     }
 
     #[test]
+    fn pool_into_variants_match_tensor_api() {
+        let mut rng = Rng::new(4);
+        let x = rand_i(&mut rng, &[2, 3, 4, 4], -100, 100);
+        let mut out = vec![0i32; 2 * 3 * 2 * 2];
+        maxpool_into(x.data(), 2, 3, 4, 4, 2, &mut out);
+        assert_eq!(&out[..], maxpool(&x, 2).data());
+        avgpool_i32_into(x.data(), 2, 3, 4, 4, 2, 12, &mut out);
+        assert_eq!(&out[..], avgpool_i32(&x, 2, 12).data());
+        let xf = rand_f(&mut rng, &[2, 3, 4, 4]);
+        let mut outf = vec![0f32; 2 * 3 * 2 * 2];
+        avgpool_f32_into(xf.data(), 2, 3, 4, 4, 2, &mut outf);
+        assert_eq!(&outf[..], avgpool_f32(&xf, 2).data());
+        let mut gm = vec![0f32; 6];
+        global_mean_f32_into(xf.data(), 2, 3, 4, 4, &mut gm);
+        assert_eq!(&gm[..], global_mean_f32(&xf).data());
+    }
+
+    #[test]
     fn global_mean() {
         let x = Tensor::from_vec(&[1, 2, 1, 2], vec![1.0f32, 3.0, 10.0, 20.0]);
         let y = global_mean_f32(&x);
         assert_eq!(y.data(), &[2.0, 15.0]);
+    }
+
+    #[test]
+    fn rows_to_nchw_into_matches_tensor_api() {
+        let mut rng = Rng::new(5);
+        let rows = rand_i(&mut rng, &[2 * 3 * 3, 4], -10, 10);
+        let want = rows_to_nchw(&rows, 2, 3, 3);
+        let mut out = vec![0i32; 2 * 4 * 9];
+        rows_to_nchw_into(rows.data(), 2, 4, 3, 3, &mut out);
+        assert_eq!(&out[..], want.data());
     }
 
     #[test]

@@ -106,15 +106,9 @@ struct NodeState {
     pending_bn: Option<(crate::quant::bn::BnParams, f64)>,
 }
 
-#[deprecated(
-    since = "0.2.0",
-    note = "use network::Network::<FakeQuantized>::deploy, which makes an \
-            un-fake-quantized input graph unrepresentable"
-)]
-pub fn deploy(g: &Graph, opts: DeployOptions) -> Result<Deployed, TransformError> {
-    deploy_impl(g, opts)
-}
-
+/// The QD/ID transform walk. Crate-private: the public entry point is
+/// `network::Network::<FakeQuantized>::deploy`, which makes an
+/// un-fake-quantized input graph unrepresentable.
 pub(crate) fn deploy_impl(
     g: &Graph,
     opts: DeployOptions,
@@ -592,14 +586,13 @@ fn linear_range(wq: &TensorI, xlo: i64, xhi: i64, bias: Option<&[i64]>) -> (i64,
 }
 
 #[cfg(test)]
-#[allow(deprecated)] // the shims stay covered until they are removed
 mod tests {
     use super::*;
     use crate::engine::{FloatEngine, IntegerEngine};
     use crate::quant::bn::BnParams;
     use crate::quant::quantize_input;
     use crate::tensor::TensorF;
-    use crate::transform::{calibrate, quantize_pact};
+    use crate::transform::{calibrate, quantize_pact_impl};
     use crate::util::rng::Rng;
 
     /// conv-bn-act -> conv-bn-act -> gap -> flatten -> fc test net.
@@ -653,8 +646,8 @@ mod tests {
         let g = small_net(&mut rng);
         let cal = rand_batch(&mut rng, 16);
         let betas = calibrate(&g, &[cal]);
-        let fq = quantize_pact(&g, 8, 8, &betas);
-        let dep = deploy(
+        let fq = quantize_pact_impl(&g, 8, 8, &betas);
+        let dep = deploy_impl(
             &fq,
             DeployOptions { use_thresholds, ..DeployOptions::default() },
         )
@@ -668,7 +661,7 @@ mod tests {
         let mut rng = Rng::new(1);
         let g = small_net(&mut rng);
         assert!(matches!(
-            deploy(&g, DeployOptions::default()),
+            deploy_impl(&g, DeployOptions::default()),
             Err(TransformError::NeedsFakeQuant(_))
         ));
     }
@@ -734,7 +727,7 @@ mod tests {
         g.push("a", Op::PactAct { beta: 1.0, bits: 8 }, &[c]);
         // 64*9 * 127 * 255 = 18.6M fits; make it not fit via 32x scale:
         // use wbits=16 -> |Q_w| up to 32767, acc ~ 4.8e9 > 2^31.
-        let err = deploy(&g, DeployOptions { wbits: 16, ..Default::default() });
+        let err = deploy_impl(&g, DeployOptions { wbits: 16, ..Default::default() });
         assert!(matches!(err, Err(TransformError::RangeOverflow { .. })));
     }
 }

@@ -12,15 +12,8 @@ use crate::graph::{Graph, NodeId, Op};
 /// must be re-derived (NEMO's `reset_alpha_weights`) — that happens
 /// naturally here because `quantize_pact`/`deploy` recompute beta_w from
 /// the folded weights.
-#[deprecated(
-    since = "0.2.0",
-    note = "use network::Network::fold_bn, which tracks the fold so it \
-            cannot corrupt weights by running twice"
-)]
-pub fn fold_bn(g: &Graph, only: Option<&[&str]>) -> Result<Graph, TransformError> {
-    fold_bn_impl(g, only)
-}
-
+/// Crate-private: the public entry point is `network::Network::fold_bn`,
+/// which tracks the fold so it cannot corrupt weights by running twice.
 pub(crate) fn fold_bn_impl(
     g: &Graph,
     only: Option<&[&str]>,
@@ -168,7 +161,6 @@ pub fn add_input_bias(g: &Graph, alpha: f64) -> Result<Graph, TransformError> {
 }
 
 #[cfg(test)]
-#[allow(deprecated)] // the shims stay covered until they are removed
 mod tests {
     use super::*;
     use crate::engine::FloatEngine;
@@ -199,7 +191,7 @@ mod tests {
     fn fold_bn_preserves_function() {
         let mut rng = Rng::new(42);
         let g = conv_bn_relu_graph(&mut rng);
-        let folded = fold_bn(&g, None).unwrap();
+        let folded = fold_bn_impl(&g, None).unwrap();
         assert_eq!(folded.nodes.len(), g.nodes.len() - 1);
         let x = Tensor::from_vec(
             &[2, 2, 6, 6],
@@ -215,7 +207,7 @@ mod tests {
     fn fold_bn_respects_name_filter() {
         let mut rng = Rng::new(1);
         let g = conv_bn_relu_graph(&mut rng);
-        let kept = fold_bn(&g, Some(&["other"])).unwrap();
+        let kept = fold_bn_impl(&g, Some(&["other"])).unwrap();
         assert_eq!(kept.nodes.len(), g.nodes.len()); // nothing folded
     }
 

@@ -11,11 +11,12 @@
 //! | `nemo.transform.integerize_pact`      | `Network::integerize`         |
 //! | `net.add_input_bias()`                | [`fold::add_input_bias`]      |
 //!
-//! The free functions ([`quantize_pact`], [`fold_bn`], [`deploy`]) are
-//! deprecated shims kept for one release: they operate on untyped
-//! [`Graph`]s, so nothing stops a caller from deploying an uncalibrated
-//! FP graph or folding BN twice. Use [`crate::network::Network`], which
-//! makes such pipelines unrepresentable.
+//! The transform entry points live on [`crate::network::Network`]: the
+//! untyped free-function shims (`quantize_pact`, `fold_bn`, `deploy`)
+//! that survived one release as deprecated aliases are gone — they let a
+//! caller deploy an uncalibrated FP graph or fold BN twice, which the
+//! typed pipeline makes unrepresentable. The implementations remain here
+//! as crate-private `*_impl` functions behind the typed API.
 //!
 //! The pipeline's extra safety pass — integer range analysis proving all
 //! i32 narrowing is sound — has no NEMO equivalent; it stands in for the
@@ -26,12 +27,8 @@ pub mod deploy;
 pub mod fold;
 
 pub use calibrate::{calibrate, calibrate_percentile};
-#[allow(deprecated)]
-pub use deploy::deploy;
 pub use deploy::{DeployOptions, Deployed, LayerQuant};
 pub use fold::add_input_bias;
-#[allow(deprecated)]
-pub use fold::fold_bn;
 
 use crate::graph::{Graph, Op};
 use crate::quant::{harden_tensor, max_abs, QuantSpec};
@@ -59,16 +56,10 @@ pub enum TransformError {
 /// put Linear weights on their symmetric fake-quantization grid.
 ///
 /// `act_betas` must have one entry per activation node (see
-/// [`Graph::activations`]), typically from [`calibrate`].
-#[deprecated(
-    since = "0.2.0",
-    note = "use network::Network::<FullPrecision>::quantize_pact, which \
-            checks the beta count and records stage metadata"
-)]
-pub fn quantize_pact(g: &Graph, wbits: u32, abits: u32, act_betas: &[f64]) -> Graph {
-    quantize_pact_impl(g, wbits, abits, act_betas)
-}
-
+/// [`Graph::activations`]), typically from [`calibrate`]. Crate-private:
+/// the public entry point is `network::Network::<FullPrecision>::
+/// quantize_pact`, which checks the beta count and records stage
+/// metadata.
 pub(crate) fn quantize_pact_impl(
     g: &Graph,
     wbits: u32,
@@ -100,7 +91,6 @@ pub(crate) fn quantize_pact_impl(
 }
 
 #[cfg(test)]
-#[allow(deprecated)] // the shims stay covered until they are removed
 mod tests {
     use super::*;
     use crate::engine::FloatEngine;
@@ -114,7 +104,7 @@ mod tests {
         let l = g.push("fc", Op::Linear { w, bias: None }, &[x]);
         g.push("act", Op::ReLU, &[l]);
 
-        let fq = quantize_pact(&g, 4, 4, &[2.0]);
+        let fq = quantize_pact_impl(&g, 4, 4, &[2.0]);
         match &fq.nodes[2].op {
             Op::PactAct { beta, bits } => {
                 assert_eq!(*beta, 2.0);

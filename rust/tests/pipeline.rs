@@ -1,22 +1,19 @@
 //! Integration tests over the full representation pipeline
 //! (FP -> FQ -> QD -> ID) on multiple architectures, including failure
-//! injection. No artifacts required (engine-only).
-//!
-//! These tests intentionally exercise the deprecated free-function shims
-//! (`transform::{quantize_pact, fold_bn, deploy}`) to pin their behaviour
-//! during the deprecation window; the typed pipeline is covered in
-//! tests/typestate.rs and proven bit-identical to this path there.
-#![allow(deprecated)]
+//! injection. No artifacts required (engine-only). Everything flows
+//! through the typed `Network<Stage>` pipeline — the untyped
+//! free-function shims were removed after their deprecation window.
 
 use nemo::engine::{FloatEngine, IntegerEngine};
 use nemo::graph::{Graph, Op};
 use nemo::model::synthnet::{SynthNet, EPS_IN};
 use nemo::model::{mlp, residual_net};
+use nemo::network::{FakeQuantized, Network};
 use nemo::quant::quantize_input;
 use nemo::tensor::{Tensor, TensorF};
 use nemo::transform::{
-    add_input_bias, calibrate, calibrate_percentile, deploy, fold_bn,
-    quantize_pact, DeployOptions, TransformError,
+    add_input_bias, calibrate, calibrate_percentile, DeployOptions, Deployed,
+    TransformError,
 };
 use nemo::util::rng::Rng;
 
@@ -25,6 +22,29 @@ fn synth_input(rng: &mut Rng, b: usize) -> TensorF {
         &[b, 1, 16, 16],
         (0..b * 256).map(|_| rng.uniform(0.0, 1.0) as f32).collect(),
     )
+}
+
+/// PACT graph -> full deployment record via the typed pipeline.
+fn deploy_pact(g: Graph, opts: DeployOptions) -> Result<Deployed, TransformError> {
+    Ok(Network::<FakeQuantized>::from_pact_graph(g)?
+        .deploy(opts)?
+        .integerize()
+        .into_deployed())
+}
+
+/// FP graph + betas -> full deployment record via the typed pipeline.
+fn deploy_fp(
+    g: Graph,
+    wbits: u32,
+    abits: u32,
+    betas: &[f64],
+    opts: DeployOptions,
+) -> Result<Deployed, TransformError> {
+    Ok(Network::from_graph(g)?
+        .quantize_pact(wbits, abits, betas)?
+        .deploy(opts)?
+        .integerize()
+        .into_deployed())
 }
 
 #[test]
@@ -36,9 +56,8 @@ fn synthnet_full_pipeline_all_bitwidths() {
     for bits in [8u32, 4, 2] {
         let mut n2 = net.clone();
         n2.act_betas = betas.clone();
-        let fq = n2.to_pact_graph(bits);
-        let dep = deploy(
-            &fq,
+        let dep = deploy_pact(
+            n2.to_pact_graph(bits),
             DeployOptions { wbits: bits, abits: bits, ..DeployOptions::default() },
         )
         .unwrap_or_else(|e| panic!("deploy at {bits} bits: {e}"));
@@ -68,8 +87,7 @@ fn residual_net_deploys_and_runs_integer_only() {
     let g = residual_net(&mut rng, EPS_IN);
     let x = synth_input(&mut rng, 4);
     let betas = calibrate(&g, &[x.clone()]);
-    let fq = quantize_pact(&g, 8, 8, &betas);
-    let dep = deploy(&fq, DeployOptions::default()).unwrap();
+    let dep = deploy_fp(g, 8, 8, &betas, DeployOptions::default()).unwrap();
     // The Add became AddRequant with one per-extra-branch requant.
     let adds: Vec<_> = dep
         .id
@@ -101,8 +119,7 @@ fn mlp_pipeline_with_input_bias() {
         (0..128).map(|_| rng.uniform(0.0, 1.0) as f32).collect(),
     );
     let betas = calibrate(&g2, &[x.clone()]);
-    let fq = quantize_pact(&g2, 8, 8, &betas);
-    let dep = deploy(&fq, DeployOptions::default()).unwrap();
+    let dep = deploy_fp(g2, 8, 8, &betas, DeployOptions::default()).unwrap();
     let qx = quantize_input(&x, EPS_IN);
     let out = IntegerEngine::new().run(&dep.id, &qx);
     assert_eq!(out.shape(), &[4, 5]);
@@ -113,13 +130,21 @@ fn fold_bn_then_deploy_matches_unfolded_argmax() {
     let mut rng = Rng::new(24);
     let net = SynthNet::init(&mut rng);
     let g = net.to_fp_graph();
-    let folded = fold_bn(&g, None).unwrap();
+    let folded = Network::from_graph(g.clone())
+        .unwrap()
+        .fold_bn(None)
+        .unwrap();
     let x = synth_input(&mut rng, 8);
     let betas_a = calibrate(&g, &[x.clone()]);
-    let betas_b = calibrate(&folded, &[x.clone()]);
-    let dep_a = deploy(&quantize_pact(&g, 8, 8, &betas_a), DeployOptions::default()).unwrap();
-    let dep_b =
-        deploy(&quantize_pact(&folded, 8, 8, &betas_b), DeployOptions::default()).unwrap();
+    let betas_b = calibrate(folded.graph(), &[x.clone()]);
+    let dep_a = deploy_fp(g, 8, 8, &betas_a, DeployOptions::default()).unwrap();
+    let dep_b = folded
+        .quantize_pact(8, 8, &betas_b)
+        .unwrap()
+        .deploy(DeployOptions::default())
+        .unwrap()
+        .integerize()
+        .into_deployed();
     let qx = quantize_input(&x, EPS_IN);
     let ie = IntegerEngine::new();
     let a = ie.run(&dep_a.id, &qx);
@@ -135,10 +160,9 @@ fn threshold_and_requant_variants_agree() {
     let mut n2 = net.clone();
     n2.act_betas = calibrate_percentile(&net.to_fp_graph(), &[x.clone()], 0.999);
     for bits in [4u32, 2] {
-        let fq = n2.to_pact_graph(bits);
         let mk = |th| {
-            deploy(
-                &fq,
+            deploy_pact(
+                n2.to_pact_graph(bits),
                 DeployOptions {
                     wbits: bits,
                     abits: bits,
@@ -164,9 +188,14 @@ fn threshold_and_requant_variants_agree() {
 fn deploy_refuses_unquantized_network() {
     let mut rng = Rng::new(26);
     let net = SynthNet::init(&mut rng);
-    match deploy(&net.to_fp_graph(), DeployOptions::default()) {
+    // A FullPrecision graph (plain ReLU) cannot even enter the pipeline
+    // at the FakeQuantized stage, let alone deploy.
+    match Network::<FakeQuantized>::from_pact_graph(net.to_fp_graph()) {
         Err(TransformError::NeedsFakeQuant(_)) => {}
-        other => panic!("expected NeedsFakeQuant, got {other:?}"),
+        other => panic!(
+            "expected NeedsFakeQuant, got {:?}",
+            other.map(|_| "Network<FakeQuantized>")
+        ),
     }
 }
 
@@ -179,7 +208,7 @@ fn deploy_rejects_overflowing_bitwidths() {
     let w = Tensor::full(&[8, 256, 3, 3], 1.0f32);
     let c = g.push("c", Op::Conv2d { w, bias: None, stride: 1, pad: 1 }, &[x]);
     g.push("a", Op::PactAct { beta: 1.0, bits: 8 }, &[c]);
-    match deploy(&g, DeployOptions { wbits: 24, ..DeployOptions::default() }) {
+    match deploy_pact(g, DeployOptions { wbits: 24, ..DeployOptions::default() }) {
         Err(TransformError::RangeOverflow { .. }) => {}
         other => panic!("expected RangeOverflow, got {other:?}"),
     }
@@ -200,7 +229,7 @@ fn integer_engine_is_deterministic_across_runs() {
     let mut n2 = net.clone();
     let x = synth_input(&mut rng, 4);
     n2.act_betas = calibrate(&net.to_fp_graph(), &[x.clone()]);
-    let dep = deploy(&n2.to_pact_graph(8), DeployOptions::default()).unwrap();
+    let dep = deploy_pact(n2.to_pact_graph(8), DeployOptions::default()).unwrap();
     let qx = quantize_input(&x, EPS_IN);
     let ie = IntegerEngine::new();
     let a = ie.run(&dep.id, &qx);
@@ -226,7 +255,7 @@ fn mixed_precision_per_layer_bits() {
             ai += 1;
         }
     }
-    let dep = deploy(&g, DeployOptions::default()).unwrap();
+    let dep = deploy_pact(g, DeployOptions::default()).unwrap();
     // each RequantAct clips at its own 2^bits - 1
     let his: Vec<i64> = dep
         .id

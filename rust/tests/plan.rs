@@ -1,0 +1,316 @@
+//! Fused-vs-unfused bit-exactness: compiled execution plans must equal
+//! the naive interpreters **node for node** (via `run_traced`) on
+//! randomized graphs covering conv / linear / bn / thresh / requant /
+//! add / pool combinations, at every representation (FP float graphs, QD
+//! float twins, ID integer graphs) — plus handcrafted integer graphs
+//! that defeat fusion (fanout on a conv output, standalone epilogue
+//! ops).
+
+use nemo::engine::plan::{FloatArena, IntArena};
+use nemo::engine::{FloatEngine, FloatPlan, IntPlan, IntegerEngine};
+use nemo::graph::int::{IntGraph, IntOp};
+use nemo::graph::{Graph, Op};
+use nemo::network::Network;
+use nemo::quant::bn::{BnParams, BnQuant, Thresholds};
+use nemo::quant::requant::Requant;
+use nemo::quant::{quantize_input, QuantSpec};
+use nemo::tensor::{Tensor, TensorF, TensorI};
+use nemo::transform::DeployOptions;
+use nemo::util::prop::prop_check;
+use nemo::util::rng::Rng;
+
+fn rand_w(rng: &mut Rng, shape: &[usize], std: f64) -> TensorF {
+    let n: usize = shape.iter().product();
+    Tensor::from_vec(shape, (0..n).map(|_| rng.normal(0.0, std) as f32).collect())
+}
+
+fn rand_bn(rng: &mut Rng, c: usize) -> BnParams {
+    BnParams {
+        gamma: (0..c).map(|_| rng.uniform(0.3, 1.6)).collect(),
+        sigma: (0..c).map(|_| rng.uniform(0.3, 1.6)).collect(),
+        beta: (0..c).map(|_| rng.normal(0.0, 0.2)).collect(),
+        mu: (0..c).map(|_| rng.normal(0.0, 0.2)).collect(),
+    }
+}
+
+/// A random FullPrecision net: conv blocks with optional BN / residual
+/// Add / pooling (max, avg and BN-or-act-after-pool variants), finished
+/// by GlobalAvgPool-or-Flatten + Linear. Always validates.
+fn random_net(rng: &mut Rng) -> (Graph, usize) {
+    let mut g = Graph::new(1.0 / 255.0);
+    let mut c = rng.int(1, 3) as usize;
+    let mut h = 8usize;
+    let mut prev = g.push("in", Op::Input { shape: vec![c, h, h] }, &[]);
+    let blocks = rng.int(1, 3) as usize;
+    for b in 0..blocks {
+        let cout = rng.int(2, 6) as usize;
+        let k = if rng.int(0, 2) == 0 { 1 } else { 3 };
+        let pad = k / 2;
+        let stride = if h % 2 == 0 && rng.int(0, 3) == 0 { 2 } else { 1 };
+        let std = (0.8 / (c * k * k) as f64).sqrt();
+        let bias = if rng.int(0, 2) == 0 {
+            Some((0..cout).map(|_| rng.normal(0.0, 0.1)).collect())
+        } else {
+            None
+        };
+        let w = rand_w(rng, &[cout, c, k, k], std);
+        prev = g.push(&format!("c{b}"), Op::Conv2d { w, bias, stride, pad }, &[prev]);
+        h = (h + 2 * pad - k) / stride + 1;
+        c = cout;
+        if rng.int(0, 2) == 0 {
+            prev = g.push(&format!("bn{b}"), Op::BatchNorm { bn: rand_bn(rng, c) }, &[prev]);
+        }
+        prev = g.push(&format!("a{b}"), Op::ReLU, &[prev]);
+        // residual branch: conv-bn-act from the activation, then Add (+act)
+        if rng.int(0, 3) == 0 {
+            let std2 = (0.8 / (c * 9) as f64).sqrt();
+            let w2 = rand_w(rng, &[c, c, 3, 3], std2);
+            let cb = g.push(
+                &format!("rc{b}"),
+                Op::Conv2d { w: w2, bias: None, stride: 1, pad: 1 },
+                &[prev],
+            );
+            let bb =
+                g.push(&format!("rbn{b}"), Op::BatchNorm { bn: rand_bn(rng, c) }, &[cb]);
+            let ab = g.push(&format!("ra{b}"), Op::ReLU, &[bb]);
+            let add = g.push(&format!("radd{b}"), Op::Add, &[prev, ab]);
+            prev = g.push(&format!("rpa{b}"), Op::ReLU, &[add]);
+        }
+        if h % 2 == 0 && h > 2 && rng.int(0, 2) == 0 {
+            let pool = if rng.int(0, 2) == 0 {
+                Op::MaxPool { k: 2 }
+            } else {
+                Op::AvgPool { k: 2 }
+            };
+            prev = g.push(&format!("p{b}"), pool, &[prev]);
+            h /= 2;
+            // BN or activation directly after a pool: exercises the
+            // standalone (non-fused) epilogue steps of the plan.
+            match rng.int(0, 3) {
+                0 => {
+                    prev = g.push(
+                        &format!("pbn{b}"),
+                        Op::BatchNorm { bn: rand_bn(rng, c) },
+                        &[prev],
+                    );
+                    prev = g.push(&format!("pa{b}"), Op::ReLU, &[prev]);
+                }
+                1 => {
+                    prev = g.push(&format!("pa{b}"), Op::ReLU, &[prev]);
+                }
+                _ => {}
+            }
+        }
+    }
+    let classes = rng.int(2, 6) as usize;
+    let (head_in, head) = if rng.int(0, 2) == 0 {
+        (c, g.push("gap", Op::GlobalAvgPool, &[prev]))
+    } else {
+        (c * h * h, g.push("fl", Op::Flatten, &[prev]))
+    };
+    let wf = rand_w(rng, &[head_in, classes], (1.0 / head_in as f64).sqrt());
+    let fb = if rng.int(0, 2) == 0 {
+        Some((0..classes).map(|_| rng.normal(0.0, 0.1)).collect())
+    } else {
+        None
+    };
+    g.push("fc", Op::Linear { w: wf, bias: fb }, &[head]);
+    let in_c = match &g.nodes[0].op {
+        Op::Input { shape } => shape[0],
+        _ => unreachable!(),
+    };
+    (g, in_c)
+}
+
+fn rand_input(rng: &mut Rng, b: usize, c: usize) -> TensorF {
+    Tensor::from_vec(
+        &[b, c, 8, 8],
+        (0..b * c * 64)
+            .map(|_| rng.uniform(0.0, 1.0) as f32)
+            .collect(),
+    )
+}
+
+/// Plan trace must equal the interpreter trace at every fused anchor.
+fn check_int_plan(g: &IntGraph, qx: &TensorI) {
+    let interp = IntegerEngine::new().run_traced(g, qx);
+    let plan = IntPlan::compile(g).expect("plan");
+    let layout = plan.layout(qx.shape()[0]).expect("layout");
+    let mut arena = IntArena::new();
+    // Twice through the same arena: reuse must not leak state.
+    for round in 0..2 {
+        let trace = plan.execute_traced(&layout, &mut arena, qx);
+        for (node, t) in &trace {
+            assert_eq!(
+                t, &interp[*node],
+                "round {round}: plan step for node {node} ({}) diverged",
+                g.nodes[*node].name
+            );
+        }
+        let out = plan.execute(&layout, &mut arena, qx);
+        assert_eq!(out, interp[g.output], "round {round}: final output diverged");
+    }
+}
+
+fn check_float_plan(g: &Graph, x: &TensorF) {
+    let interp = FloatEngine::new().run_traced(g, x);
+    let plan = FloatPlan::compile(g).expect("plan");
+    let layout = plan.layout(x.shape()[0]).expect("layout");
+    let mut arena = FloatArena::new();
+    for (node, t) in plan.execute_traced(&layout, &mut arena, x) {
+        assert_eq!(
+            t.shape(),
+            interp[node].shape(),
+            "shape diverged at node {node}"
+        );
+        assert_eq!(
+            t.data(),
+            interp[node].data(),
+            "plan step for node {node} ({}) diverged",
+            g.nodes[node].name
+        );
+    }
+}
+
+#[test]
+fn plans_match_interpreters_on_random_nets() {
+    prop_check(20, |rng| {
+        let (g, in_c) = random_net(rng);
+        g.validate().map_err(|e| format!("generated invalid graph: {e}"))?;
+        let b = rng.int(1, 4) as usize;
+        let x = rand_input(rng, b, in_c);
+
+        // FP float graph: fused float plan == float interpreter.
+        check_float_plan(&g, &x);
+
+        // Deploy (randomized options) and check the QD twin + ID graph.
+        let fp = Network::from_graph(g).map_err(|e| e.to_string())?;
+        let betas = fp.calibrate(&[x.clone()]);
+        let abits = [2u32, 4, 8][rng.int(0, 3) as usize];
+        let opts = DeployOptions {
+            abits,
+            use_thresholds: rng.int(0, 2) == 0,
+            ..DeployOptions::default()
+        };
+        let dep = fp
+            .quantize_pact(8, abits, &betas)
+            .map_err(|e| e.to_string())?
+            .deploy(opts)
+            .map_err(|e| e.to_string())?
+            .integerize()
+            .into_deployed();
+
+        let qx = quantize_input(&x, 1.0 / 255.0);
+        let x_grid = qx.map(|q| q as f32 / 255.0);
+        check_float_plan(&dep.qd, &x_grid);
+        check_int_plan(&dep.id, &qx);
+        Ok(())
+    });
+}
+
+#[test]
+fn fanout_defeats_fusion_but_not_correctness() {
+    // conv output consumed by BOTH a bn-chain and a maxpool: the conv
+    // must not absorb its epilogue, and every standalone op still
+    // matches the interpreter.
+    let mut rng = Rng::new(7);
+    let mut g = IntGraph::default();
+    let spec = QuantSpec { eps: 1.0 / 255.0, lo: 0, hi: 255 };
+    let x = g.push("in", IntOp::Input { shape: vec![2, 4, 4], spec }, &[]);
+    let wq = Tensor::from_vec(
+        &[2, 3],
+        (0..6).map(|_| rng.int(-4, 5) as i32).collect(),
+    );
+    let conv = g.push(
+        "conv",
+        IntOp::ConvInt { wq, bias_q: Some(vec![7, -7, 0]), cin: 2, kh: 1, kw: 1, stride: 1, pad: 0 },
+        &[x],
+    );
+    let bn = BnQuant {
+        kappa_q: vec![2, -1, 3],
+        lambda_q: vec![1, 2, -3],
+        eps_kappa: 0.01,
+        eps_phi_out: 0.001,
+    };
+    let bnn = g.push("bn", IntOp::IntBn { bn }, &[conv]);
+    let rq = Requant { m: 5, d: 3, lo: 0, hi: 255 };
+    let act = g.push("act", IntOp::RequantAct { rq }, &[bnn]);
+    let pool = g.push("mp", IntOp::MaxPoolInt { k: 2 }, &[conv]); // 2nd consumer
+    let pact = g.push(
+        "pact",
+        IntOp::RequantAct { rq: Requant { m: 3, d: 2, lo: 0, hi: 255 } },
+        &[pool],
+    );
+    let f1 = g.push("f1", IntOp::Flatten, &[act]);
+    let f2 = g.push("f2", IntOp::Flatten, &[pact]);
+    let wl = Tensor::from_vec(&[48, 2], (0..96).map(|i| (i % 7) as i32 - 3).collect());
+    let l1 = g.push("fc1", IntOp::LinearInt { wq: wl, bias_q: None }, &[f1]);
+    let wl2 = Tensor::from_vec(&[12, 2], (0..24).map(|i| (i % 5) as i32 - 2).collect());
+    let l2 = g.push("fc2", IntOp::LinearInt { wq: wl2, bias_q: Some(vec![1, -1]) }, &[f2]);
+    let add_rq = Requant { m: 1, d: 0, lo: i64::MIN, hi: i64::MAX };
+    g.push("add", IntOp::AddRequant { rqs: vec![add_rq] }, &[l1, l2]);
+
+    let plan = IntPlan::compile(&g).unwrap();
+    // conv has fanout 2 -> nothing fused into it.
+    assert_eq!(plan.fused_nodes(), 0);
+    let qx = Tensor::from_vec(
+        &[2, 2, 4, 4],
+        (0..64).map(|_| rng.int(0, 256) as i32).collect(),
+    );
+    check_int_plan(&g, &qx);
+}
+
+#[test]
+fn threshold_epilogues_fuse_and_match() {
+    // conv -> ThreshAct (no IntBn): threshold epilogue fuses into the
+    // GEMM and matches the interpreter.
+    let mut g = IntGraph::default();
+    let spec = QuantSpec { eps: 1.0, lo: 0, hi: 15 };
+    let x = g.push("in", IntOp::Input { shape: vec![1, 3, 3], spec }, &[]);
+    let wq = Tensor::from_vec(&[9, 2], (0..18).map(|i| (i as i32 % 3) - 1).collect());
+    let conv = g.push(
+        "conv",
+        IntOp::ConvInt { wq, bias_q: None, cin: 1, kh: 3, kw: 3, stride: 1, pad: 1 },
+        &[x],
+    );
+    let th = Thresholds {
+        th: vec![vec![-5, 0, 5], vec![-2, 3, 8]],
+        n_levels: 3,
+    };
+    g.push("act", IntOp::ThreshAct { th }, &[conv]);
+    let plan = IntPlan::compile(&g).unwrap();
+    assert_eq!(plan.fused_nodes(), 1);
+    assert_eq!(plan.steps().len(), 2);
+    let qx = Tensor::from_vec(&[2, 1, 3, 3], (0..18).map(|i| i % 16).collect());
+    check_int_plan(&g, &qx);
+}
+
+#[test]
+fn avgpool_flatten_linear_chain_matches() {
+    // AvgPoolInt -> IntBn (standalone) -> Flatten -> LinearInt+Requant.
+    let mut g = IntGraph::default();
+    let spec = QuantSpec { eps: 1.0, lo: 0, hi: 255 };
+    let x = g.push("in", IntOp::Input { shape: vec![2, 4, 4], spec }, &[]);
+    let p = g.push("ap", IntOp::AvgPoolInt { k: 2, d: 12 }, &[x]);
+    let bn = BnQuant {
+        kappa_q: vec![3, -2],
+        lambda_q: vec![-1, 4],
+        eps_kappa: 0.01,
+        eps_phi_out: 0.001,
+    };
+    let b = g.push("bn", IntOp::IntBn { bn }, &[p]);
+    let f = g.push("fl", IntOp::Flatten, &[b]);
+    let wq = Tensor::from_vec(&[8, 3], (0..24).map(|i| (i % 9) as i32 - 4).collect());
+    let l = g.push("fc", IntOp::LinearInt { wq, bias_q: Some(vec![10, -10, 0]) }, &[f]);
+    let rq = Requant { m: 9, d: 4, lo: 0, hi: 255 };
+    g.push("act", IntOp::RequantAct { rq }, &[l]);
+
+    let plan = IntPlan::compile(&g).unwrap();
+    assert_eq!(plan.fused_nodes(), 1); // requant into the linear
+    let mut rng = Rng::new(11);
+    let qx = Tensor::from_vec(
+        &[3, 2, 4, 4],
+        (0..96).map(|_| rng.int(0, 256) as i32).collect(),
+    );
+    check_int_plan(&g, &qx);
+}

@@ -1,10 +1,10 @@
 //! Typestate pipeline integration tests: the legal chain FP -> FQ -> QD
-//! -> ID must agree *bit-exactly* with the legacy free-function path
-//! (the deprecated shims kept in `transform::`), stage metadata must
-//! accumulate correctly, and the IntegerDeployable stage must plug into
-//! the unified `Executor` backend. Illegal transitions are compile
-//! errors — proven by the `compile_fail` doc-tests on `nemo::network`.
-#![allow(deprecated)] // half of these tests pin the legacy shims
+//! -> ID across architectures, stage metadata accumulation, and the
+//! IntegerDeployable stage plugging into the unified `Executor` backend.
+//! Illegal transitions are compile errors — proven by the `compile_fail`
+//! doc-tests on `nemo::network`. (The deprecated free-function shims the
+//! typed chain was originally diffed against are gone; bit-exactness of
+//! the execution paths is now pinned by tests/plan.rs instead.)
 
 use nemo::engine::{FloatEngine, IntegerEngine};
 use nemo::exec::{ExecInput, Executor};
@@ -13,9 +13,7 @@ use nemo::model::{mlp, residual_net};
 use nemo::network::{FakeQuantized, Network};
 use nemo::quant::quantize_input;
 use nemo::tensor::{Tensor, TensorF};
-use nemo::transform::{
-    calibrate, deploy, fold_bn, quantize_pact, DeployOptions, TransformError,
-};
+use nemo::transform::{DeployOptions, TransformError};
 use nemo::util::rng::Rng;
 
 fn synth_input(rng: &mut Rng, b: usize) -> TensorF {
@@ -26,7 +24,7 @@ fn synth_input(rng: &mut Rng, b: usize) -> TensorF {
 }
 
 #[test]
-fn typed_chain_is_bit_exact_with_free_function_path_mlp() {
+fn typed_chain_reaches_integer_deployable_mlp() {
     let mut rng = Rng::new(51);
     let g = mlp(&mut rng, 32, 24, 10, EPS_IN);
     let x = Tensor::from_vec(
@@ -34,87 +32,71 @@ fn typed_chain_is_bit_exact_with_free_function_path_mlp() {
         (0..128).map(|_| rng.uniform(0.0, 1.0) as f32).collect(),
     );
 
-    // Legacy path: loose free functions over untyped Graphs.
-    let betas_old = calibrate(&g, &[x.clone()]);
-    let fq_old = quantize_pact(&g, 8, 8, &betas_old);
-    let dep_old = deploy(&fq_old, DeployOptions::default()).unwrap();
+    let fp = Network::from_graph(g).unwrap();
+    let betas = fp.calibrate(&[x.clone()]);
+    let fq = fp.quantize_pact(8, 8, &betas).unwrap();
 
-    // Typed path.
-    let fp = Network::from_graph(g.clone()).unwrap();
-    let betas_new = fp.calibrate(&[x.clone()]);
-    assert_eq!(betas_old, betas_new);
-    let fq = fp.quantize_pact(8, 8, &betas_new).unwrap();
-
-    // FQ graphs agree bit-exactly.
+    // The FQ stage runs the same graph the engine would.
     let fe = FloatEngine::new();
-    assert_eq!(fe.run(&fq_old, &x).data(), fq.run(&x).data());
+    assert_eq!(fe.run(fq.graph(), &x).data(), fq.run(&x).data());
 
     let qd = fq.deploy(DeployOptions::default()).unwrap();
     let id = qd.integerize();
 
-    // QD float outputs agree bit-exactly.
-    assert_eq!(
-        fe.run(&dep_old.qd, &x).data(),
-        fe.run(&id.deployed().qd, &x).data()
-    );
-    // ID integer outputs agree bit-exactly.
+    // QD float twin runs; ID integer output matches a direct engine run.
     let qx = quantize_input(&x, EPS_IN);
     let ie = IntegerEngine::new();
-    let old_out = ie.run(&dep_old.id, &qx);
-    let new_out = id.run(&qx);
-    assert_eq!(old_out.data(), new_out.data());
-    assert_eq!(dep_old.eps_out.to_bits(), id.eps_out().to_bits());
+    let direct = ie.run(&id.deployed().id, &qx);
+    assert_eq!(direct.data(), id.run(&qx).data());
+    assert_eq!(direct.shape(), &[4, 10]);
+    assert!(id.eps_out() > 0.0);
 }
 
 #[test]
-fn typed_chain_is_bit_exact_with_free_function_path_synthnet() {
+fn typed_chain_records_layer_tables_synthnet() {
     let mut rng = Rng::new(52);
     let net = SynthNet::init(&mut rng);
     let x = synth_input(&mut rng, 8);
     let qx = quantize_input(&x, EPS_IN);
 
-    // Legacy path (what main.rs used to do).
-    let dep_old = deploy(&net.to_pact_graph(8), DeployOptions::default()).unwrap();
-    let old_out = IntegerEngine::new().run(&dep_old.id, &qx);
-
-    // Typed path via SynthNet::to_network.
     let nid = net
         .to_network(8)
         .unwrap()
         .deploy(DeployOptions::default())
         .unwrap()
         .integerize();
-    assert_eq!(old_out.data(), nid.run(&qx).data());
-    assert_eq!(dep_old.eps_out.to_bits(), nid.eps_out().to_bits());
-    // Per-layer quantization tables agree.
-    assert_eq!(dep_old.layers.len(), nid.layers().len());
-    for (a, b) in dep_old.layers.iter().zip(nid.layers()) {
-        assert_eq!(a.name, b.name);
-        assert_eq!(a.m, b.m);
-        assert_eq!(a.d, b.d);
-        assert_eq!(a.eps_w.to_bits(), b.eps_w.to_bits());
+    let out = nid.run(&qx);
+    assert_eq!(out.shape(), &[8, 10]);
+    assert!(nid.eps_out() > 0.0);
+    // One LayerQuant per Linear operator: 3 convs + 1 fc.
+    assert_eq!(nid.layers().len(), 4);
+    for l in nid.layers() {
+        assert!(l.eps_w > 0.0, "layer {} has no weight quantum", l.name);
+        assert!(l.eps_phi > 0.0);
     }
+    // eps_out is the quantum of the final (activation-less) fc layer.
+    let last = nid.layers().last().unwrap();
+    assert_eq!(nid.eps_out().to_bits(), last.eps_phi.to_bits());
 }
 
 #[test]
-fn typed_fold_bn_matches_free_function_and_cannot_repeat() {
+fn typed_fold_bn_preserves_function_and_cannot_repeat() {
     let mut rng = Rng::new(53);
     let net = SynthNet::init(&mut rng);
     let g = net.to_fp_graph();
     let x = synth_input(&mut rng, 4);
 
-    let folded_old = fold_bn(&g, None).unwrap();
-    let folded_new = Network::from_graph(g).unwrap().fold_bn(None).unwrap();
-    let fe = FloatEngine::new();
-    assert_eq!(
-        fe.run(&folded_old, &x).data(),
-        folded_new.run(&x).data(),
-        "typed fold_bn must be the same transform"
+    let unfolded_out = FloatEngine::new().run(&g, &x);
+    let folded = Network::from_graph(g).unwrap().fold_bn(None).unwrap();
+    let folded_out = folded.run(&x);
+    assert!(
+        unfolded_out.allclose(&folded_out, 1e-4, 1e-4),
+        "fold changed the function: max diff {}",
+        unfolded_out.max_abs_diff(&folded_out)
     );
-    // The legacy shim silently corrupts weights when applied twice; the
-    // typed pipeline refuses.
+    // Folding twice would corrupt weights; the typed pipeline refuses.
     assert!(matches!(
-        folded_new.fold_bn(None),
+        folded.fold_bn(None),
         Err(TransformError::AlreadyFolded)
     ));
 }
@@ -158,6 +140,8 @@ fn native_executor_matches_direct_engine_run() {
         .integerize();
     let exec = nid.to_executor(8).unwrap();
     assert_eq!(exec.input_shape(), &[1, 16, 16]);
+    // The executor's compiled plan fused every conv/linear epilogue.
+    assert!(exec.fused_nodes() > 0);
 
     let x = synth_input(&mut rng, 4);
     let qx = quantize_input(&x, EPS_IN);
@@ -166,5 +150,18 @@ fn native_executor_matches_direct_engine_run() {
         out.int_logits().unwrap().data(),
         nid.run(&qx).data(),
         "Executor and direct engine must agree bit-exactly"
+    );
+    // Repeated batches reuse pooled arenas; results stay identical.
+    let again = exec.run_batch(&ExecInput::i32(qx.clone())).unwrap();
+    assert_eq!(
+        again.int_logits().unwrap().data(),
+        out.int_logits().unwrap().data()
+    );
+    // Smaller batch variant through the same executor.
+    let qx1 = qx.slice_batch(0, 1);
+    let one = exec.run_batch(&ExecInput::i32(qx1)).unwrap();
+    assert_eq!(
+        one.int_logits().unwrap().data(),
+        &out.int_logits().unwrap().data()[..10]
     );
 }
