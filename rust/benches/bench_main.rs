@@ -16,7 +16,7 @@ use std::time::Duration;
 
 use nemo::coordinator::{ModelVariant, Server, ServerConfig};
 use nemo::data::SynthDigits;
-use nemo::engine::plan::IntArena;
+use nemo::engine::plan::{IntArena, PackedArena};
 use nemo::engine::{FloatEngine, IntPlan, IntegerEngine};
 use nemo::exec::{ExecInput, Executor, NativeIntExecutor};
 use nemo::graph::Graph;
@@ -52,7 +52,10 @@ fn main() {
     let filters: Vec<String> = std::env::args()
         .skip(1)
         .filter(|a| {
-            a.starts_with('E') || a.starts_with("perf") || a.starts_with("plan")
+            a.starts_with('E')
+                || a.starts_with("perf")
+                || a.starts_with("plan")
+                || a.starts_with("packed")
         })
         .collect();
     let run = |tag: &str| {
@@ -96,6 +99,9 @@ fn main() {
     }
     if run("plan") {
         plan_vs_interpreted();
+    }
+    if run("packed") {
+        packed_vs_i32();
     }
     if run("perf") {
         perf_microbench();
@@ -648,6 +654,128 @@ fn plan_vs_interpreted() {
     let doc = json::obj(vec![("plan_bench", Value::Arr(results))]);
     std::fs::write("BENCH_plan.json", json::write(&doc)).expect("write BENCH_plan.json");
     println!("  wrote BENCH_plan.json");
+}
+
+// ---------------------------------------------------------------------------
+// packed: precision-packed storage vs full-width i32 (DESIGN.md
+// §Precision propagation) — writes BENCH_packed.json
+// ---------------------------------------------------------------------------
+
+fn packed_vs_i32() {
+    println!("\n=== packed: u8/i8 packed storage vs i32 full width ===");
+    let mut rng = Rng::new(77);
+    let mut results: Vec<Value> = Vec::new();
+
+    // GEMM hot path: u8 activations x i8 weights -> i32 accumulate vs the
+    // i32 x i32 baseline on identical values (bit-identical outputs; the
+    // packed A/B operands stream at 1/4 the bytes).
+    for (m, k, n) in [(2048usize, 144usize, 32usize), (256, 256, 256)] {
+        let a32: Vec<i32> = (0..m * k).map(|_| rng.int(0, 256) as i32).collect();
+        let b32: Vec<i32> = (0..k * n).map(|_| rng.int(-128, 128) as i32).collect();
+        let a8: Vec<u8> = a32.iter().map(|v| *v as u8).collect();
+        let b8: Vec<i8> = b32.iter().map(|v| *v as i8).collect();
+        let mut out_i = vec![0i32; m * n];
+        let mut out_q = vec![0i32; m * n];
+        let (t_i32, _) = bench(2, 0.5, || {
+            ops::matmul_i32_into(&a32, &b32, m, k, n, &mut out_i);
+            std::hint::black_box(&out_i);
+        });
+        let (t_q, _) = bench(2, 0.5, || {
+            ops::matmul_q_fused_into(&a8, &b8, m, k, n, &|_, v| v, &mut out_q);
+            std::hint::black_box(&out_q);
+        });
+        assert_eq!(out_i, out_q, "packed GEMM diverged from i32 baseline");
+        let flops = 2.0 * (m * k * n) as f64;
+        println!(
+            "  gemm {m}x{k}x{n}: i32 {} ({:.2} Gop/s)  u8xi8 {} ({:.2} Gop/s)  -> {:.2}x",
+            fmt_time(t_i32),
+            flops / t_i32 / 1e9,
+            fmt_time(t_q),
+            flops / t_q / 1e9,
+            t_i32 / t_q
+        );
+        results.push(json::obj(vec![
+            ("workload", Value::Str(format!("gemm_{m}x{k}x{n}"))),
+            ("i32_s", Value::Num(t_i32)),
+            ("packed_s", Value::Num(t_q)),
+            ("speedup", Value::Num(t_i32 / t_q)),
+        ]));
+    }
+
+    // End-to-end: deployed synthnet, i32 plan vs packed plan, plus the
+    // packed serving executor.
+    let net = SynthNet::init(&mut rng);
+    let dep = deploy_pact(net.to_pact_graph(8), DeployOptions::default());
+    let plan = IntPlan::compile(&dep.id).expect("plan");
+    println!(
+        "  synthnet ID: packed steps over {} plan steps (input {})",
+        plan.steps().len(),
+        plan.input_precision().name()
+    );
+    for batch in [1usize, 16] {
+        let (x, _) = SynthDigits::eval_set(770 + batch as u64, batch);
+        let qx = quantize_input(&x, EPS_IN);
+        let wide = plan.layout(batch).expect("layout");
+        let packed = plan.packed_layout(batch).expect("packed layout");
+        let mut arena = IntArena::new();
+        let mut parena = PackedArena::new();
+        let (t_wide, _) = bench(2, 0.7, || {
+            std::hint::black_box(plan.execute(&wide, &mut arena, &qx));
+        });
+        let (t_packed, _) = bench(2, 0.7, || {
+            std::hint::black_box(plan.execute_packed(&packed, &mut parena, &qx));
+        });
+        assert_eq!(
+            plan.execute(&wide, &mut arena, &qx),
+            plan.execute_packed(&packed, &mut parena, &qx),
+            "packed plan diverged"
+        );
+        let speedup = t_wide / t_packed;
+        println!(
+            "  batch {batch:>2}: i32 {} ({:>7.0} img/s)  packed {} ({:>7.0} img/s)  -> {speedup:.2}x  [arena {} KiB -> {} KiB]",
+            fmt_time(t_wide),
+            batch as f64 / t_wide,
+            fmt_time(t_packed),
+            batch as f64 / t_packed,
+            wide.arena_bytes() / 1024,
+            packed.arena_bytes() / 1024,
+        );
+        results.push(json::obj(vec![
+            ("workload", Value::Str("synthnet_id_e2e".into())),
+            ("batch", Value::Int(batch as i64)),
+            ("i32_s", Value::Num(t_wide)),
+            ("packed_s", Value::Num(t_packed)),
+            ("speedup", Value::Num(speedup)),
+            ("packed_imgs_per_s", Value::Num(batch as f64 / t_packed)),
+            ("i32_arena_bytes", Value::Int(wide.arena_bytes() as i64)),
+            ("packed_arena_bytes", Value::Int(packed.arena_bytes() as i64)),
+        ]));
+    }
+
+    // Packed serving: the executor compiles the packed path end-to-end.
+    let exec = NativeIntExecutor::new(dep.id.clone(), 16).expect("executor");
+    assert!(exec.packed(), "deployed synthnet must serve packed");
+    let (x, _) = SynthDigits::eval_set(771, 16);
+    let input = ExecInput::i32(quantize_input(&x, EPS_IN));
+    let (t_exec, _) = bench(2, 0.7, || {
+        std::hint::black_box(exec.run_batch(&input).expect("run"));
+    });
+    println!(
+        "  NativeIntExecutor b=16 (packed serving): {} ({:.0} img/s)",
+        fmt_time(t_exec),
+        16.0 / t_exec
+    );
+    results.push(json::obj(vec![
+        ("workload", Value::Str("synthnet_id_executor_packed".into())),
+        ("batch", Value::Int(16)),
+        ("packed_s", Value::Num(t_exec)),
+        ("packed_imgs_per_s", Value::Num(16.0 / t_exec)),
+    ]));
+
+    let doc = json::obj(vec![("packed_bench", Value::Arr(results))]);
+    std::fs::write("BENCH_packed.json", json::write(&doc))
+        .expect("write BENCH_packed.json");
+    println!("  wrote BENCH_packed.json");
 }
 
 // ---------------------------------------------------------------------------

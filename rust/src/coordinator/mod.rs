@@ -22,7 +22,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::exec::{Arg, ExecInput, Executor};
-use crate::tensor::{Tensor, TensorI};
+use crate::tensor::{Tensor, TensorF, TensorI};
 
 pub use metrics::Metrics;
 
@@ -321,7 +321,17 @@ fn worker_loop(
             Ok(out) => {
                 let t = match out.logits {
                     Arg::I32(t) => t,
-                    Arg::F32(t) => t.map(|v| v as i32),
+                    Arg::F32(t) => match integral_logits(&t) {
+                        Ok(t) => t,
+                        Err(msg) => {
+                            let msg = format!(
+                                "executor '{}' broke the integer logits protocol: {msg}",
+                                job.exec.name()
+                            );
+                            fail_job(&job, &metrics, &msg);
+                            continue;
+                        }
+                    },
                 };
                 if t.shape().first().copied().unwrap_or(0) < job.n_real {
                     let msg = format!(
@@ -359,6 +369,36 @@ fn worker_loop(
     }
 }
 
+/// Convert an f32 logits batch to the integer image the request protocol
+/// carries. Per the [`ModelVariant::new`] contract, f32 logits are
+/// tolerated only when their values are already integers (some XLA
+/// lowerings emit integer math as f32): each value is rounded to the
+/// nearest integer, and anything more than 1e-6 from an integer is a
+/// protocol violation reported loudly — never truncated silently.
+fn integral_logits(t: &TensorF) -> Result<TensorI, String> {
+    let mut data = Vec::with_capacity(t.len());
+    for &v in t.data() {
+        let r = v.round();
+        if !v.is_finite() || (v - r).abs() > 1e-6 {
+            return Err(format!(
+                "f32 logit {v} is not integer-valued (>1e-6 from an integer); \
+                 fractional-logit float backends do not fit the integer \
+                 request protocol"
+            ));
+        }
+        // Integer-valued but outside i32: `as i32` would saturate — the
+        // same silent corruption this function exists to prevent.
+        let ri = r as i64;
+        if !(i32::MIN as i64..=i32::MAX as i64).contains(&ri) {
+            return Err(format!(
+                "f32 logit {v} overflows the i32 integer-image range"
+            ));
+        }
+        data.push(ri as i32);
+    }
+    Ok(Tensor::from_vec(t.shape(), data))
+}
+
 fn fail_job(job: &Job, metrics: &Arc<Mutex<Metrics>>, msg: &str) {
     {
         let mut m = metrics.lock().unwrap();
@@ -378,5 +418,35 @@ mod tests {
         let cfg = ServerConfig::default();
         assert!(cfg.max_batch >= 1);
         assert!(cfg.n_workers >= 1);
+    }
+
+    #[test]
+    fn integral_logits_rounds_to_nearest() {
+        // v as i32 used to truncate: 2.9999997 -> 2. Round instead.
+        let t = TensorF::from_vec(&[1, 4], vec![2.9999997, -1.0000001, 0.0, 41.0]);
+        let q = integral_logits(&t).unwrap();
+        assert_eq!(q.data(), &[3, -1, 0, 41]);
+    }
+
+    #[test]
+    fn integral_logits_rejects_fractional_values() {
+        let t = TensorF::from_vec(&[1, 2], vec![1.0, 1.5]);
+        let err = integral_logits(&t).unwrap_err();
+        assert!(err.contains("not integer-valued"), "{err}");
+        let t = TensorF::from_vec(&[1, 1], vec![f32::NAN]);
+        assert!(integral_logits(&t).is_err());
+        let t = TensorF::from_vec(&[1, 1], vec![1.0 + 2e-6]);
+        assert!(integral_logits(&t).is_err());
+    }
+
+    #[test]
+    fn integral_logits_rejects_i32_overflow() {
+        // 3e9 is exactly integral in f32 but outside i32; `as i32` would
+        // silently saturate to i32::MAX.
+        let t = TensorF::from_vec(&[1, 1], vec![3e9]);
+        let err = integral_logits(&t).unwrap_err();
+        assert!(err.contains("overflows"), "{err}");
+        let t = TensorF::from_vec(&[1, 1], vec![-3e9]);
+        assert!(integral_logits(&t).is_err());
     }
 }

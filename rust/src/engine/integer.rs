@@ -16,7 +16,7 @@
 //!   walk the graph node by node with one tensor per node — the unfused
 //!   diagnostic path the plan is verified against.
 
-use crate::engine::plan::{IntArena, IntPlan};
+use crate::engine::plan::{IntArena, IntPlan, PackedArena};
 use crate::graph::int::{IntGraph, IntOp};
 use crate::tensor::ops;
 use crate::tensor::{Tensor, TensorI};
@@ -38,6 +38,32 @@ impl IntegerEngine {
             .expect("integer plan layout");
         let mut arena = IntArena::new();
         plan.execute(&layout, &mut arena, qx)
+    }
+
+    /// Run through the precision-packed plan path: sub-word nodes stream
+    /// u8/i8 storage (DESIGN.md §Precision propagation). Bit-identical to
+    /// [`Self::run`] for inputs inside the deployed input spec; inputs
+    /// outside the stamped input precision panic loudly here (release
+    /// builds would otherwise wrap them while narrowing). Serving
+    /// precompiles this path in [`crate::exec::NativeIntExecutor`], which
+    /// rejects out-of-range requests with an error instead.
+    pub fn run_packed(&self, g: &IntGraph, qx: &TensorI) -> TensorI {
+        let plan = IntPlan::compile(g).expect("integer graph failed to plan");
+        let p = plan.input_precision();
+        if let Some(v) = p.find_out_of_range(qx.data()) {
+            panic!(
+                "run_packed: input value {v} outside the deployed input \
+                 precision {} range [{}, {}]",
+                p.name(),
+                p.min_val(),
+                p.max_val()
+            );
+        }
+        let layout = plan
+            .packed_layout(qx.shape().first().copied().unwrap_or(0))
+            .expect("integer packed layout");
+        let mut arena = PackedArena::new();
+        plan.execute_packed(&layout, &mut arena, qx)
     }
 
     /// Unfused reference interpreter: one tensor per node, no fusion, no
@@ -226,9 +252,22 @@ mod tests {
         // channel 0: (10*2*3 + 10) >> 1 = 35 ; channel 1: (10*-1 -10)>>1 -> clip 0
         assert_eq!(out.at4(0, 0, 0, 0), 35);
         assert_eq!(out.at4(0, 1, 0, 0), 0);
-        // fused plan path == unfused interpreter
+        // fused plan path == unfused interpreter == packed path
         let interp = IntegerEngine::new().run_interpreted(&g, &qx);
         assert_eq!(out, interp);
+        assert_eq!(IntegerEngine::new().run_packed(&g, &qx), interp);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside the deployed input precision")]
+    fn run_packed_rejects_out_of_range_inputs() {
+        let mut g = IntGraph::default();
+        let spec = QuantSpec { eps: 1.0, lo: 0, hi: 255 };
+        let x = g.push("in", IntOp::Input { shape: vec![2], spec }, &[]);
+        let wq = Tensor::from_vec(&[2, 2], vec![1, 0, 0, 1]);
+        g.push("fc", IntOp::LinearInt { wq, bias_q: None }, &[x]);
+        let qx = Tensor::from_vec(&[1, 2], vec![0, 300]); // 300 > spec hi
+        let _ = IntegerEngine::new().run_packed(&g, &qx);
     }
 
     #[test]

@@ -23,4 +23,4 @@ pub mod plan;
 
 pub use float::FloatEngine;
 pub use integer::IntegerEngine;
-pub use plan::{FloatPlan, IntPlan, PlanError, PlanLayout};
+pub use plan::{FloatPlan, IntPlan, PackedArena, PlanError, PlanLayout};

@@ -31,8 +31,9 @@ use crate::graph::shape::{self, ShapeError};
 use crate::graph::{Graph, NodeId, Op};
 use crate::quant::bn::{BnQuant, Thresholds};
 use crate::quant::requant::Requant;
-use crate::quant::QuantSpec;
-use crate::tensor::{ops, Tensor, TensorF, TensorI};
+use crate::quant::{Precision, QuantSpec};
+use crate::tensor::ops::PackedElem;
+use crate::tensor::{ops, QTensor, Tensor, TensorF, TensorI};
 
 pub type StepId = usize;
 
@@ -93,6 +94,122 @@ impl<T: Copy + Default> Arena<T> {
     }
 }
 
+/// One precision-tagged buffer of a [`PackedArena`] slot. The layout
+/// fixes each slot's precision; `prepare` re-types a slot only when the
+/// layout demands it (first use / plan change), so the steady state is
+/// allocation-free exactly like [`Arena`].
+#[derive(Debug)]
+pub enum PackedBuf {
+    U8(Vec<u8>),
+    I8(Vec<i8>),
+    I32(Vec<i32>),
+}
+
+impl Default for PackedBuf {
+    fn default() -> Self {
+        PackedBuf::I32(Vec::new())
+    }
+}
+
+impl PackedBuf {
+    fn new(p: Precision, len: usize) -> Self {
+        match p {
+            Precision::U8 => PackedBuf::U8(vec![0; len]),
+            Precision::I8 => PackedBuf::I8(vec![0; len]),
+            Precision::I32 => PackedBuf::I32(vec![0; len]),
+        }
+    }
+
+    pub fn precision(&self) -> Precision {
+        match self {
+            PackedBuf::U8(_) => Precision::U8,
+            PackedBuf::I8(_) => Precision::I8,
+            PackedBuf::I32(_) => Precision::I32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            PackedBuf::U8(v) => v.len(),
+            PackedBuf::I8(v) => v.len(),
+            PackedBuf::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Widen the first `n` elements to i32 (traces, final output).
+    fn widen_prefix(&self, n: usize) -> Vec<i32> {
+        match self {
+            PackedBuf::U8(v) => v[..n].iter().map(|x| *x as i32).collect(),
+            PackedBuf::I8(v) => v[..n].iter().map(|x| *x as i32).collect(),
+            PackedBuf::I32(v) => v[..n].to_vec(),
+        }
+    }
+
+    /// Grow to at least `len` elements (the single grow policy).
+    fn grow_to(&mut self, len: usize) {
+        match self {
+            PackedBuf::U8(v) => {
+                if v.len() < len {
+                    v.resize(len, 0);
+                }
+            }
+            PackedBuf::I8(v) => {
+                if v.len() < len {
+                    v.resize(len, 0);
+                }
+            }
+            PackedBuf::I32(v) => {
+                if v.len() < len {
+                    v.resize(len, 0);
+                }
+            }
+        }
+    }
+}
+
+/// The packed counterpart of [`IntArena`]: slots are byte-sized to their
+/// stamped precision (a u8 activation slot costs 1 byte/element, not 4).
+/// Only grows, like [`Arena`]; serves any batch of its plan.
+#[derive(Default)]
+pub struct PackedArena {
+    bufs: Vec<PackedBuf>,
+}
+
+impl PackedArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Grow (and, on first use, type) buffers to satisfy `layout`.
+    fn prepare(&mut self, layout: &PlanLayout) {
+        if self.bufs.len() < layout.slot_lens.len() {
+            self.bufs.resize_with(layout.slot_lens.len(), PackedBuf::default);
+        }
+        for (i, (&len, &p)) in
+            layout.slot_lens.iter().zip(&layout.slot_prec).enumerate()
+        {
+            let buf = &mut self.bufs[i];
+            if buf.precision() != p {
+                *buf = PackedBuf::new(p, len);
+            } else {
+                buf.grow_to(len);
+            }
+        }
+    }
+
+    /// Total bytes currently held (diagnostics).
+    pub fn bytes(&self) -> usize {
+        self.bufs
+            .iter()
+            .map(|b| b.len() * b.precision().bytes())
+            .sum()
+    }
+}
+
 /// Per-batch-size execution layout: full shapes, arena slot of every step
 /// output, conv scratch slots, and the required slot lengths.
 #[derive(Clone, Debug)]
@@ -101,8 +218,14 @@ pub struct PlanLayout {
     shapes: Vec<Vec<usize>>,
     out_slot: Vec<usize>,
     scratch: Vec<Vec<usize>>,
-    /// Required length of each arena slot.
+    /// Required length of each arena slot (elements, not bytes).
     pub slot_lens: Vec<usize>,
+    /// Storage precision of each arena slot (always `I32` for layouts of
+    /// the full-width/float paths; mixed for packed layouts).
+    slot_prec: Vec<Precision>,
+    /// Whether this layout was built by `packed_layout` (the input gets a
+    /// real slot and slots carry mixed precisions).
+    packed: bool,
 }
 
 impl PlanLayout {
@@ -111,10 +234,24 @@ impl PlanLayout {
         self.slot_lens.iter().sum()
     }
 
+    /// Total arena bytes under the precision byte-sizing rule — the
+    /// number the packed path shrinks.
+    pub fn arena_bytes(&self) -> usize {
+        self.slot_lens
+            .iter()
+            .zip(&self.slot_prec)
+            .map(|(l, p)| l * p.bytes())
+            .sum()
+    }
+
     /// Number of distinct arena slots (vs. one buffer per node in the
     /// interpreter).
     pub fn arena_slots(&self) -> usize {
         self.slot_lens.len()
+    }
+
+    pub fn is_packed(&self) -> bool {
+        self.packed
     }
 }
 
@@ -122,18 +259,21 @@ impl PlanLayout {
 struct StepSpec {
     inputs: Vec<StepId>,
     out_len: usize,
-    scratch: Vec<usize>,
+    out_prec: Precision,
+    scratch: Vec<(usize, Precision)>,
     is_input: bool,
 }
 
 /// Liveness-driven slot assignment: walk the schedule once, allocating
 /// output/scratch slots from a free list and recycling a slot as soon as
-/// its last reader has executed. Returns (out_slot, scratch_slots,
-/// slot_lens).
+/// its last reader has executed. A slot only ever serves one storage
+/// precision (free-list reuse is per precision class), so packed arenas
+/// can fix each slot's element type up front. Returns (out_slot,
+/// scratch_slots, slot_lens, slot_prec).
 fn assign_slots(
     specs: &[StepSpec],
     output: StepId,
-) -> (Vec<usize>, Vec<Vec<usize>>, Vec<usize>) {
+) -> (Vec<usize>, Vec<Vec<usize>>, Vec<usize>, Vec<Precision>) {
     let n = specs.len();
     let mut last_use: Vec<usize> = (0..n).collect();
     for (s, spec) in specs.iter().enumerate() {
@@ -143,11 +283,21 @@ fn assign_slots(
     }
     last_use[output] = usize::MAX; // the network output is read after the loop
 
-    fn alloc(len: usize, slot_lens: &mut Vec<usize>, free: &mut Vec<usize>) -> usize {
-        // Best fit: the smallest free slot already >= len; otherwise the
-        // largest free slot (least growth); otherwise a fresh slot.
+    fn alloc(
+        len: usize,
+        prec: Precision,
+        slot_lens: &mut Vec<usize>,
+        slot_prec: &mut Vec<Precision>,
+        free: &mut Vec<usize>,
+    ) -> usize {
+        // Best fit among free slots of the same precision: the smallest
+        // free slot already >= len; otherwise the largest (least growth);
+        // otherwise a fresh slot.
         let mut best: Option<usize> = None;
         for (fi, &slot) in free.iter().enumerate() {
+            if slot_prec[slot] != prec {
+                continue;
+            }
             let better = match best {
                 None => true,
                 Some(b) => {
@@ -174,6 +324,7 @@ fn assign_slots(
             }
             None => {
                 slot_lens.push(len);
+                slot_prec.push(prec);
                 slot_lens.len() - 1
             }
         }
@@ -182,16 +333,18 @@ fn assign_slots(
     let mut out_slot = vec![INPUT_SLOT; n];
     let mut scratch_slots: Vec<Vec<usize>> = vec![Vec::new(); n];
     let mut slot_lens: Vec<usize> = Vec::new();
+    let mut slot_prec: Vec<Precision> = Vec::new();
     let mut free: Vec<usize> = Vec::new();
     for (s, spec) in specs.iter().enumerate() {
         if !spec.is_input {
             // Scratch and output are allocated while every input is still
             // live, so a step can never alias a buffer it reads.
-            for &sl in &spec.scratch {
-                let slot = alloc(sl, &mut slot_lens, &mut free);
+            for &(sl, sp) in &spec.scratch {
+                let slot = alloc(sl, sp, &mut slot_lens, &mut slot_prec, &mut free);
                 scratch_slots[s].push(slot);
             }
-            out_slot[s] = alloc(spec.out_len, &mut slot_lens, &mut free);
+            out_slot[s] =
+                alloc(spec.out_len, spec.out_prec, &mut slot_lens, &mut slot_prec, &mut free);
             // Scratch dies with the step.
             for &slot in &scratch_slots[s] {
                 free.push(slot);
@@ -206,7 +359,7 @@ fn assign_slots(
             }
         }
     }
-    (out_slot, scratch_slots, slot_lens)
+    (out_slot, scratch_slots, slot_lens, slot_prec)
 }
 
 /// Read a step's output: the request input for Input steps, its arena
@@ -294,10 +447,31 @@ fn int_epi_fn<'a>(
     }
 }
 
+/// Weight storage for a compiled GEMM step: the single held copy is
+/// i8-packed whenever every value fits (true for any `wbits <= 8`
+/// symmetric grid — 1 byte/element on BOTH execution paths), and stays
+/// i32 otherwise (the wide-node fallback). Never `U8`: symmetric weight
+/// grids that fit a byte always fit i8.
+fn pack_weights(wq: &TensorI) -> QTensor {
+    let fits = wq
+        .data()
+        .iter()
+        .all(|v| (i8::MIN as i32..=i8::MAX as i32).contains(v));
+    if fits {
+        QTensor::I8(Tensor::from_vec(
+            wq.shape(),
+            wq.data().iter().map(|v| *v as i8).collect(),
+        ))
+    } else {
+        QTensor::I32(wq.clone())
+    }
+}
+
 enum IntStepOp {
     Input,
     Conv {
-        wq: TensorI,
+        /// Weight matrix in its packed storage (see [`pack_weights`]).
+        wq: QTensor,
         bias_q: Option<Vec<i64>>,
         kh: usize,
         kw: usize,
@@ -306,7 +480,7 @@ enum IntStepOp {
         epi: IntEpilogue,
     },
     Linear {
-        wq: TensorI,
+        wq: QTensor,
         bias_q: Option<Vec<i64>>,
         epi: IntEpilogue,
     },
@@ -344,13 +518,19 @@ impl IntStep {
 
 /// A compiled integer-graph execution plan. Compile once per graph;
 /// derive a [`PlanLayout`] per batch size; execute with a (pooled)
-/// [`IntArena`].
+/// [`IntArena`] — or, when the graph carries sub-word precision stamps,
+/// derive a [`Self::packed_layout`] and execute with a [`PackedArena`]
+/// via [`Self::execute_packed`] (bit-identical, 1 byte/element on packed
+/// steps).
 pub struct IntPlan {
     steps: Vec<IntStep>,
     output: StepId,
     /// Per-step output shape without the batch dimension.
     sample_shapes: Vec<Vec<usize>>,
+    /// Per-step output storage precision (the anchor node's stamp).
+    step_prec: Vec<Precision>,
     input_shape: Vec<usize>,
+    input_prec: Precision,
     fused_away: usize,
 }
 
@@ -365,6 +545,7 @@ impl IntPlan {
             }
         };
         let shapes1 = shape::infer_int(g, 1)?;
+        let node_prec = shape::infer_precision(g)?;
         let n = g.nodes.len();
         let mut fanout = vec![0usize; n];
         let mut consumers: Vec<Vec<NodeId>> = vec![Vec::new(); n];
@@ -413,6 +594,7 @@ impl IntPlan {
         let mut node_step: Vec<Option<StepId>> = vec![None; n];
         let mut steps: Vec<IntStep> = Vec::new();
         let mut sample_shapes: Vec<Vec<usize>> = Vec::new();
+        let mut step_prec: Vec<Precision> = Vec::new();
         let mut fused_away = 0usize;
         for nd in &g.nodes {
             if absorbed[nd.id] {
@@ -424,7 +606,7 @@ impl IntPlan {
                 IntOp::ConvInt { wq, bias_q, kh, kw, stride, pad, .. } => {
                     let (epi, _) = absorb(&mut absorbed, &mut chain, nd.id);
                     IntStepOp::Conv {
-                        wq: wq.clone(),
+                        wq: pack_weights(wq),
                         bias_q: bias_q.clone(),
                         kh: *kh,
                         kw: *kw,
@@ -436,7 +618,7 @@ impl IntPlan {
                 IntOp::LinearInt { wq, bias_q } => {
                     let (epi, _) = absorb(&mut absorbed, &mut chain, nd.id);
                     IntStepOp::Linear {
-                        wq: wq.clone(),
+                        wq: pack_weights(wq),
                         bias_q: bias_q.clone(),
                         epi,
                     }
@@ -465,6 +647,7 @@ impl IntPlan {
                 .map(|&i| node_step[i].expect("graph is topological"))
                 .collect();
             sample_shapes.push(shapes1[anchor][1..].to_vec());
+            step_prec.push(node_prec[anchor]);
             steps.push(IntStep {
                 op,
                 inputs,
@@ -478,13 +661,33 @@ impl IntPlan {
             steps,
             output,
             sample_shapes,
+            step_prec,
             input_shape,
+            input_prec: node_prec[0],
             fused_away,
         })
     }
 
     pub fn input_shape(&self) -> &[usize] {
         &self.input_shape
+    }
+
+    /// Storage precision of the request input image.
+    pub fn input_precision(&self) -> Precision {
+        self.input_prec
+    }
+
+    /// Per-step output storage precision (anchor node stamps).
+    pub fn step_precisions(&self) -> &[Precision] {
+        &self.step_prec
+    }
+
+    /// Whether any step (or the input) packs below full i32 width — if
+    /// not, the packed path degenerates to the i32 path plus two copies
+    /// and executors should prefer [`Self::layout`]/[`Self::execute`].
+    pub fn has_packed_steps(&self) -> bool {
+        self.input_prec != Precision::I32
+            || self.step_prec.iter().any(|p| *p != Precision::I32)
     }
 
     pub fn steps(&self) -> &[IntStep] {
@@ -496,12 +699,12 @@ impl IntPlan {
         self.fused_away
     }
 
-    /// Derive the per-batch-size buffer layout.
-    pub fn layout(&self, batch: usize) -> Result<PlanLayout, PlanError> {
+    /// Batch-expanded shapes shared by both layout flavours.
+    fn batch_shapes(&self, batch: usize) -> Result<Vec<Vec<usize>>, PlanError> {
         if batch == 0 {
             return Err(PlanError::Invalid("batch size must be >= 1".into()));
         }
-        let shapes: Vec<Vec<usize>> = self
+        Ok(self
             .sample_shapes
             .iter()
             .map(|ss| {
@@ -510,7 +713,13 @@ impl IntPlan {
                 s.extend_from_slice(ss);
                 s
             })
-            .collect();
+            .collect())
+    }
+
+    /// Derive the per-batch-size buffer layout for the full-width i32
+    /// execution path ([`Self::execute`]).
+    pub fn layout(&self, batch: usize) -> Result<PlanLayout, PlanError> {
+        let shapes = self.batch_shapes(batch)?;
         let specs: Vec<StepSpec> = self
             .steps
             .iter()
@@ -521,20 +730,84 @@ impl IntPlan {
                     IntStepOp::Conv { wq, .. } => {
                         let rows = out_len / wq.shape()[1];
                         // im2col patches + GEMM row output
-                        vec![rows * wq.shape()[0], out_len]
+                        vec![
+                            (rows * wq.shape()[0], Precision::I32),
+                            (out_len, Precision::I32),
+                        ]
                     }
                     _ => Vec::new(),
                 };
                 StepSpec {
                     inputs: st.inputs.clone(),
                     out_len,
+                    out_prec: Precision::I32,
                     scratch,
                     is_input: matches!(st.op, IntStepOp::Input),
                 }
             })
             .collect();
-        let (out_slot, scratch, slot_lens) = assign_slots(&specs, self.output);
-        Ok(PlanLayout { batch, shapes, out_slot, scratch, slot_lens })
+        let (out_slot, scratch, slot_lens, slot_prec) =
+            assign_slots(&specs, self.output);
+        Ok(PlanLayout {
+            batch,
+            shapes,
+            out_slot,
+            scratch,
+            slot_lens,
+            slot_prec,
+            packed: false,
+        })
+    }
+
+    /// Derive the per-batch-size buffer layout for the packed execution
+    /// path ([`Self::execute_packed`]): every step output slot is
+    /// byte-sized to its stamped precision, conv scratch follows its
+    /// operands (u8 im2col patches for a u8 input), and the Input step
+    /// gets a real slot holding the narrowed request image (Add needs no
+    /// extra scratch — its output slot is always full-width I32 and
+    /// doubles as the Eq. 24 accumulator).
+    pub fn packed_layout(&self, batch: usize) -> Result<PlanLayout, PlanError> {
+        let shapes = self.batch_shapes(batch)?;
+        let specs: Vec<StepSpec> = self
+            .steps
+            .iter()
+            .enumerate()
+            .map(|(i, st)| {
+                let out_len: usize = shapes[i].iter().product();
+                let scratch = match &st.op {
+                    IntStepOp::Conv { wq, .. } => {
+                        let rows = out_len / wq.shape()[1];
+                        // im2col patches in the input's precision, GEMM
+                        // rows in the output's.
+                        vec![
+                            (rows * wq.shape()[0], self.step_prec[st.inputs[0]]),
+                            (out_len, self.step_prec[i]),
+                        ]
+                    }
+                    _ => Vec::new(),
+                };
+                StepSpec {
+                    inputs: st.inputs.clone(),
+                    out_len,
+                    out_prec: self.step_prec[i],
+                    scratch,
+                    // The packed path materializes the narrowed input in
+                    // its own slot instead of reading the i32 request.
+                    is_input: false,
+                }
+            })
+            .collect();
+        let (out_slot, scratch, slot_lens, slot_prec) =
+            assign_slots(&specs, self.output);
+        Ok(PlanLayout {
+            batch,
+            shapes,
+            out_slot,
+            scratch,
+            slot_lens,
+            slot_prec,
+            packed: true,
+        })
     }
 
     /// Execute the plan on a batch. `layout.batch` must match `qx`.
@@ -568,6 +841,7 @@ impl IntPlan {
         qx: &TensorI,
         mut trace: Option<&mut Vec<(NodeId, TensorI)>>,
     ) -> TensorI {
+        assert!(!layout.packed, "i32 execute needs a layout(), not packed_layout()");
         assert_eq!(layout.batch, qx.shape()[0], "layout batch != input batch");
         assert_eq!(
             &qx.shape()[1..],
@@ -580,7 +854,7 @@ impl IntPlan {
             let out_len: usize = out_shape.iter().product();
             match &st.op {
                 IntStepOp::Input => {}
-                IntStepOp::Conv { wq, bias_q, kh, kw, stride, pad, epi } => {
+                IntStepOp::Conv { wq, bias_q, kh, kw, stride, pad, epi, .. } => {
                     let (b, c, h, w) = {
                         let s = &layout.shapes[st.inputs[0]];
                         (s[0], s[1], s[2], s[3])
@@ -600,15 +874,7 @@ impl IntPlan {
                     }
                     let mut rows = std::mem::take(&mut arena.bufs[rows_slot]);
                     let epi_fn = int_epi_fn(bias_q.as_deref(), epi);
-                    ops::matmul_i32_fused_into(
-                        &cols[..m * kdim],
-                        wq.data(),
-                        m,
-                        kdim,
-                        co,
-                        &epi_fn,
-                        &mut rows,
-                    );
+                    gemm_wide(&cols[..m * kdim], wq, m, kdim, co, &epi_fn, &mut rows);
                     let mut out = std::mem::take(&mut arena.bufs[out_slot]);
                     ops::rows_to_nchw_into(
                         &rows[..m * co],
@@ -622,7 +888,7 @@ impl IntPlan {
                     arena.bufs[rows_slot] = rows;
                     arena.bufs[out_slot] = out;
                 }
-                IntStepOp::Linear { wq, bias_q, epi } => {
+                IntStepOp::Linear { wq, bias_q, epi, .. } => {
                     let in_shape = &layout.shapes[st.inputs[0]];
                     let (bsz, fi) = (in_shape[0], in_shape[1]);
                     let fo = wq.shape()[1];
@@ -631,15 +897,7 @@ impl IntPlan {
                     {
                         let xin = slot_data(arena, layout, st.inputs[0], qx);
                         let epi_fn = int_epi_fn(bias_q.as_deref(), epi);
-                        ops::matmul_i32_fused_into(
-                            &xin[..bsz * fi],
-                            wq.data(),
-                            bsz,
-                            fi,
-                            fo,
-                            &epi_fn,
-                            &mut out,
-                        );
+                        gemm_wide(&xin[..bsz * fi], wq, bsz, fi, fo, &epi_fn, &mut out);
                     }
                     arena.bufs[out_slot] = out;
                 }
@@ -740,6 +998,448 @@ impl IntPlan {
             f(in_shape, xin, &mut out[..out_len]);
         }
         arena.bufs[out_slot] = out;
+    }
+
+    // -- packed execution ---------------------------------------------------
+
+    /// Execute the plan with precision-packed buffers: sub-word steps
+    /// stream u8/i8 images (1 byte/element) and the fused GEMM epilogue
+    /// narrows directly into the packed output; wide (i32) steps run
+    /// exactly as in [`Self::execute`]. Bit-identical to the i32 path and
+    /// the interpreter (tests/plan.rs property tests). `layout` must come
+    /// from [`Self::packed_layout`].
+    pub fn execute_packed(
+        &self,
+        layout: &PlanLayout,
+        arena: &mut PackedArena,
+        qx: &TensorI,
+    ) -> TensorI {
+        self.execute_packed_inner(layout, arena, qx, None)
+    }
+
+    /// Packed execution with every step output widened into the trace
+    /// (pairs with the interpreter's `run_traced`, like
+    /// [`Self::execute_traced`]).
+    pub fn execute_packed_traced(
+        &self,
+        layout: &PlanLayout,
+        arena: &mut PackedArena,
+        qx: &TensorI,
+    ) -> Vec<(NodeId, TensorI)> {
+        let mut trace = Vec::with_capacity(self.steps.len());
+        self.execute_packed_inner(layout, arena, qx, Some(&mut trace));
+        trace
+    }
+
+    fn execute_packed_inner(
+        &self,
+        layout: &PlanLayout,
+        arena: &mut PackedArena,
+        qx: &TensorI,
+        mut trace: Option<&mut Vec<(NodeId, TensorI)>>,
+    ) -> TensorI {
+        assert!(layout.packed, "packed execute needs a packed_layout()");
+        assert_eq!(layout.batch, qx.shape()[0], "layout batch != input batch");
+        assert_eq!(
+            &qx.shape()[1..],
+            &self.input_shape[..],
+            "input sample shape mismatch"
+        );
+        arena.prepare(layout);
+        for (sid, st) in self.steps.iter().enumerate() {
+            let out_shape = &layout.shapes[sid];
+            let out_len: usize = out_shape.iter().product();
+            match &st.op {
+                IntStepOp::Input => {
+                    // Narrow the i32 request image into the packed input
+                    // slot. The input spec's range proof covers this;
+                    // executors validate untrusted values up front.
+                    let out_slot = layout.out_slot[sid];
+                    let mut out = std::mem::take(&mut arena.bufs[out_slot]);
+                    narrow_q(qx.data(), &mut out, out_len);
+                    arena.bufs[out_slot] = out;
+                }
+                IntStepOp::Conv { wq, bias_q, kh, kw, stride, pad, epi } => {
+                    let (b, c, h, w) = {
+                        let s = &layout.shapes[st.inputs[0]];
+                        (s[0], s[1], s[2], s[3])
+                    };
+                    let co = wq.shape()[1];
+                    let kdim = wq.shape()[0];
+                    let m = out_len / co;
+                    let cols_slot = layout.scratch[sid][0];
+                    let rows_slot = layout.scratch[sid][1];
+                    let out_slot = layout.out_slot[sid];
+                    let mut cols = std::mem::take(&mut arena.bufs[cols_slot]);
+                    {
+                        let xin = &arena.bufs[layout.out_slot[st.inputs[0]]];
+                        im2col_q(xin, &mut cols, b, c, h, w, *kh, *kw, *stride, *pad);
+                    }
+                    let mut rows = std::mem::take(&mut arena.bufs[rows_slot]);
+                    {
+                        let epi_fn = int_epi_fn(bias_q.as_deref(), epi);
+                        gemm_q(&cols, wq, m, kdim, co, &epi_fn, &mut rows);
+                    }
+                    let mut out = std::mem::take(&mut arena.bufs[out_slot]);
+                    scatter_q(&rows, &mut out, b, co, out_shape[2], out_shape[3]);
+                    arena.bufs[cols_slot] = cols;
+                    arena.bufs[rows_slot] = rows;
+                    arena.bufs[out_slot] = out;
+                }
+                IntStepOp::Linear { wq, bias_q, epi } => {
+                    let in_shape = &layout.shapes[st.inputs[0]];
+                    let (bsz, fi) = (in_shape[0], in_shape[1]);
+                    let fo = wq.shape()[1];
+                    let out_slot = layout.out_slot[sid];
+                    let mut out = std::mem::take(&mut arena.bufs[out_slot]);
+                    {
+                        let xin = &arena.bufs[layout.out_slot[st.inputs[0]]];
+                        let epi_fn = int_epi_fn(bias_q.as_deref(), epi);
+                        gemm_q(xin, wq, bsz, fi, fo, &epi_fn, &mut out);
+                    }
+                    arena.bufs[out_slot] = out;
+                }
+                IntStepOp::Bn { bn } => {
+                    self.unary_q(layout, arena, sid, |in_shape, xin, out| {
+                        let (c, hw) = channel_stride(in_shape);
+                        map_q(xin, out, out_len, |i, v| {
+                            ops::narrow(bn.apply((i / hw) % c, v as i64))
+                        });
+                    });
+                }
+                IntStepOp::Requant { rq } => {
+                    self.unary_q(layout, arena, sid, |_, xin, out| {
+                        map_q(xin, out, out_len, |_, v| ops::narrow(rq.apply(v as i64)));
+                    });
+                }
+                IntStepOp::Thresh { th } => {
+                    self.unary_q(layout, arena, sid, |in_shape, xin, out| {
+                        let (c, hw) = channel_stride(in_shape);
+                        map_q(xin, out, out_len, |i, v| {
+                            ops::narrow(th.apply((i / hw) % c, v as i64))
+                        });
+                    });
+                }
+                IntStepOp::AvgPool { k, d } => {
+                    self.unary_q(layout, arena, sid, |in_shape, xin, out| {
+                        let (b, c, h, w) =
+                            (in_shape[0], in_shape[1], in_shape[2], in_shape[3]);
+                        avgpool_q(xin, out, b, c, h, w, *k, *d);
+                    });
+                }
+                IntStepOp::MaxPool { k } => {
+                    self.unary_q(layout, arena, sid, |in_shape, xin, out| {
+                        let (b, c, h, w) =
+                            (in_shape[0], in_shape[1], in_shape[2], in_shape[3]);
+                        maxpool_q(xin, out, b, c, h, w, *k);
+                    });
+                }
+                IntStepOp::Flatten => {
+                    self.unary_q(layout, arena, sid, |_, xin, out| {
+                        copy_q(xin, out, out_len);
+                    });
+                }
+                IntStepOp::Add { rqs, epi } => {
+                    // AddRequant nodes are always stamped I32 (only the
+                    // range analysis bounds them), so the packed output
+                    // slot IS the full-width accumulator — same in-place
+                    // Eq. 24 accumulation as the wide path.
+                    let out_slot = layout.out_slot[sid];
+                    let mut out = std::mem::take(&mut arena.bufs[out_slot]);
+                    {
+                        let PackedBuf::I32(acc) = &mut out else {
+                            unreachable!("Add output slot is I32 (infer_precision)")
+                        };
+                        let acc = &mut acc[..out_len];
+                        // Branch 0 is the reference space (Eq. 24).
+                        let r0 = &arena.bufs[layout.out_slot[st.inputs[0]]];
+                        for_each_q(r0, out_len, |i, v| acc[i] = v);
+                        for (bi, &inp) in st.inputs.iter().skip(1).enumerate() {
+                            let bx = &arena.bufs[layout.out_slot[inp]];
+                            let rq = &rqs[bi];
+                            for_each_q(bx, out_len, |i, v| {
+                                acc[i] =
+                                    ops::narrow(acc[i] as i64 + rq.apply(v as i64));
+                            });
+                        }
+                        if !epi.is_empty() {
+                            let (c, hw) = channel_stride(out_shape);
+                            for (i, v) in acc.iter_mut().enumerate() {
+                                *v = epi.apply((i / hw) % c, *v as i64);
+                            }
+                        }
+                    }
+                    arena.bufs[out_slot] = out;
+                }
+            }
+            if let Some(tr) = trace.as_deref_mut() {
+                let buf = &arena.bufs[layout.out_slot[sid]];
+                tr.push((st.node, Tensor::from_vec(out_shape, buf.widen_prefix(out_len))));
+            }
+        }
+        let shape = &layout.shapes[self.output];
+        let len: usize = shape.iter().product();
+        let buf = &arena.bufs[layout.out_slot[self.output]];
+        Tensor::from_vec(shape, buf.widen_prefix(len))
+    }
+
+    /// Packed twin of [`Self::unary`]: take the output buffer, hand
+    /// (input shape, input buffer, output buffer) to `f`, put it back.
+    fn unary_q(
+        &self,
+        layout: &PlanLayout,
+        arena: &mut PackedArena,
+        sid: StepId,
+        f: impl FnOnce(&[usize], &PackedBuf, &mut PackedBuf),
+    ) {
+        let st = &self.steps[sid];
+        let out_slot = layout.out_slot[sid];
+        let mut out = std::mem::take(&mut arena.bufs[out_slot]);
+        {
+            let in_shape = &layout.shapes[st.inputs[0]];
+            let xin = &arena.bufs[layout.out_slot[st.inputs[0]]];
+            f(in_shape, xin, &mut out);
+        }
+        arena.bufs[out_slot] = out;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Packed kernel dispatch (precision -> monomorphized kernel)
+// ---------------------------------------------------------------------------
+
+/// Narrow an i32 slice into a packed buffer prefix (debug-checked like
+/// `ops::narrow`; callers validate untrusted inputs up front).
+fn narrow_q(src: &[i32], dst: &mut PackedBuf, n: usize) {
+    match dst {
+        PackedBuf::U8(v) => {
+            for (o, &x) in v[..n].iter_mut().zip(src) {
+                *o = u8::from_i32(x);
+            }
+        }
+        PackedBuf::I8(v) => {
+            for (o, &x) in v[..n].iter_mut().zip(src) {
+                *o = i8::from_i32(x);
+            }
+        }
+        PackedBuf::I32(v) => v[..n].copy_from_slice(&src[..n]),
+    }
+}
+
+/// Pointwise `out[i] = f(i, widen(x[i]))`, narrowing into `out`'s
+/// precision — the shared loop behind the standalone Bn/Requant/Thresh/
+/// Flatten packed steps and the Add narrowing stage.
+fn map_q(xin: &PackedBuf, out: &mut PackedBuf, n: usize, f: impl Fn(usize, i32) -> i32) {
+    fn inner<I: PackedElem, O: PackedElem>(
+        x: &[I],
+        o: &mut [O],
+        n: usize,
+        f: impl Fn(usize, i32) -> i32,
+    ) {
+        for (i, (o, &x)) in o[..n].iter_mut().zip(&x[..n]).enumerate() {
+            *o = O::from_i32(f(i, x.to_i32()));
+        }
+    }
+    match (xin, out) {
+        (PackedBuf::U8(x), PackedBuf::U8(o)) => inner(x, o, n, f),
+        (PackedBuf::U8(x), PackedBuf::I8(o)) => inner(x, o, n, f),
+        (PackedBuf::U8(x), PackedBuf::I32(o)) => inner(x, o, n, f),
+        (PackedBuf::I8(x), PackedBuf::U8(o)) => inner(x, o, n, f),
+        (PackedBuf::I8(x), PackedBuf::I8(o)) => inner(x, o, n, f),
+        (PackedBuf::I8(x), PackedBuf::I32(o)) => inner(x, o, n, f),
+        (PackedBuf::I32(x), PackedBuf::U8(o)) => inner(x, o, n, f),
+        (PackedBuf::I32(x), PackedBuf::I8(o)) => inner(x, o, n, f),
+        (PackedBuf::I32(x), PackedBuf::I32(o)) => inner(x, o, n, f),
+    }
+}
+
+/// Bulk copy between same-precision packed buffers (Flatten — the
+/// stamps inherit, so the variants always match; no per-element widen/
+/// narrow round-trip).
+fn copy_q(xin: &PackedBuf, out: &mut PackedBuf, n: usize) {
+    match (xin, out) {
+        (PackedBuf::U8(x), PackedBuf::U8(o)) => o[..n].copy_from_slice(&x[..n]),
+        (PackedBuf::I8(x), PackedBuf::I8(o)) => o[..n].copy_from_slice(&x[..n]),
+        (PackedBuf::I32(x), PackedBuf::I32(o)) => o[..n].copy_from_slice(&x[..n]),
+        _ => unreachable!("flatten precision mismatch (inferred stamps inherit)"),
+    }
+}
+
+/// Visit the first `n` elements of a packed buffer, widened to i32.
+fn for_each_q(x: &PackedBuf, n: usize, mut f: impl FnMut(usize, i32)) {
+    match x {
+        PackedBuf::U8(v) => {
+            for (i, &x) in v[..n].iter().enumerate() {
+                f(i, x as i32);
+            }
+        }
+        PackedBuf::I8(v) => {
+            for (i, &x) in v[..n].iter().enumerate() {
+                f(i, x as i32);
+            }
+        }
+        PackedBuf::I32(v) => {
+            for (i, &x) in v[..n].iter().enumerate() {
+                f(i, x);
+            }
+        }
+    }
+}
+
+/// im2col into a same-precision patch buffer (the layout gives the cols
+/// scratch the input's precision).
+#[allow(clippy::too_many_arguments)]
+fn im2col_q(
+    xin: &PackedBuf,
+    cols: &mut PackedBuf,
+    b: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+) {
+    match (xin, cols) {
+        (PackedBuf::U8(x), PackedBuf::U8(o)) => {
+            ops::im2col_into(x, b, c, h, w, kh, kw, stride, pad, o);
+        }
+        (PackedBuf::I8(x), PackedBuf::I8(o)) => {
+            ops::im2col_into(x, b, c, h, w, kh, kw, stride, pad, o);
+        }
+        (PackedBuf::I32(x), PackedBuf::I32(o)) => {
+            ops::im2col_into(x, b, c, h, w, kh, kw, stride, pad, o);
+        }
+        _ => unreachable!("im2col precision mismatch (layout gives cols the input precision)"),
+    }
+}
+
+/// Scatter same-precision GEMM rows into the NCHW output buffer.
+fn scatter_q(rows: &PackedBuf, out: &mut PackedBuf, b: usize, c: usize, oh: usize, ow: usize) {
+    match (rows, out) {
+        (PackedBuf::U8(r), PackedBuf::U8(o)) => ops::rows_to_nchw_into(r, b, c, oh, ow, o),
+        (PackedBuf::I8(r), PackedBuf::I8(o)) => ops::rows_to_nchw_into(r, b, c, oh, ow, o),
+        (PackedBuf::I32(r), PackedBuf::I32(o)) => ops::rows_to_nchw_into(r, b, c, oh, ow, o),
+        _ => unreachable!("scatter precision mismatch (layout gives rows the output precision)"),
+    }
+}
+
+/// Same-precision packed max pool.
+#[allow(clippy::too_many_arguments)]
+fn maxpool_q(
+    xin: &PackedBuf,
+    out: &mut PackedBuf,
+    b: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    k: usize,
+) {
+    match (xin, out) {
+        (PackedBuf::U8(x), PackedBuf::U8(o)) => ops::maxpool_into(x, b, c, h, w, k, o),
+        (PackedBuf::I8(x), PackedBuf::I8(o)) => ops::maxpool_into(x, b, c, h, w, k, o),
+        (PackedBuf::I32(x), PackedBuf::I32(o)) => ops::maxpool_into(x, b, c, h, w, k, o),
+        _ => unreachable!("maxpool precision mismatch (inferred stamps inherit)"),
+    }
+}
+
+/// Same-precision packed average pool (Eq. 25).
+#[allow(clippy::too_many_arguments)]
+fn avgpool_q(
+    xin: &PackedBuf,
+    out: &mut PackedBuf,
+    b: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    k: usize,
+    d: u32,
+) {
+    match (xin, out) {
+        (PackedBuf::U8(x), PackedBuf::U8(o)) => ops::avgpool_q_into(x, b, c, h, w, k, d, o),
+        (PackedBuf::I8(x), PackedBuf::I8(o)) => ops::avgpool_q_into(x, b, c, h, w, k, d, o),
+        (PackedBuf::I32(x), PackedBuf::I32(o)) => ops::avgpool_q_into(x, b, c, h, w, k, d, o),
+        _ => unreachable!("avgpool precision mismatch (inferred stamps inherit)"),
+    }
+}
+
+/// Full-width GEMM over the single stored weight variant (the i32
+/// execution path): i8-packed weights still stream at 1 byte/element —
+/// [`ops::matmul_q_fused_into`] with i32 A/out is bit-identical to
+/// [`ops::matmul_i32_fused_into`] on the same values.
+fn gemm_wide<F>(
+    ad: &[i32],
+    wq: &QTensor,
+    m: usize,
+    k: usize,
+    n: usize,
+    epi: &F,
+    out: &mut [i32],
+) where
+    F: Fn(usize, i32) -> i32 + Sync,
+{
+    match wq {
+        QTensor::I8(w) => ops::matmul_q_fused_into(ad, w.data(), m, k, n, epi, out),
+        QTensor::I32(w) => ops::matmul_i32_fused_into(ad, w.data(), m, k, n, epi, out),
+        QTensor::U8(_) => unreachable!("weights pack to i8 or stay i32"),
+    }
+}
+
+/// Packed GEMM dispatch: input buffer precision x weight storage (i8 or
+/// i32, see [`pack_weights`]) x output precision, all routed to the
+/// single generic [`ops::matmul_q_fused_into`] kernel.
+fn gemm_q<F>(
+    xin: &PackedBuf,
+    wq: &QTensor,
+    m: usize,
+    k: usize,
+    n: usize,
+    epi: &F,
+    out: &mut PackedBuf,
+) where
+    F: Fn(usize, i32) -> i32 + Sync,
+{
+    match out {
+        PackedBuf::U8(o) => gemm_q_in(xin, wq, m, k, n, epi, o),
+        PackedBuf::I8(o) => gemm_q_in(xin, wq, m, k, n, epi, o),
+        PackedBuf::I32(o) => gemm_q_in(xin, wq, m, k, n, epi, o),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn gemm_q_in<O, F>(
+    xin: &PackedBuf,
+    wq: &QTensor,
+    m: usize,
+    k: usize,
+    n: usize,
+    epi: &F,
+    out: &mut [O],
+) where
+    O: PackedElem,
+    F: Fn(usize, i32) -> i32 + Sync,
+{
+    match (xin, wq) {
+        (PackedBuf::U8(x), QTensor::I8(w)) => {
+            ops::matmul_q_fused_into(&x[..m * k], w.data(), m, k, n, epi, out)
+        }
+        (PackedBuf::U8(x), QTensor::I32(w)) => {
+            ops::matmul_q_fused_into(&x[..m * k], w.data(), m, k, n, epi, out)
+        }
+        (PackedBuf::I8(x), QTensor::I8(w)) => {
+            ops::matmul_q_fused_into(&x[..m * k], w.data(), m, k, n, epi, out)
+        }
+        (PackedBuf::I8(x), QTensor::I32(w)) => {
+            ops::matmul_q_fused_into(&x[..m * k], w.data(), m, k, n, epi, out)
+        }
+        (PackedBuf::I32(x), QTensor::I8(w)) => {
+            ops::matmul_q_fused_into(&x[..m * k], w.data(), m, k, n, epi, out)
+        }
+        (PackedBuf::I32(x), QTensor::I32(w)) => {
+            ops::matmul_q_fused_into(&x[..m * k], w.data(), m, k, n, epi, out)
+        }
+        (_, QTensor::U8(_)) => unreachable!("weights pack to i8 or stay i32"),
     }
 }
 
@@ -1030,20 +1730,35 @@ impl FloatPlan {
                 let scratch = match &st.op {
                     FloatStepOp::Conv { wmat, .. } => {
                         let rows = out_len / wmat.shape()[1];
-                        vec![rows * wmat.shape()[0], out_len]
+                        vec![
+                            (rows * wmat.shape()[0], Precision::I32),
+                            (out_len, Precision::I32),
+                        ]
                     }
                     _ => Vec::new(),
                 };
                 StepSpec {
                     inputs: st.inputs.clone(),
                     out_len,
+                    // Float buffers have one width; precision tags are
+                    // only meaningful for integer packed layouts.
+                    out_prec: Precision::I32,
                     scratch,
                     is_input: matches!(st.op, FloatStepOp::Input),
                 }
             })
             .collect();
-        let (out_slot, scratch, slot_lens) = assign_slots(&specs, self.output);
-        Ok(PlanLayout { batch, shapes, out_slot, scratch, slot_lens })
+        let (out_slot, scratch, slot_lens, slot_prec) =
+            assign_slots(&specs, self.output);
+        Ok(PlanLayout {
+            batch,
+            shapes,
+            out_slot,
+            scratch,
+            slot_lens,
+            slot_prec,
+            packed: false,
+        })
     }
 
     pub fn execute(
@@ -1323,6 +2038,82 @@ mod tests {
         for (node, t) in plan.execute_traced(&layout, &mut arena, &qx) {
             assert_eq!(t, interp[node], "step anchored at node {node}");
         }
+    }
+
+    #[test]
+    fn packed_execution_matches_i32_and_interpreter() {
+        let g = conv_bn_act_graph();
+        let plan = IntPlan::compile(&g).unwrap();
+        assert!(plan.has_packed_steps());
+        // input U8, fused conv chain ends at a [0,255] requant -> U8.
+        assert_eq!(plan.input_precision(), Precision::U8);
+        assert_eq!(plan.step_precisions(), &[Precision::U8, Precision::U8]);
+        let layout = plan.packed_layout(2).unwrap();
+        assert!(layout.is_packed());
+        let mut arena = PackedArena::new();
+        let qx = Tensor::from_vec(&[2, 1, 4, 4], (0..32).map(|i| i * 7 % 256).collect());
+        let want = crate::engine::IntegerEngine::new().run_interpreted(&g, &qx);
+        for round in 0..2 {
+            let got = plan.execute_packed(&layout, &mut arena, &qx);
+            assert_eq!(got, want, "round {round}");
+        }
+        // Packed arena is byte-sized: strictly smaller than the i32 one.
+        let wide = plan.layout(2).unwrap();
+        assert!(
+            layout.arena_bytes() < wide.arena_bytes(),
+            "packed {} B vs i32 {} B",
+            layout.arena_bytes(),
+            wide.arena_bytes()
+        );
+    }
+
+    #[test]
+    fn packed_traced_matches_interpreter_nodes() {
+        let g = conv_bn_act_graph();
+        let plan = IntPlan::compile(&g).unwrap();
+        let layout = plan.packed_layout(1).unwrap();
+        let mut arena = PackedArena::new();
+        let qx = Tensor::from_vec(&[1, 1, 4, 4], (0..16).map(|i| i * 11 % 256).collect());
+        let interp = crate::engine::IntegerEngine::new().run_traced(&g, &qx);
+        for (node, t) in plan.execute_packed_traced(&layout, &mut arena, &qx) {
+            assert_eq!(t, interp[node], "packed step anchored at node {node}");
+        }
+    }
+
+    #[test]
+    fn packed_and_wide_layouts_reject_wrong_execute() {
+        let g = conv_bn_act_graph();
+        let plan = IntPlan::compile(&g).unwrap();
+        let qx = Tensor::from_vec(&[1, 1, 4, 4], vec![0; 16]);
+        let packed = plan.packed_layout(1).unwrap();
+        let wide = plan.layout(1).unwrap();
+        assert!(std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            plan.execute(&packed, &mut IntArena::new(), &qx)
+        }))
+        .is_err());
+        assert!(std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            plan.execute_packed(&wide, &mut PackedArena::new(), &qx)
+        }))
+        .is_err());
+    }
+
+    #[test]
+    fn fully_wide_graph_has_no_packed_steps() {
+        // 9-bit-style input and unclipped linear output: nothing packs.
+        let mut g = IntGraph::default();
+        let spec = QuantSpec { eps: 1.0, lo: 0, hi: 511 };
+        let x = g.push("in", IntOp::Input { shape: vec![2], spec }, &[]);
+        let wq = Tensor::from_vec(&[2, 2], vec![300, 0, 0, 300]);
+        g.push("fc", IntOp::LinearInt { wq, bias_q: None }, &[x]);
+        let plan = IntPlan::compile(&g).unwrap();
+        assert!(!plan.has_packed_steps());
+        // The packed path still runs wide graphs correctly (fallback).
+        let qx = Tensor::from_vec(&[1, 2], vec![500, 17]);
+        let layout = plan.packed_layout(1).unwrap();
+        let mut arena = PackedArena::new();
+        let got = plan.execute_packed(&layout, &mut arena, &qx);
+        let want = crate::engine::IntegerEngine::new().run_interpreted(&g, &qx);
+        assert_eq!(got, want);
     }
 
     #[test]

@@ -26,7 +26,7 @@ use std::sync::Mutex;
 
 use anyhow::{bail, ensure, Result};
 
-use crate::engine::plan::{Arena, FloatPlan, IntPlan, PlanLayout};
+use crate::engine::plan::{Arena, FloatPlan, IntArena, IntPlan, PackedArena, PlanLayout};
 use crate::graph::int::IntGraph;
 use crate::graph::Graph;
 use crate::tensor::{TensorF, TensorI};
@@ -148,16 +148,18 @@ fn check_batch_shape(
     Ok(n)
 }
 
-/// Shared plumbing of the two native executors: one compiled layout per
+/// Shared plumbing of the native executors: one compiled layout per
 /// batch variant (1..=max_batch, compiled at construction) and a pool of
 /// scratch arenas recycled across requests, so the steady-state request
-/// path performs no graph walking and no per-node allocation.
-struct PlanSet<T> {
+/// path performs no graph walking and no per-node allocation. Generic
+/// over the arena flavour ([`Arena<T>`] for the full-width/float paths,
+/// [`PackedArena`] for precision-packed serving).
+struct PlanSet<A> {
     layouts: Vec<PlanLayout>,
-    arenas: Mutex<Vec<Arena<T>>>,
+    arenas: Mutex<Vec<A>>,
 }
 
-impl<T: Copy + Default> PlanSet<T> {
+impl<A: Default> PlanSet<A> {
     fn compile(
         layout_of: impl Fn(usize) -> std::result::Result<PlanLayout, crate::engine::PlanError>,
         max_batch: usize,
@@ -169,11 +171,7 @@ impl<T: Copy + Default> PlanSet<T> {
     }
 
     /// Run `f` with the layout for batch `n` and a pooled arena.
-    fn with_arena<R>(
-        &self,
-        n: usize,
-        f: impl FnOnce(&PlanLayout, &mut Arena<T>) -> R,
-    ) -> R {
+    fn with_arena<R>(&self, n: usize, f: impl FnOnce(&PlanLayout, &mut A) -> R) -> R {
         let mut arena = self
             .arenas
             .lock()
@@ -186,14 +184,26 @@ impl<T: Copy + Default> PlanSet<T> {
     }
 }
 
+/// Which execution flavour a [`NativeIntExecutor`] compiled: packed
+/// (sub-word steps stream u8/i8 storage) whenever the plan has any, the
+/// classic i32 path when the whole graph is wide and packing would only
+/// add copies.
+enum IntPlanSet {
+    Packed(PlanSet<PackedArena>),
+    Wide(PlanSet<IntArena>),
+}
+
 /// The in-process integer engine behind the [`Executor`] trait: runs an
 /// IntegerDeployable graph with no artifacts and no FFI. This is the
 /// `serve --backend native` path. The graph is compiled once into a
 /// fused [`IntPlan`] with per-batch-variant layouts; requests execute
-/// the plan over pooled arenas (see DESIGN.md §Plan-compilation).
+/// the plan over pooled arenas (see DESIGN.md §Plan-compilation). When
+/// the deployed graph carries sub-word precision stamps the executor
+/// serves the packed path end-to-end — same bits, 1 byte/element on the
+/// GEMM-dominant activation traffic (DESIGN.md §Precision propagation).
 pub struct NativeIntExecutor {
     plan: IntPlan,
-    plans: PlanSet<i32>,
+    plans: IntPlanSet,
     input_shape: Vec<usize>,
     max_batch: usize,
     eps_out: f64,
@@ -204,7 +214,11 @@ impl NativeIntExecutor {
         ensure!(max_batch >= 1, "max_batch must be >= 1");
         let eps_out = graph.eps_out;
         let plan = IntPlan::compile(&graph)?;
-        let plans = PlanSet::compile(|b| plan.layout(b), max_batch)?;
+        let plans = if plan.has_packed_steps() {
+            IntPlanSet::Packed(PlanSet::compile(|b| plan.packed_layout(b), max_batch)?)
+        } else {
+            IntPlanSet::Wide(PlanSet::compile(|b| plan.layout(b), max_batch)?)
+        };
         let input_shape = plan.input_shape().to_vec();
         Ok(NativeIntExecutor { plan, plans, input_shape, max_batch, eps_out })
     }
@@ -217,6 +231,29 @@ impl NativeIntExecutor {
     /// Graph nodes eliminated by epilogue fusion (diagnostics).
     pub fn fused_nodes(&self) -> usize {
         self.plan.fused_nodes()
+    }
+
+    /// Whether requests run the precision-packed plan path.
+    pub fn packed(&self) -> bool {
+        matches!(self.plans, IntPlanSet::Packed(_))
+    }
+
+    /// Loud range check for untrusted request images entering the packed
+    /// path: a value outside the input spec's stamped precision would
+    /// violate the deploy-time range proof (and, in release builds, wrap
+    /// silently), so it is rejected here instead.
+    fn check_packed_input(&self, qx: &TensorI) -> Result<()> {
+        let p = self.plan.input_precision();
+        if let Some(v) = p.find_out_of_range(qx.data()) {
+            bail!(
+                "native-int: input value {v} outside the deployed input precision \
+                 {} range [{}, {}]",
+                p.name(),
+                p.min_val(),
+                p.max_val()
+            );
+        }
+        Ok(())
     }
 }
 
@@ -237,9 +274,17 @@ impl Executor for NativeIntExecutor {
         let qx = input.batch.as_i32()?;
         let n =
             check_batch_shape("native-int", qx.shape(), &self.input_shape, self.max_batch)?;
-        let out = self
-            .plans
-            .with_arena(n, |layout, arena| self.plan.execute(layout, arena, qx));
+        let out = match &self.plans {
+            IntPlanSet::Packed(ps) => {
+                self.check_packed_input(qx)?;
+                ps.with_arena(n, |layout, arena| {
+                    self.plan.execute_packed(layout, arena, qx)
+                })
+            }
+            IntPlanSet::Wide(ps) => {
+                ps.with_arena(n, |layout, arena| self.plan.execute(layout, arena, qx))
+            }
+        };
         Ok(ExecOutput { logits: Arg::I32(out) })
     }
 }
@@ -252,7 +297,7 @@ impl Executor for NativeIntExecutor {
 /// executor: one fused plan, per-batch layouts, pooled arenas.
 pub struct NativeFloatExecutor {
     plan: FloatPlan,
-    plans: PlanSet<f32>,
+    plans: PlanSet<Arena<f32>>,
     input_shape: Vec<usize>,
     max_batch: usize,
 }
@@ -336,6 +381,37 @@ mod tests {
         // wrong dtype
         let x = TensorF::from_vec(&[1, 2], vec![0.0, 1.0]);
         assert!(exec.run_batch(&ExecInput::f32(x)).is_err());
+    }
+
+    #[test]
+    fn packed_executor_rejects_out_of_range_inputs() {
+        // The identity graph's input spec is [0, 255] -> U8 packed path.
+        let exec = NativeIntExecutor::new(identity_int_graph(), 4).unwrap();
+        assert!(exec.packed());
+        let qx = Tensor::from_vec(&[1, 2], vec![0, 300]);
+        let err = exec.run_batch(&ExecInput::i32(qx)).unwrap_err();
+        assert!(err.to_string().contains("outside"), "{err}");
+        // In-range requests still serve, bit-identical to the engine.
+        let qx = Tensor::from_vec(&[2, 2], vec![255, 0, 7, 19]);
+        let out = exec.run_batch(&ExecInput::i32(qx.clone())).unwrap();
+        let want = crate::engine::IntegerEngine::new()
+            .run_interpreted(&identity_int_graph(), &qx);
+        assert_eq!(out.int_logits().unwrap(), &want);
+    }
+
+    #[test]
+    fn wide_graph_uses_the_i32_plan_set() {
+        let mut g = IntGraph::default();
+        let spec = QuantSpec { eps: 1.0, lo: 0, hi: 1 << 16 };
+        let x = g.push("in", IntOp::Input { shape: vec![2], spec }, &[]);
+        let wq = Tensor::from_vec(&[2, 2], vec![1, 0, 0, 1]);
+        g.push("fc", IntOp::LinearInt { wq, bias_q: None }, &[x]);
+        g.eps_out = 1.0;
+        let exec = NativeIntExecutor::new(g, 2).unwrap();
+        assert!(!exec.packed());
+        let qx = Tensor::from_vec(&[1, 2], vec![40000, 2]);
+        let out = exec.run_batch(&ExecInput::i32(qx)).unwrap();
+        assert_eq!(out.int_logits().unwrap().data(), &[40000, 2]);
     }
 
     #[test]

@@ -6,7 +6,7 @@
 
 use crate::quant::bn::{BnQuant, Thresholds};
 use crate::quant::requant::Requant;
-use crate::quant::QuantSpec;
+use crate::quant::{Precision, QuantSpec};
 use crate::tensor::TensorI;
 
 pub type NodeId = usize;
@@ -46,6 +46,31 @@ pub enum IntOp {
 }
 
 impl IntOp {
+    /// Storage precision this op's output provably fits, given the
+    /// precision of its (first) input — the op-local half of the
+    /// `QuantSpec.bits -> Precision -> kernel` map (DESIGN.md §Precision
+    /// propagation):
+    ///
+    /// * clipped ops carry their provable range directly (Input: the
+    ///   quant spec; RequantAct: the clip bounds; ThreshAct: [0, levels]);
+    /// * pooling/Flatten never widen the range, so they inherit;
+    /// * GEMM/BN/Add accumulate and stay full-width `I32` (the deploy
+    ///   range analysis proves they fit i32, nothing narrower).
+    pub fn natural_precision(&self, input: Option<Precision>) -> Precision {
+        match self {
+            IntOp::Input { spec, .. } => Precision::of_spec(spec),
+            IntOp::RequantAct { rq } => rq.output_precision(),
+            IntOp::ThreshAct { th } => Precision::for_range(0, th.n_levels),
+            IntOp::AvgPoolInt { .. } | IntOp::MaxPoolInt { .. } | IntOp::Flatten => {
+                input.unwrap_or(Precision::I32)
+            }
+            IntOp::ConvInt { .. }
+            | IntOp::LinearInt { .. }
+            | IntOp::IntBn { .. }
+            | IntOp::AddRequant { .. } => Precision::I32,
+        }
+    }
+
     pub fn name(&self) -> &'static str {
         match self {
             IntOp::Input { .. } => "Input",
@@ -68,6 +93,11 @@ pub struct IntNode {
     pub op: IntOp,
     pub inputs: Vec<NodeId>,
     pub name: String,
+    /// Storage precision of this node's output integer image, stamped at
+    /// construction from [`IntOp::natural_precision`] and range-proved by
+    /// the deployment transform. The plan compiler dispatches packed vs.
+    /// full-width kernels on it.
+    pub precision: Precision,
 }
 
 /// IntegerDeployable graph plus the eps bookkeeping needed to interpret
@@ -86,12 +116,72 @@ impl IntGraph {
         for &i in inputs {
             assert!(i < id, "forward reference");
         }
-        self.nodes.push(IntNode { id, op, inputs: inputs.to_vec(), name: name.into() });
+        let input_prec = inputs.first().map(|&i| self.nodes[i].precision);
+        let precision = op.natural_precision(input_prec);
+        self.nodes.push(IntNode {
+            id,
+            op,
+            inputs: inputs.to_vec(),
+            name: name.into(),
+            precision,
+        });
         self.output = id;
         id
     }
 
     pub fn node(&self, id: NodeId) -> &IntNode {
         &self.nodes[id]
+    }
+
+    /// Override a node's stamped storage precision. The assignment must
+    /// still be proved sound (see `graph::shape::infer_precision`) — plan
+    /// compilation rejects unsound stamps.
+    pub fn stamp_precision(&mut self, id: NodeId, p: Precision) {
+        self.nodes[id].precision = p;
+    }
+
+    /// Stamped output precision of every node, in id order.
+    pub fn precisions(&self) -> Vec<Precision> {
+        self.nodes.iter().map(|n| n.precision).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn push_stamps_natural_precisions() {
+        let mut g = IntGraph::default();
+        let spec = QuantSpec { eps: 1.0 / 255.0, lo: 0, hi: 255 };
+        let x = g.push("in", IntOp::Input { shape: vec![1, 4, 4], spec }, &[]);
+        let wq = Tensor::from_vec(&[9, 2], vec![1; 18]);
+        let c = g.push(
+            "conv",
+            IntOp::ConvInt { wq, bias_q: None, cin: 1, kh: 3, kw: 3, stride: 1, pad: 1 },
+            &[x],
+        );
+        let rq = Requant { m: 3, d: 2, lo: 0, hi: 255 };
+        let a = g.push("act", IntOp::RequantAct { rq }, &[c]);
+        let p = g.push("mp", IntOp::MaxPoolInt { k: 2 }, &[a]);
+        let f = g.push("fl", IntOp::Flatten, &[p]);
+        assert_eq!(g.node(x).precision, Precision::U8);
+        assert_eq!(g.node(c).precision, Precision::I32);
+        assert_eq!(g.node(a).precision, Precision::U8);
+        assert_eq!(g.node(p).precision, Precision::U8); // maxpool inherits
+        assert_eq!(g.node(f).precision, Precision::U8); // flatten inherits
+        assert_eq!(g.precisions().len(), 5);
+    }
+
+    #[test]
+    fn wide_requant_stays_full_width() {
+        let mut g = IntGraph::default();
+        let spec = QuantSpec { eps: 1.0, lo: 0, hi: 511 }; // 9-bit input
+        let x = g.push("in", IntOp::Input { shape: vec![4], spec }, &[]);
+        assert_eq!(g.node(x).precision, Precision::I32);
+        let rq = Requant { m: 1, d: 0, lo: 0, hi: 511 }; // 9-bit clip
+        let a = g.push("act", IntOp::RequantAct { rq }, &[x]);
+        assert_eq!(g.node(a).precision, Precision::I32);
     }
 }

@@ -7,7 +7,12 @@
 //!   appear: `BatchNorm`+`ReLU` (FP), `PactAct` + hardened weights (FQ),
 //!   `QuantBn`+`PactAct` (QD).
 //! * [`IntGraph`](crate::transform::IntGraph) (integer ops) —
-//!   IntegerDeployable; built by the transform pipeline.
+//!   IntegerDeployable; built by the transform pipeline. Every integer
+//!   node additionally carries a stamped storage
+//!   [`Precision`](crate::quant::Precision) (u8/i8/i32) derived from its
+//!   provable value range; [`shape::infer_precision`] validates the
+//!   stamps and the plan compiler dispatches packed kernels on them
+//!   (DESIGN.md §Precision propagation).
 //!
 //! The paper's layer rule (sec. 1: a layer is a linear sequence ending at
 //! the first Activation; branches may only start at Activation outputs)

@@ -13,6 +13,7 @@
 
 use crate::graph::int::{IntGraph, IntOp};
 use crate::graph::{Graph, NodeId, Op};
+use crate::quant::Precision;
 
 #[derive(Debug, thiserror::Error)]
 pub enum ShapeError {
@@ -313,6 +314,103 @@ pub fn infer_int(g: &IntGraph, batch: usize) -> Result<Vec<Vec<usize>>, ShapeErr
     Ok(shapes)
 }
 
+/// Validate and return every node's stamped storage precision — the
+/// propagation half of DESIGN.md §Precision propagation, run by plan
+/// compilation before any packed kernel is dispatched. The soundness
+/// rules mirror [`IntOp::natural_precision`]:
+///
+/// * clipped ops (Input / RequantAct / ThreshAct) may carry any stamp
+///   whose range contains their provable output range — wider (unpacked)
+///   stamps are legal, narrower ones are rejected;
+/// * pooling and Flatten must carry exactly their input's precision (the
+///   packed kernels copy/compare elements without conversion);
+/// * accumulating ops (ConvInt / LinearInt / IntBn / AddRequant) must be
+///   `I32` — only the deploy-time range analysis bounds them, and it
+///   proves i32, nothing narrower.
+pub fn infer_precision(g: &IntGraph) -> Result<Vec<Precision>, ShapeError> {
+    let mut precs: Vec<Precision> = Vec::with_capacity(g.nodes.len());
+    for n in &g.nodes {
+        let p = n.precision;
+        match &n.op {
+            IntOp::Input { spec, .. } => {
+                if !p.contains(spec.lo, spec.hi) {
+                    return Err(node_err(
+                        n.id,
+                        &n.name,
+                        format!(
+                            "stamped precision {} cannot hold the input spec range [{}, {}]",
+                            p.name(),
+                            spec.lo,
+                            spec.hi
+                        ),
+                    ));
+                }
+            }
+            IntOp::RequantAct { rq } => {
+                if !p.contains(rq.lo, rq.hi) {
+                    return Err(node_err(
+                        n.id,
+                        &n.name,
+                        format!(
+                            "stamped precision {} cannot hold the requant clip range [{}, {}]",
+                            p.name(),
+                            rq.lo,
+                            rq.hi
+                        ),
+                    ));
+                }
+            }
+            IntOp::ThreshAct { th } => {
+                if !p.contains(0, th.n_levels) {
+                    return Err(node_err(
+                        n.id,
+                        &n.name,
+                        format!(
+                            "stamped precision {} cannot hold the threshold range [0, {}]",
+                            p.name(),
+                            th.n_levels
+                        ),
+                    ));
+                }
+            }
+            IntOp::MaxPoolInt { .. } | IntOp::AvgPoolInt { .. } | IntOp::Flatten => {
+                let Some(&i0) = n.inputs.first() else {
+                    return Err(node_err(n.id, &n.name, "pool/flatten has no input"));
+                };
+                let ip = precs[i0];
+                if p != ip {
+                    return Err(node_err(
+                        n.id,
+                        &n.name,
+                        format!(
+                            "pool/flatten precision {} must match its input's {}",
+                            p.name(),
+                            ip.name()
+                        ),
+                    ));
+                }
+            }
+            IntOp::ConvInt { .. }
+            | IntOp::LinearInt { .. }
+            | IntOp::IntBn { .. }
+            | IntOp::AddRequant { .. } => {
+                if p != Precision::I32 {
+                    return Err(node_err(
+                        n.id,
+                        &n.name,
+                        format!(
+                            "accumulating op stamped {} — only I32 is range-proved",
+                            p.name()
+                        ),
+                    ));
+                }
+            }
+        }
+        precs.push(p);
+    }
+    Ok(precs)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -405,5 +503,58 @@ mod tests {
         let mut g = Graph::new(1.0);
         g.push("in", Op::Input { shape: vec![4] }, &[]);
         assert!(matches!(infer_float(&g, 0), Err(ShapeError::EmptyBatch)));
+    }
+
+    fn packed_chain() -> IntGraph {
+        let mut g = IntGraph::default();
+        let spec = QuantSpec { eps: 1.0 / 255.0, lo: 0, hi: 255 };
+        let x = g.push("in", IntOp::Input { shape: vec![1, 4, 4], spec }, &[]);
+        let wq = Tensor::zeros(&[9, 2]);
+        let c = g.push(
+            "c",
+            IntOp::ConvInt { wq, bias_q: None, cin: 1, kh: 3, kw: 3, stride: 1, pad: 1 },
+            &[x],
+        );
+        let rq = crate::quant::requant::Requant { m: 1, d: 0, lo: 0, hi: 255 };
+        let a = g.push("a", IntOp::RequantAct { rq }, &[c]);
+        g.push("p", IntOp::MaxPoolInt { k: 2 }, &[a]);
+        g
+    }
+
+    #[test]
+    fn precision_inference_accepts_natural_stamps() {
+        let g = packed_chain();
+        let precs = infer_precision(&g).unwrap();
+        assert_eq!(
+            precs,
+            vec![Precision::U8, Precision::I32, Precision::U8, Precision::U8]
+        );
+    }
+
+    #[test]
+    fn precision_inference_accepts_widened_stamps() {
+        // Unpacking a requant to I32 is sound (just wasteful).
+        let mut g = packed_chain();
+        g.stamp_precision(2, Precision::I32);
+        g.stamp_precision(3, Precision::I32); // pool must follow its input
+        assert!(infer_precision(&g).is_ok());
+    }
+
+    #[test]
+    fn precision_inference_rejects_unsound_stamps() {
+        // A u8 stamp on an unbounded conv accumulator is unsound.
+        let mut g = packed_chain();
+        g.stamp_precision(1, Precision::U8);
+        assert!(infer_precision(&g).is_err());
+
+        // A pool whose precision diverges from its input is rejected.
+        let mut g = packed_chain();
+        g.stamp_precision(3, Precision::I32);
+        assert!(infer_precision(&g).is_err());
+
+        // An i8 stamp cannot hold a [0, 255] requant clip.
+        let mut g = packed_chain();
+        g.stamp_precision(2, Precision::I8);
+        assert!(infer_precision(&g).is_err());
     }
 }

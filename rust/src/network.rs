@@ -319,6 +319,13 @@ impl Network<IntegerDeployable> {
         &self.repr.id
     }
 
+    /// Storage precision stamped on every integer node (u8/i8/i32),
+    /// range-proved during `deploy` — the per-node map the packed
+    /// execution path dispatches on (DESIGN.md §Precision propagation).
+    pub fn node_precisions(&self) -> Vec<crate::quant::Precision> {
+        self.repr.id.precisions()
+    }
+
     /// Quantum of the output integer image: logits_real ~ eps_out * Q.
     pub fn eps_out(&self) -> f64 {
         self.repr.eps_out

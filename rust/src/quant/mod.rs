@@ -15,6 +15,100 @@ use crate::tensor::{TensorF, TensorI};
 #[cfg(test)]
 use crate::tensor::Tensor;
 
+/// Element storage width of an integer image (DESIGN.md §Precision
+/// propagation). Derived from a node's provable value range: the packed
+/// execution path streams `U8`/`I8` tensors at 1 byte/element instead of
+/// the 4 bytes an `i32` image costs, which is the dominant bandwidth in
+/// the fused GEMM hot path. `I32` is always a sound (if wasteful)
+/// assignment and remains the fallback for wide nodes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// Unsigned sub-word image: values provably in [0, 255] (e.g. a
+    /// `bits <= 8` activation space).
+    U8,
+    /// Signed sub-word image: values provably in [-128, 127] (e.g. a
+    /// `bits <= 8` symmetric weight grid).
+    I8,
+    /// Full-width image — the universal fallback.
+    I32,
+}
+
+impl Precision {
+    /// Tightest storage class whose range contains [lo, hi] (inclusive).
+    /// Unsigned wins over signed when both fit (activations at 8 bits are
+    /// exactly [0, 255]).
+    pub fn for_range(lo: i64, hi: i64) -> Self {
+        debug_assert!(lo <= hi, "empty range [{lo}, {hi}]");
+        if lo >= 0 && hi <= u8::MAX as i64 {
+            Precision::U8
+        } else if lo >= i8::MIN as i64 && hi <= i8::MAX as i64 {
+            Precision::I8
+        } else {
+            Precision::I32
+        }
+    }
+
+    /// Precision implied by a quantized space: `bits <= 8` activation
+    /// specs ([0, 2^Q-1]) map to `U8`, `bits <= 8` symmetric weight specs
+    /// ([-2^(Q-1), 2^(Q-1)-1]) to `I8`, anything wider to `I32`.
+    pub fn of_spec(spec: &QuantSpec) -> Self {
+        Self::for_range(spec.lo, spec.hi)
+    }
+
+    /// Bytes per element — the arena byte-sizing rule.
+    pub fn bytes(self) -> usize {
+        match self {
+            Precision::U8 | Precision::I8 => 1,
+            Precision::I32 => 4,
+        }
+    }
+
+    /// Smallest representable value.
+    pub fn min_val(self) -> i64 {
+        match self {
+            Precision::U8 => 0,
+            Precision::I8 => i8::MIN as i64,
+            Precision::I32 => i32::MIN as i64,
+        }
+    }
+
+    /// Largest representable value.
+    pub fn max_val(self) -> i64 {
+        match self {
+            Precision::U8 => u8::MAX as i64,
+            Precision::I8 => i8::MAX as i64,
+            Precision::I32 => i32::MAX as i64,
+        }
+    }
+
+    /// Whether every value of [lo, hi] is representable — the deploy-time
+    /// range proof for a precision assignment.
+    pub fn contains(self, lo: i64, hi: i64) -> bool {
+        self.min_val() <= lo && hi <= self.max_val()
+    }
+
+    /// First value of an i32 image that does not fit this precision, if
+    /// any — the shared scan behind the executors' loud input-range
+    /// checks (a value outside the stamped range would violate the
+    /// deploy-time range proof and wrap silently in release builds).
+    pub fn find_out_of_range(self, data: &[i32]) -> Option<i32> {
+        if self == Precision::I32 {
+            return None;
+        }
+        data.iter()
+            .find(|v| !(self.min_val()..=self.max_val()).contains(&(**v as i64)))
+            .copied()
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::U8 => "u8",
+            Precision::I8 => "i8",
+            Precision::I32 => "i32",
+        }
+    }
+}
+
 /// A quantized space Z_t with its quantum epsilon_t (Def. 2.1).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct QuantSpec {
@@ -25,9 +119,25 @@ pub struct QuantSpec {
     pub hi: i64,
 }
 
+/// Guard for the `bits` parameter of the spec constructors. `bits = 0`
+/// would build an empty/degenerate grid silently (the weight constructor
+/// would shift by `bits - 1` and underflow); anything above 31 overflows
+/// the i32 integer-image contract the engines rely on.
+fn check_bits(who: &str, bits: u32) {
+    assert!(
+        (1..=31).contains(&bits),
+        "QuantSpec::{who}: bits must be in 1..=31, got {bits} \
+         (0 yields an empty grid; >31 cannot fit an i32 integer image)"
+    );
+}
+
 impl QuantSpec {
     /// alpha=0 activation space: eps = beta/(2^Q - 1), Z = [0, 2^Q - 1].
+    ///
+    /// `bits` must be in 1..=31; `bits = 1` gives the binary grid {0, 1}
+    /// with eps = beta.
     pub fn activation(beta: f64, bits: u32) -> Self {
+        check_bits("activation", bits);
         let n = (1i64 << bits) - 1;
         QuantSpec { eps: beta / n as f64, lo: 0, hi: n }
     }
@@ -35,7 +145,14 @@ impl QuantSpec {
     /// Symmetric weight space: eps = 2*beta/(2^Q - 1),
     /// Z = [-2^(Q-1), 2^(Q-1) - 1]. The offset alpha_w is a multiple of
     /// eps_w so Eq. 15's correction term folds into one integer image.
+    ///
+    /// `bits` must be in 1..=31. Note the degenerate `bits = 1` case: the
+    /// grid is [-1, 0] (i.e. {-2*beta, 0} in the real domain), *not* the
+    /// BinaryConnect-style {-beta, +beta} — Eq. 15's symmetric grid always
+    /// includes 0 and drops the +2^(Q-1) point. Callers wanting binary
+    /// weights should handle that representation themselves.
     pub fn weight(beta: f64, bits: u32) -> Self {
+        check_bits("weight", bits);
         let n = (1i64 << bits) - 1;
         QuantSpec {
             eps: 2.0 * beta / n as f64,
@@ -184,5 +301,66 @@ mod tests {
         let x = Tensor::from_vec(&[3], vec![0.0f32, 0.5, 1.5]);
         let q = quantize_input(&x, 1.0 / 255.0);
         assert_eq!(q.data(), &[0, 127, 255]);
+    }
+
+    #[test]
+    fn precision_for_range_picks_the_tightest_class() {
+        assert_eq!(Precision::for_range(0, 255), Precision::U8);
+        assert_eq!(Precision::for_range(0, 127), Precision::U8); // unsigned wins
+        assert_eq!(Precision::for_range(-128, 127), Precision::I8);
+        assert_eq!(Precision::for_range(-1, 0), Precision::I8);
+        assert_eq!(Precision::for_range(0, 256), Precision::I32);
+        assert_eq!(Precision::for_range(-129, 0), Precision::I32);
+        assert_eq!(Precision::for_range(0, 511), Precision::I32); // 9-bit act
+    }
+
+    #[test]
+    fn precision_of_spec_follows_the_bits_map() {
+        // bits <= 8 activations -> U8, weights -> I8, else I32.
+        for bits in 1..=8u32 {
+            assert_eq!(Precision::of_spec(&QuantSpec::activation(1.0, bits)), Precision::U8);
+            assert_eq!(Precision::of_spec(&QuantSpec::weight(1.0, bits)), Precision::I8);
+        }
+        assert_eq!(Precision::of_spec(&QuantSpec::activation(1.0, 9)), Precision::I32);
+        assert_eq!(Precision::of_spec(&QuantSpec::weight(1.0, 9)), Precision::I32);
+    }
+
+    #[test]
+    fn precision_contains_is_the_range_proof() {
+        assert!(Precision::U8.contains(0, 255));
+        assert!(!Precision::U8.contains(-1, 255));
+        assert!(Precision::I8.contains(-1, 0));
+        assert!(!Precision::I8.contains(0, 128));
+        assert!(Precision::I32.contains(i32::MIN as i64, i32::MAX as i64));
+        assert_eq!(Precision::U8.bytes(), 1);
+        assert_eq!(Precision::I8.bytes(), 1);
+        assert_eq!(Precision::I32.bytes(), 4);
+    }
+
+    #[test]
+    fn one_bit_weight_grid_is_documented_binary() {
+        // bits = 1 is legal but degenerate: grid [-1, 0], eps = 2*beta.
+        let s = QuantSpec::weight(0.5, 1);
+        assert_eq!((s.lo, s.hi), (-1, 0));
+        assert!((s.eps - 1.0).abs() < 1e-12);
+        assert_eq!(s.levels(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "bits must be in 1..=31")]
+    fn zero_bit_weight_spec_is_rejected() {
+        let _ = QuantSpec::weight(1.0, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "bits must be in 1..=31")]
+    fn zero_bit_activation_spec_is_rejected() {
+        let _ = QuantSpec::activation(1.0, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "bits must be in 1..=31")]
+    fn over_wide_activation_spec_is_rejected() {
+        let _ = QuantSpec::activation(1.0, 32);
     }
 }

@@ -2,6 +2,7 @@
 //! quantized space to another using only an integer multiply and an
 //! arithmetic right shift.
 
+use super::Precision;
 use crate::tensor::TensorI;
 
 /// Smallest d with eps_a * 2^d >= factor * eps_b (Eq. 14 with
@@ -58,6 +59,14 @@ impl Requant {
     /// The real-valued ratio this requant approximates.
     pub fn approx_ratio(&self) -> f64 {
         self.m as f64 / (1u64 << self.d) as f64
+    }
+
+    /// Storage precision of the requantized output — the clip bounds
+    /// [lo, hi] *are* the output's provable value range, so an 8-bit
+    /// activation requant ([0, 255]) packs to `U8` while an unclipped
+    /// Add-branch requant stays `I32`.
+    pub fn output_precision(&self) -> Precision {
+        Precision::for_range(self.lo, self.hi)
     }
 }
 

@@ -1,14 +1,20 @@
 //! Dense row-major tensor substrate (S1 in DESIGN.md).
 //!
 //! The offline vendor set has no `ndarray`, so the engines run on this
-//! small, fully-tested implementation. Two element types are used across
-//! the crate: `f32` for FullPrecision/FakeQuantized/QuantizedDeployable
+//! small, fully-tested implementation. Element types used across the
+//! crate: `f32` for FullPrecision/FakeQuantized/QuantizedDeployable
 //! values and `i32` for IntegerDeployable integer images (with `i64`
 //! widening inside the ops that need it, mirroring the Pallas kernels).
+//! Sub-word integer images additionally pack to `u8`/`i8` storage behind
+//! [`QTensor`] when the deployment pipeline proves the value range fits
+//! (DESIGN.md §Precision propagation) — 1 byte/element instead of 4 on
+//! the bandwidth-bound GEMM hot path.
 
 pub mod ops;
 
 use std::fmt;
+
+use crate::quant::Precision;
 
 #[derive(Clone, PartialEq)]
 pub struct Tensor<T> {
@@ -18,6 +24,8 @@ pub struct Tensor<T> {
 
 pub type TensorF = Tensor<f32>;
 pub type TensorI = Tensor<i32>;
+pub type TensorU8 = Tensor<u8>;
+pub type TensorI8 = Tensor<i8>;
 
 impl<T: Copy + Default> Tensor<T> {
     pub fn zeros(shape: &[usize]) -> Self {
@@ -199,6 +207,107 @@ impl Tensor<f32> {
     }
 }
 
+/// A precision-tagged integer image: the packed counterpart of
+/// [`TensorI`]. Sub-word variants store 1 byte/element; every variant
+/// widens losslessly back to `i32`, and narrowing is checked against the
+/// target precision's range — the conversion fails loudly instead of
+/// wrapping, because a value outside the stamped range means the
+/// deploy-time range proof was violated.
+#[derive(Clone, Debug, PartialEq)]
+pub enum QTensor {
+    U8(TensorU8),
+    I8(TensorI8),
+    I32(TensorI),
+}
+
+impl QTensor {
+    /// Storage precision of this image.
+    pub fn precision(&self) -> Precision {
+        match self {
+            QTensor::U8(_) => Precision::U8,
+            QTensor::I8(_) => Precision::I8,
+            QTensor::I32(_) => Precision::I32,
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            QTensor::U8(t) => t.shape(),
+            QTensor::I8(t) => t.shape(),
+            QTensor::I32(t) => t.shape(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            QTensor::U8(t) => t.len(),
+            QTensor::I8(t) => t.len(),
+            QTensor::I32(t) => t.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Bytes of element storage (the bandwidth this image costs).
+    pub fn storage_bytes(&self) -> usize {
+        self.len() * self.precision().bytes()
+    }
+
+    /// Lossless widening to the full-width i32 image.
+    pub fn widen(&self) -> TensorI {
+        match self {
+            QTensor::U8(t) => t.map(|v| v as i32),
+            QTensor::I8(t) => t.map(|v| v as i32),
+            QTensor::I32(t) => t.clone(),
+        }
+    }
+
+    /// Checked narrowing of an i32 image into packed storage. Returns an
+    /// error naming the offending value when any element falls outside
+    /// `p`'s range (the range proof failed) instead of silently wrapping.
+    pub fn narrow_from(t: &TensorI, p: Precision) -> Result<QTensor, String> {
+        let check = |v: i32| -> Result<(), String> {
+            let v = v as i64;
+            if !(p.min_val()..=p.max_val()).contains(&v) {
+                return Err(format!(
+                    "value {v} outside {} range [{}, {}]",
+                    p.name(),
+                    p.min_val(),
+                    p.max_val()
+                ));
+            }
+            Ok(())
+        };
+        match p {
+            Precision::U8 => {
+                let mut data = Vec::with_capacity(t.len());
+                for &v in t.data() {
+                    check(v)?;
+                    data.push(v as u8);
+                }
+                Ok(QTensor::U8(Tensor::from_vec(t.shape(), data)))
+            }
+            Precision::I8 => {
+                let mut data = Vec::with_capacity(t.len());
+                for &v in t.data() {
+                    check(v)?;
+                    data.push(v as i8);
+                }
+                Ok(QTensor::I8(Tensor::from_vec(t.shape(), data)))
+            }
+            Precision::I32 => Ok(QTensor::I32(t.clone())),
+        }
+    }
+}
+
+impl From<TensorI> for QTensor {
+    fn from(t: TensorI) -> Self {
+        QTensor::I32(t)
+    }
+}
+
 impl<T: fmt::Debug + Copy + Default> fmt::Debug for Tensor<T> {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(f, "Tensor{:?}", self.shape)?;
@@ -256,5 +365,38 @@ mod tests {
         let b = Tensor::from_vec(&[2], vec![1.0f32, 2.0 + 1e-6]);
         assert!(a.allclose(&b, 1e-5, 0.0));
         assert!(!a.allclose(&b, 1e-8, 0.0));
+    }
+
+    #[test]
+    fn qtensor_narrow_widen_roundtrip() {
+        let t = Tensor::from_vec(&[2, 2], vec![0, 1, 254, 255]);
+        let q = QTensor::narrow_from(&t, Precision::U8).unwrap();
+        assert_eq!(q.precision(), Precision::U8);
+        assert_eq!(q.shape(), &[2, 2]);
+        assert_eq!(q.storage_bytes(), 4);
+        assert_eq!(q.widen(), t);
+
+        let s = Tensor::from_vec(&[3], vec![-128, 0, 127]);
+        let q = QTensor::narrow_from(&s, Precision::I8).unwrap();
+        assert_eq!(q.precision(), Precision::I8);
+        assert_eq!(q.storage_bytes(), 3);
+        assert_eq!(q.widen(), s);
+
+        let w = Tensor::from_vec(&[2], vec![-70000, 70000]);
+        let q = QTensor::narrow_from(&w, Precision::I32).unwrap();
+        assert_eq!(q.precision(), Precision::I32);
+        assert_eq!(q.storage_bytes(), 8);
+        assert_eq!(q.widen(), w);
+    }
+
+    #[test]
+    fn qtensor_narrow_rejects_out_of_range() {
+        let t = Tensor::from_vec(&[2], vec![0, 256]);
+        let err = QTensor::narrow_from(&t, Precision::U8).unwrap_err();
+        assert!(err.contains("256"), "{err}");
+        let t = Tensor::from_vec(&[1], vec![-1]);
+        assert!(QTensor::narrow_from(&t, Precision::U8).is_err());
+        let t = Tensor::from_vec(&[1], vec![128]);
+        assert!(QTensor::narrow_from(&t, Precision::I8).is_err());
     }
 }

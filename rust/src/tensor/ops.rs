@@ -16,6 +16,7 @@
 //!   applied while the GEMM output is narrowed.
 
 use super::{Tensor, TensorF, TensorI};
+use crate::quant::Precision;
 
 /// Checked i64 -> i32 narrowing for integer images. The deployment
 /// pipeline's range analysis proves every narrowed value fits; debug
@@ -27,6 +28,76 @@ pub fn narrow(v: i64) -> i32 {
         "integer image overflowed i32: {v}"
     );
     v as i32
+}
+
+// ---------------------------------------------------------------------------
+// Packed integer elements (DESIGN.md §Precision propagation)
+// ---------------------------------------------------------------------------
+
+/// An integer-image storage element the packed kernels are generic over:
+/// `u8` (unsigned sub-word), `i8` (signed sub-word) and `i32` (the
+/// full-width fallback). Widening is lossless; narrowing carries the same
+/// debug-checked contract as [`narrow`] — the deployment pipeline's range
+/// proof guarantees the value fits its stamped precision.
+pub trait PackedElem: Copy + Default + Send + Sync + 'static {
+    const PRECISION: Precision;
+
+    /// Lossless widening to the arithmetic width.
+    fn to_i32(self) -> i32;
+
+    /// Range-proved narrowing from the arithmetic width (debug-checked,
+    /// exactly like [`narrow`]).
+    fn from_i32(v: i32) -> Self;
+}
+
+impl PackedElem for u8 {
+    const PRECISION: Precision = Precision::U8;
+
+    #[inline]
+    fn to_i32(self) -> i32 {
+        self as i32
+    }
+
+    #[inline]
+    fn from_i32(v: i32) -> Self {
+        debug_assert!(
+            (0..=u8::MAX as i32).contains(&v),
+            "integer image overflowed u8: {v}"
+        );
+        v as u8
+    }
+}
+
+impl PackedElem for i8 {
+    const PRECISION: Precision = Precision::I8;
+
+    #[inline]
+    fn to_i32(self) -> i32 {
+        self as i32
+    }
+
+    #[inline]
+    fn from_i32(v: i32) -> Self {
+        debug_assert!(
+            (i8::MIN as i32..=i8::MAX as i32).contains(&v),
+            "integer image overflowed i8: {v}"
+        );
+        v as i8
+    }
+}
+
+impl PackedElem for i32 {
+    const PRECISION: Precision = Precision::I32;
+
+    #[inline]
+    fn to_i32(self) -> i32 {
+        self
+    }
+
+    #[inline]
+    fn from_i32(v: i32) -> Self {
+        v
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -151,10 +222,11 @@ pub fn matmul_i32_into(
 /// the per-channel integer epilogue (bias, Eq. 22 BN, Eq. 11 requant or
 /// Eq. 19-20 thresholds) and narrows back — no intermediate tensors.
 ///
-/// Row blocks are distributed over scoped worker threads when the MAC
-/// count is large enough to amortize the spawns; the per-element
-/// arithmetic (and therefore the result) is identical at any thread
-/// count. Same range-analysis precondition as [`matmul_i32_fast`].
+/// One-line delegate to the precision-generic [`matmul_q_fused_into`] at
+/// its i32 instantiation (`i32` is a [`PackedElem`]): one threading
+/// scaffold and one MAC loop serve every storage width, so the packed
+/// and full-width paths cannot diverge. Same range-analysis precondition
+/// as [`matmul_i32_fast`].
 pub fn matmul_i32_fused_into<F>(
     ad: &[i32],
     bd: &[i32],
@@ -166,35 +238,7 @@ pub fn matmul_i32_fused_into<F>(
 ) where
     F: Fn(usize, i32) -> i32 + Sync,
 {
-    assert!(ad.len() >= m * k && bd.len() >= k * n);
-    let out = &mut out[..m * n];
-    let threads = gemm_threads(m, k, n);
-    if threads <= 1 {
-        matmul_i32_block(ad, bd, 0, m, k, n, epi, out);
-        return;
-    }
-    let rows_per = m.div_ceil(threads);
-    std::thread::scope(|s| {
-        // Carve disjoint row-block output slices; the main thread takes
-        // the first block itself instead of idling on the join.
-        let mut blocks: Vec<(usize, &mut [i32])> = Vec::new();
-        let mut rest = out;
-        let mut row0 = 0usize;
-        while row0 < m {
-            let take = rows_per.min(m - row0);
-            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(take * n);
-            rest = tail;
-            blocks.push((row0, chunk));
-            row0 += take;
-        }
-        let mut blocks = blocks.into_iter();
-        let (lo0, chunk0) = blocks.next().expect("at least one row block");
-        for (lo, chunk) in blocks {
-            let rows = chunk.len() / n;
-            s.spawn(move || matmul_i32_block(ad, bd, lo, lo + rows, k, n, epi, chunk));
-        }
-        matmul_i32_block(ad, bd, lo0, lo0 + chunk0.len() / n, k, n, epi, chunk0);
-    });
+    matmul_q_fused_into(ad, bd, m, k, n, epi, out)
 }
 
 /// Worker-thread count for an m*k*n MAC GEMM; 1 below the spawn-amortization
@@ -211,35 +255,101 @@ fn gemm_threads(m: usize, k: usize, n: usize) -> usize {
     (work / MACS_PER_THREAD).min(hw).min(m).max(1)
 }
 
+/// Precision-generic integer GEMM with a fused per-element epilogue —
+/// THE integer MAC kernel (all fused integer GEMM entry points delegate
+/// here). `A` streams at its packed width (u8 im2col patches for
+/// <=8-bit activations), `B` at its packed width (i8 weights for <=8-bit
+/// grids) and the epilogue's result narrows *directly into the packed
+/// output buffer* — no i32 intermediate tensor is ever materialized.
+///
+/// Arithmetic is storage-width-invariant: every element widens to i32,
+/// products/sums use wrapping i32 accumulation in a fixed order (a
+/// dedicated accumulator row, since `out` may be sub-word), zero-`a`
+/// rows are skipped, and row blocks are distributed over scoped worker
+/// threads when the MAC count amortizes the spawns — the per-element
+/// arithmetic (and therefore the result) is identical at any thread
+/// count and any element width. Same range-analysis precondition as
+/// [`matmul_i32_fast`].
+pub fn matmul_q_fused_into<A, B, O, F>(
+    ad: &[A],
+    bd: &[B],
+    m: usize,
+    k: usize,
+    n: usize,
+    epi: &F,
+    out: &mut [O],
+) where
+    A: PackedElem,
+    B: PackedElem,
+    O: PackedElem,
+    F: Fn(usize, i32) -> i32 + Sync,
+{
+    assert!(ad.len() >= m * k && bd.len() >= k * n);
+    let out = &mut out[..m * n];
+    let threads = gemm_threads(m, k, n);
+    if threads <= 1 {
+        matmul_q_block(ad, bd, 0, m, k, n, epi, out);
+        return;
+    }
+    let rows_per = m.div_ceil(threads);
+    std::thread::scope(|s| {
+        let mut blocks: Vec<(usize, &mut [O])> = Vec::new();
+        let mut rest = out;
+        let mut row0 = 0usize;
+        while row0 < m {
+            let take = rows_per.min(m - row0);
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(take * n);
+            rest = tail;
+            blocks.push((row0, chunk));
+            row0 += take;
+        }
+        let mut blocks = blocks.into_iter();
+        let (lo0, chunk0) = blocks.next().expect("at least one row block");
+        for (lo, chunk) in blocks {
+            let rows = chunk.len() / n;
+            s.spawn(move || matmul_q_block(ad, bd, lo, lo + rows, k, n, epi, chunk));
+        }
+        matmul_q_block(ad, bd, lo0, lo0 + chunk0.len() / n, k, n, epi, chunk0);
+    });
+}
+
 #[allow(clippy::too_many_arguments)]
-fn matmul_i32_block<F>(
-    ad: &[i32],
-    bd: &[i32],
+fn matmul_q_block<A, B, O, F>(
+    ad: &[A],
+    bd: &[B],
     row_lo: usize,
     row_hi: usize,
     k: usize,
     n: usize,
     epi: &F,
-    out: &mut [i32],
+    out: &mut [O],
 ) where
+    A: PackedElem,
+    B: PackedElem,
+    O: PackedElem,
     F: Fn(usize, i32) -> i32,
 {
     debug_assert_eq!(out.len(), (row_hi - row_lo) * n);
+    // One accumulator row per block (the output buffer may be sub-word);
+    // arena output buffers are reused, so every element is written fresh
+    // from the accumulator.
+    let mut acc = vec![0i32; n];
     for i in row_lo..row_hi {
-        let crow = &mut out[(i - row_lo) * n..(i - row_lo + 1) * n];
-        crow.fill(0); // arena buffers are reused; start from zero
+        acc.fill(0);
         let arow = &ad[i * k..(i + 1) * k];
         for (kk, &av) in arow.iter().enumerate() {
-            if av == 0 {
+            let a = av.to_i32();
+            if a == 0 {
                 continue;
             }
             let brow = &bd[kk * n..(kk + 1) * n];
             for j in 0..n {
-                crow[j] = crow[j].wrapping_add(av.wrapping_mul(brow[j]));
+                acc[j] = acc[j].wrapping_add(a.wrapping_mul(brow[j].to_i32()));
             }
         }
-        for (j, v) in crow.iter_mut().enumerate() {
-            *v = epi(j, *v);
+        let crow = &mut out[(i - row_lo) * n..(i - row_lo + 1) * n];
+        for (j, o) in crow.iter_mut().enumerate() {
+            *o = O::from_i32(epi(j, acc[j]));
         }
     }
 }
@@ -528,7 +638,8 @@ pub fn avgpool_i32(x: &TensorI, k: usize, d: u32) -> TensorI {
     out
 }
 
-/// [`avgpool_i32`] into a caller-provided buffer.
+/// [`avgpool_i32`] into a caller-provided buffer — the i32 instantiation
+/// of [`avgpool_q_into`] (one copy of the Eq. 25 scaling).
 #[allow(clippy::too_many_arguments)]
 pub fn avgpool_i32_into(
     xd: &[i32],
@@ -539,6 +650,25 @@ pub fn avgpool_i32_into(
     k: usize,
     d: u32,
     out: &mut [i32],
+) {
+    avgpool_q_into(xd, b, c, h, w, k, d, out)
+}
+
+/// Precision-generic twin of [`avgpool_i32_into`] (Eq. 25): widens each
+/// packed element to the i64 accumulator, applies the identical
+/// `(floor(2^d/(K*K)) * sum) >> d` scaling, and narrows the result back
+/// into the packed output. Average pooling never widens the value range,
+/// so the input's precision is always a sound output assignment.
+#[allow(clippy::too_many_arguments)]
+pub fn avgpool_q_into<T: PackedElem>(
+    xd: &[T],
+    b: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    k: usize,
+    d: u32,
+    out: &mut [T],
 ) {
     assert!(h % k == 0 && w % k == 0);
     let (oh, ow) = (h / k, w / k);
@@ -553,10 +683,10 @@ pub fn avgpool_i32_into(
                 for dy in 0..k {
                     let xrow = xbase + (oy * k + dy) * w + ox * k;
                     for dx in 0..k {
-                        acc += xd[xrow + dx] as i64;
+                        acc += xd[xrow + dx].to_i32() as i64;
                     }
                 }
-                out[obase + oy * ow + ox] = narrow((acc * m) >> d);
+                out[obase + oy * ow + ox] = T::from_i32(narrow((acc * m) >> d));
             }
         }
     }
@@ -661,6 +791,69 @@ mod tests {
             for j in 0..4 {
                 assert_eq!(out[i * 4 + j], plain.at2(i, j) * 2 + j as i32);
             }
+        }
+    }
+
+    #[test]
+    fn packed_matmul_matches_i32_reference() {
+        // u8 x i8 -> i32 accumulate must equal the i32 x i32 reference on
+        // the same values, at sizes below and above the threading cutoff.
+        let mut rng = Rng::new(21);
+        for (m, k, n) in [(5usize, 7usize, 3usize), (160, 96, 80)] {
+            let a32 = rand_i(&mut rng, &[m, k], 0, 256);
+            let b32 = rand_i(&mut rng, &[k, n], -128, 128);
+            let want = matmul_i32(&a32, &b32);
+            let a8: Vec<u8> = a32.data().iter().map(|v| *v as u8).collect();
+            let b8: Vec<i8> = b32.data().iter().map(|v| *v as i8).collect();
+            let mut out = vec![0i32; m * n];
+            matmul_q_fused_into(&a8, &b8, m, k, n, &|_, v| v, &mut out);
+            assert_eq!(&out[..], want.data(), "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn packed_matmul_narrows_into_packed_output() {
+        // Epilogue clamps into [0, 255]; the GEMM writes u8 directly.
+        let mut rng = Rng::new(22);
+        let (m, k, n) = (6usize, 9usize, 4usize);
+        let a32 = rand_i(&mut rng, &[m, k], 0, 256);
+        let b32 = rand_i(&mut rng, &[k, n], -128, 128);
+        let epi = |_: usize, v: i32| (v as i64).clamp(0, 255) as i32;
+        let mut want = vec![0i32; m * n];
+        matmul_i32_fused_into(a32.data(), b32.data(), m, k, n, &epi, &mut want);
+        let a8: Vec<u8> = a32.data().iter().map(|v| *v as u8).collect();
+        let b8: Vec<i8> = b32.data().iter().map(|v| *v as i8).collect();
+        let mut out = vec![0u8; m * n];
+        matmul_q_fused_into(&a8, &b8, m, k, n, &epi, &mut out);
+        for (o, w) in out.iter().zip(&want) {
+            assert_eq!(*o as i32, *w);
+        }
+    }
+
+    #[test]
+    fn packed_avgpool_matches_i32_reference() {
+        let mut rng = Rng::new(23);
+        let x = rand_i(&mut rng, &[2, 3, 4, 4], 0, 256);
+        let want = avgpool_i32(&x, 2, 12);
+        let x8: Vec<u8> = x.data().iter().map(|v| *v as u8).collect();
+        let mut out = vec![0u8; 2 * 3 * 2 * 2];
+        avgpool_q_into(&x8, 2, 3, 4, 4, 2, 12, &mut out);
+        for (o, w) in out.iter().zip(want.data()) {
+            assert_eq!(*o as i32, *w);
+        }
+    }
+
+    #[test]
+    fn packed_im2col_matches_i32_layout() {
+        // im2col is already generic; pin the u8 instantiation against the
+        // i32 one (same values, zero padding included).
+        let x = Tensor::from_vec(&[1, 1, 2, 2], vec![1, 2, 3, 4]);
+        let (want, _) = im2col(&x, 3, 3, 1, 1);
+        let x8 = Tensor::from_vec(&[1, 1, 2, 2], vec![1u8, 2, 3, 4]);
+        let mut out = vec![9u8; 4 * 9];
+        im2col_into(x8.data(), 1, 1, 2, 2, 3, 3, 1, 1, &mut out);
+        for (o, w) in out.iter().zip(want.data()) {
+            assert_eq!(*o as i32, *w);
         }
     }
 

@@ -510,6 +510,24 @@ pub(crate) fn deploy_impl(
         states[n.id] = Some(st);
     }
 
+    // Precision range proof (DESIGN.md §Precision propagation): every ID
+    // node was stamped a storage precision at construction (clip bounds,
+    // input spec, inheritance, or the I32 accumulator fallback); the
+    // analyzed worst-case range must fit the stamp, or the packed kernels
+    // would narrow out-of-range values. Natural stamps are sound by
+    // construction — this check pins that contract at deploy time.
+    for st in states.iter().flatten() {
+        let nd = id.node(st.id_node);
+        if !nd.precision.contains(st.qmin, st.qmax) {
+            return Err(TransformError::PrecisionProof {
+                node: nd.name.clone(),
+                precision: nd.precision.name(),
+                qmin: st.qmin,
+                qmax: st.qmax,
+            });
+        }
+    }
+
     let out_state = states[g.output].as_ref().unwrap();
     qd.output = qd_map[g.output];
     id.output = out_state.id_node;

@@ -39,6 +39,16 @@ pub enum TransformError {
     NeedsFakeQuant(&'static str),
     #[error("integer range overflow in {node}: worst-case |acc| = {worst} > 2^31")]
     RangeOverflow { node: String, worst: i64 },
+    #[error(
+        "precision proof failed at {node}: stamped {precision} cannot hold the \
+         analyzed range [{qmin}, {qmax}]"
+    )]
+    PrecisionProof {
+        node: String,
+        precision: &'static str,
+        qmin: i64,
+        qmax: i64,
+    },
     #[error("unsupported op in {0} representation: {1}")]
     Unsupported(&'static str, &'static str),
     #[error("graph error: {0}")]

@@ -4,9 +4,12 @@
 //! add / pool combinations, at every representation (FP float graphs, QD
 //! float twins, ID integer graphs) — plus handcrafted integer graphs
 //! that defeat fusion (fanout on a conv output, standalone epilogue
-//! ops).
+//! ops). The precision-packed execution path (`packed_layout` /
+//! `execute_packed`) is held to the same node-for-node standard on every
+//! randomized graph, and its arena must never cost more bytes than the
+//! full-width one.
 
-use nemo::engine::plan::{FloatArena, IntArena};
+use nemo::engine::plan::{FloatArena, IntArena, PackedArena};
 use nemo::engine::{FloatEngine, FloatPlan, IntPlan, IntegerEngine};
 use nemo::graph::int::{IntGraph, IntOp};
 use nemo::graph::{Graph, Op};
@@ -131,13 +134,14 @@ fn rand_input(rng: &mut Rng, b: usize, c: usize) -> TensorF {
     )
 }
 
-/// Plan trace must equal the interpreter trace at every fused anchor.
+/// Plan trace must equal the interpreter trace at every fused anchor —
+/// on the i32 path AND the precision-packed path, twice through each
+/// arena (reuse must not leak state).
 fn check_int_plan(g: &IntGraph, qx: &TensorI) {
     let interp = IntegerEngine::new().run_traced(g, qx);
     let plan = IntPlan::compile(g).expect("plan");
     let layout = plan.layout(qx.shape()[0]).expect("layout");
     let mut arena = IntArena::new();
-    // Twice through the same arena: reuse must not leak state.
     for round in 0..2 {
         let trace = plan.execute_traced(&layout, &mut arena, qx);
         for (node, t) in &trace {
@@ -150,6 +154,35 @@ fn check_int_plan(g: &IntGraph, qx: &TensorI) {
         let out = plan.execute(&layout, &mut arena, qx);
         assert_eq!(out, interp[g.output], "round {round}: final output diverged");
     }
+
+    // Packed path: bit-identical node for node, and never more arena
+    // bytes than the i32 layout (sub-word slots shrink, wide slots tie;
+    // the extra Input/Add slots are offset by byte sizing).
+    let packed = plan.packed_layout(qx.shape()[0]).expect("packed layout");
+    let mut parena = PackedArena::new();
+    for round in 0..2 {
+        let trace = plan.execute_packed_traced(&packed, &mut parena, qx);
+        for (node, t) in &trace {
+            assert_eq!(
+                t, &interp[*node],
+                "round {round}: packed step for node {node} ({}) diverged",
+                g.nodes[*node].name
+            );
+        }
+        let out = plan.execute_packed(&packed, &mut parena, qx);
+        assert_eq!(out, interp[g.output], "round {round}: packed output diverged");
+    }
+    // Byte-sizing sanity: the packed layout's only structural additions
+    // over the i32 one are the materialized input slot and full-width Add
+    // accumulators (each bounded by one i32 arena); everything else can
+    // only shrink. Strict savings on real deployed nets are asserted in
+    // tests/precision.rs.
+    assert!(
+        packed.arena_bytes() <= 2 * layout.arena_bytes() + qx.len() * 4,
+        "packed arena {} B wildly exceeds i32 arena {} B",
+        packed.arena_bytes(),
+        layout.arena_bytes()
+    );
 }
 
 fn check_float_plan(g: &Graph, x: &TensorF) {

@@ -1,0 +1,150 @@
+//! Precision assignment across deployment bit widths (DESIGN.md
+//! §Precision propagation): deploying the synthnet at Q in {2, 4, 7, 8,
+//! 9} bits must stamp every IntegerDeployable node with exactly the
+//! precision its QuantSpec/clip range proves — U8 for <=8-bit activation
+//! spaces, I32 for the accumulating ops and for the 9-bit fallback — and
+//! the packed execution built on those stamps must be bit-identical to
+//! the i32 interpreter while costing strictly fewer arena bytes.
+
+use nemo::data::SynthDigits;
+use nemo::engine::{IntPlan, IntegerEngine, PackedArena};
+use nemo::graph::int::{IntGraph, IntOp};
+use nemo::model::synthnet::{SynthNet, EPS_IN};
+use nemo::quant::{quantize_input, Precision};
+use nemo::transform::DeployOptions;
+use nemo::util::rng::Rng;
+
+/// Recompute the expected stamp for every node straight from its op's
+/// quantized range (spec / clip bounds / threshold levels) plus the
+/// pool/flatten inheritance rule — the independent oracle the stamped
+/// values are checked against.
+fn expected_precisions(g: &IntGraph) -> Vec<Precision> {
+    let mut out: Vec<Precision> = Vec::new();
+    for n in &g.nodes {
+        let p = match &n.op {
+            IntOp::Input { spec, .. } => Precision::for_range(spec.lo, spec.hi),
+            IntOp::RequantAct { rq } => Precision::for_range(rq.lo, rq.hi),
+            IntOp::ThreshAct { th } => Precision::for_range(0, th.n_levels),
+            IntOp::MaxPoolInt { .. } | IntOp::AvgPoolInt { .. } | IntOp::Flatten => {
+                out[n.inputs[0]]
+            }
+            IntOp::ConvInt { .. }
+            | IntOp::LinearInt { .. }
+            | IntOp::IntBn { .. }
+            | IntOp::AddRequant { .. } => Precision::I32,
+        };
+        out.push(p);
+    }
+    out
+}
+
+#[test]
+fn synthnet_precision_stamps_match_quant_spec_ranges() {
+    let mut rng = Rng::new(55);
+    let net = SynthNet::init(&mut rng);
+    for q in [2u32, 4, 7, 8, 9] {
+        let nid = net
+            .to_network(q)
+            .unwrap()
+            .deploy(DeployOptions { wbits: q, abits: q, ..DeployOptions::default() })
+            .unwrap()
+            .integerize();
+        let g = nid.int_graph();
+        let got = nid.node_precisions();
+        assert_eq!(got, expected_precisions(g), "Q={q}: stamps != spec ranges");
+
+        for (n, p) in g.nodes.iter().zip(&got) {
+            match &n.op {
+                // 8-bit camera input stays U8 at every Q.
+                IntOp::Input { .. } => {
+                    assert_eq!(*p, Precision::U8, "Q={q} input")
+                }
+                // Activations: [0, 2^Q - 1] -> U8 up to 8 bits, I32 at 9.
+                IntOp::RequantAct { .. } => {
+                    let want = if q <= 8 { Precision::U8 } else { Precision::I32 };
+                    assert_eq!(*p, want, "Q={q} activation '{}'", n.name);
+                }
+                // Accumulating ops are always full-width.
+                IntOp::ConvInt { .. }
+                | IntOp::LinearInt { .. }
+                | IntOp::IntBn { .. }
+                | IntOp::AddRequant { .. } => {
+                    assert_eq!(*p, Precision::I32, "Q={q} '{}'", n.name)
+                }
+                _ => {}
+            }
+        }
+        if q == 9 {
+            // The 9-bit fallback: beyond the 8-bit input image, nothing
+            // packs.
+            assert!(
+                got.iter().skip(1).all(|p| *p == Precision::I32),
+                "Q=9 must fall back to I32 everywhere past the input"
+            );
+        }
+    }
+}
+
+#[test]
+fn synthnet_thresholds_pack_like_requants() {
+    let mut rng = Rng::new(58);
+    let net = SynthNet::init(&mut rng);
+    for q in [4u32, 8, 9] {
+        let nid = net
+            .to_network(q)
+            .unwrap()
+            .deploy(DeployOptions {
+                wbits: q,
+                abits: q,
+                use_thresholds: true,
+                ..DeployOptions::default()
+            })
+            .unwrap()
+            .integerize();
+        let g = nid.int_graph();
+        assert_eq!(
+            nid.node_precisions(),
+            expected_precisions(g),
+            "Q={q} thresholds"
+        );
+        for n in &g.nodes {
+            if let IntOp::ThreshAct { .. } = n.op {
+                let want = if q <= 8 { Precision::U8 } else { Precision::I32 };
+                assert_eq!(n.precision, want, "Q={q} threshold '{}'", n.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn synthnet_packed_arena_is_smaller_and_bit_identical() {
+    let mut rng = Rng::new(56);
+    let net = SynthNet::init(&mut rng);
+    let nid = net
+        .to_network(8)
+        .unwrap()
+        .deploy(DeployOptions::default())
+        .unwrap()
+        .integerize();
+    let plan = IntPlan::compile(nid.int_graph()).unwrap();
+    assert!(plan.has_packed_steps());
+    let wide = plan.layout(8).unwrap();
+    let packed = plan.packed_layout(8).unwrap();
+    assert!(
+        packed.arena_bytes() < wide.arena_bytes(),
+        "packed arena {} B must beat i32 arena {} B on the deployed synthnet",
+        packed.arena_bytes(),
+        wide.arena_bytes()
+    );
+
+    let (x, _) = SynthDigits::eval_set(57, 8);
+    let qx = quantize_input(&x, EPS_IN);
+    let mut arena = PackedArena::new();
+    let got = plan.execute_packed(&packed, &mut arena, &qx);
+    let want = IntegerEngine::new().run_interpreted(nid.int_graph(), &qx);
+    assert_eq!(got, want, "packed execution diverged from the interpreter");
+
+    // The serving executor compiles the packed path for this graph.
+    let exec = nid.to_executor(8).unwrap();
+    assert!(exec.packed(), "deployed synthnet must serve packed");
+}

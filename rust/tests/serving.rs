@@ -157,6 +157,71 @@ fn batch_chunking_respects_executor_max_batch() {
     assert_eq!(m.failed, 0);
 }
 
+// -- f32 logits protocol (ModelVariant::new contract) ----------------------
+
+/// Stub backend returning f32 logits: integer-valued (some XLA lowerings
+/// emit integer math as f32) or genuinely fractional.
+struct FloatLogitsStub {
+    value: f32,
+}
+
+impl nemo::exec::Executor for FloatLogitsStub {
+    fn name(&self) -> &str {
+        "stub-float"
+    }
+
+    fn input_shape(&self) -> &[usize] {
+        &[2]
+    }
+
+    fn max_batch(&self) -> usize {
+        8
+    }
+
+    fn run_batch(
+        &self,
+        input: &nemo::exec::ExecInput,
+    ) -> anyhow::Result<nemo::exec::ExecOutput> {
+        let n = input.batch_size();
+        let t = nemo::tensor::TensorF::from_vec(&[n, 1], vec![self.value; n]);
+        Ok(nemo::exec::ExecOutput { logits: nemo::exec::Arg::F32(t) })
+    }
+}
+
+#[test]
+fn near_integer_f32_logits_are_rounded_not_truncated() {
+    // 2.9999997 under the old `v as i32` truncation served 2; the
+    // contract says round-to-nearest.
+    let model = ModelVariant::new(
+        "stub",
+        Arc::new(FloatLogitsStub { value: 2.999_999_7 }),
+    );
+    let server = Server::start(vec![model], ServerConfig::default());
+    let h = server.handle();
+    let out = h.infer("stub", nemo::tensor::TensorI::zeros(&[1, 2])).unwrap();
+    assert_eq!(out.data(), &[3]);
+    let m = server.stop();
+    assert_eq!(m.completed, 1);
+    assert_eq!(m.failed, 0);
+}
+
+#[test]
+fn fractional_f32_logits_fail_loudly() {
+    let model = ModelVariant::new("stub", Arc::new(FloatLogitsStub { value: 1.5 }));
+    let server = Server::start(vec![model], ServerConfig::default());
+    let h = server.handle();
+    let err = h
+        .infer("stub", nemo::tensor::TensorI::zeros(&[1, 2]))
+        .unwrap_err();
+    assert!(
+        err.to_string().contains("integer logits protocol"),
+        "unexpected error: {err}"
+    );
+    let m = server.stop();
+    assert_eq!(m.completed, 0);
+    assert_eq!(m.failed, 1);
+}
+
 // -- PJRT parity (requires artifacts + the `pjrt` feature) -----------------
 
 #[cfg(feature = "pjrt")]
