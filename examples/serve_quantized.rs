@@ -56,9 +56,34 @@ fn main() -> anyhow::Result<()> {
     let net = SynthNet::init(&mut rng);
     let nid = net.to_network(8)?.deploy(DeployOptions::default())?.integerize();
 
+    // Deploy once, serve anywhere: freeze the IntegerDeployable network
+    // into a native artifact, reload it, and prove the loaded program is
+    // bit-identical before serving from it.
+    let artifact = std::env::temp_dir()
+        .join(format!("serve_quantized_{}.nemo.json", std::process::id()));
+    nid.save_deployed(&artifact)?;
+    let loaded = Network::<IntegerDeployable>::load_deployed(&artifact)?;
+    let bytes = std::fs::metadata(&artifact).map(|m| m.len()).unwrap_or(0);
+    let _ = std::fs::remove_file(&artifact); // loaded fully into memory
+    {
+        let mut data = SynthDigits::new(77);
+        let (x, _) = data.batch(8);
+        let qx = quantize_input(&x, EPS_IN);
+        anyhow::ensure!(
+            nid.run(&qx) == loaded.run(&qx),
+            "loaded artifact logits diverged from the in-memory network"
+        );
+    }
+    println!(
+        "artifact round-trip: {} ({bytes} bytes, logits bit-identical)",
+        artifact.display()
+    );
+
     let backend = args.str_or("backend", "native");
     let exec: Arc<dyn Executor> = match backend.as_str() {
-        "native" => Arc::new(nid.to_executor(16)?),
+        // Native serving runs the *loaded* artifact — the same path
+        // `nemo serve --model m.nemo.json` takes in production.
+        "native" => Arc::new(loaded.to_executor(16)?),
         "pjrt" => pjrt_exec(&nid)?,
         b => anyhow::bail!("unknown backend '{b}' (expected native|pjrt)"),
     };

@@ -91,7 +91,9 @@ def choose_d(eps_a: float, eps_b: float, requantization_factor: int = 16,
     """Smallest d with 2^d >= requantization_factor * eps_b / eps_a (Eq. 14).
 
     Uses an exact doubling loop (not log2) so Rust derives the same d from
-    the same f64 inputs.
+    the same f64 inputs. Raises when the bound is unreachable within d_max
+    doublings (mirrors Rust's typed RequantSaturation error): a saturated
+    d would bake a requant ratio violating the 1/eta error guarantee.
     """
     assert eps_a > 0.0 and eps_b > 0.0
     target = requantization_factor * eps_b
@@ -100,6 +102,10 @@ def choose_d(eps_a: float, eps_b: float, requantization_factor: int = 16,
     while p < target and d < d_max:
         p *= 2.0
         d += 1
+    if p < target:
+        raise ValueError(
+            f"choose_d saturated: eps_a={eps_a:.3e}, eps_b={eps_b:.3e}, "
+            f"factor={requantization_factor} needs d > {d_max} (Eq. 14)")
     return d
 
 

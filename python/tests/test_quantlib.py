@@ -25,6 +25,14 @@ def test_choose_d_satisfies_eq14(eps_a, eps_b, factor):
             assert eps_a * (2.0 ** (d - 1)) < factor * eps_b
 
 
+def test_choose_d_saturation_raises():
+    """Mirror of Rust's RequantSaturation: an unreachable Eq. 14 bound is
+    an error, not a silently wrong d = 40."""
+    import pytest
+    with pytest.raises(ValueError, match="saturated"):
+        ql.choose_d(1e-300, 1.0, 16)
+
+
 @given(eps_a=eps_strategy, eps_b=eps_strategy,
        factor=st.sampled_from([16, 256]), seed=st.integers(0, 2**31))
 @settings(**SETTINGS)

@@ -56,6 +56,7 @@ fn main() {
                 || a.starts_with("perf")
                 || a.starts_with("plan")
                 || a.starts_with("packed")
+                || a.starts_with("artifact")
         })
         .collect();
     let run = |tag: &str| {
@@ -103,6 +104,9 @@ fn main() {
     if run("packed") {
         packed_vs_i32();
     }
+    if run("artifact") {
+        artifact_cold_load_and_serve();
+    }
     if run("perf") {
         perf_microbench();
         #[cfg(feature = "pjrt")]
@@ -149,10 +153,9 @@ fn e1_requant_error() {
     for _ in 0..5000 {
         let eps_a = rng.uniform(1e-7, 1e-1);
         let eps_b = rng.uniform(1e-7, 1e-1);
-        let d = choose_d(eps_a, eps_b, 16);
-        if d >= 40 {
-            continue;
-        }
+        let Ok(d) = choose_d(eps_a, eps_b, 16) else {
+            continue; // saturation is a typed error now
+        };
         let m = multiplier(eps_a, eps_b, d);
         let rel = (eps_a / eps_b - m as f64 / (1u64 << d) as f64).abs() / (eps_a / eps_b);
         worst = worst.max(rel);
@@ -184,7 +187,7 @@ fn e2_threshold_exactness() {
         let eps_y = 2.0 / n as f64;
         let th = Thresholds::derive(&bn, eps_phi, eps_y, n);
         let bq = BnQuant::derive(&bn, eps_phi, 8);
-        let rq = Requant::derive(bq.eps_phi_out, eps_y, 16, 0, n);
+        let rq = Requant::derive(bq.eps_phi_out, eps_y, 16, 0, n).expect("bound reachable");
         // exactness vs the float BN + Eq. 10 path
         let mut mismatches = 0u64;
         let mut qs = Vec::new();
@@ -776,6 +779,113 @@ fn packed_vs_i32() {
     std::fs::write("BENCH_packed.json", json::write(&doc))
         .expect("write BENCH_packed.json");
     println!("  wrote BENCH_packed.json");
+}
+
+// ---------------------------------------------------------------------------
+// artifact: native deployment artifacts — cold-load latency and
+// serve-from-artifact throughput (DESIGN.md §Artifact-format) — writes
+// BENCH_artifact.json
+// ---------------------------------------------------------------------------
+
+fn artifact_cold_load_and_serve() {
+    println!("\n=== artifact: deploy-once/serve-anywhere cold start & throughput ===");
+    let mut rng = Rng::new(88);
+    let net = SynthNet::init(&mut rng);
+    let nid = Network::<FakeQuantized>::from_pact_graph(net.to_pact_graph(8))
+        .expect("pact graph")
+        .deploy(DeployOptions::default())
+        .expect("deploy")
+        .integerize();
+    let path = std::env::temp_dir()
+        .join(format!("bench_artifact_{}.nemo.json", std::process::id()));
+
+    let (t_save, _) = bench(1, 0.3, || {
+        nid.save_deployed(&path).expect("save");
+    });
+    let bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+
+    // Cold load: file -> checksum -> precision re-proof -> compiled
+    // packed plans, i.e. the full `nemo serve --model` startup cost.
+    let max_batch = 16usize;
+    let (t_load, _) = bench(1, 0.5, || {
+        std::hint::black_box(
+            NativeIntExecutor::from_artifact(&path, max_batch).expect("from_artifact"),
+        );
+    });
+    println!(
+        "  synthnet artifact: {bytes} bytes  save {}  cold load->executor {}",
+        fmt_time(t_save),
+        fmt_time(t_load)
+    );
+
+    // Serve-from-artifact throughput, direct executor path.
+    let exec = NativeIntExecutor::from_artifact(&path, max_batch).expect("from_artifact");
+    let (x, _) = SynthDigits::eval_set(880, max_batch);
+    let input = ExecInput::i32(quantize_input(&x, EPS_IN));
+    let (t_exec, _) = bench(2, 0.7, || {
+        std::hint::black_box(exec.run_batch(&input).expect("run"));
+    });
+    println!(
+        "  serve-from-artifact b={max_batch}: {} ({:.0} img/s, packed = {})",
+        fmt_time(t_exec),
+        max_batch as f64 / t_exec,
+        exec.packed()
+    );
+
+    // Coordinator throughput over the artifact-backed executor.
+    let model = ModelVariant::new("synthnet", Arc::new(exec));
+    let server = Server::start(
+        vec![model],
+        ServerConfig {
+            max_batch,
+            batch_timeout: Duration::from_micros(300),
+            n_workers: 2,
+        },
+    );
+    let n_requests = 2048usize;
+    let clients = 8usize;
+    let t0 = std::time::Instant::now();
+    let mut joins = Vec::new();
+    for c in 0..clients {
+        let h = server.handle();
+        let per = n_requests / clients;
+        joins.push(std::thread::spawn(move || {
+            let mut data = SynthDigits::new(881 + c as u64);
+            for _ in 0..per {
+                let (x, _) = data.batch(1);
+                let qx = quantize_input(&x, EPS_IN);
+                h.infer("synthnet", qx).expect("infer");
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let mut m = server.stop();
+    println!(
+        "  coordinator ({clients} clients): {:.0} req/s  p50 {:.3} ms  p99 {:.3} ms",
+        m.throughput(wall),
+        m.e2e_latency.percentile(0.50) * 1e3,
+        m.e2e_latency.percentile(0.99) * 1e3,
+    );
+
+    let doc = json::obj(vec![(
+        "artifact_bench",
+        json::obj(vec![
+            ("file_bytes", Value::Int(bytes as i64)),
+            ("save_s", Value::Num(t_save)),
+            ("cold_load_s", Value::Num(t_load)),
+            ("exec_batch_s", Value::Num(t_exec)),
+            ("exec_imgs_per_s", Value::Num(max_batch as f64 / t_exec)),
+            ("serve_req_per_s", Value::Num(m.throughput(wall))),
+            ("serve_p99_ms", Value::Num(m.e2e_latency.percentile(0.99) * 1e3)),
+        ]),
+    )]);
+    std::fs::write("BENCH_artifact.json", json::write(&doc))
+        .expect("write BENCH_artifact.json");
+    println!("  wrote BENCH_artifact.json");
+    let _ = std::fs::remove_file(&path);
 }
 
 // ---------------------------------------------------------------------------

@@ -298,7 +298,17 @@ fn dispatch(
         n_real: n,
         batch: mv.exec.effective_batch(n),
     };
-    let _ = jtx.send(job);
+    if let Err(mpsc::SendError(job)) = jtx.send(job) {
+        // The worker pool is gone (server shutting down). Dropping the
+        // job here used to drop the reply senders silently, so clients
+        // saw a misleading "server dropped request" with no failure
+        // recorded — answer with the real cause and count the failures.
+        fail_job(
+            &job,
+            metrics,
+            "server is shutting down: worker pool stopped before the batch ran",
+        );
+    }
 }
 
 fn worker_loop(
@@ -437,6 +447,44 @@ mod tests {
         assert!(integral_logits(&t).is_err());
         let t = TensorF::from_vec(&[1, 1], vec![1.0 + 2e-6]);
         assert!(integral_logits(&t).is_err());
+    }
+
+    struct IdentityExec;
+    impl Executor for IdentityExec {
+        fn name(&self) -> &str {
+            "stub"
+        }
+        fn input_shape(&self) -> &[usize] {
+            &[2]
+        }
+        fn max_batch(&self) -> usize {
+            4
+        }
+        fn run_batch(&self, input: &ExecInput) -> Result<crate::exec::ExecOutput> {
+            Ok(crate::exec::ExecOutput { logits: input.batch.clone() })
+        }
+    }
+
+    #[test]
+    fn dispatch_to_stopped_worker_pool_replies_with_shutdown_error() {
+        // Regression: a failed jtx.send(job) dropped the waiters' reply
+        // senders, so clients saw "server dropped request" and no failed
+        // metric was recorded.
+        let mv = ModelVariant::new("m", Arc::new(IdentityExec));
+        let (reply, rrx) = mpsc::sync_channel(1);
+        let req = Request {
+            model: "m".into(),
+            qx: Tensor::from_vec(&[1, 2], vec![1, 2]),
+            reply,
+            enqueued: Instant::now(),
+        };
+        let (jtx, jrx) = mpsc::channel::<Job>();
+        drop(jrx); // worker pool already gone
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        dispatch(&mv, std::slice::from_ref(&req), &jtx, &metrics);
+        let err = rrx.recv().expect("a reply must arrive").unwrap_err();
+        assert!(err.to_string().contains("shutting down"), "{err}");
+        assert_eq!(metrics.lock().unwrap().failed, 1);
     }
 
     #[test]

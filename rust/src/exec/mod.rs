@@ -24,7 +24,7 @@ pub use pjrt::PjrtExecutor;
 
 use std::sync::Mutex;
 
-use anyhow::{bail, ensure, Result};
+use anyhow::{bail, ensure, Context as _, Result};
 
 use crate::engine::plan::{Arena, FloatPlan, IntArena, IntPlan, PackedArena, PlanLayout};
 use crate::graph::int::IntGraph;
@@ -223,6 +223,22 @@ impl NativeIntExecutor {
         Ok(NativeIntExecutor { plan, plans, input_shape, max_batch, eps_out })
     }
 
+    /// Build the executor straight from a saved native deployment
+    /// artifact (`model.nemo.json`): load + checksum validation +
+    /// precision re-proof + plan compilation — serving with zero
+    /// training or transform work. This is the `nemo serve --model`
+    /// cold-start path.
+    pub fn from_artifact(
+        path: impl AsRef<std::path::Path>,
+        max_batch: usize,
+    ) -> Result<Self> {
+        let path = path.as_ref();
+        let art = crate::io::DeployedArtifact::load(path).with_context(|| {
+            format!("loading deployed model artifact {}", path.display())
+        })?;
+        Self::new(art.into_int_graph(), max_batch)
+    }
+
     /// Quantum of the output integer image (real logits ~ eps_out * Q).
     pub fn eps_out(&self) -> f64 {
         self.eps_out
@@ -412,6 +428,34 @@ mod tests {
         let qx = Tensor::from_vec(&[1, 2], vec![40000, 2]);
         let out = exec.run_batch(&ExecInput::i32(qx)).unwrap();
         assert_eq!(out.int_logits().unwrap().data(), &[40000, 2]);
+    }
+
+    #[test]
+    fn from_artifact_builds_a_bit_identical_executor() {
+        let g = identity_int_graph();
+        let art = crate::io::DeployedArtifact {
+            graph: g.clone(),
+            layers: vec![],
+            node_eps: vec![1.0; g.nodes.len()],
+            worst_case: vec![255, 510],
+            meta: Default::default(),
+        };
+        let path = std::env::temp_dir()
+            .join(format!("nemo_exec_artifact_{}.nemo.json", std::process::id()));
+        art.save(&path).unwrap();
+        let exec = NativeIntExecutor::from_artifact(&path, 4).unwrap();
+        assert_eq!(exec.input_shape(), &[2]);
+        let qx = Tensor::from_vec(&[2, 2], vec![9, 0, 255, 3]);
+        let out = exec.run_batch(&ExecInput::i32(qx.clone())).unwrap();
+        let want = NativeIntExecutor::new(g, 4)
+            .unwrap()
+            .run_batch(&ExecInput::i32(qx))
+            .unwrap();
+        assert_eq!(
+            out.int_logits().unwrap().data(),
+            want.int_logits().unwrap().data()
+        );
+        let _ = std::fs::remove_file(path);
     }
 
     #[test]

@@ -144,6 +144,38 @@ impl IntGraph {
     pub fn precisions(&self) -> Vec<Precision> {
         self.nodes.iter().map(|n| n.precision).collect()
     }
+
+    /// Structural validation for graphs assembled outside [`Self::push`]
+    /// (e.g. reconstructed from a deserialized deployment artifact,
+    /// where a corrupt file must yield an error rather than trip push's
+    /// forward-reference assertion): ids must be dense and in order,
+    /// inputs must point strictly backwards, and the output must exist.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.nodes.is_empty() {
+            return Err("integer graph has no nodes".into());
+        }
+        for (i, n) in self.nodes.iter().enumerate() {
+            if n.id != i {
+                return Err(format!("node at position {i} carries id {}", n.id));
+            }
+            for &inp in &n.inputs {
+                if inp >= i {
+                    return Err(format!(
+                        "node {i} ('{}') references input {inp} (forward or self)",
+                        n.name
+                    ));
+                }
+            }
+        }
+        if self.output >= self.nodes.len() {
+            return Err(format!(
+                "output id {} out of bounds ({} nodes)",
+                self.output,
+                self.nodes.len()
+            ));
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]

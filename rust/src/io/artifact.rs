@@ -1,0 +1,836 @@
+//! Native deployment artifacts: save/load a complete IntegerDeployable
+//! model as a single self-contained JSON file (`model.nemo.json`).
+//!
+//! The paper's IntegerDeployable representation is a frozen integer
+//! program — topology, packed weights, requantization parameters
+//! `(m, d, lo, hi)`, integer BN / thresholds, per-node storage precision
+//! stamps and the eps bookkeeping needed to interpret the output. This
+//! module makes that program the primary shipping unit: `nemo deploy
+//! --save m.nemo.json` writes it once, `nemo serve --model m.nemo.json`
+//! serves it anywhere with zero training or transform work, and the
+//! loader guarantees bit-identity with the in-memory network that
+//! produced the file (DESIGN.md §Artifact-format).
+//!
+//! Integrity contract, enforced on load:
+//!
+//! * `format` / `version` fields gate the schema — wrong ones are typed
+//!   errors, never a best-effort parse;
+//! * a FNV-1a 64 checksum over the canonical JSON of the `model` subtree
+//!   detects corruption and hand edits;
+//! * weight payloads are stored at their packed precision (`u8`/`i8`
+//!   payloads for sub-word grids, `i32` for wide) and re-narrowed through
+//!   [`QTensor::narrow_from`] on load, so an out-of-range payload value
+//!   fails loudly;
+//! * every node's stamped [`Precision`] is re-proved by
+//!   [`infer_precision`] after reconstruction — a tampered stamp cannot
+//!   reach the packed kernels.
+
+use std::path::Path;
+
+use crate::graph::int::{IntGraph, IntOp};
+use crate::graph::shape::{infer_precision, ShapeError};
+use crate::graph::Graph;
+use crate::network::StageMeta;
+use crate::quant::bn::{BnQuant, Thresholds};
+use crate::quant::requant::Requant;
+use crate::quant::{Precision, QuantSpec};
+use crate::tensor::{QTensor, Tensor, TensorI};
+use crate::transform::{Deployed, LayerQuant};
+use crate::util::json::{self, JsonError, Value};
+
+/// Magic format tag of a native deployment artifact.
+pub const FORMAT: &str = "nemo-deployed-model";
+/// Schema version this build writes and reads.
+pub const VERSION: i64 = 1;
+
+#[derive(Debug, thiserror::Error)]
+pub enum ArtifactError {
+    #[error("artifact I/O at {path}: {source}")]
+    Io {
+        path: String,
+        #[source]
+        source: std::io::Error,
+    },
+    #[error("artifact JSON: {0}")]
+    Json(#[from] JsonError),
+    #[error("not a NEMO deployment artifact: expected format '{FORMAT}', found '{found}'")]
+    Format { found: String },
+    #[error(
+        "unsupported artifact format version {found} (this build reads version {VERSION})"
+    )]
+    Version { found: i64 },
+    #[error(
+        "artifact checksum mismatch: stored {stored}, computed {computed} — \
+         the file is corrupted or was edited by hand"
+    )]
+    Checksum { stored: String, computed: String },
+    #[error("malformed artifact model: {0}")]
+    Model(String),
+    #[error("precision re-proof failed on load: {0}")]
+    Precision(#[from] ShapeError),
+}
+
+/// A deserialization-ready image of a deployed model: the integer graph
+/// with its precision stamps, the per-layer quantization table, per-node
+/// eps / worst-case diagnostics, and the pipeline stage metadata. The QD
+/// float twin is deliberately NOT shipped — the artifact is the paper's
+/// float-free integer program, nothing else.
+#[derive(Clone, Debug)]
+pub struct DeployedArtifact {
+    pub graph: IntGraph,
+    pub layers: Vec<LayerQuant>,
+    pub node_eps: Vec<f64>,
+    pub worst_case: Vec<i64>,
+    pub meta: StageMeta,
+}
+
+impl DeployedArtifact {
+    /// Snapshot a deployment record (plus its stage metadata) for saving.
+    pub fn from_deployed(dep: &Deployed, meta: &StageMeta) -> Self {
+        DeployedArtifact {
+            graph: dep.id.clone(),
+            layers: dep.layers.clone(),
+            node_eps: dep.node_eps.clone(),
+            worst_case: dep.worst_case.clone(),
+            meta: meta.clone(),
+        }
+    }
+
+    /// Quantum of the model's input space (from the Input node spec).
+    pub fn eps_in(&self) -> f64 {
+        self.graph
+            .nodes
+            .iter()
+            .find_map(|n| match &n.op {
+                IntOp::Input { spec, .. } => Some(spec.eps),
+                _ => None,
+            })
+            .unwrap_or(1.0 / 255.0)
+    }
+
+    /// Release the integer graph (for executor construction).
+    pub fn into_int_graph(self) -> IntGraph {
+        self.graph
+    }
+
+    /// Reassemble a [`Deployed`] record. The QD float twin is not part
+    /// of the artifact, so `Deployed::qd` comes back as an *empty* float
+    /// graph — the integer program is complete, float diagnostics that
+    /// need the twin (e.g. per-node QD-vs-ID comparison) are not
+    /// available on a loaded model.
+    pub fn into_deployed(self) -> (Deployed, StageMeta) {
+        let eps_in = self.eps_in();
+        let eps_out = self.graph.eps_out;
+        let meta = self.meta;
+        let dep = Deployed {
+            qd: Graph::new(eps_in),
+            id: self.graph,
+            layers: self.layers,
+            eps_out,
+            worst_case: self.worst_case,
+            node_eps: self.node_eps,
+        };
+        (dep, meta)
+    }
+
+    /// Serialize to the versioned, checksummed artifact document.
+    pub fn to_json(&self) -> Value {
+        doc_of(model_value(
+            &self.graph,
+            &self.layers,
+            &self.node_eps,
+            &self.worst_case,
+            &self.meta,
+        ))
+    }
+
+    /// Write `model.nemo.json` to `path`.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<(), ArtifactError> {
+        write_doc(&self.to_json(), path.as_ref())
+    }
+
+    /// Serialize straight from a borrowed deployment record — the
+    /// `Network::save_deployed` path. Unlike [`Self::from_deployed`] +
+    /// [`Self::save`], this never clones the weight tensors, so saving
+    /// a large model does not double its peak memory.
+    pub fn save_parts(
+        dep: &Deployed,
+        meta: &StageMeta,
+        path: impl AsRef<Path>,
+    ) -> Result<(), ArtifactError> {
+        let doc = doc_of(model_value(
+            &dep.id,
+            &dep.layers,
+            &dep.node_eps,
+            &dep.worst_case,
+            meta,
+        ));
+        write_doc(&doc, path.as_ref())
+    }
+
+    /// Load and fully validate an artifact: format/version gate, checksum
+    /// over the model subtree, structural graph validation, payload
+    /// range checks and the precision re-proof.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self, ArtifactError> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path).map_err(|source| {
+            ArtifactError::Io { path: path.display().to_string(), source }
+        })?;
+        Self::from_json(&json::parse(&text)?)
+    }
+
+    /// Decode a parsed artifact document (the inverse of [`Self::to_json`]).
+    pub fn from_json(v: &Value) -> Result<Self, ArtifactError> {
+        let found = v
+            .get_opt("format")
+            .and_then(|f| f.as_str().ok())
+            .unwrap_or("<missing>")
+            .to_string();
+        if found != FORMAT {
+            return Err(ArtifactError::Format { found });
+        }
+        let version = v.get("version")?.as_i64()?;
+        if version != VERSION {
+            return Err(ArtifactError::Version { found: version });
+        }
+        let stored = v.get("checksum")?.as_str()?.to_string();
+        let model = v.get("model")?;
+        let computed = checksum_of(model);
+        if stored != computed {
+            return Err(ArtifactError::Checksum { stored, computed });
+        }
+        decode_model(model)
+    }
+}
+
+// -- encoding ---------------------------------------------------------
+
+/// Wrap a model subtree in the versioned, checksummed document.
+fn doc_of(model: Value) -> Value {
+    let checksum = checksum_of(&model);
+    json::obj(vec![
+        ("format", Value::Str(FORMAT.to_string())),
+        ("version", Value::Int(VERSION)),
+        ("checksum", Value::Str(checksum)),
+        ("model", model),
+    ])
+}
+
+fn write_doc(doc: &Value, path: &Path) -> Result<(), ArtifactError> {
+    std::fs::write(path, json::write(doc)).map_err(|source| ArtifactError::Io {
+        path: path.display().to_string(),
+        source,
+    })
+}
+
+fn model_value(
+    graph: &IntGraph,
+    layers: &[LayerQuant],
+    node_eps: &[f64],
+    worst_case: &[i64],
+    meta: &StageMeta,
+) -> Value {
+    let nodes: Vec<Value> = graph.nodes.iter().map(node_value).collect();
+    json::obj(vec![
+        ("eps_out", Value::Num(graph.eps_out)),
+        (
+            "graph",
+            json::obj(vec![
+                ("output", Value::Int(graph.output as i64)),
+                ("nodes", Value::Arr(nodes)),
+            ]),
+        ),
+        (
+            "meta",
+            json::obj(vec![
+                ("act_betas", json::arr_f64(&meta.act_betas)),
+                ("wbits", Value::Int(meta.wbits as i64)),
+                ("abits", Value::Int(meta.abits as i64)),
+                ("bn_folded", Value::Bool(meta.bn_folded)),
+            ]),
+        ),
+        ("layers", Value::Arr(layers.iter().map(layer_value).collect())),
+        ("node_eps", json::arr_f64(node_eps)),
+        ("worst_case", json::arr_i64(worst_case)),
+    ])
+}
+
+/// FNV-1a 64 over the canonical JSON serialization of the model subtree.
+/// The writer is deterministic (BTreeMap key order, exact shortest-float
+/// formatting) and numbers round-trip bit-exactly, so parse → re-write →
+/// hash reproduces the saved checksum on an intact file.
+fn checksum_of(model: &Value) -> String {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in json::write(model).as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    format!("fnv1a64:{h:016x}")
+}
+
+fn usize_arr_value(v: &[usize]) -> Value {
+    Value::Arr(v.iter().map(|x| Value::Int(*x as i64)).collect())
+}
+
+fn i32_arr_value(v: &[i32]) -> Value {
+    Value::Arr(v.iter().map(|x| Value::Int(*x as i64)).collect())
+}
+
+fn requant_value(rq: &Requant) -> Value {
+    json::obj(vec![
+        ("m", Value::Int(rq.m)),
+        ("d", Value::Int(rq.d as i64)),
+        ("lo", Value::Int(rq.lo)),
+        ("hi", Value::Int(rq.hi)),
+    ])
+}
+
+/// Weight payload at its packed precision: the tightest storage class
+/// containing the data range, tagged so the loader re-narrows (and
+/// thereby range-checks) the payload.
+fn weight_value(wq: &TensorI) -> Value {
+    let lo = wq.data().iter().copied().min().unwrap_or(0) as i64;
+    let hi = wq.data().iter().copied().max().unwrap_or(0) as i64;
+    let p = Precision::for_range(lo, hi);
+    json::obj(vec![
+        ("dtype", Value::Str(p.name().to_string())),
+        ("shape", usize_arr_value(wq.shape())),
+        ("data", i32_arr_value(wq.data())),
+    ])
+}
+
+fn node_value(n: &crate::graph::int::IntNode) -> Value {
+    let params = match &n.op {
+        IntOp::Input { shape, spec } => json::obj(vec![
+            ("shape", usize_arr_value(shape)),
+            ("eps", Value::Num(spec.eps)),
+            ("lo", Value::Int(spec.lo)),
+            ("hi", Value::Int(spec.hi)),
+        ]),
+        IntOp::ConvInt { wq, bias_q, cin, kh, kw, stride, pad } => {
+            let mut fields = vec![
+                ("w", weight_value(wq)),
+                ("cin", Value::Int(*cin as i64)),
+                ("kh", Value::Int(*kh as i64)),
+                ("kw", Value::Int(*kw as i64)),
+                ("stride", Value::Int(*stride as i64)),
+                ("pad", Value::Int(*pad as i64)),
+            ];
+            if let Some(b) = bias_q {
+                fields.push(("bias", json::arr_i64(b)));
+            }
+            json::obj(fields)
+        }
+        IntOp::LinearInt { wq, bias_q } => {
+            let mut fields = vec![("w", weight_value(wq))];
+            if let Some(b) = bias_q {
+                fields.push(("bias", json::arr_i64(b)));
+            }
+            json::obj(fields)
+        }
+        IntOp::IntBn { bn } => json::obj(vec![
+            ("kappa_q", i32_arr_value(&bn.kappa_q)),
+            ("lambda_q", i32_arr_value(&bn.lambda_q)),
+            ("eps_kappa", Value::Num(bn.eps_kappa)),
+            ("eps_phi_out", Value::Num(bn.eps_phi_out)),
+        ]),
+        IntOp::RequantAct { rq } => requant_value(rq),
+        IntOp::ThreshAct { th } => json::obj(vec![
+            ("n_levels", Value::Int(th.n_levels)),
+            (
+                "th",
+                Value::Arr(th.th.iter().map(|c| json::arr_i64(c)).collect()),
+            ),
+        ]),
+        IntOp::AvgPoolInt { k, d } => json::obj(vec![
+            ("k", Value::Int(*k as i64)),
+            ("d", Value::Int(*d as i64)),
+        ]),
+        IntOp::MaxPoolInt { k } => json::obj(vec![("k", Value::Int(*k as i64))]),
+        IntOp::Flatten => json::obj(vec![]),
+        IntOp::AddRequant { rqs } => json::obj(vec![(
+            "rqs",
+            Value::Arr(rqs.iter().map(requant_value).collect()),
+        )]),
+    };
+    json::obj(vec![
+        ("name", Value::Str(n.name.clone())),
+        ("op", Value::Str(n.op.name().to_string())),
+        (
+            "inputs",
+            Value::Arr(n.inputs.iter().map(|i| Value::Int(*i as i64)).collect()),
+        ),
+        ("precision", Value::Str(n.precision.name().to_string())),
+        ("params", params),
+    ])
+}
+
+fn layer_value(l: &LayerQuant) -> Value {
+    json::obj(vec![
+        ("name", Value::Str(l.name.clone())),
+        ("beta_w", Value::Num(l.beta_w)),
+        ("eps_w", Value::Num(l.eps_w)),
+        ("eps_phi", Value::Num(l.eps_phi)),
+        ("eps_kappa", Value::Num(l.eps_kappa)),
+        ("eps_phi_out", Value::Num(l.eps_phi_out)),
+        ("beta_y", Value::Num(l.beta_y)),
+        ("eps_y", Value::Num(l.eps_y)),
+        ("d", Value::Int(l.d as i64)),
+        ("m", Value::Int(l.m)),
+        ("act_hi", Value::Int(l.act_hi)),
+    ])
+}
+
+// -- decoding ---------------------------------------------------------
+
+fn model_err(msg: impl Into<String>) -> ArtifactError {
+    ArtifactError::Model(msg.into())
+}
+
+fn as_usize(v: &Value, what: &str) -> Result<usize, ArtifactError> {
+    let i = v.as_i64()?;
+    usize::try_from(i).map_err(|_| model_err(format!("{what}: {i} is negative")))
+}
+
+fn usize_arr(v: &Value, what: &str) -> Result<Vec<usize>, ArtifactError> {
+    v.as_arr()?.iter().map(|e| as_usize(e, what)).collect()
+}
+
+fn i64_arr(v: &Value) -> Result<Vec<i64>, ArtifactError> {
+    Ok(v.as_arr()?
+        .iter()
+        .map(|e| e.as_i64())
+        .collect::<Result<Vec<_>, _>>()?)
+}
+
+fn i32_arr(v: &Value, what: &str) -> Result<Vec<i32>, ArtifactError> {
+    i64_arr(v)?
+        .into_iter()
+        .map(|x| {
+            i32::try_from(x)
+                .map_err(|_| model_err(format!("{what}: {x} does not fit i32")))
+        })
+        .collect()
+}
+
+fn f64_arr(v: &Value) -> Result<Vec<f64>, ArtifactError> {
+    Ok(v.as_arr()?
+        .iter()
+        .map(|e| e.as_f64())
+        .collect::<Result<Vec<_>, _>>()?)
+}
+
+/// A shift width; bounds-checked so a crafted artifact cannot make the
+/// engines execute an over-wide (panicking) `>>`.
+fn shift_d(v: &Value, what: &str) -> Result<u32, ArtifactError> {
+    let d = v.as_i64()?;
+    if !(0..=63).contains(&d) {
+        return Err(model_err(format!("{what}: shift d = {d} outside 0..=63")));
+    }
+    Ok(d as u32)
+}
+
+fn decode_requant(v: &Value, what: &str) -> Result<Requant, ArtifactError> {
+    let rq = Requant {
+        m: v.get("m")?.as_i64()?,
+        d: shift_d(v.get("d")?, what)?,
+        lo: v.get("lo")?.as_i64()?,
+        hi: v.get("hi")?.as_i64()?,
+    };
+    if rq.lo > rq.hi {
+        return Err(model_err(format!(
+            "{what}: clip range [{}, {}] is empty",
+            rq.lo, rq.hi
+        )));
+    }
+    Ok(rq)
+}
+
+/// Decode a weight payload: dtype-tagged flat int array + shape. The
+/// payload is narrowed through [`QTensor::narrow_from`] (loud on any
+/// value outside the declared precision) and widened back to the i32
+/// weight tensor the graph ops carry.
+fn decode_weights(v: &Value, what: &str) -> Result<TensorI, ArtifactError> {
+    let dtype = v.get("dtype")?.as_str()?;
+    let p = Precision::from_name(dtype)
+        .ok_or_else(|| model_err(format!("{what}: unknown weight dtype '{dtype}'")))?;
+    let shape = usize_arr(v.get("shape")?, what)?;
+    let data = i32_arr(v.get("data")?, what)?;
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        return Err(model_err(format!(
+            "{what}: shape {shape:?} wants {n} values, payload has {}",
+            data.len()
+        )));
+    }
+    let t = Tensor::from_vec(&shape, data);
+    let q = QTensor::narrow_from(&t, p)
+        .map_err(|e| model_err(format!("{what}: weight payload {e}")))?;
+    Ok(q.widen())
+}
+
+fn decode_op(op: &str, p: &Value, what: &str) -> Result<IntOp, ArtifactError> {
+    Ok(match op {
+        "Input" => {
+            let spec = QuantSpec {
+                eps: p.get("eps")?.as_f64()?,
+                lo: p.get("lo")?.as_i64()?,
+                hi: p.get("hi")?.as_i64()?,
+            };
+            if !spec.eps.is_finite() || spec.eps <= 0.0 {
+                return Err(model_err(format!(
+                    "{what}: input eps {} must be a positive finite value",
+                    spec.eps
+                )));
+            }
+            if spec.lo > spec.hi {
+                return Err(model_err(format!(
+                    "{what}: input range [{}, {}] is empty",
+                    spec.lo, spec.hi
+                )));
+            }
+            IntOp::Input { shape: usize_arr(p.get("shape")?, what)?, spec }
+        }
+        "ConvInt" => IntOp::ConvInt {
+            wq: decode_weights(p.get("w")?, what)?,
+            bias_q: p.get_opt("bias").map(i64_arr).transpose()?,
+            cin: as_usize(p.get("cin")?, what)?,
+            kh: as_usize(p.get("kh")?, what)?,
+            kw: as_usize(p.get("kw")?, what)?,
+            stride: as_usize(p.get("stride")?, what)?,
+            pad: as_usize(p.get("pad")?, what)?,
+        },
+        "LinearInt" => IntOp::LinearInt {
+            wq: decode_weights(p.get("w")?, what)?,
+            bias_q: p.get_opt("bias").map(i64_arr).transpose()?,
+        },
+        "IntBn" => {
+            let kappa_q = i32_arr(p.get("kappa_q")?, what)?;
+            let lambda_q = i32_arr(p.get("lambda_q")?, what)?;
+            if kappa_q.len() != lambda_q.len() {
+                return Err(model_err(format!(
+                    "{what}: kappa_q ({}) and lambda_q ({}) lengths differ",
+                    kappa_q.len(),
+                    lambda_q.len()
+                )));
+            }
+            IntOp::IntBn {
+                bn: BnQuant {
+                    kappa_q,
+                    lambda_q,
+                    eps_kappa: p.get("eps_kappa")?.as_f64()?,
+                    eps_phi_out: p.get("eps_phi_out")?.as_f64()?,
+                },
+            }
+        }
+        "RequantAct" => IntOp::RequantAct { rq: decode_requant(p, what)? },
+        "ThreshAct" => {
+            let n_levels = p.get("n_levels")?.as_i64()?;
+            let th: Vec<Vec<i64>> = p
+                .get("th")?
+                .as_arr()?
+                .iter()
+                .map(i64_arr)
+                .collect::<Result<_, _>>()?;
+            for (c, t) in th.iter().enumerate() {
+                if t.len() as i64 != n_levels {
+                    return Err(model_err(format!(
+                        "{what}: channel {c} has {} thresholds, n_levels = {n_levels}",
+                        t.len()
+                    )));
+                }
+                if t.windows(2).any(|w| w[0] > w[1]) {
+                    return Err(model_err(format!(
+                        "{what}: channel {c} thresholds are not ascending"
+                    )));
+                }
+            }
+            IntOp::ThreshAct { th: Thresholds { th, n_levels } }
+        }
+        "AvgPoolInt" => IntOp::AvgPoolInt {
+            k: as_usize(p.get("k")?, what)?,
+            d: shift_d(p.get("d")?, what)?,
+        },
+        "MaxPoolInt" => IntOp::MaxPoolInt { k: as_usize(p.get("k")?, what)? },
+        "Flatten" => IntOp::Flatten,
+        "AddRequant" => IntOp::AddRequant {
+            rqs: p
+                .get("rqs")?
+                .as_arr()?
+                .iter()
+                .map(|r| decode_requant(r, what))
+                .collect::<Result<_, _>>()?,
+        },
+        other => return Err(model_err(format!("{what}: unknown op '{other}'"))),
+    })
+}
+
+fn decode_model(model: &Value) -> Result<DeployedArtifact, ArtifactError> {
+    let graph_v = model.get("graph")?;
+    let nodes_v = graph_v.get("nodes")?.as_arr()?;
+    if nodes_v.is_empty() {
+        return Err(model_err("graph has no nodes"));
+    }
+    let mut graph = IntGraph::default();
+    let mut stamps: Vec<Precision> = Vec::with_capacity(nodes_v.len());
+    for (idx, nv) in nodes_v.iter().enumerate() {
+        let name = nv.get("name")?.as_str()?.to_string();
+        let what = format!("node {idx} '{name}'");
+        let inputs = usize_arr(nv.get("inputs")?, &what)?;
+        // Validate before push: IntGraph::push asserts on forward refs,
+        // and a corrupt file must produce an error, not a panic.
+        if let Some(&bad) = inputs.iter().find(|&&i| i >= idx) {
+            return Err(model_err(format!(
+                "{what}: input {bad} is a forward or self reference"
+            )));
+        }
+        let op_name = nv.get("op")?.as_str()?;
+        let op = decode_op(op_name, nv.get("params")?, &what)?;
+        let p_name = nv.get("precision")?.as_str()?;
+        let p = Precision::from_name(p_name).ok_or_else(|| {
+            model_err(format!("{what}: unknown precision '{p_name}'"))
+        })?;
+        graph.push(&name, op, &inputs);
+        stamps.push(p);
+    }
+    for (id, p) in stamps.into_iter().enumerate() {
+        graph.stamp_precision(id, p);
+    }
+    graph.output = as_usize(graph_v.get("output")?, "graph output")?;
+    graph.eps_out = model.get("eps_out")?.as_f64()?;
+    graph.validate().map_err(ArtifactError::Model)?;
+    // Precision re-proof: the stored stamps must still be sound for the
+    // reconstructed ops before any packed kernel dispatches on them.
+    infer_precision(&graph)?;
+
+    let meta_v = model.get("meta")?;
+    let meta = StageMeta {
+        act_betas: f64_arr(meta_v.get("act_betas")?)?,
+        wbits: meta_v.get("wbits")?.as_i64()? as u32,
+        abits: meta_v.get("abits")?.as_i64()? as u32,
+        bn_folded: meta_v.get("bn_folded")?.as_bool()?,
+    };
+    let layers = model
+        .get("layers")?
+        .as_arr()?
+        .iter()
+        .enumerate()
+        .map(|(i, lv)| decode_layer(lv, i))
+        .collect::<Result<Vec<_>, _>>()?;
+    let node_eps = f64_arr(model.get("node_eps")?)?;
+    let worst_case = i64_arr(model.get("worst_case")?)?;
+    if node_eps.len() != graph.nodes.len() {
+        return Err(model_err(format!(
+            "node_eps has {} entries for {} nodes",
+            node_eps.len(),
+            graph.nodes.len()
+        )));
+    }
+    // worst_case is per *source-graph* node (the deploy range analysis),
+    // so its length legitimately differs from the ID node count — but an
+    // empty vector would panic diagnostics like `worst_case.iter().max()`.
+    if worst_case.is_empty() {
+        return Err(model_err("worst_case range analysis is empty"));
+    }
+    Ok(DeployedArtifact { graph, layers, node_eps, worst_case, meta })
+}
+
+fn decode_layer(lv: &Value, i: usize) -> Result<LayerQuant, ArtifactError> {
+    let what = format!("layer {i}");
+    Ok(LayerQuant {
+        name: lv.get("name")?.as_str()?.to_string(),
+        beta_w: lv.get("beta_w")?.as_f64()?,
+        eps_w: lv.get("eps_w")?.as_f64()?,
+        eps_phi: lv.get("eps_phi")?.as_f64()?,
+        eps_kappa: lv.get("eps_kappa")?.as_f64()?,
+        eps_phi_out: lv.get("eps_phi_out")?.as_f64()?,
+        beta_y: lv.get("beta_y")?.as_f64()?,
+        eps_y: lv.get("eps_y")?.as_f64()?,
+        d: shift_d(lv.get("d")?, &what)?,
+        m: lv.get("m")?.as_i64()?,
+        act_hi: lv.get("act_hi")?.as_i64()?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::mlp;
+    use crate::network::Network;
+    use crate::quant::quantize_input;
+    use crate::tensor::TensorF;
+    use crate::transform::DeployOptions;
+    use crate::util::rng::Rng;
+
+    fn deployed_mlp(seed: u64) -> (Deployed, StageMeta, TensorF) {
+        let mut rng = Rng::new(seed);
+        let g = mlp(&mut rng, 12, 10, 4, 1.0 / 255.0);
+        let x = TensorF::from_vec(
+            &[3, 12],
+            (0..36).map(|_| rng.uniform(0.0, 1.0) as f32).collect(),
+        );
+        let fp = Network::from_graph(g).unwrap();
+        let betas = fp.calibrate(&[x.clone()]);
+        let nid = fp
+            .quantize_pact(8, 8, &betas)
+            .unwrap()
+            .deploy(DeployOptions::default())
+            .unwrap()
+            .integerize();
+        let meta = nid.meta().clone();
+        (nid.into_deployed(), meta, x)
+    }
+
+    #[test]
+    fn json_roundtrip_is_bit_identical() {
+        let (dep, meta, x) = deployed_mlp(5);
+        let art = DeployedArtifact::from_deployed(&dep, &meta);
+        let doc = art.to_json();
+        let back = DeployedArtifact::from_json(&doc).unwrap();
+        assert_eq!(back.graph.nodes.len(), dep.id.nodes.len());
+        assert_eq!(back.graph.precisions(), dep.id.precisions());
+        assert_eq!(back.graph.eps_out.to_bits(), dep.id.eps_out.to_bits());
+        assert_eq!(back.meta.wbits, meta.wbits);
+        assert_eq!(back.layers.len(), dep.layers.len());
+        // Bit-identity of the frozen program: same logits on real input.
+        let qx = quantize_input(&x, 1.0 / 255.0);
+        let want = crate::engine::IntegerEngine::new().run(&dep.id, &qx);
+        let got = crate::engine::IntegerEngine::new().run(&back.graph, &qx);
+        assert_eq!(want, got);
+    }
+
+    #[test]
+    fn wrong_format_and_version_are_typed_errors() {
+        let (dep, meta, _) = deployed_mlp(6);
+        let art = DeployedArtifact::from_deployed(&dep, &meta);
+        let doc = art.to_json();
+        let mut wrong_fmt = doc.clone();
+        if let Value::Obj(o) = &mut wrong_fmt {
+            o.insert("format".into(), Value::Str("something-else".into()));
+        }
+        assert!(matches!(
+            DeployedArtifact::from_json(&wrong_fmt),
+            Err(ArtifactError::Format { .. })
+        ));
+        let mut wrong_ver = doc;
+        if let Value::Obj(o) = &mut wrong_ver {
+            o.insert("version".into(), Value::Int(VERSION + 1));
+        }
+        assert!(matches!(
+            DeployedArtifact::from_json(&wrong_ver),
+            Err(ArtifactError::Version { found }) if found == VERSION + 1
+        ));
+    }
+
+    #[test]
+    fn tampered_model_fails_the_checksum() {
+        let (dep, meta, _) = deployed_mlp(7);
+        let art = DeployedArtifact::from_deployed(&dep, &meta);
+        let mut doc = art.to_json();
+        if let Value::Obj(o) = &mut doc {
+            let model = o.get_mut("model").unwrap();
+            if let Value::Obj(m) = model {
+                m.insert("eps_out".into(), Value::Num(0.5));
+            }
+        }
+        assert!(matches!(
+            DeployedArtifact::from_json(&doc),
+            Err(ArtifactError::Checksum { .. })
+        ));
+    }
+
+    #[test]
+    fn weight_payloads_are_packed_and_range_checked() {
+        let (dep, meta, _) = deployed_mlp(8);
+        let art = DeployedArtifact::from_deployed(&dep, &meta);
+        let doc = art.to_json();
+        // 8-bit weight grids must ship as sub-word payloads.
+        let nodes = doc
+            .get("model")
+            .unwrap()
+            .get("graph")
+            .unwrap()
+            .get("nodes")
+            .unwrap()
+            .as_arr()
+            .unwrap();
+        let mut saw_weight = false;
+        for n in nodes {
+            if let Some(w) = n.get("params").unwrap().get_opt("w") {
+                saw_weight = true;
+                let dtype = w.get("dtype").unwrap().as_str().unwrap();
+                assert_ne!(dtype, "i32", "8-bit weight grid stored wide");
+            }
+        }
+        assert!(saw_weight, "mlp must contain weight payloads");
+        // A payload value outside the declared sub-word dtype is loud.
+        let mut doc2 = art.to_json();
+        let model = match &mut doc2 {
+            Value::Obj(o) => o.get_mut("model").unwrap(),
+            _ => unreachable!(),
+        };
+        // Corrupt one weight value inside the declared i8 payload, then
+        // re-stamp the checksum so only the payload check can fire.
+        fn first_weight_data(model: &mut Value) -> &mut Vec<Value> {
+            let nodes = match model {
+                Value::Obj(m) => match m.get_mut("graph").unwrap() {
+                    Value::Obj(g) => match g.get_mut("nodes").unwrap() {
+                        Value::Arr(a) => a,
+                        _ => unreachable!(),
+                    },
+                    _ => unreachable!(),
+                },
+                _ => unreachable!(),
+            };
+            for n in nodes {
+                if let Value::Obj(no) = n {
+                    if let Some(Value::Obj(p)) = no.get_mut("params") {
+                        if let Some(Value::Obj(w)) = p.get_mut("w") {
+                            if let Some(Value::Arr(d)) = w.get_mut("data") {
+                                return d;
+                            }
+                        }
+                    }
+                }
+            }
+            panic!("no weight payload found");
+        }
+        first_weight_data(model)[0] = Value::Int(100_000);
+        let checksum = checksum_of(model);
+        if let Value::Obj(o) = &mut doc2 {
+            o.insert("checksum".into(), Value::Str(checksum));
+        }
+        let err = DeployedArtifact::from_json(&doc2).unwrap_err();
+        assert!(
+            matches!(err, ArtifactError::Model(_)),
+            "expected payload range error, got {err}"
+        );
+    }
+
+    #[test]
+    fn file_roundtrip_and_corruption() {
+        let (dep, meta, x) = deployed_mlp(9);
+        let art = DeployedArtifact::from_deployed(&dep, &meta);
+        let path = std::env::temp_dir()
+            .join(format!("nemo_artifact_unit_{}.nemo.json", std::process::id()));
+        art.save(&path).unwrap();
+        let back = DeployedArtifact::load(&path).unwrap();
+        let qx = quantize_input(&x, 1.0 / 255.0);
+        assert_eq!(
+            crate::engine::IntegerEngine::new().run(&dep.id, &qx),
+            crate::engine::IntegerEngine::new().run(&back.graph, &qx)
+        );
+        // Flip one byte inside the model payload: load must fail loudly.
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        let pos = text.find("\"worst_case\":[").unwrap() + "\"worst_case\":[".len();
+        let orig = text.as_bytes()[pos];
+        let repl = if orig == b'1' { '2' } else { '1' };
+        text.replace_range(pos..pos + 1, &repl.to_string());
+        std::fs::write(&path, &text).unwrap();
+        assert!(matches!(
+            DeployedArtifact::load(&path),
+            Err(ArtifactError::Checksum { .. })
+        ));
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -5,6 +5,15 @@
 //! `artifacts/goldens.json` (cross-language validation vectors); this
 //! module loads both. Checkpoints (trained parameters) are stored as JSON
 //! with full-precision f64 values — small models, exact round-trips.
+//!
+//! [`artifact`] is the *native* deployment format: a versioned,
+//! checksummed `model.nemo.json` holding a complete IntegerDeployable
+//! program — no Python, no PJRT manifest, no training step needed to
+//! serve it (DESIGN.md §Artifact-format).
+
+pub mod artifact;
+
+pub use artifact::{ArtifactError, DeployedArtifact};
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};

@@ -66,9 +66,10 @@ fn main() {
 
 const USAGE: &str = "usage: nemo <train|deploy|infer|serve|validate|info> [--flags]
   train    --steps N --fq-steps N --bits B --lr F --seed N --out ck.json
-  deploy   --ckpt ck.json --bits B --thresholds
+  deploy   --ckpt ck.json --bits B --thresholds --save m.nemo.json
   infer    --ckpt ck.json --n N --bits B
   serve    --ckpt ck.json --backend native|pjrt --requests N --clients C --max-batch B --timeout-us T
+           --model m.nemo.json   (serve a saved deployment artifact: no training/transform work)
   validate
   info";
 
@@ -194,6 +195,15 @@ fn cmd_deploy(args: &Args) -> Result<()> {
     if args.bool("debug") {
         debug_layerwise(nid.deployed(), &x);
     }
+
+    // Freeze the deployed model as a native artifact: `nemo serve
+    // --model <path>` then serves it with no training or transform work.
+    if let Some(path) = args.str_opt("save") {
+        nid.save_deployed(path)
+            .with_context(|| format!("saving deployment artifact {path}"))?;
+        let bytes = std::fs::metadata(path).map(|m| m.len()).unwrap_or(0);
+        println!("deployment artifact -> {path} ({bytes} bytes)");
+    }
     Ok(())
 }
 
@@ -280,9 +290,27 @@ fn pjrt_model(_args: &Args, _nid: &Network<IntegerDeployable>) -> Result<ModelVa
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let mut rng = Rng::new(7);
-    let net = load_or_init_net(args, &mut rng)?;
-    let nid = deploy_from_args(args, &net)?;
+    // `--model m.nemo.json` serves a saved deployment artifact directly:
+    // no checkpoint, no training, no transform pipeline — the artifact
+    // IS the model. Otherwise deploy from a checkpoint (or a fresh init).
+    let nid = match args.str_opt("model") {
+        Some(path) => {
+            if args.str_or("backend", "native") != "native" {
+                bail!(
+                    "serve --model serves the native integer engine; drop \
+                     --backend or use --backend native"
+                );
+            }
+            println!("loading deployment artifact {path}");
+            Network::<IntegerDeployable>::load_deployed(path)
+                .with_context(|| format!("loading deployment artifact {path}"))?
+        }
+        None => {
+            let mut rng = Rng::new(7);
+            let net = load_or_init_net(args, &mut rng)?;
+            deploy_from_args(args, &net)?
+        }
+    };
 
     let cfg = ServerConfig {
         max_batch: args.usize_or("max-batch", 16)?,

@@ -70,6 +70,7 @@ use crate::engine::{FloatEngine, IntegerEngine};
 use crate::exec::NativeIntExecutor;
 use crate::graph::int::IntGraph;
 use crate::graph::{Graph, Op};
+use crate::io::artifact::{ArtifactError, DeployedArtifact};
 use crate::tensor::{TensorF, TensorI};
 use crate::transform::{self, DeployOptions, Deployed, LayerQuant, TransformError};
 
@@ -349,6 +350,34 @@ impl Network<IntegerDeployable> {
     /// Run the integer engine on an integer-image batch.
     pub fn run(&self, qx: &TensorI) -> TensorI {
         IntegerEngine::new().run(&self.repr.id, qx)
+    }
+
+    /// Freeze this deployed model into a native artifact file
+    /// (`model.nemo.json`): the integer program, precision stamps,
+    /// requant parameters, eps metadata and packed weights, versioned
+    /// and checksummed. Only an IntegerDeployable network has this
+    /// method — the typestate makes saving a half-transformed pipeline
+    /// unrepresentable. Logits served from the loaded artifact are
+    /// bit-identical to this network's.
+    pub fn save_deployed(
+        &self,
+        path: impl AsRef<std::path::Path>,
+    ) -> Result<(), ArtifactError> {
+        DeployedArtifact::save_parts(&self.repr, &self.meta, path)
+    }
+
+    /// Rehydrate an IntegerDeployable network from a saved artifact —
+    /// the `deploy once, serve anywhere` entry point: no training, no
+    /// transform pipeline, no Python-side manifest. The loader validates
+    /// format/version, the model checksum and the precision stamps
+    /// (re-proved via `shape::infer_precision`). The QD float twin is
+    /// not shipped in the artifact, so [`Self::deployed`] on a loaded
+    /// network exposes an empty `qd` graph.
+    pub fn load_deployed(
+        path: impl AsRef<std::path::Path>,
+    ) -> Result<Self, ArtifactError> {
+        let (repr, meta) = DeployedArtifact::load(path)?.into_deployed();
+        Ok(Network { repr, meta })
     }
 
     /// A shareable native [`crate::exec::Executor`] over this network

@@ -107,6 +107,17 @@ impl Precision {
             Precision::I32 => "i32",
         }
     }
+
+    /// Inverse of [`Self::name`] — used by the deployment-artifact loader
+    /// to decode stored precision stamps and weight payload dtypes.
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "u8" => Some(Precision::U8),
+            "i8" => Some(Precision::I8),
+            "i32" => Some(Precision::I32),
+            _ => None,
+        }
+    }
 }
 
 /// A quantized space Z_t with its quantum epsilon_t (Def. 2.1).

@@ -5,12 +5,42 @@
 use super::Precision;
 use crate::tensor::TensorI;
 
+/// Largest shift `choose_d` will try before declaring the Eq. 14 bound
+/// unreachable. Beyond this the multiplier `m = eps_a*2^d/eps_b` no
+/// longer buys precision and starts threatening the requant product
+/// width, so saturation is an error, not a fallback.
+pub const D_MAX: u32 = 40;
+
+/// The Eq. 14 bound `eps_a * 2^d >= factor * eps_b` is unreachable
+/// within [`D_MAX`] doublings: the requant ratio the pair of quanta
+/// demands cannot be approximated within the paper's 1/eta error
+/// guarantee. Deployment must reject the network instead of baking a
+/// wrong `(m, d)` into the graph (and into saved artifacts).
+#[derive(Clone, Copy, Debug, thiserror::Error)]
+#[error(
+    "choose_d saturated: eps_a={eps_a:.3e}, eps_b={eps_b:.3e}, \
+     factor={factor} needs d > {D_MAX}, violating the 1/{factor} \
+     requantization error guarantee (Eq. 14)"
+)]
+pub struct RequantSaturation {
+    pub eps_a: f64,
+    pub eps_b: f64,
+    pub factor: u32,
+}
+
 /// Smallest d with eps_a * 2^d >= factor * eps_b (Eq. 14 with
 /// eta = 1/factor). Exact doubling loop — identical to
-/// quantlib.choose_d so both languages derive the same d.
-pub fn choose_d(eps_a: f64, eps_b: f64, requantization_factor: u32) -> u32 {
+/// quantlib.choose_d so both languages derive the same d, and both
+/// reject saturation the same way (this errors, Python raises) when
+/// the bound is unreachable within [`D_MAX`] doublings — the former
+/// silent `d = 40` saturation produced requants violating the paper's
+/// 1/eta error guarantee.
+pub fn choose_d(
+    eps_a: f64,
+    eps_b: f64,
+    requantization_factor: u32,
+) -> Result<u32, RequantSaturation> {
     assert!(eps_a > 0.0 && eps_b > 0.0, "quanta must be positive");
-    const D_MAX: u32 = 40;
     let target = requantization_factor as f64 * eps_b;
     let mut d = 0u32;
     let mut p = eps_a;
@@ -18,7 +48,14 @@ pub fn choose_d(eps_a: f64, eps_b: f64, requantization_factor: u32) -> u32 {
         p *= 2.0;
         d += 1;
     }
-    d
+    if p < target {
+        return Err(RequantSaturation {
+            eps_a,
+            eps_b,
+            factor: requantization_factor,
+        });
+    }
+    Ok(d)
 }
 
 /// m = floor(eps_a * 2^d / eps_b) (Eq. 13).
@@ -38,17 +75,28 @@ pub struct Requant {
 impl Requant {
     /// Derive (m, d) from the source/target quanta and clip bounds
     /// (Eq. 13-14). `factor` is NEMO's requantization_factor (1/eta):
-    /// 16 for activations, 256 for Adds.
-    pub fn derive(eps_a: f64, eps_b: f64, factor: u32, lo: i64, hi: i64) -> Self {
-        let d = choose_d(eps_a, eps_b, factor);
-        Requant { m: multiplier(eps_a, eps_b, d), d, lo, hi }
+    /// 16 for activations, 256 for Adds. Errors when `choose_d`
+    /// saturates (the ratio cannot meet the 1/factor error guarantee).
+    pub fn derive(
+        eps_a: f64,
+        eps_b: f64,
+        factor: u32,
+        lo: i64,
+        hi: i64,
+    ) -> Result<Self, RequantSaturation> {
+        let d = choose_d(eps_a, eps_b, factor)?;
+        Ok(Requant { m: multiplier(eps_a, eps_b, d), d, lo, hi })
     }
 
     /// clip((m * q) >> d, lo, hi). The shift is arithmetic (floor toward
-    /// -inf), matching Eq. 13's floor for negative values.
+    /// -inf), matching Eq. 13's floor for negative values. The product
+    /// is widened to i128: with d near [`D_MAX`], `m` can exceed 2^32
+    /// and a legal i32-range accumulator would wrap the i64 product
+    /// silently in release builds.
     #[inline]
     pub fn apply(&self, q: i64) -> i64 {
-        (((self.m * q) >> self.d) as i64).clamp(self.lo, self.hi)
+        let shifted = (self.m as i128 * q as i128) >> self.d;
+        shifted.clamp(self.lo as i128, self.hi as i128) as i64
     }
 
     /// Requantize a whole integer tensor.
@@ -81,10 +129,10 @@ mod tests {
             let eps_a = (-rng.uniform(2.0, 14.0)).exp2();
             let eps_b = (-rng.uniform(1.0, 10.0)).exp2();
             let factor = [16u32, 64, 256][rng.int(0, 3) as usize];
-            let d = choose_d(eps_a, eps_b, factor);
-            if d >= 40 {
-                return Ok(()); // saturated
-            }
+            let d = match choose_d(eps_a, eps_b, factor) {
+                Ok(d) => d,
+                Err(_) => return Ok(()), // saturation is a typed error now
+            };
             if eps_a * ((1u64 << d) as f64) < factor as f64 * eps_b {
                 return Err(format!("bound violated: d={d}"));
             }
@@ -96,16 +144,46 @@ mod tests {
     }
 
     #[test]
+    fn choose_d_saturation_is_a_typed_error() {
+        // eps_a tiny, eps_b huge: the Eq. 14 bound needs d > 40. The old
+        // code silently returned d = 40 and a requant whose ratio
+        // violated the 1/eta guarantee; now it is a RequantSaturation.
+        let err = choose_d(1e-300, 1.0, 16).unwrap_err();
+        assert_eq!(err.factor, 16);
+        assert!(err.to_string().contains("saturated"), "{err}");
+        assert!(Requant::derive(1e-300, 1.0, 16, 0, 255).is_err());
+        // A reachable bound still derives fine.
+        assert!(choose_d(3.1e-5, 0.02, 16).is_ok());
+    }
+
+    #[test]
+    fn apply_survives_i64_product_overflow() {
+        // Regression: m > 2^32 times a legal i32-range accumulator
+        // overflows the old i64 product (2^33 * (2^31-1) > 2^63) and
+        // wrapped to a negative value in release builds. The i128
+        // widening must give the mathematically exact shifted product.
+        let rq = Requant { m: 1i64 << 33, d: 40, lo: i64::MIN, hi: i64::MAX };
+        let q = i32::MAX as i64;
+        // (2^33 * (2^31 - 1)) >> 40 = (2^64 - 2^33) >> 40 = 2^24 - 1
+        assert_eq!(rq.apply(q), (1i64 << 24) - 1);
+        // Negative side floors toward -inf.
+        assert_eq!(rq.apply(-q), -(1i64 << 24));
+        // Clip bounds still apply after the exact shift.
+        let clipped = Requant { m: 1i64 << 33, d: 40, lo: 0, hi: 255 };
+        assert_eq!(clipped.apply(q), 255);
+        assert_eq!(clipped.apply(-q), 0);
+    }
+
+    #[test]
     fn relative_error_bounded_by_eta() {
         // |eps_a/eps_b - m/2^d| / (eps_a/eps_b) <= 1/factor (sec. 3.2)
         prop_check(500, |rng| {
             let eps_a = rng.uniform(1e-7, 1e-1);
             let eps_b = rng.uniform(1e-7, 1e-1);
             let factor = 16u32;
-            let d = choose_d(eps_a, eps_b, factor);
-            if d >= 40 {
+            let Ok(d) = choose_d(eps_a, eps_b, factor) else {
                 return Ok(());
-            }
+            };
             let m = multiplier(eps_a, eps_b, d);
             let ratio = eps_a / eps_b;
             let approx = m as f64 / (1u64 << d) as f64;
@@ -133,7 +211,8 @@ mod tests {
         prop_check(300, |rng| {
             let eps_a = rng.uniform(1e-6, 1e-2);
             let eps_b = rng.uniform(1e-4, 1e-1);
-            let rq = Requant::derive(eps_a, eps_b, 16, i64::MIN, i64::MAX);
+            let rq = Requant::derive(eps_a, eps_b, 16, i64::MIN, i64::MAX)
+                .expect("bound reachable in this eps range");
             let q = rng.int(-(1 << 24), 1 << 24);
             let got = rq.apply(q) as f64;
             let ideal = q as f64 * eps_a / eps_b;
@@ -151,7 +230,7 @@ mod tests {
     #[test]
     fn derive_matches_python_constants() {
         // One pinned case also present in goldens (belt and braces).
-        let d = choose_d(3.1e-5, 0.02, 16);
+        let d = choose_d(3.1e-5, 0.02, 16).unwrap();
         let m = multiplier(3.1e-5, 0.02, d);
         // 0.02*16/3.1e-5 = 10322.6 -> 2^14 = 16384 -> d = 14
         assert_eq!(d, 14);

@@ -344,16 +344,16 @@ pub(crate) fn deploy_impl(
                     let th = Thresholds::derive(bn, *eps_phi, eps_y, hi);
                     id.push(&n.name, IntOp::ThreshAct { th }, &[prev.id_node])
                 } else {
-                    let rq = Requant::derive(prev.eps, eps_y, opts.requant_factor, 0, hi);
-                    requant_md = Some((rq.m, rq.d));
-                    // requant multiply must fit i64
-                    let worst = rq.m.saturating_mul(prev.qmax.abs().max(prev.qmin.abs()));
-                    if worst == i64::MAX {
-                        return Err(TransformError::RangeOverflow {
+                    let rq = Requant::derive(prev.eps, eps_y, opts.requant_factor, 0, hi)
+                        .map_err(|source| TransformError::RequantSaturated {
                             node: n.name.clone(),
-                            worst,
-                        });
-                    }
+                            source,
+                        })?;
+                    requant_md = Some((rq.m, rq.d));
+                    // The requant product m*q is computed in i128 by
+                    // Requant::apply, so no product-width check is needed
+                    // here — choose_d saturation (above) is the only way
+                    // a requant can go wrong at deploy time.
                     if let Some(l) = layers.last_mut() {
                         l.beta_y = *beta;
                         l.eps_y = eps_y;
@@ -485,7 +485,11 @@ pub(crate) fn deploy_impl(
                         opts.add_requant_factor,
                         i32::MIN as i64,
                         i32::MAX as i64,
-                    );
+                    )
+                    .map_err(|source| TransformError::RequantSaturated {
+                        node: n.name.clone(),
+                        source,
+                    })?;
                     qmin += rq.apply(bst.qmin).min(rq.apply(bst.qmax));
                     qmax += rq.apply(bst.qmax).max(rq.apply(bst.qmin));
                     rqs.push(rq);
@@ -731,6 +735,25 @@ mod tests {
         let last = dep.layers.last().unwrap();
         // fc: eps_out = eps_w_fc * eps_x(last act)
         assert!((dep.eps_out - last.eps_phi).abs() < 1e-15);
+    }
+
+    #[test]
+    fn requant_saturation_is_a_deploy_error() {
+        // eps_phi ~ 3e-7 against eps_y ~ 4e6: Eq. 14 needs d > 40, so the
+        // requant cannot meet the 1/16 error guarantee. The old choose_d
+        // silently returned d = 40 and baked the wrong (m, d) into the
+        // graph; deploy must reject the network instead.
+        let mut g = Graph::new(1.0 / 255.0);
+        let x = g.push("in", Op::Input { shape: vec![4] }, &[]);
+        let w = TensorF::full(&[4, 4], 0.01);
+        let l = g.push("fc", Op::Linear { w, bias: None }, &[x]);
+        g.push("act", Op::PactAct { beta: 1e9, bits: 8 }, &[l]);
+        match deploy_impl(&g, DeployOptions::default()) {
+            Err(TransformError::RequantSaturated { node, .. }) => {
+                assert_eq!(node, "act");
+            }
+            other => panic!("expected RequantSaturated, got {:?}", other.err()),
+        }
     }
 
     #[test]

@@ -39,6 +39,12 @@ pub enum TransformError {
     NeedsFakeQuant(&'static str),
     #[error("integer range overflow in {node}: worst-case |acc| = {worst} > 2^31")]
     RangeOverflow { node: String, worst: i64 },
+    #[error("requantization at {node}: {source}")]
+    RequantSaturated {
+        node: String,
+        #[source]
+        source: crate::quant::requant::RequantSaturation,
+    },
     #[error(
         "precision proof failed at {node}: stamped {precision} cannot hold the \
          analyzed range [{qmin}, {qmax}]"

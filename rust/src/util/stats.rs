@@ -33,11 +33,20 @@ impl Samples {
         self.xs.iter().sum::<f64>() / self.xs.len() as f64
     }
 
+    /// Smallest sample; NaN for an empty set (an empty metric must read
+    /// as "no data", not as a real +infinity observation).
     pub fn min(&self) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
         self.xs.iter().cloned().fold(f64::INFINITY, f64::min)
     }
 
+    /// Largest sample; NaN for an empty set.
     pub fn max(&self) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
         self.xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
     }
 
@@ -51,13 +60,16 @@ impl Samples {
             .sqrt()
     }
 
-    /// q in [0, 1]; nearest-rank on the sorted samples.
+    /// q in [0, 1]; nearest-rank on the sorted samples. NaN samples sort
+    /// last under `total_cmp` instead of panicking the metrics thread (a
+    /// NaN duration ratio pushed by a metrics path must not take down
+    /// the summary).
     pub fn percentile(&mut self, q: f64) -> f64 {
         if self.xs.is_empty() {
             return f64::NAN;
         }
         if !self.sorted {
-            self.xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.xs.sort_by(f64::total_cmp);
             self.sorted = true;
         }
         let idx = ((self.xs.len() as f64 - 1.0) * q).round() as usize;
@@ -153,6 +165,32 @@ mod tests {
         let p50 = s.percentile(0.5);
         assert!((49.0..=51.0).contains(&p50));
         assert!((s.mean() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nan_samples_do_not_panic_percentile() {
+        // Regression: partial_cmp().unwrap() panicked on any NaN sample.
+        let mut s = Samples::new();
+        s.push(3.0);
+        s.push(f64::NAN);
+        s.push(1.0);
+        // NaN sorts last under total_cmp; the low percentiles stay real.
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(0.5), 3.0);
+        assert!(s.percentile(1.0).is_nan());
+        // summary() touches every percentile and must not panic either.
+        let _ = s.summary();
+    }
+
+    #[test]
+    fn empty_set_min_max_are_nan_not_infinite() {
+        let s = Samples::new();
+        assert!(s.min().is_nan());
+        assert!(s.max().is_nan());
+        let mut one = Samples::new();
+        one.push(2.5);
+        assert_eq!(one.min(), 2.5);
+        assert_eq!(one.max(), 2.5);
     }
 
     #[test]

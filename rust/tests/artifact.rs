@@ -1,0 +1,326 @@
+//! Native deployment artifact round-trip: a saved `model.nemo.json` must
+//! reload into a bit-identical integer program — on randomized graphs,
+//! through both the packed and the wide execution paths — and corrupted
+//! or version-mismatched files must be rejected loudly. Serving from an
+//! artifact (the `nemo serve --model` path) is held to the same
+//! bit-identity standard with zero training/transform work at load time.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use nemo::coordinator::{ModelVariant, Server, ServerConfig};
+use nemo::data::SynthDigits;
+use nemo::engine::IntegerEngine;
+use nemo::exec::{ExecInput, Executor, NativeIntExecutor};
+use nemo::graph::{Graph, Op};
+use nemo::io::artifact::{ArtifactError, DeployedArtifact, FORMAT, VERSION};
+use nemo::model::synthnet::{SynthNet, EPS_IN};
+use nemo::network::{IntegerDeployable, Network};
+use nemo::quant::bn::BnParams;
+use nemo::quant::quantize_input;
+use nemo::tensor::{Tensor, TensorF};
+use nemo::transform::DeployOptions;
+use nemo::util::prop::prop_check;
+use nemo::util::rng::Rng;
+
+fn rand_w(rng: &mut Rng, shape: &[usize], std: f64) -> TensorF {
+    let n: usize = shape.iter().product();
+    Tensor::from_vec(shape, (0..n).map(|_| rng.normal(0.0, std) as f32).collect())
+}
+
+fn rand_bn(rng: &mut Rng, c: usize) -> BnParams {
+    BnParams {
+        gamma: (0..c).map(|_| rng.uniform(0.3, 1.6)).collect(),
+        sigma: (0..c).map(|_| rng.uniform(0.3, 1.6)).collect(),
+        beta: (0..c).map(|_| rng.normal(0.0, 0.2)).collect(),
+        mu: (0..c).map(|_| rng.normal(0.0, 0.2)).collect(),
+    }
+}
+
+/// A random conv/bn/act/pool net (subset of the tests/plan.rs generator:
+/// enough variety to cover every IntOp the artifact format serializes).
+fn random_net(rng: &mut Rng) -> (Graph, usize) {
+    let mut g = Graph::new(1.0 / 255.0);
+    let mut c = rng.int(1, 3) as usize;
+    let mut h = 8usize;
+    let mut prev = g.push("in", Op::Input { shape: vec![c, h, h] }, &[]);
+    let blocks = rng.int(1, 3) as usize;
+    for b in 0..blocks {
+        let cout = rng.int(2, 5) as usize;
+        let k = if rng.int(0, 2) == 0 { 1 } else { 3 };
+        let std = (0.8 / (c * k * k) as f64).sqrt();
+        let bias = if rng.int(0, 2) == 0 {
+            Some((0..cout).map(|_| rng.normal(0.0, 0.1)).collect())
+        } else {
+            None
+        };
+        let w = rand_w(rng, &[cout, c, k, k], std);
+        prev = g.push(
+            &format!("c{b}"),
+            Op::Conv2d { w, bias, stride: 1, pad: k / 2 },
+            &[prev],
+        );
+        c = cout;
+        if rng.int(0, 2) == 0 {
+            prev = g.push(&format!("bn{b}"), Op::BatchNorm { bn: rand_bn(rng, c) }, &[prev]);
+        }
+        prev = g.push(&format!("a{b}"), Op::ReLU, &[prev]);
+        // residual: conv-bn-act branch + requantizing Add
+        if rng.int(0, 3) == 0 {
+            let w2 = rand_w(rng, &[c, c, 3, 3], (0.8 / (c * 9) as f64).sqrt());
+            let cb = g.push(
+                &format!("rc{b}"),
+                Op::Conv2d { w: w2, bias: None, stride: 1, pad: 1 },
+                &[prev],
+            );
+            let bb = g.push(&format!("rbn{b}"), Op::BatchNorm { bn: rand_bn(rng, c) }, &[cb]);
+            let ab = g.push(&format!("ra{b}"), Op::ReLU, &[bb]);
+            let add = g.push(&format!("radd{b}"), Op::Add, &[prev, ab]);
+            prev = g.push(&format!("rpa{b}"), Op::ReLU, &[add]);
+        }
+        if h % 2 == 0 && h > 2 && rng.int(0, 2) == 0 {
+            let pool = if rng.int(0, 2) == 0 {
+                Op::MaxPool { k: 2 }
+            } else {
+                Op::AvgPool { k: 2 }
+            };
+            prev = g.push(&format!("p{b}"), pool, &[prev]);
+            h /= 2;
+        }
+    }
+    let classes = rng.int(2, 6) as usize;
+    let (head_in, head) = if rng.int(0, 2) == 0 {
+        (c, g.push("gap", Op::GlobalAvgPool, &[prev]))
+    } else {
+        (c * h * h, g.push("fl", Op::Flatten, &[prev]))
+    };
+    let wf = rand_w(rng, &[head_in, classes], (1.0 / head_in as f64).sqrt());
+    g.push("fc", Op::Linear { w: wf, bias: None }, &[head]);
+    let in_c = match &g.nodes[0].op {
+        Op::Input { shape } => shape[0],
+        _ => unreachable!(),
+    };
+    (g, in_c)
+}
+
+fn rand_input(rng: &mut Rng, b: usize, c: usize) -> TensorF {
+    Tensor::from_vec(
+        &[b, c, 8, 8],
+        (0..b * c * 64).map(|_| rng.uniform(0.0, 1.0) as f32).collect(),
+    )
+}
+
+fn tmp_path(tag: &str) -> std::path::PathBuf {
+    // pid-unique: concurrent test runs on one host must not share files.
+    std::env::temp_dir().join(format!(
+        "nemo_artifact_{tag}_{}.nemo.json",
+        std::process::id()
+    ))
+}
+
+#[test]
+fn randomized_roundtrip_is_bit_identical_packed_and_wide() {
+    prop_check(15, |rng| {
+        let (g, in_c) = random_net(rng);
+        let b = rng.int(1, 4) as usize;
+        let x = rand_input(rng, b, in_c);
+        let fp = Network::from_graph(g).map_err(|e| e.to_string())?;
+        let betas = fp.calibrate(&[x.clone()]);
+        // abits 9 forces the wide (i32) executor path; <=8 allows packed.
+        let abits = [2u32, 4, 8, 9][rng.int(0, 4) as usize];
+        let opts = DeployOptions {
+            abits,
+            use_thresholds: rng.int(0, 2) == 0,
+            ..DeployOptions::default()
+        };
+        let nid = fp
+            .quantize_pact(8, abits, &betas)
+            .map_err(|e| e.to_string())?
+            .deploy(opts)
+            .map_err(|e| e.to_string())?
+            .integerize();
+
+        let path = tmp_path("prop");
+        nid.save_deployed(&path).map_err(|e| e.to_string())?;
+        let loaded =
+            Network::<IntegerDeployable>::load_deployed(&path).map_err(|e| e.to_string())?;
+        let _ = std::fs::remove_file(&path);
+
+        let qx = quantize_input(&x, 1.0 / 255.0);
+        // Interpreter bit-identity on the loaded graph.
+        let want = IntegerEngine::new().run(nid.int_graph(), &qx);
+        let got = IntegerEngine::new().run(loaded.int_graph(), &qx);
+        if want != got {
+            return Err("loaded interpreter logits diverged".into());
+        }
+        if loaded.int_graph().precisions() != nid.int_graph().precisions() {
+            return Err("precision stamps changed across the round-trip".into());
+        }
+        if loaded.eps_out().to_bits() != nid.eps_out().to_bits() {
+            return Err("eps_out changed across the round-trip".into());
+        }
+        // Executor bit-identity: compiled plans (packed when the stamps
+        // allow, wide otherwise) from original vs loaded graph.
+        let e0 = nid.to_executor(b).map_err(|e| e.to_string())?;
+        let e1 = loaded.to_executor(b).map_err(|e| e.to_string())?;
+        if e0.packed() != e1.packed() {
+            return Err("packed-vs-wide plan choice changed across the round-trip".into());
+        }
+        let o0 = e0.run_batch(&ExecInput::i32(qx.clone())).map_err(|e| e.to_string())?;
+        let o1 = e1.run_batch(&ExecInput::i32(qx)).map_err(|e| e.to_string())?;
+        if o0.int_logits().unwrap() != o1.int_logits().unwrap() {
+            return Err(format!(
+                "executor logits diverged (packed = {})",
+                e0.packed()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn corrupted_and_mismatched_files_are_rejected_loudly() {
+    let mut rng = Rng::new(42);
+    let net = SynthNet::init(&mut rng);
+    let nid = net
+        .to_network(8)
+        .unwrap()
+        .deploy(DeployOptions::default())
+        .unwrap()
+        .integerize();
+    let path = tmp_path("reject");
+    nid.save_deployed(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+
+    // Baseline: the file loads.
+    assert!(DeployedArtifact::load(&path).is_ok());
+
+    // Bit-flip inside the model payload -> checksum error.
+    let marker = "\"eps_out\":";
+    let pos = text.find(marker).unwrap() + marker.len();
+    let mut corrupted = text.clone();
+    let orig = corrupted.as_bytes()[pos] as char;
+    let repl = if orig == '1' { '2' } else { '1' };
+    corrupted.replace_range(pos..pos + 1, &repl.to_string());
+    std::fs::write(&path, &corrupted).unwrap();
+    match DeployedArtifact::load(&path) {
+        Err(ArtifactError::Checksum { .. }) => {}
+        other => panic!("expected Checksum error, got {:?}", other.err()),
+    }
+
+    // Version bump -> version error (before any model decoding).
+    let versioned = text.replace(
+        &format!("\"version\":{VERSION}"),
+        &format!("\"version\":{}", VERSION + 1),
+    );
+    assert_ne!(versioned, text, "version field must be present to rewrite");
+    std::fs::write(&path, &versioned).unwrap();
+    match DeployedArtifact::load(&path) {
+        Err(ArtifactError::Version { found }) => assert_eq!(found, VERSION + 1),
+        other => panic!("expected Version error, got {:?}", other.err()),
+    }
+
+    // Foreign format tag -> format error.
+    let foreign = text.replace(FORMAT, "some-other-format");
+    std::fs::write(&path, &foreign).unwrap();
+    assert!(matches!(
+        DeployedArtifact::load(&path),
+        Err(ArtifactError::Format { .. })
+    ));
+
+    // Truncated file -> JSON parse error, not a panic.
+    std::fs::write(&path, &text[..text.len() / 2]).unwrap();
+    assert!(matches!(
+        DeployedArtifact::load(&path),
+        Err(ArtifactError::Json(_))
+    ));
+
+    // Missing file -> IO error naming the path.
+    let _ = std::fs::remove_file(&path);
+    match DeployedArtifact::load(&path) {
+        Err(ArtifactError::Io { path: p, .. }) => {
+            assert!(p.contains("nemo_artifact_reject_"), "{p}");
+        }
+        other => panic!("expected Io error, got {:?}", other.err()),
+    }
+}
+
+#[test]
+fn serve_from_artifact_without_training_matches_local_engine() {
+    // The `nemo serve --model m.nemo.json` path: the only model-building
+    // step is NativeIntExecutor::from_artifact — no checkpoint, no
+    // transform pipeline, no Python artifacts.
+    let path = tmp_path("serve");
+    {
+        let mut rng = Rng::new(21);
+        let net = SynthNet::init(&mut rng);
+        let nid = net
+            .to_network(8)
+            .unwrap()
+            .deploy(DeployOptions::default())
+            .unwrap()
+            .integerize();
+        nid.save_deployed(&path).unwrap();
+    } // in-memory network dropped: serving below sees only the file
+
+    let exec = NativeIntExecutor::from_artifact(&path, 8).unwrap();
+    assert!(exec.packed(), "synthnet at 8 bits must serve packed");
+    let reference = Network::<IntegerDeployable>::load_deployed(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+
+    let model = ModelVariant::new("synthnet", Arc::new(exec));
+    let server = Server::start(
+        vec![model],
+        ServerConfig {
+            max_batch: 8,
+            batch_timeout: Duration::from_micros(300),
+            n_workers: 2,
+        },
+    );
+    let h = server.handle();
+    let mut data = SynthDigits::new(7);
+    for _ in 0..24 {
+        let (x, _) = data.batch(1);
+        let qx = quantize_input(&x, EPS_IN);
+        let served = h.infer("synthnet", qx.clone()).unwrap();
+        assert_eq!(
+            served.data(),
+            reference.run(&qx).data(),
+            "artifact-served logits must be bit-identical"
+        );
+    }
+    let m = server.stop();
+    assert_eq!(m.completed, 24);
+    assert_eq!(m.failed, 0);
+}
+
+#[test]
+fn loaded_network_keeps_stage_metadata_and_layers() {
+    let mut rng = Rng::new(9);
+    let net = SynthNet::init(&mut rng);
+    let nid = net
+        .to_network(6)
+        .unwrap()
+        .deploy(DeployOptions { wbits: 6, abits: 6, ..DeployOptions::default() })
+        .unwrap()
+        .integerize();
+    let path = tmp_path("meta");
+    nid.save_deployed(&path).unwrap();
+    let loaded = Network::<IntegerDeployable>::load_deployed(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(loaded.stage_name(), "IntegerDeployable");
+    assert_eq!(loaded.meta().wbits, 6);
+    assert_eq!(loaded.meta().abits, 6);
+    assert_eq!(loaded.layers().len(), nid.layers().len());
+    for (a, b) in loaded.layers().iter().zip(nid.layers()) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.m, b.m);
+        assert_eq!(a.d, b.d);
+        assert_eq!(a.eps_y.to_bits(), b.eps_y.to_bits());
+    }
+    assert_eq!(
+        loaded.deployed().worst_case,
+        nid.deployed().worst_case,
+        "range-analysis diagnostics must survive the round-trip"
+    );
+}

@@ -87,7 +87,8 @@ fn requant_params_match_python() {
         let eps_a = c.get("eps_a").unwrap().as_f64().unwrap();
         let eps_b = c.get("eps_b").unwrap().as_f64().unwrap();
         let factor = c.get("factor").unwrap().as_i64().unwrap() as u32;
-        let d = choose_d(eps_a, eps_b, factor);
+        let d = choose_d(eps_a, eps_b, factor)
+            .expect("golden requant cases never saturate");
         let m = multiplier(eps_a, eps_b, d);
         assert_eq!(d as i64, c.get("d").unwrap().as_i64().unwrap(), "d mismatch");
         assert_eq!(m, c.get("m").unwrap().as_i64().unwrap(), "m mismatch");
