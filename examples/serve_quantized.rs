@@ -14,7 +14,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use nemo::cli::Args;
-use nemo::coordinator::{ModelVariant, Server, ServerConfig};
+use nemo::coordinator::{Server, ServerConfig};
 use nemo::data::SynthDigits;
 use nemo::exec::Executor;
 use nemo::model::synthnet::{SynthNet, EPS_IN};
@@ -96,15 +96,14 @@ fn main() -> anyhow::Result<()> {
     let n_requests = 1024usize;
     for max_batch in [1usize, 4, 16] {
         for clients in [1usize, 8, 32] {
-            let model = ModelVariant::new("synthnet", exec.clone());
-            let server = Server::start(
-                vec![model],
-                ServerConfig {
+            let server = Server::builder()
+                .default_config(ServerConfig {
                     max_batch,
                     batch_timeout: Duration::from_micros(300),
                     n_workers: 2,
-                },
-            );
+                })
+                .model("synthnet", exec.clone())
+                .start()?;
             let t0 = Instant::now();
             let mut joins = Vec::new();
             for c in 0..clients {

@@ -14,7 +14,7 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use nemo::coordinator::{ModelVariant, Server, ServerConfig};
+use nemo::coordinator::{Server, ServerConfig};
 use nemo::data::SynthDigits;
 use nemo::engine::plan::{IntArena, PackedArena};
 use nemo::engine::{FloatEngine, IntPlan, IntegerEngine};
@@ -57,6 +57,7 @@ fn main() {
                 || a.starts_with("plan")
                 || a.starts_with("packed")
                 || a.starts_with("artifact")
+                || a.starts_with("registry")
         })
         .collect();
     let run = |tag: &str| {
@@ -106,6 +107,9 @@ fn main() {
     }
     if run("artifact") {
         artifact_cold_load_and_serve();
+    }
+    if run("registry") {
+        registry_multi_model_and_swap();
     }
     if run("perf") {
         perf_microbench();
@@ -438,15 +442,15 @@ fn e8_engine_and_serving() {
     );
     for (max_batch, clients) in [(1usize, 8usize), (16, 8), (16, 32)] {
         let exec = NativeIntExecutor::new(dep.id.clone(), max_batch).expect("executor");
-        let model = ModelVariant::new("synthnet", Arc::new(exec));
-        let server = Server::start(
-            vec![model],
-            ServerConfig {
+        let server = Server::builder()
+            .default_config(ServerConfig {
                 max_batch,
                 batch_timeout: Duration::from_micros(300),
                 n_workers: 2,
-            },
-        );
+            })
+            .model("synthnet", Arc::new(exec))
+            .start()
+            .expect("server");
         let t0 = std::time::Instant::now();
         let mut joins = Vec::new();
         for c in 0..clients {
@@ -654,6 +658,40 @@ fn plan_vs_interpreted() {
         ("planned_imgs_per_s", Value::Num(16.0 / t_exec)),
     ]));
 
+    // Lazy per-batch layouts: executor construction compiles exactly one
+    // variant regardless of max_batch (the rest fill on first use), so
+    // construction cost must not scale with max_batch.
+    let (t_ctor_1, _) = bench(1, 0.3, || {
+        std::hint::black_box(NativeIntExecutor::new(dep.id.clone(), 1).expect("executor"));
+    });
+    let (t_ctor_256, _) = bench(1, 0.3, || {
+        std::hint::black_box(NativeIntExecutor::new(dep.id.clone(), 256).expect("executor"));
+    });
+    let lazy = NativeIntExecutor::new(dep.id.clone(), 256).expect("executor");
+    assert_eq!(
+        lazy.compiled_layouts(),
+        1,
+        "construction compiled more than the batch-1 validator layout"
+    );
+    assert!(
+        t_ctor_256 < t_ctor_1 * 8.0,
+        "construction time scales with max_batch again: b=1 {} vs b=256 {}",
+        fmt_time(t_ctor_1),
+        fmt_time(t_ctor_256)
+    );
+    println!(
+        "  construction (lazy layouts): max_batch=1 {}  max_batch=256 {}  ({:.2}x)",
+        fmt_time(t_ctor_1),
+        fmt_time(t_ctor_256),
+        t_ctor_256 / t_ctor_1
+    );
+    results.push(json::obj(vec![
+        ("workload", Value::Str("executor_construction_lazy_layouts".into())),
+        ("ctor_max_batch_1_s", Value::Num(t_ctor_1)),
+        ("ctor_max_batch_256_s", Value::Num(t_ctor_256)),
+        ("ratio", Value::Num(t_ctor_256 / t_ctor_1)),
+    ]));
+
     let doc = json::obj(vec![("plan_bench", Value::Arr(results))]);
     std::fs::write("BENCH_plan.json", json::write(&doc)).expect("write BENCH_plan.json");
     println!("  wrote BENCH_plan.json");
@@ -832,16 +870,17 @@ fn artifact_cold_load_and_serve() {
         exec.packed()
     );
 
-    // Coordinator throughput over the artifact-backed executor.
-    let model = ModelVariant::new("synthnet", Arc::new(exec));
-    let server = Server::start(
-        vec![model],
-        ServerConfig {
+    // Coordinator throughput over the artifact-backed executor (routed
+    // through the registry's own artifact loader, as `serve --model` is).
+    let server = Server::builder()
+        .default_config(ServerConfig {
             max_batch,
             batch_timeout: Duration::from_micros(300),
             n_workers: 2,
-        },
-    );
+        })
+        .model("synthnet", Arc::new(exec))
+        .start()
+        .expect("server");
     let n_requests = 2048usize;
     let clients = 8usize;
     let t0 = std::time::Instant::now();
@@ -886,6 +925,123 @@ fn artifact_cold_load_and_serve() {
         .expect("write BENCH_artifact.json");
     println!("  wrote BENCH_artifact.json");
     let _ = std::fs::remove_file(&path);
+}
+
+// ---------------------------------------------------------------------------
+// registry: multi-model serving throughput + hot-swap latency — writes
+// BENCH_registry.json
+// ---------------------------------------------------------------------------
+
+fn registry_multi_model_and_swap() {
+    println!("\n=== registry: two models by name + hot swaps under load ===");
+    let mut rng = Rng::new(123);
+    let net_a = SynthNet::init(&mut rng);
+    let net_b = SynthNet::init(&mut rng);
+    let dep_a = deploy_pact(net_a.to_pact_graph(8), DeployOptions::default());
+    let dep_b = deploy_pact(net_b.to_pact_graph(8), DeployOptions::default());
+    let max_batch = 16usize;
+
+    let server = Server::builder()
+        .default_config(ServerConfig {
+            max_batch,
+            batch_timeout: Duration::from_micros(300),
+            n_workers: 2,
+        })
+        .model(
+            "a",
+            Arc::new(NativeIntExecutor::new(dep_a.id.clone(), max_batch).expect("exec a")),
+        )
+        .model(
+            "b",
+            Arc::new(NativeIntExecutor::new(dep_b.id.clone(), max_batch).expect("exec b")),
+        )
+        .start()
+        .expect("server");
+    let h = server.handle();
+
+    // Prebuilt swap targets so the measured latency is the registry's
+    // swap operation, not executor construction.
+    let swap_targets: [Arc<dyn Executor>; 2] = [
+        Arc::new(NativeIntExecutor::new(dep_b.id.clone(), max_batch).expect("swap b")),
+        Arc::new(NativeIntExecutor::new(dep_a.id.clone(), max_batch).expect("swap a")),
+    ];
+
+    let n_requests = 2048usize;
+    let clients = 8usize;
+    let t0 = std::time::Instant::now();
+    let mut joins = Vec::new();
+    for c in 0..clients {
+        let h = server.handle();
+        let model = if c % 2 == 0 { "a" } else { "b" };
+        let per = n_requests / clients;
+        joins.push(std::thread::spawn(move || {
+            let mut data = SynthDigits::new(4500 + c as u64);
+            for _ in 0..per {
+                let (x, _) = data.batch(1);
+                h.infer(model, quantize_input(&x, EPS_IN)).expect("infer");
+            }
+        }));
+    }
+
+    // Hot-swap "a" back and forth while the load test runs.
+    let n_swaps = 8usize;
+    let mut swap_lat = Vec::with_capacity(n_swaps);
+    for i in 0..n_swaps {
+        std::thread::sleep(Duration::from_millis(3));
+        let t = std::time::Instant::now();
+        h.swap_model("a", swap_targets[i % 2].clone()).expect("swap");
+        swap_lat.push(t.elapsed().as_secs_f64());
+    }
+
+    for j in joins {
+        j.join().unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    // stop() joins the workers, making the per-model ledgers final —
+    // workers record metrics after scattering replies, so reading the
+    // exact counts before the join would race the last batch.
+    let total = server.stop();
+    let ma = h.model_metrics("a").expect("metrics a");
+    let mb = h.model_metrics("b").expect("metrics b");
+    assert_eq!(total.failed, 0, "hot swaps must not fail any request");
+    assert_eq!(
+        ma.completed + mb.completed,
+        n_requests as u64,
+        "per-model ledgers must account for every request across swaps"
+    );
+
+    let swap_mean = swap_lat.iter().sum::<f64>() / swap_lat.len() as f64;
+    let swap_max = swap_lat.iter().cloned().fold(0.0f64, f64::max);
+    println!(
+        "  {n_requests} req over 2 models, {clients} clients, {n_swaps} hot swaps: \
+         {:.0} req/s  (a: {}, b: {})",
+        total.throughput(wall),
+        ma.completed,
+        mb.completed
+    );
+    println!(
+        "  swap latency: mean {}  max {}  (version v{} after {n_swaps} swaps)",
+        fmt_time(swap_mean),
+        fmt_time(swap_max),
+        1 + n_swaps
+    );
+
+    let doc = json::obj(vec![(
+        "registry_bench",
+        json::obj(vec![
+            ("n_requests", Value::Int(n_requests as i64)),
+            ("n_models", Value::Int(2)),
+            ("n_swaps", Value::Int(n_swaps as i64)),
+            ("two_model_req_per_s", Value::Num(total.throughput(wall))),
+            ("model_a_completed", Value::Int(ma.completed as i64)),
+            ("model_b_completed", Value::Int(mb.completed as i64)),
+            ("swap_latency_mean_s", Value::Num(swap_mean)),
+            ("swap_latency_max_s", Value::Num(swap_max)),
+        ]),
+    )]);
+    std::fs::write("BENCH_registry.json", json::write(&doc))
+        .expect("write BENCH_registry.json");
+    println!("  wrote BENCH_registry.json");
 }
 
 // ---------------------------------------------------------------------------

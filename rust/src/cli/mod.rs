@@ -1,6 +1,11 @@
 //! Minimal CLI argument parser (no clap in the offline vendor set).
 //!
 //! Grammar: `nemo <subcommand> [--key value|--key=value|--switch] ...`
+//!
+//! Repeated flags accumulate in order (`--model a.json --model b.json`),
+//! so multi-model subcommands can take one flag per model; the scalar
+//! accessors read the *last* occurrence, which keeps `--foo x --foo y`
+//! backward compatible with the old last-wins behaviour.
 
 use std::collections::HashMap;
 
@@ -9,7 +14,7 @@ use anyhow::{bail, Context, Result};
 #[derive(Clone, Debug, Default)]
 pub struct Args {
     pub subcommand: String,
-    pub flags: HashMap<String, String>,
+    pub flags: HashMap<String, Vec<String>>,
 }
 
 impl Args {
@@ -27,14 +32,18 @@ impl Args {
                 bail!("unexpected positional argument '{tok}'");
             };
             if let Some((k, v)) = key.split_once('=') {
-                out.flags.insert(k.to_string(), v.to_string());
+                out.push_flag(k, v.to_string());
             } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
-                out.flags.insert(key.to_string(), it.next().unwrap().clone());
+                out.push_flag(key, it.next().unwrap().clone());
             } else {
-                out.flags.insert(key.to_string(), "true".to_string());
+                out.push_flag(key, "true".to_string());
             }
         }
         Ok(out)
+    }
+
+    fn push_flag(&mut self, key: &str, value: String) {
+        self.flags.entry(key.to_string()).or_default().push(value);
     }
 
     pub fn from_env() -> Result<Args> {
@@ -43,15 +52,20 @@ impl Args {
     }
 
     pub fn str_opt(&self, key: &str) -> Option<&str> {
-        self.flags.get(key).map(|s| s.as_str())
+        self.flags.get(key).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    /// Every occurrence of a repeatable flag, in command-line order.
+    pub fn str_all(&self, key: &str) -> &[String] {
+        self.flags.get(key).map(|v| v.as_slice()).unwrap_or(&[])
     }
 
     pub fn str_or(&self, key: &str, default: &str) -> String {
-        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+        self.str_opt(key).unwrap_or(default).to_string()
     }
 
     pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
-        match self.flags.get(key) {
+        match self.str_opt(key) {
             None => Ok(default),
             Some(v) => v.parse().with_context(|| format!("--{key} {v}: not an integer")),
         }
@@ -62,14 +76,14 @@ impl Args {
     }
 
     pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
-        match self.flags.get(key) {
+        match self.str_opt(key) {
             None => Ok(default),
             Some(v) => v.parse().with_context(|| format!("--{key} {v}: not a number")),
         }
     }
 
     pub fn bool(&self, key: &str) -> bool {
-        matches!(self.flags.get(key).map(|s| s.as_str()), Some("true") | Some("1"))
+        matches!(self.str_opt(key), Some("true") | Some("1"))
     }
 }
 
@@ -97,5 +111,14 @@ mod tests {
         assert!(Args::parse(&["--flag-first".to_string()]).is_err());
         let a = parse(&["x", "--n", "abc"]);
         assert!(a.usize_or("n", 0).is_err());
+    }
+
+    #[test]
+    fn repeated_flags_accumulate_in_order() {
+        let a = parse(&["serve", "--model", "a.json", "--model=b.json", "--model", "c.json"]);
+        assert_eq!(a.str_all("model"), &["a.json", "b.json", "c.json"]);
+        // scalar accessors stay last-wins
+        assert_eq!(a.str_opt("model"), Some("c.json"));
+        assert!(a.str_all("absent").is_empty());
     }
 }

@@ -45,11 +45,42 @@ impl Metrics {
     pub fn throughput(&self, wall_secs: f64) -> f64 {
         self.completed as f64 / wall_secs.max(1e-9)
     }
+
+    /// Fold another model's metrics into this one — the aggregate view a
+    /// multi-model [`crate::coordinator::Server`] reports at `stop()`.
+    /// Counters add; latency/batch distributions concatenate.
+    pub fn merge(&mut self, other: &Metrics) {
+        self.completed += other.completed;
+        self.failed += other.failed;
+        self.padded += other.padded;
+        self.queue_wait.extend_from(&other.queue_wait);
+        self.exec_time.extend_from(&other.exec_time);
+        self.e2e_latency.extend_from(&other.e2e_latency);
+        self.batch_sizes.extend_from(&other.batch_sizes);
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn merge_adds_counters_and_concatenates_samples() {
+        let mut a = Metrics::new();
+        a.completed = 3;
+        a.failed = 1;
+        a.e2e_latency.push(0.5);
+        let mut b = Metrics::new();
+        b.completed = 7;
+        b.padded = 2;
+        b.e2e_latency.push(1.5);
+        a.merge(&b);
+        assert_eq!(a.completed, 10);
+        assert_eq!(a.failed, 1);
+        assert_eq!(a.padded, 2);
+        assert_eq!(a.e2e_latency.len(), 2);
+        assert!((a.e2e_latency.mean() - 1.0).abs() < 1e-12);
+    }
 
     #[test]
     fn report_renders() {

@@ -1,37 +1,59 @@
 //! Serving coordinator (S7): request router + dynamic batcher + worker
-//! pool over any [`Executor`] backend.
+//! pool over a runtime [`ModelRegistry`] of [`Executor`] backends.
 //!
 //! Deployment shape (vLLM-router-like, scaled to this paper): callers
-//! submit single-sample integer images; the batcher coalesces them up to
-//! `max_batch` or `batch_timeout`, gathers one batch tensor, executes it
-//! on a worker thread through `Executor::run_batch`, and scatters the
-//! per-sample results. The backend is interchangeable: the native
-//! integer engine (`serve --backend native`, no artifacts needed) and
-//! the AOT-compiled PJRT executables (`--backend pjrt`) serve through
-//! the identical path — batch-variant selection and padding are the
-//! executor's business, not the coordinator's.
+//! submit single-sample integer images against a model *name*; the
+//! batcher coalesces per name up to that model's `max_batch` or batch
+//! timeout, gathers one batch tensor, executes it on a worker thread
+//! through `Executor::run_batch`, and scatters the per-sample results.
+//!
+//! The model set is *not* frozen at construction: a [`ServerBuilder`]
+//! seeds the registry (`.model(..)`, `.model_from_artifact(..)`), and the
+//! [`ServerHandle`] is the single public serving surface afterwards —
+//! request ops (`infer`, `infer_deadline`, `try_infer`) plus admin ops
+//! (`load_model*`, `swap_model*`, `unload_model`, `list_models`,
+//! `model_metrics`) that take effect at runtime without a restart.
+//! Swap/unload atomicity with respect to in-flight batches is the
+//! registry's contract (see [`registry`]): a gathered batch never mixes
+//! executor versions and no reply is dropped by a lifecycle operation.
+//!
+//! Backends stay interchangeable: the native integer engine (`serve
+//! --backend native`, no artifacts needed), executors rehydrated from
+//! `model.nemo.json` deployment artifacts (`serve --model a.nemo.json
+//! --model b.nemo.json`), and the AOT-compiled PJRT executables serve
+//! through the identical path — batch-variant selection and padding are
+//! the executor's business, not the coordinator's.
 
 pub mod metrics;
+pub mod registry;
 
 use std::collections::HashMap;
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, Context as _, Result};
 
 use crate::exec::{Arg, ExecInput, Executor};
 use crate::tensor::{Tensor, TensorF, TensorI};
 
 pub use metrics::Metrics;
+pub use registry::{ModelEntry, ModelInfo, ModelRegistry, Provenance, RegistryError};
 
 /// A servable model: a name bound to an [`Executor`] backend.
+#[deprecated(
+    since = "0.3.0",
+    note = "use ServerBuilder::model(name, exec) / ServerHandle::load_model; \
+            the registry API replaces the frozen ModelVariant list"
+)]
 pub struct ModelVariant {
     pub name: String,
     pub exec: Arc<dyn Executor>,
 }
 
+#[allow(deprecated)]
 impl ModelVariant {
     /// Serve any executor speaking the integer request protocol: inputs
     /// are integer image batches and logits are integer-valued (the
@@ -73,7 +95,11 @@ struct Request {
     enqueued: Instant,
 }
 
-/// Coordinator configuration.
+/// Coordinator configuration. Used twice: as the server-wide defaults
+/// (`ServerBuilder::default_config`; `n_workers` sizes the shared worker
+/// pool) and as per-model overrides (`config_for`), where `max_batch` and
+/// `batch_timeout` shape that model's batching — `n_workers` has no
+/// per-model meaning because the pool is shared.
 #[derive(Clone, Copy, Debug)]
 pub struct ServerConfig {
     pub max_batch: usize,
@@ -91,16 +117,94 @@ impl Default for ServerConfig {
     }
 }
 
-/// Clonable client handle.
+/// Typed inference-path failures beyond [`RegistryError`]. Carried
+/// inside `anyhow::Error`; recover with `err.downcast_ref::<InferError>()`.
+#[derive(Debug, thiserror::Error)]
+pub enum InferError {
+    #[error(
+        "inference deadline of {0:?} exceeded before a reply arrived \
+         (the request may still complete server-side)"
+    )]
+    DeadlineExceeded(Duration),
+    #[error("server stopped before replying")]
+    ServerStopped,
+}
+
+/// A submitted request whose reply has not been claimed yet — the
+/// non-blocking half of [`ServerHandle::try_infer`].
+pub struct PendingInference {
+    rx: mpsc::Receiver<Result<TensorI>>,
+}
+
+impl PendingInference {
+    /// Non-blocking poll: `None` while the reply is still in flight.
+    pub fn try_poll(&self) -> Option<Result<TensorI>> {
+        match self.rx.try_recv() {
+            Ok(r) => Some(r),
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => {
+                Some(Err(InferError::ServerStopped.into()))
+            }
+        }
+    }
+
+    /// Block until the reply arrives.
+    pub fn wait(self) -> Result<TensorI> {
+        match self.rx.recv() {
+            Ok(r) => r,
+            Err(_) => Err(InferError::ServerStopped.into()),
+        }
+    }
+
+    /// Block at most `timeout`; a late reply is abandoned (the server
+    /// still executes and accounts the request).
+    pub fn wait_deadline(self, timeout: Duration) -> Result<TensorI> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(r) => r,
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                Err(InferError::DeadlineExceeded(timeout).into())
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                Err(InferError::ServerStopped.into())
+            }
+        }
+    }
+}
+
+/// Clonable client + admin handle: the single public serving surface.
 #[derive(Clone)]
 pub struct ServerHandle {
     tx: Sender<Request>,
+    registry: Arc<ModelRegistry>,
+    default_cfg: ServerConfig,
 }
 
 impl ServerHandle {
     /// Blocking single-sample inference; returns the [1, C_out] integer
     /// logits image.
     pub fn infer(&self, model: &str, qx: TensorI) -> Result<TensorI> {
+        self.try_infer(model, qx)?.wait()
+    }
+
+    /// Blocking inference with a reply deadline. On timeout the caller
+    /// gets a typed [`InferError::DeadlineExceeded`]; the request itself
+    /// still runs to completion server-side.
+    pub fn infer_deadline(
+        &self,
+        model: &str,
+        qx: TensorI,
+        timeout: Duration,
+    ) -> Result<TensorI> {
+        self.try_infer(model, qx)?.wait_deadline(timeout)
+    }
+
+    /// Non-blocking submit: queues the request and returns immediately
+    /// with a [`PendingInference`] to poll or wait on. Unknown model
+    /// names fail here, before anything is queued.
+    pub fn try_infer(&self, model: &str, qx: TensorI) -> Result<PendingInference> {
+        if !self.registry.contains(model) {
+            return Err(RegistryError::UnknownModel(model.to_string()).into());
+        }
         let (rtx, rrx) = mpsc::sync_channel(1);
         self.tx
             .send(Request {
@@ -109,21 +213,168 @@ impl ServerHandle {
                 reply: rtx,
                 enqueued: Instant::now(),
             })
-            .map_err(|_| anyhow!("server stopped"))?;
-        rrx.recv().map_err(|_| anyhow!("server dropped request"))?
+            .map_err(|_| anyhow::Error::from(InferError::ServerStopped))?;
+        Ok(PendingInference { rx: rrx })
+    }
+
+    // -- admin ops ---------------------------------------------------
+
+    /// Register a new model under `name` at runtime, serving with the
+    /// server's default config. Duplicate names are a typed error.
+    pub fn load_model(&self, name: &str, exec: Arc<dyn Executor>) -> Result<()> {
+        self.registry
+            .register(ModelEntry::new(name, exec, self.default_cfg, Provenance::InMemory))
+            .map_err(anyhow::Error::from)
+    }
+
+    /// Register a new model from a `model.nemo.json` deployment artifact
+    /// (cold load: checksum + precision re-proof + plan compile).
+    pub fn load_model_from_artifact(
+        &self,
+        name: &str,
+        path: impl AsRef<std::path::Path>,
+    ) -> Result<()> {
+        let (exec, prov) = artifact_exec(path.as_ref(), self.default_cfg.max_batch)?;
+        self.registry
+            .register(ModelEntry::new(name, exec, self.default_cfg, prov))
+            .map_err(anyhow::Error::from)
+    }
+
+    /// Hot-swap the executor serving `name`; returns the new version.
+    /// Batches already dispatched to the old executor complete on it;
+    /// requests submitted after this returns run on `exec`.
+    pub fn swap_model(&self, name: &str, exec: Arc<dyn Executor>) -> Result<u64> {
+        self.registry
+            .swap(name, exec, Provenance::InMemory)
+            .map_err(anyhow::Error::from)
+    }
+
+    /// Hot-swap `name` to a freshly loaded deployment artifact — the
+    /// zero-downtime re-deploy path: the old version keeps serving until
+    /// the new executor is fully built and validated.
+    pub fn swap_model_from_artifact(
+        &self,
+        name: &str,
+        path: impl AsRef<std::path::Path>,
+    ) -> Result<u64> {
+        let entry_cfg = self
+            .registry
+            .config_of(name)
+            .ok_or_else(|| RegistryError::UnknownModel(name.to_string()))?;
+        let (exec, prov) = artifact_exec(path.as_ref(), entry_cfg.max_batch)?;
+        self.registry.swap(name, exec, prov).map_err(anyhow::Error::from)
+    }
+
+    /// Remove `name` from routing. In-flight batches still complete and
+    /// reply; subsequent `infer(name, ..)` is a typed unknown-model error.
+    pub fn unload_model(&self, name: &str) -> Result<()> {
+        self.registry.unload(name).map(|_| ()).map_err(anyhow::Error::from)
+    }
+
+    /// Snapshot of every registered model, sorted by name.
+    pub fn list_models(&self) -> Vec<ModelInfo> {
+        self.registry.list()
+    }
+
+    /// Snapshot of one model's metrics ledger (spans swap versions).
+    pub fn model_metrics(&self, name: &str) -> Result<Metrics> {
+        self.registry.metrics_of(name).map_err(anyhow::Error::from)
     }
 }
 
-/// The running server; dropping it (after all handles) stops the threads.
+/// Build an executor (plus provenance) from a deployment artifact.
+fn artifact_exec(
+    path: &std::path::Path,
+    max_batch: usize,
+) -> Result<(Arc<dyn Executor>, Provenance)> {
+    let (exec, prov) =
+        crate::exec::NativeIntExecutor::from_artifact_with_provenance(path, max_batch)
+            .with_context(|| {
+                format!("building executor from artifact {}", path.display())
+            })?;
+    Ok((Arc::new(exec), Provenance::Artifact(prov)))
+}
+
+enum ModelSource {
+    Exec(Arc<dyn Executor>),
+    Artifact(PathBuf),
+}
+
+/// Builder for a [`Server`]: seed models (by executor or by artifact
+/// path), set the default config and per-model overrides, then `start()`.
+/// Duplicate names are a typed [`RegistryError::DuplicateName`].
+#[derive(Default)]
+pub struct ServerBuilder {
+    default_cfg: Option<ServerConfig>,
+    models: Vec<(String, ModelSource)>,
+    configs: HashMap<String, ServerConfig>,
+}
+
+impl ServerBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Server-wide defaults: worker-pool size, and the batching config
+    /// for models without a `config_for` override.
+    pub fn default_config(mut self, cfg: ServerConfig) -> Self {
+        self.default_cfg = Some(cfg);
+        self
+    }
+
+    /// Serve `exec` under `name`.
+    pub fn model(mut self, name: &str, exec: Arc<dyn Executor>) -> Self {
+        self.models.push((name.to_string(), ModelSource::Exec(exec)));
+        self
+    }
+
+    /// Serve the deployment artifact at `path` under `name`; the
+    /// executor is built at `start()` with the model's resolved config.
+    pub fn model_from_artifact(
+        mut self,
+        name: &str,
+        path: impl AsRef<std::path::Path>,
+    ) -> Self {
+        self.models
+            .push((name.to_string(), ModelSource::Artifact(path.as_ref().to_path_buf())));
+        self
+    }
+
+    /// Per-model batching override (`max_batch`, `batch_timeout`).
+    pub fn config_for(mut self, name: &str, cfg: ServerConfig) -> Self {
+        self.configs.insert(name.to_string(), cfg);
+        self
+    }
+
+    /// Build the registry and start the batcher + worker threads.
+    pub fn start(self) -> Result<Server> {
+        let default_cfg = self.default_cfg.unwrap_or_default();
+        let registry = Arc::new(ModelRegistry::new());
+        for (name, source) in self.models {
+            let cfg = self.configs.get(&name).copied().unwrap_or(default_cfg);
+            let (exec, prov) = match source {
+                ModelSource::Exec(exec) => (exec, Provenance::InMemory),
+                ModelSource::Artifact(path) => artifact_exec(&path, cfg.max_batch)?,
+            };
+            registry.register(ModelEntry::new(&name, exec, cfg, prov))?;
+        }
+        Ok(Server::spawn(registry, default_cfg))
+    }
+}
+
+/// The running server; stop it (or drop it after all handles) to join
+/// the threads. Constructed via [`Server::builder`].
 pub struct Server {
     handle: ServerHandle,
+    registry: Arc<ModelRegistry>,
     stop: Arc<AtomicBool>,
-    pub metrics: Arc<Mutex<Metrics>>,
     threads: Vec<std::thread::JoinHandle<()>>,
 }
 
 struct Job {
+    model: String,
     exec: Arc<dyn Executor>,
+    metrics: Arc<Mutex<Metrics>>,
     input: ExecInput,
     waiters: Vec<(SyncSender<Result<TensorI>>, Instant)>,
     n_real: usize,
@@ -133,58 +384,62 @@ struct Job {
 }
 
 impl Server {
-    pub fn start(models: Vec<ModelVariant>, cfg: ServerConfig) -> Server {
+    pub fn builder() -> ServerBuilder {
+        ServerBuilder::new()
+    }
+
+    fn spawn(registry: Arc<ModelRegistry>, cfg: ServerConfig) -> Server {
         let (tx, rx) = mpsc::channel::<Request>();
         let (jtx, jrx) = mpsc::channel::<Job>();
         let jrx = Arc::new(Mutex::new(jrx));
-        let metrics = Arc::new(Mutex::new(Metrics::new()));
         let stop = Arc::new(AtomicBool::new(false));
-        let registry: Arc<HashMap<String, ModelVariant>> = Arc::new(
-            models.into_iter().map(|m| (m.name.clone(), m)).collect(),
-        );
 
         let mut threads = Vec::new();
         // Batcher thread
         {
             let registry = registry.clone();
-            let metrics = metrics.clone();
             let stop = stop.clone();
             threads.push(std::thread::spawn(move || {
-                batcher_loop(rx, jtx, registry, metrics, stop, cfg);
+                batcher_loop(rx, jtx, registry, stop, cfg);
             }));
         }
-        // Worker pool
+        // Worker pool (shared across models)
         for wid in 0..cfg.n_workers {
             let jrx = jrx.clone();
-            let metrics = metrics.clone();
             threads.push(std::thread::spawn(move || {
-                worker_loop(wid, jrx, metrics);
+                worker_loop(wid, jrx);
             }));
         }
-        Server { handle: ServerHandle { tx }, stop, metrics, threads }
+        let handle = ServerHandle { tx, registry: registry.clone(), default_cfg: cfg };
+        Server { handle, registry, stop, threads }
     }
 
     pub fn handle(&self) -> ServerHandle {
         self.handle.clone()
     }
 
+    /// The registry backing this server (shared with every handle).
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.registry
+    }
+
+    /// Stop the threads and return the metrics aggregated across every
+    /// model still registered (per-model ledgers: `model_metrics`).
     pub fn stop(self) -> Metrics {
         self.stop.store(true, Ordering::SeqCst);
-        let Server { handle, metrics, threads, .. } = self;
+        let Server { handle, registry, threads, .. } = self;
         drop(handle); // close the request channel so the batcher exits
         for t in threads {
             let _ = t.join();
         }
-        let m = metrics.lock().unwrap().clone();
-        m
+        registry.aggregate_metrics()
     }
 }
 
 fn batcher_loop(
     rx: Receiver<Request>,
     jtx: Sender<Job>,
-    registry: Arc<HashMap<String, ModelVariant>>,
-    metrics: Arc<Mutex<Metrics>>,
+    registry: Arc<ModelRegistry>,
     stop: Arc<AtomicBool>,
     cfg: ServerConfig,
 ) {
@@ -200,51 +455,74 @@ fn batcher_loop(
             }
             Err(mpsc::RecvTimeoutError::Disconnected) => return,
         };
-        let deadline = Instant::now() + cfg.batch_timeout;
+        // The coalescing window is set by the first request's model (its
+        // per-model batch_timeout override, else the server default);
+        // each model's bucket caps at that model's max_batch.
+        let cap_of = |model: &str| -> usize {
+            registry
+                .config_of(model)
+                .map(|c| c.max_batch)
+                .unwrap_or(cfg.max_batch)
+                .max(1)
+        };
+        let window = registry
+            .config_of(&first.model)
+            .map(|c| c.batch_timeout)
+            .unwrap_or(cfg.batch_timeout);
+        let deadline = Instant::now() + window;
         let mut bucket: HashMap<String, Vec<Request>> = HashMap::new();
-        let cap = cfg.max_batch;
+        let mut caps: HashMap<String, usize> = HashMap::new();
+        caps.insert(first.model.clone(), cap_of(&first.model));
         bucket.entry(first.model.clone()).or_default().push(first);
         // Coalesce until the timeout or the cap for some model.
         loop {
-            let full = bucket.values().any(|v| v.len() >= cap);
+            let full = bucket
+                .iter()
+                .any(|(m, v)| v.len() >= caps.get(m).copied().unwrap_or(1));
             let now = Instant::now();
             if full || now >= deadline {
                 break;
             }
             match rx.recv_timeout(deadline - now) {
-                Ok(r) => bucket.entry(r.model.clone()).or_default().push(r),
+                Ok(r) => {
+                    caps.entry(r.model.clone())
+                        .or_insert_with(|| cap_of(&r.model));
+                    bucket.entry(r.model.clone()).or_default().push(r);
+                }
                 Err(mpsc::RecvTimeoutError::Timeout) => break,
                 Err(mpsc::RecvTimeoutError::Disconnected) => break,
             }
         }
         for (model, reqs) in bucket {
-            let Some(mv) = registry.get(&model) else {
+            // Resolve the name once per gathered bucket: every chunk of
+            // this bucket runs on the same executor version, and a swap
+            // or unload landing mid-coalesce takes effect at exactly
+            // this boundary.
+            let Some(entry) = registry.get(&model) else {
+                // Unloaded between submit and dispatch.
                 for r in reqs {
-                    let _ = r
-                        .reply
-                        .send(Err(anyhow!("unknown model '{model}'")));
+                    let _ = r.reply.send(Err(RegistryError::UnknownModel(
+                        model.clone(),
+                    )
+                    .into()));
                 }
                 continue;
             };
             // Split into chunks of at most what the backend can run
             // (floored at 1: chunks(0) panics and a misconfigured
             // max_batch must not take down the batcher thread).
-            for chunk in reqs.chunks(mv.max_batch().min(cap).max(1)) {
-                dispatch(mv, chunk, &jtx, &metrics);
+            let chunk_cap = entry.exec.max_batch().min(entry.cfg.max_batch).max(1);
+            for chunk in reqs.chunks(chunk_cap) {
+                dispatch(&entry, chunk, &jtx);
             }
         }
     }
 }
 
-fn dispatch(
-    mv: &ModelVariant,
-    reqs: &[Request],
-    jtx: &Sender<Job>,
-    metrics: &Arc<Mutex<Metrics>>,
-) {
+fn dispatch(entry: &ModelEntry, reqs: &[Request], jtx: &Sender<Job>) {
     // Shape guard: a wrong-shaped request must fail loudly (in release
     // builds too) instead of silently corrupting the gathered batch.
-    let expected = mv.input_shape();
+    let expected = entry.exec.input_shape();
     let mut valid: Vec<&Request> = Vec::with_capacity(reqs.len());
     let mut rejected = 0u64;
     for r in reqs {
@@ -259,14 +537,14 @@ fn dispatch(
             let _ = r.reply.send(Err(anyhow!(
                 "model '{}': input shape {:?} does not match per-sample shape \
                  {:?} (expected a [1, ...] single-sample image)",
-                mv.name,
+                entry.name,
                 shape,
                 expected
             )));
         }
     }
     if rejected > 0 {
-        metrics.lock().unwrap().failed += rejected;
+        entry.metrics.lock().unwrap().failed += rejected;
     }
     if valid.is_empty() {
         return;
@@ -283,7 +561,7 @@ fn dispatch(
     let qx = Tensor::from_vec(&shape, data);
 
     {
-        let mut m = metrics.lock().unwrap();
+        let mut m = entry.metrics.lock().unwrap();
         m.batch_sizes.push(n as f64);
         let now = Instant::now();
         for r in &valid {
@@ -292,11 +570,13 @@ fn dispatch(
         }
     }
     let job = Job {
-        exec: mv.exec.clone(),
+        model: entry.name.clone(),
+        exec: entry.exec.clone(),
+        metrics: entry.metrics.clone(),
         input: ExecInput::i32(qx),
         waiters: valid.iter().map(|r| (r.reply.clone(), r.enqueued)).collect(),
         n_real: n,
-        batch: mv.exec.effective_batch(n),
+        batch: entry.exec.effective_batch(n),
     };
     if let Err(mpsc::SendError(job)) = jtx.send(job) {
         // The worker pool is gone (server shutting down). Dropping the
@@ -305,17 +585,12 @@ fn dispatch(
         // recorded — answer with the real cause and count the failures.
         fail_job(
             &job,
-            metrics,
             "server is shutting down: worker pool stopped before the batch ran",
         );
     }
 }
 
-fn worker_loop(
-    _wid: usize,
-    jrx: Arc<Mutex<Receiver<Job>>>,
-    metrics: Arc<Mutex<Metrics>>,
-) {
+fn worker_loop(_wid: usize, jrx: Arc<Mutex<Receiver<Job>>>) {
     loop {
         let job = {
             let guard = jrx.lock().unwrap();
@@ -335,22 +610,25 @@ fn worker_loop(
                         Ok(t) => t,
                         Err(msg) => {
                             let msg = format!(
-                                "executor '{}' broke the integer logits protocol: {msg}",
+                                "model '{}': executor '{}' broke the integer logits \
+                                 protocol: {msg}",
+                                job.model,
                                 job.exec.name()
                             );
-                            fail_job(&job, &metrics, &msg);
+                            fail_job(&job, &msg);
                             continue;
                         }
                     },
                 };
                 if t.shape().first().copied().unwrap_or(0) < job.n_real {
                     let msg = format!(
-                        "executor '{}' returned {} rows for {} samples",
+                        "model '{}': executor '{}' returned {} rows for {} samples",
+                        job.model,
                         job.exec.name(),
                         t.shape().first().copied().unwrap_or(0),
                         job.n_real
                     );
-                    fail_job(&job, &metrics, &msg);
+                    fail_job(&job, &msg);
                     continue;
                 }
                 // Scatter replies first, then record everything under a
@@ -363,7 +641,7 @@ fn worker_loop(
                     let _ = reply.send(Ok(row));
                     e2e.push(done.duration_since(*enq).as_secs_f64());
                 }
-                let mut m = metrics.lock().unwrap();
+                let mut m = job.metrics.lock().unwrap();
                 m.exec_time.push(exec_s);
                 m.completed += job.n_real as u64;
                 m.padded += job.batch.saturating_sub(job.n_real) as u64;
@@ -372,15 +650,15 @@ fn worker_loop(
                 }
             }
             Err(e) => {
-                let msg = format!("execution failed: {e:#}");
-                fail_job(&job, &metrics, &msg);
+                let msg = format!("model '{}': execution failed: {e:#}", job.model);
+                fail_job(&job, &msg);
             }
         }
     }
 }
 
 /// Convert an f32 logits batch to the integer image the request protocol
-/// carries. Per the [`ModelVariant::new`] contract, f32 logits are
+/// carries. Per the coordinator's backend contract, f32 logits are
 /// tolerated only when their values are already integers (some XLA
 /// lowerings emit integer math as f32): each value is rounded to the
 /// nearest integer, and anything more than 1e-6 from an integer is a
@@ -409,9 +687,9 @@ fn integral_logits(t: &TensorF) -> Result<TensorI, String> {
     Ok(Tensor::from_vec(t.shape(), data))
 }
 
-fn fail_job(job: &Job, metrics: &Arc<Mutex<Metrics>>, msg: &str) {
+fn fail_job(job: &Job, msg: &str) {
     {
-        let mut m = metrics.lock().unwrap();
+        let mut m = job.metrics.lock().unwrap();
         m.failed += job.n_real as u64;
     }
     for (reply, _) in &job.waiters {
@@ -470,7 +748,12 @@ mod tests {
         // Regression: a failed jtx.send(job) dropped the waiters' reply
         // senders, so clients saw "server dropped request" and no failed
         // metric was recorded.
-        let mv = ModelVariant::new("m", Arc::new(IdentityExec));
+        let entry = ModelEntry::new(
+            "m",
+            Arc::new(IdentityExec),
+            ServerConfig::default(),
+            Provenance::InMemory,
+        );
         let (reply, rrx) = mpsc::sync_channel(1);
         let req = Request {
             model: "m".into(),
@@ -480,11 +763,10 @@ mod tests {
         };
         let (jtx, jrx) = mpsc::channel::<Job>();
         drop(jrx); // worker pool already gone
-        let metrics = Arc::new(Mutex::new(Metrics::new()));
-        dispatch(&mv, std::slice::from_ref(&req), &jtx, &metrics);
+        dispatch(&entry, std::slice::from_ref(&req), &jtx);
         let err = rrx.recv().expect("a reply must arrive").unwrap_err();
         assert!(err.to_string().contains("shutting down"), "{err}");
-        assert_eq!(metrics.lock().unwrap().failed, 1);
+        assert_eq!(entry.metrics.lock().unwrap().failed, 1);
     }
 
     #[test]
@@ -496,5 +778,21 @@ mod tests {
         assert!(err.contains("overflows"), "{err}");
         let t = TensorF::from_vec(&[1, 1], vec![-3e9]);
         assert!(integral_logits(&t).is_err());
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn model_variant_alias_still_constructs() {
+        // Deprecated for one release: ModelVariant remains usable as a
+        // (name, exec) pair; builders take the pieces directly.
+        let mv = ModelVariant::new("m", Arc::new(IdentityExec));
+        assert_eq!(mv.name, "m");
+        assert_eq!(mv.input_shape(), &[2]);
+        assert_eq!(mv.max_batch(), 4);
+        let server = Server::builder().model(&mv.name, mv.exec.clone()).start().unwrap();
+        let h = server.handle();
+        let out = h.infer("m", Tensor::from_vec(&[1, 2], vec![4, 5])).unwrap();
+        assert_eq!(out.data(), &[4, 5]);
+        server.stop();
     }
 }

@@ -1,0 +1,301 @@
+//! Model registry: the concurrently readable name → [`ModelEntry`] map
+//! behind the serving coordinator, with runtime lifecycle operations —
+//! `register` (load), `swap` (hot-reload), `unload` — that are atomic
+//! with respect to in-flight batches.
+//!
+//! Atomicity contract (DESIGN.md §Serving-registry): the batcher resolves
+//! a name to an `Arc<ModelEntry>` once per gathered batch, and the
+//! dispatched job carries that `Arc`. A `swap` or `unload` only replaces
+//! or removes the map entry — batches already bound to the old executor
+//! complete on it (the `Arc` keeps it alive), new requests resolve to the
+//! replacement, and no gathered batch ever mixes two executor versions.
+//! Per-model [`Metrics`] survive a swap (the same model name keeps one
+//! ledger across versions), so every request to a name is accounted for
+//! no matter which executor version answered it.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, RwLock};
+
+use crate::coordinator::{Metrics, ServerConfig};
+use crate::exec::Executor;
+use crate::io::artifact::ArtifactProvenance;
+
+/// Typed registry failures. Carried inside `anyhow::Error` on the
+/// inference path; `err.downcast_ref::<RegistryError>()` recovers them.
+#[derive(Debug, thiserror::Error)]
+pub enum RegistryError {
+    #[error(
+        "model '{0}' is already registered (duplicate name); unload it \
+         first, or use swap to replace its executor"
+    )]
+    DuplicateName(String),
+    #[error("unknown model '{0}' (never registered, or already unloaded)")]
+    UnknownModel(String),
+}
+
+/// Where a model's executor came from — surfaced in `list_models` so an
+/// operator can tell which artifact (and which bytes) a name is serving.
+#[derive(Clone, Debug)]
+pub enum Provenance {
+    /// Built in-process (e.g. from a checkpoint or a constructed graph).
+    InMemory,
+    /// Loaded from a `model.nemo.json` deployment artifact.
+    Artifact(ArtifactProvenance),
+}
+
+impl std::fmt::Display for Provenance {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Provenance::InMemory => write!(f, "in-memory"),
+            Provenance::Artifact(a) => write!(
+                f,
+                "artifact {} ({} bytes, format v{}, {})",
+                a.path, a.bytes, a.format_version, a.checksum
+            ),
+        }
+    }
+}
+
+/// One registered model: a shareable executor, the serving configuration
+/// resolved for this model, its metrics ledger and its provenance. The
+/// `version` counter starts at 1 and bumps on every swap of the name.
+pub struct ModelEntry {
+    pub name: String,
+    pub exec: Arc<dyn Executor>,
+    pub cfg: ServerConfig,
+    pub metrics: Arc<Mutex<Metrics>>,
+    pub provenance: Provenance,
+    pub version: u64,
+}
+
+impl ModelEntry {
+    pub fn new(
+        name: &str,
+        exec: Arc<dyn Executor>,
+        cfg: ServerConfig,
+        provenance: Provenance,
+    ) -> Self {
+        ModelEntry {
+            name: name.to_string(),
+            exec,
+            cfg,
+            metrics: Arc::new(Mutex::new(Metrics::new())),
+            provenance,
+            version: 1,
+        }
+    }
+
+    /// Snapshot for `list_models`.
+    pub fn info(&self) -> ModelInfo {
+        ModelInfo {
+            name: self.name.clone(),
+            version: self.version,
+            backend: self.exec.name().to_string(),
+            input_shape: self.exec.input_shape().to_vec(),
+            max_batch: self.cfg.max_batch.min(self.exec.max_batch()),
+            provenance: self.provenance.clone(),
+        }
+    }
+}
+
+/// Public snapshot of one registry entry.
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub name: String,
+    pub version: u64,
+    pub backend: String,
+    pub input_shape: Vec<usize>,
+    pub max_batch: usize,
+    pub provenance: Provenance,
+}
+
+/// The concurrently readable name → entry map. Reads (request routing)
+/// take a short shared lock; lifecycle writes take the exclusive lock
+/// only to mutate the map — never while an executor runs.
+#[derive(Default)]
+pub struct ModelRegistry {
+    inner: RwLock<HashMap<String, Arc<ModelEntry>>>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a new model name. Duplicate names are a typed error —
+    /// never a silent last-wins overwrite.
+    pub fn register(&self, entry: ModelEntry) -> Result<(), RegistryError> {
+        let mut map = self.inner.write().expect("registry lock poisoned");
+        if map.contains_key(&entry.name) {
+            return Err(RegistryError::DuplicateName(entry.name));
+        }
+        map.insert(entry.name.clone(), Arc::new(entry));
+        Ok(())
+    }
+
+    /// Replace the executor serving `name`, keeping its config and its
+    /// metrics ledger (the name's request accounting spans versions).
+    /// Returns the new version number. Batches already dispatched against
+    /// the old executor complete on it; requests routed after this call
+    /// returns run on `exec`.
+    pub fn swap(
+        &self,
+        name: &str,
+        exec: Arc<dyn Executor>,
+        provenance: Provenance,
+    ) -> Result<u64, RegistryError> {
+        let mut map = self.inner.write().expect("registry lock poisoned");
+        let old = map
+            .get(name)
+            .ok_or_else(|| RegistryError::UnknownModel(name.to_string()))?;
+        let entry = ModelEntry {
+            name: old.name.clone(),
+            exec,
+            cfg: old.cfg,
+            metrics: old.metrics.clone(),
+            provenance,
+            version: old.version + 1,
+        };
+        let version = entry.version;
+        map.insert(name.to_string(), Arc::new(entry));
+        Ok(version)
+    }
+
+    /// Remove `name` from routing. In-flight batches bound to its
+    /// executor still complete (their jobs hold the `Arc`); the removed
+    /// entry is returned so callers can read its final metrics.
+    pub fn unload(&self, name: &str) -> Result<Arc<ModelEntry>, RegistryError> {
+        let mut map = self.inner.write().expect("registry lock poisoned");
+        map.remove(name)
+            .ok_or_else(|| RegistryError::UnknownModel(name.to_string()))
+    }
+
+    /// Resolve a name to its current entry (the routing read).
+    pub fn get(&self, name: &str) -> Option<Arc<ModelEntry>> {
+        self.inner.read().expect("registry lock poisoned").get(name).cloned()
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.inner.read().expect("registry lock poisoned").contains_key(name)
+    }
+
+    /// Per-model serving config, if the name is registered.
+    pub fn config_of(&self, name: &str) -> Option<ServerConfig> {
+        self.get(name).map(|e| e.cfg)
+    }
+
+    /// Snapshot of every registered model, sorted by name.
+    pub fn list(&self) -> Vec<ModelInfo> {
+        let map = self.inner.read().expect("registry lock poisoned");
+        let mut infos: Vec<ModelInfo> = map.values().map(|e| e.info()).collect();
+        infos.sort_by(|a, b| a.name.cmp(&b.name));
+        infos
+    }
+
+    /// Snapshot of one model's metrics ledger.
+    pub fn metrics_of(&self, name: &str) -> Result<Metrics, RegistryError> {
+        let entry = self
+            .get(name)
+            .ok_or_else(|| RegistryError::UnknownModel(name.to_string()))?;
+        let m = entry.metrics.lock().expect("metrics lock poisoned").clone();
+        Ok(m)
+    }
+
+    /// Aggregate metrics across every *currently registered* model
+    /// (metrics of unloaded models leave with their entries).
+    pub fn aggregate_metrics(&self) -> Metrics {
+        let map = self.inner.read().expect("registry lock poisoned");
+        let mut total = Metrics::new();
+        for entry in map.values() {
+            total.merge(&entry.metrics.lock().expect("metrics lock poisoned"));
+        }
+        total
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.read().expect("registry lock poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{ExecInput, ExecOutput};
+
+    struct Stub;
+    impl Executor for Stub {
+        fn name(&self) -> &str {
+            "stub"
+        }
+        fn input_shape(&self) -> &[usize] {
+            &[2]
+        }
+        fn max_batch(&self) -> usize {
+            4
+        }
+        fn run_batch(&self, input: &ExecInput) -> anyhow::Result<ExecOutput> {
+            Ok(ExecOutput { logits: input.batch.clone() })
+        }
+    }
+
+    fn entry(name: &str) -> ModelEntry {
+        ModelEntry::new(name, Arc::new(Stub), ServerConfig::default(), Provenance::InMemory)
+    }
+
+    #[test]
+    fn duplicate_register_is_typed() {
+        let r = ModelRegistry::new();
+        r.register(entry("m")).unwrap();
+        match r.register(entry("m")) {
+            Err(RegistryError::DuplicateName(n)) => assert_eq!(n, "m"),
+            other => panic!("expected DuplicateName, got {other:?}"),
+        }
+        assert_eq!(r.len(), 1);
+    }
+
+    #[test]
+    fn swap_bumps_version_and_keeps_metrics() {
+        let r = ModelRegistry::new();
+        r.register(entry("m")).unwrap();
+        r.get("m").unwrap().metrics.lock().unwrap().completed = 5;
+        let v2 = r.swap("m", Arc::new(Stub), Provenance::InMemory).unwrap();
+        assert_eq!(v2, 2);
+        let e = r.get("m").unwrap();
+        assert_eq!(e.version, 2);
+        assert_eq!(e.metrics.lock().unwrap().completed, 5, "ledger spans versions");
+        // swapping an unknown name is typed, not an implicit register
+        assert!(matches!(
+            r.swap("ghost", Arc::new(Stub), Provenance::InMemory),
+            Err(RegistryError::UnknownModel(_))
+        ));
+    }
+
+    #[test]
+    fn unload_removes_from_routing_and_returns_entry() {
+        let r = ModelRegistry::new();
+        r.register(entry("m")).unwrap();
+        let removed = r.unload("m").unwrap();
+        assert_eq!(removed.name, "m");
+        assert!(r.get("m").is_none());
+        assert!(matches!(r.unload("m"), Err(RegistryError::UnknownModel(_))));
+        // the name can be re-registered afresh (version restarts at 1)
+        r.register(entry("m")).unwrap();
+        assert_eq!(r.get("m").unwrap().version, 1);
+    }
+
+    #[test]
+    fn list_is_sorted_and_aggregate_sums() {
+        let r = ModelRegistry::new();
+        r.register(entry("zeta")).unwrap();
+        r.register(entry("alpha")).unwrap();
+        let names: Vec<String> = r.list().into_iter().map(|i| i.name).collect();
+        assert_eq!(names, vec!["alpha", "zeta"]);
+        r.get("alpha").unwrap().metrics.lock().unwrap().completed = 2;
+        r.get("zeta").unwrap().metrics.lock().unwrap().completed = 3;
+        assert_eq!(r.aggregate_metrics().completed, 5);
+    }
+}

@@ -22,11 +22,12 @@ pub mod pjrt;
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtExecutor;
 
-use std::sync::Mutex;
+use std::sync::{Mutex, OnceLock};
 
 use anyhow::{bail, ensure, Context as _, Result};
 
 use crate::engine::plan::{Arena, FloatPlan, IntArena, IntPlan, PackedArena, PlanLayout};
+use crate::engine::PlanError;
 use crate::graph::int::IntGraph;
 use crate::graph::Graph;
 use crate::tensor::{TensorF, TensorI};
@@ -148,39 +149,69 @@ fn check_batch_shape(
     Ok(n)
 }
 
-/// Shared plumbing of the native executors: one compiled layout per
-/// batch variant (1..=max_batch, compiled at construction) and a pool of
+/// Shared plumbing of the native executors: per-batch-variant layouts
+/// compiled *lazily* — slot `b-1` fills on the first request with batch
+/// `b` and is cached for the executor's lifetime — plus a pool of
 /// scratch arenas recycled across requests, so the steady-state request
-/// path performs no graph walking and no per-node allocation. Generic
-/// over the arena flavour ([`Arena<T>`] for the full-width/float paths,
+/// path performs no graph walking and no per-node allocation. Only the
+/// batch-1 layout is compiled eagerly, so construction surfaces layout
+/// errors without paying for `max_batch` variants that a serving mix may
+/// never touch (ROADMAP "Batch-variant plan sharing"). Generic over the
+/// arena flavour ([`Arena<T>`] for the full-width/float paths,
 /// [`PackedArena`] for precision-packed serving).
 struct PlanSet<A> {
-    layouts: Vec<PlanLayout>,
+    layouts: Vec<OnceLock<PlanLayout>>,
     arenas: Mutex<Vec<A>>,
 }
 
 impl<A: Default> PlanSet<A> {
-    fn compile(
-        layout_of: impl Fn(usize) -> std::result::Result<PlanLayout, crate::engine::PlanError>,
+    fn new(
+        layout_of: impl Fn(usize) -> std::result::Result<PlanLayout, PlanError>,
         max_batch: usize,
     ) -> Result<Self> {
-        let layouts = (1..=max_batch)
-            .map(&layout_of)
-            .collect::<std::result::Result<Vec<_>, _>>()?;
+        let layouts: Vec<OnceLock<PlanLayout>> =
+            (0..max_batch).map(|_| OnceLock::new()).collect();
+        // Batch 1 eagerly: any per-batch layout error is structural (the
+        // batch dimension only scales buffer sizes), so this validates
+        // the whole family at construction time.
+        let first = layout_of(1)?;
+        let _ = layouts[0].set(first);
         Ok(PlanSet { layouts, arenas: Mutex::new(Vec::new()) })
     }
 
-    /// Run `f` with the layout for batch `n` and a pooled arena.
-    fn with_arena<R>(&self, n: usize, f: impl FnOnce(&PlanLayout, &mut A) -> R) -> R {
+    /// Number of batch variants compiled so far (diagnostics/benches).
+    fn compiled_layouts(&self) -> usize {
+        self.layouts.iter().filter(|c| c.get().is_some()).count()
+    }
+
+    /// Run `f` with the layout for batch `n` (compiling and caching it on
+    /// first use) and a pooled arena.
+    fn with_arena<R>(
+        &self,
+        n: usize,
+        layout_of: impl Fn(usize) -> std::result::Result<PlanLayout, PlanError>,
+        f: impl FnOnce(&PlanLayout, &mut A) -> R,
+    ) -> Result<R> {
+        let cell = &self.layouts[n - 1];
+        let layout = match cell.get() {
+            Some(l) => l,
+            None => {
+                // Racing threads may compile the same variant; the first
+                // `set` wins and the duplicate is dropped — layouts are
+                // deterministic, so either copy is correct.
+                let l = layout_of(n)?;
+                cell.get_or_init(|| l)
+            }
+        };
         let mut arena = self
             .arenas
             .lock()
             .expect("arena pool poisoned")
             .pop()
             .unwrap_or_default();
-        let out = f(&self.layouts[n - 1], &mut arena);
+        let out = f(layout, &mut arena);
         self.arenas.lock().expect("arena pool poisoned").push(arena);
-        out
+        Ok(out)
     }
 }
 
@@ -215,9 +246,9 @@ impl NativeIntExecutor {
         let eps_out = graph.eps_out;
         let plan = IntPlan::compile(&graph)?;
         let plans = if plan.has_packed_steps() {
-            IntPlanSet::Packed(PlanSet::compile(|b| plan.packed_layout(b), max_batch)?)
+            IntPlanSet::Packed(PlanSet::new(|b| plan.packed_layout(b), max_batch)?)
         } else {
-            IntPlanSet::Wide(PlanSet::compile(|b| plan.layout(b), max_batch)?)
+            IntPlanSet::Wide(PlanSet::new(|b| plan.layout(b), max_batch)?)
         };
         let input_shape = plan.input_shape().to_vec();
         Ok(NativeIntExecutor { plan, plans, input_shape, max_batch, eps_out })
@@ -232,11 +263,23 @@ impl NativeIntExecutor {
         path: impl AsRef<std::path::Path>,
         max_batch: usize,
     ) -> Result<Self> {
+        Self::from_artifact_with_provenance(path, max_batch).map(|(exec, _)| exec)
+    }
+
+    /// Like [`Self::from_artifact`], but also surfaces the artifact's
+    /// provenance (path, checksum, format version, byte size) — what the
+    /// serving registry records so `list_models` can say exactly which
+    /// bytes a name is serving.
+    pub fn from_artifact_with_provenance(
+        path: impl AsRef<std::path::Path>,
+        max_batch: usize,
+    ) -> Result<(Self, crate::io::artifact::ArtifactProvenance)> {
         let path = path.as_ref();
-        let art = crate::io::DeployedArtifact::load(path).with_context(|| {
-            format!("loading deployed model artifact {}", path.display())
-        })?;
-        Self::new(art.into_int_graph(), max_batch)
+        let (art, prov) = crate::io::DeployedArtifact::load_with_provenance(path)
+            .with_context(|| {
+                format!("loading deployed model artifact {}", path.display())
+            })?;
+        Ok((Self::new(art.into_int_graph(), max_batch)?, prov))
     }
 
     /// Quantum of the output integer image (real logits ~ eps_out * Q).
@@ -252,6 +295,17 @@ impl NativeIntExecutor {
     /// Whether requests run the precision-packed plan path.
     pub fn packed(&self) -> bool {
         matches!(self.plans, IntPlanSet::Packed(_))
+    }
+
+    /// How many per-batch [`PlanLayout`] variants have been compiled so
+    /// far. Construction compiles exactly one (the batch-1 validator);
+    /// the rest fill lazily on first use, so this stays small for
+    /// serving mixes that only ever see a few batch sizes.
+    pub fn compiled_layouts(&self) -> usize {
+        match &self.plans {
+            IntPlanSet::Packed(ps) => ps.compiled_layouts(),
+            IntPlanSet::Wide(ps) => ps.compiled_layouts(),
+        }
     }
 
     /// Loud range check for untrusted request images entering the packed
@@ -293,13 +347,17 @@ impl Executor for NativeIntExecutor {
         let out = match &self.plans {
             IntPlanSet::Packed(ps) => {
                 self.check_packed_input(qx)?;
-                ps.with_arena(n, |layout, arena| {
-                    self.plan.execute_packed(layout, arena, qx)
-                })
+                ps.with_arena(
+                    n,
+                    |b| self.plan.packed_layout(b),
+                    |layout, arena| self.plan.execute_packed(layout, arena, qx),
+                )?
             }
-            IntPlanSet::Wide(ps) => {
-                ps.with_arena(n, |layout, arena| self.plan.execute(layout, arena, qx))
-            }
+            IntPlanSet::Wide(ps) => ps.with_arena(
+                n,
+                |b| self.plan.layout(b),
+                |layout, arena| self.plan.execute(layout, arena, qx),
+            )?,
         };
         Ok(ExecOutput { logits: Arg::I32(out) })
     }
@@ -308,9 +366,9 @@ impl Executor for NativeIntExecutor {
 /// The float engine behind the [`Executor`] trait: runs FP / FQ / QD
 /// graphs on f32 batches. Note the serving coordinator's request
 /// protocol carries integer images only, so this backend is for direct
-/// `run_batch` callers (tools, benches, comparisons), not for
-/// `coordinator::ModelVariant`. Compiled exactly like the integer
-/// executor: one fused plan, per-batch layouts, pooled arenas.
+/// `run_batch` callers (tools, benches, comparisons), not for the
+/// serving registry. Compiled exactly like the integer executor: one
+/// fused plan, lazy per-batch layouts, pooled arenas.
 pub struct NativeFloatExecutor {
     plan: FloatPlan,
     plans: PlanSet<Arena<f32>>,
@@ -322,9 +380,15 @@ impl NativeFloatExecutor {
     pub fn new(graph: Graph, max_batch: usize) -> Result<Self> {
         ensure!(max_batch >= 1, "max_batch must be >= 1");
         let plan = FloatPlan::compile(&graph)?;
-        let plans = PlanSet::compile(|b| plan.layout(b), max_batch)?;
+        let plans = PlanSet::new(|b| plan.layout(b), max_batch)?;
         let input_shape = plan.input_shape().to_vec();
         Ok(NativeFloatExecutor { plan, plans, input_shape, max_batch })
+    }
+
+    /// Compiled per-batch layout variants so far (lazy; see
+    /// [`NativeIntExecutor::compiled_layouts`]).
+    pub fn compiled_layouts(&self) -> usize {
+        self.plans.compiled_layouts()
     }
 }
 
@@ -349,9 +413,11 @@ impl Executor for NativeFloatExecutor {
             &self.input_shape,
             self.max_batch,
         )?;
-        let out = self
-            .plans
-            .with_arena(n, |layout, arena| self.plan.execute(layout, arena, x));
+        let out = self.plans.with_arena(
+            n,
+            |b| self.plan.layout(b),
+            |layout, arena| self.plan.execute(layout, arena, x),
+        )?;
         Ok(ExecOutput { logits: Arg::F32(out) })
     }
 }
@@ -455,6 +521,44 @@ mod tests {
             out.int_logits().unwrap().data(),
             want.int_logits().unwrap().data()
         );
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn per_batch_layouts_compile_lazily_and_cache() {
+        // Construction compiles exactly one layout (the batch-1
+        // validator) even for a large max_batch; variants fill on first
+        // use and are cached, not recompiled.
+        let exec = NativeIntExecutor::new(identity_int_graph(), 64).unwrap();
+        assert_eq!(exec.compiled_layouts(), 1);
+        let qx = Tensor::from_vec(&[3, 2], vec![1, 2, 3, 4, 5, 6]);
+        let out = exec.run_batch(&ExecInput::i32(qx.clone())).unwrap();
+        assert_eq!(out.int_logits().unwrap().data(), &[1, 2, 3, 4, 5, 6]);
+        assert_eq!(exec.compiled_layouts(), 2, "batch-3 variant compiled on demand");
+        exec.run_batch(&ExecInput::i32(qx)).unwrap();
+        assert_eq!(exec.compiled_layouts(), 2, "second batch-3 request reuses the cache");
+    }
+
+    #[test]
+    fn from_artifact_with_provenance_reports_the_file() {
+        let g = identity_int_graph();
+        let art = crate::io::DeployedArtifact {
+            graph: g,
+            layers: vec![],
+            node_eps: vec![1.0; 2],
+            worst_case: vec![255, 510],
+            meta: Default::default(),
+        };
+        let path = std::env::temp_dir()
+            .join(format!("nemo_exec_prov_{}.nemo.json", std::process::id()));
+        art.save(&path).unwrap();
+        let (exec, prov) =
+            NativeIntExecutor::from_artifact_with_provenance(&path, 2).unwrap();
+        assert_eq!(exec.input_shape(), &[2]);
+        assert!(prov.path.contains("nemo_exec_prov_"), "{}", prov.path);
+        assert!(prov.checksum.starts_with("fnv1a64:"), "{}", prov.checksum);
+        assert_eq!(prov.format_version, crate::io::artifact::VERSION);
+        assert_eq!(prov.bytes, std::fs::metadata(&path).unwrap().len());
         let _ = std::fs::remove_file(path);
     }
 

@@ -70,6 +70,19 @@ pub enum ArtifactError {
     Precision(#[from] ShapeError),
 }
 
+/// Identity of a loaded artifact file, surfaced alongside the decoded
+/// model so a serving registry can record exactly which bytes a model
+/// name is serving (and an operator can audit a hot swap after the
+/// fact). The checksum is the artifact's own stored (and verified)
+/// FNV-1a 64 model digest.
+#[derive(Clone, Debug)]
+pub struct ArtifactProvenance {
+    pub path: String,
+    pub checksum: String,
+    pub format_version: i64,
+    pub bytes: u64,
+}
+
 /// A deserialization-ready image of a deployed model: the integer graph
 /// with its precision stamps, the per-layer quantization table, per-node
 /// eps / worst-case diagnostics, and the pipeline stage metadata. The QD
@@ -172,11 +185,31 @@ impl DeployedArtifact {
     /// over the model subtree, structural graph validation, payload
     /// range checks and the precision re-proof.
     pub fn load(path: impl AsRef<Path>) -> Result<Self, ArtifactError> {
+        Self::load_with_provenance(path).map(|(art, _)| art)
+    }
+
+    /// [`Self::load`], additionally returning the file's
+    /// [`ArtifactProvenance`] (path, verified checksum, format version,
+    /// byte size) for registries and tooling that must report *which*
+    /// artifact a model came from.
+    pub fn load_with_provenance(
+        path: impl AsRef<Path>,
+    ) -> Result<(Self, ArtifactProvenance), ArtifactError> {
         let path = path.as_ref();
         let text = std::fs::read_to_string(path).map_err(|source| {
             ArtifactError::Io { path: path.display().to_string(), source }
         })?;
-        Self::from_json(&json::parse(&text)?)
+        let doc = json::parse(&text)?;
+        let art = Self::from_json(&doc)?;
+        // from_json validated format/version/checksum, so these reads
+        // cannot fail — but route errors anyway rather than unwrap.
+        let prov = ArtifactProvenance {
+            path: path.display().to_string(),
+            checksum: doc.get("checksum")?.as_str()?.to_string(),
+            format_version: doc.get("version")?.as_i64()?,
+            bytes: text.len() as u64,
+        };
+        Ok((art, prov))
     }
 
     /// Decode a parsed artifact document (the inverse of [`Self::to_json`]).

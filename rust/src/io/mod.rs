@@ -13,7 +13,7 @@
 
 pub mod artifact;
 
-pub use artifact::{ArtifactError, DeployedArtifact};
+pub use artifact::{ArtifactError, ArtifactProvenance, DeployedArtifact};
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};

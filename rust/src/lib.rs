@@ -24,9 +24,11 @@
 //! * a PJRT runtime ([`runtime`], feature `pjrt`) that loads the
 //!   HLO-text artifacts produced by `python/compile/`;
 //! * a serving coordinator ([`coordinator`]) with dynamic batching over
-//!   *any* executor — `serve --backend native` needs no artifacts at
-//!   all, `--backend pjrt` serves the compiled ones through the same
-//!   path;
+//!   a runtime model registry of executors — multi-model serving by
+//!   name with hot load / swap / unload and per-model metrics; `serve
+//!   --backend native` needs no artifacts at all, `serve --model
+//!   a.nemo.json --model b.nemo.json` serves deployment artifacts, and
+//!   `--backend pjrt` serves the compiled ones through the same path;
 //! * a QAT training driver ([`train`], feature `pjrt`) that runs the
 //!   compiled FakeQuantized train step — Python is never on the request
 //!   path;

@@ -19,14 +19,15 @@
 //! `nemo <sub> --help-less`: flags are documented in README.md.
 
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
 use nemo::cli::Args;
-use nemo::coordinator::{ModelVariant, Server, ServerConfig};
+use nemo::coordinator::{Server, ServerConfig};
 use nemo::data::SynthDigits;
-use nemo::exec::Executor as _;
-use nemo::io::{artifacts_dir, Checkpoint, Goldens};
+use nemo::exec::Executor;
+use nemo::io::{artifacts_dir, Checkpoint, DeployedArtifact, Goldens};
 use nemo::model::synthnet::{SynthNet, EPS_IN};
 use nemo::network::{IntegerDeployable, Network};
 use nemo::quant::quantize_input;
@@ -69,9 +70,11 @@ const USAGE: &str = "usage: nemo <train|deploy|infer|serve|validate|info> [--fla
   deploy   --ckpt ck.json --bits B --thresholds --save m.nemo.json
   infer    --ckpt ck.json --n N --bits B
   serve    --ckpt ck.json --backend native|pjrt --requests N --clients C --max-batch B --timeout-us T
-           --model m.nemo.json   (serve a saved deployment artifact: no training/transform work)
+           --model [name=]m.nemo.json  (repeatable: serve saved deployment artifacts by name,
+                                        no training/transform work; name defaults to the file stem)
+           --swap name=m.nemo.json     (hot-swap an artifact onto the running server mid-load-test)
   validate
-  info";
+  info     --model m.nemo.json  (repeatable: inspect artifacts without serving them)";
 
 fn load_or_init_net(args: &Args, rng: &mut Rng) -> Result<SynthNet> {
     match args.str_opt("ckpt") {
@@ -273,84 +276,165 @@ fn cmd_infer(args: &Args) -> Result<()> {
 }
 
 #[cfg(feature = "pjrt")]
-fn pjrt_model(args: &Args, nid: &Network<IntegerDeployable>) -> Result<ModelVariant> {
+fn pjrt_exec(
+    args: &Args,
+    nid: &Network<IntegerDeployable>,
+) -> Result<Arc<dyn Executor>> {
     use nemo::model::artifact_args::synthnet_id_args;
     let rt = nemo::runtime::Runtime::new(artifacts_dir())?;
     let base_args = synthnet_id_args(nid.deployed())?;
     let kind = args.str_or("kind", "id_fwd_xla");
-    ModelVariant::load(&rt, "synthnet", &kind, base_args)
+    Ok(Arc::new(nemo::exec::PjrtExecutor::load(&rt, &kind, base_args)?))
 }
 
 #[cfg(not(feature = "pjrt"))]
-fn pjrt_model(_args: &Args, _nid: &Network<IntegerDeployable>) -> Result<ModelVariant> {
+fn pjrt_exec(
+    _args: &Args,
+    _nid: &Network<IntegerDeployable>,
+) -> Result<Arc<dyn Executor>> {
     bail!(
         "this binary was built without the `pjrt` feature; rebuild with \
          `--features pjrt` or use `--backend native`"
     )
 }
 
-fn cmd_serve(args: &Args) -> Result<()> {
-    // `--model m.nemo.json` serves a saved deployment artifact directly:
-    // no checkpoint, no training, no transform pipeline — the artifact
-    // IS the model. Otherwise deploy from a checkpoint (or a fresh init).
-    let nid = match args.str_opt("model") {
-        Some(path) => {
-            if args.str_or("backend", "native") != "native" {
-                bail!(
-                    "serve --model serves the native integer engine; drop \
-                     --backend or use --backend native"
-                );
-            }
-            println!("loading deployment artifact {path}");
-            Network::<IntegerDeployable>::load_deployed(path)
-                .with_context(|| format!("loading deployment artifact {path}"))?
+/// A `--model` value: `name=path`, or a bare path whose model name
+/// defaults to the file stem (`models/a.nemo.json` serves as "a").
+fn model_spec(spec: &str) -> (String, String) {
+    if let Some((name, path)) = spec.split_once('=') {
+        if !name.is_empty() && !name.contains('/') {
+            return (name.to_string(), path.to_string());
         }
-        None => {
-            let mut rng = Rng::new(7);
-            let net = load_or_init_net(args, &mut rng)?;
-            deploy_from_args(args, &net)?
-        }
-    };
+    }
+    let stem = std::path::Path::new(spec)
+        .file_name()
+        .map(|s| s.to_string_lossy().to_string())
+        .unwrap_or_else(|| spec.to_string());
+    let name = stem
+        .strip_suffix(".nemo.json")
+        .or_else(|| stem.strip_suffix(".json"))
+        .unwrap_or(stem.as_str())
+        .to_string();
+    (name, spec.to_string())
+}
 
+fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = ServerConfig {
         max_batch: args.usize_or("max-batch", 16)?,
-        batch_timeout: std::time::Duration::from_micros(
-            args.usize_or("timeout-us", 500)? as u64,
-        ),
+        batch_timeout: Duration::from_micros(args.usize_or("timeout-us", 500)? as u64),
         n_workers: args.usize_or("workers", 2)?,
     };
     let backend = args.str_or("backend", "native");
-    let model = match backend.as_str() {
-        "native" => {
-            // The in-process integer engine: no artifacts, no FFI.
-            let exec = nid.to_executor(cfg.max_batch)?;
-            ModelVariant::new("synthnet", Arc::new(exec))
+
+    // `--model [name=]m.nemo.json` (repeatable) serves saved deployment
+    // artifacts directly: no checkpoint, no training, no transform
+    // pipeline — the artifacts ARE the models. Otherwise deploy from a
+    // checkpoint (or a fresh init) and serve it as "synthnet".
+    let model_flags = args.str_all("model");
+    let mut builder = Server::builder().default_config(cfg);
+    let mut names: Vec<String> = Vec::new();
+    if !model_flags.is_empty() {
+        if backend != "native" {
+            bail!(
+                "serve --model serves the native integer engine; drop \
+                 --backend or use --backend native"
+            );
         }
-        "pjrt" => pjrt_model(args, &nid)?,
-        b => bail!("unknown backend '{b}' (expected native|pjrt)"),
-    };
-    let backend_name = model.exec.name().to_string();
+        for spec in model_flags {
+            let (name, path) = model_spec(spec);
+            println!("loading deployment artifact {path} as '{name}'");
+            builder = builder.model_from_artifact(&name, &path);
+            names.push(name);
+        }
+    } else {
+        let mut rng = Rng::new(7);
+        let net = load_or_init_net(args, &mut rng)?;
+        let nid = deploy_from_args(args, &net)?;
+        let exec: Arc<dyn Executor> = match backend.as_str() {
+            // The in-process integer engine: no artifacts, no FFI.
+            "native" => nid.to_shared_executor(cfg.max_batch)?,
+            "pjrt" => pjrt_exec(args, &nid)?,
+            b => bail!("unknown backend '{b}' (expected native|pjrt)"),
+        };
+        builder = builder.model("synthnet", exec);
+        names.push("synthnet".to_string());
+    }
+
+    let server = builder.start()?;
+    let h = server.handle();
+    for info in h.list_models() {
+        println!(
+            "model '{}' v{}  backend={}  input={:?}  max_batch={}  [{}]",
+            info.name,
+            info.version,
+            info.backend,
+            info.input_shape,
+            info.max_batch,
+            info.provenance
+        );
+    }
 
     let n_requests = args.usize_or("requests", 512)?;
-    let n_clients = args.usize_or("clients", 8)?;
+    let n_clients = args.usize_or("clients", 8)?.max(1);
+    // Integer truncation: each client issues `per` requests, so the
+    // reachable total is per * n_clients, not n_requests — the swap
+    // trigger below must wait on the former or it would never fire.
+    let per = n_requests / n_clients;
     println!(
-        "serving synthnet on {backend_name}: {n_requests} requests, {n_clients} clients, {:?}",
+        "serving {} model(s): {} requests, {n_clients} clients, {:?}",
+        names.len(),
+        per * n_clients,
         cfg
     );
 
-    let server = Server::start(vec![model], cfg);
-    let t0 = std::time::Instant::now();
+    let t0 = Instant::now();
+    // Optional hot swap mid-run: `--swap name=path.nemo.json` re-deploys
+    // an artifact onto the *running* server once roughly half the
+    // traffic has completed — the zero-downtime rollout the registry
+    // exists for.
+    let swap_join = args.str_opt("swap").map(|spec| {
+        let spec = spec.to_string();
+        let h = server.handle();
+        let names = names.clone();
+        let half = ((per * n_clients) / 2) as u64;
+        std::thread::spawn(move || -> Result<()> {
+            let Some((name, path)) = spec.split_once('=') else {
+                bail!("--swap expects name=path.nemo.json, got '{spec}'");
+            };
+            loop {
+                let done: u64 = names
+                    .iter()
+                    .map(|n| {
+                        h.model_metrics(n).map(|m| m.completed + m.failed).unwrap_or(0)
+                    })
+                    .sum();
+                if done >= half {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            let t = Instant::now();
+            let version = h.swap_model_from_artifact(name, path)?;
+            println!(
+                "hot swap: '{name}' <- {path} now v{version} \
+                 (swap took {:.2} ms; in-flight batches finished on the old executor)",
+                t.elapsed().as_secs_f64() * 1e3
+            );
+            Ok(())
+        })
+    });
+
     let mut joins = Vec::new();
     for c in 0..n_clients {
         let h = server.handle();
-        let per = n_requests / n_clients;
+        let model = names[c % names.len()].clone();
         joins.push(std::thread::spawn(move || -> Result<usize> {
             let mut data = SynthDigits::new(1000 + c as u64);
             let mut ok = 0;
             for _ in 0..per {
                 let (x, labels) = data.batch(1);
                 let qx = quantize_input(&x, EPS_IN);
-                let out = h.infer("synthnet", qx)?;
+                let out = h.infer(&model, qx)?;
                 if out.argmax_rows()[0] == labels[0] {
                     ok += 1;
                 }
@@ -362,14 +446,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
     for j in joins {
         correct += j.join().unwrap()?;
     }
+    if let Some(j) = swap_join {
+        j.join().unwrap()?;
+    }
     let wall = t0.elapsed().as_secs_f64();
+
+    // Stop first: joining the workers makes the ledgers final, so the
+    // per-model reports below cannot race the last batch's accounting.
+    // (The handle stays usable for registry reads after stop.)
     let mut metrics = server.stop();
+    if names.len() > 1 {
+        for name in &names {
+            let mut m = h.model_metrics(name)?;
+            println!("-- model '{name}'\n{}", m.report());
+        }
+    }
     println!("{}", metrics.report());
     println!(
-        "wall {:.3}s  throughput {:.0} req/s  accuracy {:.1}%",
+        "wall {:.3}s  throughput {:.0} req/s  argmax-vs-label agreement {:.1}%",
         wall,
         metrics.throughput(wall),
-        100.0 * correct as f64 / n_requests as f64
+        100.0 * correct as f64 / (per * n_clients).max(1) as f64
     );
     Ok(())
 }
@@ -442,7 +539,20 @@ fn cmd_validate(_args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_info(_args: &Args) -> Result<()> {
+fn cmd_info(args: &Args) -> Result<()> {
+    // `nemo info --model m.nemo.json` (repeatable): inspect native
+    // deployment artifacts without serving them — format/version,
+    // checksum, layer/precision tables, requant params, input shape.
+    let models = args.str_all("model");
+    if !models.is_empty() {
+        for (i, path) in models.iter().enumerate() {
+            if i > 0 {
+                println!();
+            }
+            info_artifact(path)?;
+        }
+        return Ok(());
+    }
     #[cfg(feature = "pjrt")]
     {
         let rt = nemo::runtime::Runtime::new(artifacts_dir())?;
@@ -460,6 +570,55 @@ fn cmd_info(_args: &Args) -> Result<()> {
             a.args.len(),
             a.n_outputs
         );
+    }
+    Ok(())
+}
+
+/// Print everything an operator needs to know about a deployment
+/// artifact before routing traffic at it (ROADMAP "Artifact tooling").
+fn info_artifact(path: &str) -> Result<()> {
+    use nemo::graph::int::IntOp;
+
+    let (art, prov) = DeployedArtifact::load_with_provenance(path)
+        .with_context(|| format!("loading deployment artifact {path}"))?;
+    println!("artifact {}", prov.path);
+    println!(
+        "  format v{}  checksum {} (verified)  {} bytes",
+        prov.format_version, prov.checksum, prov.bytes
+    );
+    println!(
+        "  wbits={} abits={} bn_folded={}  eps_in={:.6e}  eps_out={:.6e}",
+        art.meta.wbits,
+        art.meta.abits,
+        art.meta.bn_folded,
+        art.eps_in(),
+        art.graph.eps_out
+    );
+    let input_shape = art.graph.nodes.iter().find_map(|n| match &n.op {
+        IntOp::Input { shape, .. } => Some(shape.clone()),
+        _ => None,
+    });
+    match input_shape {
+        Some(s) => println!("  input shape (per sample): {s:?}"),
+        None => println!("  input shape: <no Input node>"),
+    }
+    println!("  nodes ({}):", art.graph.nodes.len());
+    println!("    {:<16} {:<12} {:>9}", "name", "op", "precision");
+    for n in &art.graph.nodes {
+        println!("    {:<16} {:<12} {:>9}", n.name, n.op.name(), n.precision.name());
+    }
+    if !art.layers.is_empty() {
+        println!("  layers (requant params, paper sec. 3):");
+        println!(
+            "    {:<10} {:>12} {:>12} {:>4} {:>10} {:>8}",
+            "layer", "eps_w", "eps_y", "d", "m", "act_hi"
+        );
+        for l in &art.layers {
+            println!(
+                "    {:<10} {:>12.3e} {:>12.3e} {:>4} {:>10} {:>8}",
+                l.name, l.eps_w, l.eps_y, l.d, l.m, l.act_hi
+            );
+        }
     }
     Ok(())
 }

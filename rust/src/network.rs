@@ -386,6 +386,17 @@ impl Network<IntegerDeployable> {
         NativeIntExecutor::new(self.repr.id.clone(), max_batch)
     }
 
+    /// [`Self::to_executor`] pre-wrapped in the `Arc<dyn Executor>` the
+    /// serving registry speaks — the one-liner for
+    /// `ServerBuilder::model(name, nid.to_shared_executor(b)?)` and
+    /// `ServerHandle::{load_model, swap_model}`.
+    pub fn to_shared_executor(
+        &self,
+        max_batch: usize,
+    ) -> anyhow::Result<std::sync::Arc<dyn crate::exec::Executor>> {
+        Ok(std::sync::Arc::new(self.to_executor(max_batch)?))
+    }
+
     /// Consume the network into a native [`crate::exec::Executor`].
     pub fn into_executor(self, max_batch: usize) -> anyhow::Result<NativeIntExecutor> {
         NativeIntExecutor::new(self.repr.id, max_batch)

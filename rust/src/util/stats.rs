@@ -18,6 +18,13 @@ impl Samples {
         self.sorted = false;
     }
 
+    /// Append every sample from `other` (per-model metrics folding into
+    /// an aggregate view).
+    pub fn extend_from(&mut self, other: &Samples) {
+        self.xs.extend_from_slice(&other.xs);
+        self.sorted = false;
+    }
+
     pub fn len(&self) -> usize {
         self.xs.len()
     }

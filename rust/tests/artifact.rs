@@ -5,10 +5,9 @@
 //! artifact (the `nemo serve --model` path) is held to the same
 //! bit-identity standard with zero training/transform work at load time.
 
-use std::sync::Arc;
 use std::time::Duration;
 
-use nemo::coordinator::{ModelVariant, Server, ServerConfig};
+use nemo::coordinator::{Server, ServerConfig};
 use nemo::data::SynthDigits;
 use nemo::engine::IntegerEngine;
 use nemo::exec::{ExecInput, Executor, NativeIntExecutor};
@@ -266,16 +265,25 @@ fn serve_from_artifact_without_training_matches_local_engine() {
     let exec = NativeIntExecutor::from_artifact(&path, 8).unwrap();
     assert!(exec.packed(), "synthnet at 8 bits must serve packed");
     let reference = Network::<IntegerDeployable>::load_deployed(&path).unwrap();
-    let _ = std::fs::remove_file(&path);
 
-    let model = ModelVariant::new("synthnet", Arc::new(exec));
-    let server = Server::start(
-        vec![model],
-        ServerConfig {
+    // Build through the registry's own artifact path (the `nemo serve
+    // --model` route), then verify against the direct-executor load.
+    let server = Server::builder()
+        .default_config(ServerConfig {
             max_batch: 8,
             batch_timeout: Duration::from_micros(300),
             n_workers: 2,
-        },
+        })
+        .model_from_artifact("synthnet", &path)
+        .start()
+        .unwrap();
+    let _ = std::fs::remove_file(&path); // server loaded fully into memory
+    let models = server.handle().list_models();
+    assert_eq!(models.len(), 1);
+    assert!(
+        models[0].provenance.to_string().contains("nemo_artifact"),
+        "provenance must name the artifact file: {}",
+        models[0].provenance
     );
     let h = server.handle();
     let mut data = SynthDigits::new(7);

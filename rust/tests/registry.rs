@@ -1,0 +1,407 @@
+//! Registry lifecycle integration tests: multi-model serving, runtime
+//! load / hot-swap / unload under concurrent traffic, typed errors, and
+//! per-model metrics accounting.
+//!
+//! The atomicity contract under test (DESIGN.md §Serving-registry):
+//! requests already batched against the old executor complete on it, new
+//! requests route to the replacement, no reply is lost or mis-routed,
+//! and the per-model metrics ledger accounts for every request across
+//! executor versions.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use nemo::coordinator::{
+    InferError, Provenance, RegistryError, Server, ServerConfig,
+};
+use nemo::exec::{Arg, ExecInput, ExecOutput, Executor};
+use nemo::model::mlp;
+use nemo::network::{IntegerDeployable, Network};
+use nemo::quant::quantize_input;
+use nemo::tensor::{Tensor, TensorF, TensorI};
+use nemo::transform::DeployOptions;
+use nemo::util::rng::Rng;
+
+/// Deterministic stub: logits = input + offset. Distinct offsets make
+/// mis-routed and torn replies detectable from the reply value alone.
+struct OffsetExec {
+    offset: i32,
+}
+
+impl Executor for OffsetExec {
+    fn name(&self) -> &str {
+        "offset-stub"
+    }
+
+    fn input_shape(&self) -> &[usize] {
+        &[2]
+    }
+
+    fn max_batch(&self) -> usize {
+        8
+    }
+
+    fn run_batch(&self, input: &ExecInput) -> anyhow::Result<ExecOutput> {
+        let t = input.batch.as_i32()?;
+        Ok(ExecOutput { logits: Arg::I32(t.map(|v| v + self.offset)) })
+    }
+}
+
+/// Stub that takes long enough for a deadline to expire first.
+struct SlowExec;
+
+impl Executor for SlowExec {
+    fn name(&self) -> &str {
+        "slow-stub"
+    }
+
+    fn input_shape(&self) -> &[usize] {
+        &[2]
+    }
+
+    fn max_batch(&self) -> usize {
+        8
+    }
+
+    fn run_batch(&self, input: &ExecInput) -> anyhow::Result<ExecOutput> {
+        std::thread::sleep(Duration::from_millis(150));
+        Ok(ExecOutput { logits: input.batch.clone() })
+    }
+}
+
+fn qx2(a: i32, b: i32) -> TensorI {
+    Tensor::from_vec(&[1, 2], vec![a, b])
+}
+
+fn fast_cfg() -> ServerConfig {
+    ServerConfig {
+        max_batch: 8,
+        batch_timeout: Duration::from_micros(200),
+        n_workers: 2,
+    }
+}
+
+#[test]
+fn duplicate_names_are_typed_at_build_and_at_runtime() {
+    // Build time: the old Vec<ModelVariant> API last-wins silently on a
+    // HashMap insert; the registry must refuse with a typed error.
+    let err = Server::builder()
+        .model("m", Arc::new(OffsetExec { offset: 1 }))
+        .model("m", Arc::new(OffsetExec { offset: 2 }))
+        .start()
+        .unwrap_err();
+    assert!(matches!(
+        err.downcast_ref::<RegistryError>(),
+        Some(RegistryError::DuplicateName(n)) if n == "m"
+    ));
+
+    // Runtime: load_model on a taken name is the same typed error, and
+    // the running model is untouched.
+    let server = Server::builder()
+        .default_config(fast_cfg())
+        .model("m", Arc::new(OffsetExec { offset: 10 }))
+        .start()
+        .unwrap();
+    let h = server.handle();
+    let err = h.load_model("m", Arc::new(OffsetExec { offset: 20 })).unwrap_err();
+    assert!(matches!(
+        err.downcast_ref::<RegistryError>(),
+        Some(RegistryError::DuplicateName(_))
+    ));
+    assert_eq!(h.infer("m", qx2(1, 2)).unwrap().data(), &[11, 12]);
+    server.stop();
+}
+
+#[test]
+fn unknown_and_post_unload_inference_are_typed_errors() {
+    let server = Server::builder()
+        .default_config(fast_cfg())
+        .model("m", Arc::new(OffsetExec { offset: 100 }))
+        .start()
+        .unwrap();
+    let h = server.handle();
+
+    // never registered
+    let err = h.infer("ghost", qx2(0, 0)).unwrap_err();
+    assert!(matches!(
+        err.downcast_ref::<RegistryError>(),
+        Some(RegistryError::UnknownModel(n)) if n == "ghost"
+    ));
+
+    // load at runtime, serve, unload, serve again
+    h.load_model("late", Arc::new(OffsetExec { offset: 7 })).unwrap();
+    assert_eq!(h.infer("late", qx2(1, 1)).unwrap().data(), &[8, 8]);
+    let names: Vec<String> = h.list_models().into_iter().map(|i| i.name).collect();
+    assert_eq!(names, vec!["late", "m"]);
+
+    h.unload_model("late").unwrap();
+    let err = h.infer("late", qx2(1, 1)).unwrap_err();
+    assert!(matches!(
+        err.downcast_ref::<RegistryError>(),
+        Some(RegistryError::UnknownModel(n)) if n == "late"
+    ));
+    // unloading twice is typed too
+    let err = h.unload_model("late").unwrap_err();
+    assert!(matches!(
+        err.downcast_ref::<RegistryError>(),
+        Some(RegistryError::UnknownModel(_))
+    ));
+    // metrics of an unloaded model are gone with the entry
+    assert!(h.model_metrics("late").is_err());
+    server.stop();
+}
+
+#[test]
+fn swap_under_concurrent_load_loses_and_misroutes_nothing() {
+    // Two models, distinct offsets; "a" hot-swaps 1000 -> 3000 mid-run.
+    // Every reply must decode to a legal (model, version) offset, every
+    // request must be answered, and the per-model ledgers must account
+    // for every request.
+    let server = Server::builder()
+        .default_config(fast_cfg())
+        .model("a", Arc::new(OffsetExec { offset: 1000 }))
+        .model("b", Arc::new(OffsetExec { offset: 2000 }))
+        .start()
+        .unwrap();
+    let h = server.handle();
+
+    let per_client = 50usize;
+    let mut joins = Vec::new();
+    for c in 0..8i32 {
+        let h = server.handle();
+        let model = if c % 2 == 0 { "a" } else { "b" };
+        joins.push(std::thread::spawn(move || -> Result<(), String> {
+            for i in 0..per_client as i32 {
+                let v = c * 1000 + i;
+                let out = h
+                    .infer(model, qx2(v, v + 1))
+                    .map_err(|e| format!("lost reply on '{model}': {e}"))?;
+                let off = out.data()[0] - v;
+                let legal: &[i32] =
+                    if model == "a" { &[1000, 3000] } else { &[2000] };
+                if !legal.contains(&off) || out.data()[1] - (v + 1) != off {
+                    return Err(format!(
+                        "mis-routed/torn reply on '{model}': input {v} -> {:?}",
+                        out.data()
+                    ));
+                }
+            }
+            Ok(())
+        }));
+    }
+
+    // Let traffic flow, then swap "a" under load.
+    std::thread::sleep(Duration::from_millis(2));
+    let version = h.swap_model("a", Arc::new(OffsetExec { offset: 3000 })).unwrap();
+    assert_eq!(version, 2);
+    // A request submitted after the swap returned must run on the new
+    // executor — the registry routes new requests to the replacement.
+    let post = h.infer("a", qx2(5, 6)).unwrap();
+    assert_eq!(post.data(), &[3005, 3006], "post-swap requests must hit v2");
+
+    for j in joins {
+        j.join().unwrap().unwrap();
+    }
+
+    // Versions visible; per-model ledgers account for every request
+    // (including across the swap: the name keeps one ledger). Stop the
+    // server first — workers record metrics *after* scattering replies,
+    // so only joining them (stop) makes the exact counts race-free; the
+    // handle's registry reads still work afterwards.
+    let infos = h.list_models();
+    let a = infos.iter().find(|i| i.name == "a").unwrap();
+    let b = infos.iter().find(|i| i.name == "b").unwrap();
+    assert_eq!(a.version, 2);
+    assert_eq!(b.version, 1);
+    let total = server.stop();
+    let ma = h.model_metrics("a").unwrap();
+    let mb = h.model_metrics("b").unwrap();
+    assert_eq!(ma.completed, 4 * per_client as u64 + 1);
+    assert_eq!(mb.completed, 4 * per_client as u64);
+    assert_eq!(ma.failed + mb.failed, 0);
+    assert_eq!(total.completed, 8 * per_client as u64 + 1);
+}
+
+fn deployed_mlp(seed: u64) -> Network<IntegerDeployable> {
+    let mut rng = Rng::new(seed);
+    let g = mlp(&mut rng, 12, 10, 4, 1.0 / 255.0);
+    let x = TensorF::from_vec(
+        &[8, 12],
+        (0..96).map(|_| rng.uniform(0.0, 1.0) as f32).collect(),
+    );
+    let fp = Network::from_graph(g).unwrap();
+    let betas = fp.calibrate(&[x]);
+    fp.quantize_pact(8, 8, &betas)
+        .unwrap()
+        .deploy(DeployOptions::default())
+        .unwrap()
+        .integerize()
+}
+
+#[test]
+fn artifact_hot_swap_is_bit_identical_per_version() {
+    // Serve net1 in-memory as "m"; mid-traffic, hot-swap "m" to net2's
+    // saved artifact. Every reply must be bit-identical to exactly one
+    // of the two versions' in-memory networks, and post-swap replies to
+    // the new one.
+    let net1 = deployed_mlp(51);
+    let net2 = deployed_mlp(52);
+    let path = std::env::temp_dir()
+        .join(format!("nemo_registry_swap_{}.nemo.json", std::process::id()));
+    net2.save_deployed(&path).unwrap();
+
+    let server = Server::builder()
+        .default_config(fast_cfg())
+        .model("m", net1.to_shared_executor(8).unwrap())
+        .start()
+        .unwrap();
+    let h = server.handle();
+
+    let net1 = Arc::new(net1);
+    let net2 = Arc::new(net2);
+    let mut joins = Vec::new();
+    for c in 0..4u64 {
+        let h = server.handle();
+        let (net1, net2) = (net1.clone(), net2.clone());
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(900 + c);
+            for _ in 0..40 {
+                let x = TensorF::from_vec(
+                    &[1, 12],
+                    (0..12).map(|_| rng.uniform(0.0, 1.0) as f32).collect(),
+                );
+                let qx = quantize_input(&x, 1.0 / 255.0);
+                let served = h.infer("m", qx.clone()).unwrap();
+                let e1 = net1.run(&qx);
+                let e2 = net2.run(&qx);
+                assert!(
+                    served.data() == e1.data() || served.data() == e2.data(),
+                    "reply matches neither version: {:?}",
+                    served.data()
+                );
+            }
+        }));
+    }
+
+    std::thread::sleep(Duration::from_millis(2));
+    let version = h.swap_model_from_artifact("m", &path).unwrap();
+    assert_eq!(version, 2);
+
+    for j in joins {
+        j.join().unwrap();
+    }
+
+    // Post-swap: strictly the new program, bit-identical to net2.
+    let mut rng = Rng::new(999);
+    for _ in 0..8 {
+        let x = TensorF::from_vec(
+            &[1, 12],
+            (0..12).map(|_| rng.uniform(0.0, 1.0) as f32).collect(),
+        );
+        let qx = quantize_input(&x, 1.0 / 255.0);
+        assert_eq!(h.infer("m", qx.clone()).unwrap().data(), net2.run(&qx).data());
+    }
+
+    // Provenance now names the artifact file.
+    let info = h.list_models().into_iter().find(|i| i.name == "m").unwrap();
+    assert_eq!(info.version, 2);
+    match &info.provenance {
+        Provenance::Artifact(a) => {
+            assert!(a.path.contains("nemo_registry_swap_"), "{}", a.path);
+            assert!(a.checksum.starts_with("fnv1a64:"), "{}", a.checksum);
+        }
+        other => panic!("expected artifact provenance, got {other}"),
+    }
+    let m = server.stop();
+    assert_eq!(m.failed, 0);
+    assert_eq!(m.completed, 4 * 40 + 8);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn infer_deadline_and_try_infer_semantics() {
+    let server = Server::builder()
+        .default_config(ServerConfig {
+            max_batch: 2,
+            batch_timeout: Duration::from_micros(100),
+            n_workers: 1,
+        })
+        .model("slow", Arc::new(SlowExec))
+        .model("fast", Arc::new(OffsetExec { offset: 40 }))
+        .start()
+        .unwrap();
+    let h = server.handle();
+
+    // Deadline shorter than the executor's latency: typed timeout; the
+    // request still completes server-side (visible in the ledger later).
+    let err = h
+        .infer_deadline("slow", qx2(1, 2), Duration::from_millis(5))
+        .unwrap_err();
+    assert!(matches!(
+        err.downcast_ref::<InferError>(),
+        Some(InferError::DeadlineExceeded(_))
+    ));
+
+    // Generous deadline: normal reply.
+    let out = h
+        .infer_deadline("fast", qx2(1, 2), Duration::from_secs(10))
+        .unwrap();
+    assert_eq!(out.data(), &[41, 42]);
+
+    // try_infer returns immediately; the reply arrives via polling.
+    let pending = h.try_infer("fast", qx2(7, 8)).unwrap();
+    let t0 = Instant::now();
+    let out = loop {
+        if let Some(r) = pending.try_poll() {
+            break r.unwrap();
+        }
+        assert!(t0.elapsed() < Duration::from_secs(10), "reply never arrived");
+        std::thread::sleep(Duration::from_millis(1));
+    };
+    assert_eq!(out.data(), &[47, 48]);
+
+    // try_infer on an unknown name fails before anything is queued.
+    assert!(h.try_infer("ghost", qx2(0, 0)).is_err());
+
+    // The timed-out slow request still executed and was accounted.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let m = h.model_metrics("slow").unwrap();
+        if m.completed == 1 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "slow request never accounted");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    server.stop();
+}
+
+#[test]
+fn per_model_config_override_caps_that_models_batches() {
+    let server = Server::builder()
+        .default_config(fast_cfg())
+        .model("tiny", Arc::new(OffsetExec { offset: 5 }))
+        .config_for(
+            "tiny",
+            ServerConfig { max_batch: 2, ..fast_cfg() },
+        )
+        .start()
+        .unwrap();
+    let mut joins = Vec::new();
+    for c in 0..6i32 {
+        let h = server.handle();
+        joins.push(std::thread::spawn(move || {
+            h.infer("tiny", qx2(c, c)).unwrap()
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let m = server.stop();
+    assert_eq!(m.completed, 6);
+    assert!(
+        m.batch_sizes.max() <= 2.0,
+        "per-model max_batch override ignored: max gathered batch {}",
+        m.batch_sizes.max()
+    );
+}

@@ -2,11 +2,12 @@
 //! behaviour, failure handling. These run over the *native* integer
 //! executor — no artifacts, no PJRT — because the coordinator is backend
 //! agnostic; a PJRT round-trip rides along behind the `pjrt` feature.
+//! Registry lifecycle (swap/unload/load) tests live in tests/registry.rs.
 
 use std::sync::Arc;
 use std::time::Duration;
 
-use nemo::coordinator::{ModelVariant, Server, ServerConfig};
+use nemo::coordinator::{RegistryError, Server, ServerConfig};
 use nemo::data::SynthDigits;
 use nemo::model::synthnet::{SynthNet, EPS_IN};
 use nemo::network::{IntegerDeployable, Network};
@@ -25,9 +26,12 @@ fn deployed_net(seed: u64) -> Network<IntegerDeployable> {
 }
 
 fn start_native_server(nid: &Network<IntegerDeployable>, cfg: ServerConfig) -> Server {
-    let exec = nid.to_executor(cfg.max_batch.max(1)).unwrap();
-    let model = ModelVariant::new("synthnet", Arc::new(exec));
-    Server::start(vec![model], cfg)
+    let exec = nid.to_shared_executor(cfg.max_batch.max(1)).unwrap();
+    Server::builder()
+        .default_config(cfg)
+        .model("synthnet", exec)
+        .start()
+        .unwrap()
 }
 
 #[test]
@@ -95,7 +99,28 @@ fn unknown_model_is_rejected_not_hung() {
     let qx = nemo::tensor::TensorI::zeros(&[1, 1, 16, 16]);
     let err = h.infer("nonexistent", qx).unwrap_err();
     assert!(err.to_string().contains("unknown model"));
+    // the rejection is typed, not a string-only anyhow error
+    assert!(matches!(
+        err.downcast_ref::<RegistryError>(),
+        Some(RegistryError::UnknownModel(n)) if n == "nonexistent"
+    ));
     server.stop();
+}
+
+#[test]
+fn duplicate_model_names_are_a_typed_build_error() {
+    // Regression: Server::start(Vec<ModelVariant>) silently last-wins on
+    // duplicate names via HashMap insert. The builder must refuse.
+    let nid = deployed_net(42);
+    let err = Server::builder()
+        .model("synthnet", nid.to_shared_executor(4).unwrap())
+        .model("synthnet", nid.to_shared_executor(4).unwrap())
+        .start()
+        .unwrap_err();
+    assert!(matches!(
+        err.downcast_ref::<RegistryError>(),
+        Some(RegistryError::DuplicateName(n)) if n == "synthnet"
+    ));
 }
 
 #[test]
@@ -157,7 +182,7 @@ fn batch_chunking_respects_executor_max_batch() {
     assert_eq!(m.failed, 0);
 }
 
-// -- f32 logits protocol (ModelVariant::new contract) ----------------------
+// -- f32 logits protocol (integer-request backend contract) ----------------
 
 /// Stub backend returning f32 logits: integer-valued (some XLA lowerings
 /// emit integer math as f32) or genuinely fractional.
@@ -192,11 +217,10 @@ impl nemo::exec::Executor for FloatLogitsStub {
 fn near_integer_f32_logits_are_rounded_not_truncated() {
     // 2.9999997 under the old `v as i32` truncation served 2; the
     // contract says round-to-nearest.
-    let model = ModelVariant::new(
-        "stub",
-        Arc::new(FloatLogitsStub { value: 2.999_999_7 }),
-    );
-    let server = Server::start(vec![model], ServerConfig::default());
+    let server = Server::builder()
+        .model("stub", Arc::new(FloatLogitsStub { value: 2.999_999_7 }))
+        .start()
+        .unwrap();
     let h = server.handle();
     let out = h.infer("stub", nemo::tensor::TensorI::zeros(&[1, 2])).unwrap();
     assert_eq!(out.data(), &[3]);
@@ -207,8 +231,10 @@ fn near_integer_f32_logits_are_rounded_not_truncated() {
 
 #[test]
 fn fractional_f32_logits_fail_loudly() {
-    let model = ModelVariant::new("stub", Arc::new(FloatLogitsStub { value: 1.5 }));
-    let server = Server::start(vec![model], ServerConfig::default());
+    let server = Server::builder()
+        .model("stub", Arc::new(FloatLogitsStub { value: 1.5 }))
+        .start()
+        .unwrap();
     let h = server.handle();
     let err = h
         .infer("stub", nemo::tensor::TensorI::zeros(&[1, 2]))
@@ -227,6 +253,7 @@ fn fractional_f32_logits_fail_loudly() {
 #[cfg(feature = "pjrt")]
 mod pjrt {
     use super::*;
+    use nemo::exec::PjrtExecutor;
     use nemo::io::artifacts_dir;
     use nemo::model::artifact_args::synthnet_id_args;
     use nemo::runtime::Runtime;
@@ -243,8 +270,11 @@ mod pjrt {
         let rt = Runtime::new(dir).unwrap();
         let nid = deployed_net(38);
         let base_args = synthnet_id_args(nid.deployed()).unwrap();
-        let pjrt_model = ModelVariant::load(&rt, "synthnet", "id_fwd", base_args).unwrap();
-        let pjrt_server = Server::start(vec![pjrt_model], ServerConfig::default());
+        let pjrt_exec = PjrtExecutor::load(&rt, "id_fwd", base_args).unwrap();
+        let pjrt_server = Server::builder()
+            .model("synthnet", Arc::new(pjrt_exec))
+            .start()
+            .unwrap();
         let native_server = start_native_server(&nid, ServerConfig::default());
 
         let hp = pjrt_server.handle();
@@ -274,15 +304,16 @@ mod pjrt {
         let rt = Runtime::new(dir).unwrap();
         let nid = Arc::new(deployed_net(40));
         let base_args = synthnet_id_args(nid.deployed()).unwrap();
-        let model = ModelVariant::load(&rt, "synthnet", "id_fwd", base_args).unwrap();
-        let server = Server::start(
-            vec![model],
-            ServerConfig {
+        let exec = PjrtExecutor::load(&rt, "id_fwd", base_args).unwrap();
+        let server = Server::builder()
+            .default_config(ServerConfig {
                 max_batch: 4,
                 batch_timeout: Duration::from_millis(20),
                 n_workers: 1,
-            },
-        );
+            })
+            .model("synthnet", Arc::new(exec))
+            .start()
+            .unwrap();
         let mut data = SynthDigits::new(41);
         let mut handles = Vec::new();
         for _ in 0..3 {
