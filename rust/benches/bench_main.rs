@@ -58,6 +58,7 @@ fn main() {
                 || a.starts_with("packed")
                 || a.starts_with("artifact")
                 || a.starts_with("registry")
+                || a.starts_with("net")
         })
         .collect();
     let run = |tag: &str| {
@@ -110,6 +111,9 @@ fn main() {
     }
     if run("registry") {
         registry_multi_model_and_swap();
+    }
+    if run("net") {
+        net_loopback();
     }
     if run("perf") {
         perf_microbench();
@@ -1042,6 +1046,117 @@ fn registry_multi_model_and_swap() {
     std::fs::write("BENCH_registry.json", json::write(&doc))
         .expect("write BENCH_registry.json");
     println!("  wrote BENCH_registry.json");
+}
+
+/// Wire-protocol overhead: loopback request latency (p50/p99) and
+/// throughput vs in-process `ServerHandle::infer` against the same
+/// coordinator, on a single connection and a pipelined one.
+fn net_loopback() {
+    use nemo::net::{NemoClient, NetConfig, NetServer};
+    use nemo::util::stats::Samples;
+
+    println!("\n=== net: loopback wire protocol vs in-process infer ===");
+    let mut rng = Rng::new(321);
+    let net = SynthNet::init(&mut rng);
+    let dep = deploy_pact(net.to_pact_graph(8), DeployOptions::default());
+    let max_batch = 16usize;
+    let server = Server::builder()
+        .default_config(ServerConfig {
+            max_batch,
+            batch_timeout: Duration::from_micros(300),
+            n_workers: 2,
+        })
+        .model(
+            "m",
+            Arc::new(NativeIntExecutor::new(dep.id.clone(), max_batch).expect("exec")),
+        )
+        .start()
+        .expect("server");
+    let h = server.handle();
+    let ns = NetServer::bind("127.0.0.1:0", server.handle(), NetConfig::default())
+        .expect("bind");
+    let mut client = NemoClient::connect(ns.local_addr()).expect("connect");
+
+    let mut data = SynthDigits::new(6100);
+    let inputs: Vec<TensorI> = (0..256)
+        .map(|_| {
+            let (x, _) = data.batch(1);
+            quantize_input(&x, EPS_IN)
+        })
+        .collect();
+
+    // In-process baseline on the same coordinator.
+    let n = inputs.len();
+    let t0 = std::time::Instant::now();
+    let mut local_lat = Samples::new();
+    for qx in &inputs {
+        let t = std::time::Instant::now();
+        h.infer("m", qx.clone()).expect("local infer");
+        local_lat.push(t.elapsed().as_secs_f64());
+    }
+    let local_wall = t0.elapsed().as_secs_f64();
+
+    // Remote, one request per round-trip.
+    let t0 = std::time::Instant::now();
+    let mut remote_lat = Samples::new();
+    for qx in &inputs {
+        let t = std::time::Instant::now();
+        client.infer("m", qx).expect("remote infer");
+        remote_lat.push(t.elapsed().as_secs_f64());
+    }
+    let remote_wall = t0.elapsed().as_secs_f64();
+
+    // Remote, pipelined in windows of 32 frames per flush.
+    let window = 32usize;
+    let t0 = std::time::Instant::now();
+    for chunk in inputs.chunks(window) {
+        let outs = client.infer_pipelined("m", chunk).expect("pipelined infer");
+        assert_eq!(outs.len(), chunk.len());
+    }
+    let pipelined_wall = t0.elapsed().as_secs_f64();
+
+    let local_p50 = local_lat.percentile(0.5);
+    let remote_p50 = remote_lat.percentile(0.5);
+    let remote_p99 = remote_lat.percentile(0.99);
+    println!(
+        "  in-process : {:>8.0} req/s  p50 {}  p99 {}",
+        n as f64 / local_wall,
+        fmt_time(local_p50),
+        fmt_time(local_lat.percentile(0.99))
+    );
+    println!(
+        "  remote     : {:>8.0} req/s  p50 {}  p99 {}  (wire overhead p50 {})",
+        n as f64 / remote_wall,
+        fmt_time(remote_p50),
+        fmt_time(remote_p99),
+        fmt_time((remote_p50 - local_p50).max(0.0))
+    );
+    println!(
+        "  pipelined  : {:>8.0} req/s  ({} frames per flush)",
+        n as f64 / pipelined_wall,
+        window
+    );
+
+    ns.stop();
+    let total = server.stop();
+    assert_eq!(total.failed, 0, "the bench must not fail any request");
+
+    let doc = json::obj(vec![(
+        "net_bench",
+        json::obj(vec![
+            ("n_requests", Value::Int(n as i64)),
+            ("pipeline_window", Value::Int(window as i64)),
+            ("inprocess_req_per_s", Value::Num(n as f64 / local_wall)),
+            ("inprocess_p50_s", Value::Num(local_p50)),
+            ("remote_req_per_s", Value::Num(n as f64 / remote_wall)),
+            ("remote_p50_s", Value::Num(remote_p50)),
+            ("remote_p99_s", Value::Num(remote_p99)),
+            ("pipelined_req_per_s", Value::Num(n as f64 / pipelined_wall)),
+            ("wire_overhead_p50_s", Value::Num((remote_p50 - local_p50).max(0.0))),
+        ]),
+    )]);
+    std::fs::write("BENCH_net.json", json::write(&doc)).expect("write BENCH_net.json");
+    println!("  wrote BENCH_net.json");
 }
 
 // ---------------------------------------------------------------------------

@@ -1,11 +1,13 @@
 //! Minimal CLI argument parser (no clap in the offline vendor set).
 //!
-//! Grammar: `nemo <subcommand> [--key value|--key=value|--switch] ...`
+//! Grammar: `nemo <subcommand> [action] [--key value|--key=value|--switch] ...`
 //!
-//! Repeated flags accumulate in order (`--model a.json --model b.json`),
-//! so multi-model subcommands can take one flag per model; the scalar
-//! accessors read the *last* occurrence, which keeps `--foo x --foo y`
-//! backward compatible with the old last-wins behaviour.
+//! At most one positional *action* may follow the subcommand (`nemo
+//! client infer --model m`); anything positional after that is an
+//! error. Repeated flags accumulate in order (`--model a.json --model
+//! b.json`), so multi-model subcommands can take one flag per model;
+//! the scalar accessors read the *last* occurrence, which keeps `--foo
+//! x --foo y` backward compatible with the old last-wins behaviour.
 
 use std::collections::HashMap;
 
@@ -14,6 +16,10 @@ use anyhow::{bail, Context, Result};
 #[derive(Clone, Debug, Default)]
 pub struct Args {
     pub subcommand: String,
+    /// Optional positional action word right after the subcommand
+    /// (`nemo client <action> ...`). Subcommands that take no action
+    /// must reject it at dispatch.
+    pub action: Option<String>,
     pub flags: HashMap<String, Vec<String>>,
 }
 
@@ -26,6 +32,9 @@ impl Args {
                 bail!("expected a subcommand before flags, got '{sub}'");
             }
             out.subcommand = sub.clone();
+        }
+        if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+            out.action = Some(it.next().unwrap().clone());
         }
         while let Some(tok) = it.next() {
             let Some(key) = tok.strip_prefix("--") else {
@@ -111,6 +120,21 @@ mod tests {
         assert!(Args::parse(&["--flag-first".to_string()]).is_err());
         let a = parse(&["x", "--n", "abc"]);
         assert!(a.usize_or("n", 0).is_err());
+    }
+
+    #[test]
+    fn one_positional_action_after_the_subcommand() {
+        let a = parse(&["client", "infer", "--model", "m"]);
+        assert_eq!(a.subcommand, "client");
+        assert_eq!(a.action.as_deref(), Some("infer"));
+        assert_eq!(a.str_opt("model"), Some("m"));
+        // no action: flags immediately after the subcommand
+        let a = parse(&["serve", "--listen", "127.0.0.1:0"]);
+        assert_eq!(a.action, None);
+        // a second positional is still an error
+        let argv: Vec<String> =
+            ["client", "infer", "extra"].iter().map(|s| s.to_string()).collect();
+        assert!(Args::parse(&argv).is_err());
     }
 
     #[test]

@@ -288,17 +288,26 @@ fn model_value(
     ])
 }
 
+/// FNV-1a 64 over a byte slice — the crate's integrity hash. The
+/// artifact format uses it over the canonical JSON model subtree; the
+/// wire protocol ([`crate::net::protocol`]) uses the same function over
+/// every frame payload, so one hash implementation guards both the
+/// at-rest and the in-flight representation.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in bytes {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
 /// FNV-1a 64 over the canonical JSON serialization of the model subtree.
 /// The writer is deterministic (BTreeMap key order, exact shortest-float
 /// formatting) and numbers round-trip bit-exactly, so parse → re-write →
 /// hash reproduces the saved checksum on an intact file.
 fn checksum_of(model: &Value) -> String {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for b in json::write(model).as_bytes() {
-        h ^= *b as u64;
-        h = h.wrapping_mul(0x0000_0100_0000_01b3);
-    }
-    format!("fnv1a64:{h:016x}")
+    format!("fnv1a64:{:016x}", fnv1a64(json::write(model).as_bytes()))
 }
 
 fn usize_arr_value(v: &[usize]) -> Value {

@@ -13,7 +13,7 @@
 
 pub mod artifact;
 
-pub use artifact::{ArtifactError, ArtifactProvenance, DeployedArtifact};
+pub use artifact::{fnv1a64, ArtifactError, ArtifactProvenance, DeployedArtifact};
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};

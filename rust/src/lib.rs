@@ -29,6 +29,11 @@
 //!   --backend native` needs no artifacts at all, `serve --model
 //!   a.nemo.json --model b.nemo.json` serves deployment artifacts, and
 //!   `--backend pjrt` serves the compiled ones through the same path;
+//! * a remote serving subsystem ([`net`]): a framed-TCP wire protocol
+//!   carrying packed integer tensors, a socket server over the
+//!   coordinator (`nemo serve --listen ADDR`), and a blocking client
+//!   library (`nemo client ...`) — remote logits are bit-identical to
+//!   in-process inference;
 //! * a QAT training driver ([`train`], feature `pjrt`) that runs the
 //!   compiled FakeQuantized train step — Python is never on the request
 //!   path;
@@ -49,6 +54,7 @@ pub mod exec;
 pub mod graph;
 pub mod io;
 pub mod model;
+pub mod net;
 pub mod network;
 pub mod quant;
 #[cfg(feature = "pjrt")]

@@ -9,10 +9,14 @@
 //!             QD/ID agreement
 //!   infer     classify synthetic samples with the IntegerDeployable
 //!             network from a checkpoint
-//!   serve     start the serving coordinator and run a self-driving load
-//!             test; `--backend native` serves the in-process integer
+//!   serve     start the serving coordinator; `--listen ADDR` exposes it
+//!             over the framed-TCP wire protocol until SIGINT/SIGTERM
+//!             (graceful drain), otherwise a self-driving load test
+//!             runs; `--backend native` serves the in-process integer
 //!             engine (no artifacts needed), `--backend pjrt` the
 //!             compiled executables
+//!   client    talk to a remote `nemo serve --listen` server:
+//!             ping / list / metrics / infer / swap / load / unload
 //!   validate  re-run the cross-language golden checks
 //!   info      list artifacts and platform info
 //!
@@ -43,11 +47,23 @@ fn main() {
             std::process::exit(2);
         }
     };
+    // Only `client` takes a positional action word (`nemo client ping`).
+    if let Some(a) = &args.action {
+        if args.subcommand != "client" {
+            eprintln!(
+                "error: unexpected positional argument '{a}' after \
+                 '{}'\n{USAGE}",
+                args.subcommand
+            );
+            std::process::exit(2);
+        }
+    }
     let r = match args.subcommand.as_str() {
         "train" => cmd_train(&args),
         "deploy" => cmd_deploy(&args),
         "infer" => cmd_infer(&args),
         "serve" => cmd_serve(&args),
+        "client" => cmd_client(&args),
         "validate" => cmd_validate(&args),
         "info" => cmd_info(&args),
         "" => {
@@ -65,7 +81,7 @@ fn main() {
     }
 }
 
-const USAGE: &str = "usage: nemo <train|deploy|infer|serve|validate|info> [--flags]
+const USAGE: &str = "usage: nemo <train|deploy|infer|serve|client|validate|info> [--flags]
   train    --steps N --fq-steps N --bits B --lr F --seed N --out ck.json
   deploy   --ckpt ck.json --bits B --thresholds --save m.nemo.json
   infer    --ckpt ck.json --n N --bits B
@@ -73,6 +89,11 @@ const USAGE: &str = "usage: nemo <train|deploy|infer|serve|validate|info> [--fla
            --model [name=]m.nemo.json  (repeatable: serve saved deployment artifacts by name,
                                         no training/transform work; name defaults to the file stem)
            --swap name=m.nemo.json     (hot-swap an artifact onto the running server mid-load-test)
+           --listen ADDR               (serve remotely over the wire protocol until SIGINT/SIGTERM
+                                        drains in-flight batches; --port-file F writes the bound port)
+  client   <ping|list|metrics|infer|swap|load|unload> --addr HOST:PORT
+           infer --model NAME --n N --seed S [--input qx.json] [--deadline-us T] [--pipeline]
+           swap/load --model name=m.nemo.json   metrics/unload --model NAME
   validate
   info     --model m.nemo.json  (repeatable: inspect artifacts without serving them)";
 
@@ -374,6 +395,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
     }
 
+    // `--listen ADDR`: expose the coordinator over the wire protocol
+    // and stay up until a signal, instead of the self-driving load test.
+    if let Some(listen) = args.str_opt("listen") {
+        return serve_remote(args, server, listen);
+    }
+
+    let shutdown = nemo::net::shutdown_flag();
     let n_requests = args.usize_or("requests", 512)?;
     let n_clients = args.usize_or("clients", 8)?.max(1);
     // Integer truncation: each client issues `per` requests, so the
@@ -397,11 +425,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let h = server.handle();
         let names = names.clone();
         let half = ((per * n_clients) / 2) as u64;
+        let shutdown = shutdown.clone();
         std::thread::spawn(move || -> Result<()> {
             let Some((name, path)) = spec.split_once('=') else {
                 bail!("--swap expects name=path.nemo.json, got '{spec}'");
             };
             loop {
+                // An interrupted load test may never reach the halfway
+                // trigger — bail out instead of spinning forever.
+                if shutdown.is_set() {
+                    return Ok(());
+                }
                 let done: u64 = names
                     .iter()
                     .map(|n| {
@@ -428,10 +462,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     for c in 0..n_clients {
         let h = server.handle();
         let model = names[c % names.len()].clone();
+        let shutdown = shutdown.clone();
         joins.push(std::thread::spawn(move || -> Result<usize> {
             let mut data = SynthDigits::new(1000 + c as u64);
             let mut ok = 0;
             for _ in 0..per {
+                // SIGINT/SIGTERM: stop submitting; in-flight batches
+                // drain through Server::stop() below and the aggregate
+                // metrics still print instead of dying mid-batch.
+                if shutdown.is_set() {
+                    break;
+                }
                 let (x, labels) = data.batch(1);
                 let qx = quantize_input(&x, EPS_IN);
                 let out = h.infer(&model, qx)?;
@@ -469,6 +510,157 @@ fn cmd_serve(args: &Args) -> Result<()> {
         100.0 * correct as f64 / (per * n_clients).max(1) as f64
     );
     Ok(())
+}
+
+/// `nemo serve --listen ADDR`: expose the running coordinator over the
+/// wire protocol and block until SIGINT/SIGTERM, then drain — the
+/// socket layer stops accepting and finishes in-flight frames, the
+/// coordinator finishes in-flight batches, and the aggregate metrics
+/// print on the way out.
+fn serve_remote(args: &Args, server: Server, listen: &str) -> Result<()> {
+    use nemo::net::{shutdown_flag, NetConfig, NetServer};
+
+    let shutdown = shutdown_flag();
+    let net_cfg = NetConfig {
+        handler_threads: args.usize_or("net-threads", 8)?.max(1),
+        ..NetConfig::default()
+    };
+    let ns = NetServer::bind(listen, server.handle(), net_cfg)
+        .with_context(|| format!("binding wire-protocol listener on {listen}"))?;
+    let addr = ns.local_addr();
+    println!("listening on {addr} (wire protocol v{})", nemo::net::WIRE_VERSION);
+    // `--listen 127.0.0.1:0` binds an OS-assigned port; `--port-file F`
+    // publishes it so scripts (CI's e2e step) can find the server.
+    if let Some(pf) = args.str_opt("port-file") {
+        std::fs::write(pf, addr.port().to_string())
+            .with_context(|| format!("writing port file {pf}"))?;
+        println!("port -> {pf}");
+    }
+    println!("serving until SIGINT/SIGTERM ...");
+    while !shutdown.is_set() {
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    println!("signal received: draining in-flight requests ...");
+    ns.stop(); // socket layer first: replies for in-flight frames go out
+    let mut metrics = server.stop(); // then the coordinator's batches
+    println!("{}", metrics.report());
+    println!("shutdown complete");
+    Ok(())
+}
+
+/// `nemo client <action>`: drive a remote `nemo serve --listen` server.
+fn cmd_client(args: &Args) -> Result<()> {
+    use nemo::net::{ClientConfig, NemoClient};
+
+    let addr = args.str_or("addr", "127.0.0.1:7070");
+    let action = args.action.as_deref().unwrap_or("");
+    if action.is_empty() {
+        bail!("client needs an action: nemo client <ping|list|metrics|infer|swap|load|unload>");
+    }
+    let mut client = NemoClient::connect_with(&addr, ClientConfig::default())
+        .with_context(|| format!("connecting to {addr}"))?;
+    match action {
+        "ping" => {
+            let t = Instant::now();
+            client.ping()?;
+            println!("pong from {addr} in {:.3} ms", t.elapsed().as_secs_f64() * 1e3);
+        }
+        "list" => {
+            for m in client.list_models()? {
+                println!(
+                    "model '{}' v{}  backend={}  input={:?}  max_batch={}  [{}]",
+                    m.name, m.version, m.backend, m.input_shape, m.max_batch, m.provenance
+                );
+            }
+        }
+        "metrics" => {
+            let name = require_model(args, "metrics")?;
+            println!("{}", client.model_metrics(&name)?.report());
+        }
+        "infer" => {
+            let name = require_model(args, "infer")?;
+            let inputs = client_inputs(args)?;
+            let deadline = args.usize_or("deadline-us", 0)?;
+            let outs: Vec<nemo::tensor::TensorI> = if args.bool("pipeline") {
+                client.infer_pipelined(&name, &inputs)?
+            } else {
+                inputs
+                    .iter()
+                    .map(|qx| match deadline {
+                        0 => client.infer(&name, qx),
+                        us => client.infer_deadline(
+                            &name,
+                            qx,
+                            Duration::from_micros(us as u64),
+                        ),
+                    })
+                    .collect::<Result<_>>()?
+            };
+            // Deterministic, diff-able output: CI asserts these lines
+            // are bit-identical across a hot swap of the same artifact.
+            for (i, out) in outs.iter().enumerate() {
+                println!("logits[{i}] = {:?}", out.data());
+                println!("pred[{i}] = {}", out.argmax_rows()[0]);
+            }
+        }
+        "swap" => {
+            let (name, path) = model_spec(&require_model(args, "swap")?);
+            let version = client.swap_model(&name, &path)?;
+            println!("swapped '{name}' <- {path}: now v{version}");
+        }
+        "load" => {
+            let (name, path) = model_spec(&require_model(args, "load")?);
+            let version = client.load_model(&name, &path)?;
+            println!("loaded '{name}' <- {path}: v{version}");
+        }
+        "unload" => {
+            let name = require_model(args, "unload")?;
+            client.unload_model(&name)?;
+            println!("unloaded '{name}'");
+        }
+        other => bail!(
+            "unknown client action '{other}' \
+             (expected ping|list|metrics|infer|swap|load|unload)"
+        ),
+    }
+    Ok(())
+}
+
+fn require_model(args: &Args, action: &str) -> Result<String> {
+    args.str_opt("model")
+        .map(|s| s.to_string())
+        .ok_or_else(|| anyhow::anyhow!("client {action} needs --model"))
+}
+
+/// Inputs for `client infer`: either `--input qx.json` (a JSON nested
+/// array holding one `[1, ...]` integer image, as produced by
+/// quantizing with `eps_in`) or `--n` synthetic samples from the
+/// deterministic SynthDigits stream at `--seed`.
+fn client_inputs(args: &Args) -> Result<Vec<nemo::tensor::TensorI>> {
+    if let Some(path) = args.str_opt("input") {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading --input {path}"))?;
+        let v = nemo::util::json::parse(&text)
+            .with_context(|| format!("parsing --input {path}"))?;
+        let (data, shape) = v
+            .as_i32_tensor()
+            .with_context(|| format!("--input {path}: expected a nested integer array"))?;
+        if shape.first() != Some(&1) {
+            bail!(
+                "--input {path}: expected a [1, ...] single-sample image, \
+                 got shape {shape:?}"
+            );
+        }
+        return Ok(vec![nemo::tensor::Tensor::from_vec(&shape, data)]);
+    }
+    let n = args.usize_or("n", 1)?.max(1);
+    let mut data = SynthDigits::new(args.usize_or("seed", 5)? as u64);
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (x, _labels) = data.batch(1);
+        out.push(quantize_input(&x, EPS_IN));
+    }
+    Ok(out)
 }
 
 fn cmd_validate(_args: &Args) -> Result<()> {

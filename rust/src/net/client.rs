@@ -1,0 +1,287 @@
+//! [`NemoClient`]: blocking client for the NEMO wire protocol.
+//!
+//! One client owns one TCP connection and speaks request/reply frames
+//! over it. Calls take `&mut self` — the protocol multiplexes by
+//! `req_id`, but a single blocking connection is serial by nature.
+//! Pipelining is explicit ([`NemoClient::infer_pipelined`]): write all
+//! request frames first, then drain all replies, which amortizes the
+//! round-trip latency without concurrency.
+//!
+//! Failure surface: protocol-level failures are typed
+//! [`WireError`]s inside `anyhow::Error` — recover the code with
+//! `err.downcast_ref::<WireError>()`. The deadline of
+//! [`infer_deadline`](NemoClient::infer_deadline) is enforced
+//! *server-side* (it propagates to the coordinator's reply deadline);
+//! the client stretches its socket timeout so the typed
+//! `DeadlineExceeded` reply, not a local socket timeout, is what the
+//! caller sees.
+
+use std::io::Write as _;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context as _, Result};
+
+use crate::tensor::{QTensor, TensorI};
+
+use super::protocol::{
+    decode_error, decode_model_infos, pack_lossless, read_frame, Frame, Opcode,
+    PayloadReader, PayloadWriter, WireMetrics, WireModelInfo, MAX_PAYLOAD,
+};
+
+/// Connection/retry/timeout knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ClientConfig {
+    /// Extra connect attempts after the first (handy when racing a
+    /// server that is still binding its listener).
+    pub connect_retries: u32,
+    /// Backoff before the first retry; doubles per attempt.
+    pub retry_backoff: Duration,
+    /// Socket read timeout for a single reply.
+    pub read_timeout: Duration,
+    pub write_timeout: Duration,
+}
+
+impl Default for ClientConfig {
+    fn default() -> Self {
+        ClientConfig {
+            connect_retries: 5,
+            retry_backoff: Duration::from_millis(20),
+            read_timeout: Duration::from_secs(10),
+            write_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+/// Blocking wire-protocol client; see the module docs.
+pub struct NemoClient {
+    stream: TcpStream,
+    cfg: ClientConfig,
+    next_req_id: u64,
+}
+
+impl NemoClient {
+    /// Connect with the default config.
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<NemoClient> {
+        Self::connect_with(addr, ClientConfig::default())
+    }
+
+    /// Connect with retry/backoff per `cfg`.
+    pub fn connect_with(addr: impl ToSocketAddrs, cfg: ClientConfig) -> Result<NemoClient> {
+        let mut backoff = cfg.retry_backoff;
+        let mut last_err: Option<std::io::Error> = None;
+        for attempt in 0..=cfg.connect_retries {
+            if attempt > 0 {
+                std::thread::sleep(backoff);
+                backoff *= 2;
+            }
+            // Re-resolve per attempt; try every resolved address.
+            let addrs = addr
+                .to_socket_addrs()
+                .context("resolving server address")?;
+            for a in addrs {
+                match TcpStream::connect(a) {
+                    Ok(stream) => {
+                        stream
+                            .set_read_timeout(Some(cfg.read_timeout))
+                            .context("setting read timeout")?;
+                        stream
+                            .set_write_timeout(Some(cfg.write_timeout))
+                            .context("setting write timeout")?;
+                        let _ = stream.set_nodelay(true);
+                        return Ok(NemoClient { stream, cfg, next_req_id: 1 });
+                    }
+                    Err(e) => last_err = Some(e),
+                }
+            }
+        }
+        Err(match last_err {
+            Some(e) => anyhow!(e).context(format!(
+                "connecting failed after {} attempts",
+                cfg.connect_retries + 1
+            )),
+            None => anyhow!("server address resolved to no candidates"),
+        })
+    }
+
+    fn fresh_req_id(&mut self) -> u64 {
+        let id = self.next_req_id;
+        self.next_req_id += 1;
+        id
+    }
+
+    /// Write one request frame.
+    fn send(&mut self, opcode: Opcode, payload: Vec<u8>) -> Result<u64> {
+        let req_id = self.fresh_req_id();
+        Frame::new(opcode, req_id, payload)
+            .write_to(&mut self.stream)
+            .context("writing request frame")?;
+        Ok(req_id)
+    }
+
+    /// Read the reply for `req_id` and unwrap it to the `ReplyOk`
+    /// payload; a `ReplyErr` becomes a typed [`super::WireError`].
+    fn recv(&mut self, req_id: u64) -> Result<Vec<u8>> {
+        let frame = read_frame(&mut self.stream, MAX_PAYLOAD)
+            .map_err(|e| anyhow!(e).context("reading reply frame"))?;
+        if frame.req_id != req_id {
+            bail!(
+                "reply req_id {} does not match request {} \
+                 (connection out of sync)",
+                frame.req_id,
+                req_id
+            );
+        }
+        match frame.opcode {
+            Opcode::ReplyOk => Ok(frame.payload),
+            Opcode::ReplyErr => Err(decode_error(&frame.payload).into()),
+            other => bail!("server sent non-reply opcode {other:?}"),
+        }
+    }
+
+    /// One full request/reply round-trip.
+    fn call(&mut self, opcode: Opcode, payload: Vec<u8>) -> Result<Vec<u8>> {
+        let req_id = self.send(opcode, payload)?;
+        self.recv(req_id)
+    }
+
+    // -- ops ---------------------------------------------------------
+
+    /// Liveness heartbeat: a full round-trip through the server's frame
+    /// loop with an empty payload.
+    pub fn ping(&mut self) -> Result<()> {
+        let reply = self.call(Opcode::Ping, Vec::new())?;
+        if !reply.is_empty() {
+            bail!("ping reply carried {} unexpected bytes", reply.len());
+        }
+        Ok(())
+    }
+
+    /// Remote single-sample inference. The integer image crosses the
+    /// wire at packed precision (lossless); the reply widens back to
+    /// the i32 logits image, bit-identical to in-process
+    /// `ServerHandle::infer`.
+    pub fn infer(&mut self, model: &str, qx: &TensorI) -> Result<TensorI> {
+        let payload = Self::infer_payload(model, qx);
+        let reply = self.call(Opcode::Infer, payload)?;
+        Self::decode_logits(&reply)
+    }
+
+    /// Remote inference with a server-side reply deadline. The socket
+    /// timeout is stretched past the deadline so the typed
+    /// `DeadlineExceeded` reply makes it back instead of a local
+    /// socket timeout racing it.
+    pub fn infer_deadline(
+        &mut self,
+        model: &str,
+        qx: &TensorI,
+        deadline: Duration,
+    ) -> Result<TensorI> {
+        let mut w = PayloadWriter::new();
+        w.put_str(model);
+        w.put_u64(deadline.as_micros().min(u64::MAX as u128) as u64);
+        w.put_qtensor(&pack_lossless(qx));
+        let stretched = deadline + self.cfg.read_timeout;
+        self.stream
+            .set_read_timeout(Some(stretched))
+            .context("stretching read timeout for deadline call")?;
+        let result = self.call(Opcode::InferDeadline, w.finish());
+        let _ = self.stream.set_read_timeout(Some(self.cfg.read_timeout));
+        Self::decode_logits(&result?)
+    }
+
+    /// Pipelined inference: write every request frame back-to-back,
+    /// then drain the replies in order. One connection, no concurrency
+    /// — the round-trip latency is paid once instead of `n` times. On
+    /// a per-request error the remaining replies are still drained (the
+    /// connection stays in sync) and the first error is returned.
+    pub fn infer_pipelined(
+        &mut self,
+        model: &str,
+        inputs: &[TensorI],
+    ) -> Result<Vec<TensorI>> {
+        let mut ids = Vec::with_capacity(inputs.len());
+        for qx in inputs {
+            ids.push(self.send(Opcode::Infer, Self::infer_payload(model, qx))?);
+        }
+        self.stream.flush().context("flushing pipelined requests")?;
+        let mut out = Vec::with_capacity(inputs.len());
+        let mut first_err: Option<anyhow::Error> = None;
+        for id in ids {
+            match self.recv(id).and_then(|p| Self::decode_logits(&p)) {
+                Ok(t) => out.push(t),
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(out),
+        }
+    }
+
+    /// Register a new model from a *server-side* artifact path.
+    pub fn load_model(&mut self, name: &str, path: &str) -> Result<u64> {
+        self.version_op(Opcode::LoadModel, name, path)
+    }
+
+    /// Hot-swap `name` to a server-side artifact; returns the new
+    /// version. Atomic w.r.t. in-flight remote requests (the
+    /// coordinator's contract).
+    pub fn swap_model(&mut self, name: &str, path: &str) -> Result<u64> {
+        self.version_op(Opcode::SwapModel, name, path)
+    }
+
+    fn version_op(&mut self, op: Opcode, name: &str, path: &str) -> Result<u64> {
+        let mut w = PayloadWriter::new();
+        w.put_str(name);
+        w.put_str(path);
+        let reply = self.call(op, w.finish())?;
+        let mut r = PayloadReader::new(&reply);
+        let version = r.get_u64().map_err(anyhow::Error::from)?;
+        r.expect_end().map_err(anyhow::Error::from)?;
+        Ok(version)
+    }
+
+    /// Remove `name` from serving.
+    pub fn unload_model(&mut self, name: &str) -> Result<()> {
+        let mut w = PayloadWriter::new();
+        w.put_str(name);
+        let reply = self.call(Opcode::UnloadModel, w.finish())?;
+        if !reply.is_empty() {
+            bail!("unload reply carried {} unexpected bytes", reply.len());
+        }
+        Ok(())
+    }
+
+    /// Every served model, sorted by name (wire-guaranteed).
+    pub fn list_models(&mut self) -> Result<Vec<WireModelInfo>> {
+        let reply = self.call(Opcode::ListModels, Vec::new())?;
+        decode_model_infos(&reply).map_err(anyhow::Error::from)
+    }
+
+    /// One model's metrics ledger (spans swap versions).
+    pub fn model_metrics(&mut self, name: &str) -> Result<WireMetrics> {
+        let mut w = PayloadWriter::new();
+        w.put_str(name);
+        let reply = self.call(Opcode::ModelMetrics, w.finish())?;
+        WireMetrics::decode(&reply).map_err(anyhow::Error::from)
+    }
+
+    fn infer_payload(model: &str, qx: &TensorI) -> Vec<u8> {
+        let mut w = PayloadWriter::new();
+        w.put_str(model);
+        w.put_qtensor(&pack_lossless(qx));
+        w.finish()
+    }
+
+    fn decode_logits(payload: &[u8]) -> Result<TensorI> {
+        let mut r = PayloadReader::new(payload);
+        let qt: QTensor = r.get_qtensor().map_err(anyhow::Error::from)?;
+        r.expect_end().map_err(anyhow::Error::from)?;
+        Ok(qt.widen())
+    }
+}

@@ -1,0 +1,124 @@
+//! Remote serving subsystem (S8): the framed-TCP wire protocol, the
+//! socket server, and the blocking client library.
+//!
+//! PR 5's [`crate::coordinator`] made multi-model serving a runtime
+//! registry, but only in-process. This module puts that registry on the
+//! network: [`NetServer`] exposes every [`ServerHandle`] op — `infer`,
+//! `infer_deadline`, and the admin surface (`load`/`swap`/`unload`/
+//! `list`/`metrics`) — over a length-prefixed, checksummed frame
+//! protocol ([`protocol`]), and [`NemoClient`] is the matching blocking
+//! client with connect retry, request pipelining, and a `ping`
+//! heartbeat.
+//!
+//! Why a custom integer wire format: IntegerDeployable inference (the
+//! paper's deployment representation) is purely integer arithmetic, so
+//! replies are bit-reproducible across machines. The protocol leans on
+//! that — tensors cross the wire as dtype-tagged `u8`/`i8`/`i32`
+//! payloads at packed precision (the artifact format's storage classes),
+//! and a loopback round-trip is *bit-identical* to an in-process
+//! `ServerHandle::infer`, which the test suite asserts.
+//!
+//! Layering: the wire layer adds no serving semantics of its own. Swap
+//! atomicity w.r.t. in-flight requests, per-model metrics ledgers
+//! spanning versions, deadline behaviour — all of that is the
+//! coordinator's contract; `NetServer` is a framing + dispatch shim over
+//! a `ServerHandle`, so in-process users keep using `ServerHandle`
+//! directly (unchanged) and get identical behaviour.
+//!
+//! ```no_run
+//! use nemo::coordinator::Server;
+//! use nemo::net::{NemoClient, NetConfig, NetServer};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let server = Server::builder()
+//!     .model_from_artifact("mnist", "model.nemo.json")
+//!     .start()?;
+//! let ns = NetServer::bind("127.0.0.1:0", server.handle(), NetConfig::default())?;
+//! let addr = ns.local_addr();
+//!
+//! let mut client = NemoClient::connect(addr)?;
+//! client.ping()?;
+//! let qx = nemo::tensor::Tensor::from_vec(&[1, 4], vec![0i32; 4]);
+//! let _logits = client.infer("mnist", &qx)?; // bit-identical to in-process
+//! # Ok(()) }
+//! ```
+
+pub mod client;
+pub mod protocol;
+pub mod server;
+
+pub use client::{ClientConfig, NemoClient};
+pub use protocol::{
+    pack_lossless, Frame, Opcode, WireCode, WireError, WireMetrics, WireModelInfo,
+    WireStat, MAX_PAYLOAD, WIRE_VERSION,
+};
+pub use server::{NetConfig, NetServer};
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Process-wide shutdown flag set by SIGINT/SIGTERM. `nemo serve` polls
+/// it to stop accepting, drain in-flight batches via `Server::stop()`,
+/// and print the aggregate metrics instead of dying mid-batch.
+static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+/// Install SIGINT + SIGTERM handlers (idempotent) and return a flag that
+/// flips to `true` on the first signal. The handler only stores to an
+/// atomic — async-signal-safe by construction.
+///
+/// On non-unix targets this returns the (never-signalled) flag without
+/// installing anything; callers still get Ctrl-C via process kill.
+pub fn shutdown_flag() -> Arc<ShutdownFlag> {
+    #[cfg(unix)]
+    install_handlers();
+    Arc::new(ShutdownFlag(()))
+}
+
+/// Handle onto the process-wide shutdown flag (see [`shutdown_flag`]).
+pub struct ShutdownFlag(());
+
+impl ShutdownFlag {
+    pub fn is_set(&self) -> bool {
+        SHUTDOWN.load(Ordering::SeqCst)
+    }
+
+    /// Set the flag programmatically (tests; or a serving loop that
+    /// wants to shut itself down through the same path as a signal).
+    pub fn trigger(&self) {
+        SHUTDOWN.store(true, Ordering::SeqCst);
+    }
+}
+
+#[cfg(unix)]
+fn install_handlers() {
+    // std exposes no signal API and this crate deliberately carries no
+    // libc dependency, so declare the two POSIX symbols we need against
+    // the libc std already links. The handler parameter is a typed
+    // extern "C" fn — not usize — to keep the cast surface minimal.
+    extern "C" fn on_signal(_signum: i32) {
+        SHUTDOWN.store(true, Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGINT, on_signal);
+        signal(SIGTERM, on_signal);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shutdown_flag_triggers() {
+        let f = shutdown_flag();
+        // Process-wide flag: don't assert the initial state (another
+        // test or a real signal may have set it), only the transition.
+        f.trigger();
+        assert!(f.is_set());
+    }
+}

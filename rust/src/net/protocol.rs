@@ -1,0 +1,905 @@
+//! The NEMO wire protocol: length-prefixed, checksummed frames over a
+//! byte stream (DESIGN.md §Network-protocol).
+//!
+//! Frame layout (all integers little-endian):
+//!
+//! ```text
+//! +---------+---------+--------+-------+----------+---------+
+//! | magic   | version | opcode | flags | req_id   | len     |  20-byte header
+//! | u32     | u16     | u8     | u8    | u64      | u32     |
+//! +---------+---------+--------+-------+----------+---------+
+//! | payload: len bytes                                      |
+//! +---------------------------------------------------------+
+//! | checksum: u64 = FNV-1a64(payload)                       |  8-byte trailer
+//! +---------------------------------------------------------+
+//! ```
+//!
+//! `magic` is `b"NEMO"`; `version` is [`WIRE_VERSION`]; `flags` is
+//! reserved (must be 0). `req_id` is chosen by the client and echoed on
+//! the reply, which is what makes request pipelining possible — replies
+//! are matched by id, not by arrival order (the server answers in order,
+//! but the client does not have to rely on it). The checksum reuses the
+//! artifact format's [`fnv1a64`], so one hash guards both the at-rest
+//! and in-flight model representations.
+//!
+//! Integer tensors cross the wire as dtype-tagged payloads at packed
+//! precision — the same `u8`/`i8`/`i32` storage classes the artifact
+//! format and [`QTensor`] use — and widen losslessly on the far side.
+//! Because IntegerDeployable inference is bit-reproducible, a remote
+//! reply is verifiable: the same artifact must produce the same bytes on
+//! any machine.
+//!
+//! Error taxonomy: every failure a server can detect is answered with a
+//! typed [`WireError`] reply frame ([`Opcode::ReplyErr`]), never a
+//! silently dropped connection. Errors that leave the byte stream
+//! desynchronized (malformed header, truncated frame, version mismatch,
+//! oversized frame) are *fatal*: the server replies, then closes.
+//! Payload-level errors (checksum mismatch, bad request, unknown model,
+//! deadline exceeded) keep the connection usable.
+
+use std::io::{self, Read, Write};
+
+use crate::coordinator::{InferError, RegistryError};
+use crate::io::fnv1a64;
+use crate::quant::Precision;
+use crate::tensor::{QTensor, Tensor, TensorI};
+
+/// `b"NEMO"` interpreted little-endian.
+pub const MAGIC: u32 = u32::from_le_bytes(*b"NEMO");
+
+/// Protocol version carried in every frame header. The header layout is
+/// frozen across versions (compat policy: a v1 server can always *parse*
+/// the header of any future frame and answer `VersionMismatch`).
+pub const WIRE_VERSION: u16 = 1;
+
+/// Frame header byte length (magic + version + opcode + flags + req_id
+/// + payload len).
+pub const HEADER_LEN: usize = 4 + 2 + 1 + 1 + 8 + 4;
+
+/// Checksum trailer byte length.
+pub const TRAILER_LEN: usize = 8;
+
+/// Default cap on payload size — a declared length above this is a typed
+/// `FrameTooLarge` error, not an allocation.
+pub const MAX_PAYLOAD: u32 = 64 << 20;
+
+/// Frame opcodes. Requests are < 0x80; replies have the top bit set.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Opcode {
+    /// Liveness/RTT probe. Empty payload both ways.
+    Ping = 0x01,
+    /// `infer(model, qtensor)` -> logits qtensor.
+    Infer = 0x02,
+    /// `infer_deadline(model, deadline_us, qtensor)` -> logits qtensor.
+    InferDeadline = 0x03,
+    /// `load_model(name, artifact_path)` -> version (1).
+    LoadModel = 0x10,
+    /// `swap_model(name, artifact_path)` -> new version.
+    SwapModel = 0x11,
+    /// `unload_model(name)` -> empty.
+    UnloadModel = 0x12,
+    /// `list_models()` -> sorted model table.
+    ListModels = 0x13,
+    /// `model_metrics(name)` -> counters + latency summaries.
+    ModelMetrics = 0x14,
+    /// Successful reply; payload is op-specific.
+    ReplyOk = 0x80,
+    /// Typed failure reply; payload is `u16 code + string message`.
+    ReplyErr = 0x81,
+}
+
+impl Opcode {
+    pub fn from_u8(b: u8) -> Option<Opcode> {
+        Some(match b {
+            0x01 => Opcode::Ping,
+            0x02 => Opcode::Infer,
+            0x03 => Opcode::InferDeadline,
+            0x10 => Opcode::LoadModel,
+            0x11 => Opcode::SwapModel,
+            0x12 => Opcode::UnloadModel,
+            0x13 => Opcode::ListModels,
+            0x14 => Opcode::ModelMetrics,
+            0x80 => Opcode::ReplyOk,
+            0x81 => Opcode::ReplyErr,
+            _ => return None,
+        })
+    }
+}
+
+/// Typed wire failure codes (stable numeric values — the compat surface
+/// a newer client must keep decoding).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u16)]
+pub enum WireCode {
+    /// Model name not registered (or already unloaded).
+    UnknownModel = 1,
+    /// The request's deadline expired before a reply was produced.
+    DeadlineExceeded = 2,
+    /// Header/payload bytes that cannot be parsed (bad magic, truncated
+    /// frame, short payload). Fatal: the stream is desynchronized.
+    MalformedFrame = 3,
+    /// Frame carried a protocol version this peer does not speak. Fatal.
+    VersionMismatch = 4,
+    /// FNV-1a64 trailer does not match the payload. Recoverable — the
+    /// framing itself was intact.
+    ChecksumMismatch = 5,
+    /// Structurally valid frame with a semantically bad request (unknown
+    /// opcode, bad tensor dims, duplicate name, ...). Recoverable.
+    BadRequest = 6,
+    /// The serving registry/coordinator is shutting down.
+    ServerShutdown = 7,
+    /// Declared payload length above the server's cap. Fatal (the
+    /// payload is never read).
+    FrameTooLarge = 8,
+    /// Any other server-side failure, with the message carrying context.
+    Internal = 9,
+}
+
+impl WireCode {
+    pub fn from_u16(v: u16) -> Option<WireCode> {
+        Some(match v {
+            1 => WireCode::UnknownModel,
+            2 => WireCode::DeadlineExceeded,
+            3 => WireCode::MalformedFrame,
+            4 => WireCode::VersionMismatch,
+            5 => WireCode::ChecksumMismatch,
+            6 => WireCode::BadRequest,
+            7 => WireCode::ServerShutdown,
+            8 => WireCode::FrameTooLarge,
+            9 => WireCode::Internal,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            WireCode::UnknownModel => "unknown-model",
+            WireCode::DeadlineExceeded => "deadline-exceeded",
+            WireCode::MalformedFrame => "malformed-frame",
+            WireCode::VersionMismatch => "version-mismatch",
+            WireCode::ChecksumMismatch => "checksum-mismatch",
+            WireCode::BadRequest => "bad-request",
+            WireCode::ServerShutdown => "server-shutdown",
+            WireCode::FrameTooLarge => "frame-too-large",
+            WireCode::Internal => "internal",
+        }
+    }
+}
+
+/// A typed protocol-level failure: what a `ReplyErr` frame carries, and
+/// what [`crate::net::NemoClient`] surfaces (recover with
+/// `err.downcast_ref::<WireError>()`).
+#[derive(Clone, Debug, thiserror::Error)]
+#[error("wire error [{}]: {message}", self.code.name())]
+pub struct WireError {
+    pub code: WireCode,
+    pub message: String,
+}
+
+impl WireError {
+    pub fn new(code: WireCode, message: impl Into<String>) -> Self {
+        WireError { code, message: message.into() }
+    }
+
+    /// Whether the byte stream is desynchronized after this error — the
+    /// server replies and then must close the connection.
+    pub fn fatal(&self) -> bool {
+        matches!(
+            self.code,
+            WireCode::MalformedFrame
+                | WireCode::VersionMismatch
+                | WireCode::FrameTooLarge
+        )
+    }
+
+    /// Map a serving-side failure to its wire representation, preserving
+    /// the typed registry/inference errors the coordinator produces.
+    pub fn from_serving(err: &anyhow::Error) -> WireError {
+        if let Some(r) = err.downcast_ref::<RegistryError>() {
+            let code = match r {
+                RegistryError::UnknownModel(_) => WireCode::UnknownModel,
+                RegistryError::DuplicateName(_) => WireCode::BadRequest,
+            };
+            return WireError::new(code, r.to_string());
+        }
+        if let Some(i) = err.downcast_ref::<InferError>() {
+            let code = match i {
+                InferError::DeadlineExceeded(_) => WireCode::DeadlineExceeded,
+                InferError::ServerStopped => WireCode::ServerShutdown,
+            };
+            return WireError::new(code, i.to_string());
+        }
+        WireError::new(WireCode::Internal, format!("{err:#}"))
+    }
+}
+
+fn malformed(msg: impl Into<String>) -> WireError {
+    WireError::new(WireCode::MalformedFrame, msg)
+}
+
+/// One protocol frame (header fields + payload; the checksum trailer is
+/// computed on encode and verified on decode).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Frame {
+    pub opcode: Opcode,
+    pub req_id: u64,
+    pub payload: Vec<u8>,
+}
+
+impl Frame {
+    pub fn new(opcode: Opcode, req_id: u64, payload: Vec<u8>) -> Self {
+        Frame { opcode, req_id, payload }
+    }
+
+    /// Serialize header + payload + checksum trailer.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out =
+            Vec::with_capacity(HEADER_LEN + self.payload.len() + TRAILER_LEN);
+        out.extend_from_slice(&MAGIC.to_le_bytes());
+        out.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+        out.push(self.opcode as u8);
+        out.push(0); // flags (reserved)
+        out.extend_from_slice(&self.req_id.to_le_bytes());
+        out.extend_from_slice(&(self.payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&self.payload);
+        out.extend_from_slice(&fnv1a64(&self.payload).to_le_bytes());
+        out
+    }
+
+    /// Write the encoded frame to a stream.
+    pub fn write_to(&self, w: &mut impl Write) -> io::Result<()> {
+        w.write_all(&self.encode())?;
+        w.flush()
+    }
+}
+
+/// A parsed frame header (the fixed 20 bytes), before the payload is
+/// read. Kept separate so servers can reject oversized/mismatched frames
+/// without touching the payload.
+#[derive(Clone, Copy, Debug)]
+pub struct Header {
+    pub version: u16,
+    pub opcode_raw: u8,
+    pub req_id: u64,
+    pub payload_len: u32,
+}
+
+impl Header {
+    /// Parse the fixed-size header. `max_payload` caps the declared
+    /// length. Magic/version/flags violations come back as typed, fatal
+    /// [`WireError`]s.
+    pub fn parse(buf: &[u8; HEADER_LEN], max_payload: u32) -> Result<Header, WireError> {
+        let magic = u32::from_le_bytes(buf[0..4].try_into().unwrap());
+        if magic != MAGIC {
+            return Err(malformed(format!(
+                "bad magic {magic:#010x} (expected {MAGIC:#010x} = \"NEMO\")"
+            )));
+        }
+        let version = u16::from_le_bytes(buf[4..6].try_into().unwrap());
+        let opcode_raw = buf[6];
+        let flags = buf[7];
+        let req_id = u64::from_le_bytes(buf[8..16].try_into().unwrap());
+        let payload_len = u32::from_le_bytes(buf[16..20].try_into().unwrap());
+        if version != WIRE_VERSION {
+            return Err(WireError::new(
+                WireCode::VersionMismatch,
+                format!(
+                    "frame speaks protocol v{version}, this peer speaks v{WIRE_VERSION}"
+                ),
+            ));
+        }
+        if flags != 0 {
+            return Err(malformed(format!("reserved flags byte is {flags:#04x}")));
+        }
+        if payload_len > max_payload {
+            return Err(WireError::new(
+                WireCode::FrameTooLarge,
+                format!(
+                    "declared payload of {payload_len} bytes exceeds the \
+                     {max_payload}-byte cap"
+                ),
+            ));
+        }
+        Ok(Header { version, opcode_raw, req_id, payload_len })
+    }
+}
+
+/// Read one frame from a blocking stream (client side — the server uses
+/// its own poll-aware loop). Verifies magic, version, size cap and
+/// checksum; unknown opcodes are malformed here because a client only
+/// ever expects replies.
+pub fn read_frame(r: &mut impl Read, max_payload: u32) -> Result<Frame, WireError> {
+    let mut hdr = [0u8; HEADER_LEN];
+    r.read_exact(&mut hdr)
+        .map_err(|e| malformed(format!("reading frame header: {e}")))?;
+    let h = Header::parse(&hdr, max_payload)?;
+    let mut payload = vec![0u8; h.payload_len as usize];
+    r.read_exact(&mut payload)
+        .map_err(|e| malformed(format!("reading {}-byte payload: {e}", h.payload_len)))?;
+    let mut trailer = [0u8; TRAILER_LEN];
+    r.read_exact(&mut trailer)
+        .map_err(|e| malformed(format!("reading checksum trailer: {e}")))?;
+    let want = u64::from_le_bytes(trailer);
+    let got = fnv1a64(&payload);
+    if want != got {
+        return Err(WireError::new(
+            WireCode::ChecksumMismatch,
+            format!("payload checksum {got:#018x} != trailer {want:#018x}"),
+        ));
+    }
+    let opcode = Opcode::from_u8(h.opcode_raw)
+        .ok_or_else(|| malformed(format!("unknown opcode {:#04x}", h.opcode_raw)))?;
+    Ok(Frame { opcode, req_id: h.req_id, payload })
+}
+
+// ---------------------------------------------------------------------------
+// Payload codec
+// ---------------------------------------------------------------------------
+
+/// Append-only payload writer with the protocol's primitive encodings.
+#[derive(Default)]
+pub struct PayloadWriter(Vec<u8>);
+
+impl PayloadWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.0
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.0.push(v);
+    }
+
+    pub fn put_u16(&mut self, v: u16) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f64(&mut self, v: f64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Length-prefixed UTF-8 string (u32 length).
+    pub fn put_str(&mut self, s: &str) {
+        self.put_u32(s.len() as u32);
+        self.0.extend_from_slice(s.as_bytes());
+    }
+
+    /// Dtype-tagged integer tensor at packed precision: `dtype u8, ndim
+    /// u8, dims u32×ndim, data` where data is 1 byte/element for
+    /// `u8`/`i8` and 4 LE bytes for `i32` — the wire twin of the
+    /// artifact format's dtype-tagged weight payloads.
+    pub fn put_qtensor(&mut self, t: &QTensor) {
+        self.put_u8(dtype_tag(t.precision()));
+        let shape = t.shape();
+        self.put_u8(shape.len() as u8);
+        for d in shape {
+            self.put_u32(*d as u32);
+        }
+        match t {
+            QTensor::U8(t) => self.0.extend_from_slice(t.data()),
+            QTensor::I8(t) => {
+                self.0.extend(t.data().iter().map(|v| *v as u8));
+            }
+            QTensor::I32(t) => {
+                for v in t.data() {
+                    self.0.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+        }
+    }
+}
+
+/// Sequential payload reader; every getter fails typed (malformed frame)
+/// on truncation instead of panicking.
+pub struct PayloadReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> PayloadReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        PayloadReader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// The payload must be fully consumed — trailing bytes mean the
+    /// peer and we disagree about the encoding.
+    pub fn expect_end(&self) -> Result<(), WireError> {
+        if self.remaining() != 0 {
+            return Err(malformed(format!(
+                "{} unexpected trailing payload bytes",
+                self.remaining()
+            )));
+        }
+        Ok(())
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.remaining() < n {
+            return Err(malformed(format!(
+                "payload truncated: wanted {n} more bytes, have {}",
+                self.remaining()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn get_u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn get_u16(&mut self) -> Result<u16, WireError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub fn get_u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn get_u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_str(&mut self) -> Result<String, WireError> {
+        let n = self.get_u32()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|e| malformed(format!("string payload is not UTF-8: {e}")))
+    }
+
+    /// Decode a dtype-tagged tensor (see [`PayloadWriter::put_qtensor`]).
+    pub fn get_qtensor(&mut self) -> Result<QTensor, WireError> {
+        let tag = self.get_u8()?;
+        let p = precision_of_tag(tag)
+            .ok_or_else(|| malformed(format!("unknown tensor dtype tag {tag}")))?;
+        let ndim = self.get_u8()? as usize;
+        if ndim > 8 {
+            return Err(malformed(format!("tensor rank {ndim} exceeds the cap of 8")));
+        }
+        let mut shape = Vec::with_capacity(ndim);
+        let mut len: usize = 1;
+        for _ in 0..ndim {
+            let d = self.get_u32()? as usize;
+            len = len.checked_mul(d).ok_or_else(|| {
+                malformed("tensor element count overflows usize".to_string())
+            })?;
+            shape.push(d);
+        }
+        if len > MAX_PAYLOAD as usize {
+            return Err(malformed(format!(
+                "tensor with {len} elements exceeds the payload cap"
+            )));
+        }
+        Ok(match p {
+            Precision::U8 => {
+                let data = self.take(len)?.to_vec();
+                QTensor::U8(Tensor::from_vec(&shape, data))
+            }
+            Precision::I8 => {
+                let data = self.take(len)?.iter().map(|b| *b as i8).collect();
+                QTensor::I8(Tensor::from_vec(&shape, data))
+            }
+            Precision::I32 => {
+                let bytes = self.take(len * 4)?;
+                let data = bytes
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                QTensor::I32(Tensor::from_vec(&shape, data))
+            }
+        })
+    }
+}
+
+/// Wire dtype tag for a storage precision (0=u8, 1=i8, 2=i32; the
+/// numeric twin of the artifact format's `Precision::name()` strings).
+pub fn dtype_tag(p: Precision) -> u8 {
+    match p {
+        Precision::U8 => 0,
+        Precision::I8 => 1,
+        Precision::I32 => 2,
+    }
+}
+
+pub fn precision_of_tag(tag: u8) -> Option<Precision> {
+    Some(match tag {
+        0 => Precision::U8,
+        1 => Precision::I8,
+        2 => Precision::I32,
+        _ => return None,
+    })
+}
+
+/// Narrow an i32 integer image to the tightest lossless wire precision
+/// (the value-range twin of the deploy-time precision proof): images
+/// that fit `u8`/`i8` cross the wire at 1 byte/element, everything else
+/// stays wide. Always lossless — `widen()` on the far side restores the
+/// exact i32 image.
+pub fn pack_lossless(t: &TensorI) -> QTensor {
+    let (mut lo, mut hi) = (i64::MAX, i64::MIN);
+    for &v in t.data() {
+        lo = lo.min(v as i64);
+        hi = hi.max(v as i64);
+    }
+    if t.is_empty() {
+        return QTensor::I32(t.clone());
+    }
+    let p = Precision::for_range(lo, hi);
+    // In-range by construction, but route the error anyway: a silent
+    // unwrap here would turn a future range bug into a panic on the
+    // serving path.
+    QTensor::narrow_from(t, p).unwrap_or_else(|_| QTensor::I32(t.clone()))
+}
+
+// ---------------------------------------------------------------------------
+// Op payload schemas (shared by server and client)
+// ---------------------------------------------------------------------------
+
+/// `ListModels` reply row — the wire twin of
+/// [`crate::coordinator::ModelInfo`] (provenance flattened to a string).
+/// Rows are sorted by name; the registry guarantees it and the protocol
+/// documents it, so CLI output and tests are stable across runs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireModelInfo {
+    pub name: String,
+    pub version: u64,
+    pub backend: String,
+    pub input_shape: Vec<usize>,
+    pub max_batch: u32,
+    pub provenance: String,
+}
+
+pub fn encode_model_infos(infos: &[WireModelInfo]) -> Vec<u8> {
+    let mut w = PayloadWriter::new();
+    w.put_u32(infos.len() as u32);
+    for i in infos {
+        w.put_str(&i.name);
+        w.put_u64(i.version);
+        w.put_str(&i.backend);
+        w.put_u8(i.input_shape.len() as u8);
+        for d in &i.input_shape {
+            w.put_u32(*d as u32);
+        }
+        w.put_u32(i.max_batch);
+        w.put_str(&i.provenance);
+    }
+    w.finish()
+}
+
+pub fn decode_model_infos(payload: &[u8]) -> Result<Vec<WireModelInfo>, WireError> {
+    let mut r = PayloadReader::new(payload);
+    let n = r.get_u32()? as usize;
+    let mut out = Vec::with_capacity(n.min(1024));
+    for _ in 0..n {
+        let name = r.get_str()?;
+        let version = r.get_u64()?;
+        let backend = r.get_str()?;
+        let ndim = r.get_u8()? as usize;
+        let mut input_shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            input_shape.push(r.get_u32()? as usize);
+        }
+        let max_batch = r.get_u32()?;
+        let provenance = r.get_str()?;
+        out.push(WireModelInfo {
+            name,
+            version,
+            backend,
+            input_shape,
+            max_batch,
+            provenance,
+        });
+    }
+    r.expect_end()?;
+    Ok(out)
+}
+
+/// Five-number summary of one latency/size distribution as it crosses
+/// the wire (full sample vectors stay server-side).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct WireStat {
+    pub count: u64,
+    pub mean: f64,
+    pub p50: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl WireStat {
+    fn of(s: &mut crate::util::stats::Samples) -> WireStat {
+        if s.is_empty() {
+            // Samples reports NaN for empty distributions; on the wire
+            // that would break bit-determinism (NaN != NaN), so an empty
+            // summary is all-zeros with count = 0.
+            return WireStat::default();
+        }
+        WireStat {
+            count: s.len() as u64,
+            mean: s.mean(),
+            p50: s.percentile(0.5),
+            p99: s.percentile(0.99),
+            max: s.max(),
+        }
+    }
+
+    fn put(&self, w: &mut PayloadWriter) {
+        w.put_u64(self.count);
+        w.put_f64(self.mean);
+        w.put_f64(self.p50);
+        w.put_f64(self.p99);
+        w.put_f64(self.max);
+    }
+
+    fn get(r: &mut PayloadReader) -> Result<WireStat, WireError> {
+        Ok(WireStat {
+            count: r.get_u64()?,
+            mean: r.get_f64()?,
+            p50: r.get_f64()?,
+            p99: r.get_f64()?,
+            max: r.get_f64()?,
+        })
+    }
+
+    pub fn summary(&self) -> String {
+        if self.count == 0 {
+            return "n=0".to_string();
+        }
+        format!(
+            "n={} mean={:.6} p50={:.6} p99={:.6} max={:.6}",
+            self.count, self.mean, self.p50, self.p99, self.max
+        )
+    }
+}
+
+/// `ModelMetrics` reply — counters plus summarized distributions of one
+/// model's [`crate::coordinator::Metrics`] ledger.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WireMetrics {
+    pub completed: u64,
+    pub failed: u64,
+    pub padded: u64,
+    pub e2e_latency: WireStat,
+    pub exec_time: WireStat,
+    pub queue_wait: WireStat,
+    pub batch_sizes: WireStat,
+}
+
+impl WireMetrics {
+    pub fn from_metrics(m: &mut crate::coordinator::Metrics) -> WireMetrics {
+        WireMetrics {
+            completed: m.completed,
+            failed: m.failed,
+            padded: m.padded,
+            e2e_latency: WireStat::of(&mut m.e2e_latency),
+            exec_time: WireStat::of(&mut m.exec_time),
+            queue_wait: WireStat::of(&mut m.queue_wait),
+            batch_sizes: WireStat::of(&mut m.batch_sizes),
+        }
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = PayloadWriter::new();
+        w.put_u64(self.completed);
+        w.put_u64(self.failed);
+        w.put_u64(self.padded);
+        self.e2e_latency.put(&mut w);
+        self.exec_time.put(&mut w);
+        self.queue_wait.put(&mut w);
+        self.batch_sizes.put(&mut w);
+        w.finish()
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<WireMetrics, WireError> {
+        let mut r = PayloadReader::new(payload);
+        let m = WireMetrics {
+            completed: r.get_u64()?,
+            failed: r.get_u64()?,
+            padded: r.get_u64()?,
+            e2e_latency: WireStat::get(&mut r)?,
+            exec_time: WireStat::get(&mut r)?,
+            queue_wait: WireStat::get(&mut r)?,
+            batch_sizes: WireStat::get(&mut r)?,
+        };
+        r.expect_end()?;
+        Ok(m)
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "completed={} failed={} padded={}\n\
+             e2e_latency (s): {}\nexec_time   (s): {}\n\
+             queue_wait  (s): {}\nbatch size     : {}",
+            self.completed,
+            self.failed,
+            self.padded,
+            self.e2e_latency.summary(),
+            self.exec_time.summary(),
+            self.queue_wait.summary(),
+            self.batch_sizes.summary()
+        )
+    }
+}
+
+/// Encode a `ReplyErr` payload.
+pub fn encode_error(e: &WireError) -> Vec<u8> {
+    let mut w = PayloadWriter::new();
+    w.put_u16(e.code as u16);
+    w.put_str(&e.message);
+    w.finish()
+}
+
+/// Decode a `ReplyErr` payload.
+pub fn decode_error(payload: &[u8]) -> WireError {
+    fn parse(r: &mut PayloadReader) -> Result<WireError, WireError> {
+        let raw = r.get_u16()?;
+        let code = WireCode::from_u16(raw)
+            .ok_or_else(|| malformed(format!("unknown error code {raw}")))?;
+        let message = r.get_str()?;
+        Ok(WireError { code, message })
+    }
+    let mut r = PayloadReader::new(payload);
+    parse(&mut r).unwrap_or_else(|e| e)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_round_trips_through_encode_and_read() {
+        let f = Frame::new(Opcode::Infer, 42, vec![1, 2, 3, 4, 5]);
+        let bytes = f.encode();
+        assert_eq!(bytes.len(), HEADER_LEN + 5 + TRAILER_LEN);
+        let got = read_frame(&mut bytes.as_slice(), MAX_PAYLOAD).unwrap();
+        assert_eq!(got, f);
+    }
+
+    #[test]
+    fn corrupted_checksum_is_typed() {
+        let f = Frame::new(Opcode::Ping, 7, vec![9, 9]);
+        let mut bytes = f.encode();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xff;
+        let err = read_frame(&mut bytes.as_slice(), MAX_PAYLOAD).unwrap_err();
+        assert_eq!(err.code, WireCode::ChecksumMismatch);
+        assert!(!err.fatal());
+    }
+
+    #[test]
+    fn bad_magic_and_version_are_typed_and_fatal() {
+        let f = Frame::new(Opcode::Ping, 1, vec![]);
+        let mut bytes = f.encode();
+        bytes[0] = b'X';
+        let err = read_frame(&mut bytes.as_slice(), MAX_PAYLOAD).unwrap_err();
+        assert_eq!(err.code, WireCode::MalformedFrame);
+        assert!(err.fatal());
+
+        let mut bytes = f.encode();
+        bytes[4] = 99; // version LE low byte
+        let err = read_frame(&mut bytes.as_slice(), MAX_PAYLOAD).unwrap_err();
+        assert_eq!(err.code, WireCode::VersionMismatch);
+        assert!(err.fatal());
+    }
+
+    #[test]
+    fn oversized_declared_payload_is_typed() {
+        let f = Frame::new(Opcode::Ping, 1, vec![0; 100]);
+        let bytes = f.encode();
+        let err = read_frame(&mut bytes.as_slice(), 10).unwrap_err();
+        assert_eq!(err.code, WireCode::FrameTooLarge);
+        assert!(err.fatal());
+    }
+
+    #[test]
+    fn qtensor_round_trips_at_every_precision() {
+        let cases = [
+            QTensor::U8(Tensor::from_vec(&[2, 2], vec![0u8, 1, 254, 255])),
+            QTensor::I8(Tensor::from_vec(&[3], vec![-128i8, 0, 127])),
+            QTensor::I32(Tensor::from_vec(&[2], vec![i32::MIN, i32::MAX])),
+        ];
+        for t in cases {
+            let mut w = PayloadWriter::new();
+            w.put_qtensor(&t);
+            let bytes = w.finish();
+            let mut r = PayloadReader::new(&bytes);
+            let got = r.get_qtensor().unwrap();
+            r.expect_end().unwrap();
+            assert_eq!(got, t);
+        }
+    }
+
+    #[test]
+    fn pack_lossless_picks_the_tightest_precision() {
+        use crate::quant::Precision;
+        let t = Tensor::from_vec(&[2], vec![0, 255]);
+        assert_eq!(pack_lossless(&t).precision(), Precision::U8);
+        let t = Tensor::from_vec(&[2], vec![-1, 127]);
+        assert_eq!(pack_lossless(&t).precision(), Precision::I8);
+        let t = Tensor::from_vec(&[2], vec![-1, 128]);
+        assert_eq!(pack_lossless(&t).precision(), Precision::I32);
+        // and is always lossless
+        for t in [
+            Tensor::from_vec(&[3], vec![-70000, 0, 70000]),
+            Tensor::from_vec(&[2], vec![12, 200]),
+        ] {
+            assert_eq!(pack_lossless(&t).widen(), t);
+        }
+    }
+
+    #[test]
+    fn truncated_payload_reader_is_typed() {
+        let mut r = PayloadReader::new(&[1, 0]);
+        assert!(r.get_u32().is_err());
+        let mut w = PayloadWriter::new();
+        w.put_str("hello");
+        let bytes = w.finish();
+        let mut r = PayloadReader::new(&bytes[..bytes.len() - 1]);
+        let err = r.get_str().unwrap_err();
+        assert_eq!(err.code, WireCode::MalformedFrame);
+    }
+
+    #[test]
+    fn model_infos_and_metrics_round_trip() {
+        let infos = vec![
+            WireModelInfo {
+                name: "alpha".into(),
+                version: 3,
+                backend: "native-int".into(),
+                input_shape: vec![1, 12, 12],
+                max_batch: 16,
+                provenance: "in-memory".into(),
+            },
+            WireModelInfo {
+                name: "zeta".into(),
+                version: 1,
+                backend: "native-int".into(),
+                input_shape: vec![12],
+                max_batch: 8,
+                provenance: "artifact x.nemo.json".into(),
+            },
+        ];
+        let got = decode_model_infos(&encode_model_infos(&infos)).unwrap();
+        assert_eq!(got, infos);
+
+        let mut m = crate::coordinator::Metrics::new();
+        m.completed = 11;
+        m.failed = 2;
+        m.e2e_latency.push(0.5);
+        m.e2e_latency.push(1.5);
+        let wm = WireMetrics::from_metrics(&mut m);
+        let got = WireMetrics::decode(&wm.encode()).unwrap();
+        assert_eq!(got, wm);
+        assert_eq!(got.completed, 11);
+        assert_eq!(got.e2e_latency.count, 2);
+        assert!((got.e2e_latency.mean - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn error_payload_round_trips() {
+        let e = WireError::new(WireCode::UnknownModel, "model 'x' not found");
+        let got = decode_error(&encode_error(&e));
+        assert_eq!(got.code, WireCode::UnknownModel);
+        assert_eq!(got.message, "model 'x' not found");
+    }
+}

@@ -1,0 +1,488 @@
+//! [`NetServer`]: the socket front-end over a serving
+//! [`ServerHandle`].
+//!
+//! The server is a framing + dispatch shim: it owns no models and no
+//! batching. Every request op is answered by calling the corresponding
+//! `ServerHandle` method, so the coordinator's invariants (swap atomic
+//! w.r.t. in-flight batches, metrics ledgers spanning versions,
+//! deadline semantics) hold for remote callers exactly as for
+//! in-process ones.
+//!
+//! Threading: an accept thread polls a non-blocking listener and hands
+//! accepted connections to a fixed pool of handler threads; each
+//! handler serves one connection at a time, frame by frame (requests on
+//! one connection are processed in order, which is what makes client
+//! pipelining deterministic). Connections beyond the pool size queue
+//! until a handler frees up.
+//!
+//! Failure discipline: every detectable failure gets a typed
+//! `ReplyErr` frame before anything else happens — a client never sees
+//! a silently dropped connection. Fatal errors (malformed header,
+//! truncated frame, version mismatch, oversized frame) close the
+//! connection *after* the reply because the byte stream is
+//! desynchronized; payload-level errors (checksum mismatch, unknown
+//! model, deadline exceeded, bad request) leave the connection usable.
+//!
+//! Shutdown: [`NetServer::stop`] flips a flag checked only *between*
+//! frames, so a request already being served completes and its reply is
+//! written (graceful drain), then handlers close their connections and
+//! join. Idle connections are reaped after `idle_timeout` without a
+//! frame.
+
+use std::io::{ErrorKind, Read};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, RecvTimeoutError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context as _, Result};
+
+use crate::coordinator::ServerHandle;
+use crate::io::fnv1a64;
+
+use super::protocol::{
+    encode_error, encode_model_infos, pack_lossless, Frame, Header, Opcode,
+    PayloadReader, PayloadWriter, WireCode, WireError, WireMetrics, WireModelInfo,
+    HEADER_LEN, MAX_PAYLOAD, TRAILER_LEN,
+};
+
+/// Socket-layer configuration (the serving layer's knobs live in
+/// [`crate::coordinator::ServerConfig`]).
+#[derive(Clone, Copy, Debug)]
+pub struct NetConfig {
+    /// Handler threads = max concurrently served connections.
+    pub handler_threads: usize,
+    /// Mid-frame stall limit: a peer that starts a frame and then sends
+    /// nothing for this long gets a typed truncated-frame reply and a
+    /// close (it cannot hold a handler hostage).
+    pub read_timeout: Duration,
+    /// Socket write timeout for replies.
+    pub write_timeout: Duration,
+    /// A connection with no frame for this long is reaped.
+    pub idle_timeout: Duration,
+    /// Per-frame payload cap; a larger declared length is a typed
+    /// `FrameTooLarge` error and the payload is never read.
+    pub max_payload: u32,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            handler_threads: 8,
+            read_timeout: Duration::from_secs(5),
+            write_timeout: Duration::from_secs(5),
+            idle_timeout: Duration::from_secs(60),
+            max_payload: MAX_PAYLOAD,
+        }
+    }
+}
+
+/// Poll granularity for the accept loop and for blocked reads — bounds
+/// how long shutdown/idle checks can lag.
+const POLL_TICK: Duration = Duration::from_millis(20);
+
+/// The socket front-end. Bind, serve, [`stop`](NetServer::stop).
+pub struct NetServer {
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an OS-assigned port) and
+    /// start serving `handle` immediately.
+    pub fn bind(
+        addr: impl ToSocketAddrs,
+        handle: ServerHandle,
+        cfg: NetConfig,
+    ) -> Result<NetServer> {
+        let listener = TcpListener::bind(addr).context("binding listener")?;
+        let local_addr = listener.local_addr().context("resolving bound address")?;
+        listener
+            .set_nonblocking(true)
+            .context("setting listener non-blocking")?;
+
+        let stop = Arc::new(AtomicBool::new(false));
+        let (conn_tx, conn_rx) = mpsc::channel::<TcpStream>();
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+
+        let mut threads = Vec::with_capacity(cfg.handler_threads + 1);
+        {
+            let stop = stop.clone();
+            threads.push(std::thread::spawn(move || {
+                accept_loop(listener, conn_tx, stop);
+            }));
+        }
+        for _ in 0..cfg.handler_threads.max(1) {
+            let conn_rx = conn_rx.clone();
+            let handle = handle.clone();
+            let stop = stop.clone();
+            threads.push(std::thread::spawn(move || loop {
+                let stream = {
+                    let guard = conn_rx.lock().unwrap();
+                    guard.recv_timeout(Duration::from_millis(50))
+                };
+                match stream {
+                    Ok(s) => serve_connection(s, &handle, &cfg, &stop),
+                    Err(RecvTimeoutError::Timeout) => {
+                        if stop.load(Ordering::SeqCst) {
+                            return;
+                        }
+                    }
+                    Err(RecvTimeoutError::Disconnected) => return,
+                }
+            }));
+        }
+        Ok(NetServer { local_addr, stop, threads })
+    }
+
+    /// The bound address (the real port when bound to `:0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Stop accepting, drain: requests already being served complete
+    /// and their replies are written before the threads join. The
+    /// serving coordinator behind the handle is untouched — stop it
+    /// separately via `Server::stop()`.
+    pub fn stop(self) {
+        self.stop.store(true, Ordering::SeqCst);
+        for t in self.threads {
+            let _ = t.join();
+        }
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    conn_tx: mpsc::Sender<TcpStream>,
+    stop: Arc<AtomicBool>,
+) {
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                // The accepted socket may inherit the listener's
+                // non-blocking mode on some platforms; the handlers'
+                // poll-tick reads want a blocking socket with a short
+                // read timeout instead.
+                let ok = stream.set_nonblocking(false).is_ok()
+                    && stream.set_read_timeout(Some(POLL_TICK)).is_ok();
+                let _ = stream.set_nodelay(true);
+                if ok && conn_tx.send(stream).is_err() {
+                    return; // handlers gone: shutting down
+                }
+            }
+            Err(e) if is_would_block(&e) => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => {
+                // Transient accept failure (e.g. aborted handshake).
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+    }
+}
+
+fn is_would_block(e: &std::io::Error) -> bool {
+    matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut)
+}
+
+/// Read exactly `buf.len()` bytes, tolerating short reads and poll-tick
+/// timeouts, failing if the peer closes mid-frame or stalls longer than
+/// `stall_limit` since the last byte.
+fn fill(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    stall_limit: Duration,
+) -> std::result::Result<(), String> {
+    let mut pos = 0;
+    let mut last_byte = Instant::now();
+    while pos < buf.len() {
+        match stream.read(&mut buf[pos..]) {
+            Ok(0) => {
+                return Err(format!(
+                    "peer closed the connection mid-frame ({pos} of {} bytes)",
+                    buf.len()
+                ))
+            }
+            Ok(n) => {
+                pos += n;
+                last_byte = Instant::now();
+            }
+            Err(e) if is_would_block(&e) || e.kind() == ErrorKind::Interrupted => {
+                if last_byte.elapsed() >= stall_limit {
+                    return Err(format!(
+                        "frame stalled mid-transfer for {stall_limit:?} \
+                         ({pos} of {} bytes)",
+                        buf.len()
+                    ));
+                }
+            }
+            Err(e) => return Err(format!("socket read failed: {e}")),
+        }
+    }
+    Ok(())
+}
+
+/// Best-effort typed error reply; the connection may already be dead,
+/// in which case there is nobody left to inform.
+fn reply_err(stream: &mut TcpStream, req_id: u64, e: &WireError) {
+    let frame = Frame::new(Opcode::ReplyErr, req_id, encode_error(e));
+    let _ = frame.write_to(stream);
+}
+
+/// Serve one connection frame-by-frame until close / fatal error /
+/// idle reap / shutdown. The shutdown flag is checked only between
+/// frames: a request already past its header completes and replies.
+fn serve_connection(
+    mut stream: TcpStream,
+    handle: &ServerHandle,
+    cfg: &NetConfig,
+    stop: &AtomicBool,
+) {
+    let _ = stream.set_write_timeout(Some(cfg.write_timeout));
+    let mut last_frame = Instant::now();
+    loop {
+        // Frame boundary: wait for the first header byte, watching the
+        // shutdown flag and the idle clock.
+        let mut hdr = [0u8; HEADER_LEN];
+        let mut got = 0usize;
+        loop {
+            if stop.load(Ordering::SeqCst) {
+                return; // between frames: nothing in flight on this conn
+            }
+            match stream.read(&mut hdr) {
+                Ok(0) => return, // clean close at a frame boundary
+                Ok(n) => {
+                    got = n;
+                    break;
+                }
+                Err(e) if is_would_block(&e) || e.kind() == ErrorKind::Interrupted => {
+                    if last_frame.elapsed() >= cfg.idle_timeout {
+                        return; // idle reap
+                    }
+                }
+                Err(_) => return,
+            }
+        }
+        if got < HEADER_LEN {
+            if let Err(msg) = fill(&mut stream, &mut hdr[got..], cfg.read_timeout) {
+                reply_err(
+                    &mut stream,
+                    0,
+                    &WireError::new(
+                        WireCode::MalformedFrame,
+                        format!("truncated frame header: {msg}"),
+                    ),
+                );
+                return;
+            }
+        }
+        // req_id sits at a fixed offset; echo it even on malformed
+        // frames so a pipelining client can attribute the failure. (If
+        // the magic itself is wrong these bytes are noise — harmless.)
+        let req_id = u64::from_le_bytes(hdr[8..16].try_into().unwrap());
+        let header = match Header::parse(&hdr, cfg.max_payload) {
+            Ok(h) => h,
+            Err(e) => {
+                reply_err(&mut stream, req_id, &e);
+                if e.fatal() {
+                    return;
+                }
+                continue;
+            }
+        };
+        let mut payload = vec![0u8; header.payload_len as usize];
+        if let Err(msg) = fill(&mut stream, &mut payload, cfg.read_timeout) {
+            reply_err(
+                &mut stream,
+                req_id,
+                &WireError::new(
+                    WireCode::MalformedFrame,
+                    format!("truncated frame payload: {msg}"),
+                ),
+            );
+            return;
+        }
+        let mut trailer = [0u8; TRAILER_LEN];
+        if let Err(msg) = fill(&mut stream, &mut trailer, cfg.read_timeout) {
+            reply_err(
+                &mut stream,
+                req_id,
+                &WireError::new(
+                    WireCode::MalformedFrame,
+                    format!("truncated checksum trailer: {msg}"),
+                ),
+            );
+            return;
+        }
+        last_frame = Instant::now();
+
+        let want = u64::from_le_bytes(trailer);
+        let got_sum = fnv1a64(&payload);
+        if want != got_sum {
+            // Framing was intact, only the payload is corrupt — the
+            // stream stays in sync, so the connection survives.
+            reply_err(
+                &mut stream,
+                req_id,
+                &WireError::new(
+                    WireCode::ChecksumMismatch,
+                    format!(
+                        "payload checksum {got_sum:#018x} != trailer {want:#018x}"
+                    ),
+                ),
+            );
+            continue;
+        }
+        let op = match Opcode::from_u8(header.opcode_raw) {
+            Some(op @ (Opcode::ReplyOk | Opcode::ReplyErr)) => {
+                reply_err(
+                    &mut stream,
+                    req_id,
+                    &WireError::new(
+                        WireCode::BadRequest,
+                        format!("{op:?} is a reply opcode, not a request"),
+                    ),
+                );
+                continue;
+            }
+            Some(op) => op,
+            None => {
+                reply_err(
+                    &mut stream,
+                    req_id,
+                    &WireError::new(
+                        WireCode::BadRequest,
+                        format!("unknown opcode {:#04x}", header.opcode_raw),
+                    ),
+                );
+                continue;
+            }
+        };
+        match dispatch(handle, op, &payload) {
+            Ok(reply) => {
+                if Frame::new(Opcode::ReplyOk, req_id, reply)
+                    .write_to(&mut stream)
+                    .is_err()
+                {
+                    return; // peer gone mid-reply
+                }
+            }
+            Err(e) => {
+                reply_err(&mut stream, req_id, &e);
+                if e.fatal() {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Execute one request op against the serving handle and produce the
+/// `ReplyOk` payload. All serving-side failures map to typed wire
+/// errors via [`WireError::from_serving`].
+fn dispatch(
+    handle: &ServerHandle,
+    op: Opcode,
+    payload: &[u8],
+) -> std::result::Result<Vec<u8>, WireError> {
+    let mut r = PayloadReader::new(payload);
+    match op {
+        Opcode::Ping => {
+            r.expect_end()?;
+            Ok(Vec::new())
+        }
+        Opcode::Infer => {
+            let model = r.get_str()?;
+            let qx = r.get_qtensor()?;
+            r.expect_end()?;
+            let logits = handle
+                .infer(&model, qx.widen())
+                .map_err(|e| WireError::from_serving(&e))?;
+            let mut w = PayloadWriter::new();
+            w.put_qtensor(&pack_lossless(&logits));
+            Ok(w.finish())
+        }
+        Opcode::InferDeadline => {
+            let model = r.get_str()?;
+            let deadline_us = r.get_u64()?;
+            let qx = r.get_qtensor()?;
+            r.expect_end()?;
+            let logits = handle
+                .infer_deadline(
+                    &model,
+                    qx.widen(),
+                    Duration::from_micros(deadline_us),
+                )
+                .map_err(|e| WireError::from_serving(&e))?;
+            let mut w = PayloadWriter::new();
+            w.put_qtensor(&pack_lossless(&logits));
+            Ok(w.finish())
+        }
+        Opcode::LoadModel => {
+            let name = r.get_str()?;
+            let path = r.get_str()?;
+            r.expect_end()?;
+            handle
+                .load_model_from_artifact(&name, &path)
+                .map_err(|e| WireError::from_serving(&e))?;
+            let mut w = PayloadWriter::new();
+            w.put_u64(1); // a fresh registration always starts at v1
+            Ok(w.finish())
+        }
+        Opcode::SwapModel => {
+            let name = r.get_str()?;
+            let path = r.get_str()?;
+            r.expect_end()?;
+            let version = handle
+                .swap_model_from_artifact(&name, &path)
+                .map_err(|e| WireError::from_serving(&e))?;
+            let mut w = PayloadWriter::new();
+            w.put_u64(version);
+            Ok(w.finish())
+        }
+        Opcode::UnloadModel => {
+            let name = r.get_str()?;
+            r.expect_end()?;
+            handle
+                .unload_model(&name)
+                .map_err(|e| WireError::from_serving(&e))?;
+            Ok(Vec::new())
+        }
+        Opcode::ListModels => {
+            r.expect_end()?;
+            // The registry returns the table sorted by name — the wire
+            // op inherits (and its tests lock in) that determinism.
+            let infos: Vec<WireModelInfo> = handle
+                .list_models()
+                .into_iter()
+                .map(|m| WireModelInfo {
+                    name: m.name,
+                    version: m.version,
+                    backend: m.backend,
+                    input_shape: m.input_shape,
+                    max_batch: m.max_batch as u32,
+                    provenance: m.provenance.to_string(),
+                })
+                .collect();
+            Ok(encode_model_infos(&infos))
+        }
+        Opcode::ModelMetrics => {
+            let name = r.get_str()?;
+            r.expect_end()?;
+            let mut m = handle
+                .model_metrics(&name)
+                .map_err(|e| WireError::from_serving(&e))?;
+            Ok(WireMetrics::from_metrics(&mut m).encode())
+        }
+        Opcode::ReplyOk | Opcode::ReplyErr => Err(WireError::new(
+            WireCode::BadRequest,
+            "reply opcodes are not requests",
+        )),
+    }
+}

@@ -1,0 +1,634 @@
+//! Remote serving integration tests: wire-protocol conformance over
+//! real loopback sockets, bit-identity with in-process inference, and
+//! the registry invariants (swap atomicity, metrics ledgers) observed
+//! remotely.
+//!
+//! Contract under test (DESIGN.md §Network-protocol): every detectable
+//! failure is answered with a typed `ReplyErr` — never a silently torn
+//! connection; fatal framing errors close only *after* the reply;
+//! payload-level errors keep the connection usable; and a loopback
+//! round-trip is bit-identical to `ServerHandle::infer` because
+//! integer inference is deterministic and tensors cross the wire
+//! losslessly.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use nemo::coordinator::{Server, ServerConfig, ServerHandle};
+use nemo::exec::{Arg, ExecInput, ExecOutput, Executor, NativeIntExecutor};
+use nemo::graph::int::{IntGraph, IntOp};
+use nemo::model::mlp;
+use nemo::net::protocol::{
+    decode_error, read_frame, Frame, Opcode, HEADER_LEN, MAGIC, WIRE_VERSION,
+};
+use nemo::net::{
+    ClientConfig, NemoClient, NetConfig, NetServer, WireCode, WireError, MAX_PAYLOAD,
+};
+use nemo::network::{IntegerDeployable, Network};
+use nemo::quant::{quantize_input, QuantSpec};
+use nemo::tensor::{Tensor, TensorF, TensorI};
+use nemo::transform::DeployOptions;
+use nemo::util::rng::Rng;
+
+// -- fixtures (shared idiom with tests/registry.rs) ---------------------
+
+/// Deterministic stub: logits = input + offset.
+struct OffsetExec {
+    offset: i32,
+}
+
+impl Executor for OffsetExec {
+    fn name(&self) -> &str {
+        "offset-stub"
+    }
+
+    fn input_shape(&self) -> &[usize] {
+        &[2]
+    }
+
+    fn max_batch(&self) -> usize {
+        8
+    }
+
+    fn run_batch(&self, input: &ExecInput) -> anyhow::Result<ExecOutput> {
+        let t = input.batch.as_i32()?;
+        Ok(ExecOutput { logits: Arg::I32(t.map(|v| v + self.offset)) })
+    }
+}
+
+/// Stub slow enough for a deadline to expire first.
+struct SlowExec;
+
+impl Executor for SlowExec {
+    fn name(&self) -> &str {
+        "slow-stub"
+    }
+
+    fn input_shape(&self) -> &[usize] {
+        &[2]
+    }
+
+    fn max_batch(&self) -> usize {
+        8
+    }
+
+    fn run_batch(&self, input: &ExecInput) -> anyhow::Result<ExecOutput> {
+        std::thread::sleep(Duration::from_millis(150));
+        Ok(ExecOutput { logits: input.batch.clone() })
+    }
+}
+
+fn qx2(a: i32, b: i32) -> TensorI {
+    Tensor::from_vec(&[1, 2], vec![a, b])
+}
+
+fn fast_cfg() -> ServerConfig {
+    ServerConfig {
+        max_batch: 8,
+        batch_timeout: Duration::from_micros(200),
+        n_workers: 2,
+    }
+}
+
+fn deployed_mlp(seed: u64) -> Network<IntegerDeployable> {
+    let mut rng = Rng::new(seed);
+    let g = mlp(&mut rng, 12, 10, 4, 1.0 / 255.0);
+    let x = TensorF::from_vec(
+        &[8, 12],
+        (0..96).map(|_| rng.uniform(0.0, 1.0) as f32).collect(),
+    );
+    let fp = Network::from_graph(g).unwrap();
+    let betas = fp.calibrate(&[x]);
+    fp.quantize_pact(8, 8, &betas)
+        .unwrap()
+        .deploy(DeployOptions::default())
+        .unwrap()
+        .integerize()
+}
+
+/// Identity graph whose input spec exceeds 8 bits, forcing the wide
+/// (i32) executor path.
+fn wide_identity_exec() -> Arc<dyn Executor> {
+    let mut g = IntGraph::default();
+    let spec = QuantSpec { eps: 1.0, lo: 0, hi: 1 << 16 };
+    let x = g.push("in", IntOp::Input { shape: vec![2], spec }, &[]);
+    let wq = Tensor::from_vec(&[2, 2], vec![1, 0, 0, 1]);
+    g.push("fc", IntOp::LinearInt { wq, bias_q: None }, &[x]);
+    g.eps_out = 1.0;
+    let exec = NativeIntExecutor::new(g, 8).unwrap();
+    assert!(!exec.packed(), "this fixture must exercise the wide path");
+    Arc::new(exec)
+}
+
+/// Boot a coordinator + socket front-end; returns (net server, server,
+/// handle) — callers stop the net layer first, then the coordinator.
+fn boot(builder_models: Vec<(&str, Arc<dyn Executor>)>, net_cfg: NetConfig)
+    -> (NetServer, Server, ServerHandle) {
+    let mut b = Server::builder().default_config(fast_cfg());
+    for (name, exec) in builder_models {
+        b = b.model(name, exec);
+    }
+    let server = b.start().unwrap();
+    let h = server.handle();
+    let ns = NetServer::bind("127.0.0.1:0", server.handle(), net_cfg).unwrap();
+    (ns, server, h)
+}
+
+fn connect(ns: &NetServer) -> NemoClient {
+    NemoClient::connect_with(
+        ns.local_addr(),
+        ClientConfig { read_timeout: Duration::from_secs(5), ..Default::default() },
+    )
+    .unwrap()
+}
+
+fn wire_code(err: &anyhow::Error) -> Option<WireCode> {
+    err.downcast_ref::<WireError>().map(|w| w.code)
+}
+
+/// Raw socket speaking hand-built frames — for protocol-violation tests
+/// the well-behaved client cannot produce.
+fn raw_socket(ns: &NetServer) -> TcpStream {
+    let s = TcpStream::connect(ns.local_addr()).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    s.set_write_timeout(Some(Duration::from_secs(5))).unwrap();
+    s
+}
+
+/// Read one reply and expect a typed error with `code`.
+fn expect_err_reply(s: &mut TcpStream, code: WireCode) -> WireError {
+    let frame = read_frame(s, MAX_PAYLOAD).unwrap();
+    assert_eq!(frame.opcode, Opcode::ReplyErr, "expected a typed error reply");
+    let err = decode_error(&frame.payload);
+    assert_eq!(err.code, code, "{err}");
+    err
+}
+
+/// After a fatal error the server must close: the next read sees EOF.
+fn expect_eof(s: &mut TcpStream) {
+    let mut buf = [0u8; 1];
+    loop {
+        match s.read(&mut buf) {
+            Ok(0) => return,
+            Ok(_) => panic!("server sent bytes after a fatal error"),
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                panic!("connection still open after a fatal error")
+            }
+            // Reset is also a close on some platforms.
+            Err(_) => return,
+        }
+    }
+}
+
+// -- bit-identity (acceptance criterion) --------------------------------
+
+#[test]
+fn loopback_is_bit_identical_to_in_process_packed_path() {
+    let net = deployed_mlp(71);
+    let exec = net.to_shared_executor(8).unwrap();
+    let (ns, server, h) = boot(vec![("m", exec)], NetConfig::default());
+    let mut client = connect(&ns);
+
+    let mut rng = Rng::new(710);
+    for _ in 0..16 {
+        let x = TensorF::from_vec(
+            &[1, 12],
+            (0..12).map(|_| rng.uniform(0.0, 1.0) as f32).collect(),
+        );
+        let qx = quantize_input(&x, 1.0 / 255.0);
+        let remote = client.infer("m", &qx).unwrap();
+        let local = h.infer("m", qx.clone()).unwrap();
+        let engine = net.run(&qx);
+        // remote == in-process served == raw engine, bit for bit
+        assert_eq!(remote.data(), local.data());
+        assert_eq!(remote.shape(), local.shape());
+        assert_eq!(remote.data(), engine.data());
+    }
+    ns.stop();
+    server.stop();
+}
+
+#[test]
+fn loopback_is_bit_identical_on_the_wide_path() {
+    let (ns, server, h) = boot(vec![("w", wide_identity_exec())], NetConfig::default());
+    let mut client = connect(&ns);
+    // 40000 does not fit u8/i8, so it crosses the wire as i32 both ways.
+    let qx = qx2(40000, 2);
+    let remote = client.infer("w", &qx).unwrap();
+    let local = h.infer("w", qx).unwrap();
+    assert_eq!(remote.data(), &[40000, 2]);
+    assert_eq!(remote.data(), local.data());
+    ns.stop();
+    server.stop();
+}
+
+// -- swap atomicity under concurrent remote traffic (acceptance) --------
+
+#[test]
+fn concurrent_remote_swap_loses_zero_replies() {
+    let net1 = deployed_mlp(81);
+    let net2 = deployed_mlp(82);
+    let path = std::env::temp_dir()
+        .join(format!("nemo_net_swap_{}.nemo.json", std::process::id()));
+    net2.save_deployed(&path).unwrap();
+
+    let exec = net1.to_shared_executor(8).unwrap();
+    let (ns, server, h) = boot(vec![("m", exec)], NetConfig::default());
+
+    let net1 = Arc::new(net1);
+    let net2 = Arc::new(net2);
+    let swapped = Arc::new(AtomicBool::new(false));
+    let per_client = 40usize;
+    let n_clients = 4usize;
+
+    let mut joins = Vec::new();
+    for c in 0..n_clients as u64 {
+        let addr = ns.local_addr();
+        let (net1, net2) = (net1.clone(), net2.clone());
+        let swapped = swapped.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut client = NemoClient::connect(addr).unwrap();
+            let mut rng = Rng::new(8100 + c);
+            for _ in 0..per_client {
+                let x = TensorF::from_vec(
+                    &[1, 12],
+                    (0..12).map(|_| rng.uniform(0.0, 1.0) as f32).collect(),
+                );
+                let qx = quantize_input(&x, 1.0 / 255.0);
+                let was_swapped = swapped.load(Ordering::SeqCst);
+                // Zero lost replies: every request gets an Ok, mid-swap
+                // included.
+                let served = client.infer("m", &qx).unwrap();
+                let e1 = net1.run(&qx);
+                let e2 = net2.run(&qx);
+                // Every reply is bit-identical to exactly one version.
+                assert!(
+                    served.data() == e1.data() || served.data() == e2.data(),
+                    "reply matches neither executor version"
+                );
+                if was_swapped {
+                    // Submitted strictly after the swap returned: must
+                    // run on the new executor.
+                    assert_eq!(served.data(), e2.data());
+                }
+            }
+        }));
+    }
+
+    // Remote hot swap from its own connection, mid-traffic.
+    let swap_version = {
+        let mut admin = connect(&ns);
+        std::thread::sleep(Duration::from_millis(10));
+        let v = admin.swap_model("m", path.to_str().unwrap()).unwrap();
+        swapped.store(true, Ordering::SeqCst);
+        v
+    };
+    assert_eq!(swap_version, 2);
+
+    for j in joins {
+        j.join().unwrap();
+    }
+
+    // Ledger spans both versions and lost nothing. Metrics are recorded
+    // after replies scatter, so poll briefly for the last batch.
+    let total = (per_client * n_clients) as u64;
+    let mut admin = connect(&ns);
+    let t0 = Instant::now();
+    loop {
+        let m = admin.model_metrics("m").unwrap();
+        if m.completed == total {
+            assert_eq!(m.failed, 0);
+            break;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "ledger stuck at {} of {total}",
+            m.completed
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    ns.stop();
+    server.stop();
+    let _ = std::fs::remove_file(path);
+}
+
+// -- wire admin ops -----------------------------------------------------
+
+#[test]
+fn wire_list_is_sorted_and_complete() {
+    let (ns, server, _h) = boot(
+        vec![
+            ("zebra", Arc::new(OffsetExec { offset: 1 }) as Arc<dyn Executor>),
+            ("alpha", Arc::new(OffsetExec { offset: 2 }) as Arc<dyn Executor>),
+            ("mid", Arc::new(OffsetExec { offset: 3 }) as Arc<dyn Executor>),
+        ],
+        NetConfig::default(),
+    );
+    let mut client = connect(&ns);
+    let infos = client.list_models().unwrap();
+    let names: Vec<&str> = infos.iter().map(|m| m.name.as_str()).collect();
+    // Deterministic order, wire-guaranteed: sorted by name.
+    assert_eq!(names, ["alpha", "mid", "zebra"]);
+    for m in &infos {
+        assert_eq!(m.version, 1);
+        assert_eq!(m.backend, "offset-stub");
+        assert_eq!(m.input_shape, vec![2]);
+        assert_eq!(m.max_batch, 8);
+        assert_eq!(m.provenance, "in-memory");
+    }
+    ns.stop();
+    server.stop();
+}
+
+#[test]
+fn remote_load_metrics_unload_lifecycle() {
+    let net = deployed_mlp(91);
+    let path = std::env::temp_dir()
+        .join(format!("nemo_net_load_{}.nemo.json", std::process::id()));
+    net.save_deployed(&path).unwrap();
+
+    let (ns, server, _h) = boot(
+        vec![("seed", Arc::new(OffsetExec { offset: 5 }) as Arc<dyn Executor>)],
+        NetConfig::default(),
+    );
+    let mut client = connect(&ns);
+
+    // load a second model from a server-side artifact path
+    let v = client.load_model("fresh", path.to_str().unwrap()).unwrap();
+    assert_eq!(v, 1);
+    let names: Vec<String> =
+        client.list_models().unwrap().into_iter().map(|m| m.name).collect();
+    assert_eq!(names, ["fresh", "seed"]);
+
+    // traffic lands in the new model's ledger
+    let mut rng = Rng::new(910);
+    let x = TensorF::from_vec(
+        &[1, 12],
+        (0..12).map(|_| rng.uniform(0.0, 1.0) as f32).collect(),
+    );
+    let qx = quantize_input(&x, 1.0 / 255.0);
+    let remote = client.infer("fresh", &qx).unwrap();
+    assert_eq!(remote.data(), net.run(&qx).data());
+
+    // metrics are recorded after the reply is scattered — poll briefly
+    let t0 = Instant::now();
+    loop {
+        let m = client.model_metrics("fresh").unwrap();
+        if m.completed == 1 {
+            assert_eq!(m.failed, 0);
+            assert_eq!(m.e2e_latency.count, 1);
+            break;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(5), "metrics never caught up");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    // unload: subsequent inference is a typed unknown-model error
+    client.unload_model("fresh").unwrap();
+    let err = client.infer("fresh", &qx).unwrap_err();
+    assert_eq!(wire_code(&err), Some(WireCode::UnknownModel), "{err:#}");
+    // the connection survived the typed error
+    client.ping().unwrap();
+    ns.stop();
+    server.stop();
+    let _ = std::fs::remove_file(path);
+}
+
+// -- typed wire errors (satellite: protocol conformance) ----------------
+
+#[test]
+fn unknown_model_is_a_typed_wire_error() {
+    let (ns, server, _h) = boot(
+        vec![("m", Arc::new(OffsetExec { offset: 1 }) as Arc<dyn Executor>)],
+        NetConfig::default(),
+    );
+    let mut client = connect(&ns);
+    let err = client.infer("nope", &qx2(1, 2)).unwrap_err();
+    assert_eq!(wire_code(&err), Some(WireCode::UnknownModel), "{err:#}");
+    // non-fatal: same connection keeps serving
+    assert_eq!(client.infer("m", &qx2(1, 2)).unwrap().data(), &[2, 3]);
+    ns.stop();
+    server.stop();
+}
+
+#[test]
+fn deadline_propagates_client_to_server_to_batcher() {
+    let (ns, server, _h) = boot(
+        vec![("slow", Arc::new(SlowExec) as Arc<dyn Executor>)],
+        NetConfig::default(),
+    );
+    let mut client = connect(&ns);
+    let t0 = Instant::now();
+    let err = client
+        .infer_deadline("slow", &qx2(1, 2), Duration::from_millis(10))
+        .unwrap_err();
+    // typed, and from the server's deadline logic — not a socket timeout
+    assert_eq!(wire_code(&err), Some(WireCode::DeadlineExceeded), "{err:#}");
+    assert!(
+        t0.elapsed() < Duration::from_millis(150),
+        "deadline reply must not wait for the slow executor"
+    );
+    // connection stays usable after the typed error
+    client.ping().unwrap();
+    ns.stop();
+    server.stop();
+}
+
+#[test]
+fn malformed_magic_is_typed_then_fatal() {
+    let (ns, server, _h) = boot(
+        vec![("m", Arc::new(OffsetExec { offset: 1 }) as Arc<dyn Executor>)],
+        NetConfig::default(),
+    );
+    let mut s = raw_socket(&ns);
+    let mut bytes = Frame::new(Opcode::Ping, 7, Vec::new()).encode();
+    bytes[..4].copy_from_slice(b"XENO");
+    s.write_all(&bytes).unwrap();
+    expect_err_reply(&mut s, WireCode::MalformedFrame);
+    expect_eof(&mut s);
+    ns.stop();
+    server.stop();
+}
+
+#[test]
+fn protocol_version_mismatch_is_typed_then_fatal() {
+    let (ns, server, _h) = boot(
+        vec![("m", Arc::new(OffsetExec { offset: 1 }) as Arc<dyn Executor>)],
+        NetConfig::default(),
+    );
+    let mut s = raw_socket(&ns);
+    let mut bytes = Frame::new(Opcode::Ping, 9, Vec::new()).encode();
+    bytes[4..6].copy_from_slice(&99u16.to_le_bytes());
+    assert_ne!(WIRE_VERSION, 99);
+    s.write_all(&bytes).unwrap();
+    let err = expect_err_reply(&mut s, WireCode::VersionMismatch);
+    assert!(err.message.contains("v99"), "{err}");
+    expect_eof(&mut s);
+    ns.stop();
+    server.stop();
+}
+
+#[test]
+fn oversized_frame_is_rejected_without_reading_the_payload() {
+    let (ns, server, _h) = boot(
+        vec![("m", Arc::new(OffsetExec { offset: 1 }) as Arc<dyn Executor>)],
+        NetConfig { max_payload: 1024, ..NetConfig::default() },
+    );
+    let mut s = raw_socket(&ns);
+    // header declaring a 1 MiB payload; the payload itself never sent
+    let mut hdr = Vec::with_capacity(HEADER_LEN);
+    hdr.extend_from_slice(&MAGIC.to_le_bytes());
+    hdr.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+    hdr.push(Opcode::Ping as u8);
+    hdr.push(0);
+    hdr.extend_from_slice(&11u64.to_le_bytes());
+    hdr.extend_from_slice(&(1u32 << 20).to_le_bytes());
+    s.write_all(&hdr).unwrap();
+    expect_err_reply(&mut s, WireCode::FrameTooLarge);
+    expect_eof(&mut s);
+    ns.stop();
+    server.stop();
+}
+
+#[test]
+fn truncated_frame_is_typed_then_fatal_not_a_hang() {
+    let (ns, server, _h) = boot(
+        vec![("m", Arc::new(OffsetExec { offset: 1 }) as Arc<dyn Executor>)],
+        // short stall limit so the test is quick
+        NetConfig { read_timeout: Duration::from_millis(100), ..NetConfig::default() },
+    );
+    let mut s = raw_socket(&ns);
+    // header promises 64 payload bytes; only 10 ever arrive
+    let mut hdr = Vec::with_capacity(HEADER_LEN + 10);
+    hdr.extend_from_slice(&MAGIC.to_le_bytes());
+    hdr.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+    hdr.push(Opcode::Ping as u8);
+    hdr.push(0);
+    hdr.extend_from_slice(&13u64.to_le_bytes());
+    hdr.extend_from_slice(&64u32.to_le_bytes());
+    hdr.extend_from_slice(&[0u8; 10]);
+    s.write_all(&hdr).unwrap();
+    let t0 = Instant::now();
+    let err = expect_err_reply(&mut s, WireCode::MalformedFrame);
+    assert!(err.message.contains("truncated"), "{err}");
+    assert!(t0.elapsed() < Duration::from_secs(3), "stall must not hang");
+    expect_eof(&mut s);
+    ns.stop();
+    server.stop();
+}
+
+#[test]
+fn checksum_corruption_is_typed_and_the_connection_survives() {
+    let (ns, server, _h) = boot(
+        vec![("m", Arc::new(OffsetExec { offset: 1 }) as Arc<dyn Executor>)],
+        NetConfig::default(),
+    );
+    let mut s = raw_socket(&ns);
+    // ping with a non-empty payload (so the checksum covers something),
+    // trailer flipped
+    let mut bytes = Frame::new(Opcode::Ping, 21, vec![1, 2, 3]).encode();
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0xff;
+    s.write_all(&bytes).unwrap();
+    expect_err_reply(&mut s, WireCode::ChecksumMismatch);
+    // framing stayed in sync: a valid frame on the same connection works
+    // (ping rejects non-empty payloads as BadRequest, so send empty)
+    let ping = Frame::new(Opcode::Ping, 22, Vec::new());
+    s.write_all(&ping.encode()).unwrap();
+    let reply = read_frame(&mut s, MAX_PAYLOAD).unwrap();
+    assert_eq!(reply.opcode, Opcode::ReplyOk);
+    assert_eq!(reply.req_id, 22);
+    ns.stop();
+    server.stop();
+}
+
+#[test]
+fn reply_opcodes_and_garbage_payloads_are_bad_requests() {
+    let (ns, server, _h) = boot(
+        vec![("m", Arc::new(OffsetExec { offset: 1 }) as Arc<dyn Executor>)],
+        NetConfig::default(),
+    );
+    let mut s = raw_socket(&ns);
+    // a reply opcode as a request
+    s.write_all(&Frame::new(Opcode::ReplyOk, 31, Vec::new()).encode()).unwrap();
+    expect_err_reply(&mut s, WireCode::BadRequest);
+    // unknown opcode byte
+    let mut bytes = Frame::new(Opcode::Ping, 32, Vec::new()).encode();
+    bytes[6] = 0x7f;
+    s.write_all(&bytes).unwrap();
+    expect_err_reply(&mut s, WireCode::BadRequest);
+    // a structurally broken infer payload (truncated string)
+    s.write_all(&Frame::new(Opcode::Infer, 33, vec![255, 0, 0, 0]).encode())
+        .unwrap();
+    expect_err_reply(&mut s, WireCode::MalformedFrame);
+    ns.stop();
+    server.stop();
+}
+
+// -- pipelining, idle reaping, graceful drain ---------------------------
+
+#[test]
+fn pipelined_requests_reply_in_order() {
+    let (ns, server, _h) = boot(
+        vec![("m", Arc::new(OffsetExec { offset: 7 }) as Arc<dyn Executor>)],
+        NetConfig::default(),
+    );
+    let mut client = connect(&ns);
+    let inputs: Vec<TensorI> = (0..10).map(|i| qx2(i, i * 10)).collect();
+    let outs = client.infer_pipelined("m", &inputs).unwrap();
+    assert_eq!(outs.len(), 10);
+    for (i, out) in outs.iter().enumerate() {
+        let i = i as i32;
+        assert_eq!(out.data(), &[i + 7, i * 10 + 7], "reply {i} out of order");
+    }
+    ns.stop();
+    server.stop();
+}
+
+#[test]
+fn idle_connections_are_reaped() {
+    let (ns, server, _h) = boot(
+        vec![("m", Arc::new(OffsetExec { offset: 1 }) as Arc<dyn Executor>)],
+        NetConfig { idle_timeout: Duration::from_millis(100), ..NetConfig::default() },
+    );
+    let mut client = connect(&ns);
+    client.ping().unwrap();
+    std::thread::sleep(Duration::from_millis(400));
+    // the server closed the idle connection; the next call fails instead
+    // of hanging
+    assert!(client.ping().is_err());
+    // fresh connections still serve
+    let mut fresh = connect(&ns);
+    fresh.ping().unwrap();
+    ns.stop();
+    server.stop();
+}
+
+#[test]
+fn graceful_drain_completes_the_in_flight_reply() {
+    let (ns, server, _h) = boot(
+        vec![("slow", Arc::new(SlowExec) as Arc<dyn Executor>)],
+        NetConfig::default(),
+    );
+    let addr = ns.local_addr();
+    let worker = std::thread::spawn(move || {
+        let mut client = NemoClient::connect(addr).unwrap();
+        client.infer("slow", &qx2(3, 4)).unwrap()
+    });
+    // let the request reach the handler, then stop the socket layer:
+    // the in-flight request must still complete and reply before the
+    // handler joins.
+    std::thread::sleep(Duration::from_millis(60));
+    ns.stop();
+    let out = worker.join().unwrap();
+    assert_eq!(out.data(), &[3, 4]);
+    server.stop();
+}
