@@ -19,14 +19,15 @@ use nemo::data::SynthDigits;
 use nemo::engine::plan::{IntArena, PackedArena};
 use nemo::engine::{FloatEngine, IntPlan, IntegerEngine};
 use nemo::exec::{ExecInput, Executor, NativeIntExecutor};
+use nemo::graph::int::{IntGraph, IntOp};
 use nemo::graph::Graph;
 use nemo::model::residual_net;
 use nemo::model::synthnet::{SynthNet, EPS_IN};
 use nemo::network::{FakeQuantized, Network};
 use nemo::quant::bn::{BnParams, BnQuant, Thresholds};
-use nemo::quant::quantize_input;
 use nemo::quant::requant::{choose_d, multiplier, Requant};
-use nemo::tensor::{ops, Tensor, TensorI};
+use nemo::quant::{quantize_input, Precision};
+use nemo::tensor::{ops, set_packed, Tensor, TensorI};
 use nemo::transform::{calibrate_percentile, DeployOptions, Deployed};
 use nemo::util::json::{self, Value};
 use nemo::util::rng::Rng;
@@ -56,6 +57,7 @@ fn main() {
                 || a.starts_with("perf")
                 || a.starts_with("plan")
                 || a.starts_with("packed")
+                || a.starts_with("subbyte")
                 || a.starts_with("artifact")
                 || a.starts_with("registry")
                 || a.starts_with("net")
@@ -105,6 +107,9 @@ fn main() {
     }
     if run("packed") {
         packed_vs_i32();
+    }
+    if run("subbyte") {
+        subbyte_bench();
     }
     if run("artifact") {
         artifact_cold_load_and_serve();
@@ -821,6 +826,216 @@ fn packed_vs_i32() {
     std::fs::write("BENCH_packed.json", json::write(&doc))
         .expect("write BENCH_packed.json");
     println!("  wrote BENCH_packed.json");
+}
+
+// ---------------------------------------------------------------------------
+// subbyte: bit-packed few-bit grids — bit-serial / nibble GEMM vs the byte
+// kernel, plus e2e packed plans at Q in {1, 2, 4, 8} (DESIGN.md §Sub-byte
+// packing) — writes BENCH_subbyte.json
+// ---------------------------------------------------------------------------
+
+/// Bit-packed vs one-byte-per-element footprint of every Conv/Linear
+/// weight section in the graph (what the artifact ships under §Sub-byte
+/// packing vs the byte-class baseline).
+fn weight_section_bytes(g: &IntGraph) -> (usize, usize) {
+    let (mut packed, mut byte) = (0usize, 0usize);
+    for node in &g.nodes {
+        let wq = match &node.op {
+            IntOp::ConvInt { wq, .. } | IntOp::LinearInt { wq, .. } => wq,
+            _ => continue,
+        };
+        let d = wq.data();
+        let lo = d.iter().copied().min().unwrap_or(0) as i64;
+        let hi = d.iter().copied().max().unwrap_or(0) as i64;
+        packed += Precision::for_range(lo, hi).storage_bytes(d.len());
+        byte += d.len();
+    }
+    (packed, byte)
+}
+
+fn subbyte_bench() {
+    println!("\n=== subbyte: bit-packed grids — bit-serial/nibble GEMM vs byte kernels ===");
+    let mut rng = Rng::new(4242);
+    let mut results: Vec<Value> = Vec::new();
+
+    // GEMM hot path: Q-bit activations x 2-bit weights. The baseline is
+    // the byte kernel (u8 x i8 -> i32) on identical values; at Q <= 2 the
+    // same GEMM runs bit-serial over AND+popcount bit-planes, at Q = 4 it
+    // runs the nibble-unpacking row-block kernel. Outputs must match the
+    // byte kernel bit for bit.
+    let (m, k, n) = (256usize, 1024usize, 128usize);
+    for q in [1u32, 2, 4, 8] {
+        let hi = (1i64 << q) - 1;
+        let prec = Precision::for_range(0, hi);
+        let a32: Vec<i32> = (0..m * k).map(|_| rng.int(0, hi + 1) as i32).collect();
+        let w32: Vec<i32> = (0..k * n).map(|_| rng.int(-2, 2) as i32).collect();
+        let a8: Vec<u8> = a32.iter().map(|v| *v as u8).collect();
+        let w8: Vec<i8> = w32.iter().map(|v| *v as i8).collect();
+        let mut out = vec![0i32; m * n];
+        let (t_byte, _) = bench(2, 0.5, || {
+            ops::matmul_q_fused_into(&a8, &w8, m, k, n, &|_, v| v, &mut out);
+            std::hint::black_box(&out);
+        });
+
+        let mut out_sub = vec![0i32; m * n];
+        let (kernel, t_sub, act_bytes, w_bytes) = if prec.is_sub_byte() {
+            let mut ap = vec![0u8; prec.storage_bytes(m * k)];
+            for (i, &v) in a32.iter().enumerate() {
+                set_packed(&mut ap, i, prec, v);
+            }
+            if q <= 2 {
+                let planes = ops::BitPlanes::build(&Tensor::from_vec(&[k, n], w32))
+                    .expect("2-bit weights fit bit planes");
+                let (t, _) = bench(2, 0.5, || {
+                    ops::matmul_bitserial_fused_into(
+                        &ap,
+                        prec,
+                        m,
+                        &planes,
+                        &|_, v| v,
+                        &mut out_sub,
+                    );
+                    std::hint::black_box(&out_sub);
+                });
+                ("bitserial", t, ap.len(), planes.bytes())
+            } else {
+                let (t, _) = bench(2, 0.5, || {
+                    ops::matmul_subbyte_fused_into(
+                        &ap,
+                        prec,
+                        &w8,
+                        m,
+                        k,
+                        n,
+                        &|_, v| v,
+                        &mut out_sub,
+                    );
+                    std::hint::black_box(&out_sub);
+                });
+                ("nibble", t, ap.len(), w8.len())
+            }
+        } else {
+            out_sub.copy_from_slice(&out);
+            ("byte", t_byte, a8.len(), w8.len())
+        };
+        assert_eq!(out, out_sub, "sub-byte GEMM diverged from the byte kernel at Q={q}");
+        let flops = 2.0 * (m * k * n) as f64;
+        println!(
+            "  gemm {m}x{k}x{n} Q={q}: byte {} ({:.2} Gop/s)  {kernel} {} ({:.2} Gop/s)  -> {:.2}x  [A {} B -> {} B]",
+            fmt_time(t_byte),
+            flops / t_byte / 1e9,
+            fmt_time(t_sub),
+            flops / t_sub / 1e9,
+            t_byte / t_sub,
+            m * k,
+            act_bytes,
+        );
+        results.push(json::obj(vec![
+            ("workload", Value::Str(format!("gemm_{m}x{k}x{n}"))),
+            ("abits", Value::Int(q as i64)),
+            ("kernel", Value::Str(kernel.into())),
+            ("byte_s", Value::Num(t_byte)),
+            ("sub_s", Value::Num(t_sub)),
+            ("speedup", Value::Num(t_byte / t_sub)),
+            ("act_bytes_byte", Value::Int((m * k) as i64)),
+            ("act_bytes_packed", Value::Int(act_bytes as i64)),
+            ("act_reduction", Value::Num((m * k) as f64 / act_bytes as f64)),
+            ("weight_bytes_byte", Value::Int((k * n) as i64)),
+            ("weight_bytes_packed", Value::Int(w_bytes as i64)),
+        ]));
+    }
+
+    // Deterministic storage ledger: packed bytes per 4096 weights at
+    // each sub-byte class vs the byte classes' 1 B/elem.
+    for p in [Precision::U1, Precision::U2, Precision::U4, Precision::I4] {
+        let elems = 4096usize;
+        let packed = p.storage_bytes(elems);
+        println!(
+            "  storage {}: {packed} B per {elems} elems ({}x vs 1 B/elem)",
+            p.name(),
+            elems / packed
+        );
+        results.push(json::obj(vec![
+            ("workload", Value::Str("weight_storage".into())),
+            ("dtype", Value::Str(p.name().into())),
+            ("elems", Value::Int(elems as i64)),
+            ("bytes_packed", Value::Int(packed as i64)),
+            ("bytes_byte", Value::Int(elems as i64)),
+            ("reduction", Value::Num(elems as f64 / packed as f64)),
+        ]));
+    }
+
+    // End-to-end: synthnet deployed at a Q-bit activation grid (4-bit
+    // weights below Q=8 so the few-bit kernels engage), wide i32 plan vs
+    // the sub-byte packed plan, bit-identical by assertion.
+    let net = SynthNet::init(&mut rng);
+    let batch = 16usize;
+    for q in [1u32, 2, 4, 8] {
+        let wbits = if q < 8 { 4 } else { 8 };
+        let opts = DeployOptions { wbits, abits: q, ..DeployOptions::default() };
+        let dep = match Network::<FakeQuantized>::from_pact_graph(net.to_pact_graph(q))
+            .expect("pact graph")
+            .deploy(opts)
+        {
+            Ok(d) => d.integerize().into_deployed(),
+            Err(e) => {
+                println!("  e2e Q={q}: deploy skipped ({e})");
+                continue;
+            }
+        };
+        let plan = IntPlan::compile(&dep.id).expect("plan");
+        let (x, _) = SynthDigits::eval_set(4200 + q as u64, batch);
+        let qx = quantize_input(&x, EPS_IN);
+        let wide = plan.layout(batch).expect("layout");
+        let packed = plan.packed_layout(batch).expect("packed layout");
+        let mut arena = IntArena::new();
+        let mut parena = PackedArena::new();
+        let (t_wide, _) = bench(2, 0.7, || {
+            std::hint::black_box(plan.execute(&wide, &mut arena, &qx));
+        });
+        let (t_packed, _) = bench(2, 0.7, || {
+            std::hint::black_box(plan.execute_packed(&packed, &mut parena, &qx));
+        });
+        assert_eq!(
+            plan.execute(&wide, &mut arena, &qx),
+            plan.execute_packed(&packed, &mut parena, &qx),
+            "sub-byte packed plan diverged at Q={q}"
+        );
+        let (w_sub, w_byte) = weight_section_bytes(&dep.id);
+        println!(
+            "  e2e Q={q} (w{wbits}): i32 {} ({:>6.0} img/s)  packed {} ({:>6.0} img/s)  -> {:.2}x  [{} bit-serial steps, arena {} -> {} B, weights {} -> {} B]",
+            fmt_time(t_wide),
+            batch as f64 / t_wide,
+            fmt_time(t_packed),
+            batch as f64 / t_packed,
+            t_wide / t_packed,
+            plan.bitserial_steps(),
+            wide.arena_bytes(),
+            packed.arena_bytes(),
+            w_byte,
+            w_sub,
+        );
+        results.push(json::obj(vec![
+            ("workload", Value::Str("synthnet_id_e2e".into())),
+            ("batch", Value::Int(batch as i64)),
+            ("abits", Value::Int(q as i64)),
+            ("wbits", Value::Int(wbits as i64)),
+            ("bitserial_steps", Value::Int(plan.bitserial_steps() as i64)),
+            ("i32_s", Value::Num(t_wide)),
+            ("packed_s", Value::Num(t_packed)),
+            ("speedup", Value::Num(t_wide / t_packed)),
+            ("i32_arena_bytes", Value::Int(wide.arena_bytes() as i64)),
+            ("packed_arena_bytes", Value::Int(packed.arena_bytes() as i64)),
+            ("weight_bytes_byte", Value::Int(w_byte as i64)),
+            ("weight_bytes_packed", Value::Int(w_sub as i64)),
+            ("weight_reduction", Value::Num(w_byte as f64 / w_sub as f64)),
+        ]));
+    }
+
+    let doc = json::obj(vec![("subbyte_bench", Value::Arr(results))]);
+    std::fs::write("BENCH_subbyte.json", json::write(&doc))
+        .expect("write BENCH_subbyte.json");
+    println!("  wrote BENCH_subbyte.json");
 }
 
 // ---------------------------------------------------------------------------

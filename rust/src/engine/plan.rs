@@ -33,7 +33,7 @@ use crate::quant::bn::{BnQuant, Thresholds};
 use crate::quant::requant::Requant;
 use crate::quant::{Precision, QuantSpec};
 use crate::tensor::ops::PackedElem;
-use crate::tensor::{ops, QTensor, Tensor, TensorF, TensorI};
+use crate::tensor::{get_packed, ops, set_packed, QTensor, Tensor, TensorF, TensorI};
 
 pub type StepId = usize;
 
@@ -103,6 +103,13 @@ pub enum PackedBuf {
     U8(Vec<u8>),
     I8(Vec<i8>),
     I32(Vec<i32>),
+    /// Bit-packed sub-byte storage: `len` logical elements at `prec`
+    /// (2-8 per byte, LSB-first — see tensor/mod.rs `get_packed`).
+    Sub {
+        prec: Precision,
+        len: usize,
+        data: Vec<u8>,
+    },
 }
 
 impl Default for PackedBuf {
@@ -117,6 +124,11 @@ impl PackedBuf {
             Precision::U8 => PackedBuf::U8(vec![0; len]),
             Precision::I8 => PackedBuf::I8(vec![0; len]),
             Precision::I32 => PackedBuf::I32(vec![0; len]),
+            sub => PackedBuf::Sub {
+                prec: sub,
+                len,
+                data: vec![0; sub.storage_bytes(len)],
+            },
         }
     }
 
@@ -125,6 +137,7 @@ impl PackedBuf {
             PackedBuf::U8(_) => Precision::U8,
             PackedBuf::I8(_) => Precision::I8,
             PackedBuf::I32(_) => Precision::I32,
+            PackedBuf::Sub { prec, .. } => *prec,
         }
     }
 
@@ -133,11 +146,33 @@ impl PackedBuf {
             PackedBuf::U8(v) => v.len(),
             PackedBuf::I8(v) => v.len(),
             PackedBuf::I32(v) => v.len(),
+            PackedBuf::Sub { len, .. } => *len,
         }
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Read element `i` widened to i32 (the sub-byte dispatch slow path).
+    fn get(&self, i: usize) -> i32 {
+        match self {
+            PackedBuf::U8(v) => v[i] as i32,
+            PackedBuf::I8(v) => v[i] as i32,
+            PackedBuf::I32(v) => v[i],
+            PackedBuf::Sub { prec, data, .. } => get_packed(data, i, *prec),
+        }
+    }
+
+    /// Write element `i`, narrowing into the stored precision (debug-
+    /// checked, like [`PackedElem::from_i32`]).
+    fn set(&mut self, i: usize, v: i32) {
+        match self {
+            PackedBuf::U8(b) => b[i] = u8::from_i32(v),
+            PackedBuf::I8(b) => b[i] = i8::from_i32(v),
+            PackedBuf::I32(b) => b[i] = v,
+            PackedBuf::Sub { prec, data, .. } => set_packed(data, i, *prec, v),
+        }
     }
 
     /// Widen the first `n` elements to i32 (traces, final output).
@@ -146,6 +181,9 @@ impl PackedBuf {
             PackedBuf::U8(v) => v[..n].iter().map(|x| *x as i32).collect(),
             PackedBuf::I8(v) => v[..n].iter().map(|x| *x as i32).collect(),
             PackedBuf::I32(v) => v[..n].to_vec(),
+            PackedBuf::Sub { prec, data, .. } => {
+                (0..n).map(|i| get_packed(data, i, *prec)).collect()
+            }
         }
     }
 
@@ -165,6 +203,12 @@ impl PackedBuf {
             PackedBuf::I32(v) => {
                 if v.len() < len {
                     v.resize(len, 0);
+                }
+            }
+            PackedBuf::Sub { prec, len: cur, data } => {
+                if *cur < len {
+                    *cur = len;
+                    data.resize(prec.storage_bytes(len), 0);
                 }
             }
         }
@@ -201,11 +245,12 @@ impl PackedArena {
         }
     }
 
-    /// Total bytes currently held (diagnostics).
+    /// Total bytes currently held (diagnostics). Sub-byte slots count
+    /// their bit-packed size: `ceil(len * bits / 8)`.
     pub fn bytes(&self) -> usize {
         self.bufs
             .iter()
-            .map(|b| b.len() * b.precision().bytes())
+            .map(|b| b.precision().storage_bytes(b.len()))
             .sum()
     }
 }
@@ -234,13 +279,14 @@ impl PlanLayout {
         self.slot_lens.iter().sum()
     }
 
-    /// Total arena bytes under the precision byte-sizing rule — the
-    /// number the packed path shrinks.
+    /// Total arena bytes under the precision bit-sizing rule — the
+    /// number the packed path shrinks (sub-byte slots store 2-8
+    /// elements per byte).
     pub fn arena_bytes(&self) -> usize {
         self.slot_lens
             .iter()
             .zip(&self.slot_prec)
-            .map(|(l, p)| l * p.bytes())
+            .map(|(&l, p)| p.storage_bytes(l))
             .sum()
     }
 
@@ -529,6 +575,12 @@ pub struct IntPlan {
     sample_shapes: Vec<Vec<usize>>,
     /// Per-step output storage precision (the anchor node's stamp).
     step_prec: Vec<Precision>,
+    /// Per-step weight bit-plane decomposition for the bit-serial
+    /// AND+popcount GEMM — `Some` only for GEMM steps whose packed
+    /// activations are 1- or 2-bit and whose weights fit a few-bit
+    /// signed grid (pure kernel policy; bit-identity never depends on
+    /// which GEMM path runs).
+    bit_planes: Vec<Option<ops::BitPlanes>>,
     input_shape: Vec<usize>,
     input_prec: Precision,
     fused_away: usize,
@@ -657,11 +709,34 @@ impl IntPlan {
         }
         let output = node_step[g.output]
             .ok_or_else(|| PlanError::Invalid("output node unmapped".into()))?;
+        // Pre-decompose weights into bit-planes where the bit-serial
+        // GEMM applies: 1-/2-bit activations (so at most 2 activation
+        // planes) against weights on a <= 4-bit signed grid. Everything
+        // else keeps the MAC kernels.
+        let bit_planes: Vec<Option<ops::BitPlanes>> = steps
+            .iter()
+            .map(|st| {
+                let wq = match &st.op {
+                    IntStepOp::Conv { wq, .. } | IntStepOp::Linear { wq, .. } => wq,
+                    _ => return None,
+                };
+                if !matches!(step_prec[st.inputs[0]], Precision::U1 | Precision::U2) {
+                    return None;
+                }
+                let wide = match wq {
+                    QTensor::I8(w) => w.map(|v| v as i32),
+                    QTensor::I32(w) => w.clone(),
+                    _ => return None,
+                };
+                ops::BitPlanes::build(&wide).filter(|p| p.bits() <= 4)
+            })
+            .collect();
         Ok(IntPlan {
             steps,
             output,
             sample_shapes,
             step_prec,
+            bit_planes,
             input_shape,
             input_prec: node_prec[0],
             fused_away,
@@ -680,6 +755,12 @@ impl IntPlan {
     /// Per-step output storage precision (anchor node stamps).
     pub fn step_precisions(&self) -> &[Precision] {
         &self.step_prec
+    }
+
+    /// GEMM steps routed to the bit-serial AND+popcount kernel on the
+    /// packed path (diagnostics / bench).
+    pub fn bitserial_steps(&self) -> usize {
+        self.bit_planes.iter().filter(|p| p.is_some()).count()
     }
 
     /// Whether any step (or the input) packs below full i32 width — if
@@ -1078,7 +1159,8 @@ impl IntPlan {
                     let mut rows = std::mem::take(&mut arena.bufs[rows_slot]);
                     {
                         let epi_fn = int_epi_fn(bias_q.as_deref(), epi);
-                        gemm_q(&cols, wq, m, kdim, co, &epi_fn, &mut rows);
+                        let bp = self.bit_planes[sid].as_ref();
+                        gemm_q(&cols, wq, bp, m, kdim, co, &epi_fn, &mut rows);
                     }
                     let mut out = std::mem::take(&mut arena.bufs[out_slot]);
                     scatter_q(&rows, &mut out, b, co, out_shape[2], out_shape[3]);
@@ -1095,7 +1177,8 @@ impl IntPlan {
                     {
                         let xin = &arena.bufs[layout.out_slot[st.inputs[0]]];
                         let epi_fn = int_epi_fn(bias_q.as_deref(), epi);
-                        gemm_q(xin, wq, bsz, fi, fo, &epi_fn, &mut out);
+                        let bp = self.bit_planes[sid].as_ref();
+                        gemm_q(xin, wq, bp, bsz, fi, fo, &epi_fn, &mut out);
                     }
                     arena.bufs[out_slot] = out;
                 }
@@ -1223,6 +1306,11 @@ fn narrow_q(src: &[i32], dst: &mut PackedBuf, n: usize) {
             }
         }
         PackedBuf::I32(v) => v[..n].copy_from_slice(&src[..n]),
+        PackedBuf::Sub { prec, data, .. } => {
+            for (i, &x) in src[..n].iter().enumerate() {
+                set_packed(data, i, *prec, x);
+            }
+        }
     }
 }
 
@@ -1240,6 +1328,14 @@ fn map_q(xin: &PackedBuf, out: &mut PackedBuf, n: usize, f: impl Fn(usize, i32) 
             *o = O::from_i32(f(i, x.to_i32()));
         }
     }
+    if matches!(xin, PackedBuf::Sub { .. }) || matches!(out, PackedBuf::Sub { .. }) {
+        // Sub-byte on either side: element-at-a-time through the bit
+        // accessors (same widen-apply-narrow arithmetic).
+        for i in 0..n {
+            out.set(i, f(i, xin.get(i)));
+        }
+        return;
+    }
     match (xin, out) {
         (PackedBuf::U8(x), PackedBuf::U8(o)) => inner(x, o, n, f),
         (PackedBuf::U8(x), PackedBuf::I8(o)) => inner(x, o, n, f),
@@ -1250,6 +1346,9 @@ fn map_q(xin: &PackedBuf, out: &mut PackedBuf, n: usize, f: impl Fn(usize, i32) 
         (PackedBuf::I32(x), PackedBuf::U8(o)) => inner(x, o, n, f),
         (PackedBuf::I32(x), PackedBuf::I8(o)) => inner(x, o, n, f),
         (PackedBuf::I32(x), PackedBuf::I32(o)) => inner(x, o, n, f),
+        (PackedBuf::Sub { .. }, _) | (_, PackedBuf::Sub { .. }) => {
+            unreachable!("sub-byte map handled above")
+        }
     }
 }
 
@@ -1261,6 +1360,13 @@ fn copy_q(xin: &PackedBuf, out: &mut PackedBuf, n: usize) {
         (PackedBuf::U8(x), PackedBuf::U8(o)) => o[..n].copy_from_slice(&x[..n]),
         (PackedBuf::I8(x), PackedBuf::I8(o)) => o[..n].copy_from_slice(&x[..n]),
         (PackedBuf::I32(x), PackedBuf::I32(o)) => o[..n].copy_from_slice(&x[..n]),
+        (
+            PackedBuf::Sub { prec: px, data: x, .. },
+            PackedBuf::Sub { prec: po, data: o, .. },
+        ) if px == po => {
+            let nb = px.storage_bytes(n);
+            o[..nb].copy_from_slice(&x[..nb]);
+        }
         _ => unreachable!("flatten precision mismatch (inferred stamps inherit)"),
     }
 }
@@ -1281,6 +1387,11 @@ fn for_each_q(x: &PackedBuf, n: usize, mut f: impl FnMut(usize, i32)) {
         PackedBuf::I32(v) => {
             for (i, &x) in v[..n].iter().enumerate() {
                 f(i, x);
+            }
+        }
+        PackedBuf::Sub { prec, data, .. } => {
+            for i in 0..n {
+                f(i, get_packed(data, i, *prec));
             }
         }
     }
@@ -1311,6 +1422,12 @@ fn im2col_q(
         (PackedBuf::I32(x), PackedBuf::I32(o)) => {
             ops::im2col_into(x, b, c, h, w, kh, kw, stride, pad, o);
         }
+        (
+            PackedBuf::Sub { prec: px, data: x, .. },
+            PackedBuf::Sub { prec: po, data: o, .. },
+        ) if px == po => {
+            ops::im2col_packed_into(x, *px, b, c, h, w, kh, kw, stride, pad, o);
+        }
         _ => unreachable!("im2col precision mismatch (layout gives cols the input precision)"),
     }
 }
@@ -1321,6 +1438,10 @@ fn scatter_q(rows: &PackedBuf, out: &mut PackedBuf, b: usize, c: usize, oh: usiz
         (PackedBuf::U8(r), PackedBuf::U8(o)) => ops::rows_to_nchw_into(r, b, c, oh, ow, o),
         (PackedBuf::I8(r), PackedBuf::I8(o)) => ops::rows_to_nchw_into(r, b, c, oh, ow, o),
         (PackedBuf::I32(r), PackedBuf::I32(o)) => ops::rows_to_nchw_into(r, b, c, oh, ow, o),
+        (
+            PackedBuf::Sub { prec: pr, data: r, .. },
+            PackedBuf::Sub { prec: po, data: o, .. },
+        ) if pr == po => ops::rows_to_nchw_packed_into(r, *pr, b, c, oh, ow, o),
         _ => unreachable!("scatter precision mismatch (layout gives rows the output precision)"),
     }
 }
@@ -1340,6 +1461,10 @@ fn maxpool_q(
         (PackedBuf::U8(x), PackedBuf::U8(o)) => ops::maxpool_into(x, b, c, h, w, k, o),
         (PackedBuf::I8(x), PackedBuf::I8(o)) => ops::maxpool_into(x, b, c, h, w, k, o),
         (PackedBuf::I32(x), PackedBuf::I32(o)) => ops::maxpool_into(x, b, c, h, w, k, o),
+        (
+            PackedBuf::Sub { prec: px, data: x, .. },
+            PackedBuf::Sub { prec: po, data: o, .. },
+        ) if px == po => ops::maxpool_packed_into(x, *px, b, c, h, w, k, o),
         _ => unreachable!("maxpool precision mismatch (inferred stamps inherit)"),
     }
 }
@@ -1360,6 +1485,10 @@ fn avgpool_q(
         (PackedBuf::U8(x), PackedBuf::U8(o)) => ops::avgpool_q_into(x, b, c, h, w, k, d, o),
         (PackedBuf::I8(x), PackedBuf::I8(o)) => ops::avgpool_q_into(x, b, c, h, w, k, d, o),
         (PackedBuf::I32(x), PackedBuf::I32(o)) => ops::avgpool_q_into(x, b, c, h, w, k, d, o),
+        (
+            PackedBuf::Sub { prec: px, data: x, .. },
+            PackedBuf::Sub { prec: po, data: o, .. },
+        ) if px == po => ops::avgpool_packed_into(x, *px, b, c, h, w, k, d, o),
         _ => unreachable!("avgpool precision mismatch (inferred stamps inherit)"),
     }
 }
@@ -1382,16 +1511,26 @@ fn gemm_wide<F>(
     match wq {
         QTensor::I8(w) => ops::matmul_q_fused_into(ad, w.data(), m, k, n, epi, out),
         QTensor::I32(w) => ops::matmul_i32_fused_into(ad, w.data(), m, k, n, epi, out),
-        QTensor::U8(_) => unreachable!("weights pack to i8 or stay i32"),
+        QTensor::U8(_) | QTensor::Packed(_) => {
+            unreachable!("weights pack to i8 or stay i32")
+        }
     }
 }
 
 /// Packed GEMM dispatch: input buffer precision x weight storage (i8 or
 /// i32, see [`pack_weights`]) x output precision, all routed to the
-/// single generic [`ops::matmul_q_fused_into`] kernel.
+/// generic MAC kernel [`ops::matmul_q_fused_into`] — except sub-byte
+/// activations, which take the bit-serial AND+popcount kernel when the
+/// plan pre-built weight [`ops::BitPlanes`] and the nibble-unpack
+/// row-block kernel otherwise. Sub-byte *outputs* go through a transient
+/// i32 row buffer and pack afterwards (packed rows share bytes across
+/// row boundaries, so threaded row blocks cannot write bytes
+/// independently).
+#[allow(clippy::too_many_arguments)]
 fn gemm_q<F>(
     xin: &PackedBuf,
     wq: &QTensor,
+    bp: Option<&ops::BitPlanes>,
     m: usize,
     k: usize,
     n: usize,
@@ -1401,9 +1540,16 @@ fn gemm_q<F>(
     F: Fn(usize, i32) -> i32 + Sync,
 {
     match out {
-        PackedBuf::U8(o) => gemm_q_in(xin, wq, m, k, n, epi, o),
-        PackedBuf::I8(o) => gemm_q_in(xin, wq, m, k, n, epi, o),
-        PackedBuf::I32(o) => gemm_q_in(xin, wq, m, k, n, epi, o),
+        PackedBuf::U8(o) => gemm_q_in(xin, wq, bp, m, k, n, epi, o),
+        PackedBuf::I8(o) => gemm_q_in(xin, wq, bp, m, k, n, epi, o),
+        PackedBuf::I32(o) => gemm_q_in(xin, wq, bp, m, k, n, epi, o),
+        PackedBuf::Sub { prec, data, .. } => {
+            let mut wide = vec![0i32; m * n];
+            gemm_q_in(xin, wq, bp, m, k, n, epi, &mut wide);
+            for (i, &v) in wide.iter().enumerate() {
+                set_packed(data, i, *prec, v);
+            }
+        }
     }
 }
 
@@ -1411,6 +1557,7 @@ fn gemm_q<F>(
 fn gemm_q_in<O, F>(
     xin: &PackedBuf,
     wq: &QTensor,
+    bp: Option<&ops::BitPlanes>,
     m: usize,
     k: usize,
     n: usize,
@@ -1439,7 +1586,41 @@ fn gemm_q_in<O, F>(
         (PackedBuf::I32(x), QTensor::I32(w)) => {
             ops::matmul_q_fused_into(&x[..m * k], w.data(), m, k, n, epi, out)
         }
-        (_, QTensor::U8(_)) => unreachable!("weights pack to i8 or stay i32"),
+        (PackedBuf::Sub { prec, data, .. }, _) => {
+            if let Some(planes) = bp {
+                debug_assert_eq!((planes.k(), planes.n()), (k, n));
+                ops::matmul_bitserial_fused_into(data, *prec, m, planes, epi, out);
+                return;
+            }
+            match wq {
+                QTensor::I8(w) => ops::matmul_subbyte_fused_into(
+                    data,
+                    *prec,
+                    w.data(),
+                    m,
+                    k,
+                    n,
+                    epi,
+                    out,
+                ),
+                QTensor::I32(w) => ops::matmul_subbyte_fused_into(
+                    data,
+                    *prec,
+                    w.data(),
+                    m,
+                    k,
+                    n,
+                    epi,
+                    out,
+                ),
+                QTensor::U8(_) | QTensor::Packed(_) => {
+                    unreachable!("weights pack to i8 or stay i32")
+                }
+            }
+        }
+        (_, QTensor::U8(_) | QTensor::Packed(_)) => {
+            unreachable!("weights pack to i8 or stay i32")
+        }
     }
 }
 
@@ -2077,6 +2258,98 @@ mod tests {
         let interp = crate::engine::IntegerEngine::new().run_traced(&g, &qx);
         for (node, t) in plan.execute_packed_traced(&layout, &mut arena, &qx) {
             assert_eq!(t, interp[node], "packed step anchored at node {node}");
+        }
+    }
+
+    fn subbyte_conv_graph() -> IntGraph {
+        // 2-bit input grid, ternary weights, 2-bit requant output: both
+        // steps stamp U2 and the conv GEMM takes the bit-serial path.
+        let mut g = IntGraph::default();
+        let spec = QuantSpec { eps: 1.0 / 3.0, lo: 0, hi: 3 };
+        let x = g.push("in", IntOp::Input { shape: vec![1, 4, 4], spec }, &[]);
+        let wq = Tensor::from_vec(&[9, 2], (0..18).map(|i| (i % 3) as i32 - 1).collect());
+        let c = g.push(
+            "conv",
+            IntOp::ConvInt {
+                wq,
+                bias_q: Some(vec![1, -1]),
+                cin: 1,
+                kh: 3,
+                kw: 3,
+                stride: 1,
+                pad: 1,
+            },
+            &[x],
+        );
+        let rq = Requant { m: 3, d: 4, lo: 0, hi: 3 };
+        g.push("act", IntOp::RequantAct { rq }, &[c]);
+        g
+    }
+
+    #[test]
+    fn subbyte_packed_execution_matches_interpreter() {
+        let g = subbyte_conv_graph();
+        let plan = IntPlan::compile(&g).unwrap();
+        assert_eq!(plan.input_precision(), Precision::U2);
+        assert_eq!(plan.step_precisions(), &[Precision::U2, Precision::U2]);
+        assert_eq!(plan.bitserial_steps(), 1);
+        let layout = plan.packed_layout(2).unwrap();
+        let mut arena = PackedArena::new();
+        let qx = Tensor::from_vec(&[2, 1, 4, 4], (0..32).map(|i| i % 4).collect());
+        let want = crate::engine::IntegerEngine::new().run_interpreted(&g, &qx);
+        for round in 0..2 {
+            let got = plan.execute_packed(&layout, &mut arena, &qx);
+            assert_eq!(got, want, "round {round}");
+        }
+        // Every slot is 2-bit: the packed arena is >= 4x smaller than the
+        // full-width one.
+        let wide = plan.layout(2).unwrap();
+        assert!(
+            layout.arena_bytes() * 4 <= wide.arena_bytes(),
+            "packed {} B vs i32 {} B",
+            layout.arena_bytes(),
+            wide.arena_bytes()
+        );
+    }
+
+    #[test]
+    fn subbyte_traced_matches_interpreter_nodes() {
+        let g = subbyte_conv_graph();
+        let plan = IntPlan::compile(&g).unwrap();
+        let layout = plan.packed_layout(1).unwrap();
+        let mut arena = PackedArena::new();
+        let qx = Tensor::from_vec(&[1, 1, 4, 4], (0..16).map(|i| i * 3 % 4).collect());
+        let interp = crate::engine::IntegerEngine::new().run_traced(&g, &qx);
+        for (node, t) in plan.execute_packed_traced(&layout, &mut arena, &qx) {
+            assert_eq!(t, interp[node], "sub-byte step anchored at node {node}");
+        }
+    }
+
+    #[test]
+    fn nibble_linear_matches_interpreter() {
+        // 4-bit activations keep the MAC path (no bit planes by policy)
+        // but stream nibble-packed buffers end to end.
+        let mut g = IntGraph::default();
+        let spec = QuantSpec { eps: 1.0 / 15.0, lo: 0, hi: 15 };
+        let x = g.push("in", IntOp::Input { shape: vec![6], spec }, &[]);
+        let wq = Tensor::from_vec(&[6, 3], (0..18).map(|i| (i % 11) as i32 - 5).collect());
+        let fc = g.push(
+            "fc",
+            IntOp::LinearInt { wq, bias_q: Some(vec![4, 0, -4]) },
+            &[x],
+        );
+        let rq = Requant { m: 5, d: 6, lo: 0, hi: 15 };
+        g.push("act", IntOp::RequantAct { rq }, &[fc]);
+        let plan = IntPlan::compile(&g).unwrap();
+        assert_eq!(plan.step_precisions(), &[Precision::U4, Precision::U4]);
+        assert_eq!(plan.bitserial_steps(), 0);
+        let layout = plan.packed_layout(3).unwrap();
+        let mut arena = PackedArena::new();
+        let qx = Tensor::from_vec(&[3, 6], (0..18).map(|i| i % 16).collect());
+        let want = crate::engine::IntegerEngine::new().run_interpreted(&g, &qx);
+        for round in 0..2 {
+            let got = plan.execute_packed(&layout, &mut arena, &qx);
+            assert_eq!(got, want, "round {round}");
         }
     }
 

@@ -18,9 +18,11 @@
 //! * a FNV-1a 64 checksum over the canonical JSON of the `model` subtree
 //!   detects corruption and hand edits;
 //! * weight payloads are stored at their packed precision (`u8`/`i8`
-//!   payloads for sub-word grids, `i32` for wide) and re-narrowed through
-//!   [`QTensor::narrow_from`] on load, so an out-of-range payload value
-//!   fails loudly;
+//!   payloads for sub-word grids, hex-encoded bit-packed payloads for
+//!   the sub-byte `u1`/`u2`/`u4`/`i4` grids at 2–8 weights per byte,
+//!   `i32` for wide) and re-narrowed through [`QTensor::narrow_from`]
+//!   (or [`PackedTensor::from_bytes`]) on load, so an out-of-range or
+//!   malformed payload fails loudly;
 //! * every node's stamped [`Precision`] is re-proved by
 //!   [`infer_precision`] after reconstruction — a tampered stamp cannot
 //!   reach the packed kernels.
@@ -34,14 +36,23 @@ use crate::network::StageMeta;
 use crate::quant::bn::{BnQuant, Thresholds};
 use crate::quant::requant::Requant;
 use crate::quant::{Precision, QuantSpec};
-use crate::tensor::{QTensor, Tensor, TensorI};
+use crate::tensor::{PackedTensor, QTensor, Tensor, TensorI};
 use crate::transform::{Deployed, LayerQuant};
 use crate::util::json::{self, JsonError, Value};
 
 /// Magic format tag of a native deployment artifact.
 pub const FORMAT: &str = "nemo-deployed-model";
-/// Schema version this build writes and reads.
-pub const VERSION: i64 = 1;
+/// Schema version this build writes. v2 added bit-packed sub-byte
+/// weight payloads (`u1`/`u2`/`u4`/`i4` dtypes with a hex `packed`
+/// field instead of the `data` int array).
+pub const VERSION: i64 = 2;
+/// Oldest schema version this build still reads. v1 documents decode
+/// unchanged; sub-byte dtypes inside one are rejected with a typed
+/// [`ArtifactError::DtypeVersion`] — a v1 writer cannot have produced
+/// them, so the file is forged or spliced, not merely old.
+pub const MIN_VERSION: i64 = 1;
+/// First schema version whose readers understand sub-byte dtypes.
+const SUBBYTE_VERSION: i64 = 2;
 
 #[derive(Debug, thiserror::Error)]
 pub enum ArtifactError {
@@ -56,9 +67,15 @@ pub enum ArtifactError {
     #[error("not a NEMO deployment artifact: expected format '{FORMAT}', found '{found}'")]
     Format { found: String },
     #[error(
-        "unsupported artifact format version {found} (this build reads version {VERSION})"
+        "unsupported artifact format version {found} (this build reads \
+         versions {MIN_VERSION}..={VERSION})"
     )]
     Version { found: i64 },
+    #[error(
+        "dtype '{dtype}' requires artifact format version {needs}, but this \
+         document declares version {found} — the file is forged or spliced"
+    )]
+    DtypeVersion { dtype: String, needs: i64, found: i64 },
     #[error(
         "artifact checksum mismatch: stored {stored}, computed {computed} — \
          the file is corrupted or was edited by hand"
@@ -223,7 +240,7 @@ impl DeployedArtifact {
             return Err(ArtifactError::Format { found });
         }
         let version = v.get("version")?.as_i64()?;
-        if version != VERSION {
+        if !(MIN_VERSION..=VERSION).contains(&version) {
             return Err(ArtifactError::Version { found: version });
         }
         let stored = v.get("checksum")?.as_str()?.to_string();
@@ -232,7 +249,7 @@ impl DeployedArtifact {
         if stored != computed {
             return Err(ArtifactError::Checksum { stored, computed });
         }
-        decode_model(model)
+        decode_model(model, version)
     }
 }
 
@@ -327,18 +344,49 @@ fn requant_value(rq: &Requant) -> Value {
     ])
 }
 
+/// Lowercase hex of a packed byte payload (the JSON-safe carrier for
+/// bit-packed weight sections — 2 characters per byte, so a 4-bit grid
+/// still lands at 1 character per weight vs ~4 for the int array form).
+fn hex_of(bytes: &[u8]) -> String {
+    bytes.iter().map(|b| format!("{b:02x}")).collect()
+}
+
+fn bytes_of_hex(s: &str, what: &str) -> Result<Vec<u8>, ArtifactError> {
+    if s.len() % 2 != 0 || !s.bytes().all(|b| b.is_ascii_hexdigit()) {
+        return Err(model_err(format!("{what}: malformed hex payload")));
+    }
+    Ok(s.as_bytes()
+        .chunks_exact(2)
+        .map(|c| {
+            u8::from_str_radix(std::str::from_utf8(c).unwrap(), 16).unwrap()
+        })
+        .collect())
+}
+
 /// Weight payload at its packed precision: the tightest storage class
 /// containing the data range, tagged so the loader re-narrows (and
-/// thereby range-checks) the payload.
+/// thereby range-checks) the payload. Sub-byte grids (format v2) ship a
+/// hex-encoded bit-packed `packed` field at 2–8 weights per byte;
+/// byte-and-wider grids keep the v1 `data` int array.
 fn weight_value(wq: &TensorI) -> Value {
     let lo = wq.data().iter().copied().min().unwrap_or(0) as i64;
     let hi = wq.data().iter().copied().max().unwrap_or(0) as i64;
     let p = Precision::for_range(lo, hi);
-    json::obj(vec![
+    let mut fields = vec![
         ("dtype", Value::Str(p.name().to_string())),
         ("shape", usize_arr_value(wq.shape())),
-        ("data", i32_arr_value(wq.data())),
-    ])
+    ];
+    if p.is_sub_byte() {
+        let q = QTensor::narrow_from(wq, p).expect("range-derived precision");
+        let packed = match &q {
+            QTensor::Packed(t) => hex_of(t.bytes()),
+            _ => unreachable!("sub-byte precisions narrow to packed payloads"),
+        };
+        fields.push(("packed", Value::Str(packed)));
+    } else {
+        fields.push(("data", i32_arr_value(wq.data())));
+    }
+    json::obj(fields)
 }
 
 fn node_value(n: &crate::graph::int::IntNode) -> Value {
@@ -488,15 +536,48 @@ fn decode_requant(v: &Value, what: &str) -> Result<Requant, ArtifactError> {
     Ok(rq)
 }
 
-/// Decode a weight payload: dtype-tagged flat int array + shape. The
-/// payload is narrowed through [`QTensor::narrow_from`] (loud on any
-/// value outside the declared precision) and widened back to the i32
-/// weight tensor the graph ops carry.
-fn decode_weights(v: &Value, what: &str) -> Result<TensorI, ArtifactError> {
+/// Reject a sub-byte dtype in a document too old to carry one: v1
+/// writers could not produce these names, so this is a typed forgery
+/// error, not a parse failure.
+fn gate_subbyte(
+    p: Precision,
+    name: &str,
+    version: i64,
+) -> Result<(), ArtifactError> {
+    if p.is_sub_byte() && version < SUBBYTE_VERSION {
+        return Err(ArtifactError::DtypeVersion {
+            dtype: name.to_string(),
+            needs: SUBBYTE_VERSION,
+            found: version,
+        });
+    }
+    Ok(())
+}
+
+/// Decode a weight payload: dtype-tagged flat int array + shape (or a
+/// hex bit-packed payload for sub-byte dtypes, format v2). The payload
+/// is narrowed through [`QTensor::narrow_from`] (loud on any value
+/// outside the declared precision) or validated by
+/// [`PackedTensor::from_bytes`] (loud on wrong length / dirty pad
+/// bits), then widened back to the i32 weight tensor the graph ops
+/// carry.
+fn decode_weights(
+    v: &Value,
+    what: &str,
+    version: i64,
+) -> Result<TensorI, ArtifactError> {
     let dtype = v.get("dtype")?.as_str()?;
     let p = Precision::from_name(dtype)
         .ok_or_else(|| model_err(format!("{what}: unknown weight dtype '{dtype}'")))?;
+    gate_subbyte(p, dtype, version)?;
     let shape = usize_arr(v.get("shape")?, what)?;
+    if p.is_sub_byte() {
+        let hex = v.get("packed")?.as_str()?;
+        let data = bytes_of_hex(hex, what)?;
+        let t = PackedTensor::from_bytes(&shape, p, data)
+            .map_err(|e| model_err(format!("{what}: weight payload {e}")))?;
+        return Ok(QTensor::Packed(t).widen());
+    }
     let data = i32_arr(v.get("data")?, what)?;
     let n: usize = shape.iter().product();
     if n != data.len() {
@@ -511,7 +592,12 @@ fn decode_weights(v: &Value, what: &str) -> Result<TensorI, ArtifactError> {
     Ok(q.widen())
 }
 
-fn decode_op(op: &str, p: &Value, what: &str) -> Result<IntOp, ArtifactError> {
+fn decode_op(
+    op: &str,
+    p: &Value,
+    what: &str,
+    version: i64,
+) -> Result<IntOp, ArtifactError> {
     Ok(match op {
         "Input" => {
             let spec = QuantSpec {
@@ -534,7 +620,7 @@ fn decode_op(op: &str, p: &Value, what: &str) -> Result<IntOp, ArtifactError> {
             IntOp::Input { shape: usize_arr(p.get("shape")?, what)?, spec }
         }
         "ConvInt" => IntOp::ConvInt {
-            wq: decode_weights(p.get("w")?, what)?,
+            wq: decode_weights(p.get("w")?, what, version)?,
             bias_q: p.get_opt("bias").map(i64_arr).transpose()?,
             cin: as_usize(p.get("cin")?, what)?,
             kh: as_usize(p.get("kh")?, what)?,
@@ -543,7 +629,7 @@ fn decode_op(op: &str, p: &Value, what: &str) -> Result<IntOp, ArtifactError> {
             pad: as_usize(p.get("pad")?, what)?,
         },
         "LinearInt" => IntOp::LinearInt {
-            wq: decode_weights(p.get("w")?, what)?,
+            wq: decode_weights(p.get("w")?, what, version)?,
             bias_q: p.get_opt("bias").map(i64_arr).transpose()?,
         },
         "IntBn" => {
@@ -607,7 +693,10 @@ fn decode_op(op: &str, p: &Value, what: &str) -> Result<IntOp, ArtifactError> {
     })
 }
 
-fn decode_model(model: &Value) -> Result<DeployedArtifact, ArtifactError> {
+fn decode_model(
+    model: &Value,
+    version: i64,
+) -> Result<DeployedArtifact, ArtifactError> {
     let graph_v = model.get("graph")?;
     let nodes_v = graph_v.get("nodes")?.as_arr()?;
     if nodes_v.is_empty() {
@@ -627,11 +716,12 @@ fn decode_model(model: &Value) -> Result<DeployedArtifact, ArtifactError> {
             )));
         }
         let op_name = nv.get("op")?.as_str()?;
-        let op = decode_op(op_name, nv.get("params")?, &what)?;
+        let op = decode_op(op_name, nv.get("params")?, &what, version)?;
         let p_name = nv.get("precision")?.as_str()?;
         let p = Precision::from_name(p_name).ok_or_else(|| {
             model_err(format!("{what}: unknown precision '{p_name}'"))
         })?;
+        gate_subbyte(p, p_name, version)?;
         graph.push(&name, op, &inputs);
         stamps.push(p);
     }
@@ -847,6 +937,56 @@ mod tests {
             matches!(err, ArtifactError::Model(_)),
             "expected payload range error, got {err}"
         );
+    }
+
+    #[test]
+    fn subbyte_weight_payloads_pack_and_version_gate() {
+        // A ternary weight grid lands on the i4 class and ships as a
+        // hex bit-packed payload (no int array at all).
+        let wq = Tensor::from_vec(&[4, 2], vec![-1, 0, 1, -1, 0, 1, 1, 0]);
+        let wv = weight_value(&wq);
+        assert_eq!(wv.get("dtype").unwrap().as_str().unwrap(), "i4");
+        assert!(wv.get_opt("data").is_none(), "sub-byte grid stored wide");
+        let hex = wv.get("packed").unwrap().as_str().unwrap();
+        assert_eq!(hex.len(), 8, "8 nibbles = 4 bytes = 8 hex chars");
+        // Format v2 decodes it bit-identically...
+        let back = decode_weights(&wv, "test", VERSION).unwrap();
+        assert_eq!(back, wq);
+        // ...a v1 document carrying the same dtype is a typed error...
+        assert!(matches!(
+            decode_weights(&wv, "test", 1),
+            Err(ArtifactError::DtypeVersion { needs: 2, found: 1, .. })
+        ));
+        // ...and a corrupt payload (wrong length / dirty pad bits /
+        // non-hex) is loud, not a best-effort parse.
+        let mut short = wv.clone();
+        if let Value::Obj(o) = &mut short {
+            o.insert("packed".into(), Value::Str("ff".into()));
+        }
+        assert!(matches!(
+            decode_weights(&short, "test", VERSION),
+            Err(ArtifactError::Model(_))
+        ));
+        let mut junk = wv;
+        if let Value::Obj(o) = &mut junk {
+            o.insert("packed".into(), Value::Str("zz00zz00".into()));
+        }
+        assert!(matches!(
+            decode_weights(&junk, "test", VERSION),
+            Err(ArtifactError::Model(_))
+        ));
+    }
+
+    #[test]
+    fn byte_weight_payloads_keep_the_v1_shape() {
+        // Byte-and-wider grids must stay readable by format v1: dtype +
+        // flat int `data` array, no `packed` field.
+        let wq = Tensor::from_vec(&[3], vec![-100, 0, 100]);
+        let wv = weight_value(&wq);
+        assert_eq!(wv.get("dtype").unwrap().as_str().unwrap(), "i8");
+        assert!(wv.get_opt("packed").is_none());
+        let back = decode_weights(&wv, "test", MIN_VERSION).unwrap();
+        assert_eq!(back, wq);
     }
 
     #[test]

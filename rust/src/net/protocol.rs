@@ -42,7 +42,7 @@ use std::io::{self, Read, Write};
 use crate::coordinator::{InferError, RegistryError};
 use crate::io::fnv1a64;
 use crate::quant::Precision;
-use crate::tensor::{QTensor, Tensor, TensorI};
+use crate::tensor::{PackedTensor, QTensor, Tensor, TensorI};
 
 /// `b"NEMO"` interpreted little-endian.
 pub const MAGIC: u32 = u32::from_le_bytes(*b"NEMO");
@@ -378,8 +378,10 @@ impl PayloadWriter {
 
     /// Dtype-tagged integer tensor at packed precision: `dtype u8, ndim
     /// u8, dims u32×ndim, data` where data is 1 byte/element for
-    /// `u8`/`i8` and 4 LE bytes for `i32` — the wire twin of the
-    /// artifact format's dtype-tagged weight payloads.
+    /// `u8`/`i8`, 4 LE bytes for `i32`, and the raw LSB-first bit-packed
+    /// payload (`Precision::storage_bytes`, 2–8 elements per byte) for
+    /// the sub-byte dtypes — the wire twin of the artifact format's
+    /// dtype-tagged weight payloads.
     pub fn put_qtensor(&mut self, t: &QTensor) {
         self.put_u8(dtype_tag(t.precision()));
         let shape = t.shape();
@@ -397,6 +399,7 @@ impl PayloadWriter {
                     self.0.extend_from_slice(&v.to_le_bytes());
                 }
             }
+            QTensor::Packed(t) => self.0.extend_from_slice(t.bytes()),
         }
     }
 }
@@ -508,17 +511,30 @@ impl<'a> PayloadReader<'a> {
                     .collect();
                 QTensor::I32(Tensor::from_vec(&shape, data))
             }
+            Precision::U1 | Precision::U2 | Precision::U4 | Precision::I4 => {
+                let data = self.take(p.storage_bytes(len))?.to_vec();
+                let t = PackedTensor::from_bytes(&shape, p, data)
+                    .map_err(|e| malformed(format!("packed tensor payload: {e}")))?;
+                QTensor::Packed(t)
+            }
         })
     }
 }
 
-/// Wire dtype tag for a storage precision (0=u8, 1=i8, 2=i32; the
-/// numeric twin of the artifact format's `Precision::name()` strings).
+/// Wire dtype tag for a storage precision (0=u8, 1=i8, 2=i32, 3=u4,
+/// 4=u2, 5=u1, 6=i4; the numeric twin of the artifact format's
+/// `Precision::name()` strings). Sub-byte tags extend the v1 table —
+/// old peers reject them as unknown dtypes, which is the correct typed
+/// failure for a frame they cannot decode.
 pub fn dtype_tag(p: Precision) -> u8 {
     match p {
         Precision::U8 => 0,
         Precision::I8 => 1,
         Precision::I32 => 2,
+        Precision::U4 => 3,
+        Precision::U2 => 4,
+        Precision::U1 => 5,
+        Precision::I4 => 6,
     }
 }
 
@@ -527,13 +543,18 @@ pub fn precision_of_tag(tag: u8) -> Option<Precision> {
         0 => Precision::U8,
         1 => Precision::I8,
         2 => Precision::I32,
+        3 => Precision::U4,
+        4 => Precision::U2,
+        5 => Precision::U1,
+        6 => Precision::I4,
         _ => return None,
     })
 }
 
 /// Narrow an i32 integer image to the tightest lossless wire precision
-/// (the value-range twin of the deploy-time precision proof): images
-/// that fit `u8`/`i8` cross the wire at 1 byte/element, everything else
+/// (the value-range twin of the deploy-time precision proof): few-bit
+/// images bit-pack down to `u1`/`u2`/`u4`/`i4` (2–8 elements per
+/// byte), byte-range images cross at 1 byte/element, everything else
 /// stays wide. Always lossless — `widen()` on the far side restores the
 /// exact i32 image.
 pub fn pack_lossless(t: &TensorI) -> QTensor {
@@ -813,10 +834,17 @@ mod tests {
 
     #[test]
     fn qtensor_round_trips_at_every_precision() {
+        let sub = |p, shape: &[usize], vals: &[i32]| {
+            QTensor::narrow_from(&Tensor::from_vec(shape, vals.to_vec()), p).unwrap()
+        };
         let cases = [
             QTensor::U8(Tensor::from_vec(&[2, 2], vec![0u8, 1, 254, 255])),
             QTensor::I8(Tensor::from_vec(&[3], vec![-128i8, 0, 127])),
             QTensor::I32(Tensor::from_vec(&[2], vec![i32::MIN, i32::MAX])),
+            sub(Precision::U1, &[9], &[1, 0, 1, 1, 0, 0, 1, 0, 1]),
+            sub(Precision::U2, &[2, 3], &[0, 3, 1, 2, 3, 0]),
+            sub(Precision::U4, &[5], &[0, 15, 7, 8, 1]),
+            sub(Precision::I4, &[4], &[-8, 7, -1, 0]),
         ];
         for t in cases {
             let mut w = PayloadWriter::new();
@@ -832,6 +860,14 @@ mod tests {
     #[test]
     fn pack_lossless_picks_the_tightest_precision() {
         use crate::quant::Precision;
+        let t = Tensor::from_vec(&[2], vec![0, 1]);
+        assert_eq!(pack_lossless(&t).precision(), Precision::U1);
+        let t = Tensor::from_vec(&[2], vec![0, 3]);
+        assert_eq!(pack_lossless(&t).precision(), Precision::U2);
+        let t = Tensor::from_vec(&[2], vec![0, 15]);
+        assert_eq!(pack_lossless(&t).precision(), Precision::U4);
+        let t = Tensor::from_vec(&[2], vec![-8, 7]);
+        assert_eq!(pack_lossless(&t).precision(), Precision::I4);
         let t = Tensor::from_vec(&[2], vec![0, 255]);
         assert_eq!(pack_lossless(&t).precision(), Precision::U8);
         let t = Tensor::from_vec(&[2], vec![-1, 127]);

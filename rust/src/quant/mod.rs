@@ -16,13 +16,26 @@ use crate::tensor::{TensorF, TensorI};
 use crate::tensor::Tensor;
 
 /// Element storage width of an integer image (DESIGN.md §Precision
-/// propagation). Derived from a node's provable value range: the packed
-/// execution path streams `U8`/`I8` tensors at 1 byte/element instead of
-/// the 4 bytes an `i32` image costs, which is the dominant bandwidth in
-/// the fused GEMM hot path. `I32` is always a sound (if wasteful)
+/// propagation and §Sub-byte-packing). Derived from a node's provable
+/// value range: the packed execution path streams `U8`/`I8` tensors at
+/// 1 byte/element instead of the 4 bytes an `i32` image costs, and the
+/// sub-byte classes (`U1`/`U2`/`U4`/`I4`) pack 8/4/2 elements per byte —
+/// the dominant bandwidth of the fused GEMM hot path shrinks with the
+/// deployment bit width Q. `I32` is always a sound (if wasteful)
 /// assignment and remains the fallback for wide nodes.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Precision {
+    /// Single-bit unsigned image: values provably in [0, 1] (a `bits = 1`
+    /// activation space); 8 elements per byte.
+    U1,
+    /// 2-bit unsigned image: values provably in [0, 3]; 4 elements/byte.
+    U2,
+    /// 4-bit unsigned image (nibble): values provably in [0, 15]; 2
+    /// elements per byte.
+    U4,
+    /// Signed nibble image: values provably in [-8, 7] (a `bits <= 4`
+    /// symmetric weight grid); 2 elements per byte, two's complement.
+    I4,
     /// Unsigned sub-word image: values provably in [0, 255] (e.g. a
     /// `bits <= 8` activation space).
     U8,
@@ -35,38 +48,62 @@ pub enum Precision {
 
 impl Precision {
     /// Tightest storage class whose range contains [lo, hi] (inclusive).
-    /// Unsigned wins over signed when both fit (activations at 8 bits are
-    /// exactly [0, 255]).
+    /// Unsigned wins over signed when both fit (activations at Q bits are
+    /// exactly [0, 2^Q - 1]).
     pub fn for_range(lo: i64, hi: i64) -> Self {
         debug_assert!(lo <= hi, "empty range [{lo}, {hi}]");
-        if lo >= 0 && hi <= u8::MAX as i64 {
-            Precision::U8
-        } else if lo >= i8::MIN as i64 && hi <= i8::MAX as i64 {
-            Precision::I8
-        } else {
-            Precision::I32
+        for p in [
+            Precision::U1,
+            Precision::U2,
+            Precision::U4,
+            Precision::I4,
+            Precision::U8,
+            Precision::I8,
+        ] {
+            if p.contains(lo, hi) {
+                return p;
+            }
         }
+        Precision::I32
     }
 
     /// Precision implied by a quantized space: `bits <= 8` activation
-    /// specs ([0, 2^Q-1]) map to `U8`, `bits <= 8` symmetric weight specs
-    /// ([-2^(Q-1), 2^(Q-1)-1]) to `I8`, anything wider to `I32`.
+    /// specs ([0, 2^Q-1]) map to the tightest unsigned class, `bits <= 8`
+    /// symmetric weight specs ([-2^(Q-1), 2^(Q-1)-1]) to `I4`/`I8`,
+    /// anything wider to `I32`.
     pub fn of_spec(spec: &QuantSpec) -> Self {
         Self::for_range(spec.lo, spec.hi)
     }
 
-    /// Bytes per element — the arena byte-sizing rule.
-    pub fn bytes(self) -> usize {
+    /// Bits per element — the arena bit-sizing rule (`I4` stores two's
+    /// complement nibbles, so it costs the same 4 bits as `U4`).
+    pub fn bits(self) -> u32 {
         match self {
-            Precision::U8 | Precision::I8 => 1,
-            Precision::I32 => 4,
+            Precision::U1 => 1,
+            Precision::U2 => 2,
+            Precision::U4 | Precision::I4 => 4,
+            Precision::U8 | Precision::I8 => 8,
+            Precision::I32 => 32,
         }
+    }
+
+    /// Whether elements of this class pack several to a byte.
+    pub fn is_sub_byte(self) -> bool {
+        self.bits() < 8
+    }
+
+    /// Bytes needed to store `len` elements at this precision —
+    /// `ceil(len * bits / 8)`, the arena/payload byte-sizing rule. All
+    /// sub-byte widths divide 8, so no element ever straddles a byte.
+    pub fn storage_bytes(self, len: usize) -> usize {
+        (len * self.bits() as usize).div_ceil(8)
     }
 
     /// Smallest representable value.
     pub fn min_val(self) -> i64 {
         match self {
-            Precision::U8 => 0,
+            Precision::U1 | Precision::U2 | Precision::U4 | Precision::U8 => 0,
+            Precision::I4 => -8,
             Precision::I8 => i8::MIN as i64,
             Precision::I32 => i32::MIN as i64,
         }
@@ -75,6 +112,10 @@ impl Precision {
     /// Largest representable value.
     pub fn max_val(self) -> i64 {
         match self {
+            Precision::U1 => 1,
+            Precision::U2 => 3,
+            Precision::U4 => 15,
+            Precision::I4 => 7,
             Precision::U8 => u8::MAX as i64,
             Precision::I8 => i8::MAX as i64,
             Precision::I32 => i32::MAX as i64,
@@ -102,6 +143,10 @@ impl Precision {
 
     pub fn name(self) -> &'static str {
         match self {
+            Precision::U1 => "u1",
+            Precision::U2 => "u2",
+            Precision::U4 => "u4",
+            Precision::I4 => "i4",
             Precision::U8 => "u8",
             Precision::I8 => "i8",
             Precision::I32 => "i32",
@@ -112,6 +157,10 @@ impl Precision {
     /// to decode stored precision stamps and weight payload dtypes.
     pub fn from_name(s: &str) -> Option<Self> {
         match s {
+            "u1" => Some(Precision::U1),
+            "u2" => Some(Precision::U2),
+            "u4" => Some(Precision::U4),
+            "i4" => Some(Precision::I4),
             "u8" => Some(Precision::U8),
             "i8" => Some(Precision::I8),
             "i32" => Some(Precision::I32),
@@ -316,10 +365,16 @@ mod tests {
 
     #[test]
     fn precision_for_range_picks_the_tightest_class() {
+        assert_eq!(Precision::for_range(0, 1), Precision::U1);
+        assert_eq!(Precision::for_range(0, 3), Precision::U2);
+        assert_eq!(Precision::for_range(0, 2), Precision::U2);
+        assert_eq!(Precision::for_range(0, 15), Precision::U4);
+        assert_eq!(Precision::for_range(-8, 7), Precision::I4);
+        assert_eq!(Precision::for_range(-1, 0), Precision::I4); // 1-bit weight grid
         assert_eq!(Precision::for_range(0, 255), Precision::U8);
         assert_eq!(Precision::for_range(0, 127), Precision::U8); // unsigned wins
+        assert_eq!(Precision::for_range(-1, 8), Precision::I8); // 8 > I4 max
         assert_eq!(Precision::for_range(-128, 127), Precision::I8);
-        assert_eq!(Precision::for_range(-1, 0), Precision::I8);
         assert_eq!(Precision::for_range(0, 256), Precision::I32);
         assert_eq!(Precision::for_range(-129, 0), Precision::I32);
         assert_eq!(Precision::for_range(0, 511), Precision::I32); // 9-bit act
@@ -327,10 +382,30 @@ mod tests {
 
     #[test]
     fn precision_of_spec_follows_the_bits_map() {
-        // bits <= 8 activations -> U8, weights -> I8, else I32.
+        // bits <= 8 activations -> tightest unsigned class, weights ->
+        // I4/I8, else I32.
+        let acts = [
+            Precision::U1,
+            Precision::U2,
+            Precision::U4,
+            Precision::U4,
+            Precision::U8,
+            Precision::U8,
+            Precision::U8,
+            Precision::U8,
+        ];
         for bits in 1..=8u32 {
-            assert_eq!(Precision::of_spec(&QuantSpec::activation(1.0, bits)), Precision::U8);
-            assert_eq!(Precision::of_spec(&QuantSpec::weight(1.0, bits)), Precision::I8);
+            assert_eq!(
+                Precision::of_spec(&QuantSpec::activation(1.0, bits)),
+                acts[bits as usize - 1],
+                "activation bits={bits}"
+            );
+            let want_w = if bits <= 4 { Precision::I4 } else { Precision::I8 };
+            assert_eq!(
+                Precision::of_spec(&QuantSpec::weight(1.0, bits)),
+                want_w,
+                "weight bits={bits}"
+            );
         }
         assert_eq!(Precision::of_spec(&QuantSpec::activation(1.0, 9)), Precision::I32);
         assert_eq!(Precision::of_spec(&QuantSpec::weight(1.0, 9)), Precision::I32);
@@ -338,14 +413,61 @@ mod tests {
 
     #[test]
     fn precision_contains_is_the_range_proof() {
+        assert!(Precision::U1.contains(0, 1));
+        assert!(!Precision::U1.contains(0, 2));
+        assert!(Precision::U2.contains(0, 3));
+        assert!(!Precision::U2.contains(-1, 3));
+        assert!(Precision::U4.contains(0, 15));
+        assert!(!Precision::U4.contains(0, 16));
+        assert!(Precision::I4.contains(-8, 7));
+        assert!(!Precision::I4.contains(-9, 0));
         assert!(Precision::U8.contains(0, 255));
         assert!(!Precision::U8.contains(-1, 255));
         assert!(Precision::I8.contains(-1, 0));
         assert!(!Precision::I8.contains(0, 128));
         assert!(Precision::I32.contains(i32::MIN as i64, i32::MAX as i64));
-        assert_eq!(Precision::U8.bytes(), 1);
-        assert_eq!(Precision::I8.bytes(), 1);
-        assert_eq!(Precision::I32.bytes(), 4);
+    }
+
+    #[test]
+    fn precision_storage_is_bit_sized() {
+        // ceil(len * bits / 8): sub-byte classes pack 8/4/2 per byte.
+        assert_eq!(Precision::U1.storage_bytes(8), 1);
+        assert_eq!(Precision::U1.storage_bytes(9), 2);
+        assert_eq!(Precision::U2.storage_bytes(4), 1);
+        assert_eq!(Precision::U2.storage_bytes(5), 2);
+        assert_eq!(Precision::U4.storage_bytes(2), 1);
+        assert_eq!(Precision::I4.storage_bytes(3), 2);
+        assert_eq!(Precision::U8.storage_bytes(7), 7);
+        assert_eq!(Precision::I8.storage_bytes(7), 7);
+        assert_eq!(Precision::I32.storage_bytes(7), 28);
+        assert_eq!(Precision::U1.storage_bytes(0), 0);
+        for p in [
+            Precision::U1,
+            Precision::U2,
+            Precision::U4,
+            Precision::I4,
+        ] {
+            assert!(p.is_sub_byte(), "{}", p.name());
+        }
+        for p in [Precision::U8, Precision::I8, Precision::I32] {
+            assert!(!p.is_sub_byte(), "{}", p.name());
+        }
+    }
+
+    #[test]
+    fn precision_names_round_trip() {
+        for p in [
+            Precision::U1,
+            Precision::U2,
+            Precision::U4,
+            Precision::I4,
+            Precision::U8,
+            Precision::I8,
+            Precision::I32,
+        ] {
+            assert_eq!(Precision::from_name(p.name()), Some(p));
+        }
+        assert_eq!(Precision::from_name("u3"), None);
     }
 
     #[test]

@@ -207,17 +207,149 @@ impl Tensor<f32> {
     }
 }
 
+// -- sub-byte bit packing ---------------------------------------------
+//
+// Layout contract (DESIGN.md §Sub-byte-packing): element `e` of a flat
+// buffer occupies bits [e*bits, (e+1)*bits) counted LSB-first within
+// each byte. All sub-byte widths (1/2/4) divide 8, so elements never
+// straddle byte boundaries: byte `b` holds elements
+// [b*8/bits, (b+1)*8/bits), the lowest-indexed element in the lowest
+// bits. Signed nibbles (`I4`) store 4-bit two's complement.
+
+/// Bytes needed for `len` elements of `bits` width (`ceil(len*bits/8)`).
+#[inline]
+pub fn packed_byte_len(len: usize, bits: u32) -> usize {
+    (len * bits as usize).div_ceil(8)
+}
+
+/// Read element `idx` of a packed buffer as its unsigned bit pattern.
+#[inline]
+pub fn get_packed_raw(data: &[u8], idx: usize, bits: u32) -> u32 {
+    debug_assert!(matches!(bits, 1 | 2 | 4));
+    let bit = idx * bits as usize;
+    let mask = (1u32 << bits) - 1;
+    (data[bit / 8] as u32 >> (bit % 8)) & mask
+}
+
+/// Read element `idx` of a packed buffer at precision `p`, sign-extending
+/// two's-complement nibbles for `I4`.
+#[inline]
+pub fn get_packed(data: &[u8], idx: usize, p: Precision) -> i32 {
+    let raw = get_packed_raw(data, idx, p.bits());
+    if p == Precision::I4 && raw >= 8 {
+        raw as i32 - 16
+    } else {
+        raw as i32
+    }
+}
+
+/// Write element `idx` of a packed buffer at precision `p`. The value
+/// must be in `p`'s range (debug-asserted — callers range-check first).
+#[inline]
+pub fn set_packed(data: &mut [u8], idx: usize, p: Precision, v: i32) {
+    let bits = p.bits();
+    debug_assert!(
+        (p.min_val()..=p.max_val()).contains(&(v as i64)),
+        "value {v} outside {} range",
+        p.name()
+    );
+    let bit = idx * bits as usize;
+    let mask = ((1u32 << bits) - 1) as u8;
+    let raw = (v as u32 & mask as u32) as u8;
+    let b = &mut data[bit / 8];
+    let shift = bit % 8;
+    *b = (*b & !(mask << shift)) | (raw << shift);
+}
+
+/// A bit-packed sub-byte integer image: `len` elements of a sub-byte
+/// [`Precision`] in `storage_bytes` bytes, LSB-first (see the layout
+/// contract above). Trailing pad bits of the final byte are always zero,
+/// so equal images have equal bytes and payload checksums are stable.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedTensor {
+    prec: Precision,
+    shape: Vec<usize>,
+    len: usize,
+    data: Vec<u8>,
+}
+
+impl PackedTensor {
+    /// Wrap raw packed bytes. Fails loudly when the byte length does not
+    /// match `p.storage_bytes(len)`, when `p` is not sub-byte, or when a
+    /// trailing pad bit is set (a corrupt or non-canonical payload).
+    pub fn from_bytes(
+        shape: &[usize],
+        p: Precision,
+        data: Vec<u8>,
+    ) -> Result<Self, String> {
+        if !p.is_sub_byte() {
+            return Err(format!("{} is not a sub-byte precision", p.name()));
+        }
+        let len: usize = shape.iter().product();
+        let want = p.storage_bytes(len);
+        if data.len() != want {
+            return Err(format!(
+                "packed {} payload of {} bytes, shape {shape:?} wants {want}",
+                p.name(),
+                data.len()
+            ));
+        }
+        let used_bits = len * p.bits() as usize;
+        if used_bits % 8 != 0 {
+            let last = data[want - 1];
+            let pad_mask = !((1u16 << (used_bits % 8)) as u8).wrapping_sub(1);
+            if last & pad_mask != 0 {
+                return Err(format!(
+                    "packed {} payload has non-zero trailing pad bits",
+                    p.name()
+                ));
+            }
+        }
+        Ok(PackedTensor { prec: p, shape: shape.to_vec(), len, data })
+    }
+
+    pub fn precision(&self) -> Precision {
+        self.prec
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The packed payload bytes.
+    pub fn bytes(&self) -> &[u8] {
+        &self.data
+    }
+
+    /// Element `idx`, sign-extended for `I4`.
+    #[inline]
+    pub fn get(&self, idx: usize) -> i32 {
+        get_packed(&self.data, idx, self.prec)
+    }
+}
+
 /// A precision-tagged integer image: the packed counterpart of
-/// [`TensorI`]. Sub-word variants store 1 byte/element; every variant
-/// widens losslessly back to `i32`, and narrowing is checked against the
-/// target precision's range — the conversion fails loudly instead of
-/// wrapping, because a value outside the stamped range means the
-/// deploy-time range proof was violated.
+/// [`TensorI`]. Sub-word variants store 1 byte/element and the sub-byte
+/// classes pack 2-8 elements per byte; every variant widens losslessly
+/// back to `i32`, and narrowing is checked against the target precision's
+/// range — the conversion fails loudly instead of wrapping, because a
+/// value outside the stamped range means the deploy-time range proof was
+/// violated.
 #[derive(Clone, Debug, PartialEq)]
 pub enum QTensor {
     U8(TensorU8),
     I8(TensorI8),
     I32(TensorI),
+    /// Any sub-byte precision (`U1`/`U2`/`U4`/`I4`), bit-packed.
+    Packed(PackedTensor),
 }
 
 impl QTensor {
@@ -227,6 +359,7 @@ impl QTensor {
             QTensor::U8(_) => Precision::U8,
             QTensor::I8(_) => Precision::I8,
             QTensor::I32(_) => Precision::I32,
+            QTensor::Packed(t) => t.precision(),
         }
     }
 
@@ -235,6 +368,7 @@ impl QTensor {
             QTensor::U8(t) => t.shape(),
             QTensor::I8(t) => t.shape(),
             QTensor::I32(t) => t.shape(),
+            QTensor::Packed(t) => t.shape(),
         }
     }
 
@@ -243,6 +377,7 @@ impl QTensor {
             QTensor::U8(t) => t.len(),
             QTensor::I8(t) => t.len(),
             QTensor::I32(t) => t.len(),
+            QTensor::Packed(t) => t.len(),
         }
     }
 
@@ -252,7 +387,7 @@ impl QTensor {
 
     /// Bytes of element storage (the bandwidth this image costs).
     pub fn storage_bytes(&self) -> usize {
-        self.len() * self.precision().bytes()
+        self.precision().storage_bytes(self.len())
     }
 
     /// Lossless widening to the full-width i32 image.
@@ -261,6 +396,10 @@ impl QTensor {
             QTensor::U8(t) => t.map(|v| v as i32),
             QTensor::I8(t) => t.map(|v| v as i32),
             QTensor::I32(t) => t.clone(),
+            QTensor::Packed(t) => Tensor::from_vec(
+                t.shape(),
+                (0..t.len()).map(|i| t.get(i)).collect(),
+            ),
         }
     }
 
@@ -298,6 +437,19 @@ impl QTensor {
                 Ok(QTensor::I8(Tensor::from_vec(t.shape(), data)))
             }
             Precision::I32 => Ok(QTensor::I32(t.clone())),
+            _ => {
+                let mut data = vec![0u8; p.storage_bytes(t.len())];
+                for (i, &v) in t.data().iter().enumerate() {
+                    check(v)?;
+                    set_packed(&mut data, i, p, v);
+                }
+                Ok(QTensor::Packed(PackedTensor {
+                    prec: p,
+                    shape: t.shape().to_vec(),
+                    len: t.len(),
+                    data,
+                }))
+            }
         }
     }
 }
@@ -398,5 +550,59 @@ mod tests {
         assert!(QTensor::narrow_from(&t, Precision::U8).is_err());
         let t = Tensor::from_vec(&[1], vec![128]);
         assert!(QTensor::narrow_from(&t, Precision::I8).is_err());
+        // sub-byte classes reject out-of-range values too
+        let t = Tensor::from_vec(&[1], vec![2]);
+        assert!(QTensor::narrow_from(&t, Precision::U1).is_err());
+        let t = Tensor::from_vec(&[1], vec![4]);
+        assert!(QTensor::narrow_from(&t, Precision::U2).is_err());
+        let t = Tensor::from_vec(&[1], vec![16]);
+        assert!(QTensor::narrow_from(&t, Precision::U4).is_err());
+        let t = Tensor::from_vec(&[1], vec![-9]);
+        assert!(QTensor::narrow_from(&t, Precision::I4).is_err());
+    }
+
+    #[test]
+    fn subbyte_narrow_widen_roundtrip_and_sizing() {
+        // U1: 9 elements -> 2 bytes, LSB-first.
+        let t = Tensor::from_vec(&[9], vec![1, 0, 1, 1, 0, 0, 1, 0, 1]);
+        let q = QTensor::narrow_from(&t, Precision::U1).unwrap();
+        assert_eq!(q.precision(), Precision::U1);
+        assert_eq!(q.storage_bytes(), 2);
+        assert_eq!(q.widen(), t);
+        if let QTensor::Packed(p) = &q {
+            assert_eq!(p.bytes(), &[0b0100_1101, 0b0000_0001]);
+        } else {
+            panic!("expected packed storage");
+        }
+
+        // U2: 5 elements -> 2 bytes.
+        let t = Tensor::from_vec(&[5], vec![0, 1, 2, 3, 2]);
+        let q = QTensor::narrow_from(&t, Precision::U2).unwrap();
+        assert_eq!(q.storage_bytes(), 2);
+        assert_eq!(q.widen(), t);
+
+        // U4 + I4: 2 elements per byte, I4 sign-extends.
+        let t = Tensor::from_vec(&[3], vec![0, 15, 7]);
+        let q = QTensor::narrow_from(&t, Precision::U4).unwrap();
+        assert_eq!(q.storage_bytes(), 2);
+        assert_eq!(q.widen(), t);
+        let t = Tensor::from_vec(&[4], vec![-8, -1, 0, 7]);
+        let q = QTensor::narrow_from(&t, Precision::I4).unwrap();
+        assert_eq!(q.storage_bytes(), 2);
+        assert_eq!(q.widen(), t);
+    }
+
+    #[test]
+    fn packed_tensor_from_bytes_is_validated() {
+        // Wrong byte length.
+        assert!(PackedTensor::from_bytes(&[5], Precision::U2, vec![0]).is_err());
+        // Non-sub-byte precision.
+        assert!(PackedTensor::from_bytes(&[4], Precision::U8, vec![0]).is_err());
+        // Set trailing pad bit (3 x 2 bits use bits 0-5 of one byte).
+        assert!(PackedTensor::from_bytes(&[3], Precision::U2, vec![0x40]).is_err());
+        // Canonical payload round-trips.
+        let p = PackedTensor::from_bytes(&[3], Precision::U2, vec![0b10_01_00]).unwrap();
+        assert_eq!((p.get(0), p.get(1), p.get(2)), (0, 1, 2));
+        assert_eq!(QTensor::Packed(p.clone()).widen().data(), &[0, 1, 2]);
     }
 }

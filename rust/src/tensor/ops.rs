@@ -15,7 +15,7 @@
 //!   caller-provided scratch, optional fused per-channel epilogues
 //!   applied while the GEMM output is narrowed.
 
-use super::{Tensor, TensorF, TensorI};
+use super::{get_packed, get_packed_raw, packed_byte_len, set_packed, Tensor, TensorF, TensorI};
 use crate::quant::Precision;
 
 /// Checked i64 -> i32 narrowing for integer images. The deployment
@@ -721,6 +721,409 @@ pub fn global_mean_f32_into(
     }
 }
 
+// ---------------------------------------------------------------------------
+// Sub-byte (bit-packed) kernels (DESIGN.md §Sub-byte packing)
+// ---------------------------------------------------------------------------
+//
+// Few-bit integer images (U1/U2/U4/I4) are stored 2-8 elements per byte,
+// LSB-first (tensor/mod.rs::get_packed/set_packed). The kernels below are
+// bit-exact twins of the byte-width kernels above: every element widens
+// to the same i32 value the wide interpreter sees, and every accumulation
+// uses the same wrapping-i32 order, so fused sub-byte execution is
+// bit-identical to the full-width path node for node.
+
+/// Distribute the rows of an `m x n` row-major output over scoped worker
+/// threads — the same row-block split (and therefore the same per-element
+/// arithmetic) as [`matmul_q_fused_into`]. `body(row_lo, row_hi, chunk)`
+/// must be a pure function of its row range; the first block runs on the
+/// calling thread.
+fn run_row_blocks<O, F>(m: usize, n: usize, threads: usize, out: &mut [O], body: F)
+where
+    O: Send,
+    F: Fn(usize, usize, &mut [O]) + Sync,
+{
+    let out = &mut out[..m * n];
+    if threads <= 1 {
+        body(0, m, out);
+        return;
+    }
+    let rows_per = m.div_ceil(threads);
+    std::thread::scope(|s| {
+        let body = &body;
+        let mut rest = out;
+        let mut first: Option<(usize, &mut [O])> = None;
+        let mut row0 = 0usize;
+        while row0 < m {
+            let take = rows_per.min(m - row0);
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(take * n);
+            rest = tail;
+            if first.is_none() {
+                first = Some((row0, chunk));
+            } else {
+                s.spawn(move || body(row0, row0 + take, chunk));
+            }
+            row0 += take;
+        }
+        let (lo, chunk) = first.expect("at least one row block");
+        body(lo, lo + chunk.len() / n, chunk);
+    });
+}
+
+/// Weight matrix [K, N] decomposed into two's-complement bit-planes for
+/// the bit-serial GEMM: plane `p` of column `j` is a K-bit bitmap packed
+/// into `ceil(K/64)` u64 words at `planes[(p*n + j)*words ..]`. `bits` is
+/// the minimal signed width covering the actual weight range, so a
+/// ternary grid costs 2 planes and a binary [-1, 0] grid costs 1. The
+/// value decomposition is
+///
+///   w = -2^(B-1) * b_{B-1} + sum_{p < B-1} 2^p * b_p
+///
+/// (the top plane is the sign plane).
+pub struct BitPlanes {
+    k: usize,
+    n: usize,
+    bits: u32,
+    words: usize,
+    planes: Vec<u64>,
+}
+
+impl BitPlanes {
+    /// Decompose a [K, N] weight matrix; `None` when the weights do not
+    /// fit an 8-bit signed grid (bit-serial would cost more planes than
+    /// the MAC kernel is worth).
+    pub fn build(wq: &TensorI) -> Option<BitPlanes> {
+        assert_eq!(wq.ndim(), 2);
+        let (k, n) = (wq.shape()[0], wq.shape()[1]);
+        let d = wq.data();
+        let (mut lo, mut hi) = (0i64, 0i64);
+        for &v in d {
+            lo = lo.min(v as i64);
+            hi = hi.max(v as i64);
+        }
+        let bits = (1u32..=8).find(|&b| {
+            lo >= -(1i64 << (b - 1)) && hi <= (1i64 << (b - 1)) - 1
+        })?;
+        let words = k.div_ceil(64);
+        let mask = (1u32 << bits) - 1;
+        let mut planes = vec![0u64; bits as usize * n * words];
+        for row in 0..k {
+            let (wi, bit) = (row / 64, 1u64 << (row % 64));
+            for col in 0..n {
+                let raw = (d[row * n + col] as u32) & mask;
+                for p in 0..bits {
+                    if (raw >> p) & 1 != 0 {
+                        planes[(p as usize * n + col) * words + wi] |= bit;
+                    }
+                }
+            }
+        }
+        Some(BitPlanes { k, n, bits, words, planes })
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Planes actually stored (the minimal signed width of the grid).
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    /// Bitmap storage footprint in bytes.
+    pub fn bytes(&self) -> usize {
+        self.planes.len() * 8
+    }
+}
+
+/// Bit-serial AND+popcount GEMM over bit-packed unsigned activations and
+/// [`BitPlanes`] weights, with the same fused epilogue contract as
+/// [`matmul_q_fused_into`]. For Q-bit activations and B-bit weights each
+/// output element costs Q*B AND+popcount passes over K-bit bitmaps
+/// instead of K multiply-accumulates:
+///
+///   dot = sum_{p, q} c_p * 2^q * popcount(a_plane_q AND w_plane_p)
+///
+/// with c_p the two's-complement plane coefficient. Every term and every
+/// sum uses wrapping i32 arithmetic, which is exact mod 2^32 — i.e.
+/// bit-identical to the wide interpreter's wrapping-i32 MAC loop, even on
+/// graphs whose accumulators exceed i32 (both paths agree mod 2^32).
+pub fn matmul_bitserial_fused_into<O, F>(
+    a_packed: &[u8],
+    a_prec: Precision,
+    m: usize,
+    planes: &BitPlanes,
+    epi: &F,
+    out: &mut [O],
+) where
+    O: PackedElem,
+    F: Fn(usize, i32) -> i32 + Sync,
+{
+    assert!(
+        matches!(a_prec, Precision::U1 | Precision::U2 | Precision::U4),
+        "bit-serial GEMM needs an unsigned sub-byte activation grid, got {}",
+        a_prec.name()
+    );
+    let (k, n, words) = (planes.k, planes.n, planes.words);
+    let abits = a_prec.bits();
+    assert!(a_packed.len() >= packed_byte_len(m * k, abits));
+    let threads = gemm_threads(m, k, n);
+    run_row_blocks(m, n, threads, out, |row_lo, row_hi, chunk| {
+        let mut aplanes = vec![0u64; abits as usize * words];
+        let mut acc = vec![0i32; n];
+        for i in row_lo..row_hi {
+            aplanes.fill(0);
+            let base = i * k;
+            // Branchless scatter: a data-dependent skip on random few-bit
+            // values mispredicts ~half the time, which costs far more
+            // than unconditionally OR-ing zero bits.
+            for e in 0..k {
+                let v = get_packed_raw(a_packed, base + e, abits);
+                let (wi, sh) = (e / 64, e % 64);
+                for q in 0..abits {
+                    aplanes[q as usize * words + wi] |= (((v >> q) & 1) as u64) << sh;
+                }
+            }
+            for (j, a) in acc.iter_mut().enumerate() {
+                let mut sum = 0i32;
+                for p in 0..planes.bits {
+                    let wplane = &planes.planes[(p as usize * n + j) * words..][..words];
+                    let c = if p + 1 == planes.bits { -(1i32 << p) } else { 1i32 << p };
+                    for q in 0..abits {
+                        let ap = &aplanes[q as usize * words..][..words];
+                        let mut pc = 0u32;
+                        for (aw, ww) in ap.iter().zip(wplane) {
+                            pc += (aw & ww).count_ones();
+                        }
+                        sum = sum.wrapping_add((c << q).wrapping_mul(pc as i32));
+                    }
+                }
+                *a = sum;
+            }
+            let crow = &mut chunk[(i - row_lo) * n..(i - row_lo + 1) * n];
+            for (j, o) in crow.iter_mut().enumerate() {
+                *o = O::from_i32(epi(j, acc[j]));
+            }
+        }
+    });
+}
+
+/// Row-block GEMM over bit-packed sub-byte activations: each row block
+/// unpacks its activation rows into an i8 scratch row (every sub-byte
+/// value fits i8, sign-extended for I4) and runs the identical
+/// wrapping-i32 MAC loop as [`matmul_q_fused_into`] — the unpack feeds
+/// the autovectorized kernel unit-stride data, so U4/I4 grids trade an
+/// O(K) unpack for 2x less GEMM input traffic. Bit-identical to the wide
+/// path by the same argument as the byte kernels.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_subbyte_fused_into<B, O, F>(
+    a_packed: &[u8],
+    a_prec: Precision,
+    bd: &[B],
+    m: usize,
+    k: usize,
+    n: usize,
+    epi: &F,
+    out: &mut [O],
+) where
+    B: PackedElem,
+    O: PackedElem,
+    F: Fn(usize, i32) -> i32 + Sync,
+{
+    assert!(a_prec.is_sub_byte(), "got {}", a_prec.name());
+    assert!(a_packed.len() >= packed_byte_len(m * k, a_prec.bits()));
+    assert!(bd.len() >= k * n);
+    let threads = gemm_threads(m, k, n);
+    run_row_blocks(m, n, threads, out, |row_lo, row_hi, chunk| {
+        let mut arow = vec![0i8; k];
+        let mut acc = vec![0i32; n];
+        for i in row_lo..row_hi {
+            for (e, a) in arow.iter_mut().enumerate() {
+                *a = get_packed(a_packed, i * k + e, a_prec) as i8;
+            }
+            acc.fill(0);
+            for (kk, &av) in arow.iter().enumerate() {
+                let a = av as i32;
+                if a == 0 {
+                    continue;
+                }
+                let brow = &bd[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    acc[j] = acc[j].wrapping_add(a.wrapping_mul(brow[j].to_i32()));
+                }
+            }
+            let crow = &mut chunk[(i - row_lo) * n..(i - row_lo + 1) * n];
+            for (j, o) in crow.iter_mut().enumerate() {
+                *o = O::from_i32(epi(j, acc[j]));
+            }
+        }
+    });
+}
+
+/// Bit-packed twin of [`im2col_into`]: reads and writes sub-byte packed
+/// payloads element-for-element in the identical patch layout. The used
+/// prefix (including trailing pad bits) is zero-filled first, so padded
+/// halo regions and canonical-payload invariants both hold on reused
+/// arena buffers.
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_packed_into(
+    xd: &[u8],
+    p: Precision,
+    b: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    out: &mut [u8],
+) -> (usize, usize, usize, usize) {
+    let bits = p.bits();
+    assert!(p.is_sub_byte());
+    assert!(xd.len() >= packed_byte_len(b * c * h * w, bits));
+    let oh = (h + 2 * pad - kh) / stride + 1;
+    let ow = (w + 2 * pad - kw) / stride + 1;
+    let cols = c * kh * kw;
+    let rows = b * oh * ow;
+    out[..packed_byte_len(rows * cols, bits)].fill(0);
+    let valid = |k: usize, dim: usize, omax: usize| -> (usize, usize) {
+        let lo = pad.saturating_sub(k).div_ceil(stride);
+        let hi_excl = if dim + pad > k {
+            ((dim + pad - k - 1) / stride + 1).min(omax)
+        } else {
+            0
+        };
+        (lo.min(omax), hi_excl)
+    };
+    for bi in 0..b {
+        for ci in 0..c {
+            let xbase = (bi * c + ci) * h * w;
+            for ki in 0..kh {
+                let (oy_lo, oy_hi) = valid(ki, h, oh);
+                for kj in 0..kw {
+                    let (ox_lo, ox_hi) = valid(kj, w, ow);
+                    let col = ci * kh * kw + ki * kw + kj;
+                    for oy in oy_lo..oy_hi {
+                        let iy = oy * stride + ki - pad;
+                        let xrow = xbase + iy * w;
+                        let orow = ((bi * oh + oy) * ow) * cols + col;
+                        let mut ix = ox_lo * stride + kj - pad;
+                        for ox in ox_lo..ox_hi {
+                            let v = get_packed(xd, xrow + ix, p);
+                            set_packed(out, orow + ox * cols, p, v);
+                            ix += stride;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (rows, cols, oh, ow)
+}
+
+/// Bit-packed twin of [`rows_to_nchw_into`].
+pub fn rows_to_nchw_packed_into(
+    rows: &[u8],
+    p: Precision,
+    b: usize,
+    c: usize,
+    oh: usize,
+    ow: usize,
+    out: &mut [u8],
+) {
+    let bits = p.bits();
+    assert!(rows.len() >= packed_byte_len(b * oh * ow * c, bits));
+    let hw = oh * ow;
+    out[..packed_byte_len(b * c * hw, bits)].fill(0);
+    for bi in 0..b {
+        for pix in 0..hw {
+            let row = (bi * hw + pix) * c;
+            for ci in 0..c {
+                let v = get_packed(rows, row + ci, p);
+                set_packed(out, (bi * c + ci) * hw + pix, p, v);
+            }
+        }
+    }
+}
+
+/// Bit-packed twin of [`maxpool_into`]: compares the widened (sign-
+/// extended) values, so signed grids order correctly.
+#[allow(clippy::too_many_arguments)]
+pub fn maxpool_packed_into(
+    xd: &[u8],
+    p: Precision,
+    b: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    k: usize,
+    out: &mut [u8],
+) {
+    assert!(h % k == 0 && w % k == 0);
+    let (oh, ow) = (h / k, w / k);
+    out[..packed_byte_len(b * c * oh * ow, p.bits())].fill(0);
+    for bc in 0..b * c {
+        let xbase = bc * h * w;
+        let obase = bc * oh * ow;
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut best = get_packed(xd, xbase + (oy * k) * w + ox * k, p);
+                for dy in 0..k {
+                    let xrow = xbase + (oy * k + dy) * w + ox * k;
+                    for dx in 0..k {
+                        let v = get_packed(xd, xrow + dx, p);
+                        if v > best {
+                            best = v;
+                        }
+                    }
+                }
+                set_packed(out, obase + oy * ow + ox, p, best);
+            }
+        }
+    }
+}
+
+/// Bit-packed twin of [`avgpool_q_into`] (Eq. 25): identical i64
+/// accumulation and `(floor(2^d/(K*K)) * sum) >> d` scaling; the result
+/// never widens past the input grid, so packing back is always sound.
+#[allow(clippy::too_many_arguments)]
+pub fn avgpool_packed_into(
+    xd: &[u8],
+    p: Precision,
+    b: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    k: usize,
+    d: u32,
+    out: &mut [u8],
+) {
+    assert!(h % k == 0 && w % k == 0);
+    let (oh, ow) = (h / k, w / k);
+    let m = (1i64 << d) / (k * k) as i64;
+    out[..packed_byte_len(b * c * oh * ow, p.bits())].fill(0);
+    for bc in 0..b * c {
+        let xbase = bc * h * w;
+        let obase = bc * oh * ow;
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut acc = 0i64;
+                for dy in 0..k {
+                    let xrow = xbase + (oy * k + dy) * w + ox * k;
+                    for dx in 0..k {
+                        acc += get_packed(xd, xrow + dx, p) as i64;
+                    }
+                }
+                set_packed(out, obase + oy * ow + ox, p, narrow((acc * m) >> d));
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -854,6 +1257,167 @@ mod tests {
         im2col_into(x8.data(), 1, 1, 2, 2, 3, 3, 1, 1, &mut out);
         for (o, w) in out.iter().zip(want.data()) {
             assert_eq!(*o as i32, *w);
+        }
+    }
+
+    fn pack_vals(vals: &[i32], p: Precision) -> Vec<u8> {
+        let mut out = vec![0u8; packed_byte_len(vals.len(), p.bits())];
+        for (i, &v) in vals.iter().enumerate() {
+            set_packed(&mut out, i, p, v);
+        }
+        out
+    }
+
+    #[test]
+    fn bit_planes_use_the_minimal_signed_width() {
+        let w = Tensor::from_vec(&[2, 2], vec![-1, 0, -1, 0]);
+        assert_eq!(BitPlanes::build(&w).unwrap().bits(), 1);
+        let w = Tensor::from_vec(&[2, 2], vec![-1, 0, 1, 0]);
+        assert_eq!(BitPlanes::build(&w).unwrap().bits(), 2);
+        let w = Tensor::from_vec(&[2, 2], vec![-8, 7, 0, 1]);
+        assert_eq!(BitPlanes::build(&w).unwrap().bits(), 4);
+        let w = Tensor::from_vec(&[2, 2], vec![-128, 127, 0, 1]);
+        assert_eq!(BitPlanes::build(&w).unwrap().bits(), 8);
+        let w = Tensor::from_vec(&[2, 2], vec![300, 0, 0, 0]);
+        assert!(BitPlanes::build(&w).is_none());
+    }
+
+    #[test]
+    fn bitserial_matmul_matches_i32_reference() {
+        // Q-bit activations x few-bit signed weights, at sizes below and
+        // above the threading cutoff and with K spanning >1 bitmap word.
+        let mut rng = Rng::new(31);
+        let grids = [
+            (Precision::U1, -1i64, 0i64),
+            (Precision::U1, -2, 1),
+            (Precision::U2, -1, 1),
+            (Precision::U2, -8, 7),
+            (Precision::U4, -8, 7),
+        ];
+        for (p, wlo, whi) in grids {
+            for (m, k, n) in [(5usize, 7usize, 3usize), (9, 130, 8), (160, 96, 80)] {
+                let a32 = rand_i(&mut rng, &[m, k], 0, p.max_val() as i64 + 1);
+                let b32 = rand_i(&mut rng, &[k, n], wlo, whi + 1);
+                let want = matmul_i32(&a32, &b32);
+                let ap = pack_vals(a32.data(), p);
+                let planes = BitPlanes::build(&b32).unwrap();
+                let mut out = vec![0i32; m * n];
+                matmul_bitserial_fused_into(&ap, p, m, &planes, &|_, v| v, &mut out);
+                assert_eq!(&out[..], want.data(), "{} {m}x{k}x{n}", p.name());
+            }
+        }
+    }
+
+    #[test]
+    fn bitserial_epilogue_narrows_into_packed_output() {
+        let mut rng = Rng::new(32);
+        let (m, k, n) = (6usize, 70usize, 5usize);
+        let a32 = rand_i(&mut rng, &[m, k], 0, 4);
+        let b32 = rand_i(&mut rng, &[k, n], -2, 3);
+        let epi = |j: usize, v: i32| (v as i64 + j as i64).clamp(0, 255) as i32;
+        let mut want = vec![0i32; m * n];
+        matmul_i32_fused_into(a32.data(), b32.data(), m, k, n, &epi, &mut want);
+        let ap = pack_vals(a32.data(), Precision::U2);
+        let planes = BitPlanes::build(&b32).unwrap();
+        let mut out = vec![0u8; m * n];
+        matmul_bitserial_fused_into(&ap, Precision::U2, m, &planes, &epi, &mut out);
+        for (o, w) in out.iter().zip(&want) {
+            assert_eq!(*o as i32, *w);
+        }
+    }
+
+    #[test]
+    fn subbyte_unpack_matmul_matches_i32_reference() {
+        // U4 and I4 activations x i8 weights through the nibble-unpack
+        // row-block kernel, below and above the threading cutoff.
+        let mut rng = Rng::new(33);
+        for p in [Precision::U4, Precision::I4, Precision::U2, Precision::U1] {
+            for (m, k, n) in [(5usize, 7usize, 3usize), (160, 96, 80)] {
+                let a32 =
+                    rand_i(&mut rng, &[m, k], p.min_val() as i64, p.max_val() as i64 + 1);
+                let b32 = rand_i(&mut rng, &[k, n], -128, 128);
+                let want = matmul_i32(&a32, &b32);
+                let ap = pack_vals(a32.data(), p);
+                let b8: Vec<i8> = b32.data().iter().map(|v| *v as i8).collect();
+                let mut out = vec![0i32; m * n];
+                matmul_subbyte_fused_into(&ap, p, &b8, m, k, n, &|_, v| v, &mut out);
+                assert_eq!(&out[..], want.data(), "{} {m}x{k}x{n}", p.name());
+            }
+        }
+    }
+
+    #[test]
+    fn subbyte_matmul_narrows_into_packed_output() {
+        // Sub-byte in, sub-byte out: the caller packs the epilogue result.
+        let mut rng = Rng::new(34);
+        let (m, k, n) = (6usize, 9usize, 4usize);
+        let a32 = rand_i(&mut rng, &[m, k], 0, 16);
+        let b32 = rand_i(&mut rng, &[k, n], -8, 8);
+        let epi = |_: usize, v: i32| (v as i64).clamp(0, 15) as i32;
+        let mut want = vec![0i32; m * n];
+        matmul_i32_fused_into(a32.data(), b32.data(), m, k, n, &epi, &mut want);
+        let ap = pack_vals(a32.data(), Precision::U4);
+        let b8: Vec<i8> = b32.data().iter().map(|v| *v as i8).collect();
+        let mut wide = vec![0i32; m * n];
+        matmul_subbyte_fused_into(&ap, Precision::U4, &b8, m, k, n, &epi, &mut wide);
+        assert_eq!(&wide[..], &want[..]);
+        let repacked = pack_vals(&wide, Precision::U4);
+        for (i, w) in want.iter().enumerate() {
+            assert_eq!(get_packed(&repacked, i, Precision::U4), *w);
+        }
+    }
+
+    #[test]
+    fn packed_subbyte_im2col_and_pools_match_wide_twins() {
+        let mut rng = Rng::new(35);
+        for p in [Precision::U1, Precision::U2, Precision::U4, Precision::I4] {
+            let x = rand_i(
+                &mut rng,
+                &[2, 3, 4, 4],
+                p.min_val() as i64,
+                p.max_val() as i64 + 1,
+            );
+            let xp = pack_vals(x.data(), p);
+
+            let (want, _) = im2col(&x, 3, 3, 1, 1);
+            let rows = want.shape()[0] * want.shape()[1];
+            let mut got = vec![0xffu8; packed_byte_len(rows, p.bits())];
+            im2col_packed_into(&xp, p, 2, 3, 4, 4, 3, 3, 1, 1, &mut got);
+            for (i, w) in want.data().iter().enumerate() {
+                assert_eq!(get_packed(&got, i, p), *w, "{} im2col", p.name());
+            }
+
+            let mut wide = vec![0i32; 2 * 3 * 2 * 2];
+            maxpool_into(x.data(), 2, 3, 4, 4, 2, &mut wide);
+            let mut got = vec![0xffu8; packed_byte_len(wide.len(), p.bits())];
+            maxpool_packed_into(&xp, p, 2, 3, 4, 4, 2, &mut got);
+            for (i, w) in wide.iter().enumerate() {
+                assert_eq!(get_packed(&got, i, p), *w, "{} maxpool", p.name());
+            }
+
+            if p != Precision::I4 {
+                // Eq. 25 avgpool on unsigned grids (the deployed case).
+                avgpool_i32_into(x.data(), 2, 3, 4, 4, 2, 12, &mut wide);
+                let mut got = vec![0xffu8; packed_byte_len(wide.len(), p.bits())];
+                avgpool_packed_into(&xp, p, 2, 3, 4, 4, 2, 12, &mut got);
+                for (i, w) in wide.iter().enumerate() {
+                    assert_eq!(get_packed(&got, i, p), *w, "{} avgpool", p.name());
+                }
+            }
+
+            let r = rand_i(
+                &mut rng,
+                &[2 * 3 * 3, 4],
+                p.min_val() as i64,
+                p.max_val() as i64 + 1,
+            );
+            let wantr = rows_to_nchw(&r, 2, 3, 3);
+            let rp = pack_vals(r.data(), p);
+            let mut got = vec![0xffu8; packed_byte_len(2 * 4 * 9, p.bits())];
+            rows_to_nchw_packed_into(&rp, p, 2, 4, 3, 3, &mut got);
+            for (i, w) in wantr.data().iter().enumerate() {
+                assert_eq!(get_packed(&got, i, p), *w, "{} scatter", p.name());
+            }
         }
     }
 

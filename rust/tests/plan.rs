@@ -6,8 +6,9 @@
 //! that defeat fusion (fanout on a conv output, standalone epilogue
 //! ops). The precision-packed execution path (`packed_layout` /
 //! `execute_packed`) is held to the same node-for-node standard on every
-//! randomized graph, and its arena must never cost more bytes than the
-//! full-width one.
+//! randomized graph — including sub-byte (Q in {1, 2, 4}) deployments
+//! whose buffers are bit-packed and whose GEMMs may run bit-serial —
+//! and its arena must never cost more bytes than the full-width one.
 
 use nemo::engine::plan::{FloatArena, IntArena, PackedArena};
 use nemo::engine::{FloatEngine, FloatPlan, IntPlan, IntegerEngine};
@@ -217,16 +218,21 @@ fn plans_match_interpreters_on_random_nets() {
         check_float_plan(&g, &x);
 
         // Deploy (randomized options) and check the QD twin + ID graph.
+        // Sub-byte activation grids (Q in {1, 2, 4}) route the packed
+        // path through bit-packed buffers; 4-bit weights plus 1-/2-bit
+        // activations additionally select the bit-serial GEMM.
         let fp = Network::from_graph(g).map_err(|e| e.to_string())?;
         let betas = fp.calibrate(&[x.clone()]);
-        let abits = [2u32, 4, 8][rng.int(0, 3) as usize];
+        let abits = [1u32, 2, 4, 8][rng.int(0, 4) as usize];
+        let wbits = [4u32, 8][rng.int(0, 2) as usize];
         let opts = DeployOptions {
+            wbits,
             abits,
             use_thresholds: rng.int(0, 2) == 0,
             ..DeployOptions::default()
         };
         let dep = fp
-            .quantize_pact(8, abits, &betas)
+            .quantize_pact(wbits, abits, &betas)
             .map_err(|e| e.to_string())?
             .deploy(opts)
             .map_err(|e| e.to_string())?

@@ -1,10 +1,11 @@
 //! Precision assignment across deployment bit widths (DESIGN.md
 //! §Precision propagation): deploying the synthnet at Q in {2, 4, 7, 8,
 //! 9} bits must stamp every IntegerDeployable node with exactly the
-//! precision its QuantSpec/clip range proves — U8 for <=8-bit activation
-//! spaces, I32 for the accumulating ops and for the 9-bit fallback — and
-//! the packed execution built on those stamps must be bit-identical to
-//! the i32 interpreter while costing strictly fewer arena bytes.
+//! precision its QuantSpec/clip range proves — the sub-byte classes
+//! (U2/U4) for few-bit activation spaces, U8 up to 8 bits, I32 for the
+//! accumulating ops and for the 9-bit fallback — and the packed
+//! execution built on those stamps must be bit-identical to the i32
+//! interpreter while costing strictly fewer arena bytes.
 
 use nemo::data::SynthDigits;
 use nemo::engine::{IntPlan, IntegerEngine, PackedArena};
@@ -59,9 +60,15 @@ fn synthnet_precision_stamps_match_quant_spec_ranges() {
                 IntOp::Input { .. } => {
                     assert_eq!(*p, Precision::U8, "Q={q} input")
                 }
-                // Activations: [0, 2^Q - 1] -> U8 up to 8 bits, I32 at 9.
+                // Activations: [0, 2^Q - 1] -> the tightest storage
+                // class (sub-byte below 8 bits), I32 at 9.
                 IntOp::RequantAct { .. } => {
-                    let want = if q <= 8 { Precision::U8 } else { Precision::I32 };
+                    let want = match q {
+                        2 => Precision::U2,
+                        4 => Precision::U4,
+                        7 | 8 => Precision::U8,
+                        _ => Precision::I32,
+                    };
                     assert_eq!(*p, want, "Q={q} activation '{}'", n.name);
                 }
                 // Accumulating ops are always full-width.
@@ -109,7 +116,11 @@ fn synthnet_thresholds_pack_like_requants() {
         );
         for n in &g.nodes {
             if let IntOp::ThreshAct { .. } = n.op {
-                let want = if q <= 8 { Precision::U8 } else { Precision::I32 };
+                let want = match q {
+                    4 => Precision::U4,
+                    8 => Precision::U8,
+                    _ => Precision::I32,
+                };
                 assert_eq!(n.precision, want, "Q={q} threshold '{}'", n.name);
             }
         }

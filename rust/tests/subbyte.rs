@@ -1,0 +1,175 @@
+//! Sub-byte storage end-to-end: bit-packed payload round-trips on
+//! randomized shapes (every sub-byte precision, boundary values),
+//! packed-payload validation, and artifact save -> load bit-identity
+//! for few-bit deployments (Q in {1, 2, 4}) whose weight sections ship
+//! bit-packed at 2-8 values per byte (DESIGN.md §Sub-byte packing).
+
+use nemo::engine::{IntPlan, IntegerEngine, PackedArena};
+use nemo::io::artifact::DeployedArtifact;
+use nemo::model::mlp;
+use nemo::network::{Network, StageMeta};
+use nemo::quant::{quantize_input, Precision};
+use nemo::tensor::{packed_byte_len, PackedTensor, QTensor, Tensor, TensorF};
+use nemo::transform::{Deployed, DeployOptions};
+use nemo::util::prop::prop_check;
+use nemo::util::rng::Rng;
+
+const SUB_BYTE: [Precision; 4] =
+    [Precision::U1, Precision::U2, Precision::U4, Precision::I4];
+
+#[test]
+fn packed_payloads_roundtrip_on_random_shapes() {
+    prop_check(60, |rng| {
+        let p = SUB_BYTE[rng.int(0, 4) as usize];
+        let rank = rng.int(1, 5) as usize;
+        let shape: Vec<usize> = (0..rank).map(|_| rng.int(1, 8) as usize).collect();
+        let n: usize = shape.iter().product();
+        let vals: Vec<i32> = (0..n)
+            .map(|_| rng.int(p.min_val(), p.max_val() + 1) as i32)
+            .collect();
+        let t = Tensor::from_vec(&shape, vals);
+        let q = QTensor::narrow_from(&t, p).map_err(|e| e.to_string())?;
+        if q.storage_bytes() != packed_byte_len(n, p.bits()) {
+            return Err(format!(
+                "{}: {} storage bytes for {n} elements",
+                p.name(),
+                q.storage_bytes()
+            ));
+        }
+        if q.widen() != t {
+            return Err(format!("{}: widen() lost values, shape {shape:?}", p.name()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn packed_boundary_values_roundtrip() {
+    for p in SUB_BYTE {
+        let vals = vec![
+            p.min_val() as i32,
+            p.max_val() as i32,
+            0,
+            p.max_val() as i32,
+            p.min_val() as i32,
+        ];
+        let t = Tensor::from_vec(&[5], vals);
+        let q = QTensor::narrow_from(&t, p).unwrap();
+        assert_eq!(q.widen(), t, "{} boundary values", p.name());
+        // One past either end is rejected, not wrapped.
+        for bad in [p.min_val() - 1, p.max_val() + 1] {
+            let t = Tensor::from_vec(&[1], vec![bad as i32]);
+            assert!(
+                QTensor::narrow_from(&t, p).is_err(),
+                "{}: {bad} must not narrow",
+                p.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn packed_payload_validation_is_loud() {
+    // Wrong byte count for the shape.
+    assert!(PackedTensor::from_bytes(&[5], Precision::U2, vec![0; 3]).is_err());
+    // Dirty trailing pad bits (3 x 2 bits used, bit 6 set).
+    assert!(
+        PackedTensor::from_bytes(&[3], Precision::U2, vec![0b0100_0000]).is_err()
+    );
+    // Byte-and-wider precisions never build packed payloads.
+    assert!(PackedTensor::from_bytes(&[3], Precision::U8, vec![0; 3]).is_err());
+    // A canonical payload decodes LSB-first.
+    let t = PackedTensor::from_bytes(&[3], Precision::U2, vec![0b00_10_01]).unwrap();
+    assert_eq!((t.get(0), t.get(1), t.get(2)), (1, 2, 0));
+}
+
+/// Deploy the MLP with 4-bit weights and a Q-bit activation grid: every
+/// weight section lands on a sub-byte class and every activation stamp
+/// on U{Q}.
+fn deployed_mlp(q: u32, seed: u64) -> (Deployed, StageMeta, TensorF) {
+    let mut rng = Rng::new(seed);
+    let g = mlp(&mut rng, 12, 10, 4, 1.0 / 255.0);
+    let x = TensorF::from_vec(
+        &[3, 12],
+        (0..36).map(|_| rng.uniform(0.0, 1.0) as f32).collect(),
+    );
+    let fp = Network::from_graph(g).unwrap();
+    let betas = fp.calibrate(&[x.clone()]);
+    let nid = fp
+        .quantize_pact(4, q, &betas)
+        .unwrap()
+        .deploy(DeployOptions { wbits: 4, abits: q, ..DeployOptions::default() })
+        .unwrap()
+        .integerize();
+    let meta = nid.meta().clone();
+    (nid.into_deployed(), meta, x)
+}
+
+#[test]
+fn artifact_roundtrip_is_bit_identical_at_subbyte_q() {
+    for (q, want_act) in
+        [(1u32, Precision::U1), (2, Precision::U2), (4, Precision::U4)]
+    {
+        let (dep, meta, x) = deployed_mlp(q, 40 + q as u64);
+        assert!(
+            dep.id.precisions().contains(&want_act),
+            "Q={q}: deployment carries no {} stamp",
+            want_act.name()
+        );
+        let art = DeployedArtifact::from_deployed(&dep, &meta);
+
+        // 4-bit weight grids ship bit-packed: every weight section in
+        // the JSON is a sub-byte dtype with a hex payload, never a wide
+        // int array.
+        let doc = art.to_json();
+        let nodes = doc
+            .get("model")
+            .unwrap()
+            .get("graph")
+            .unwrap()
+            .get("nodes")
+            .unwrap()
+            .as_arr()
+            .unwrap();
+        let mut saw_weight = false;
+        for n in nodes {
+            if let Some(w) = n.get("params").unwrap().get_opt("w") {
+                saw_weight = true;
+                let dtype = w.get("dtype").unwrap().as_str().unwrap();
+                let p = Precision::from_name(dtype).unwrap();
+                assert!(p.is_sub_byte(), "Q={q}: weight dtype '{dtype}' stored wide");
+                assert!(w.get_opt("packed").is_some(), "Q={q}: no packed payload");
+                assert!(
+                    w.get_opt("data").is_none(),
+                    "Q={q}: wide array beside packed payload"
+                );
+            }
+        }
+        assert!(saw_weight, "mlp must contain weight payloads");
+
+        let path = std::env::temp_dir().join(format!(
+            "nemo_subbyte_artifact_{}_{q}.nemo.json",
+            std::process::id()
+        ));
+        art.save(&path).unwrap();
+        let back = DeployedArtifact::load(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+
+        // Bit-identity of the frozen program, wide and packed.
+        let qx = quantize_input(&x, 1.0 / 255.0);
+        let want = IntegerEngine::new().run(&dep.id, &qx);
+        assert_eq!(
+            want,
+            IntegerEngine::new().run(&back.graph, &qx),
+            "Q={q}: wide execution diverged after reload"
+        );
+        let plan = IntPlan::compile(&back.graph).unwrap();
+        let layout = plan.packed_layout(qx.shape()[0]).unwrap();
+        let mut arena = PackedArena::new();
+        assert_eq!(
+            want,
+            plan.execute_packed(&layout, &mut arena, &qx),
+            "Q={q}: packed execution diverged after reload"
+        );
+    }
+}

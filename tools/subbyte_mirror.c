@@ -1,0 +1,616 @@
+/* Dependency-free C mirror of the NEMO integer inference kernels, used to
+ * produce the committed BENCH_plan.json / BENCH_packed.json /
+ * BENCH_subbyte.json baselines on build hosts that have a C compiler but
+ * no Rust toolchain. The loop structure mirrors rust/src/tensor/ops.rs:
+ *
+ *   - gemm_i32 / gemm_u8i8 : matmul_q_fused_into's MAC loop (accumulator
+ *     row, zero-activation skip, wrapping i32 adds);
+ *   - gemm_bitserial       : matmul_bitserial_fused_into (LSB-first packed
+ *     activations, two's-complement weight bit-planes, AND+popcount);
+ *   - gemm_nibble          : matmul_subbyte_fused_into (unpack a nibble row,
+ *     then the byte MAC loop);
+ *   - the e2e section      : the deployed synthnet shapes (conv1 1->8 s1,
+ *     conv2 8->16 s2, conv3 16->32 s2 on 16x16 inputs, avgpool k4, fc
+ *     32->10) run three ways: per-node interpreted (fresh buffers, unfused
+ *     BN/requant passes), planned wide (reused i32 arena, fused epilogue)
+ *     and planned packed (reused u8 arena, u8 x i8 GEMM).
+ *
+ * Build and run:   cc -O3 -march=native -o subbyte_mirror tools/subbyte_mirror.c && ./subbyte_mirror
+ *
+ * Each timing is a warmup + min-time loop (util::timer::bench's protocol).
+ * The program asserts that every kernel variant produces bit-identical
+ * outputs before timing it, then prints one JSON object per bench section.
+ */
+#include <stdint.h>
+#include <stdio.h>
+#include <stdlib.h>
+#include <string.h>
+#include <time.h>
+
+static double now_s(void) {
+    struct timespec ts;
+    clock_gettime(CLOCK_MONOTONIC, &ts);
+    return (double)ts.tv_sec + (double)ts.tv_nsec * 1e-9;
+}
+
+/* xorshift64* — any deterministic stream works; values only need to cover
+ * the quantized ranges. */
+static uint64_t rng_state = 0x9E3779B97F4A7C15ull;
+static uint64_t rng_next(void) {
+    uint64_t x = rng_state;
+    x ^= x >> 12;
+    x ^= x << 25;
+    x ^= x >> 27;
+    rng_state = x;
+    return x * 0x2545F4914F6CDD1Dull;
+}
+/* uniform in [lo, hi) like util::rng::Rng::int */
+static int64_t rng_int(int64_t lo, int64_t hi) {
+    return lo + (int64_t)(rng_next() % (uint64_t)(hi - lo));
+}
+
+/* warmup twice, then loop until min_time has elapsed */
+#define BENCH(t_out, min_time, stmt)                                         \
+    do {                                                                     \
+        stmt;                                                                \
+        stmt;                                                                \
+        double _t0 = now_s();                                                \
+        long _iters = 0;                                                     \
+        double _el;                                                          \
+        do {                                                                 \
+            stmt;                                                            \
+            _iters++;                                                        \
+            _el = now_s() - _t0;                                             \
+        } while (_el < (min_time));                                          \
+        (t_out) = _el / (double)_iters;                                      \
+    } while (0)
+
+/* ------------------------------------------------------------------ */
+/* kernels (mirrors of rust/src/tensor/ops.rs)                         */
+/* ------------------------------------------------------------------ */
+
+static void gemm_i32(const int32_t *a, const int32_t *b, int m, int k, int n,
+                     int32_t *out) {
+    int32_t *acc = malloc(sizeof(int32_t) * (size_t)n);
+    for (int i = 0; i < m; i++) {
+        memset(acc, 0, sizeof(int32_t) * (size_t)n);
+        const int32_t *ar = a + (size_t)i * k;
+        for (int kk = 0; kk < k; kk++) {
+            int32_t av = ar[kk];
+            if (av == 0)
+                continue;
+            const int32_t *br = b + (size_t)kk * n;
+            for (int j = 0; j < n; j++)
+                acc[j] += av * br[j];
+        }
+        memcpy(out + (size_t)i * n, acc, sizeof(int32_t) * (size_t)n);
+    }
+    free(acc);
+}
+
+static void gemm_u8i8(const uint8_t *a, const int8_t *b, int m, int k, int n,
+                      int32_t *out) {
+    int32_t *acc = malloc(sizeof(int32_t) * (size_t)n);
+    for (int i = 0; i < m; i++) {
+        memset(acc, 0, sizeof(int32_t) * (size_t)n);
+        const uint8_t *ar = a + (size_t)i * k;
+        for (int kk = 0; kk < k; kk++) {
+            int32_t av = ar[kk];
+            if (av == 0)
+                continue;
+            const int8_t *br = b + (size_t)kk * n;
+            for (int j = 0; j < n; j++)
+                acc[j] += av * (int32_t)br[j];
+        }
+        memcpy(out + (size_t)i * n, acc, sizeof(int32_t) * (size_t)n);
+    }
+    free(acc);
+}
+
+/* LSB-first sub-byte read; fields of 1/2/4 bits never straddle a byte */
+static inline unsigned get_packed(const uint8_t *d, size_t idx, int bits) {
+    size_t bit = idx * (size_t)bits;
+    return (d[bit / 8] >> (bit % 8)) & ((1u << bits) - 1);
+}
+static inline void set_packed(uint8_t *d, size_t idx, int bits, unsigned v) {
+    size_t bit = idx * (size_t)bits;
+    unsigned mask = (1u << bits) - 1;
+    d[bit / 8] = (uint8_t)((d[bit / 8] & ~(mask << (bit % 8))) |
+                           ((v & mask) << (bit % 8)));
+}
+
+/* two's-complement weight bit-planes, layout planes[(p*n + j)*words + wi] */
+static uint64_t *build_planes(const int32_t *w, int k, int n, int wbits,
+                              int words) {
+    uint64_t *planes = calloc((size_t)wbits * n * words, 8);
+    unsigned mask = (1u << wbits) - 1;
+    for (int row = 0; row < k; row++) {
+        int wi = row / 64;
+        uint64_t bit = 1ull << (row % 64);
+        for (int col = 0; col < n; col++) {
+            unsigned raw = (unsigned)w[(size_t)row * n + col] & mask;
+            for (int p = 0; p < wbits; p++)
+                if ((raw >> p) & 1)
+                    planes[((size_t)p * n + col) * words + wi] |= bit;
+        }
+    }
+    return planes;
+}
+
+static void gemm_bitserial(const uint8_t *ap, int abits, int m, int k, int n,
+                           const uint64_t *planes, int wbits, int words,
+                           int32_t *out) {
+    uint64_t *apl = calloc((size_t)abits * words, 8);
+    int32_t *acc = malloc(sizeof(int32_t) * (size_t)n);
+    for (int i = 0; i < m; i++) {
+        memset(apl, 0, (size_t)abits * words * 8);
+        size_t base = (size_t)i * k;
+        /* branchless scatter, matching the Rust kernel */
+        for (int e = 0; e < k; e++) {
+            unsigned v = get_packed(ap, base + e, abits);
+            int wi = e / 64, sh = e % 64;
+            for (int q = 0; q < abits; q++)
+                apl[(size_t)q * words + wi] |= (uint64_t)((v >> q) & 1) << sh;
+        }
+        for (int j = 0; j < n; j++) {
+            int32_t sum = 0;
+            for (int p = 0; p < wbits; p++) {
+                const uint64_t *wp = planes + ((size_t)p * n + j) * words;
+                int32_t c = (p + 1 == wbits) ? -(1 << p) : (1 << p);
+                for (int q = 0; q < abits; q++) {
+                    const uint64_t *aq = apl + (size_t)q * words;
+                    uint32_t pc = 0;
+                    for (int w = 0; w < words; w++)
+                        pc += (uint32_t)__builtin_popcountll(aq[w] & wp[w]);
+                    sum += (c << q) * (int32_t)pc;
+                }
+            }
+            acc[j] = sum;
+        }
+        memcpy(out + (size_t)i * n, acc, sizeof(int32_t) * (size_t)n);
+    }
+    free(apl);
+    free(acc);
+}
+
+static void gemm_nibble(const uint8_t *ap, int m, int k, int n,
+                        const int8_t *b, int32_t *out) {
+    int8_t *arow = malloc((size_t)k);
+    int32_t *acc = malloc(sizeof(int32_t) * (size_t)n);
+    for (int i = 0; i < m; i++) {
+        for (int e = 0; e < k; e++)
+            arow[e] = (int8_t)get_packed(ap, (size_t)i * k + e, 4);
+        memset(acc, 0, sizeof(int32_t) * (size_t)n);
+        for (int kk = 0; kk < k; kk++) {
+            int32_t av = arow[kk];
+            if (av == 0)
+                continue;
+            const int8_t *br = b + (size_t)kk * n;
+            for (int j = 0; j < n; j++)
+                acc[j] += av * (int32_t)br[j];
+        }
+        memcpy(out + (size_t)i * n, acc, sizeof(int32_t) * (size_t)n);
+    }
+    free(arow);
+    free(acc);
+}
+
+/* ------------------------------------------------------------------ */
+/* section 1: sub-byte GEMM kernels vs the byte kernel                 */
+/* ------------------------------------------------------------------ */
+
+static void section_subbyte_gemm(void) {
+    const int m = 256, k = 1024, n = 128;
+    const int words = (k + 63) / 64;
+    printf("  \"subbyte_gemm\": [\n");
+    int abits_list[3] = {1, 2, 4};
+    for (int qi = 0; qi < 3; qi++) {
+        int q = abits_list[qi];
+        int hi = (1 << q) - 1;
+        int32_t *a32 = malloc(sizeof(int32_t) * (size_t)m * k);
+        int32_t *w32 = malloc(sizeof(int32_t) * (size_t)k * n);
+        uint8_t *a8 = malloc((size_t)m * k);
+        int8_t *w8 = malloc((size_t)k * n);
+        for (size_t i = 0; i < (size_t)m * k; i++) {
+            a32[i] = (int32_t)rng_int(0, hi + 1);
+            a8[i] = (uint8_t)a32[i];
+        }
+        for (size_t i = 0; i < (size_t)k * n; i++) {
+            w32[i] = (int32_t)rng_int(-2, 2); /* 2-bit signed grid */
+            w8[i] = (int8_t)w32[i];
+        }
+        size_t packed_len = ((size_t)m * k * q + 7) / 8;
+        uint8_t *ap = calloc(packed_len, 1);
+        for (size_t i = 0; i < (size_t)m * k; i++)
+            set_packed(ap, i, q, (unsigned)a32[i]);
+
+        int32_t *out_byte = malloc(sizeof(int32_t) * (size_t)m * n);
+        int32_t *out_sub = malloc(sizeof(int32_t) * (size_t)m * n);
+        double t_byte, t_sub;
+        const char *kernel;
+        size_t w_bytes;
+        BENCH(t_byte, 0.5, gemm_u8i8(a8, w8, m, k, n, out_byte));
+        if (q <= 2) {
+            uint64_t *planes = build_planes(w32, k, n, 2, words);
+            gemm_bitserial(ap, q, m, k, n, planes, 2, words, out_sub);
+            if (memcmp(out_byte, out_sub, sizeof(int32_t) * (size_t)m * n)) {
+                fprintf(stderr, "bitserial mismatch at q=%d\n", q);
+                exit(1);
+            }
+            BENCH(t_sub, 0.5,
+                  gemm_bitserial(ap, q, m, k, n, planes, 2, words, out_sub));
+            kernel = "bitserial";
+            w_bytes = (size_t)2 * n * words * 8;
+            free(planes);
+        } else {
+            gemm_nibble(ap, m, k, n, w8, out_sub);
+            if (memcmp(out_byte, out_sub, sizeof(int32_t) * (size_t)m * n)) {
+                fprintf(stderr, "nibble mismatch at q=%d\n", q);
+                exit(1);
+            }
+            BENCH(t_sub, 0.5, gemm_nibble(ap, m, k, n, w8, out_sub));
+            kernel = "nibble";
+            w_bytes = (size_t)k * n;
+        }
+        printf("    {\"abits\": %d, \"kernel\": \"%s\", \"byte_s\": %.6e, "
+               "\"sub_s\": %.6e, \"speedup\": %.3f, \"act_bytes_byte\": %zu, "
+               "\"act_bytes_packed\": %zu, \"weight_bytes_byte\": %zu, "
+               "\"weight_bytes_packed\": %zu}%s\n",
+               q, kernel, t_byte, t_sub, t_byte / t_sub, (size_t)m * k,
+               packed_len, (size_t)k * n, w_bytes, qi + 1 < 3 ? "," : "");
+        free(a32);
+        free(w32);
+        free(a8);
+        free(w8);
+        free(ap);
+        free(out_byte);
+        free(out_sub);
+    }
+    printf("  ],\n");
+}
+
+/* ------------------------------------------------------------------ */
+/* section 2: u8 x i8 packed GEMM vs the i32 baseline                  */
+/* ------------------------------------------------------------------ */
+
+static void section_packed_gemm(void) {
+    int shapes[2][3] = {{2048, 144, 32}, {256, 256, 256}};
+    printf("  \"packed_gemm\": [\n");
+    for (int si = 0; si < 2; si++) {
+        int m = shapes[si][0], k = shapes[si][1], n = shapes[si][2];
+        int32_t *a32 = malloc(sizeof(int32_t) * (size_t)m * k);
+        int32_t *b32 = malloc(sizeof(int32_t) * (size_t)k * n);
+        uint8_t *a8 = malloc((size_t)m * k);
+        int8_t *b8 = malloc((size_t)k * n);
+        for (size_t i = 0; i < (size_t)m * k; i++) {
+            a32[i] = (int32_t)rng_int(0, 256);
+            a8[i] = (uint8_t)a32[i];
+        }
+        for (size_t i = 0; i < (size_t)k * n; i++) {
+            b32[i] = (int32_t)rng_int(-128, 128);
+            b8[i] = (int8_t)b32[i];
+        }
+        int32_t *out_i = malloc(sizeof(int32_t) * (size_t)m * n);
+        int32_t *out_q = malloc(sizeof(int32_t) * (size_t)m * n);
+        gemm_i32(a32, b32, m, k, n, out_i);
+        gemm_u8i8(a8, b8, m, k, n, out_q);
+        if (memcmp(out_i, out_q, sizeof(int32_t) * (size_t)m * n)) {
+            fprintf(stderr, "packed gemm mismatch\n");
+            exit(1);
+        }
+        double t_i32, t_q;
+        BENCH(t_i32, 0.5, gemm_i32(a32, b32, m, k, n, out_i));
+        BENCH(t_q, 0.5, gemm_u8i8(a8, b8, m, k, n, out_q));
+        printf("    {\"workload\": \"gemm_%dx%dx%d\", \"i32_s\": %.6e, "
+               "\"packed_s\": %.6e, \"speedup\": %.3f}%s\n",
+               m, k, n, t_i32, t_q, t_i32 / t_q, si == 0 ? "," : "");
+        free(a32);
+        free(b32);
+        free(a8);
+        free(b8);
+        free(out_i);
+        free(out_q);
+    }
+    printf("  ],\n");
+}
+
+/* ------------------------------------------------------------------ */
+/* section 3: synthnet-shaped e2e — interpreted / planned / packed     */
+/* ------------------------------------------------------------------ */
+
+typedef struct {
+    int cin, cout, h, w, k, stride, pad, oh, ow;
+    int8_t *w8;   /* [cin*k*k, cout] */
+    int32_t *w32; /* same values wide */
+    int32_t *bias;
+    int32_t rq_m; /* requant multiply */
+    int rq_d;     /* requant shift */
+} Layer;
+
+/* NHWC im2col: rows = B*OH*OW, cols = cin*k*k (template over elem width) */
+#define DEF_IM2COL(NAME, T)                                                  \
+    static void NAME(const T *x, int b, int c, int h, int w, int kk, int s,  \
+                     int p, int oh, int ow, T *out) {                        \
+        int cols = c * kk * kk;                                              \
+        for (int bi = 0; bi < b; bi++)                                       \
+            for (int oy = 0; oy < oh; oy++)                                  \
+                for (int ox = 0; ox < ow; ox++) {                            \
+                    T *row =                                                 \
+                        out + ((size_t)(bi * oh + oy) * ow + ox) * cols;     \
+                    for (int ci = 0; ci < c; ci++)                           \
+                        for (int ki = 0; ki < kk; ki++)                      \
+                            for (int kj = 0; kj < kk; kj++) {                \
+                                int iy = oy * s + ki - p;                    \
+                                int ix = ox * s + kj - p;                    \
+                                T v = 0;                                     \
+                                if (iy >= 0 && iy < h && ix >= 0 && ix < w)  \
+                                    v = x[((size_t)(bi * h + iy) * w + ix) * \
+                                              c +                            \
+                                          ci];                               \
+                                row[ci * kk * kk + ki * kk + kj] = v;        \
+                            }                                                \
+                }                                                            \
+    }
+DEF_IM2COL(im2col_i32, int32_t)
+DEF_IM2COL(im2col_u8, uint8_t)
+
+static inline int32_t requant(int64_t acc, int32_t m, int d, int32_t hi) {
+    int64_t v = (acc * m) >> d;
+    if (v < 0)
+        v = 0;
+    if (v > hi)
+        v = hi;
+    return (int32_t)v;
+}
+
+/* interpreted: fresh buffers per node, conv -> separate bias pass ->
+ * separate requant pass (run_interpreted's per-node tensors) */
+static void run_interpreted(const Layer *ls, int nl, const int32_t *x, int b,
+                            const int32_t *fc_w, const int32_t *fc_b,
+                            int32_t *logits) {
+    int32_t *cur = malloc(sizeof(int32_t) * (size_t)b * ls[0].cin * ls[0].h *
+                          ls[0].w);
+    memcpy(cur, x,
+           sizeof(int32_t) * (size_t)b * ls[0].cin * ls[0].h * ls[0].w);
+    for (int li = 0; li < nl; li++) {
+        const Layer *l = &ls[li];
+        int rows = b * l->oh * l->ow, cols = l->cin * l->k * l->k;
+        int32_t *patches = malloc(sizeof(int32_t) * (size_t)rows * cols);
+        im2col_i32(cur, b, l->cin, l->h, l->w, l->k, l->stride, l->pad, l->oh,
+                   l->ow, patches);
+        int32_t *conv = malloc(sizeof(int32_t) * (size_t)rows * l->cout);
+        gemm_i32(patches, l->w32, rows, cols, l->cout, conv);
+        /* separate bias node */
+        for (int r = 0; r < rows; r++)
+            for (int j = 0; j < l->cout; j++)
+                conv[(size_t)r * l->cout + j] += l->bias[j];
+        /* separate requant node */
+        int32_t *act = malloc(sizeof(int32_t) * (size_t)rows * l->cout);
+        for (size_t i = 0; i < (size_t)rows * l->cout; i++)
+            act[i] = requant(conv[i], l->rq_m, l->rq_d, 255);
+        free(patches);
+        free(conv);
+        free(cur);
+        cur = act;
+    }
+    /* avgpool k4 (exact at d=12: 4096/16) then fc */
+    const Layer *last = &ls[nl - 1];
+    int c = last->cout, hw = last->oh * last->ow;
+    int32_t *pooled = malloc(sizeof(int32_t) * (size_t)b * c);
+    for (int bi = 0; bi < b; bi++)
+        for (int ci = 0; ci < c; ci++) {
+            int64_t s = 0;
+            for (int i = 0; i < hw; i++)
+                s += cur[((size_t)bi * hw + i) * c + ci];
+            pooled[(size_t)bi * c + ci] = (int32_t)((s * 256) >> 12);
+        }
+    gemm_i32(pooled, fc_w, b, c, 10, logits);
+    for (int bi = 0; bi < b; bi++)
+        for (int j = 0; j < 10; j++)
+            logits[(size_t)bi * 10 + j] += fc_b[j];
+    free(cur);
+    free(pooled);
+}
+
+/* fused GEMM + bias + requant epilogue, i32 operands (the wide plan) */
+static void gemm_i32_fused(const int32_t *restrict a,
+                           const int32_t *restrict b, int m, int k, int n,
+                           const int32_t *restrict bias, int32_t rq_m,
+                           int rq_d, int32_t *restrict acc,
+                           int32_t *restrict out) {
+    for (int i = 0; i < m; i++) {
+        memset(acc, 0, sizeof(int32_t) * (size_t)n);
+        const int32_t *ar = a + (size_t)i * k;
+        for (int kk = 0; kk < k; kk++) {
+            int32_t av = ar[kk];
+            if (av == 0)
+                continue;
+            const int32_t *br = b + (size_t)kk * n;
+            for (int j = 0; j < n; j++)
+                acc[j] += av * br[j];
+        }
+        for (int j = 0; j < n; j++)
+            out[(size_t)i * n + j] = requant(acc[j] + bias[j], rq_m, rq_d, 255);
+    }
+}
+
+/* fused GEMM + bias + requant epilogue, u8 x i8 operands and u8 output
+ * (the packed plan) */
+static void gemm_u8i8_fused(const uint8_t *restrict a,
+                            const int8_t *restrict b, int m, int k, int n,
+                            const int32_t *restrict bias, int32_t rq_m,
+                            int rq_d, int32_t *restrict acc,
+                            uint8_t *restrict out) {
+    for (int i = 0; i < m; i++) {
+        memset(acc, 0, sizeof(int32_t) * (size_t)n);
+        const uint8_t *ar = a + (size_t)i * k;
+        for (int kk = 0; kk < k; kk++) {
+            int32_t av = ar[kk];
+            if (av == 0)
+                continue;
+            const int8_t *br = b + (size_t)kk * n;
+            for (int j = 0; j < n; j++)
+                acc[j] += av * (int32_t)br[j];
+        }
+        for (int j = 0; j < n; j++)
+            out[(size_t)i * n + j] =
+                (uint8_t)requant(acc[j] + bias[j], rq_m, rq_d, 255);
+    }
+}
+
+/* planned: preallocated arena, bias+requant fused into the GEMM epilogue.
+ * elem = 0 -> i32 activations (wide plan), elem = 1 -> u8 (packed plan). */
+static void run_planned(const Layer *ls, int nl, const void *x, int b,
+                        const int32_t *fc_w, const int8_t *fc_w8,
+                        const int32_t *fc_b, int elem, void **arena,
+                        int32_t *logits) {
+    /* arena: [0] activations a, [1] patches, [2] activations b, [3] pooled */
+    const void *cur = x;
+    int32_t *acc = arena[4];
+    for (int li = 0; li < nl; li++) {
+        const Layer *l = &ls[li];
+        int rows = b * l->oh * l->ow, cols = l->cin * l->k * l->k;
+        void *patches = arena[1];
+        void *next = arena[li % 2 ? 0 : 2];
+        if (elem == 0) {
+            im2col_i32((const int32_t *)cur, b, l->cin, l->h, l->w, l->k,
+                       l->stride, l->pad, l->oh, l->ow, (int32_t *)patches);
+            gemm_i32_fused((const int32_t *)patches, l->w32, rows, cols,
+                           l->cout, l->bias, l->rq_m, l->rq_d, acc,
+                           (int32_t *)next);
+        } else {
+            im2col_u8((const uint8_t *)cur, b, l->cin, l->h, l->w, l->k,
+                      l->stride, l->pad, l->oh, l->ow, (uint8_t *)patches);
+            gemm_u8i8_fused((const uint8_t *)patches, l->w8, rows, cols,
+                            l->cout, l->bias, l->rq_m, l->rq_d, acc,
+                            (uint8_t *)next);
+        }
+        cur = next;
+    }
+    const Layer *last = &ls[nl - 1];
+    int c = last->cout, hw = last->oh * last->ow;
+    int32_t *pooled = arena[3];
+    for (int bi = 0; bi < b; bi++)
+        for (int ci = 0; ci < c; ci++) {
+            int64_t s = 0;
+            for (int i = 0; i < hw; i++)
+                s += elem == 0
+                         ? ((const int32_t *)cur)[((size_t)bi * hw + i) * c +
+                                                  ci]
+                         : ((const uint8_t *)cur)[((size_t)bi * hw + i) * c +
+                                                  ci];
+            pooled[(size_t)bi * c + ci] = (int32_t)((s * 256) >> 12);
+        }
+    for (int bi = 0; bi < b; bi++) {
+        memset(acc, 0, sizeof(int32_t) * 10);
+        for (int kk = 0; kk < c; kk++) {
+            int32_t av = pooled[(size_t)bi * c + kk];
+            if (av == 0)
+                continue;
+            for (int j = 0; j < 10; j++)
+                acc[j] += av * (elem == 0 ? fc_w[(size_t)kk * 10 + j]
+                                          : (int32_t)fc_w8[(size_t)kk * 10 + j]);
+        }
+        for (int j = 0; j < 10; j++)
+            logits[(size_t)bi * 10 + j] = acc[j] + fc_b[j];
+    }
+}
+
+static void section_e2e(void) {
+    Layer ls[3] = {
+        {1, 8, 16, 16, 3, 1, 1, 16, 16, 0, 0, 0, 29, 13},
+        {8, 16, 16, 16, 3, 2, 1, 8, 8, 0, 0, 0, 29, 17},
+        {16, 32, 8, 8, 3, 2, 1, 4, 4, 0, 0, 0, 29, 18},
+    };
+    for (int li = 0; li < 3; li++) {
+        Layer *l = &ls[li];
+        size_t wn = (size_t)l->cin * l->k * l->k * l->cout;
+        l->w32 = malloc(sizeof(int32_t) * wn);
+        l->w8 = malloc(wn);
+        l->bias = malloc(sizeof(int32_t) * (size_t)l->cout);
+        for (size_t i = 0; i < wn; i++) {
+            l->w32[i] = (int32_t)rng_int(-128, 128);
+            l->w8[i] = (int8_t)l->w32[i];
+        }
+        for (int j = 0; j < l->cout; j++)
+            l->bias[j] = (int32_t)rng_int(-1000, 1000);
+    }
+    int32_t fc_w[32 * 10], fc_b[10];
+    int8_t fc_w8[32 * 10];
+    for (int i = 0; i < 32 * 10; i++) {
+        fc_w[i] = (int32_t)rng_int(-128, 128);
+        fc_w8[i] = (int8_t)fc_w[i];
+    }
+    for (int j = 0; j < 10; j++)
+        fc_b[j] = (int32_t)rng_int(-1000, 1000);
+
+    printf("  \"e2e_synthnet\": [\n");
+    int batches[2] = {1, 16};
+    for (int bi = 0; bi < 2; bi++) {
+        int b = batches[bi];
+        size_t in_n = (size_t)b * 256; /* 1x16x16 */
+        int32_t *x32 = malloc(sizeof(int32_t) * in_n);
+        uint8_t *x8 = malloc(in_n);
+        for (size_t i = 0; i < in_n; i++) {
+            x32[i] = (int32_t)rng_int(0, 256);
+            x8[i] = (uint8_t)x32[i];
+        }
+        /* arena slots sized for the largest per-slot use across layers */
+        size_t max_act = (size_t)b * 8 * 16 * 16;
+        size_t max_patch = (size_t)b * 16 * 16 * 72;
+        void *arena_wide[5] = {malloc(4 * max_act), malloc(4 * max_patch),
+                               malloc(4 * max_act), malloc(4 * (size_t)b * 32),
+                               malloc(4 * 64)};
+        void *arena_packed[5] = {malloc(max_act), malloc(max_patch),
+                                 malloc(max_act), malloc(4 * (size_t)b * 32),
+                                 malloc(4 * 64)};
+        int32_t *lg_i = malloc(sizeof(int32_t) * (size_t)b * 10);
+        int32_t *lg_w = malloc(sizeof(int32_t) * (size_t)b * 10);
+        int32_t *lg_p = malloc(sizeof(int32_t) * (size_t)b * 10);
+        run_interpreted(ls, 3, x32, b, fc_w, fc_b, lg_i);
+        run_planned(ls, 3, x32, b, fc_w, NULL, fc_b, 0, arena_wide, lg_w);
+        run_planned(ls, 3, x8, b, NULL, fc_w8, fc_b, 1, arena_packed, lg_p);
+        if (memcmp(lg_i, lg_w, sizeof(int32_t) * (size_t)b * 10) ||
+            memcmp(lg_i, lg_p, sizeof(int32_t) * (size_t)b * 10)) {
+            fprintf(stderr, "e2e mismatch at b=%d\n", b);
+            exit(1);
+        }
+        double t_interp, t_wide, t_packed;
+        BENCH(t_interp, 0.7, run_interpreted(ls, 3, x32, b, fc_w, fc_b, lg_i));
+        BENCH(t_wide, 0.7,
+              run_planned(ls, 3, x32, b, fc_w, NULL, fc_b, 0, arena_wide,
+                          lg_w));
+        BENCH(t_packed, 0.7,
+              run_planned(ls, 3, x8, b, NULL, fc_w8, fc_b, 1, arena_packed,
+                          lg_p));
+        printf("    {\"batch\": %d, \"interpreted_s\": %.6e, \"planned_s\": "
+               "%.6e, \"plan_speedup\": %.3f, \"packed_s\": %.6e, "
+               "\"packed_speedup\": %.3f}%s\n",
+               b, t_interp, t_wide, t_interp / t_wide, t_packed,
+               t_wide / t_packed, bi == 0 ? "," : "");
+        free(x32);
+        free(x8);
+        for (int i = 0; i < 5; i++) {
+            free(arena_wide[i]);
+            free(arena_packed[i]);
+        }
+        free(lg_i);
+        free(lg_w);
+        free(lg_p);
+    }
+    printf("  ]\n");
+    for (int li = 0; li < 3; li++) {
+        free(ls[li].w32);
+        free(ls[li].w8);
+        free(ls[li].bias);
+    }
+}
+
+int main(void) {
+    printf("{\n");
+    section_subbyte_gemm();
+    section_packed_gemm();
+    section_e2e();
+    printf("}\n");
+    return 0;
+}
