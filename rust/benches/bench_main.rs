@@ -21,6 +21,8 @@ use nemo::engine::{FloatEngine, IntPlan, IntegerEngine};
 use nemo::exec::{ExecInput, Executor, NativeIntExecutor};
 use nemo::graph::int::{IntGraph, IntOp};
 use nemo::graph::Graph;
+use nemo::io::artifact::{binary_info, DeployedArtifact};
+use nemo::io::BinLoadMode;
 use nemo::model::residual_net;
 use nemo::model::synthnet::{SynthNet, EPS_IN};
 use nemo::network::{FakeQuantized, Network};
@@ -844,11 +846,10 @@ fn weight_section_bytes(g: &IntGraph) -> (usize, usize) {
             IntOp::ConvInt { wq, .. } | IntOp::LinearInt { wq, .. } => wq,
             _ => continue,
         };
-        let d = wq.data();
-        let lo = d.iter().copied().min().unwrap_or(0) as i64;
-        let hi = d.iter().copied().max().unwrap_or(0) as i64;
-        packed += Precision::for_range(lo, hi).storage_bytes(d.len());
-        byte += d.len();
+        let (lo, hi) = wq.min_max();
+        let len = wq.len();
+        packed += Precision::for_range(lo, hi).storage_bytes(len);
+        byte += len;
     }
     (packed, byte)
 }
@@ -1075,6 +1076,65 @@ fn artifact_cold_load_and_serve() {
         fmt_time(t_load)
     );
 
+    // Binary v3 container: same model, 64-byte-aligned sections, weights
+    // mapped as zero-copy views (DESIGN.md §Artifact-format).
+    let bin_path = std::env::temp_dir()
+        .join(format!("bench_artifact_{}.nemob", std::process::id()));
+    let (t_save_bin, _) = bench(1, 0.3, || {
+        nid.save_deployed_bin(&bin_path).expect("save bin");
+    });
+    let bin_bytes = std::fs::metadata(&bin_path).map(|m| m.len()).unwrap_or(0);
+    let (t_load_bin, _) = bench(1, 0.5, || {
+        std::hint::black_box(
+            NativeIntExecutor::from_artifact(&bin_path, max_batch)
+                .expect("bin from_artifact"),
+        );
+    });
+    // Artifact decode alone (no plan compilation), per load path: the
+    // JSON parse/narrow pipeline vs the mmap view construction vs the
+    // aligned-read fallback.
+    let (t_art_json, _) = bench(1, 0.5, || {
+        std::hint::black_box(DeployedArtifact::load(&path).expect("json load"));
+    });
+    let (t_art_mmap, _) = bench(1, 0.5, || {
+        std::hint::black_box(
+            DeployedArtifact::load_binary(&bin_path, BinLoadMode::Auto)
+                .expect("mmap load"),
+        );
+    });
+    let (t_art_read, _) = bench(1, 0.5, || {
+        std::hint::black_box(
+            DeployedArtifact::load_binary(&bin_path, BinLoadMode::Read)
+                .expect("read load"),
+        );
+    });
+    let (_, _, stats) = DeployedArtifact::load_binary(&bin_path, BinLoadMode::Auto)
+        .expect("stats load");
+    let binfo = binary_info(&bin_path).expect("binary info");
+    println!(
+        "  binary artifact: {bin_bytes} bytes ({:.2}x smaller)  save {}  \
+         cold load->executor {} ({:.1}x vs JSON)",
+        bytes as f64 / bin_bytes as f64,
+        fmt_time(t_save_bin),
+        fmt_time(t_load_bin),
+        t_load / t_load_bin,
+    );
+    println!(
+        "  artifact decode: json {}  mmap {} ({:.1}x)  read {} ({:.1}x)  \
+         [{} sections, {} B weights ({} B aligned), borrowed {} B, copied {} B, mmap = {}]",
+        fmt_time(t_art_json),
+        fmt_time(t_art_mmap),
+        t_art_json / t_art_mmap,
+        fmt_time(t_art_read),
+        t_art_json / t_art_read,
+        binfo.sections.len(),
+        binfo.weight_bytes,
+        binfo.aligned_weight_bytes,
+        stats.borrowed_bytes,
+        stats.copied_bytes,
+        stats.mmap,
+    );
+
     // Serve-from-artifact throughput, direct executor path.
     let exec = NativeIntExecutor::from_artifact(&path, max_batch).expect("from_artifact");
     let (x, _) = SynthDigits::eval_set(880, max_batch);
@@ -1138,12 +1198,34 @@ fn artifact_cold_load_and_serve() {
             ("exec_imgs_per_s", Value::Num(max_batch as f64 / t_exec)),
             ("serve_req_per_s", Value::Num(m.throughput(wall))),
             ("serve_p99_ms", Value::Num(m.e2e_latency.percentile(0.99) * 1e3)),
+            ("bin_file_bytes", Value::Int(bin_bytes as i64)),
+            ("bin_save_s", Value::Num(t_save_bin)),
+            ("bin_cold_load_s", Value::Num(t_load_bin)),
+            ("bin_cold_load_speedup", Value::Num(t_load / t_load_bin)),
+            ("art_decode_json_s", Value::Num(t_art_json)),
+            ("art_decode_mmap_s", Value::Num(t_art_mmap)),
+            ("art_decode_read_s", Value::Num(t_art_read)),
+            ("art_decode_mmap_speedup", Value::Num(t_art_json / t_art_mmap)),
+            ("bin_sections", Value::Int(binfo.sections.len() as i64)),
+            ("bin_weight_bytes", Value::Int(binfo.weight_bytes as i64)),
+            (
+                "bin_aligned_weight_bytes",
+                Value::Int(binfo.aligned_weight_bytes as i64),
+            ),
+            (
+                "bin_alignment_overhead",
+                Value::Num(binfo.aligned_weight_bytes as f64 / binfo.weight_bytes as f64),
+            ),
+            ("bin_borrowed_bytes", Value::Int(stats.borrowed_bytes as i64)),
+            ("bin_copied_bytes", Value::Int(stats.copied_bytes as i64)),
+            ("bin_mmap", Value::Bool(stats.mmap)),
         ]),
     )]);
     std::fs::write("BENCH_artifact.json", json::write(&doc))
         .expect("write BENCH_artifact.json");
     println!("  wrote BENCH_artifact.json");
     let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(&bin_path);
 }
 
 // ---------------------------------------------------------------------------

@@ -96,6 +96,29 @@ impl Args {
     }
 }
 
+/// A `--model` value: `name=path`, or a bare path whose model name
+/// defaults to the file stem with any artifact extension stripped —
+/// `models/a.nemo.json`, `models/a.json` and `models/a.nemob` all
+/// serve as "a".
+pub fn model_spec(spec: &str) -> (String, String) {
+    if let Some((name, path)) = spec.split_once('=') {
+        if !name.is_empty() && !name.contains('/') {
+            return (name.to_string(), path.to_string());
+        }
+    }
+    let stem = std::path::Path::new(spec)
+        .file_name()
+        .map(|s| s.to_string_lossy().to_string())
+        .unwrap_or_else(|| spec.to_string());
+    let name = stem
+        .strip_suffix(".nemo.json")
+        .or_else(|| stem.strip_suffix(".json"))
+        .or_else(|| stem.strip_suffix(".nemob"))
+        .unwrap_or(stem.as_str())
+        .to_string();
+    (name, spec.to_string())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -135,6 +158,15 @@ mod tests {
         let argv: Vec<String> =
             ["client", "infer", "extra"].iter().map(|s| s.to_string()).collect();
         assert!(Args::parse(&argv).is_err());
+    }
+
+    #[test]
+    fn model_specs_strip_artifact_extensions() {
+        assert_eq!(model_spec("models/a.nemo.json"), ("a".into(), "models/a.nemo.json".into()));
+        assert_eq!(model_spec("b.json"), ("b".into(), "b.json".into()));
+        assert_eq!(model_spec("models/c.nemob"), ("c".into(), "models/c.nemob".into()));
+        assert_eq!(model_spec("named=x.nemob"), ("named".into(), "x.nemob".into()));
+        assert_eq!(model_spec("plain"), ("plain".into(), "plain".into()));
     }
 
     #[test]

@@ -96,9 +96,12 @@ impl IntegerEngine {
                     // accumulator fits i32 (overflow would have aborted
                     // the transform). Debug builds double-check via the
                     // engine's checked per-op arithmetic elsewhere.
+                    // Weights live at their packed precision; this
+                    // diagnostic path widens them per run (the serving
+                    // path — engine/plan — consumes them packed).
                     let mut y = ops::conv2d_i32_wmat_fast(
                         outs[n.inputs[0]].as_ref().unwrap(),
-                        wq,
+                        &wq.widen(),
                         *kh,
                         *kw,
                         *stride,
@@ -111,7 +114,7 @@ impl IntegerEngine {
                 }
                 IntOp::LinearInt { wq, bias_q } => {
                     let mut y =
-                        ops::matmul_i32_fast(outs[n.inputs[0]].as_ref().unwrap(), wq);
+                        ops::matmul_i32_fast(outs[n.inputs[0]].as_ref().unwrap(), &wq.widen());
                     if let Some(b) = bias_q {
                         let c = y.shape()[1];
                         for (i, v) in y.data_mut().iter_mut().enumerate() {
@@ -230,7 +233,7 @@ mod tests {
         let spec = QuantSpec { eps: 1.0 / 255.0, lo: 0, hi: 255 };
         let x = g.push("in", IntOp::Input { shape: vec![1, 2, 2], spec }, &[]);
         // 1x1 conv, 1 -> 1 channel... use 2 channels to exercise layout
-        let wq = Tensor::from_vec(&[1, 2], vec![2, -1]);
+        let wq = Tensor::from_vec(&[1, 2], vec![2, -1]).into();
         let c = g.push(
             "conv",
             IntOp::ConvInt { wq, bias_q: None, cin: 1, kh: 1, kw: 1, stride: 1, pad: 0 },
@@ -264,7 +267,7 @@ mod tests {
         let mut g = IntGraph::default();
         let spec = QuantSpec { eps: 1.0, lo: 0, hi: 255 };
         let x = g.push("in", IntOp::Input { shape: vec![2], spec }, &[]);
-        let wq = Tensor::from_vec(&[2, 2], vec![1, 0, 0, 1]);
+        let wq = Tensor::from_vec(&[2, 2], vec![1, 0, 0, 1]).into();
         g.push("fc", IntOp::LinearInt { wq, bias_q: None }, &[x]);
         let qx = Tensor::from_vec(&[1, 2], vec![0, 300]); // 300 > spec hi
         let _ = IntegerEngine::new().run_packed(&g, &qx);
@@ -301,7 +304,7 @@ mod tests {
         let spec = QuantSpec { eps: 1.0, lo: 0, hi: 255 };
         let x = g.push("in", IntOp::Input { shape: vec![2, 1, 1], spec }, &[]);
         let f = g.push("fl", IntOp::Flatten, &[x]);
-        let wq = Tensor::from_vec(&[2, 2], vec![1, 2, 3, 4]);
+        let wq = Tensor::from_vec(&[2, 2], vec![1, 2, 3, 4]).into();
         g.push("fc", IntOp::LinearInt { wq, bias_q: Some(vec![5, -5]) }, &[f]);
         let qx = Tensor::from_vec(&[1, 2, 1, 1], vec![10, 20]);
         let out = IntegerEngine::new().run(&g, &qx);

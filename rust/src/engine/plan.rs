@@ -498,18 +498,37 @@ fn int_epi_fn<'a>(
 /// symmetric grid — 1 byte/element on BOTH execution paths), and stays
 /// i32 otherwise (the wide-node fallback). Never `U8`: symmetric weight
 /// grids that fit a byte always fit i8.
-fn pack_weights(wq: &TensorI) -> QTensor {
-    let fits = wq
-        .data()
-        .iter()
-        .all(|v| (i8::MIN as i32..=i8::MAX as i32).contains(v));
-    if fits {
-        QTensor::I8(Tensor::from_vec(
-            wq.shape(),
-            wq.data().iter().map(|v| *v as i8).collect(),
-        ))
-    } else {
-        QTensor::I32(wq.clone())
+///
+/// Graph weights already arrive precision-tagged (`IntOp.wq` is a
+/// [`QTensor`]). `I8` weights are reused as-is — a cheap clone that
+/// *preserves borrowed storage*, so a plan compiled from an mmap'ed
+/// binary artifact keeps serving GEMM weights straight out of the
+/// mapping with zero weight-byte copies. Sub-byte weights expand to
+/// owned i8 here (2-8x, at plan-compile time only): the GEMM kernels
+/// stream one weight byte per element, and the bit-serial path
+/// re-slices its own bit planes below either way.
+fn pack_weights(wq: &QTensor) -> QTensor {
+    match wq {
+        QTensor::I8(_) => wq.clone(),
+        QTensor::U8(t) if t.data().iter().all(|v| *v <= i8::MAX as u8) => {
+            QTensor::I8(t.map(|v| v as i8))
+        }
+        QTensor::U8(t) => QTensor::I32(t.map(|v| v as i32)),
+        QTensor::I32(t) => {
+            let fits = t
+                .data()
+                .iter()
+                .all(|v| (i8::MIN as i32..=i8::MAX as i32).contains(v));
+            if fits {
+                QTensor::I8(t.map(|v| v as i8))
+            } else {
+                wq.clone()
+            }
+        }
+        QTensor::Packed(t) => QTensor::I8(Tensor::from_vec(
+            t.shape(),
+            (0..t.len()).map(|i| t.get(i) as i8).collect(),
+        )),
     }
 }
 
@@ -2156,7 +2175,8 @@ mod tests {
         let mut g = IntGraph::default();
         let spec = QuantSpec { eps: 1.0 / 255.0, lo: 0, hi: 255 };
         let x = g.push("in", IntOp::Input { shape: vec![1, 4, 4], spec }, &[]);
-        let wq = Tensor::from_vec(&[9, 2], (0..18).map(|i| (i % 5) as i32 - 2).collect());
+        let wq =
+            Tensor::from_vec(&[9, 2], (0..18).map(|i| (i % 5) as i32 - 2).collect()).into();
         let c = g.push(
             "conv",
             IntOp::ConvInt {
@@ -2267,7 +2287,8 @@ mod tests {
         let mut g = IntGraph::default();
         let spec = QuantSpec { eps: 1.0 / 3.0, lo: 0, hi: 3 };
         let x = g.push("in", IntOp::Input { shape: vec![1, 4, 4], spec }, &[]);
-        let wq = Tensor::from_vec(&[9, 2], (0..18).map(|i| (i % 3) as i32 - 1).collect());
+        let wq =
+            Tensor::from_vec(&[9, 2], (0..18).map(|i| (i % 3) as i32 - 1).collect()).into();
         let c = g.push(
             "conv",
             IntOp::ConvInt {
@@ -2332,7 +2353,8 @@ mod tests {
         let mut g = IntGraph::default();
         let spec = QuantSpec { eps: 1.0 / 15.0, lo: 0, hi: 15 };
         let x = g.push("in", IntOp::Input { shape: vec![6], spec }, &[]);
-        let wq = Tensor::from_vec(&[6, 3], (0..18).map(|i| (i % 11) as i32 - 5).collect());
+        let wq =
+            Tensor::from_vec(&[6, 3], (0..18).map(|i| (i % 11) as i32 - 5).collect()).into();
         let fc = g.push(
             "fc",
             IntOp::LinearInt { wq, bias_q: Some(vec![4, 0, -4]) },
@@ -2376,7 +2398,7 @@ mod tests {
         let mut g = IntGraph::default();
         let spec = QuantSpec { eps: 1.0, lo: 0, hi: 511 };
         let x = g.push("in", IntOp::Input { shape: vec![2], spec }, &[]);
-        let wq = Tensor::from_vec(&[2, 2], vec![300, 0, 0, 300]);
+        let wq = Tensor::from_vec(&[2, 2], vec![300, 0, 0, 300]).into();
         g.push("fc", IntOp::LinearInt { wq, bias_q: None }, &[x]);
         let plan = IntPlan::compile(&g).unwrap();
         assert!(!plan.has_packed_steps());
@@ -2426,7 +2448,7 @@ mod tests {
     #[test]
     fn compile_rejects_missing_input() {
         let mut g = IntGraph::default();
-        let wq = Tensor::from_vec(&[1, 1], vec![1]);
+        let wq = Tensor::from_vec(&[1, 1], vec![1]).into();
         g.push("fc", IntOp::LinearInt { wq, bias_q: None }, &[]);
         assert!(IntPlan::compile(&g).is_err());
     }

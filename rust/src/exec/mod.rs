@@ -255,10 +255,14 @@ impl NativeIntExecutor {
     }
 
     /// Build the executor straight from a saved native deployment
-    /// artifact (`model.nemo.json`): load + checksum validation +
-    /// precision re-proof + plan compilation — serving with zero
-    /// training or transform work. This is the `nemo serve --model`
-    /// cold-start path.
+    /// artifact: load + checksum validation + precision re-proof + plan
+    /// compilation — serving with zero training or transform work. This
+    /// is the `nemo serve --model` cold-start path. Both on-disk forms
+    /// work (the loader sniffs the leading bytes): the JSON document
+    /// (`model.nemo.json`) decodes weight payloads into owned tensors,
+    /// the v3 binary container (`model.nemob`) is mmapped and its
+    /// weight sections become zero-copy views that the plan compiler's
+    /// `pack_weights` carries through to the GEMM kernels.
     pub fn from_artifact(
         path: impl AsRef<std::path::Path>,
         max_batch: usize,
@@ -434,7 +438,7 @@ mod tests {
         let mut g = IntGraph::default();
         let spec = QuantSpec { eps: 1.0, lo: 0, hi: 255 };
         let x = g.push("in", IntOp::Input { shape: vec![2], spec }, &[]);
-        let wq = Tensor::from_vec(&[2, 2], vec![1, 0, 0, 1]);
+        let wq = Tensor::from_vec(&[2, 2], vec![1, 0, 0, 1]).into();
         g.push("fc", IntOp::LinearInt { wq, bias_q: None }, &[x]);
         g.eps_out = 1.0;
         g
@@ -486,7 +490,7 @@ mod tests {
         let mut g = IntGraph::default();
         let spec = QuantSpec { eps: 1.0, lo: 0, hi: 1 << 16 };
         let x = g.push("in", IntOp::Input { shape: vec![2], spec }, &[]);
-        let wq = Tensor::from_vec(&[2, 2], vec![1, 0, 0, 1]);
+        let wq = Tensor::from_vec(&[2, 2], vec![1, 0, 0, 1]).into();
         g.push("fc", IntOp::LinearInt { wq, bias_q: None }, &[x]);
         g.eps_out = 1.0;
         let exec = NativeIntExecutor::new(g, 2).unwrap();
@@ -565,7 +569,7 @@ mod tests {
     #[test]
     fn native_int_executor_requires_input_node() {
         let mut g = IntGraph::default();
-        let wq = Tensor::from_vec(&[1, 1], vec![1]);
+        let wq = Tensor::from_vec(&[1, 1], vec![1]).into();
         g.push("fc", IntOp::LinearInt { wq, bias_q: None }, &[]);
         assert!(NativeIntExecutor::new(g, 4).is_err());
     }

@@ -7,11 +7,18 @@
 use crate::quant::bn::{BnQuant, Thresholds};
 use crate::quant::requant::Requant;
 use crate::quant::{Precision, QuantSpec};
-use crate::tensor::TensorI;
+use crate::tensor::QTensor;
 
 pub type NodeId = usize;
 
 /// Integer-domain operator.
+///
+/// GEMM weights are precision-tagged [`QTensor`] images stored at their
+/// packed precision (i8 for byte grids, bit-packed for sub-byte grids,
+/// i32 only when the values genuinely need it) — the representation a
+/// binary artifact's zero-copy weight views load straight into. Widening
+/// to `TensorI` (`wq.widen()`) is always available for full-width
+/// consumers like the interpreter.
 #[derive(Clone, Debug)]
 pub enum IntOp {
     /// Integer input image, NCHW shape (without batch).
@@ -19,7 +26,7 @@ pub enum IntOp {
     /// Convolution with weights in matrix layout [C_in*KH*KW, C_out]
     /// (Eq. 16). Bias (if any) is already in the eps_phi space.
     ConvInt {
-        wq: TensorI,
+        wq: QTensor,
         bias_q: Option<Vec<i64>>,
         cin: usize,
         kh: usize,
@@ -28,7 +35,7 @@ pub enum IntOp {
         pad: usize,
     },
     /// Fully-connected: weights [in, out] (Eq. 16).
-    LinearInt { wq: TensorI, bias_q: Option<Vec<i64>> },
+    LinearInt { wq: QTensor, bias_q: Option<Vec<i64>> },
     /// Integer batch-norm (Eq. 22).
     IntBn { bn: BnQuant },
     /// Requantizing activation (Eq. 11): clip((m*q) >> d, 0, 2^Q-1).
@@ -188,7 +195,7 @@ mod tests {
         let mut g = IntGraph::default();
         let spec = QuantSpec { eps: 1.0 / 255.0, lo: 0, hi: 255 };
         let x = g.push("in", IntOp::Input { shape: vec![1, 4, 4], spec }, &[]);
-        let wq = Tensor::from_vec(&[9, 2], vec![1; 18]);
+        let wq = Tensor::from_vec(&[9, 2], vec![1; 18]).into();
         let c = g.push(
             "conv",
             IntOp::ConvInt { wq, bias_q: None, cin: 1, kh: 3, kw: 3, stride: 1, pad: 1 },

@@ -460,7 +460,7 @@ mod tests {
         let mut g = IntGraph::default();
         let spec = QuantSpec { eps: 1.0 / 255.0, lo: 0, hi: 255 };
         let x = g.push("in", IntOp::Input { shape: vec![1, 8, 8], spec }, &[]);
-        let wq = Tensor::zeros(&[9, 4]); // 1*3*3 -> 4 channels
+        let wq = Tensor::zeros(&[9, 4]).into(); // 1*3*3 -> 4 channels
         let c = g.push(
             "c",
             IntOp::ConvInt { wq, bias_q: None, cin: 1, kh: 3, kw: 3, stride: 1, pad: 1 },
@@ -468,7 +468,7 @@ mod tests {
         );
         let p = g.push("mp", IntOp::MaxPoolInt { k: 2 }, &[c]);
         let f = g.push("fl", IntOp::Flatten, &[p]);
-        let wq2 = Tensor::zeros(&[4 * 4 * 4, 10]);
+        let wq2 = Tensor::zeros(&[4 * 4 * 4, 10]).into();
         g.push("fc", IntOp::LinearInt { wq: wq2, bias_q: None }, &[f]);
         let shapes = infer_int(&g, 2).unwrap();
         assert_eq!(shapes[1], vec![2, 4, 8, 8]);
@@ -491,7 +491,7 @@ mod tests {
         let mut g = IntGraph::default();
         let spec = QuantSpec { eps: 1.0, lo: 0, hi: 255 };
         let x = g.push("in", IntOp::Input { shape: vec![4], spec }, &[]);
-        let wq = Tensor::zeros(&[4, 2]);
+        let wq = Tensor::zeros(&[4, 2]).into();
         let l = g.push("fc", IntOp::LinearInt { wq, bias_q: None }, &[x]);
         let rq = crate::quant::requant::Requant { m: 1, d: 0, lo: 0, hi: 255 };
         g.push("add", IntOp::AddRequant { rqs: vec![rq] }, &[x, l]);
@@ -509,7 +509,7 @@ mod tests {
         let mut g = IntGraph::default();
         let spec = QuantSpec { eps: 1.0 / 255.0, lo: 0, hi: 255 };
         let x = g.push("in", IntOp::Input { shape: vec![1, 4, 4], spec }, &[]);
-        let wq = Tensor::zeros(&[9, 2]);
+        let wq = Tensor::zeros(&[9, 2]).into();
         let c = g.push(
             "c",
             IntOp::ConvInt { wq, bias_q: None, cin: 1, kh: 3, kw: 3, stride: 1, pad: 1 },

@@ -1,5 +1,6 @@
 //! Native deployment artifacts: save/load a complete IntegerDeployable
-//! model as a single self-contained JSON file (`model.nemo.json`).
+//! model as a single self-contained file — the v2 JSON form
+//! (`model.nemo.json`) or the v3 binary container (`model.nemob`).
 //!
 //! The paper's IntegerDeployable representation is a frozen integer
 //! program — topology, packed weights, requantization parameters
@@ -26,8 +27,29 @@
 //! * every node's stamped [`Precision`] is re-proved by
 //!   [`infer_precision`] after reconstruction — a tampered stamp cannot
 //!   reach the packed kernels.
+//!
+//! The v3 binary container keeps that whole contract and adds a
+//! zero-copy cold-load path (DESIGN.md §Artifact-format v3):
+//!
+//! ```text
+//! [ 8B magic "NEMOBIN\0" | u32 LE container version | u32 LE header len ]
+//! [ JSON header: {checksum, format, model, sections, version} ]
+//! [ zero pad to the 64-byte payload base ]
+//! [ section 0 bytes | pad to 64 | section 1 bytes | ... ]
+//! ```
+//!
+//! The header's `model` subtree is the v2 schema with every weight
+//! payload replaced by a `{dtype, shape, section}` reference into the
+//! section table; each section records its payload length and an
+//! FNV-1a 64 checksum over the raw bytes. Payloads are byte-identical
+//! to the in-memory packed representation (`u8`/`i8` bytes, `i32`
+//! little-endian, sub-byte bitstreams), and every section offset is
+//! 64-byte aligned, so the loader `mmap`s the file and hands the graph
+//! [`QTensor`] *views* borrowing the mapping — weight bytes are never
+//! copied on the map path ([`BinLoadStats`] proves it).
 
 use std::path::Path;
+use std::sync::Arc;
 
 use crate::graph::int::{IntGraph, IntOp};
 use crate::graph::shape::{infer_precision, ShapeError};
@@ -36,7 +58,8 @@ use crate::network::StageMeta;
 use crate::quant::bn::{BnQuant, Thresholds};
 use crate::quant::requant::Requant;
 use crate::quant::{Precision, QuantSpec};
-use crate::tensor::{PackedTensor, QTensor, Tensor, TensorI};
+use crate::io::mmap::{AlignedBytes, BinLoadMode, MappedFile};
+use crate::tensor::{ByteSource, PackedTensor, QTensor, Tensor, TensorI};
 use crate::transform::{Deployed, LayerQuant};
 use crate::util::json::{self, JsonError, Value};
 
@@ -54,6 +77,20 @@ pub const MIN_VERSION: i64 = 1;
 /// First schema version whose readers understand sub-byte dtypes.
 const SUBBYTE_VERSION: i64 = 2;
 
+/// Leading magic of the v3 binary container (`model.nemob`).
+pub const BIN_MAGIC: [u8; 8] = *b"NEMOBIN\0";
+/// Container version the binary writer emits (and the only one this
+/// build reads). The embedded JSON header declares the same number.
+pub const BIN_VERSION: u32 = 3;
+/// Every weight section starts on this boundary, so an `mmap` of the
+/// file (page-aligned) or the 8-aligned read fallback can back typed
+/// tensor views for every dtype a section can hold.
+pub const BIN_ALIGN: usize = 64;
+
+fn align_up(n: usize) -> usize {
+    n.div_ceil(BIN_ALIGN) * BIN_ALIGN
+}
+
 #[derive(Debug, thiserror::Error)]
 pub enum ArtifactError {
     #[error("artifact I/O at {path}: {source}")]
@@ -68,7 +105,8 @@ pub enum ArtifactError {
     Format { found: String },
     #[error(
         "unsupported artifact format version {found} (this build reads \
-         versions {MIN_VERSION}..={VERSION})"
+         JSON versions {MIN_VERSION}..={VERSION} and binary container \
+         version {BIN_VERSION})"
     )]
     Version { found: i64 },
     #[error(
@@ -83,6 +121,8 @@ pub enum ArtifactError {
     Checksum { stored: String, computed: String },
     #[error("malformed artifact model: {0}")]
     Model(String),
+    #[error("malformed binary artifact: {0}")]
+    Binary(String),
     #[error("precision re-proof failed on load: {0}")]
     Precision(#[from] ShapeError),
 }
@@ -198,9 +238,41 @@ impl DeployedArtifact {
         write_doc(&doc, path.as_ref())
     }
 
+    /// Write the v3 binary container (`model.nemob`) to `path`.
+    pub fn save_binary(&self, path: impl AsRef<Path>) -> Result<(), ArtifactError> {
+        save_binary_graph(
+            &self.graph,
+            &self.layers,
+            &self.node_eps,
+            &self.worst_case,
+            &self.meta,
+            path.as_ref(),
+        )
+    }
+
+    /// Binary twin of [`Self::save_parts`]: serialize the v3 container
+    /// straight from a borrowed deployment record, never cloning the
+    /// weight tensors.
+    pub fn save_binary_parts(
+        dep: &Deployed,
+        meta: &StageMeta,
+        path: impl AsRef<Path>,
+    ) -> Result<(), ArtifactError> {
+        save_binary_graph(
+            &dep.id,
+            &dep.layers,
+            &dep.node_eps,
+            &dep.worst_case,
+            meta,
+            path.as_ref(),
+        )
+    }
+
     /// Load and fully validate an artifact: format/version gate, checksum
     /// over the model subtree, structural graph validation, payload
-    /// range checks and the precision re-proof.
+    /// range checks and the precision re-proof. Accepts either on-disk
+    /// form — the first 8 bytes decide (the [`BIN_MAGIC`] preamble vs a
+    /// JSON document).
     pub fn load(path: impl AsRef<Path>) -> Result<Self, ArtifactError> {
         Self::load_with_provenance(path).map(|(art, _)| art)
     }
@@ -212,13 +284,17 @@ impl DeployedArtifact {
     pub fn load_with_provenance(
         path: impl AsRef<Path>,
     ) -> Result<(Self, ArtifactProvenance), ArtifactError> {
+        if sniff_binary(path.as_ref())? {
+            return Self::load_binary(path, BinLoadMode::Auto)
+                .map(|(art, prov, _)| (art, prov));
+        }
         let path = path.as_ref();
         let text = std::fs::read_to_string(path).map_err(|source| {
             ArtifactError::Io { path: path.display().to_string(), source }
         })?;
         let doc = json::parse(&text)?;
-        let art = Self::from_json(&doc)?;
-        // from_json validated format/version/checksum, so these reads
+        let art = Self::from_text(&text, &doc)?;
+        // from_text validated format/version/checksum, so these reads
         // cannot fail — but route errors anyway rather than unwrap.
         let prov = ArtifactProvenance {
             path: path.display().to_string(),
@@ -229,8 +305,46 @@ impl DeployedArtifact {
         Ok((art, prov))
     }
 
+    /// Load the v3 binary container, additionally returning the
+    /// [`BinLoadStats`] borrowed/copied accounting that proves (or
+    /// refutes) the zero-copy contract for this load.
+    pub fn load_binary(
+        path: impl AsRef<Path>,
+        mode: BinLoadMode,
+    ) -> Result<(Self, ArtifactProvenance, BinLoadStats), ArtifactError> {
+        load_binary_impl(path.as_ref(), mode)
+    }
+
     /// Decode a parsed artifact document (the inverse of [`Self::to_json`]).
     pub fn from_json(v: &Value) -> Result<Self, ArtifactError> {
+        Self::decode_doc(v, |model| {
+            let computed = checksum_of(model);
+            (computed == v.get("checksum").and_then(|c| c.as_str()).unwrap_or(""), computed)
+        })
+    }
+
+    /// [`Self::from_json`] with the read-once checksum: hash the raw
+    /// byte span of the `model` subtree inside `text` (located by a
+    /// token-level scan, no re-serialization) and only fall back to the
+    /// canonical re-serialize when the raw span does not reproduce the
+    /// stored digest — e.g. a hand-reformatted but intact file.
+    fn from_text(text: &str, v: &Value) -> Result<Self, ArtifactError> {
+        Self::decode_doc(v, |model| {
+            let stored = v.get("checksum").and_then(|c| c.as_str()).unwrap_or("");
+            if let Some((s, e)) = json::top_level_value_span(text, "model") {
+                if checksum_of_bytes(text[s..e].as_bytes()) == stored {
+                    return (true, stored.to_string());
+                }
+            }
+            let computed = checksum_of(model);
+            (computed == stored, computed)
+        })
+    }
+
+    fn decode_doc(
+        v: &Value,
+        verify: impl FnOnce(&Value) -> (bool, String),
+    ) -> Result<Self, ArtifactError> {
         let found = v
             .get_opt("format")
             .and_then(|f| f.as_str().ok())
@@ -245,11 +359,26 @@ impl DeployedArtifact {
         }
         let stored = v.get("checksum")?.as_str()?.to_string();
         let model = v.get("model")?;
-        let computed = checksum_of(model);
-        if stored != computed {
+        let (ok, computed) = verify(model);
+        if !ok {
             return Err(ArtifactError::Checksum { stored, computed });
         }
-        decode_model(model, version)
+        decode_model(model, version, &mut None)
+    }
+}
+
+/// Does `path` start with the v3 container magic? Missing files and
+/// short JSON files route through the JSON loader for its (better)
+/// error reporting.
+fn sniff_binary(path: &Path) -> Result<bool, ArtifactError> {
+    use std::io::Read;
+    let Ok(mut f) = std::fs::File::open(path) else {
+        return Ok(false);
+    };
+    let mut magic = [0u8; 8];
+    match f.read_exact(&mut magic) {
+        Ok(()) => Ok(magic == BIN_MAGIC),
+        Err(_) => Ok(false),
     }
 }
 
@@ -280,7 +409,24 @@ fn model_value(
     worst_case: &[i64],
     meta: &StageMeta,
 ) -> Value {
-    let nodes: Vec<Value> = graph.nodes.iter().map(node_value).collect();
+    model_value_with(graph, layers, node_eps, worst_case, meta, &mut |_, wq| {
+        weight_value(&wq.widen())
+    })
+}
+
+/// [`model_value`] with a pluggable weight encoder: the JSON form
+/// inlines every payload ([`weight_value`]), the binary form routes it
+/// into the section table and emits a `{dtype, shape, section}` ref.
+fn model_value_with(
+    graph: &IntGraph,
+    layers: &[LayerQuant],
+    node_eps: &[f64],
+    worst_case: &[i64],
+    meta: &StageMeta,
+    enc_weight: &mut dyn FnMut(&str, &QTensor) -> Value,
+) -> Value {
+    let nodes: Vec<Value> =
+        graph.nodes.iter().map(|n| node_value(n, enc_weight)).collect();
     json::obj(vec![
         ("eps_out", Value::Num(graph.eps_out)),
         (
@@ -324,7 +470,11 @@ pub fn fnv1a64(bytes: &[u8]) -> u64 {
 /// formatting) and numbers round-trip bit-exactly, so parse → re-write →
 /// hash reproduces the saved checksum on an intact file.
 fn checksum_of(model: &Value) -> String {
-    format!("fnv1a64:{:016x}", fnv1a64(json::write(model).as_bytes()))
+    checksum_of_bytes(json::write(model).as_bytes())
+}
+
+fn checksum_of_bytes(bytes: &[u8]) -> String {
+    format!("fnv1a64:{:016x}", fnv1a64(bytes))
 }
 
 fn usize_arr_value(v: &[usize]) -> Value {
@@ -389,7 +539,122 @@ fn weight_value(wq: &TensorI) -> Value {
     json::obj(fields)
 }
 
-fn node_value(n: &crate::graph::int::IntNode) -> Value {
+/// Re-narrow a graph weight to the tightest storage class containing
+/// its range — the representation both artifact forms ship. A weight
+/// already stored at that class is reused as-is (no copy).
+fn narrow_weight(wq: &QTensor) -> QTensor {
+    let (lo, hi) = wq.min_max();
+    let p = Precision::for_range(lo, hi);
+    if wq.precision() == p {
+        return wq.clone();
+    }
+    QTensor::narrow_from(&wq.widen(), p).expect("range-derived precision")
+}
+
+/// The section payload: exactly the in-memory packed bytes (`i32`
+/// little-endian so the file is host-independent; on little-endian
+/// hosts — every deployment target — the loader views it in place).
+fn payload_bytes(q: &QTensor) -> Vec<u8> {
+    match q {
+        QTensor::U8(t) => t.data().to_vec(),
+        QTensor::I8(t) => t.data().iter().map(|v| *v as u8).collect(),
+        QTensor::I32(t) => t.data().iter().flat_map(|v| v.to_le_bytes()).collect(),
+        QTensor::Packed(t) => t.bytes().to_vec(),
+    }
+}
+
+/// Accumulates the v3 section table while the model subtree is being
+/// encoded: every GEMM weight becomes one 64-byte-aligned, checksummed
+/// section, and the model carries a `{dtype, shape, section}` ref.
+#[derive(Default)]
+struct SectionBuilder {
+    entries: Vec<Value>,
+    offs: Vec<usize>,
+    payloads: Vec<Vec<u8>>,
+}
+
+impl SectionBuilder {
+    fn push(&mut self, name: &str, wq: &QTensor) -> Value {
+        let q = narrow_weight(wq);
+        let p = q.precision();
+        let payload = payload_bytes(&q);
+        let off = match (self.offs.last(), self.payloads.last()) {
+            (Some(o), Some(pl)) => align_up(o + pl.len()),
+            _ => 0,
+        };
+        let idx = self.payloads.len();
+        self.entries.push(json::obj(vec![
+            ("bytes", Value::Int(payload.len() as i64)),
+            ("checksum", Value::Str(checksum_of_bytes(&payload))),
+            ("dtype", Value::Str(p.name().to_string())),
+            ("name", Value::Str(name.to_string())),
+            ("off", Value::Int(off as i64)),
+            ("shape", usize_arr_value(q.shape())),
+        ]));
+        self.offs.push(off);
+        self.payloads.push(payload);
+        json::obj(vec![
+            ("dtype", Value::Str(p.name().to_string())),
+            ("section", Value::Int(idx as i64)),
+            ("shape", usize_arr_value(q.shape())),
+        ])
+    }
+}
+
+fn save_binary_graph(
+    graph: &IntGraph,
+    layers: &[LayerQuant],
+    node_eps: &[f64],
+    worst_case: &[i64],
+    meta: &StageMeta,
+    path: &Path,
+) -> Result<(), ArtifactError> {
+    let mut sb = SectionBuilder::default();
+    let model = model_value_with(graph, layers, node_eps, worst_case, meta, &mut |name, wq| {
+        sb.push(name, wq)
+    });
+    let checksum = checksum_of(&model);
+    let header = json::obj(vec![
+        ("checksum", Value::Str(checksum)),
+        ("format", Value::Str(FORMAT.to_string())),
+        ("model", model),
+        ("sections", Value::Arr(sb.entries)),
+        ("version", Value::Int(BIN_VERSION as i64)),
+    ]);
+    let htext = json::write(&header);
+    if u32::try_from(htext.len()).is_err() {
+        return Err(ArtifactError::Binary(format!(
+            "header is {} bytes, the u32 length field caps it at 4 GiB",
+            htext.len()
+        )));
+    }
+    // Section offsets are relative to the payload base, which only
+    // depends on the header length *after* the header is final — no
+    // circularity between table and header size.
+    let payload_base = align_up(16 + htext.len());
+    let end = match (sb.offs.last(), sb.payloads.last()) {
+        (Some(o), Some(p)) => o + p.len(),
+        _ => 0,
+    };
+    let mut file = vec![0u8; payload_base + end];
+    file[..8].copy_from_slice(&BIN_MAGIC);
+    file[8..12].copy_from_slice(&BIN_VERSION.to_le_bytes());
+    file[12..16].copy_from_slice(&(htext.len() as u32).to_le_bytes());
+    file[16..16 + htext.len()].copy_from_slice(htext.as_bytes());
+    for (off, payload) in sb.offs.iter().zip(&sb.payloads) {
+        let at = payload_base + off;
+        file[at..at + payload.len()].copy_from_slice(payload);
+    }
+    std::fs::write(path, &file).map_err(|source| ArtifactError::Io {
+        path: path.display().to_string(),
+        source,
+    })
+}
+
+fn node_value(
+    n: &crate::graph::int::IntNode,
+    enc_weight: &mut dyn FnMut(&str, &QTensor) -> Value,
+) -> Value {
     let params = match &n.op {
         IntOp::Input { shape, spec } => json::obj(vec![
             ("shape", usize_arr_value(shape)),
@@ -399,7 +664,7 @@ fn node_value(n: &crate::graph::int::IntNode) -> Value {
         ]),
         IntOp::ConvInt { wq, bias_q, cin, kh, kw, stride, pad } => {
             let mut fields = vec![
-                ("w", weight_value(wq)),
+                ("w", enc_weight(&n.name, wq)),
                 ("cin", Value::Int(*cin as i64)),
                 ("kh", Value::Int(*kh as i64)),
                 ("kw", Value::Int(*kw as i64)),
@@ -412,7 +677,7 @@ fn node_value(n: &crate::graph::int::IntNode) -> Value {
             json::obj(fields)
         }
         IntOp::LinearInt { wq, bias_q } => {
-            let mut fields = vec![("w", weight_value(wq))];
+            let mut fields = vec![("w", enc_weight(&n.name, wq))];
             if let Some(b) = bias_q {
                 fields.push(("bias", json::arr_i64(b)));
             }
@@ -554,29 +819,41 @@ fn gate_subbyte(
     Ok(())
 }
 
-/// Decode a weight payload: dtype-tagged flat int array + shape (or a
-/// hex bit-packed payload for sub-byte dtypes, format v2). The payload
-/// is narrowed through [`QTensor::narrow_from`] (loud on any value
-/// outside the declared precision) or validated by
-/// [`PackedTensor::from_bytes`] (loud on wrong length / dirty pad
-/// bits), then widened back to the i32 weight tensor the graph ops
-/// carry.
+/// Decode a weight payload at its *stored* precision: dtype-tagged
+/// flat int array (v1), hex bit-packed payload for sub-byte dtypes
+/// (v2), or a `{dtype, shape, section}` reference into a v3 binary
+/// section table. Inline payloads are narrowed through
+/// [`QTensor::narrow_from`] (loud on any value outside the declared
+/// precision) or validated by [`PackedTensor::from_bytes`] (loud on
+/// wrong length / dirty pad bits); section refs resolve to zero-copy
+/// views over the mapped file. The graph ops carry the result as-is —
+/// full-width consumers widen on use.
 fn decode_weights(
     v: &Value,
     what: &str,
     version: i64,
-) -> Result<TensorI, ArtifactError> {
+    bins: &mut Option<BinSections>,
+) -> Result<QTensor, ArtifactError> {
     let dtype = v.get("dtype")?.as_str()?;
     let p = Precision::from_name(dtype)
         .ok_or_else(|| model_err(format!("{what}: unknown weight dtype '{dtype}'")))?;
     gate_subbyte(p, dtype, version)?;
     let shape = usize_arr(v.get("shape")?, what)?;
+    if let Some(sec) = v.get_opt("section") {
+        let idx = as_usize(sec, what)?;
+        let Some(b) = bins.as_mut() else {
+            return Err(model_err(format!(
+                "{what}: weight references binary section {idx} in a JSON artifact"
+            )));
+        };
+        return b.take(idx, p, &shape, what);
+    }
     if p.is_sub_byte() {
         let hex = v.get("packed")?.as_str()?;
         let data = bytes_of_hex(hex, what)?;
         let t = PackedTensor::from_bytes(&shape, p, data)
             .map_err(|e| model_err(format!("{what}: weight payload {e}")))?;
-        return Ok(QTensor::Packed(t).widen());
+        return Ok(QTensor::Packed(t));
     }
     let data = i32_arr(v.get("data")?, what)?;
     let n: usize = shape.iter().product();
@@ -587,9 +864,8 @@ fn decode_weights(
         )));
     }
     let t = Tensor::from_vec(&shape, data);
-    let q = QTensor::narrow_from(&t, p)
-        .map_err(|e| model_err(format!("{what}: weight payload {e}")))?;
-    Ok(q.widen())
+    QTensor::narrow_from(&t, p)
+        .map_err(|e| model_err(format!("{what}: weight payload {e}")))
 }
 
 fn decode_op(
@@ -597,6 +873,7 @@ fn decode_op(
     p: &Value,
     what: &str,
     version: i64,
+    bins: &mut Option<BinSections>,
 ) -> Result<IntOp, ArtifactError> {
     Ok(match op {
         "Input" => {
@@ -620,7 +897,7 @@ fn decode_op(
             IntOp::Input { shape: usize_arr(p.get("shape")?, what)?, spec }
         }
         "ConvInt" => IntOp::ConvInt {
-            wq: decode_weights(p.get("w")?, what, version)?,
+            wq: decode_weights(p.get("w")?, what, version, bins)?,
             bias_q: p.get_opt("bias").map(i64_arr).transpose()?,
             cin: as_usize(p.get("cin")?, what)?,
             kh: as_usize(p.get("kh")?, what)?,
@@ -629,7 +906,7 @@ fn decode_op(
             pad: as_usize(p.get("pad")?, what)?,
         },
         "LinearInt" => IntOp::LinearInt {
-            wq: decode_weights(p.get("w")?, what, version)?,
+            wq: decode_weights(p.get("w")?, what, version, bins)?,
             bias_q: p.get_opt("bias").map(i64_arr).transpose()?,
         },
         "IntBn" => {
@@ -696,6 +973,7 @@ fn decode_op(
 fn decode_model(
     model: &Value,
     version: i64,
+    bins: &mut Option<BinSections>,
 ) -> Result<DeployedArtifact, ArtifactError> {
     let graph_v = model.get("graph")?;
     let nodes_v = graph_v.get("nodes")?.as_arr()?;
@@ -716,7 +994,7 @@ fn decode_model(
             )));
         }
         let op_name = nv.get("op")?.as_str()?;
-        let op = decode_op(op_name, nv.get("params")?, &what, version)?;
+        let op = decode_op(op_name, nv.get("params")?, &what, version, bins)?;
         let p_name = nv.get("precision")?.as_str()?;
         let p = Precision::from_name(p_name).ok_or_else(|| {
             model_err(format!("{what}: unknown precision '{p_name}'"))
@@ -781,6 +1059,340 @@ fn decode_layer(lv: &Value, i: usize) -> Result<LayerQuant, ArtifactError> {
         d: shift_d(lv.get("d")?, &what)?,
         m: lv.get("m")?.as_i64()?,
         act_hi: lv.get("act_hi")?.as_i64()?,
+    })
+}
+
+// -- binary container (v3) --------------------------------------------
+
+/// Borrowed/copied accounting of one binary load: the zero-copy
+/// contract made checkable. On the mmap path every section backs a
+/// tensor view (`copied_bytes == 0`); the only copies the format ever
+/// makes are `i32` sections on a big-endian host.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BinLoadStats {
+    /// Weight bytes served as views borrowing the file mapping.
+    pub borrowed_bytes: usize,
+    /// Weight bytes copied into owned storage (big-endian fallback).
+    pub copied_bytes: usize,
+    /// Number of weight sections consumed.
+    pub sections: usize,
+    /// Whether the file bytes came from `mmap` (vs the aligned read).
+    pub mmap: bool,
+}
+
+/// One entry of the parsed v3 section table.
+#[derive(Clone, Debug)]
+pub struct BinSection {
+    pub name: String,
+    pub dtype: String,
+    pub shape: Vec<usize>,
+    /// Offset relative to the payload base; always 64-byte aligned.
+    pub off: usize,
+    pub bytes: usize,
+    pub checksum: String,
+}
+
+/// Header-level description of a binary artifact, for `nemo info`.
+#[derive(Clone, Debug)]
+pub struct BinInfo {
+    pub container_version: u32,
+    pub header_bytes: usize,
+    pub payload_base: usize,
+    pub file_bytes: usize,
+    /// Sum of raw section payload bytes.
+    pub weight_bytes: usize,
+    /// Section bytes including the inter-section alignment padding.
+    pub aligned_weight_bytes: usize,
+    pub checksum: String,
+    pub sections: Vec<BinSection>,
+}
+
+fn bin_err(msg: impl Into<String>) -> ArtifactError {
+    ArtifactError::Binary(msg.into())
+}
+
+/// The section table plus everything [`decode_weights`] needs to turn
+/// a `{section: idx}` ref into a tensor view: the owning byte source,
+/// the payload base, and exactly-once consumption tracking.
+struct BinSections {
+    src: Arc<dyn ByteSource>,
+    payload_base: usize,
+    sections: Vec<BinSection>,
+    used: Vec<bool>,
+    stats: BinLoadStats,
+}
+
+impl BinSections {
+    fn take(
+        &mut self,
+        idx: usize,
+        p: Precision,
+        shape: &[usize],
+        what: &str,
+    ) -> Result<QTensor, ArtifactError> {
+        let Some(sec) = self.sections.get(idx) else {
+            return Err(bin_err(format!(
+                "{what}: weight references section {idx}, table has {}",
+                self.sections.len()
+            )));
+        };
+        if self.used[idx] {
+            return Err(bin_err(format!(
+                "{what}: section {idx} '{}' consumed twice",
+                sec.name
+            )));
+        }
+        self.used[idx] = true;
+        if sec.dtype != p.name() || sec.shape != shape {
+            return Err(bin_err(format!(
+                "{what}: weight ref ({} {shape:?}) disagrees with section {idx} \
+                 '{}' ({} {:?})",
+                p.name(),
+                sec.name,
+                sec.dtype,
+                sec.shape
+            )));
+        }
+        let len: usize = shape.iter().product();
+        if sec.bytes != p.storage_bytes(len) {
+            return Err(bin_err(format!(
+                "{what}: section {idx} '{}' holds {} bytes, dtype {} with shape \
+                 {shape:?} wants {}",
+                sec.name,
+                sec.bytes,
+                p.name(),
+                p.storage_bytes(len)
+            )));
+        }
+        let off = self.payload_base + sec.off;
+        let q = match p {
+            Precision::U8 => Tensor::<u8>::from_view(shape, self.src.clone(), off)
+                .map(QTensor::U8)
+                .map_err(|e| bin_err(format!("{what}: section {idx}: {e}")))?,
+            Precision::I8 => Tensor::<i8>::from_view(shape, self.src.clone(), off)
+                .map(QTensor::I8)
+                .map_err(|e| bin_err(format!("{what}: section {idx}: {e}")))?,
+            Precision::I32 => {
+                // from_view rejects multi-byte views on big-endian
+                // hosts; decode the little-endian payload there.
+                match Tensor::<i32>::from_view(shape, self.src.clone(), off) {
+                    Ok(t) => QTensor::I32(t),
+                    Err(_) => {
+                        let b = &self.src.bytes()[off..off + sec.bytes];
+                        let data: Vec<i32> = b
+                            .chunks_exact(4)
+                            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                            .collect();
+                        self.stats.copied_bytes += sec.bytes;
+                        self.stats.sections += 1;
+                        return Ok(QTensor::I32(Tensor::from_vec(shape, data)));
+                    }
+                }
+            }
+            _ => PackedTensor::from_view(shape, p, self.src.clone(), off)
+                .map(QTensor::Packed)
+                .map_err(|e| bin_err(format!("{what}: section {idx}: {e}")))?,
+        };
+        self.stats.borrowed_bytes += sec.bytes;
+        self.stats.sections += 1;
+        Ok(q)
+    }
+}
+
+/// Read the 16-byte preamble; returns `(container_version, header_len)`.
+fn parse_preamble(bytes: &[u8]) -> Result<(u32, usize), ArtifactError> {
+    if bytes.len() < 16 {
+        return Err(bin_err(format!(
+            "{} bytes is too short for the 16-byte preamble",
+            bytes.len()
+        )));
+    }
+    if bytes[..8] != BIN_MAGIC {
+        return Err(bin_err("leading magic is not NEMOBIN".to_string()));
+    }
+    let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+    if version != BIN_VERSION {
+        return Err(ArtifactError::Version { found: version as i64 });
+    }
+    let header_len = u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
+    if bytes.len() < 16 + header_len {
+        return Err(bin_err(format!(
+            "header claims {header_len} bytes, only {} follow the preamble — \
+             truncated file",
+            bytes.len() - 16
+        )));
+    }
+    Ok((version, header_len))
+}
+
+fn decode_section_entry(v: &Value, i: usize) -> Result<BinSection, ArtifactError> {
+    let what = format!("section {i}");
+    Ok(BinSection {
+        name: v.get("name")?.as_str()?.to_string(),
+        dtype: v.get("dtype")?.as_str()?.to_string(),
+        shape: usize_arr(v.get("shape")?, &what)?,
+        off: as_usize(v.get("off")?, &what)?,
+        bytes: as_usize(v.get("bytes")?, &what)?,
+        checksum: v.get("checksum")?.as_str()?.to_string(),
+    })
+}
+
+/// Parse + structurally validate the header and section table common to
+/// [`load_binary_impl`] and [`binary_info`]. Returns the parsed header
+/// document, the stored model checksum, the payload base and the table.
+fn parse_bin_header(
+    bytes: &[u8],
+) -> Result<(Value, String, usize, Vec<BinSection>), ArtifactError> {
+    let (_, header_len) = parse_preamble(bytes)?;
+    let htext = std::str::from_utf8(&bytes[16..16 + header_len])
+        .map_err(|e| bin_err(format!("header is not UTF-8: {e}")))?;
+    let hdoc = json::parse(htext)?;
+    let found = hdoc
+        .get_opt("format")
+        .and_then(|f| f.as_str().ok())
+        .unwrap_or("<missing>")
+        .to_string();
+    if found != FORMAT {
+        return Err(ArtifactError::Format { found });
+    }
+    let hversion = hdoc.get("version")?.as_i64()?;
+    if hversion != BIN_VERSION as i64 {
+        return Err(bin_err(format!(
+            "header declares version {hversion}, container preamble says {BIN_VERSION}"
+        )));
+    }
+    let stored = hdoc.get("checksum")?.as_str()?.to_string();
+    // Read-once checksum: hash the model's raw span in the header text.
+    let model = hdoc.get("model")?;
+    let span_ok = json::top_level_value_span(htext, "model")
+        .map(|(s, e)| checksum_of_bytes(htext[s..e].as_bytes()) == stored)
+        .unwrap_or(false);
+    if !span_ok {
+        let computed = checksum_of(model);
+        if computed != stored {
+            return Err(ArtifactError::Checksum { stored, computed });
+        }
+    }
+    let payload_base = align_up(16 + header_len);
+    let sections = hdoc
+        .get("sections")?
+        .as_arr()?
+        .iter()
+        .enumerate()
+        .map(|(i, v)| decode_section_entry(v, i))
+        .collect::<Result<Vec<_>, _>>()?;
+    let mut prev_end = 0usize;
+    for (i, s) in sections.iter().enumerate() {
+        if s.off % BIN_ALIGN != 0 {
+            return Err(bin_err(format!(
+                "section {i} '{}' offset {} is not {BIN_ALIGN}-byte aligned",
+                s.name, s.off
+            )));
+        }
+        if i > 0 && s.off < prev_end {
+            return Err(bin_err(format!(
+                "section {i} '{}' at [{}, {}) overlaps the previous section",
+                s.name,
+                s.off,
+                s.off + s.bytes
+            )));
+        }
+        let end = payload_base
+            .checked_add(s.off)
+            .and_then(|b| b.checked_add(s.bytes))
+            .ok_or_else(|| bin_err(format!("section {i} '{}' offset overflows", s.name)))?;
+        if end > bytes.len() {
+            return Err(bin_err(format!(
+                "section {i} '{}' ends at byte {end}, file has {} — truncated \
+                 mid-section",
+                s.name,
+                bytes.len()
+            )));
+        }
+        prev_end = s.off + s.bytes;
+    }
+    Ok((hdoc, stored, payload_base, sections))
+}
+
+fn load_binary_impl(
+    path: &Path,
+    mode: BinLoadMode,
+) -> Result<(DeployedArtifact, ArtifactProvenance, BinLoadStats), ArtifactError> {
+    let io_err = |source| ArtifactError::Io { path: path.display().to_string(), source };
+    let (src, mmapped): (Arc<dyn ByteSource>, bool) = match mode {
+        BinLoadMode::Mmap => (Arc::new(MappedFile::map(path).map_err(io_err)?), true),
+        BinLoadMode::Read => (Arc::new(AlignedBytes::read_file(path).map_err(io_err)?), false),
+        BinLoadMode::Auto => match MappedFile::map(path) {
+            Ok(m) => (Arc::new(m), true),
+            Err(_) => (Arc::new(AlignedBytes::read_file(path).map_err(io_err)?), false),
+        },
+    };
+    let bytes = src.bytes();
+    let file_len = bytes.len();
+    let (hdoc, stored, payload_base, sections) = parse_bin_header(bytes)?;
+    // Per-section integrity before any view is built: a flipped weight
+    // byte is a checksum error naming the section, never a wrong logit.
+    for (i, s) in sections.iter().enumerate() {
+        let payload = &bytes[payload_base + s.off..payload_base + s.off + s.bytes];
+        let computed = checksum_of_bytes(payload);
+        if computed != s.checksum {
+            return Err(ArtifactError::Checksum {
+                stored: format!("section {i} '{}': {}", s.name, s.checksum),
+                computed,
+            });
+        }
+    }
+    let n = sections.len();
+    let mut bins = Some(BinSections {
+        src: src.clone(),
+        payload_base,
+        sections,
+        used: vec![false; n],
+        stats: BinLoadStats { mmap: mmapped, ..Default::default() },
+    });
+    let art = decode_model(hdoc.get("model")?, BIN_VERSION as i64, &mut bins)?;
+    let b = bins.take().expect("decode_model keeps the section context");
+    if let Some(idx) = b.used.iter().position(|u| !u) {
+        return Err(bin_err(format!(
+            "section {idx} '{}' is not referenced by the model — \
+             header/section-table mismatch",
+            b.sections[idx].name
+        )));
+    }
+    let prov = ArtifactProvenance {
+        path: path.display().to_string(),
+        checksum: stored,
+        format_version: BIN_VERSION as i64,
+        bytes: file_len as u64,
+    };
+    Ok((art, prov, b.stats))
+}
+
+/// Header-only inspection of a `model.nemob` (for `nemo info`): the
+/// section table and size breakdown, without decoding the model or
+/// touching (most of) the weight bytes.
+pub fn binary_info(path: impl AsRef<Path>) -> Result<BinInfo, ArtifactError> {
+    let path = path.as_ref();
+    let bytes = std::fs::read(path).map_err(|source| ArtifactError::Io {
+        path: path.display().to_string(),
+        source,
+    })?;
+    let (version, header_len) = parse_preamble(&bytes)?;
+    let (_, stored, payload_base, sections) = parse_bin_header(&bytes)?;
+    let weight_bytes: usize = sections.iter().map(|s| s.bytes).sum();
+    let aligned_weight_bytes = sections
+        .last()
+        .map(|s| s.off + s.bytes)
+        .unwrap_or(0);
+    Ok(BinInfo {
+        container_version: version,
+        header_bytes: header_len,
+        payload_base,
+        file_bytes: bytes.len(),
+        weight_bytes,
+        aligned_weight_bytes,
+        checksum: stored,
+        sections,
     })
 }
 
@@ -950,11 +1562,11 @@ mod tests {
         let hex = wv.get("packed").unwrap().as_str().unwrap();
         assert_eq!(hex.len(), 8, "8 nibbles = 4 bytes = 8 hex chars");
         // Format v2 decodes it bit-identically...
-        let back = decode_weights(&wv, "test", VERSION).unwrap();
-        assert_eq!(back, wq);
+        let back = decode_weights(&wv, "test", VERSION, &mut None).unwrap();
+        assert_eq!(back.widen(), wq);
         // ...a v1 document carrying the same dtype is a typed error...
         assert!(matches!(
-            decode_weights(&wv, "test", 1),
+            decode_weights(&wv, "test", 1, &mut None),
             Err(ArtifactError::DtypeVersion { needs: 2, found: 1, .. })
         ));
         // ...and a corrupt payload (wrong length / dirty pad bits /
@@ -964,7 +1576,7 @@ mod tests {
             o.insert("packed".into(), Value::Str("ff".into()));
         }
         assert!(matches!(
-            decode_weights(&short, "test", VERSION),
+            decode_weights(&short, "test", VERSION, &mut None),
             Err(ArtifactError::Model(_))
         ));
         let mut junk = wv;
@@ -972,7 +1584,7 @@ mod tests {
             o.insert("packed".into(), Value::Str("zz00zz00".into()));
         }
         assert!(matches!(
-            decode_weights(&junk, "test", VERSION),
+            decode_weights(&junk, "test", VERSION, &mut None),
             Err(ArtifactError::Model(_))
         ));
     }
@@ -985,8 +1597,56 @@ mod tests {
         let wv = weight_value(&wq);
         assert_eq!(wv.get("dtype").unwrap().as_str().unwrap(), "i8");
         assert!(wv.get_opt("packed").is_none());
-        let back = decode_weights(&wv, "test", MIN_VERSION).unwrap();
-        assert_eq!(back, wq);
+        let back = decode_weights(&wv, "test", MIN_VERSION, &mut None).unwrap();
+        assert_eq!(back.widen(), wq);
+    }
+
+    #[test]
+    fn binary_roundtrip_is_bit_identical_and_zero_copy() {
+        let (dep, meta, x) = deployed_mlp(21);
+        let art = DeployedArtifact::from_deployed(&dep, &meta);
+        let path = std::env::temp_dir()
+            .join(format!("nemo_artifact_unit_{}.nemob", std::process::id()));
+        art.save_binary(&path).unwrap();
+
+        for mode in [BinLoadMode::Read, BinLoadMode::Auto] {
+            let (back, prov, stats) =
+                DeployedArtifact::load_binary(&path, mode).unwrap();
+            assert_eq!(prov.format_version, BIN_VERSION as i64);
+            assert_eq!(back.graph.precisions(), dep.id.precisions());
+            // Every weight byte is served as a borrowed view; the only
+            // copy path is i32-on-big-endian.
+            if cfg!(target_endian = "little") {
+                assert_eq!(stats.copied_bytes, 0, "mode {mode:?}");
+                assert!(stats.borrowed_bytes > 0);
+            }
+            assert!(back.graph.nodes.iter().any(|n| match &n.op {
+                IntOp::ConvInt { wq, .. } | IntOp::LinearInt { wq, .. } => {
+                    wq.is_borrowed()
+                }
+                _ => false,
+            }));
+            let qx = quantize_input(&x, 1.0 / 255.0);
+            assert_eq!(
+                crate::engine::IntegerEngine::new().run(&dep.id, &qx),
+                crate::engine::IntegerEngine::new().run(&back.graph, &qx)
+            );
+        }
+        // The generic loader sniffs the magic and returns the same model.
+        let (sniffed, prov) = DeployedArtifact::load_with_provenance(&path).unwrap();
+        assert_eq!(prov.format_version, BIN_VERSION as i64);
+        assert_eq!(sniffed.graph.precisions(), dep.id.precisions());
+
+        // Header-only info agrees with the section table.
+        let info = binary_info(&path).unwrap();
+        assert_eq!(info.container_version, BIN_VERSION);
+        assert!(!info.sections.is_empty());
+        assert!(info.weight_bytes <= info.aligned_weight_bytes);
+        assert!(info.payload_base % BIN_ALIGN == 0);
+        for s in &info.sections {
+            assert_eq!(s.off % BIN_ALIGN, 0);
+        }
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

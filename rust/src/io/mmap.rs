@@ -1,0 +1,228 @@
+//! Read-only file mapping for zero-copy artifact cold load
+//! (DESIGN.md §Artifact-format v3).
+//!
+//! The offline vendor set has no `libc`/`memmap` crate, so — like the
+//! `signal(2)` shim in `net` — the two POSIX symbols are declared
+//! directly against the libc that `std` already links. Both sources
+//! implement [`ByteSource`], so tensor views borrow from either:
+//!
+//! * [`MappedFile`] — `mmap(2)` of the whole file, page-aligned (>= the
+//!   64-byte section alignment the v3 writer guarantees); weight bytes
+//!   are never copied, the kernel pages them in on demand.
+//! * [`AlignedBytes`] — the fallback when mapping is unavailable (or
+//!   forced by [`BinLoadMode::Read`]): one `read_exact` into a
+//!   `Vec<u64>`-backed buffer, so the 8-byte base alignment still
+//!   satisfies every element type a section can hold.
+
+use std::fs::File;
+use std::io::{self, Read};
+use std::path::Path;
+
+use crate::tensor::ByteSource;
+
+/// How the binary-artifact loader acquires the file's bytes.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BinLoadMode {
+    /// `mmap` when the platform supports it, aligned read otherwise.
+    #[default]
+    Auto,
+    /// `mmap` or fail — tests assert the zero-copy path this way.
+    Mmap,
+    /// Force the aligned `File::read` fallback.
+    Read,
+}
+
+#[cfg(unix)]
+mod sys {
+    // Raw POSIX mmap/munmap against the libc std links (no-libc-crate
+    // policy; see `net::shutdown_flag` for the precedent).
+    extern "C" {
+        pub fn mmap(
+            addr: *mut u8,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut u8;
+        pub fn munmap(addr: *mut u8, len: usize) -> i32;
+    }
+
+    pub const PROT_READ: i32 = 1;
+    pub const MAP_PRIVATE: i32 = 2;
+}
+
+/// A read-only `mmap(2)` of a whole file. The mapping outlives every
+/// tensor view into it because views hold the owning `Arc`.
+pub struct MappedFile {
+    ptr: *const u8,
+    len: usize,
+}
+
+// SAFETY: the mapping is immutable (PROT_READ, MAP_PRIVATE) for its
+// whole lifetime, so shared references to its bytes are sound across
+// threads.
+unsafe impl Send for MappedFile {}
+unsafe impl Sync for MappedFile {}
+
+impl MappedFile {
+    /// Map `path` read-only. Fails with a plain `io::Error` on
+    /// platforms without `mmap` or when the syscall is refused — the
+    /// loader then falls back to [`AlignedBytes`].
+    #[cfg(unix)]
+    pub fn map(path: impl AsRef<Path>) -> io::Result<MappedFile> {
+        use std::os::unix::io::AsRawFd;
+        let file = File::open(path)?;
+        let len = file.metadata()?.len();
+        if len == 0 {
+            // mmap(2) rejects zero-length mappings; an empty artifact
+            // is invalid anyway, so surface it as such.
+            return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "empty file"));
+        }
+        let len = usize::try_from(len)
+            .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "file too large"))?;
+        // SAFETY: a fresh read-only private mapping of a file we hold
+        // open; the fd may close after mmap returns (POSIX keeps the
+        // mapping valid).
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr as isize == -1 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(MappedFile { ptr, len })
+    }
+
+    #[cfg(not(unix))]
+    pub fn map(_path: impl AsRef<Path>) -> io::Result<MappedFile> {
+        Err(io::Error::new(
+            io::ErrorKind::Unsupported,
+            "mmap is unavailable on this platform",
+        ))
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl ByteSource for MappedFile {
+    fn bytes(&self) -> &[u8] {
+        // SAFETY: ptr/len describe a live PROT_READ mapping owned by
+        // self; it is unmapped only in Drop.
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+}
+
+impl Drop for MappedFile {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        // SAFETY: exactly the region mmap returned; no views can
+        // outlive self (they hold the Arc that runs this Drop).
+        unsafe {
+            sys::munmap(self.ptr as *mut u8, self.len);
+        }
+    }
+}
+
+/// The read fallback: the whole file in a `Vec<u64>`-backed buffer, so
+/// the base address is 8-aligned and the v3 container's 64-byte
+/// section offsets stay aligned for every section element type.
+pub struct AlignedBytes {
+    buf: Vec<u64>,
+    len: usize,
+}
+
+impl AlignedBytes {
+    pub fn read_file(path: impl AsRef<Path>) -> io::Result<AlignedBytes> {
+        let mut file = File::open(path)?;
+        let len = usize::try_from(file.metadata()?.len())
+            .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "file too large"))?;
+        let mut buf = vec![0u64; len.div_ceil(8)];
+        // SAFETY: a u64 buffer viewed as initialized bytes; len <= the
+        // allocation's byte size by construction.
+        let dst = unsafe {
+            std::slice::from_raw_parts_mut(buf.as_mut_ptr().cast::<u8>(), len)
+        };
+        file.read_exact(dst)?;
+        Ok(AlignedBytes { buf, len })
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl ByteSource for AlignedBytes {
+    fn bytes(&self) -> &[u8] {
+        // SAFETY: same region as in read_file; the trailing pad bytes
+        // of the last u64 word are excluded by len.
+        unsafe { std::slice::from_raw_parts(self.buf.as_ptr().cast::<u8>(), self.len) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str, bytes: &[u8]) -> std::path::PathBuf {
+        let p = std::env::temp_dir()
+            .join(format!("nemo_mmap_{tag}_{}.bin", std::process::id()));
+        std::fs::write(&p, bytes).unwrap();
+        p
+    }
+
+    #[test]
+    fn mapped_file_exposes_the_file_bytes() {
+        let p = tmp("map", b"hello mapping");
+        match MappedFile::map(&p) {
+            Ok(m) => {
+                assert_eq!(m.bytes(), b"hello mapping");
+                assert_eq!(m.len(), 13);
+                // Page alignment covers the container's 64-byte rule.
+                assert_eq!(m.bytes().as_ptr() as usize % 64, 0);
+            }
+            Err(e) => {
+                assert!(cfg!(not(unix)), "mmap failed on unix: {e}");
+            }
+        }
+        let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn aligned_read_matches_and_is_8_aligned() {
+        let data: Vec<u8> = (0..100).collect();
+        let p = tmp("read", &data);
+        let a = AlignedBytes::read_file(&p).unwrap();
+        assert_eq!(a.bytes(), &data[..]);
+        assert_eq!(a.len(), 100);
+        assert_eq!(a.bytes().as_ptr() as usize % 8, 0);
+        let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn missing_and_empty_files_error() {
+        assert!(AlignedBytes::read_file("/nonexistent/nemo.nemob").is_err());
+        assert!(MappedFile::map("/nonexistent/nemo.nemob").is_err());
+        let p = tmp("empty", b"");
+        assert!(MappedFile::map(&p).is_err());
+        let a = AlignedBytes::read_file(&p).unwrap();
+        assert!(a.is_empty());
+        let _ = std::fs::remove_file(p);
+    }
+}

@@ -7,13 +7,20 @@
 //! with full-precision f64 values — small models, exact round-trips.
 //!
 //! [`artifact`] is the *native* deployment format: a versioned,
-//! checksummed `model.nemo.json` holding a complete IntegerDeployable
-//! program — no Python, no PJRT manifest, no training step needed to
-//! serve it (DESIGN.md §Artifact-format).
+//! checksummed `model.nemo.json` — or its v3 binary container twin
+//! `model.nemob`, whose 64-byte-aligned weight sections the loader
+//! `mmap`s into zero-copy tensor views — holding a complete
+//! IntegerDeployable program: no Python, no PJRT manifest, no training
+//! step needed to serve it (DESIGN.md §Artifact-format).
 
 pub mod artifact;
+pub mod mmap;
 
-pub use artifact::{fnv1a64, ArtifactError, ArtifactProvenance, DeployedArtifact};
+pub use artifact::{
+    binary_info, fnv1a64, ArtifactError, ArtifactProvenance, BinInfo, BinLoadStats,
+    BinSection, DeployedArtifact,
+};
+pub use mmap::{AlignedBytes, BinLoadMode, MappedFile};
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};

@@ -27,7 +27,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use nemo::cli::Args;
+use nemo::cli::{model_spec, Args};
 use nemo::coordinator::{Server, ServerConfig};
 use nemo::data::SynthDigits;
 use nemo::exec::Executor;
@@ -83,11 +83,11 @@ fn main() {
 
 const USAGE: &str = "usage: nemo <train|deploy|infer|serve|client|validate|info> [--flags]
   train    --steps N --fq-steps N --bits B --lr F --seed N --out ck.json
-  deploy   --ckpt ck.json --bits B --thresholds --save m.nemo.json
+  deploy   --ckpt ck.json --bits B --thresholds --save m.nemo.json --save-bin m.nemob
   infer    --ckpt ck.json --n N --bits B
   serve    --ckpt ck.json --backend native|pjrt --requests N --clients C --max-batch B --timeout-us T
-           --model [name=]m.nemo.json  (repeatable: serve saved deployment artifacts by name,
-                                        no training/transform work; name defaults to the file stem)
+           --model [name=]m.nemo.json  (repeatable: serve saved deployment artifacts by name —
+                                        JSON or binary .nemob; name defaults to the file stem)
            --swap name=m.nemo.json     (hot-swap an artifact onto the running server mid-load-test)
            --listen ADDR               (serve remotely over the wire protocol until SIGINT/SIGTERM
                                         drains in-flight batches; --port-file F writes the bound port)
@@ -95,7 +95,8 @@ const USAGE: &str = "usage: nemo <train|deploy|infer|serve|client|validate|info>
            infer --model NAME --n N --seed S [--input qx.json] [--deadline-us T] [--pipeline]
            swap/load --model name=m.nemo.json   metrics/unload --model NAME
   validate
-  info     --model m.nemo.json  (repeatable: inspect artifacts without serving them)";
+  info     --model m.nemo.json|m.nemob  (repeatable: inspect artifacts without serving them;
+                                         .nemob additionally prints the weight section table)";
 
 fn load_or_init_net(args: &Args, rng: &mut Rng) -> Result<SynthNet> {
     match args.str_opt("ckpt") {
@@ -228,6 +229,14 @@ fn cmd_deploy(args: &Args) -> Result<()> {
         let bytes = std::fs::metadata(path).map(|m| m.len()).unwrap_or(0);
         println!("deployment artifact -> {path} ({bytes} bytes)");
     }
+    // The v3 binary container: same frozen program, 64-byte-aligned
+    // weight sections the loader mmaps into zero-copy views.
+    if let Some(path) = args.str_opt("save-bin") {
+        nid.save_deployed_bin(path)
+            .with_context(|| format!("saving binary deployment artifact {path}"))?;
+        let bytes = std::fs::metadata(path).map(|m| m.len()).unwrap_or(0);
+        println!("binary deployment artifact -> {path} ({bytes} bytes)");
+    }
     Ok(())
 }
 
@@ -317,26 +326,6 @@ fn pjrt_exec(
         "this binary was built without the `pjrt` feature; rebuild with \
          `--features pjrt` or use `--backend native`"
     )
-}
-
-/// A `--model` value: `name=path`, or a bare path whose model name
-/// defaults to the file stem (`models/a.nemo.json` serves as "a").
-fn model_spec(spec: &str) -> (String, String) {
-    if let Some((name, path)) = spec.split_once('=') {
-        if !name.is_empty() && !name.contains('/') {
-            return (name.to_string(), path.to_string());
-        }
-    }
-    let stem = std::path::Path::new(spec)
-        .file_name()
-        .map(|s| s.to_string_lossy().to_string())
-        .unwrap_or_else(|| spec.to_string());
-    let name = stem
-        .strip_suffix(".nemo.json")
-        .or_else(|| stem.strip_suffix(".json"))
-        .unwrap_or(stem.as_str())
-        .to_string();
-    (name, spec.to_string())
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
@@ -778,6 +767,38 @@ fn info_artifact(path: &str) -> Result<()> {
         "  format v{}  checksum {} (verified)  {} bytes",
         prov.format_version, prov.checksum, prov.bytes
     );
+    // Binary containers additionally expose their section table and how
+    // the on-disk weight bytes compare to the JSON-equivalent encoding.
+    if prov.format_version == nemo::io::artifact::BIN_VERSION as i64 {
+        let info = nemo::io::binary_info(path)
+            .with_context(|| format!("reading binary section table of {path}"))?;
+        println!(
+            "  binary container: header {} B, payload base {} B, \
+             weight sections {} B raw / {} B aligned",
+            info.header_bytes,
+            info.payload_base,
+            info.weight_bytes,
+            info.aligned_weight_bytes
+        );
+        let json_bytes = nemo::util::json::write(&art.to_json()).len();
+        println!(
+            "  weight bytes on disk vs JSON-equivalent artifact: {} / {} ({:.2}x smaller file)",
+            info.weight_bytes,
+            json_bytes,
+            json_bytes as f64 / info.file_bytes.max(1) as f64
+        );
+        println!("  sections ({}):", info.sections.len());
+        println!(
+            "    {:<4} {:<16} {:>6} {:>10} {:>10}  checksum",
+            "idx", "name", "dtype", "offset", "bytes"
+        );
+        for (i, s) in info.sections.iter().enumerate() {
+            println!(
+                "    {:<4} {:<16} {:>6} {:>10} {:>10}  {}",
+                i, s.name, s.dtype, s.off, s.bytes, s.checksum
+            );
+        }
+    }
     println!(
         "  wbits={} abits={} bn_folded={}  eps_in={:.6e}  eps_out={:.6e}",
         art.meta.wbits,

@@ -62,7 +62,7 @@ pub fn synthnet_id_args(dep: &Deployed) -> Result<Vec<Arg>> {
         let IntOp::RequantAct { rq } = &nodes[i + 2].op else {
             bail!("expected RequantAct at node {}", i + 2);
         };
-        args.push(wq.clone().into());
+        args.push(wq.widen().into());
         args.push(Tensor::from_vec(&[bn.kappa_q.len()], bn.kappa_q.clone()).into());
         args.push(Tensor::from_vec(&[bn.lambda_q.len()], bn.lambda_q.clone()).into());
         args.push(Tensor::scalar(rq.m as i32).into());
@@ -76,7 +76,7 @@ pub fn synthnet_id_args(dep: &Deployed) -> Result<Vec<Arg>> {
     let IntOp::LinearInt { wq, bias_q } = &nodes[i].op else {
         bail!("expected LinearInt at node {i}");
     };
-    args.push(wq.clone().into());
+    args.push(wq.widen().into());
     let bq: Vec<i32> = match bias_q {
         Some(b) => b.iter().map(|v| *v as i32).collect(),
         None => vec![0; wq.shape()[1]],

@@ -366,13 +366,26 @@ impl Network<IntegerDeployable> {
         DeployedArtifact::save_parts(&self.repr, &self.meta, path)
     }
 
+    /// [`Self::save_deployed`] in the v3 binary container form
+    /// (`model.nemob`): the same frozen integer program, with weight
+    /// payloads in 64-byte-aligned checksummed sections the loader can
+    /// `mmap` straight into zero-copy tensor views.
+    pub fn save_deployed_bin(
+        &self,
+        path: impl AsRef<std::path::Path>,
+    ) -> Result<(), ArtifactError> {
+        DeployedArtifact::save_binary_parts(&self.repr, &self.meta, path)
+    }
+
     /// Rehydrate an IntegerDeployable network from a saved artifact —
     /// the `deploy once, serve anywhere` entry point: no training, no
-    /// transform pipeline, no Python-side manifest. The loader validates
-    /// format/version, the model checksum and the precision stamps
-    /// (re-proved via `shape::infer_precision`). The QD float twin is
-    /// not shipped in the artifact, so [`Self::deployed`] on a loaded
-    /// network exposes an empty `qd` graph.
+    /// transform pipeline, no Python-side manifest. Both on-disk forms
+    /// load (the JSON document and the `.nemob` binary container; the
+    /// first bytes decide). The loader validates format/version, the
+    /// model checksum and the precision stamps (re-proved via
+    /// `shape::infer_precision`). The QD float twin is not shipped in
+    /// the artifact, so [`Self::deployed`] on a loaded network exposes
+    /// an empty `qd` graph.
     pub fn load_deployed(
         path: impl AsRef<std::path::Path>,
     ) -> Result<Self, ArtifactError> {

@@ -13,13 +13,134 @@
 pub mod ops;
 
 use std::fmt;
+use std::sync::Arc;
 
 use crate::quant::Precision;
+
+// -- borrowed-or-owned element storage --------------------------------
+//
+// Cold-loading a binary artifact (DESIGN.md §Artifact-format v3) maps
+// the file and hands tensors *views* into the mapping instead of
+// copying every weight byte. `Storage<T>` is the enabling layer: the
+// owned variant is exactly the old `Vec<T>`, the view variant borrows
+// a byte range of a shared [`ByteSource`] allocation. Everything above
+// `data()` is unchanged — kernels cannot tell the variants apart.
+
+/// A stable, immutable byte allocation that zero-copy tensor views
+/// borrow from (an mmap'ed artifact file, an aligned read buffer).
+/// Contract: `bytes()` must return the same allocation, unchanged, for
+/// the source's whole lifetime — view construction validates bounds and
+/// alignment against it once and trusts them afterwards.
+pub trait ByteSource: Send + Sync {
+    fn bytes(&self) -> &[u8];
+}
+
+impl ByteSource for Vec<u8> {
+    fn bytes(&self) -> &[u8] {
+        self
+    }
+}
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for u8 {}
+    impl Sealed for i8 {}
+    impl Sealed for i32 {}
+}
+
+/// Element types allowed behind zero-copy views: plain integer types
+/// with no invalid bit patterns whose in-memory representation equals
+/// the artifact's little-endian payload bytes (`u8`/`i8` trivially;
+/// `i32` only on little-endian hosts — [`Tensor::from_view`] enforces
+/// that at construction).
+pub trait ViewElem: sealed::Sealed + Copy + Default + 'static {}
+impl ViewElem for u8 {}
+impl ViewElem for i8 {}
+impl ViewElem for i32 {}
+
+#[derive(Clone)]
+enum Storage<T> {
+    Owned(Vec<T>),
+    /// `len` elements starting at byte `off` of `src`. Invariants
+    /// (checked by the only constructor, [`Tensor::from_view`]):
+    /// `T: ViewElem`, the range is in bounds, and `src.bytes() + off`
+    /// is aligned for `T`.
+    View { src: Arc<dyn ByteSource>, off: usize, len: usize },
+}
+
+impl<T: Copy> Storage<T> {
+    #[inline]
+    fn len(&self) -> usize {
+        match self {
+            Storage::Owned(v) => v.len(),
+            Storage::View { len, .. } => *len,
+        }
+    }
+
+    #[inline]
+    fn as_slice(&self) -> &[T] {
+        match self {
+            Storage::Owned(v) => v,
+            Storage::View { src, off, len } => {
+                let bytes = &src.bytes()[*off..*off + *len * std::mem::size_of::<T>()];
+                // SAFETY: construction checked bounds and alignment
+                // against this same (stable, immutable) allocation, and
+                // `T: ViewElem` is a plain integer type with no invalid
+                // bit patterns.
+                unsafe { std::slice::from_raw_parts(bytes.as_ptr().cast::<T>(), *len) }
+            }
+        }
+    }
+
+    /// Copy-on-write promotion: views become owned before any mutation,
+    /// so a mapped artifact's bytes are never written through.
+    fn make_owned(&mut self) {
+        if let Storage::View { .. } = self {
+            *self = Storage::Owned(self.as_slice().to_vec());
+        }
+    }
+
+    #[inline]
+    fn as_mut_slice(&mut self) -> &mut [T] {
+        self.make_owned();
+        match self {
+            Storage::Owned(v) => v,
+            Storage::View { .. } => unreachable!("promoted above"),
+        }
+    }
+
+    fn into_vec(mut self) -> Vec<T> {
+        self.make_owned();
+        match self {
+            Storage::Owned(v) => v,
+            Storage::View { .. } => unreachable!("promoted above"),
+        }
+    }
+
+    fn is_view(&self) -> bool {
+        matches!(self, Storage::View { .. })
+    }
+}
+
+impl<T: Copy + PartialEq> PartialEq for Storage<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl<T: Copy + fmt::Debug> fmt::Debug for Storage<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_view() {
+            write!(f, "view:")?;
+        }
+        f.debug_list().entries(self.as_slice()).finish()
+    }
+}
 
 #[derive(Clone, PartialEq)]
 pub struct Tensor<T> {
     shape: Vec<usize>,
-    data: Vec<T>,
+    data: Storage<T>,
 }
 
 pub type TensorF = Tensor<f32>;
@@ -30,22 +151,22 @@ pub type TensorI8 = Tensor<i8>;
 impl<T: Copy + Default> Tensor<T> {
     pub fn zeros(shape: &[usize]) -> Self {
         let n: usize = shape.iter().product();
-        Tensor { shape: shape.to_vec(), data: vec![T::default(); n] }
+        Tensor { shape: shape.to_vec(), data: Storage::Owned(vec![T::default(); n]) }
     }
 
     pub fn from_vec(shape: &[usize], data: Vec<T>) -> Self {
         let n: usize = shape.iter().product();
         assert_eq!(n, data.len(), "shape {:?} != data len {}", shape, data.len());
-        Tensor { shape: shape.to_vec(), data }
+        Tensor { shape: shape.to_vec(), data: Storage::Owned(data) }
     }
 
     pub fn full(shape: &[usize], v: T) -> Self {
         let n: usize = shape.iter().product();
-        Tensor { shape: shape.to_vec(), data: vec![v; n] }
+        Tensor { shape: shape.to_vec(), data: Storage::Owned(vec![v; n]) }
     }
 
     pub fn scalar(v: T) -> Self {
-        Tensor { shape: vec![], data: vec![v] }
+        Tensor { shape: vec![], data: Storage::Owned(vec![v]) }
     }
 
     #[inline]
@@ -64,21 +185,30 @@ impl<T: Copy + Default> Tensor<T> {
     }
 
     pub fn is_empty(&self) -> bool {
-        self.data.is_empty()
+        self.data.len() == 0
     }
 
     #[inline]
     pub fn data(&self) -> &[T] {
-        &self.data
+        self.data.as_slice()
     }
 
+    /// Mutable element access. Borrowed (zero-copy view) storage is
+    /// promoted to an owned copy first — mapped artifact bytes are
+    /// never written through.
     #[inline]
     pub fn data_mut(&mut self) -> &mut [T] {
-        &mut self.data
+        self.data.as_mut_slice()
     }
 
     pub fn into_vec(self) -> Vec<T> {
-        self.data
+        self.data.into_vec()
+    }
+
+    /// Whether element storage is a borrowed zero-copy view over a
+    /// shared [`ByteSource`] (an mmap'ed artifact) rather than owned.
+    pub fn is_borrowed(&self) -> bool {
+        self.data.is_view()
     }
 
     /// Reshape without moving data (total size must match).
@@ -98,26 +228,26 @@ impl<T: Copy + Default> Tensor<T> {
     #[inline]
     pub fn at2(&self, i: usize, j: usize) -> T {
         debug_assert_eq!(self.ndim(), 2);
-        self.data[i * self.shape[1] + j]
+        self.data.as_slice()[i * self.shape[1] + j]
     }
 
     #[inline]
     pub fn at4(&self, n: usize, c: usize, h: usize, w: usize) -> T {
         debug_assert_eq!(self.ndim(), 4);
         let (sc, sh, sw) = (self.shape[1], self.shape[2], self.shape[3]);
-        self.data[((n * sc + c) * sh + h) * sw + w]
+        self.data.as_slice()[((n * sc + c) * sh + h) * sw + w]
     }
 
     #[inline]
     pub fn set4(&mut self, n: usize, c: usize, h: usize, w: usize, v: T) {
         let (sc, sh, sw) = (self.shape[1], self.shape[2], self.shape[3]);
-        self.data[((n * sc + c) * sh + h) * sw + w] = v;
+        self.data.as_mut_slice()[((n * sc + c) * sh + h) * sw + w] = v;
     }
 
     pub fn map<U: Copy + Default>(&self, f: impl Fn(T) -> U) -> Tensor<U> {
         Tensor {
             shape: self.shape.clone(),
-            data: self.data.iter().map(|x| f(*x)).collect(),
+            data: Storage::Owned(self.data().iter().map(|x| f(*x)).collect()),
         }
     }
 
@@ -127,7 +257,7 @@ impl<T: Copy + Default> Tensor<T> {
         let row: usize = self.shape[1..].iter().product();
         let mut shape = self.shape.clone();
         shape[0] = hi - lo;
-        Tensor { shape, data: self.data[lo * row..hi * row].to_vec() }
+        Tensor { shape, data: Storage::Owned(self.data()[lo * row..hi * row].to_vec()) }
     }
 
     /// Concatenate along axis 0.
@@ -139,9 +269,45 @@ impl<T: Copy + Default> Tensor<T> {
         let mut data = Vec::with_capacity(shape.iter().product());
         for p in parts {
             assert_eq!(&p.shape[1..], inner, "cat_batch shape mismatch");
-            data.extend_from_slice(&p.data);
+            data.extend_from_slice(p.data());
         }
-        Tensor { shape, data }
+        Tensor { shape, data: Storage::Owned(data) }
+    }
+
+    /// Zero-copy view of `shape.iter().product()` elements starting at
+    /// byte offset `off` of `src`. Fails loudly when the byte range is
+    /// out of bounds, the address is misaligned for `T`, or the host is
+    /// big-endian while `T` is wider than a byte (artifact payload
+    /// bytes are little-endian) — callers fall back to an owned copy.
+    pub fn from_view(
+        shape: &[usize],
+        src: Arc<dyn ByteSource>,
+        off: usize,
+    ) -> Result<Self, String>
+    where
+        T: ViewElem,
+    {
+        let len: usize = shape.iter().product();
+        let size = std::mem::size_of::<T>();
+        if size > 1 && cfg!(target_endian = "big") {
+            return Err("multi-byte zero-copy views need a little-endian host".into());
+        }
+        let end = off
+            .checked_add(len * size)
+            .ok_or_else(|| "view range overflows".to_string())?;
+        let b = src.bytes();
+        if end > b.len() {
+            return Err(format!(
+                "view [{off}, {end}) out of bounds of {}-byte source",
+                b.len()
+            ));
+        }
+        if (b.as_ptr() as usize + off) % std::mem::align_of::<T>() != 0 {
+            return Err(format!(
+                "view at byte offset {off} misaligned for a {size}-byte element"
+            ));
+        }
+        Ok(Tensor { shape: shape.to_vec(), data: Storage::View { src, off, len } })
     }
 }
 
@@ -153,17 +319,17 @@ impl Tensor<f32> {
     pub fn allclose(&self, other: &Self, atol: f32, rtol: f32) -> bool {
         self.shape == other.shape
             && self
-                .data
+                .data()
                 .iter()
-                .zip(&other.data)
+                .zip(other.data())
                 .all(|(a, b)| (a - b).abs() <= atol + rtol * b.abs())
     }
 
     pub fn max_abs_diff(&self, other: &Self) -> f32 {
         assert_eq!(self.shape, other.shape);
-        self.data
+        self.data()
             .iter()
-            .zip(&other.data)
+            .zip(other.data())
             .map(|(a, b)| (a - b).abs())
             .fold(0.0, f32::max)
     }
@@ -175,7 +341,7 @@ impl Tensor<i32> {
     pub fn argmax_rows(&self) -> Vec<usize> {
         assert_eq!(self.ndim(), 2);
         let c = self.shape[1];
-        self.data
+        self.data()
             .chunks(c)
             .map(|row| {
                 row.iter()
@@ -192,7 +358,7 @@ impl Tensor<f32> {
     pub fn argmax_rows(&self) -> Vec<usize> {
         assert_eq!(self.ndim(), 2);
         let c = self.shape[1];
-        self.data
+        self.data()
             .chunks(c)
             .map(|row| {
                 let mut best = 0;
@@ -270,7 +436,41 @@ pub struct PackedTensor {
     prec: Precision,
     shape: Vec<usize>,
     len: usize,
-    data: Vec<u8>,
+    data: Storage<u8>,
+}
+
+/// Shared validation for packed payloads, owned or viewed: sub-byte
+/// precision, exact byte length, zero trailing pad bits. Returns the
+/// element count.
+fn check_packed_payload(
+    shape: &[usize],
+    p: Precision,
+    data: &[u8],
+) -> Result<usize, String> {
+    if !p.is_sub_byte() {
+        return Err(format!("{} is not a sub-byte precision", p.name()));
+    }
+    let len: usize = shape.iter().product();
+    let want = p.storage_bytes(len);
+    if data.len() != want {
+        return Err(format!(
+            "packed {} payload of {} bytes, shape {shape:?} wants {want}",
+            p.name(),
+            data.len()
+        ));
+    }
+    let used_bits = len * p.bits() as usize;
+    if used_bits % 8 != 0 {
+        let last = data[want - 1];
+        let pad_mask = !((1u16 << (used_bits % 8)) as u8).wrapping_sub(1);
+        if last & pad_mask != 0 {
+            return Err(format!(
+                "packed {} payload has non-zero trailing pad bits",
+                p.name()
+            ));
+        }
+    }
+    Ok(len)
 }
 
 impl PackedTensor {
@@ -282,30 +482,29 @@ impl PackedTensor {
         p: Precision,
         data: Vec<u8>,
     ) -> Result<Self, String> {
-        if !p.is_sub_byte() {
-            return Err(format!("{} is not a sub-byte precision", p.name()));
-        }
-        let len: usize = shape.iter().product();
-        let want = p.storage_bytes(len);
-        if data.len() != want {
-            return Err(format!(
-                "packed {} payload of {} bytes, shape {shape:?} wants {want}",
-                p.name(),
-                data.len()
-            ));
-        }
-        let used_bits = len * p.bits() as usize;
-        if used_bits % 8 != 0 {
-            let last = data[want - 1];
-            let pad_mask = !((1u16 << (used_bits % 8)) as u8).wrapping_sub(1);
-            if last & pad_mask != 0 {
-                return Err(format!(
-                    "packed {} payload has non-zero trailing pad bits",
-                    p.name()
-                ));
-            }
-        }
+        let len = check_packed_payload(shape, p, &data)?;
+        Ok(PackedTensor { prec: p, shape: shape.to_vec(), len, data: Storage::Owned(data) })
+    }
+
+    /// Zero-copy packed payload: the `p.storage_bytes(len)` bytes at
+    /// byte offset `off` of `src`, validated exactly like
+    /// [`Self::from_bytes`] (length, sub-byte precision, pad bits).
+    pub fn from_view(
+        shape: &[usize],
+        p: Precision,
+        src: Arc<dyn ByteSource>,
+        off: usize,
+    ) -> Result<Self, String> {
+        let t = Tensor::<u8>::from_view(&[p.storage_bytes(shape.iter().product())], src, off)?;
+        let len = check_packed_payload(shape, p, t.data())?;
+        let Tensor { data, .. } = t;
         Ok(PackedTensor { prec: p, shape: shape.to_vec(), len, data })
+    }
+
+    /// Whether the payload is a borrowed zero-copy view (see
+    /// [`Tensor::is_borrowed`]).
+    pub fn is_borrowed(&self) -> bool {
+        self.data.is_view()
     }
 
     pub fn precision(&self) -> Precision {
@@ -326,13 +525,13 @@ impl PackedTensor {
 
     /// The packed payload bytes.
     pub fn bytes(&self) -> &[u8] {
-        &self.data
+        self.data.as_slice()
     }
 
     /// Element `idx`, sign-extended for `I4`.
     #[inline]
     pub fn get(&self, idx: usize) -> i32 {
-        get_packed(&self.data, idx, self.prec)
+        get_packed(self.data.as_slice(), idx, self.prec)
     }
 }
 
@@ -388,6 +587,40 @@ impl QTensor {
     /// Bytes of element storage (the bandwidth this image costs).
     pub fn storage_bytes(&self) -> usize {
         self.precision().storage_bytes(self.len())
+    }
+
+    /// Whether element storage is a borrowed zero-copy view over a
+    /// shared [`ByteSource`] (an mmap'ed artifact) rather than owned —
+    /// the loader's zero-copy accounting reads this.
+    pub fn is_borrowed(&self) -> bool {
+        match self {
+            QTensor::U8(t) => t.is_borrowed(),
+            QTensor::I8(t) => t.is_borrowed(),
+            QTensor::I32(t) => t.is_borrowed(),
+            QTensor::Packed(t) => t.is_borrowed(),
+        }
+    }
+
+    /// (min, max) of the stored values widened to i64; (0, 0) when
+    /// empty. The artifact writer stamps weight dtypes from this.
+    pub fn min_max(&self) -> (i64, i64) {
+        fn fold<T: Copy + Into<i64>>(d: &[T]) -> (i64, i64) {
+            d.iter().fold((i64::MAX, i64::MIN), |(lo, hi), v| {
+                let v: i64 = (*v).into();
+                (lo.min(v), hi.max(v))
+            })
+        }
+        if self.is_empty() {
+            return (0, 0);
+        }
+        match self {
+            QTensor::U8(t) => fold(t.data()),
+            QTensor::I8(t) => fold(t.data()),
+            QTensor::I32(t) => fold(t.data()),
+            QTensor::Packed(t) => (0..t.len())
+                .map(|i| t.get(i) as i64)
+                .fold((i64::MAX, i64::MIN), |(lo, hi), v| (lo.min(v), hi.max(v))),
+        }
     }
 
     /// Lossless widening to the full-width i32 image.
@@ -447,7 +680,7 @@ impl QTensor {
                     prec: p,
                     shape: t.shape().to_vec(),
                     len: t.len(),
-                    data,
+                    data: Storage::Owned(data),
                 }))
             }
         }
@@ -464,9 +697,9 @@ impl<T: fmt::Debug + Copy + Default> fmt::Debug for Tensor<T> {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(f, "Tensor{:?}", self.shape)?;
         if self.len() <= 16 {
-            write!(f, " {:?}", self.data)
+            write!(f, " {:?}", self.data())
         } else {
-            write!(f, " [{:?}, {:?}, ...]", self.data[0], self.data[1])
+            write!(f, " [{:?}, {:?}, ...]", self.data()[0], self.data()[1])
         }
     }
 }
@@ -590,6 +823,108 @@ mod tests {
         let q = QTensor::narrow_from(&t, Precision::I4).unwrap();
         assert_eq!(q.storage_bytes(), 2);
         assert_eq!(q.widen(), t);
+    }
+
+    /// 8-byte-aligned test source (a plain `Vec<u8>` allocation is only
+    /// guaranteed 1-aligned, so i32-view tests need this).
+    struct AlignedSrc {
+        buf: Vec<u64>,
+        len: usize,
+    }
+
+    impl AlignedSrc {
+        fn new(bytes: &[u8]) -> Self {
+            let mut buf = vec![0u64; bytes.len().div_ceil(8)];
+            unsafe {
+                std::ptr::copy_nonoverlapping(
+                    bytes.as_ptr(),
+                    buf.as_mut_ptr().cast::<u8>(),
+                    bytes.len(),
+                );
+            }
+            AlignedSrc { buf, len: bytes.len() }
+        }
+    }
+
+    impl ByteSource for AlignedSrc {
+        fn bytes(&self) -> &[u8] {
+            unsafe { std::slice::from_raw_parts(self.buf.as_ptr().cast(), self.len) }
+        }
+    }
+
+    #[test]
+    fn views_are_zero_copy_and_promote_on_write() {
+        let src: Arc<dyn ByteSource> = Arc::new(vec![1u8, 2, 3, 4, 5, 6, 7, 8]);
+        let t = Tensor::<u8>::from_view(&[2, 2], src.clone(), 4).unwrap();
+        assert!(t.is_borrowed());
+        assert_eq!(t.data(), &[5, 6, 7, 8]);
+        // Equality is by value, not by storage flavour.
+        assert_eq!(t, Tensor::from_vec(&[2, 2], vec![5, 6, 7, 8]));
+        // Reshape keeps the borrow; mutation promotes to an owned copy
+        // without touching the source.
+        let r = t.reshape(&[4]);
+        assert!(r.is_borrowed());
+        let mut m = t.clone();
+        m.data_mut()[0] = 9;
+        assert!(!m.is_borrowed());
+        assert_eq!(m.data(), &[9, 6, 7, 8]);
+        assert_eq!(t.data(), &[5, 6, 7, 8]);
+        assert_eq!(src.bytes()[4], 5);
+        // Out-of-bounds ranges fail loudly.
+        assert!(Tensor::<u8>::from_view(&[9], src.clone(), 0).is_err());
+        assert!(Tensor::<u8>::from_view(&[4], src.clone(), 5).is_err());
+        assert!(Tensor::<u8>::from_view(&[1], src, usize::MAX).is_err());
+    }
+
+    #[test]
+    fn i32_views_check_alignment() {
+        let vals = [3i32, -7, 1 << 20, -1];
+        let mut bytes = Vec::new();
+        for v in vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        bytes.extend_from_slice(&[0, 0]); // slack for the misaligned case
+        let src: Arc<dyn ByteSource> = Arc::new(AlignedSrc::new(&bytes));
+        if cfg!(target_endian = "little") {
+            let t = Tensor::<i32>::from_view(&[2, 2], src.clone(), 0).unwrap();
+            assert!(t.is_borrowed());
+            assert_eq!(t.data(), &vals);
+            assert_eq!(t.at2(0, 1), -7);
+            // into_vec promotes the view to an owned copy.
+            assert_eq!(t.into_vec(), vals.to_vec());
+        }
+        // Offset 2 is not 4-aligned for i32.
+        assert!(Tensor::<i32>::from_view(&[1], src, 2).is_err());
+    }
+
+    #[test]
+    fn packed_views_validate_like_from_bytes() {
+        // 3 x U2 uses bits 0-5 of one byte: 0b__10_01_00 = elements 0,1,2.
+        let src: Arc<dyn ByteSource> = Arc::new(vec![0b10_01_00u8, 0x40]);
+        let p = PackedTensor::from_view(&[3], Precision::U2, src.clone(), 0).unwrap();
+        assert!(p.is_borrowed());
+        assert_eq!((p.get(0), p.get(1), p.get(2)), (0, 1, 2));
+        assert_eq!(QTensor::Packed(p).widen().data(), &[0, 1, 2]);
+        // Byte 1 has a pad bit set for a 3 x U2 payload.
+        assert!(PackedTensor::from_view(&[3], Precision::U2, src.clone(), 1).is_err());
+        // Out of bounds.
+        assert!(PackedTensor::from_view(&[9], Precision::U2, src, 0).is_err());
+    }
+
+    #[test]
+    fn qtensor_min_max_and_borrow_accounting() {
+        let t = Tensor::from_vec(&[4], vec![-3, 7, 0, 2]);
+        let q = QTensor::narrow_from(&t, Precision::I8).unwrap();
+        assert_eq!(q.min_max(), (-3, 7));
+        assert!(!q.is_borrowed());
+        let sub = QTensor::narrow_from(
+            &Tensor::from_vec(&[3], vec![-8, 7, -1]),
+            Precision::I4,
+        )
+        .unwrap();
+        assert_eq!(sub.min_max(), (-8, 7));
+        let empty = QTensor::I32(Tensor::from_vec(&[0], vec![]));
+        assert_eq!(empty.min_max(), (0, 0));
     }
 
     #[test]

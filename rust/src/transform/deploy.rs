@@ -199,7 +199,7 @@ pub(crate) fn deploy_impl(
                 let id_node = id.push(
                     &n.name,
                     IntOp::ConvInt {
-                        wq,
+                        wq: wq.into(),
                         bias_q,
                         cin: ci,
                         kh,
@@ -254,7 +254,7 @@ pub(crate) fn deploy_impl(
                 );
                 let id_node = id.push(
                     &n.name,
-                    IntOp::LinearInt { wq, bias_q },
+                    IntOp::LinearInt { wq: wq.into(), bias_q },
                     &[prev.id_node],
                 );
                 layers.push(LayerQuant {

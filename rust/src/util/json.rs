@@ -446,6 +446,100 @@ pub fn obj(pairs: Vec<(&str, Value)>) -> Value {
     Value::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
+/// Byte span `(start, end)` of the value for `key` in the top-level
+/// object of `text`, found by a token-level scan (string-escape-aware,
+/// depth-tracking) without building a tree. The artifact loader hashes
+/// the raw span of the `model` subtree while the document is parsed
+/// once — the checksum no longer needs a second, re-serialized copy of
+/// the model text. Returns `None` when `text` is not an object or the
+/// key is absent at depth 1; escaped keys are not matched (the caller
+/// falls back to the canonical re-serialize).
+pub fn top_level_value_span(text: &str, key: &str) -> Option<(usize, usize)> {
+    let b = text.as_bytes();
+    let skip_ws = |mut i: usize| {
+        while i < b.len() && b[i].is_ascii_whitespace() {
+            i += 1;
+        }
+        i
+    };
+    // End index (exclusive) of the string starting at the quote `b[i]`.
+    let scan_string = |i: usize| {
+        debug_assert_eq!(b[i], b'"');
+        let mut j = i + 1;
+        while j < b.len() {
+            match b[j] {
+                b'\\' => j += 2,
+                b'"' => return Some(j + 1),
+                _ => j += 1,
+            }
+        }
+        None
+    };
+    // End index (exclusive) of the value starting at `b[i]`.
+    let scan_value = |i: usize| match b.get(i)? {
+        b'"' => scan_string(i),
+        b'{' | b'[' => {
+            let mut depth = 0usize;
+            let mut j = i;
+            while j < b.len() {
+                match b[j] {
+                    b'"' => j = scan_string(j)?,
+                    b'{' | b'[' => {
+                        depth += 1;
+                        j += 1;
+                    }
+                    b'}' | b']' => {
+                        depth -= 1;
+                        j += 1;
+                        if depth == 0 {
+                            return Some(j);
+                        }
+                    }
+                    _ => j += 1,
+                }
+            }
+            None
+        }
+        _ => {
+            // scalar: runs until a structural delimiter or whitespace
+            let mut j = i;
+            while j < b.len() && !matches!(b[j], b',' | b'}' | b']') && !b[j].is_ascii_whitespace() {
+                j += 1;
+            }
+            Some(j)
+        }
+    };
+
+    let mut i = skip_ws(0);
+    if *b.get(i)? != b'{' {
+        return None;
+    }
+    i = skip_ws(i + 1);
+    loop {
+        match *b.get(i)? {
+            b'}' => return None,
+            b',' => {
+                i = skip_ws(i + 1);
+                continue;
+            }
+            b'"' => {}
+            _ => return None,
+        }
+        let kend = scan_string(i)?;
+        let k = &text[i + 1..kend - 1];
+        i = skip_ws(kend);
+        if *b.get(i)? != b':' {
+            return None;
+        }
+        i = skip_ws(i + 1);
+        let vend = scan_value(i)?;
+        if k == key && !k.contains('\\') {
+            return Some((i, vend));
+        }
+        i = skip_ws(vend);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -495,6 +589,40 @@ mod tests {
         assert!(parse("[1,]").is_err());
         assert!(parse("tru").is_err());
         assert!(parse("1 2").is_err());
+    }
+
+    #[test]
+    fn top_level_spans_match_the_canonical_writer() {
+        // Canonical output: the raw span IS the canonical serialization
+        // of the subtree, so hashing it equals hashing write(subtree).
+        let doc = obj(vec![
+            ("alpha", Value::Int(7)),
+            ("model", obj(vec![("w", arr_i64(&[1, -2, 3])), ("s", Value::Str("a\"b".into()))])),
+            ("tail", Value::Bool(true)),
+        ]);
+        let text = write(&doc);
+        let (s, e) = top_level_value_span(&text, "model").unwrap();
+        assert_eq!(&text[s..e], write(doc.get("model").unwrap()));
+        let (s, e) = top_level_value_span(&text, "alpha").unwrap();
+        assert_eq!(&text[s..e], "7");
+        let (s, e) = top_level_value_span(&text, "tail").unwrap();
+        assert_eq!(&text[s..e], "true");
+        assert!(top_level_value_span(&text, "absent").is_none());
+    }
+
+    #[test]
+    fn spans_survive_whitespace_and_tricky_strings() {
+        let text = r#" { "a" : [ {"}]": "\\\"{" } , 2 ] , "b" : { "x" : -1.5e3 } } "#;
+        let (s, e) = top_level_value_span(text, "b").unwrap();
+        assert_eq!(&text[s..e], r#"{ "x" : -1.5e3 }"#);
+        let (s, e) = top_level_value_span(text, "a").unwrap();
+        assert_eq!(&text[s..e], r#"[ {"}]": "\\\"{" } , 2 ]"#);
+        // nested key "x" is not at the top level
+        assert!(top_level_value_span(text, "x").is_none());
+        // non-objects and truncated docs yield None, never panic
+        assert!(top_level_value_span("[1,2]", "a").is_none());
+        assert!(top_level_value_span(r#"{"a": [1, 2"#, "a").is_none());
+        assert!(top_level_value_span(r#"{"a": "unterminated"#, "a").is_none());
     }
 
     #[test]

@@ -1,0 +1,311 @@
+//! v3 binary container (`model.nemob`): bit-identity across every load
+//! path (mmap, aligned read, v2 JSON, in-memory deploy) at Q in
+//! {1, 2, 4, 8}, the zero-copy borrowed-storage accounting, the
+//! on-disk size contract, and loud typed rejection of corrupted
+//! containers — truncation mid-section, flipped weight bytes,
+//! misaligned offsets, header/section-table mismatches
+//! (DESIGN.md §Artifact-format).
+
+use std::time::Duration;
+
+use nemo::coordinator::{Server, ServerConfig};
+use nemo::data::SynthDigits;
+use nemo::engine::IntegerEngine;
+use nemo::exec::{ExecInput, Executor, NativeIntExecutor};
+use nemo::io::artifact::{
+    binary_info, ArtifactError, DeployedArtifact, BIN_ALIGN, BIN_MAGIC, BIN_VERSION,
+};
+use nemo::io::BinLoadMode;
+use nemo::model::mlp;
+use nemo::model::synthnet::{SynthNet, EPS_IN};
+use nemo::network::{IntegerDeployable, Network};
+use nemo::quant::quantize_input;
+use nemo::tensor::TensorF;
+use nemo::transform::DeployOptions;
+use nemo::util::rng::Rng;
+
+fn tmp_path(tag: &str, ext: &str) -> std::path::PathBuf {
+    // pid-unique: concurrent test runs on one host must not share files.
+    std::env::temp_dir().join(format!("nemo_nemob_{tag}_{}.{ext}", std::process::id()))
+}
+
+/// An MLP deployed on a Q-bit activation grid (4-bit weights below Q=8
+/// so the sections land on sub-byte dtypes, 8-bit at Q=8) — the same
+/// proven few-bit pipeline tests/subbyte.rs exercises.
+fn deployed_mlp(q: u32, seed: u64) -> (Network<IntegerDeployable>, TensorF) {
+    let wbits = if q < 8 { 4 } else { 8 };
+    let mut rng = Rng::new(seed);
+    let g = mlp(&mut rng, 12, 10, 4, 1.0 / 255.0);
+    let x = TensorF::from_vec(
+        &[3, 12],
+        (0..36).map(|_| rng.uniform(0.0, 1.0) as f32).collect(),
+    );
+    let fp = Network::from_graph(g).unwrap();
+    let betas = fp.calibrate(&[x.clone()]);
+    let nid = fp
+        .quantize_pact(wbits, q, &betas)
+        .unwrap()
+        .deploy(DeployOptions { wbits, abits: q, ..DeployOptions::default() })
+        .unwrap()
+        .integerize();
+    (nid, x)
+}
+
+fn deployed_synthnet(seed: u64) -> Network<IntegerDeployable> {
+    let mut rng = Rng::new(seed);
+    SynthNet::init(&mut rng)
+        .to_network(8)
+        .unwrap()
+        .deploy(DeployOptions::default())
+        .unwrap()
+        .integerize()
+}
+
+/// Rebuild a container around an edited header: preamble + new header
+/// length + the original payload region re-based onto the new 64-byte
+/// payload base. Section offsets are payload-relative, so untouched
+/// entries stay valid across the edit.
+fn rewrite_header(file: &[u8], edit: impl Fn(&str) -> String) -> Vec<u8> {
+    let header_len = u32::from_le_bytes(file[12..16].try_into().unwrap()) as usize;
+    let old_base = (16 + header_len).div_ceil(BIN_ALIGN) * BIN_ALIGN;
+    let htext = std::str::from_utf8(&file[16..16 + header_len]).unwrap();
+    let edited = edit(htext);
+    let new_base = (16 + edited.len()).div_ceil(BIN_ALIGN) * BIN_ALIGN;
+    let mut out = vec![0u8; new_base + (file.len() - old_base)];
+    out[..8].copy_from_slice(&BIN_MAGIC);
+    out[8..12].copy_from_slice(&BIN_VERSION.to_le_bytes());
+    out[12..16].copy_from_slice(&(edited.len() as u32).to_le_bytes());
+    out[16..16 + edited.len()].copy_from_slice(edited.as_bytes());
+    out[new_base..].copy_from_slice(&file[old_base..]);
+    out
+}
+
+#[test]
+fn bit_identity_across_all_load_paths_at_every_q() {
+    for q in [1u32, 2, 4, 8] {
+        let (nid, x) = deployed_mlp(q, 60 + q as u64);
+        let qx = quantize_input(&x, 1.0 / 255.0);
+        let jpath = tmp_path(&format!("q{q}"), "nemo.json");
+        let bpath = tmp_path(&format!("q{q}"), "nemob");
+        nid.save_deployed(&jpath).unwrap();
+        nid.save_deployed_bin(&bpath).unwrap();
+
+        // The reference: the in-memory deployment, interpreter semantics.
+        let want = nid.run(&qx);
+
+        let jart = DeployedArtifact::load(&jpath).unwrap();
+        assert_eq!(
+            IntegerEngine::new().run(&jart.graph, &qx),
+            want,
+            "JSON load diverged at Q={q}"
+        );
+
+        for mode in [BinLoadMode::Read, BinLoadMode::Mmap, BinLoadMode::Auto] {
+            let (bart, prov, stats) = match DeployedArtifact::load_binary(&bpath, mode) {
+                Ok(t) => t,
+                // mmap may legitimately be unavailable off-unix; the
+                // other modes must always work.
+                Err(_) if mode == BinLoadMode::Mmap && cfg!(not(unix)) => continue,
+                Err(e) => panic!("load_binary({mode:?}) failed at Q={q}: {e}"),
+            };
+            assert_eq!(prov.format_version, BIN_VERSION as i64);
+            assert_eq!(
+                bart.graph.precisions(),
+                nid.int_graph().precisions(),
+                "precision stamps changed at Q={q}"
+            );
+            assert_eq!(
+                IntegerEngine::new().run(&bart.graph, &qx),
+                want,
+                "binary {mode:?} load diverged at Q={q}"
+            );
+            if cfg!(target_endian = "little") {
+                assert_eq!(stats.copied_bytes, 0, "copy on {mode:?} at Q={q}");
+                assert!(stats.borrowed_bytes > 0);
+            }
+            // Executor path: the plan compiled from the binary artifact
+            // matches the in-memory network bit for bit.
+            let e0 = nid.to_executor(3).unwrap();
+            let e1 = NativeIntExecutor::new(bart.graph.clone(), 3).unwrap();
+            assert_eq!(e0.packed(), e1.packed(), "plan choice changed at Q={q}");
+            let o0 = e0.run_batch(&ExecInput::i32(qx.clone())).unwrap();
+            let o1 = e1.run_batch(&ExecInput::i32(qx.clone())).unwrap();
+            assert_eq!(
+                o0.int_logits().unwrap(),
+                o1.int_logits().unwrap(),
+                "executor logits diverged ({mode:?}, Q={q})"
+            );
+        }
+        let _ = std::fs::remove_file(&jpath);
+        let _ = std::fs::remove_file(&bpath);
+    }
+}
+
+#[test]
+fn zero_copy_accounting_and_disk_size_contract() {
+    let nid = deployed_synthnet(7);
+    let path = tmp_path("stats", "nemob");
+    nid.save_deployed_bin(&path).unwrap();
+    let info = binary_info(&path).unwrap();
+    assert_eq!(info.container_version, BIN_VERSION);
+    assert!(info.sections.len() >= 2, "synthnet must ship several sections");
+    let section_bytes: usize = info.sections.iter().map(|s| s.bytes).sum();
+    assert_eq!(info.weight_bytes, section_bytes);
+
+    // On-disk weight region (including alignment padding) stays within
+    // 1.1x of the raw packed weight bytes.
+    assert!(
+        (info.aligned_weight_bytes as f64) <= 1.1 * info.weight_bytes as f64,
+        "alignment padding blew the size contract: {} aligned vs {} raw",
+        info.aligned_weight_bytes,
+        info.weight_bytes
+    );
+
+    let (_, _, stats) = DeployedArtifact::load_binary(&path, BinLoadMode::Read).unwrap();
+    assert_eq!(stats.sections, info.sections.len());
+    assert!(!stats.mmap);
+    if cfg!(target_endian = "little") {
+        assert_eq!(
+            stats.borrowed_bytes, info.weight_bytes,
+            "every weight byte must be served as a borrowed view"
+        );
+        assert_eq!(stats.copied_bytes, 0);
+    }
+    match DeployedArtifact::load_binary(&path, BinLoadMode::Mmap) {
+        Ok((_, _, stats)) => {
+            assert!(stats.mmap);
+            if cfg!(target_endian = "little") {
+                assert_eq!(stats.borrowed_bytes, info.weight_bytes);
+                assert_eq!(stats.copied_bytes, 0, "mmap path must not copy weight bytes");
+            }
+        }
+        Err(e) => assert!(cfg!(not(unix)), "mmap load must succeed on unix: {e}"),
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn corrupted_containers_are_rejected_loudly() {
+    let nid = deployed_synthnet(11);
+    let path = tmp_path("corrupt", "nemob");
+    nid.save_deployed_bin(&path).unwrap();
+    let file = std::fs::read(&path).unwrap();
+    let info = binary_info(&path).unwrap();
+    assert!(DeployedArtifact::load_binary(&path, BinLoadMode::Read).is_ok());
+
+    // 1. Truncation mid-section: cut the file inside the last section.
+    let last = info.sections.last().unwrap().clone();
+    let cut = info.payload_base + last.off + last.bytes / 2;
+    std::fs::write(&path, &file[..cut]).unwrap();
+    match DeployedArtifact::load_binary(&path, BinLoadMode::Read) {
+        Err(ArtifactError::Binary(msg)) => assert!(msg.contains("truncated"), "{msg}"),
+        other => panic!("expected Binary(truncated), got {:?}", other.err()),
+    }
+
+    // 2. Flipped byte inside a weight section: the per-section checksum
+    //    names the section, and the model never reaches the engines.
+    let mut flipped = file.clone();
+    flipped[info.payload_base + info.sections[0].off] ^= 0xff;
+    std::fs::write(&path, &flipped).unwrap();
+    match DeployedArtifact::load_binary(&path, BinLoadMode::Read) {
+        Err(ArtifactError::Checksum { stored, .. }) => {
+            assert!(stored.contains("section 0"), "{stored}");
+        }
+        other => panic!("expected per-section Checksum, got {:?}", other.err()),
+    }
+
+    // 3. Misaligned section offset. The model checksum does not cover
+    //    the section table, so the alignment gate is the one that fires.
+    let off_field = format!("\"off\":{}", info.sections[1].off);
+    let misaligned = rewrite_header(&file, |h| {
+        assert!(h.contains(&off_field), "section 1 off not found in header");
+        h.replacen(&off_field, &format!("\"off\":{}", info.sections[1].off + 1), 1)
+    });
+    std::fs::write(&path, &misaligned).unwrap();
+    match DeployedArtifact::load_binary(&path, BinLoadMode::Read) {
+        Err(ArtifactError::Binary(msg)) => assert!(msg.contains("aligned"), "{msg}"),
+        other => panic!("expected Binary(misaligned), got {:?}", other.err()),
+    }
+
+    // 4. Header/section-table mismatch: a table entry no weight
+    //    references violates exactly-once consumption. The ghost is
+    //    zero-length with the empty-payload FNV-1a64 checksum (the
+    //    offset basis), so only the consumption check can fire.
+    let last_end = last.off + last.bytes;
+    let extra_off = last_end.div_ceil(BIN_ALIGN) * BIN_ALIGN;
+    let ghost = format!(
+        "{{\"bytes\":0,\"checksum\":\"fnv1a64:cbf29ce484222325\",\
+         \"dtype\":\"i8\",\"name\":\"ghost\",\"off\":{extra_off},\"shape\":[0]}}"
+    );
+    let mut mismatched = rewrite_header(&file, |h| {
+        assert!(h.contains("}],\"version\""), "section table terminator not found");
+        h.replacen("}],\"version\"", &format!("}},{ghost}],\"version\""), 1)
+    });
+    // Pad the payload region so the ghost's aligned offset is in bounds
+    // and the structural check is the one that trips.
+    mismatched.extend(std::iter::repeat(0u8).take(extra_off - last_end));
+    std::fs::write(&path, &mismatched).unwrap();
+    match DeployedArtifact::load_binary(&path, BinLoadMode::Read) {
+        Err(ArtifactError::Binary(msg)) => assert!(msg.contains("not referenced"), "{msg}"),
+        other => panic!("expected Binary(unreferenced section), got {:?}", other.err()),
+    }
+
+    // 5. Unsupported container version in the preamble.
+    let mut vbump = file.clone();
+    vbump[8..12].copy_from_slice(&(BIN_VERSION + 1).to_le_bytes());
+    std::fs::write(&path, &vbump).unwrap();
+    match DeployedArtifact::load_binary(&path, BinLoadMode::Read) {
+        Err(ArtifactError::Version { found }) => assert_eq!(found, (BIN_VERSION + 1) as i64),
+        other => panic!("expected Version error, got {:?}", other.err()),
+    }
+
+    // 6. A preamble shorter than 16 bytes.
+    std::fs::write(&path, &file[..10]).unwrap();
+    assert!(matches!(
+        DeployedArtifact::load_binary(&path, BinLoadMode::Read),
+        Err(ArtifactError::Binary(_))
+    ));
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn registry_serves_both_formats_and_hot_swaps_bit_identically() {
+    // The CI round-trip in miniature: one model saved in both formats,
+    // served from one registry, then the JSON-backed entry hot-swapped
+    // onto the binary artifact — logits bit-identical throughout.
+    let nid = deployed_synthnet(19);
+    let jpath = tmp_path("serve", "nemo.json");
+    let bpath = tmp_path("serve", "nemob");
+    nid.save_deployed(&jpath).unwrap();
+    nid.save_deployed_bin(&bpath).unwrap();
+
+    let server = Server::builder()
+        .default_config(ServerConfig {
+            max_batch: 8,
+            batch_timeout: Duration::from_micros(300),
+            n_workers: 2,
+        })
+        .model_from_artifact("json", &jpath)
+        .model_from_artifact("bin", &bpath)
+        .start()
+        .unwrap();
+    let h = server.handle();
+    let mut data = SynthDigits::new(3);
+    let (x, _) = data.batch(2);
+    let qx = quantize_input(&x, EPS_IN);
+    let want = nid.run(&qx);
+    assert_eq!(h.infer("json", qx.clone()).unwrap(), want);
+    assert_eq!(h.infer("bin", qx.clone()).unwrap(), want);
+
+    // Hot-swap the JSON-backed entry onto the binary artifact.
+    let v = h.swap_model_from_artifact("json", &bpath).unwrap();
+    assert!(v >= 2, "swap must bump the model version, got v{v}");
+    assert_eq!(
+        h.infer("json", qx.clone()).unwrap(),
+        want,
+        "logits must be bit-identical after the JSON->binary hot swap"
+    );
+    let _ = server.stop();
+    let _ = std::fs::remove_file(&jpath);
+    let _ = std::fs::remove_file(&bpath);
+}

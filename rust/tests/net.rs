@@ -115,7 +115,7 @@ fn wide_identity_exec() -> Arc<dyn Executor> {
     let mut g = IntGraph::default();
     let spec = QuantSpec { eps: 1.0, lo: 0, hi: 1 << 16 };
     let x = g.push("in", IntOp::Input { shape: vec![2], spec }, &[]);
-    let wq = Tensor::from_vec(&[2, 2], vec![1, 0, 0, 1]);
+    let wq = Tensor::from_vec(&[2, 2], vec![1, 0, 0, 1]).into();
     g.push("fc", IntOp::LinearInt { wq, bias_q: None }, &[x]);
     g.eps_out = 1.0;
     let exec = NativeIntExecutor::new(g, 8).unwrap();

@@ -259,7 +259,8 @@ fn fanout_defeats_fusion_but_not_correctness() {
     let wq = Tensor::from_vec(
         &[2, 3],
         (0..6).map(|_| rng.int(-4, 5) as i32).collect(),
-    );
+    )
+    .into();
     let conv = g.push(
         "conv",
         IntOp::ConvInt { wq, bias_q: Some(vec![7, -7, 0]), cin: 2, kh: 1, kw: 1, stride: 1, pad: 0 },
@@ -282,9 +283,9 @@ fn fanout_defeats_fusion_but_not_correctness() {
     );
     let f1 = g.push("f1", IntOp::Flatten, &[act]);
     let f2 = g.push("f2", IntOp::Flatten, &[pact]);
-    let wl = Tensor::from_vec(&[48, 2], (0..96).map(|i| (i % 7) as i32 - 3).collect());
+    let wl = Tensor::from_vec(&[48, 2], (0..96).map(|i| (i % 7) as i32 - 3).collect()).into();
     let l1 = g.push("fc1", IntOp::LinearInt { wq: wl, bias_q: None }, &[f1]);
-    let wl2 = Tensor::from_vec(&[12, 2], (0..24).map(|i| (i % 5) as i32 - 2).collect());
+    let wl2 = Tensor::from_vec(&[12, 2], (0..24).map(|i| (i % 5) as i32 - 2).collect()).into();
     let l2 = g.push("fc2", IntOp::LinearInt { wq: wl2, bias_q: Some(vec![1, -1]) }, &[f2]);
     let add_rq = Requant { m: 1, d: 0, lo: i64::MIN, hi: i64::MAX };
     g.push("add", IntOp::AddRequant { rqs: vec![add_rq] }, &[l1, l2]);
@@ -306,7 +307,7 @@ fn threshold_epilogues_fuse_and_match() {
     let mut g = IntGraph::default();
     let spec = QuantSpec { eps: 1.0, lo: 0, hi: 15 };
     let x = g.push("in", IntOp::Input { shape: vec![1, 3, 3], spec }, &[]);
-    let wq = Tensor::from_vec(&[9, 2], (0..18).map(|i| (i as i32 % 3) - 1).collect());
+    let wq = Tensor::from_vec(&[9, 2], (0..18).map(|i| (i as i32 % 3) - 1).collect()).into();
     let conv = g.push(
         "conv",
         IntOp::ConvInt { wq, bias_q: None, cin: 1, kh: 3, kw: 3, stride: 1, pad: 1 },
@@ -339,7 +340,7 @@ fn avgpool_flatten_linear_chain_matches() {
     };
     let b = g.push("bn", IntOp::IntBn { bn }, &[p]);
     let f = g.push("fl", IntOp::Flatten, &[b]);
-    let wq = Tensor::from_vec(&[8, 3], (0..24).map(|i| (i % 9) as i32 - 4).collect());
+    let wq = Tensor::from_vec(&[8, 3], (0..24).map(|i| (i % 9) as i32 - 4).collect()).into();
     let l = g.push("fc", IntOp::LinearInt { wq, bias_q: Some(vec![10, -10, 0]) }, &[f]);
     let rq = Requant { m: 9, d: 4, lo: 0, hi: 255 };
     g.push("act", IntOp::RequantAct { rq }, &[l]);
