@@ -63,6 +63,7 @@ fn main() {
                 || a.starts_with("artifact")
                 || a.starts_with("registry")
                 || a.starts_with("net")
+                || a.starts_with("train")
         })
         .collect();
     let run = |tag: &str| {
@@ -121,6 +122,9 @@ fn main() {
     }
     if run("net") {
         net_loopback();
+    }
+    if run("train") {
+        train_native_bench();
     }
     if run("perf") {
         perf_microbench();
@@ -260,7 +264,14 @@ fn e3_e4_representations_and_qat(rt: Option<&Runtime>) {
     let mut rng = Rng::new(seed);
     let mut net = SynthNet::init(&mut rng);
     let mut data = SynthDigits::new(seed);
-    let cfg = TrainConfig { steps: 500, lr: 0.3, lr_decay: true, seed, log_every: 0 };
+    let cfg = TrainConfig {
+        steps: 500,
+        lr: 0.3,
+        lr_decay: true,
+        seed,
+        log_every: 0,
+        ..TrainConfig::default()
+    };
     train_fp(rt, &mut net, &mut data, &cfg).expect("fp train");
     let (cal_x, _) = data.batch(128);
     net.act_betas = calibrate_percentile(&net.to_fp_graph(), &[cal_x], 0.995);
@@ -282,7 +293,14 @@ fn e3_e4_representations_and_qat(rt: Option<&Runtime>) {
         // E4: QAT fine-tune at this bit width (fresh copy of the FP net)
         let mut qat_net = net.clone();
         let mut qat_data = SynthDigits::new(seed + 100);
-        let qcfg = TrainConfig { steps: 200, lr: 0.06, lr_decay: true, seed, log_every: 0 };
+        let qcfg = TrainConfig {
+            steps: 200,
+            lr: 0.06,
+            lr_decay: true,
+            seed,
+            log_every: 0,
+            ..TrainConfig::default()
+        };
         train_fq(rt, &mut qat_net, &mut qat_data, bits, bits, &qcfg).expect("fq");
         let dep1 = deploy_pact(
             qat_net.to_pact_graph(bits),
@@ -1454,6 +1472,84 @@ fn net_loopback() {
     )]);
     std::fs::write("BENCH_net.json", json::write(&doc)).expect("write BENCH_net.json");
     println!("  wrote BENCH_net.json");
+}
+
+// ---------------------------------------------------------------------------
+// train: native backward-plan training (DESIGN.md §Training) — writes
+// BENCH_train.json (steps/sec + peak shared-arena bytes)
+// ---------------------------------------------------------------------------
+
+fn train_native_bench() {
+    use nemo::engine::{BackwardPlan, FloatPlan};
+    use nemo::train::native::{train_fp, train_fq, OptState};
+    use nemo::train::TrainConfig;
+
+    println!("\n=== train: native backward-plan training ===");
+    let mut results = Vec::new();
+    for (tag, fq) in [("fp", false), ("fq_w8a8", true)] {
+        let mut rng = Rng::new(70);
+        let mut net = SynthNet::init(&mut rng);
+        let mut data = SynthDigits::new(70);
+        let mut opt = OptState::default();
+        let steps = 40usize;
+        let cfg = TrainConfig {
+            steps,
+            lr: 0.05,
+            lr_decay: false,
+            seed: 70,
+            log_every: 0,
+            batch: 32,
+            ..TrainConfig::default()
+        };
+        let t0 = std::time::Instant::now();
+        let rep = if fq {
+            net.act_betas = vec![4.0, 4.0, 4.0];
+            train_fq(&mut net, &mut data, 8, 8, &cfg, &mut opt).expect("fq train")
+        } else {
+            train_fp(&mut net, &mut data, &cfg, &mut opt).expect("fp train")
+        };
+        let secs = t0.elapsed().as_secs_f64();
+        let sps = steps as f64 / secs;
+
+        // Peak shared-arena footprint: forward and backward layouts run
+        // over one FloatArena whose slots grow to the per-slot max.
+        let g = if fq { net.to_pact_graph(8) } else { net.to_fp_graph() };
+        let flayout =
+            FloatPlan::compile_unfused(&g).unwrap().layout(cfg.batch).unwrap();
+        let bwd = BackwardPlan::compile(&g).unwrap();
+        let blayout = bwd.layout(&g, cfg.batch).unwrap();
+        let n_slots = flayout.slot_lens.len().max(blayout.slot_lens.len());
+        let peak_bytes: usize = (0..n_slots)
+            .map(|i| {
+                let f = flayout.slot_lens.get(i).copied().unwrap_or(0);
+                let b = blayout.slot_lens.get(i).copied().unwrap_or(0);
+                f.max(b) * 4
+            })
+            .sum();
+        println!(
+            "  {tag}: {steps} steps x b{} in {}  ({sps:.1} steps/s, {:.0} img/s)  [fwd arena {} KiB, bwd {} KiB, shared peak {} KiB]",
+            cfg.batch,
+            fmt_time(secs),
+            sps * cfg.batch as f64,
+            flayout.arena_bytes() / 1024,
+            blayout.arena_bytes() / 1024,
+            peak_bytes / 1024,
+        );
+        results.push(json::obj(vec![
+            ("workload", Value::Str(format!("synthnet_train_{tag}"))),
+            ("batch", Value::Int(cfg.batch as i64)),
+            ("steps", Value::Int(steps as i64)),
+            ("steps_per_s", Value::Num(sps)),
+            ("imgs_per_s", Value::Num(sps * cfg.batch as f64)),
+            ("final_loss", Value::Num(rep.final_loss())),
+            ("fwd_arena_bytes", Value::Int(flayout.arena_bytes() as i64)),
+            ("bwd_arena_bytes", Value::Int(blayout.arena_bytes() as i64)),
+            ("peak_arena_bytes", Value::Int(peak_bytes as i64)),
+        ]));
+    }
+    let doc = json::obj(vec![("train_bench", Value::Arr(results))]);
+    std::fs::write("BENCH_train.json", json::write(&doc)).expect("write BENCH_train.json");
+    println!("  wrote BENCH_train.json");
 }
 
 // ---------------------------------------------------------------------------

@@ -42,51 +42,15 @@ use crate::tensor::{Tensor, TensorF, TensorI};
 pub use metrics::Metrics;
 pub use registry::{ModelEntry, ModelInfo, ModelRegistry, Provenance, RegistryError};
 
-/// A servable model: a name bound to an [`Executor`] backend.
-#[deprecated(
-    since = "0.3.0",
-    note = "use ServerBuilder::model(name, exec) / ServerHandle::load_model; \
-            the registry API replaces the frozen ModelVariant list"
-)]
-pub struct ModelVariant {
-    pub name: String,
-    pub exec: Arc<dyn Executor>,
-}
-
-#[allow(deprecated)]
-impl ModelVariant {
-    /// Serve any executor speaking the integer request protocol: inputs
-    /// are integer image batches and logits are integer-valued (the
-    /// native integer engine, the PJRT ID executables, or any future ID
-    /// backend). An f32 logits tensor is tolerated only when its values
-    /// are already integers (some XLA lowerings emit integer math as
-    /// f32) — the worker truncates it; genuinely fractional-logit float
-    /// backends do not fit this protocol.
-    pub fn new(name: &str, exec: Arc<dyn Executor>) -> Self {
-        ModelVariant { name: name.to_string(), exec }
-    }
-
-    /// Load every `kind` artifact (e.g. "id_fwd") from the PJRT runtime.
-    #[cfg(feature = "pjrt")]
-    pub fn load(
-        rt: &crate::runtime::Runtime,
-        name: &str,
-        kind: &str,
-        base_args: Vec<Arg>,
-    ) -> Result<Self> {
-        let exec = crate::exec::PjrtExecutor::load(rt, kind, base_args)?;
-        Ok(Self::new(name, Arc::new(exec)))
-    }
-
-    /// Per-sample input shape expected by the backend.
-    pub fn input_shape(&self) -> &[usize] {
-        self.exec.input_shape()
-    }
-
-    pub fn max_batch(&self) -> usize {
-        self.exec.max_batch()
-    }
-}
+// A servable model is just a name bound to an [`Executor`] backend:
+// `ServerBuilder::model(name, exec)` / `ServerHandle::load_model`. Any
+// executor speaking the integer request protocol fits — inputs are
+// integer image batches and logits are integer-valued (the native
+// integer engine, the PJRT ID executables, or any future ID backend).
+// An f32 logits tensor is tolerated only when its values are already
+// integers (some XLA lowerings emit integer math as f32) — the worker
+// truncates it; genuinely fractional-logit float backends do not fit
+// this protocol.
 
 struct Request {
     model: String,
@@ -781,15 +745,13 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn model_variant_alias_still_constructs() {
-        // Deprecated for one release: ModelVariant remains usable as a
-        // (name, exec) pair; builders take the pieces directly.
-        let mv = ModelVariant::new("m", Arc::new(IdentityExec));
-        assert_eq!(mv.name, "m");
-        assert_eq!(mv.input_shape(), &[2]);
-        assert_eq!(mv.max_batch(), 4);
-        let server = Server::builder().model(&mv.name, mv.exec.clone()).start().unwrap();
+    fn builder_takes_name_and_executor_directly() {
+        // The (name, exec) pair goes straight into the builder — this is
+        // the migration target of the removed ModelVariant wrapper.
+        let exec: Arc<dyn Executor> = Arc::new(IdentityExec);
+        assert_eq!(exec.input_shape(), &[2]);
+        assert_eq!(exec.max_batch(), 4);
+        let server = Server::builder().model("m", exec).start().unwrap();
         let h = server.handle();
         let out = h.infer("m", Tensor::from_vec(&[1, 2], vec![4, 5])).unwrap();
         assert_eq!(out.data(), &[4, 5]);

@@ -1,0 +1,669 @@
+//! Backward-plan compiler (DESIGN.md §Training): reverse-mode gradients
+//! built from the same machinery the forward plans use — `graph::shape`
+//! for shape inference, [`assign_slots`] for liveness-planned arena
+//! reuse, and the `tensor::ops` `_into` backward kernels.
+//!
+//! Formulation: one reverse step per graph node, in reverse id order
+//! (graph construction is topological, so descending id is a valid
+//! reverse-topological schedule). The step for node `n` *pulls* its
+//! output gradient: it zeroes d_n's arena slot and accumulates one
+//! contribution per consuming edge — every backward kernel is
+//! `_acc_into` — then turns d_n plus the checkpointed forward
+//! activations (the tape) into n's parameter gradients. Consumer
+//! gradients were produced by earlier reverse steps, so each step has
+//! exactly one output buffer and the forward plan's liveness allocator
+//! applies unchanged.
+//!
+//! The plan compiles against graph *structure* only and reads weights
+//! live from the graph at execute time: one compiled [`BackwardPlan`]
+//! serves every SGD step, while the (weight-baking) forward `FloatPlan`
+//! is recompiled per step.
+//!
+//! PACT (paper Eq. 10, y = ε·clip(⌊t/ε⌋, 0, 2^bits−1) with ε = β/(2^bits−1))
+//! differentiates with the straight-through estimator: ∂y/∂x = 1 on the
+//! pass-through region 0 ≤ x < β and 0 outside; the learned clip gets
+//! ∂y/∂β = 1 exactly where the STE passes nothing, x ≥ β.
+
+use super::plan::{
+    assign_slots, channel_stride, FloatArena, PlanError, StepId, StepSpec,
+};
+use crate::graph::grad::Gradients;
+use crate::graph::{shape, Graph, NodeId, Op};
+use crate::quant::Precision;
+use crate::tensor::{ops, TensorF};
+
+/// One reverse step: the node whose output gradient it materializes and
+/// the consumers whose contributions it accumulates.
+struct BwdStep {
+    node: NodeId,
+    /// One entry per consuming edge (a node reading `node` through two of
+    /// its inputs contributes twice, as the chain rule demands).
+    consumers: Vec<NodeId>,
+    is_input: bool,
+}
+
+/// Per-batch-size backward layout (the gradient arena's counterpart of
+/// `PlanLayout`).
+pub struct BwdLayout {
+    pub batch: usize,
+    /// Full activation/gradient shape of every node (batch prepended).
+    shapes: Vec<Vec<usize>>,
+    /// Arena slot holding node n's output gradient d_n (by NodeId).
+    grad_slot: Vec<usize>,
+    /// Scratch slots per reverse step (conv gather/GEMM buffers).
+    scratch: Vec<Vec<usize>>,
+    /// Required length of each arena slot.
+    pub slot_lens: Vec<usize>,
+}
+
+impl BwdLayout {
+    /// Total gradient-arena elements (peak-memory introspection; the
+    /// train bench reports this).
+    pub fn arena_len(&self) -> usize {
+        self.slot_lens.iter().sum()
+    }
+
+    pub fn arena_bytes(&self) -> usize {
+        self.arena_len() * std::mem::size_of::<f32>()
+    }
+
+    pub fn arena_slots(&self) -> usize {
+        self.slot_lens.len()
+    }
+}
+
+/// A compiled backward pass over a float [`Graph`].
+pub struct BackwardPlan {
+    steps: Vec<BwdStep>,
+    /// Graph output node; its reverse step is seeded with dL/d(output).
+    output: NodeId,
+    /// Nodes whose forward activation the backward kernels read.
+    needed: Vec<bool>,
+    /// Per-node sample shapes (no batch dim), from shape inference.
+    sample_shapes: Vec<Vec<usize>>,
+}
+
+impl BackwardPlan {
+    /// Compile the reverse schedule for `g`'s structure. Pair with
+    /// [`FloatPlan::compile_unfused`](super::plan::FloatPlan::compile_unfused)
+    /// for the forward tape: unfused plans keep step id == node id, so
+    /// the tape and this plan index activations identically.
+    pub fn compile(g: &Graph) -> Result<BackwardPlan, PlanError> {
+        let shapes1 = shape::infer_float(g, 1)?;
+        let n = g.nodes.len();
+        let mut consumers: Vec<Vec<NodeId>> = vec![Vec::new(); n];
+        for nd in &g.nodes {
+            for &i in &nd.inputs {
+                consumers[i].push(nd.id);
+            }
+        }
+        // The tape mask: activations some backward rule reads. Conv and
+        // Linear read their input for the weight gradient, BatchNorm for
+        // dγ, ReLU/PACT for the pass-through mask, MaxPool for the
+        // argmax re-scan.
+        let mut needed = vec![false; n];
+        for nd in &g.nodes {
+            let reads_input = matches!(
+                nd.op,
+                Op::Conv2d { .. }
+                    | Op::Linear { .. }
+                    | Op::BatchNorm { .. }
+                    | Op::ReLU
+                    | Op::PactAct { .. }
+                    | Op::MaxPool { .. }
+            );
+            if reads_input {
+                for &i in &nd.inputs {
+                    needed[i] = true;
+                }
+            }
+        }
+        let steps = (0..n)
+            .rev()
+            .map(|node| BwdStep {
+                node,
+                consumers: consumers[node].clone(),
+                is_input: matches!(g.nodes[node].op, Op::Input { .. }),
+            })
+            .collect();
+        Ok(BackwardPlan {
+            steps,
+            output: g.output,
+            needed,
+            sample_shapes: shapes1.iter().map(|s| s[1..].to_vec()).collect(),
+        })
+    }
+
+    /// Which node activations the backward pass reads — the `keep` mask
+    /// for `FloatPlan::execute_checkpointed` over the unfused forward
+    /// plan. Activations outside this mask are never cloned out of the
+    /// forward arena.
+    pub fn tape_mask(&self) -> &[bool] {
+        &self.needed
+    }
+
+    /// Build the per-batch layout: reverse-step [`StepSpec`]s fed through
+    /// the same liveness allocator as the forward plans. `g` must be the
+    /// graph this plan was compiled from (weight shapes size the conv
+    /// scratch buffers).
+    pub fn layout(&self, g: &Graph, batch: usize) -> Result<BwdLayout, PlanError> {
+        if batch == 0 {
+            return Err(PlanError::Invalid("batch size must be >= 1".into()));
+        }
+        let n = self.steps.len();
+        let shapes: Vec<Vec<usize>> = self
+            .sample_shapes
+            .iter()
+            .map(|ss| {
+                let mut s = Vec::with_capacity(ss.len() + 1);
+                s.push(batch);
+                s.extend_from_slice(ss);
+                s
+            })
+            .collect();
+        let numel = |node: NodeId| -> usize { shapes[node].iter().product() };
+        let conv_dims = |node: NodeId| -> (usize, usize) {
+            match &g.nodes[node].op {
+                // (rows of the im2col GEMM, C_in*KH*KW patch dim)
+                Op::Conv2d { w, .. } => (
+                    numel(node) / w.shape()[0],
+                    w.shape()[1] * w.shape()[2] * w.shape()[3],
+                ),
+                _ => unreachable!("conv_dims on non-conv node"),
+            }
+        };
+        let specs: Vec<StepSpec> = self
+            .steps
+            .iter()
+            .map(|st| {
+                let mut scratch: Vec<(usize, Precision)> = Vec::new();
+                let mut inputs: Vec<StepId> = Vec::new();
+                if !st.is_input {
+                    for &c in &st.consumers {
+                        // This step reads each consumer's gradient,
+                        // produced by the (earlier) reverse step n-1-c.
+                        inputs.push(n - 1 - c);
+                        if let Op::Conv2d { .. } = &g.nodes[c].op {
+                            // d_c gathered to GEMM rows, then the
+                            // patch-gradient matrix gCols = dRows·wmatᵀ.
+                            let (rows, kdim) = conv_dims(c);
+                            scratch.push((numel(c), Precision::I32));
+                            scratch.push((rows * kdim, Precision::I32));
+                        }
+                    }
+                    if let Op::Conv2d { .. } = &g.nodes[st.node].op {
+                        // Weight gradient: im2col of the input activation
+                        // plus d_n gathered to GEMM rows.
+                        let (rows, kdim) = conv_dims(st.node);
+                        scratch.push((rows * kdim, Precision::I32));
+                        scratch.push((numel(st.node), Precision::I32));
+                    }
+                }
+                StepSpec {
+                    inputs,
+                    out_len: numel(st.node),
+                    // Gradients live in the one-width float arena;
+                    // precision tags only matter for packed layouts.
+                    out_prec: Precision::I32,
+                    scratch,
+                    is_input: st.is_input,
+                }
+            })
+            .collect();
+        // Pin the seed slot (reverse step of the graph output) exactly
+        // like the forward plans pin their output slot.
+        let (out_slot, scratch, slot_lens, _prec) =
+            assign_slots(&specs, n - 1 - self.output);
+        let mut grad_slot = vec![0usize; n];
+        for (r, st) in self.steps.iter().enumerate() {
+            grad_slot[st.node] = out_slot[r];
+        }
+        Ok(BwdLayout { batch, shapes, grad_slot, scratch, slot_lens })
+    }
+
+    /// Run the backward pass. `tape[node]` must hold every activation in
+    /// [`Self::tape_mask`] (from `execute_checkpointed` over the unfused
+    /// forward plan; the Input node's entry is the input batch itself)
+    /// and `seed` is dL/d(network output), shaped like the forward
+    /// output. Reads weights/BN/PACT parameters live from `g`.
+    pub fn execute(
+        &self,
+        g: &Graph,
+        layout: &BwdLayout,
+        arena: &mut FloatArena,
+        tape: &[Option<TensorF>],
+        seed: &TensorF,
+    ) -> Gradients {
+        let n = self.steps.len();
+        let mut grads = Gradients::zeros(n);
+        arena.prepare_lens(&layout.slot_lens);
+        let out_numel: usize = layout.shapes[self.output].iter().product();
+        assert_eq!(seed.len(), out_numel, "seed shape != output shape");
+        let act = |node: NodeId| {
+            tape[node]
+                .as_ref()
+                .expect("tape is missing an activation the backward pass reads")
+        };
+        for (r, st) in self.steps.iter().enumerate() {
+            if st.is_input {
+                continue;
+            }
+            let node = st.node;
+            let numel: usize = layout.shapes[node].iter().product();
+            let d_slot = layout.grad_slot[node];
+            let mut d = std::mem::take(&mut arena.bufs[d_slot]);
+            if node == self.output {
+                d[..numel].copy_from_slice(seed.data());
+            } else {
+                d[..numel].fill(0.0);
+            }
+
+            // Accumulate each consumer's contribution to d_n.
+            let mut si = 0usize; // scratch cursor; order matches layout()
+            for &c in &st.consumers {
+                match &g.nodes[c].op {
+                    Op::Conv2d { w, stride, pad, .. } => {
+                        let (kh, kw) = (w.shape()[2], w.shape()[3]);
+                        let (bi, ci, hi, wi) = {
+                            let s = &layout.shapes[node];
+                            (s[0], s[1], s[2], s[3])
+                        };
+                        let (co, oh, ow) = {
+                            let s = &layout.shapes[c];
+                            (s[1], s[2], s[3])
+                        };
+                        let m = bi * oh * ow;
+                        let kdim = ci * kh * kw;
+                        let rows_slot = layout.scratch[r][si];
+                        let gcols_slot = layout.scratch[r][si + 1];
+                        si += 2;
+                        let wmat = ops::oihw_to_wmat(w);
+                        let mut rows = std::mem::take(&mut arena.bufs[rows_slot]);
+                        let mut gcols = std::mem::take(&mut arena.bufs[gcols_slot]);
+                        {
+                            let dc = &arena.bufs[layout.grad_slot[c]];
+                            ops::nchw_to_rows_into(dc, bi, co, oh, ow, &mut rows);
+                        }
+                        gcols[..m * kdim].fill(0.0);
+                        ops::matmul_f32_abt_acc_into(
+                            &rows[..m * co],
+                            wmat.data(),
+                            m,
+                            co,
+                            kdim,
+                            &mut gcols,
+                        );
+                        ops::col2im_acc_into(
+                            &gcols,
+                            bi,
+                            ci,
+                            hi,
+                            wi,
+                            kh,
+                            kw,
+                            *stride,
+                            *pad,
+                            &mut d[..numel],
+                        );
+                        arena.bufs[rows_slot] = rows;
+                        arena.bufs[gcols_slot] = gcols;
+                    }
+                    Op::Linear { w, .. } => {
+                        let (bsz, fo) = (layout.shapes[c][0], layout.shapes[c][1]);
+                        let fi = layout.shapes[node][1];
+                        let dc = &arena.bufs[layout.grad_slot[c]];
+                        // dX += dY·wᵀ with w stored [in, out].
+                        ops::matmul_f32_abt_acc_into(
+                            &dc[..bsz * fo],
+                            w.data(),
+                            bsz,
+                            fo,
+                            fi,
+                            &mut d[..numel],
+                        );
+                    }
+                    Op::BatchNorm { bn } => {
+                        let (kappa, _) = bn.affine();
+                        let (ch, hw) = channel_stride(&layout.shapes[c]);
+                        let dc = &arena.bufs[layout.grad_slot[c]];
+                        for (i, (dv, &cv)) in
+                            d[..numel].iter_mut().zip(&dc[..numel]).enumerate()
+                        {
+                            *dv += kappa[(i / hw) % ch] as f32 * cv;
+                        }
+                    }
+                    Op::QuantBn { kappa_hat, .. } => {
+                        let (ch, hw) = channel_stride(&layout.shapes[c]);
+                        let dc = &arena.bufs[layout.grad_slot[c]];
+                        for (i, (dv, &cv)) in
+                            d[..numel].iter_mut().zip(&dc[..numel]).enumerate()
+                        {
+                            *dv += kappa_hat[(i / hw) % ch] as f32 * cv;
+                        }
+                    }
+                    Op::ReLU => {
+                        let x = act(node);
+                        let dc = &arena.bufs[layout.grad_slot[c]];
+                        for ((dv, &cv), &xv) in
+                            d[..numel].iter_mut().zip(&dc[..numel]).zip(x.data())
+                        {
+                            if xv > 0.0 {
+                                *dv += cv;
+                            }
+                        }
+                    }
+                    Op::PactAct { beta, .. } => {
+                        let x = act(node);
+                        let dc = &arena.bufs[layout.grad_slot[c]];
+                        let b = *beta as f32;
+                        for ((dv, &cv), &xv) in
+                            d[..numel].iter_mut().zip(&dc[..numel]).zip(x.data())
+                        {
+                            if (0.0..b).contains(&xv) {
+                                *dv += cv;
+                            }
+                        }
+                    }
+                    Op::MaxPool { k } => {
+                        let s = &layout.shapes[node];
+                        let x = act(node);
+                        let dc = &arena.bufs[layout.grad_slot[c]];
+                        ops::maxpool_backward_acc_into(
+                            x.data(),
+                            dc,
+                            s[0],
+                            s[1],
+                            s[2],
+                            s[3],
+                            *k,
+                            &mut d[..numel],
+                        );
+                    }
+                    Op::AvgPool { k } => {
+                        let s = &layout.shapes[node];
+                        let dc = &arena.bufs[layout.grad_slot[c]];
+                        ops::avgpool_backward_acc_into(
+                            dc,
+                            s[0],
+                            s[1],
+                            s[2],
+                            s[3],
+                            *k,
+                            &mut d[..numel],
+                        );
+                    }
+                    Op::GlobalAvgPool => {
+                        let s = &layout.shapes[node];
+                        let dc = &arena.bufs[layout.grad_slot[c]];
+                        ops::global_mean_backward_acc_into(
+                            dc,
+                            s[0],
+                            s[1],
+                            s[2],
+                            s[3],
+                            &mut d[..numel],
+                        );
+                    }
+                    Op::Flatten | Op::Add => {
+                        let dc = &arena.bufs[layout.grad_slot[c]];
+                        for (dv, &cv) in d[..numel].iter_mut().zip(&dc[..numel]) {
+                            *dv += cv;
+                        }
+                    }
+                    Op::Input { .. } => unreachable!("Input cannot consume"),
+                }
+            }
+
+            // Parameter gradients of this node from d_n and the tape.
+            match &g.nodes[node].op {
+                Op::Conv2d { w, bias, stride, pad } => {
+                    let inp = g.nodes[node].inputs[0];
+                    let x = act(inp);
+                    let (co, ci, kh, kw) =
+                        (w.shape()[0], w.shape()[1], w.shape()[2], w.shape()[3]);
+                    let (bi, hi, wi) = {
+                        let s = &layout.shapes[inp];
+                        (s[0], s[2], s[3])
+                    };
+                    let (oh, ow) = (layout.shapes[node][2], layout.shapes[node][3]);
+                    let m = bi * oh * ow;
+                    let kdim = ci * kh * kw;
+                    // Weight-grad scratch is always the last two entries.
+                    let sc = &layout.scratch[r];
+                    let cols_slot = sc[sc.len() - 2];
+                    let rows_slot = sc[sc.len() - 1];
+                    let mut cols = std::mem::take(&mut arena.bufs[cols_slot]);
+                    let mut rows = std::mem::take(&mut arena.bufs[rows_slot]);
+                    ops::im2col_into(
+                        x.data(),
+                        bi,
+                        ci,
+                        hi,
+                        wi,
+                        kh,
+                        kw,
+                        *stride,
+                        *pad,
+                        &mut cols,
+                    );
+                    ops::nchw_to_rows_into(&d[..numel], bi, co, oh, ow, &mut rows);
+                    // dWmat = colsᵀ·dRows, then back to OIHW order.
+                    let mut gw = vec![0f32; kdim * co];
+                    ops::matmul_f32_atb_into(
+                        &cols[..m * kdim],
+                        &rows[..m * co],
+                        m,
+                        kdim,
+                        co,
+                        &mut gw,
+                    );
+                    grads.nodes[node].w = ops::wmat_to_oihw(&gw, co, ci, kh, kw);
+                    if bias.is_some() {
+                        let mut gb = vec![0f32; co];
+                        for row in rows[..m * co].chunks_exact(co) {
+                            for (gv, &v) in gb.iter_mut().zip(row) {
+                                *gv += v;
+                            }
+                        }
+                        grads.nodes[node].bias = gb;
+                    }
+                    arena.bufs[cols_slot] = cols;
+                    arena.bufs[rows_slot] = rows;
+                }
+                Op::Linear { w, bias } => {
+                    let inp = g.nodes[node].inputs[0];
+                    let x = act(inp);
+                    let (bsz, fi) = (layout.shapes[inp][0], layout.shapes[inp][1]);
+                    let fo = w.shape()[1];
+                    // dW = xᵀ·dY, stored [in, out] like the weights.
+                    let mut gw = vec![0f32; fi * fo];
+                    ops::matmul_f32_atb_into(
+                        x.data(),
+                        &d[..bsz * fo],
+                        bsz,
+                        fi,
+                        fo,
+                        &mut gw,
+                    );
+                    grads.nodes[node].w = gw;
+                    if bias.is_some() {
+                        let mut gb = vec![0f32; fo];
+                        for row in d[..bsz * fo].chunks_exact(fo) {
+                            for (gv, &v) in gb.iter_mut().zip(row) {
+                                *gv += v;
+                            }
+                        }
+                        grads.nodes[node].bias = gb;
+                    }
+                }
+                Op::BatchNorm { bn } => {
+                    let inp = g.nodes[node].inputs[0];
+                    let x = act(inp);
+                    let (ch, hw) = channel_stride(&layout.shapes[node]);
+                    // Frozen-statistics training: y = γ·(x−μ)/σ + β with
+                    // μ/σ constant, so dγ_c = Σ d·(x−μ_c)/σ_c, dβ_c = Σ d.
+                    let mut ggamma = vec![0f32; ch];
+                    let mut gbeta = vec![0f32; ch];
+                    for (i, (&dv, &xv)) in
+                        d[..numel].iter().zip(x.data()).enumerate()
+                    {
+                        let c = (i / hw) % ch;
+                        gbeta[c] += dv;
+                        ggamma[c] += dv * ((xv as f64 - bn.mu[c]) / bn.sigma[c]) as f32;
+                    }
+                    grads.nodes[node].gamma = ggamma;
+                    grads.nodes[node].beta = gbeta;
+                }
+                Op::PactAct { beta, .. } => {
+                    let inp = g.nodes[node].inputs[0];
+                    let x = act(inp);
+                    let b = *beta as f32;
+                    // ∂y/∂β = 1 exactly on the saturated region x ≥ β —
+                    // the complement of the STE pass-through band.
+                    let mut gb = 0f64;
+                    for (&dv, &xv) in d[..numel].iter().zip(x.data()) {
+                        if xv >= b {
+                            gb += dv as f64;
+                        }
+                    }
+                    grads.nodes[node].pact_beta = gb;
+                }
+                _ => {}
+            }
+            arena.bufs[d_slot] = d;
+        }
+        grads
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::plan::FloatPlan;
+    use crate::quant::bn::BnParams;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    fn run_grads(g: &Graph, x: &TensorF, seed: &TensorF) -> Gradients {
+        let fwd = FloatPlan::compile_unfused(g).unwrap();
+        let bwd = BackwardPlan::compile(g).unwrap();
+        let fl = fwd.layout(x.shape()[0]).unwrap();
+        let bl = bwd.layout(g, x.shape()[0]).unwrap();
+        let mut arena = FloatArena::new();
+        let (_, tape) = fwd.execute_checkpointed(&fl, &mut arena, x, bwd.tape_mask());
+        bwd.execute(g, &bl, &mut arena, &tape, seed)
+    }
+
+    #[test]
+    fn linear_grads_match_analytic() {
+        let mut g = Graph::new(1.0);
+        let xin = g.push("in", Op::Input { shape: vec![4] }, &[]);
+        let w = Tensor::from_vec(
+            &[4, 2],
+            vec![0.5, -0.25, 0.125, 1.0, -0.75, 0.3, 0.2, -0.1],
+        );
+        g.push("fc", Op::Linear { w, bias: Some(vec![0.1, -0.2]) }, &[xin]);
+
+        let mut rng = Rng::new(7);
+        let x = Tensor::from_vec(
+            &[3, 4],
+            (0..12).map(|_| rng.normal(0.0, 1.0) as f32).collect(),
+        );
+        let seed = Tensor::from_vec(
+            &[3, 2],
+            (0..6).map(|_| rng.normal(0.0, 1.0) as f32).collect(),
+        );
+        let grads = run_grads(&g, &x, &seed);
+
+        // dW[i,j] = Σ_b x[b,i]·seed[b,j]; db[j] = Σ_b seed[b,j].
+        for i in 0..4 {
+            for j in 0..2 {
+                let mut want = 0f32;
+                for b in 0..3 {
+                    want += x.data()[b * 4 + i] * seed.data()[b * 2 + j];
+                }
+                let got = grads.nodes[1].w[i * 2 + j];
+                assert!((got - want).abs() < 1e-5, "dW[{i},{j}]: {got} vs {want}");
+            }
+        }
+        for j in 0..2 {
+            let want: f32 = (0..3).map(|b| seed.data()[b * 2 + j]).sum();
+            let got = grads.nodes[1].bias[j];
+            assert!((got - want).abs() < 1e-5, "db[{j}]: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn bn_param_grads_match_analytic() {
+        let mut g = Graph::new(1.0);
+        let xin = g.push("in", Op::Input { shape: vec![2, 2, 2] }, &[]);
+        let bn = BnParams {
+            gamma: vec![1.5, 0.5],
+            sigma: vec![2.0, 0.8],
+            beta: vec![0.3, -0.3],
+            mu: vec![0.1, -0.2],
+        };
+        g.push("bn", Op::BatchNorm { bn: bn.clone() }, &[xin]);
+
+        let mut rng = Rng::new(11);
+        let x = Tensor::from_vec(
+            &[1, 2, 2, 2],
+            (0..8).map(|_| rng.normal(0.0, 1.0) as f32).collect(),
+        );
+        let seed = Tensor::from_vec(
+            &[1, 2, 2, 2],
+            (0..8).map(|_| rng.normal(0.0, 1.0) as f32).collect(),
+        );
+        let grads = run_grads(&g, &x, &seed);
+        for c in 0..2 {
+            let (mut wg, mut wb) = (0f64, 0f64);
+            for i in 0..4 {
+                let d = seed.data()[c * 4 + i] as f64;
+                let xv = x.data()[c * 4 + i] as f64;
+                wb += d;
+                wg += d * (xv - bn.mu[c]) / bn.sigma[c];
+            }
+            assert!((grads.nodes[1].gamma[c] as f64 - wg).abs() < 1e-5);
+            assert!((grads.nodes[1].beta[c] as f64 - wb).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn pact_clip_grad_sums_saturated_region() {
+        let mut g = Graph::new(1.0);
+        let xin = g.push("in", Op::Input { shape: vec![4] }, &[]);
+        g.push("act", Op::PactAct { beta: 1.0, bits: 4 }, &[xin]);
+        // Two saturated (≥ β), one pass-through, one negative.
+        let x = Tensor::from_vec(&[1, 4], vec![1.5, 0.5, -0.5, 2.5]);
+        let seed = Tensor::from_vec(&[1, 4], vec![1.0, 10.0, 100.0, 7.0]);
+        let grads = run_grads(&g, &x, &seed);
+        assert!((grads.nodes[1].pact_beta - 8.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn tape_mask_marks_exactly_the_read_activations() {
+        // in -> conv -> bn -> relu -> gap -> fc: conv/bn/relu inputs and
+        // the fc input are on the tape; the relu output (gap input) and
+        // network output are not.
+        let mut g = Graph::new(1.0 / 255.0);
+        let x = g.push("in", Op::Input { shape: vec![1, 4, 4] }, &[]);
+        let w = Tensor::from_vec(
+            &[2, 1, 3, 3],
+            (0..18).map(|i| (i as f32 - 9.0) * 0.05).collect(),
+        );
+        let c = g.push("conv", Op::Conv2d { w, bias: None, stride: 1, pad: 1 }, &[x]);
+        let b = g.push("bn", Op::BatchNorm { bn: BnParams::identity(2) }, &[c]);
+        let a = g.push("act", Op::ReLU, &[b]);
+        let p = g.push("gap", Op::GlobalAvgPool, &[a]);
+        let w2 = Tensor::from_vec(&[2, 3], (0..6).map(|i| i as f32 * 0.1).collect());
+        let f = g.push("fc", Op::Linear { w: w2, bias: None }, &[p]);
+        let plan = BackwardPlan::compile(&g).unwrap();
+        let mask = plan.tape_mask();
+        assert!(mask[x]); // conv reads it
+        assert!(mask[c]); // bn reads it
+        assert!(mask[b]); // relu reads it
+        assert!(!mask[a]); // gap needs no activation
+        assert!(mask[p]); // fc reads it
+        assert!(!mask[f]); // nothing consumes the output
+    }
+}

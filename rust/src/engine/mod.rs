@@ -16,11 +16,17 @@
 //! [`crate::exec::Executor`] implementations, which compile one plan (and
 //! one layout per batch variant) up front and pool arenas across
 //! requests.
+//!
+//! [`backward`] extends the plan layer with reverse-mode gradients: a
+//! [`BackwardPlan`] compiled from the same graph drives native training
+//! (DESIGN.md §Training) without any external autodiff dependency.
 
+pub mod backward;
 pub mod float;
 pub mod integer;
 pub mod plan;
 
+pub use backward::{BackwardPlan, BwdLayout};
 pub use float::FloatEngine;
 pub use integer::IntegerEngine;
-pub use plan::{FloatPlan, IntPlan, PackedArena, PlanError, PlanLayout};
+pub use plan::{FloatArena, FloatPlan, IntPlan, PackedArena, PlanError, PlanLayout};

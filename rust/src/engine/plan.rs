@@ -38,7 +38,7 @@ use crate::tensor::{get_packed, ops, set_packed, QTensor, Tensor, TensorF, Tenso
 pub type StepId = usize;
 
 /// Sentinel slot meaning "this step's output is the request input".
-const INPUT_SLOT: usize = usize::MAX;
+pub(crate) const INPUT_SLOT: usize = usize::MAX;
 
 #[derive(Debug, thiserror::Error)]
 pub enum PlanError {
@@ -55,7 +55,7 @@ pub enum PlanError {
 /// A pool of reusable buffers addressed by slot id. Arenas only ever
 /// grow; an arena prepared for batch 16 serves batch 1 without resizing.
 pub struct Arena<T> {
-    bufs: Vec<Vec<T>>,
+    pub(crate) bufs: Vec<Vec<T>>,
 }
 
 pub type IntArena = Arena<i32>;
@@ -74,10 +74,16 @@ impl<T: Copy + Default> Arena<T> {
 
     /// Grow buffers to satisfy `layout`'s slot lengths.
     fn prepare(&mut self, layout: &PlanLayout) {
-        if self.bufs.len() < layout.slot_lens.len() {
-            self.bufs.resize_with(layout.slot_lens.len(), Vec::new);
+        self.prepare_lens(&layout.slot_lens);
+    }
+
+    /// Grow buffers to satisfy explicit slot lengths (the backward plan
+    /// carries its own layout type).
+    pub(crate) fn prepare_lens(&mut self, slot_lens: &[usize]) {
+        if self.bufs.len() < slot_lens.len() {
+            self.bufs.resize_with(slot_lens.len(), Vec::new);
         }
-        for (i, &len) in layout.slot_lens.iter().enumerate() {
+        for (i, &len) in slot_lens.iter().enumerate() {
             if self.bufs[i].len() < len {
                 self.bufs[i].resize(len, T::default());
             }
@@ -302,12 +308,12 @@ impl PlanLayout {
 }
 
 /// What the slot allocator needs to know about one step.
-struct StepSpec {
-    inputs: Vec<StepId>,
-    out_len: usize,
-    out_prec: Precision,
-    scratch: Vec<(usize, Precision)>,
-    is_input: bool,
+pub(crate) struct StepSpec {
+    pub(crate) inputs: Vec<StepId>,
+    pub(crate) out_len: usize,
+    pub(crate) out_prec: Precision,
+    pub(crate) scratch: Vec<(usize, Precision)>,
+    pub(crate) is_input: bool,
 }
 
 /// Liveness-driven slot assignment: walk the schedule once, allocating
@@ -316,7 +322,7 @@ struct StepSpec {
 /// precision (free-list reuse is per precision class), so packed arenas
 /// can fix each slot's element type up front. Returns (out_slot,
 /// scratch_slots, slot_lens, slot_prec).
-fn assign_slots(
+pub(crate) fn assign_slots(
     specs: &[StepSpec],
     output: StepId,
 ) -> (Vec<usize>, Vec<Vec<usize>>, Vec<usize>, Vec<Precision>) {
@@ -425,7 +431,7 @@ fn slot_data<'a, T: Copy + Default>(
 }
 
 /// channel-of-flat-index helper: NCHW -> (i / (H*W)) % C, [B, C] -> i % C.
-fn channel_stride(shape: &[usize]) -> (usize, usize) {
+pub(crate) fn channel_stride(shape: &[usize]) -> (usize, usize) {
     match shape.len() {
         4 => (shape[1], shape[2] * shape[3]),
         2 => (shape[1], 1),
@@ -1758,6 +1764,22 @@ pub struct FloatPlan {
 
 impl FloatPlan {
     pub fn compile(g: &Graph) -> Result<FloatPlan, PlanError> {
+        Self::compile_inner(g, true)
+    }
+
+    /// Compile WITHOUT epilogue fusion: every graph node becomes its own
+    /// step (step id == node id), so every node's activation is
+    /// materialized in the arena. This is the training-forward mode — the
+    /// backward plan checkpoints the subset of activations its gradient
+    /// kernels read (see [`super::backward::BackwardPlan`]); fused plans
+    /// stay the inference hot path.
+    pub fn compile_unfused(g: &Graph) -> Result<FloatPlan, PlanError> {
+        let plan = Self::compile_inner(g, false)?;
+        debug_assert!(plan.steps.iter().enumerate().all(|(s, st)| s == st.node));
+        Ok(plan)
+    }
+
+    fn compile_inner(g: &Graph, fuse: bool) -> Result<FloatPlan, PlanError> {
         let input_shape = match g
             .nodes
             .iter()
@@ -1828,7 +1850,11 @@ impl FloatPlan {
             let op = match &nd.op {
                 Op::Input { .. } => FloatStepOp::Input,
                 Op::Conv2d { w, bias, stride, pad } => {
-                    let (epi, _) = absorb(&mut absorbed, &mut chain, nd.id);
+                    let (epi, _) = if fuse {
+                        absorb(&mut absorbed, &mut chain, nd.id)
+                    } else {
+                        (FloatEpilogue::default(), nd.id)
+                    };
                     FloatStepOp::Conv {
                         wmat: ops::oihw_to_wmat(w),
                         bias: bias.clone(),
@@ -1840,11 +1866,19 @@ impl FloatPlan {
                     }
                 }
                 Op::Linear { w, bias } => {
-                    let (epi, _) = absorb(&mut absorbed, &mut chain, nd.id);
+                    let (epi, _) = if fuse {
+                        absorb(&mut absorbed, &mut chain, nd.id)
+                    } else {
+                        (FloatEpilogue::default(), nd.id)
+                    };
                     FloatStepOp::Linear { w: w.clone(), bias: bias.clone(), epi }
                 }
                 Op::Add => {
-                    let (epi, _) = absorb(&mut absorbed, &mut chain, nd.id);
+                    let (epi, _) = if fuse {
+                        absorb(&mut absorbed, &mut chain, nd.id)
+                    } else {
+                        (FloatEpilogue::default(), nd.id)
+                    };
                     FloatStepOp::Add { epi }
                 }
                 Op::BatchNorm { bn } => {
@@ -1977,8 +2011,33 @@ impl FloatPlan {
         x: &TensorF,
     ) -> Vec<(NodeId, TensorF)> {
         let mut trace = Vec::with_capacity(self.steps.len());
-        self.execute_inner(layout, arena, x, Some(&mut trace));
+        let mut sink = |_sid: StepId, node: NodeId, shape: &[usize], data: &[f32]| {
+            trace.push((node, Tensor::from_vec(shape, data.to_vec())));
+        };
+        self.execute_inner(layout, arena, x, Some(&mut sink));
         trace
+    }
+
+    /// Execute while checkpointing the step outputs selected by `keep`
+    /// (indexed by step id) — the training-forward tape. For an unfused
+    /// plan (step id == node id) the mask addresses graph nodes directly;
+    /// unselected activations are never cloned out of the arena.
+    pub fn execute_checkpointed(
+        &self,
+        layout: &PlanLayout,
+        arena: &mut FloatArena,
+        x: &TensorF,
+        keep: &[bool],
+    ) -> (TensorF, Vec<Option<TensorF>>) {
+        let mut tape: Vec<Option<TensorF>> = Vec::new();
+        tape.resize_with(self.steps.len(), || None);
+        let mut sink = |sid: StepId, _node: NodeId, shape: &[usize], data: &[f32]| {
+            if keep.get(sid).copied().unwrap_or(false) {
+                tape[sid] = Some(Tensor::from_vec(shape, data.to_vec()));
+            }
+        };
+        let out = self.execute_inner(layout, arena, x, Some(&mut sink));
+        (out, tape)
     }
 
     fn execute_inner(
@@ -1986,7 +2045,7 @@ impl FloatPlan {
         layout: &PlanLayout,
         arena: &mut FloatArena,
         x: &TensorF,
-        mut trace: Option<&mut Vec<(NodeId, TensorF)>>,
+        mut sink: Option<&mut dyn FnMut(StepId, NodeId, &[usize], &[f32])>,
     ) -> TensorF {
         assert_eq!(layout.batch, x.shape()[0], "layout batch != input batch");
         assert_eq!(
@@ -2135,9 +2194,9 @@ impl FloatPlan {
                     arena.bufs[out_slot] = out;
                 }
             }
-            if let Some(tr) = trace.as_deref_mut() {
-                let data = slot_data(arena, layout, sid, x)[..out_len].to_vec();
-                tr.push((st.node, Tensor::from_vec(out_shape, data)));
+            if let Some(sink) = sink.as_mut() {
+                let data = slot_data(arena, layout, sid, x);
+                sink(sid, st.node, out_shape, &data[..out_len]);
             }
         }
         let shape = &layout.shapes[self.output];

@@ -1,0 +1,285 @@
+//! Trainable-parameter enumeration and gradient containers for native
+//! training (DESIGN.md §Training).
+//!
+//! The optimizer flattens every trainable parameter of a [`Graph`] into
+//! one `f64` master vector ([`gather_params`] / [`scatter_params`]),
+//! steps it with SGD, and writes it back — fake-quantized training keeps
+//! the float masters here and writes hardened copies into the graph
+//! before each forward (the weight straight-through estimator).
+//! [`Gradients`] is what the backward plan produces: per-node gradient
+//! buffers whose element order matches the parameters they pair with.
+
+use super::{Graph, NodeId, Op};
+
+/// Which trainable tensor of a node a [`ParamRef`] addresses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ParamKind {
+    /// Conv2d OIHW / Linear `[in, out]` weights.
+    Weight,
+    /// Conv2d / Linear per-output-channel bias.
+    Bias,
+    /// BatchNorm scale γ (frozen-statistics training: μ/σ stay fixed).
+    BnGamma,
+    /// BatchNorm shift β.
+    BnBeta,
+    /// PACT learned clip (the paper's α; `beta` in [`Op::PactAct`]).
+    PactBeta,
+}
+
+/// One trainable parameter tensor of one graph node.
+#[derive(Clone, Copy, Debug)]
+pub struct ParamRef {
+    pub node: NodeId,
+    pub kind: ParamKind,
+    /// Scalar element count.
+    pub len: usize,
+}
+
+/// Enumerate every trainable parameter in node order — the deterministic
+/// flat layout of [`gather_params`]. `QuantBn` is the already-quantized
+/// QD representation and is never trained.
+pub fn param_refs(g: &Graph) -> Vec<ParamRef> {
+    let mut refs = Vec::new();
+    for nd in &g.nodes {
+        match &nd.op {
+            Op::Conv2d { w, bias, .. } | Op::Linear { w, bias } => {
+                refs.push(ParamRef {
+                    node: nd.id,
+                    kind: ParamKind::Weight,
+                    len: w.len(),
+                });
+                if let Some(b) = bias {
+                    refs.push(ParamRef {
+                        node: nd.id,
+                        kind: ParamKind::Bias,
+                        len: b.len(),
+                    });
+                }
+            }
+            Op::BatchNorm { bn } => {
+                refs.push(ParamRef {
+                    node: nd.id,
+                    kind: ParamKind::BnGamma,
+                    len: bn.gamma.len(),
+                });
+                refs.push(ParamRef {
+                    node: nd.id,
+                    kind: ParamKind::BnBeta,
+                    len: bn.beta.len(),
+                });
+            }
+            Op::PactAct { .. } => {
+                refs.push(ParamRef { node: nd.id, kind: ParamKind::PactBeta, len: 1 });
+            }
+            _ => {}
+        }
+    }
+    refs
+}
+
+/// Total scalar count across `refs`.
+pub fn param_len(refs: &[ParamRef]) -> usize {
+    refs.iter().map(|r| r.len).sum()
+}
+
+/// Read one parameter as f64 (master precision).
+pub fn get_param(g: &Graph, r: ParamRef) -> Vec<f64> {
+    let nd = &g.nodes[r.node];
+    match (&nd.op, r.kind) {
+        (Op::Conv2d { w, .. } | Op::Linear { w, .. }, ParamKind::Weight) => {
+            w.data().iter().map(|&v| v as f64).collect()
+        }
+        (
+            Op::Conv2d { bias: Some(b), .. } | Op::Linear { bias: Some(b), .. },
+            ParamKind::Bias,
+        ) => b.clone(),
+        (Op::BatchNorm { bn }, ParamKind::BnGamma) => bn.gamma.clone(),
+        (Op::BatchNorm { bn }, ParamKind::BnBeta) => bn.beta.clone(),
+        (Op::PactAct { beta, .. }, ParamKind::PactBeta) => vec![*beta],
+        _ => panic!("param ref mismatch at node {}", r.node),
+    }
+}
+
+/// Write one parameter from f64 masters (weights narrow to f32).
+pub fn set_param(g: &mut Graph, r: ParamRef, vals: &[f64]) {
+    assert_eq!(vals.len(), r.len, "param length mismatch at node {}", r.node);
+    let nd = &mut g.nodes[r.node];
+    match (&mut nd.op, r.kind) {
+        (Op::Conv2d { w, .. } | Op::Linear { w, .. }, ParamKind::Weight) => {
+            for (wv, &v) in w.data_mut().iter_mut().zip(vals) {
+                *wv = v as f32;
+            }
+        }
+        (
+            Op::Conv2d { bias: Some(b), .. } | Op::Linear { bias: Some(b), .. },
+            ParamKind::Bias,
+        ) => b.copy_from_slice(vals),
+        (Op::BatchNorm { bn }, ParamKind::BnGamma) => bn.gamma.copy_from_slice(vals),
+        (Op::BatchNorm { bn }, ParamKind::BnBeta) => bn.beta.copy_from_slice(vals),
+        (Op::PactAct { beta, .. }, ParamKind::PactBeta) => *beta = vals[0],
+        _ => panic!("param ref mismatch at node {}", r.node),
+    }
+}
+
+/// Flatten every parameter named by `refs` into one master vector.
+pub fn gather_params(g: &Graph, refs: &[ParamRef]) -> Vec<f64> {
+    let mut theta = Vec::with_capacity(param_len(refs));
+    for &r in refs {
+        theta.extend(get_param(g, r));
+    }
+    theta
+}
+
+/// Write a master vector back into the graph (inverse of
+/// [`gather_params`]).
+pub fn scatter_params(g: &mut Graph, refs: &[ParamRef], theta: &[f64]) {
+    assert_eq!(theta.len(), param_len(refs), "theta length mismatch");
+    let mut off = 0;
+    for &r in refs {
+        set_param(g, r, &theta[off..off + r.len]);
+        off += r.len;
+    }
+}
+
+/// Per-node gradient buffers, element order matching the node's own
+/// parameter layout (f32 like the engine; the optimizer accumulates in
+/// f64 masters).
+#[derive(Clone, Debug, Default)]
+pub struct NodeGrad {
+    /// dL/dW, same element order as the weight tensor (OIHW / `[in, out]`).
+    pub w: Vec<f32>,
+    /// dL/db per output channel.
+    pub bias: Vec<f32>,
+    /// dL/dγ (BatchNorm scale).
+    pub gamma: Vec<f32>,
+    /// dL/dβ (BatchNorm shift).
+    pub beta: Vec<f32>,
+    /// dL/dβ for PACT (the learned clip): Σ of dL/dy over elements in the
+    /// saturated region x ≥ β (the paper's ∂y/∂α = 1 there, 0 below).
+    pub pact_beta: f64,
+}
+
+/// All parameter gradients of one backward pass, indexed by [`NodeId`].
+#[derive(Clone, Debug)]
+pub struct Gradients {
+    pub nodes: Vec<NodeGrad>,
+}
+
+impl Gradients {
+    pub fn zeros(n_nodes: usize) -> Self {
+        Gradients { nodes: vec![NodeGrad::default(); n_nodes] }
+    }
+
+    /// Gradient of one parameter, flattened to f64 (same element order as
+    /// [`get_param`]).
+    pub fn param(&self, r: ParamRef) -> Vec<f64> {
+        let nd = &self.nodes[r.node];
+        match r.kind {
+            ParamKind::Weight => nd.w.iter().map(|&v| v as f64).collect(),
+            ParamKind::Bias => nd.bias.iter().map(|&v| v as f64).collect(),
+            ParamKind::BnGamma => nd.gamma.iter().map(|&v| v as f64).collect(),
+            ParamKind::BnBeta => nd.beta.iter().map(|&v| v as f64).collect(),
+            ParamKind::PactBeta => vec![nd.pact_beta],
+        }
+    }
+
+    /// Flatten gradients for `refs` into a vector aligned with
+    /// [`gather_params`]'s layout.
+    pub fn gather(&self, refs: &[ParamRef]) -> Vec<f64> {
+        let mut gtheta = Vec::with_capacity(param_len(refs));
+        for &r in refs {
+            let gv = self.param(r);
+            assert_eq!(
+                gv.len(),
+                r.len,
+                "gradient missing or misshapen at node {}",
+                r.node
+            );
+            gtheta.extend(gv);
+        }
+        gtheta
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::bn::BnParams;
+    use crate::tensor::Tensor;
+
+    fn conv_bn_pact_fc() -> Graph {
+        let mut g = Graph::new(1.0 / 255.0);
+        let x = g.push("in", Op::Input { shape: vec![1, 4, 4] }, &[]);
+        let w = Tensor::from_vec(&[2, 1, 3, 3], (0..18).map(|i| i as f32 * 0.1).collect());
+        let c = g.push("conv", Op::Conv2d { w, bias: None, stride: 1, pad: 1 }, &[x]);
+        let b = g.push("bn", Op::BatchNorm { bn: BnParams::identity(2) }, &[c]);
+        let a = g.push("act", Op::PactAct { beta: 4.0, bits: 4 }, &[b]);
+        let p = g.push("gap", Op::GlobalAvgPool, &[a]);
+        let w2 = Tensor::from_vec(&[2, 3], (0..6).map(|i| i as f32 * 0.2).collect());
+        g.push("fc", Op::Linear { w: w2, bias: Some(vec![0.5, -0.5, 0.25]) }, &[p]);
+        g
+    }
+
+    #[test]
+    fn param_refs_enumerate_in_node_order() {
+        let g = conv_bn_pact_fc();
+        let refs = param_refs(&g);
+        let kinds: Vec<ParamKind> = refs.iter().map(|r| r.kind).collect();
+        // conv weight (no bias), bn gamma+beta, pact clip, fc weight+bias.
+        assert_eq!(
+            kinds,
+            vec![
+                ParamKind::Weight,
+                ParamKind::BnGamma,
+                ParamKind::BnBeta,
+                ParamKind::PactBeta,
+                ParamKind::Weight,
+                ParamKind::Bias,
+            ]
+        );
+        assert_eq!(param_len(&refs), 18 + 2 + 2 + 1 + 6 + 3);
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let mut g = conv_bn_pact_fc();
+        let refs = param_refs(&g);
+        let mut theta = gather_params(&g, &refs);
+        for (i, t) in theta.iter_mut().enumerate() {
+            *t += 0.125 * (i % 7) as f64;
+        }
+        scatter_params(&mut g, &refs, &theta);
+        let back = gather_params(&g, &refs);
+        // Weights round-trip through f32, everything else through f64 —
+        // f32 holds these small values exactly.
+        for (a, b) in theta.iter().zip(&back) {
+            assert!((a - b).abs() < 1e-6, "{a} != {b}");
+        }
+        // The PACT clip actually moved in the graph.
+        match g.nodes[3].op {
+            Op::PactAct { beta, .. } => assert!((beta - theta[22]).abs() < 1e-12),
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn gradients_flatten_like_params() {
+        let g = conv_bn_pact_fc();
+        let refs = param_refs(&g);
+        let mut grads = Gradients::zeros(g.nodes.len());
+        grads.nodes[1].w = vec![1.0; 18];
+        grads.nodes[2].gamma = vec![2.0; 2];
+        grads.nodes[2].beta = vec![3.0; 2];
+        grads.nodes[3].pact_beta = 4.0;
+        grads.nodes[5].w = vec![5.0; 6];
+        grads.nodes[5].bias = vec![6.0; 3];
+        let flat = grads.gather(&refs);
+        assert_eq!(flat.len(), param_len(&refs));
+        assert_eq!(flat[0], 1.0);
+        assert_eq!(flat[18], 2.0);
+        assert_eq!(flat[20], 3.0);
+        assert_eq!(flat[22], 4.0);
+        assert_eq!(flat[23], 5.0);
+        assert_eq!(flat[29], 6.0);
+    }
+}

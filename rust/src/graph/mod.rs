@@ -287,5 +287,6 @@ mod tests {
     }
 }
 
+pub mod grad;
 pub mod int;
 pub mod shape;

@@ -1,9 +1,12 @@
 //! `nemo` — the L3 leader binary.
 //!
 //! Subcommands:
-//!   train     train SynthNet (FP, then optional FQ fine-tune) via the
-//!             AOT-compiled PJRT train steps; writes a checkpoint
-//!             (requires the `pjrt` feature)
+//!   train     train SynthNet (FP, then optional FQ fine-tune) and write
+//!             a checkpoint; `--backend native` (the default) runs the
+//!             in-process backward-plan engine, `--backend pjrt` the
+//!             AOT-compiled PJRT train steps (requires the `pjrt`
+//!             feature); `--resume ck.json` continues an earlier run
+//!             (model + optimizer state)
 //!   deploy    run the typestate quantization pipeline on a checkpoint;
 //!             prints the per-layer quantization table and validates
 //!             QD/ID agreement
@@ -82,7 +85,8 @@ fn main() {
 }
 
 const USAGE: &str = "usage: nemo <train|deploy|infer|serve|client|validate|info> [--flags]
-  train    --steps N --fq-steps N --bits B --lr F --seed N --out ck.json
+  train    --steps N --fq-steps N --bits B --lr F --batch B --seed N --out ck.json
+           --backend native|pjrt (native needs no artifacts) --resume ck.json (continue a run)
   deploy   --ckpt ck.json --bits B --thresholds --save m.nemo.json --save-bin m.nemob
   infer    --ckpt ck.json --n N --bits B
   serve    --ckpt ck.json --backend native|pjrt --requests N --clients C --max-batch B --timeout-us T
@@ -109,8 +113,87 @@ fn load_or_init_net(args: &Args, rng: &mut Rng) -> Result<SynthNet> {
     }
 }
 
-#[cfg(feature = "pjrt")]
 fn cmd_train(args: &Args) -> Result<()> {
+    match args.str_or("backend", "native").as_str() {
+        "native" => cmd_train_native(args),
+        "pjrt" => cmd_train_pjrt(args),
+        b => bail!("unknown train backend '{b}' (expected native|pjrt)"),
+    }
+}
+
+fn train_config_from_args(args: &Args, seed: u64) -> Result<nemo::train::TrainConfig> {
+    Ok(nemo::train::TrainConfig {
+        steps: args.usize_or("steps", 300)?,
+        lr: args.f64_or("lr", 0.05)?,
+        lr_decay: true,
+        seed,
+        log_every: if args.bool("quiet") { 0 } else { 25 },
+        batch: args.usize_or("batch", nemo::train::TRAIN_BATCH)?,
+        ..nemo::train::TrainConfig::default()
+    })
+}
+
+/// Calibrate PACT betas from the trained FP net (paper sec. 2: beta =
+/// max of y in the FullPrecision stage). Always done — deployment reads
+/// them from the checkpoint even without QAT fine-tuning.
+fn calibrate_betas(args: &Args, net: &mut SynthNet, data: &mut SynthDigits) -> Result<()> {
+    let (cal_x, _) = data.batch(64);
+    let pctl = args.f64_or("calib-pctl", 0.995)?;
+    let fp = Network::from_graph(net.to_fp_graph())?;
+    net.act_betas = fp.calibrate_percentile(&[cal_x], pctl);
+    println!("calibrated act betas: {:?}", net.act_betas);
+    Ok(())
+}
+
+/// Native training: the backward-plan engine in this binary — no PJRT
+/// runtime, no artifacts, works in the default build.
+fn cmd_train_native(args: &Args) -> Result<()> {
+    use nemo::train::native::{train_fp, train_fq, OptState};
+
+    let seed = args.usize_or("seed", 1)? as u64;
+    let mut rng = Rng::new(seed);
+    let (mut net, mut opt) = match args.str_opt("resume") {
+        Some(p) => {
+            let ck = Checkpoint::load(p).with_context(|| format!("resume checkpoint {p}"))?;
+            println!("resuming from {p}");
+            (SynthNet::from_checkpoint(&ck)?, OptState::load(&ck))
+        }
+        None => (SynthNet::init(&mut rng), OptState::default()),
+    };
+    let mut data = SynthDigits::new(seed);
+    let fq_steps = args.usize_or("fq-steps", 150)?;
+    let bits = args.u32_or("bits", 8)?;
+    let cfg = train_config_from_args(args, seed)?;
+
+    println!("== FullPrecision training ({} steps, native) ==", cfg.steps);
+    let rep = train_fp(&mut net, &mut data, &cfg, &mut opt)?;
+    let (h, t) = rep.head_tail(10);
+    println!("loss: first10 {h:.4} -> last10 {t:.4}");
+
+    calibrate_betas(args, &mut net, &mut data)?;
+
+    if fq_steps > 0 {
+        println!("== FakeQuantized fine-tune w{bits}a{bits} ({fq_steps} steps, native) ==");
+        let cfg2 = nemo::train::TrainConfig { steps: fq_steps, lr: cfg.lr * 0.2, ..cfg };
+        let rep2 = train_fq(&mut net, &mut data, bits, bits, &cfg2, &mut opt)?;
+        let (h2, t2) = rep2.head_tail(10);
+        println!("loss: first10 {h2:.4} -> last10 {t2:.4}");
+    }
+
+    let (ex, el) = SynthDigits::eval_set(seed, 512);
+    let acc = eval_float(&net.to_fp_graph(), &ex, &el);
+    println!("FP eval accuracy: {:.1}%", acc * 100.0);
+
+    let out = args.str_or("out", "synthnet_ck.json");
+    let mut ck = net.to_checkpoint();
+    opt.save(&mut ck);
+    ck.save(&out)?;
+    println!("checkpoint -> {out}");
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn cmd_train_pjrt(args: &Args) -> Result<()> {
     use nemo::train::{train_fp, train_fq, TrainConfig};
 
     let rt = nemo::runtime::Runtime::new(artifacts_dir())?;
@@ -121,27 +204,14 @@ fn cmd_train(args: &Args) -> Result<()> {
     let steps = args.usize_or("steps", 300)?;
     let fq_steps = args.usize_or("fq-steps", 150)?;
     let bits = args.u32_or("bits", 8)?;
-    let cfg = TrainConfig {
-        steps,
-        lr: args.f64_or("lr", 0.05)?,
-        lr_decay: true,
-        seed,
-        log_every: if args.bool("quiet") { 0 } else { 25 },
-    };
+    let cfg = train_config_from_args(args, seed)?;
 
     println!("== FullPrecision training ({steps} steps) ==");
     let rep = train_fp(&rt, &mut net, &mut data, &cfg)?;
     let (h, t) = rep.head_tail(10);
     println!("loss: first10 {h:.4} -> last10 {t:.4}");
 
-    // Calibrate PACT betas from the trained FP net (paper sec. 2: beta =
-    // max of y in the FullPrecision stage). Always done — deployment
-    // reads them from the checkpoint even without QAT fine-tuning.
-    let (cal_x, _) = data.batch(64);
-    let pctl = args.f64_or("calib-pctl", 0.995)?;
-    let fp = Network::from_graph(net.to_fp_graph())?;
-    net.act_betas = fp.calibrate_percentile(&[cal_x], pctl);
-    println!("calibrated act betas: {:?}", net.act_betas);
+    calibrate_betas(args, &mut net, &mut data)?;
 
     if fq_steps > 0 {
         println!("== FakeQuantized fine-tune w{bits}a{bits} ({fq_steps} steps) ==");
@@ -162,11 +232,11 @@ fn cmd_train(args: &Args) -> Result<()> {
 }
 
 #[cfg(not(feature = "pjrt"))]
-fn cmd_train(_args: &Args) -> Result<()> {
+fn cmd_train_pjrt(_args: &Args) -> Result<()> {
     bail!(
-        "`nemo train` runs the AOT-compiled PJRT train steps; this binary \
-         was built without the `pjrt` feature (rebuild with \
-         `--features pjrt`)"
+        "`--backend pjrt` runs the AOT-compiled PJRT train steps; this \
+         binary was built without the `pjrt` feature (rebuild with \
+         `--features pjrt`, or drop the flag to train natively)"
     )
 }
 

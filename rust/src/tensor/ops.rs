@@ -1124,6 +1124,272 @@ pub fn avgpool_packed_into(
     }
 }
 
+// ---------------------------------------------------------------------------
+// Backward kernels (native training; DESIGN.md §Training)
+// ---------------------------------------------------------------------------
+//
+// Adjoints of the float forward kernels above. Threaded GEMMs reuse the
+// same row-block split as the forward path (`run_row_blocks` /
+// `gemm_threads`): each output row is computed by exactly one thread with
+// a fixed per-element accumulation order, so gradients are identical at
+// any thread count. The `_acc_into` kernels *accumulate* (`+=`) into the
+// output buffer — the backward plan zeroes a gradient slot once and lets
+// every consumer's contribution add in place.
+
+/// out[K,N] = Aᵀ B with A [M,K], B [M,N]: out[k,j] = Σ_i a[i,k]·b[i,j].
+/// The weight-gradient GEMM (linear gW = xᵀ·dY; conv gWmat = colsᵀ·dRows).
+/// Overwrites `out`.
+pub fn matmul_f32_atb_into(
+    ad: &[f32],
+    bd: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    assert!(ad.len() >= m * k && bd.len() >= m * n);
+    let out = &mut out[..k * n];
+    let threads = gemm_threads(k, m, n);
+    run_row_blocks(k, n, threads, out, |lo, hi, chunk| {
+        chunk.fill(0.0);
+        for i in 0..m {
+            let arow = &ad[i * k..(i + 1) * k];
+            let brow = &bd[i * n..(i + 1) * n];
+            for kk in lo..hi {
+                let av = arow[kk];
+                if av == 0.0 {
+                    continue;
+                }
+                let crow = &mut chunk[(kk - lo) * n..(kk - lo + 1) * n];
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv += av * bv;
+                }
+            }
+        }
+    });
+}
+
+/// out[M,N] += A Bᵀ with A [M,K], B [N,K]: out[i,j] += Σ_k a[i,k]·b[j,k].
+/// The input-gradient GEMM (linear dX += dY·wᵀ; conv gCols = dRows·wmatᵀ).
+pub fn matmul_f32_abt_acc_into(
+    ad: &[f32],
+    bd: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    assert!(ad.len() >= m * k && bd.len() >= n * k);
+    let out = &mut out[..m * n];
+    let threads = gemm_threads(m, k, n);
+    run_row_blocks(m, n, threads, out, |lo, hi, chunk| {
+        for i in lo..hi {
+            let arow = &ad[i * k..(i + 1) * k];
+            let crow = &mut chunk[(i - lo) * n..(i - lo + 1) * n];
+            for (j, cv) in crow.iter_mut().enumerate() {
+                let brow = &bd[j * k..(j + 1) * k];
+                let mut acc = 0f32;
+                for (&av, &bv) in arow.iter().zip(brow) {
+                    acc += av * bv;
+                }
+                *cv += acc;
+            }
+        }
+    });
+}
+
+/// Gather an NCHW tensor into the [B*OH*OW, C] GEMM-row layout — the
+/// exact inverse permutation of [`rows_to_nchw_into`].
+pub fn nchw_to_rows_into<T: Copy>(
+    xd: &[T],
+    b: usize,
+    c: usize,
+    oh: usize,
+    ow: usize,
+    rows: &mut [T],
+) {
+    let hw = oh * ow;
+    assert!(xd.len() >= b * c * hw);
+    let rows = &mut rows[..b * hw * c];
+    for bi in 0..b {
+        for pix in 0..hw {
+            let row = (bi * hw + pix) * c;
+            for ci in 0..c {
+                rows[row + ci] = xd[(bi * c + ci) * hw + pix];
+            }
+        }
+    }
+}
+
+/// Scatter-add a [B*OH*OW, C*KH*KW] patch-gradient matrix back onto the
+/// NCHW input gradient — the adjoint of [`im2col_into`] (contributions to
+/// padding locations are dropped). Accumulates into `gx`; iteration
+/// mirrors im2col's precomputed valid ranges so the scatter needs no
+/// bounds checks.
+#[allow(clippy::too_many_arguments)]
+pub fn col2im_acc_into(
+    gcols: &[f32],
+    b: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    gx: &mut [f32],
+) {
+    let oh = (h + 2 * pad - kh) / stride + 1;
+    let ow = (w + 2 * pad - kw) / stride + 1;
+    let cols = c * kh * kw;
+    assert!(gcols.len() >= b * oh * ow * cols);
+    let gx = &mut gx[..b * c * h * w];
+    let valid = |kq: usize, dim: usize, omax: usize| -> (usize, usize) {
+        let lo = pad.saturating_sub(kq).div_ceil(stride);
+        let hi_excl = if dim + pad > kq {
+            ((dim + pad - kq - 1) / stride + 1).min(omax)
+        } else {
+            0
+        };
+        (lo.min(omax), hi_excl)
+    };
+    for bi in 0..b {
+        for ci in 0..c {
+            let xbase = (bi * c + ci) * h * w;
+            for ki in 0..kh {
+                let (oy_lo, oy_hi) = valid(ki, h, oh);
+                for kj in 0..kw {
+                    let (ox_lo, ox_hi) = valid(kj, w, ow);
+                    let col = ci * kh * kw + ki * kw + kj;
+                    for oy in oy_lo..oy_hi {
+                        let iy = oy * stride + ki - pad;
+                        let xrow = xbase + iy * w;
+                        let grow = ((bi * oh + oy) * ow) * cols + col;
+                        let mut ix = ox_lo * stride + kj - pad;
+                        for ox in ox_lo..ox_hi {
+                            gx[xrow + ix] += gcols[grow + ox * cols];
+                            ix += stride;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Route a pooled gradient back to each window's argmax — the adjoint of
+/// [`maxpool_into`]. The first maximum wins on ties, matching the forward
+/// kernel's strict `>` scan. Accumulates into `gx`.
+#[allow(clippy::too_many_arguments)]
+pub fn maxpool_backward_acc_into(
+    xd: &[f32],
+    gy: &[f32],
+    b: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    k: usize,
+    gx: &mut [f32],
+) {
+    assert!(h % k == 0 && w % k == 0);
+    let (oh, ow) = (h / k, w / k);
+    assert!(xd.len() >= b * c * h * w && gy.len() >= b * c * oh * ow);
+    let gx = &mut gx[..b * c * h * w];
+    for bc in 0..b * c {
+        let xbase = bc * h * w;
+        let obase = bc * oh * ow;
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut arg = xbase + (oy * k) * w + ox * k;
+                let mut best = xd[arg];
+                for dy in 0..k {
+                    let xrow = xbase + (oy * k + dy) * w + ox * k;
+                    for dx in 0..k {
+                        let v = xd[xrow + dx];
+                        if v > best {
+                            best = v;
+                            arg = xrow + dx;
+                        }
+                    }
+                }
+                gx[arg] += gy[obase + oy * ow + ox];
+            }
+        }
+    }
+}
+
+/// Adjoint of [`avgpool_f32_into`]: spread each pooled gradient uniformly
+/// over its K×K window. Accumulates into `gx`.
+pub fn avgpool_backward_acc_into(
+    gy: &[f32],
+    b: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    k: usize,
+    gx: &mut [f32],
+) {
+    assert!(h % k == 0 && w % k == 0);
+    let (oh, ow) = (h / k, w / k);
+    assert!(gy.len() >= b * c * oh * ow);
+    let inv = 1.0 / (k * k) as f32;
+    let gx = &mut gx[..b * c * h * w];
+    for bc in 0..b * c {
+        let xbase = bc * h * w;
+        let obase = bc * oh * ow;
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let g = gy[obase + oy * ow + ox] * inv;
+                for dy in 0..k {
+                    let xrow = xbase + (oy * k + dy) * w + ox * k;
+                    for gv in &mut gx[xrow..xrow + k] {
+                        *gv += g;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Adjoint of [`global_mean_f32_into`]: gx[b,c,:,:] += gy[b,c] / (H·W).
+pub fn global_mean_backward_acc_into(
+    gy: &[f32],
+    b: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    gx: &mut [f32],
+) {
+    let hw = h * w;
+    assert!(gy.len() >= b * c);
+    let inv = 1.0 / hw as f32;
+    let gx = &mut gx[..b * c * hw];
+    for bc in 0..b * c {
+        let g = gy[bc] * inv;
+        for gv in &mut gx[bc * hw..(bc + 1) * hw] {
+            *gv += g;
+        }
+    }
+}
+
+/// Inverse layout transform of [`oihw_to_wmat`] for weight gradients: a
+/// [C_in*KH*KW, C_out] gradient matrix back to OIHW order.
+pub fn wmat_to_oihw(gw: &[f32], co: usize, ci: usize, kh: usize, kw: usize) -> Vec<f32> {
+    assert!(gw.len() >= ci * kh * kw * co);
+    let mut out = vec![0f32; co * ci * kh * kw];
+    for o in 0..co {
+        for i in 0..ci {
+            for y in 0..kh {
+                for z in 0..kw {
+                    out[((o * ci + i) * kh + y) * kw + z] =
+                        gw[(i * kh * kw + y * kw + z) * co + o];
+                }
+            }
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1548,5 +1814,111 @@ mod tests {
         let (cols, (b, oh, ow)) = im2col(&x, 2, 2, 1, 0);
         assert_eq!((b, oh, ow), (1, 1, 1));
         assert_eq!(cols.data(), &[1, 2, 3, 4, 5, 6, 7, 8]);
+    }
+
+    fn transpose(t: &TensorF) -> TensorF {
+        let (m, n) = (t.shape()[0], t.shape()[1]);
+        let mut out = vec![0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j * m + i] = t.data()[i * n + j];
+            }
+        }
+        Tensor::from_vec(&[n, m], out)
+    }
+
+    #[test]
+    fn transposed_gemms_match_explicit_transpose() {
+        let mut rng = Rng::new(21);
+        for &(m, k, n) in &[(3usize, 5usize, 4usize), (17, 9, 13), (160, 96, 80)] {
+            let a = rand_f(&mut rng, &[m, k]);
+            let b = rand_f(&mut rng, &[m, n]);
+            // AᵀB vs matmul(transpose(a), b)
+            let want = matmul_f32(&transpose(&a), &b);
+            let mut got = vec![0f32; k * n];
+            matmul_f32_atb_into(a.data(), b.data(), m, k, n, &mut got);
+            for (g, w) in got.iter().zip(want.data()) {
+                assert!((g - w).abs() <= 1e-4 * w.abs().max(1.0), "{g} vs {w}");
+            }
+            // ABᵀ (accumulating) vs matmul(a2, transpose(b2))
+            let a2 = rand_f(&mut rng, &[m, k]);
+            let b2 = rand_f(&mut rng, &[n, k]);
+            let want2 = matmul_f32(&a2, &transpose(&b2));
+            let mut got2 = vec![1.0f32; m * n]; // nonzero: verifies +=
+            matmul_f32_abt_acc_into(a2.data(), b2.data(), m, k, n, &mut got2);
+            for (g, w) in got2.iter().zip(want2.data()) {
+                let w = w + 1.0;
+                assert!((g - w).abs() <= 1e-4 * w.abs().max(1.0), "{g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn nchw_rows_roundtrip() {
+        let mut rng = Rng::new(22);
+        let x = rand_f(&mut rng, &[2, 5, 3, 4]);
+        let mut rows = vec![0f32; x.len()];
+        nchw_to_rows_into(x.data(), 2, 5, 3, 4, &mut rows);
+        let mut back = vec![0f32; x.len()];
+        rows_to_nchw_into(&rows, 2, 5, 3, 4, &mut back);
+        assert_eq!(&back[..], x.data());
+    }
+
+    #[test]
+    fn col2im_is_the_adjoint_of_im2col() {
+        // <im2col(x), g> == <x, col2im(g)> for random x, g — the defining
+        // property of the adjoint, covering stride/pad combinations.
+        let mut rng = Rng::new(23);
+        for &(h, w, kh, kw, stride, pad) in
+            &[(6usize, 6usize, 3usize, 3usize, 1usize, 1usize), (7, 5, 3, 3, 2, 1), (4, 4, 2, 2, 2, 0)]
+        {
+            let (b, c) = (2, 3);
+            let x = rand_f(&mut rng, &[b, c, h, w]);
+            let oh = (h + 2 * pad - kh) / stride + 1;
+            let ow = (w + 2 * pad - kw) / stride + 1;
+            let rows = b * oh * ow;
+            let cols = c * kh * kw;
+            let mut xc = vec![0f32; rows * cols];
+            im2col_into(x.data(), b, c, h, w, kh, kw, stride, pad, &mut xc);
+            let g = rand_f(&mut rng, &[rows, cols]);
+            let lhs: f64 = xc.iter().zip(g.data()).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+            let mut gx = vec![0f32; b * c * h * w];
+            col2im_acc_into(g.data(), b, c, h, w, kh, kw, stride, pad, &mut gx);
+            let rhs: f64 =
+                x.data().iter().zip(&gx).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+            assert!((lhs - rhs).abs() <= 1e-3 * lhs.abs().max(1.0), "{lhs} vs {rhs}");
+        }
+    }
+
+    #[test]
+    fn pool_backward_kernels() {
+        // maxpool: gradient lands exactly on each window's (first) argmax
+        let x = Tensor::from_vec(
+            &[1, 1, 2, 4],
+            vec![1.0f32, 5.0, 2.0, 2.0, 3.0, 0.0, 2.0, 2.0],
+        );
+        let gy = [10.0f32, 100.0];
+        let mut gx = vec![0f32; 8];
+        maxpool_backward_acc_into(x.data(), &gy, 1, 1, 2, 4, 2, &mut gx);
+        // left window: max 5.0 at idx 1; right window: tie at 2.0, first
+        // scan position (idx 2) wins
+        assert_eq!(gx, vec![0.0, 10.0, 100.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        // avgpool: uniform spread of gy/k^2
+        let mut gx = vec![0f32; 8];
+        avgpool_backward_acc_into(&gy, 1, 1, 2, 4, 2, &mut gx);
+        assert_eq!(gx, vec![2.5, 2.5, 25.0, 25.0, 2.5, 2.5, 25.0, 25.0]);
+        // global mean: gy/(H*W) everywhere
+        let mut gx = vec![0f32; 8];
+        global_mean_backward_acc_into(&[8.0, 16.0], 1, 2, 2, 2, &mut gx);
+        assert_eq!(gx, vec![2.0, 2.0, 2.0, 2.0, 4.0, 4.0, 4.0, 4.0]);
+    }
+
+    #[test]
+    fn wmat_grad_layout_roundtrip() {
+        let mut rng = Rng::new(24);
+        let w = rand_f(&mut rng, &[4, 3, 3, 3]);
+        let wmat = oihw_to_wmat(&w);
+        let back = wmat_to_oihw(wmat.data(), 4, 3, 3, 3);
+        assert_eq!(&back[..], w.data());
     }
 }

@@ -1,14 +1,19 @@
-//! QAT training driver (S8): runs the AOT-compiled train-step artifacts
-//! (FullPrecision or FakeQuantized/STE) from Rust — Python authored the
-//! graph once at build time and is not in the loop.
+//! QAT training driver (S8).
 //!
-//! The FQ train step implements the paper's quantization-aware training
-//! (sec. 2.2): PACT fake-quantization in forward, STE gradients backward,
-//! trainable clipping bounds beta.
+//! Two interchangeable backends implement the paper's training recipe
+//! (FullPrecision, then FakeQuantized/STE fine-tuning, sec. 2.2):
 //!
-//! `train_fp`/`train_fq` require the `pjrt` feature (they execute PJRT
-//! artifacts); the evaluation helpers run on the native engines and are
-//! always available.
+//! * [`native`] — the default: minibatch SGD over the backward-plan
+//!   compiler ([`crate::engine::BackwardPlan`]), pure Rust, always
+//!   available.
+//! * `train_fp`/`train_fq` here — the AOT-compiled PJRT train-step
+//!   artifacts (require the `pjrt` feature; Python authored the graph
+//!   once at build time and is not in the loop).
+//!
+//! The evaluation helpers run on the native engines and are always
+//! available.
+
+pub mod native;
 
 #[cfg(feature = "pjrt")]
 use anyhow::{ensure, Context, Result};
@@ -34,11 +39,28 @@ pub struct TrainConfig {
     pub seed: u64,
     /// log every n steps (0 = silent)
     pub log_every: usize,
+    /// SGD momentum (native backend; the PJRT artifacts bake their own
+    /// plain-SGD update and ignore this).
+    pub momentum: f64,
+    /// L2 weight decay on conv/linear weights (native backend).
+    pub weight_decay: f64,
+    /// Minibatch size (native backend; the PJRT artifacts are lowered
+    /// for [`TRAIN_BATCH`]).
+    pub batch: usize,
 }
 
 impl Default for TrainConfig {
     fn default() -> Self {
-        TrainConfig { steps: 300, lr: 0.05, lr_decay: true, seed: 1, log_every: 50 }
+        TrainConfig {
+            steps: 300,
+            lr: 0.05,
+            lr_decay: true,
+            seed: 1,
+            log_every: 50,
+            momentum: 0.9,
+            weight_decay: 1e-4,
+            batch: TRAIN_BATCH,
+        }
     }
 }
 
@@ -153,7 +175,6 @@ pub fn train_fq(
     Ok(report)
 }
 
-#[cfg(any(test, feature = "pjrt"))]
 fn effective_lr(cfg: &TrainConfig, step: usize) -> f64 {
     if cfg.lr_decay && cfg.steps > 1 {
         let f = step as f64 / (cfg.steps - 1) as f64;

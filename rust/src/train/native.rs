@@ -1,0 +1,388 @@
+//! Native training engine (DESIGN.md §Training): minibatch SGD driven by
+//! the backward-plan compiler — `nemo train` with no PJRT runtime and no
+//! Python-authored artifact.
+//!
+//! Per step: scatter the f64 masters into the graph (the FQ path writes
+//! fake-quantized weight copies instead — the weight straight-through
+//! estimator), run the unfused forward plan with activation
+//! checkpointing, seed the backward plan with the softmax cross-entropy
+//! gradient, and step the masters with SGD (momentum + weight decay).
+//! The forward plan is recompiled each step because it bakes weights
+//! into GEMM-ready matrices; the backward plan and both layouts are
+//! compiled once per run, and one shared [`FloatArena`] serves forward
+//! and backward (its slot pool only ever grows).
+
+use anyhow::{Context, Result};
+
+use crate::data::SynthDigits;
+use crate::engine::{BackwardPlan, FloatArena, FloatPlan};
+use crate::graph::grad::{self, ParamKind, ParamRef};
+use crate::graph::{Graph, Op};
+use crate::io::Checkpoint;
+use crate::model::synthnet::SynthNet;
+use crate::quant::QuantSpec;
+use crate::tensor::{Tensor, TensorF};
+
+use super::{effective_lr, TrainConfig, TrainReport};
+
+/// Floor for trained PACT clips: a non-positive β would degenerate the
+/// activation grid (eps ≤ 0), so clips are clamped here after each step.
+pub const PACT_BETA_MIN: f64 = 1e-3;
+
+/// SGD momentum buffer + step counter, aligned with the flat master
+/// vector. Persisted inside the model checkpoint under the `opt.*` keys
+/// so an interrupted run resumes with momentum intact; a checkpoint
+/// without them (pre-training, or written by an older build) loads as a
+/// fresh optimizer.
+#[derive(Clone, Debug, Default)]
+pub struct OptState {
+    pub v: Vec<f64>,
+    /// Optimizer steps taken across all resumed legs.
+    pub step: usize,
+}
+
+impl OptState {
+    /// Store alongside the model keys of a checkpoint.
+    pub fn save(&self, ck: &mut Checkpoint) {
+        ck.insert_f64("opt.v", &[self.v.len()], self.v.clone());
+        ck.insert_f64("opt.step", &[1], vec![self.step as f64]);
+    }
+
+    /// Restore from a checkpoint; fresh state if the keys are absent.
+    pub fn load(ck: &Checkpoint) -> OptState {
+        let v = ck.get_f64("opt.v").map(|(_, d)| d.to_vec()).unwrap_or_default();
+        let step = ck.get_f64("opt.step").map(|(_, d)| d[0] as usize).unwrap_or(0);
+        OptState { v, step }
+    }
+}
+
+/// One SGD step over the flat masters:
+/// v ← μ·v + g + wd·θ (decay only where `decay[i]`), θ ← θ − lr·v.
+/// The velocity buffer is (re)zeroed when its length does not match θ —
+/// e.g. when an FP leg hands its state to an FQ leg, whose PACT clips
+/// change the parameter count.
+pub fn sgd_step(
+    theta: &mut [f64],
+    gtheta: &[f64],
+    state: &mut OptState,
+    lr: f64,
+    momentum: f64,
+    weight_decay: f64,
+    decay: &[bool],
+) {
+    assert_eq!(theta.len(), gtheta.len(), "gradient/parameter length mismatch");
+    if state.v.len() != theta.len() {
+        state.v = vec![0.0; theta.len()];
+    }
+    for (i, (t, &g)) in theta.iter_mut().zip(gtheta).enumerate() {
+        let wd = if decay[i] { weight_decay * *t } else { 0.0 };
+        let v = momentum * state.v[i] + g + wd;
+        state.v[i] = v;
+        *t -= lr * v;
+    }
+    state.step += 1;
+}
+
+/// Per-element weight-decay mask over the flat layout: decay
+/// conv/linear weights only — the standard exemption for biases, BN
+/// affine parameters, and PACT clips.
+pub fn decay_mask(refs: &[ParamRef]) -> Vec<bool> {
+    let mut m = Vec::with_capacity(grad::param_len(refs));
+    for r in refs {
+        let is_w = matches!(r.kind, ParamKind::Weight);
+        for _ in 0..r.len {
+            m.push(is_w);
+        }
+    }
+    m
+}
+
+/// Mean softmax cross-entropy over a `[B, C]` logit batch and its seed
+/// gradient dL/dlogits = (softmax − onehot)/B, computed in f64 with the
+/// usual max-shift for stability.
+pub fn softmax_xent(logits: &TensorF, labels: &[usize]) -> (f64, TensorF) {
+    let (b, c) = (logits.shape()[0], logits.shape()[1]);
+    assert_eq!(labels.len(), b, "label count != batch size");
+    let mut seed = vec![0f32; b * c];
+    let mut loss = 0.0;
+    for (i, &label) in labels.iter().enumerate() {
+        let row = &logits.data()[i * c..(i + 1) * c];
+        let max = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v)) as f64;
+        let mut z = 0.0;
+        for &v in row {
+            z += (v as f64 - max).exp();
+        }
+        loss += z.ln() - (row[label] as f64 - max);
+        for (j, &v) in row.iter().enumerate() {
+            let p = (v as f64 - max).exp() / z;
+            let onehot = if j == label { 1.0 } else { 0.0 };
+            seed[i * c + j] = ((p - onehot) / b as f64) as f32;
+        }
+    }
+    (loss / b as f64, Tensor::from_vec(&[b, c], seed))
+}
+
+/// Write masters into the graph. In FQ mode (`wbits = Some`),
+/// conv/linear weights go in as their fake-quantized copies on the
+/// symmetric grid β_w = max|w| (NEMO's reset_alpha_weights statistic) —
+/// quantized forward, gradients applied to the float masters (STE).
+fn write_params(g: &mut Graph, refs: &[ParamRef], theta: &[f64], wbits: Option<u32>) {
+    let mut off = 0;
+    for &r in refs {
+        let vals = &theta[off..off + r.len];
+        match (wbits, r.kind) {
+            (Some(bits), ParamKind::Weight) => {
+                let beta = vals.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+                let spec = QuantSpec::weight(if beta == 0.0 { 1.0 } else { beta }, bits);
+                let fq: Vec<f64> = vals.iter().map(|&v| spec.fake_quantize(v)).collect();
+                grad::set_param(g, r, &fq);
+            }
+            _ => grad::set_param(g, r, vals),
+        }
+        off += r.len;
+    }
+}
+
+fn clamp_pact(refs: &[ParamRef], theta: &mut [f64]) {
+    let mut off = 0;
+    for r in refs {
+        if matches!(r.kind, ParamKind::PactBeta) && theta[off] < PACT_BETA_MIN {
+            theta[off] = PACT_BETA_MIN;
+        }
+        off += r.len;
+    }
+}
+
+/// Minibatch-SGD a float graph in place. On return the graph holds the
+/// final *masters* (never their quantized copies) — what a checkpoint
+/// should persist; deployment re-derives the weight grids itself.
+pub fn train_graph(
+    g: &mut Graph,
+    data: &mut SynthDigits,
+    cfg: &TrainConfig,
+    wbits: Option<u32>,
+    opt: &mut OptState,
+    tag: &str,
+) -> Result<TrainReport> {
+    let refs = grad::param_refs(g);
+    let mut theta = grad::gather_params(g, &refs);
+    let decay = decay_mask(&refs);
+    let bwd = BackwardPlan::compile(g).context("compiling backward plan")?;
+    let blayout = bwd.layout(g, cfg.batch).context("backward layout")?;
+    let mut arena = FloatArena::new();
+    let mut report = TrainReport::default();
+    for step in 0..cfg.steps {
+        write_params(g, &refs, &theta, wbits);
+        let fwd = FloatPlan::compile_unfused(g).context("compiling forward plan")?;
+        let flayout = fwd.layout(cfg.batch)?;
+        let (x, labels) = data.batch(cfg.batch);
+        let (logits, tape) =
+            fwd.execute_checkpointed(&flayout, &mut arena, &x, bwd.tape_mask());
+        let (loss, seed) = softmax_xent(&logits, &labels);
+        let grads = bwd.execute(g, &blayout, &mut arena, &tape, &seed);
+        let lr = effective_lr(cfg, step);
+        sgd_step(
+            &mut theta,
+            &grads.gather(&refs),
+            opt,
+            lr,
+            cfg.momentum,
+            cfg.weight_decay,
+            &decay,
+        );
+        clamp_pact(&refs, &mut theta);
+        report.losses.push(loss);
+        report.steps += 1;
+        if cfg.log_every > 0 && step % cfg.log_every == 0 {
+            eprintln!("[{tag} step {step:4}] loss = {loss:.4} lr = {lr:.4}");
+        }
+    }
+    grad::scatter_params(g, &refs, &theta);
+    Ok(report)
+}
+
+/// Read trained parameters back from a graph built by
+/// [`SynthNet::to_graph`] into the net's fields. BN running stats (μ, σ²)
+/// are frozen during native training and stay untouched.
+fn read_back(net: &mut SynthNet, g: &Graph) {
+    let (mut ci, mut bi, mut ai) = (0usize, 0usize, 0usize);
+    for nd in &g.nodes {
+        match &nd.op {
+            Op::Conv2d { w, .. } => {
+                net.convs[ci].0 = w.clone();
+                ci += 1;
+            }
+            Op::BatchNorm { bn } => {
+                net.convs[bi].1 = bn.gamma.clone();
+                net.convs[bi].2 = bn.beta.clone();
+                bi += 1;
+            }
+            Op::PactAct { beta, .. } => {
+                net.act_betas[ai] = *beta;
+                ai += 1;
+            }
+            Op::Linear { w, bias } => {
+                net.fc_w = w.clone();
+                if let Some(b) = bias {
+                    net.fc_b = b.clone();
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Native FullPrecision training (ReLU graph) — the no-PJRT counterpart
+/// of the artifact-driven `train_fp`.
+pub fn train_fp(
+    net: &mut SynthNet,
+    data: &mut SynthDigits,
+    cfg: &TrainConfig,
+    opt: &mut OptState,
+) -> Result<TrainReport> {
+    let mut g = net.to_fp_graph();
+    let report = train_graph(&mut g, data, cfg, None, opt, "fp ")?;
+    read_back(net, &g);
+    Ok(report)
+}
+
+/// Native QAT fine-tune (paper sec. 2.2): PACT activations at `abits`
+/// with learned clips, weights straight-through-estimated at `wbits`.
+pub fn train_fq(
+    net: &mut SynthNet,
+    data: &mut SynthDigits,
+    wbits: u32,
+    abits: u32,
+    cfg: &TrainConfig,
+    opt: &mut OptState,
+) -> Result<TrainReport> {
+    let mut g = net.to_pact_graph(abits);
+    let report = train_graph(&mut g, data, cfg, Some(wbits), opt, &format!("fq{wbits}"))?;
+    read_back(net, &g);
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn sgd_step_matches_hand_calc() {
+        let mut theta = vec![1.0, 2.0];
+        let mut st = OptState::default();
+        let decay = vec![true, false];
+        sgd_step(&mut theta, &[0.5, -1.0], &mut st, 0.1, 0.9, 0.01, &decay);
+        // v0 = 0.5 + 0.01*1.0 = 0.51; v1 = -1.0 (no decay)
+        assert!((theta[0] - (1.0 - 0.1 * 0.51)).abs() < 1e-12);
+        assert!((theta[1] - (2.0 + 0.1)).abs() < 1e-12);
+        sgd_step(&mut theta, &[0.0, 0.0], &mut st, 0.1, 0.9, 0.0, &decay);
+        // pure momentum carry: v *= 0.9
+        assert!((st.v[0] - 0.9 * 0.51).abs() < 1e-12);
+        assert_eq!(st.step, 2);
+    }
+
+    #[test]
+    fn softmax_xent_uniform_and_onehot() {
+        let logits = Tensor::from_vec(&[1, 2], vec![0.0, 0.0]);
+        let (loss, seed) = softmax_xent(&logits, &[0]);
+        assert!((loss - (2f64).ln()).abs() < 1e-6);
+        assert!((seed.data()[0] + 0.5).abs() < 1e-6);
+        assert!((seed.data()[1] - 0.5).abs() < 1e-6);
+        // seed rows always sum to zero (softmax sums to 1)
+        let logits = Tensor::from_vec(&[2, 3], vec![1.0, -2.0, 0.5, 3.0, 3.0, -1.0]);
+        let (_, seed) = softmax_xent(&logits, &[2, 0]);
+        for i in 0..2 {
+            let s: f32 = seed.data()[i * 3..(i + 1) * 3].iter().sum();
+            assert!(s.abs() < 1e-6, "row {i} seed sums to {s}");
+        }
+    }
+
+    #[test]
+    fn decay_mask_marks_weights_only() {
+        let mut rng = Rng::new(5);
+        let net = SynthNet::init(&mut rng);
+        let g = net.to_pact_graph(8);
+        let refs = grad::param_refs(&g);
+        let mask = decay_mask(&refs);
+        assert_eq!(mask.len(), grad::param_len(&refs));
+        let mut off = 0;
+        for r in &refs {
+            let is_w = matches!(r.kind, ParamKind::Weight);
+            for &m in &mask[off..off + r.len] {
+                assert_eq!(m, is_w);
+            }
+            off += r.len;
+        }
+    }
+
+    #[test]
+    fn opt_state_roundtrips_through_checkpoint() {
+        let mut ck = Checkpoint::default();
+        let st = OptState { v: vec![0.25, -1.5, 3.0], step: 17 };
+        st.save(&mut ck);
+        let back = OptState::load(&ck);
+        assert_eq!(back.v, st.v);
+        assert_eq!(back.step, 17);
+        // missing keys -> fresh optimizer
+        let fresh = OptState::load(&Checkpoint::default());
+        assert!(fresh.v.is_empty());
+        assert_eq!(fresh.step, 0);
+    }
+
+    #[test]
+    fn native_fp_training_reduces_loss() {
+        let mut rng = Rng::new(41);
+        let mut net = SynthNet::init(&mut rng);
+        let mut data = SynthDigits::new(41);
+        let cfg = TrainConfig {
+            steps: 30,
+            lr: 0.1,
+            lr_decay: false,
+            seed: 41,
+            log_every: 0,
+            batch: 16,
+            ..TrainConfig::default()
+        };
+        let mut opt = OptState::default();
+        let rep = train_fp(&mut net, &mut data, &cfg, &mut opt).unwrap();
+        let (head, tail) = rep.head_tail(5);
+        assert!(tail < head, "native FP loss did not decrease: {head:.3} -> {tail:.3}");
+        assert_eq!(opt.step, 30);
+    }
+
+    #[test]
+    fn native_fq_trains_clips_and_keeps_float_masters() {
+        let mut rng = Rng::new(42);
+        let mut net = SynthNet::init(&mut rng);
+        // sane clips to start from (init betas may be arbitrary)
+        net.act_betas = vec![4.0, 4.0, 4.0];
+        let mut data = SynthDigits::new(42);
+        let betas_before = net.act_betas.clone();
+        let cfg = TrainConfig {
+            steps: 20,
+            lr: 0.05,
+            lr_decay: false,
+            seed: 42,
+            log_every: 0,
+            batch: 16,
+            ..TrainConfig::default()
+        };
+        let mut opt = OptState::default();
+        let rep = train_fq(&mut net, &mut data, 4, 4, &cfg, &mut opt).unwrap();
+        assert!(rep.final_loss().is_finite());
+        assert_ne!(betas_before, net.act_betas, "PACT clips were not trained");
+        // masters stay off the 4-bit grid: with beta = max|w| the grid
+        // has 16 points; 72 conv-1 weights all landing on it exactly
+        // would mean we stored the hardened copies by mistake.
+        let w = &net.convs[0].0;
+        let beta = crate::quant::max_abs(w);
+        let spec = QuantSpec::weight(beta, 4);
+        let off_grid = w
+            .data()
+            .iter()
+            .filter(|&&v| (v as f64 - spec.fake_quantize(v as f64)).abs() > 1e-9)
+            .count();
+        assert!(off_grid > 0, "trained weights collapsed onto the quantized grid");
+    }
+}

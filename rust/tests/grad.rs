@@ -1,0 +1,261 @@
+//! Finite-difference validation of the backward-plan compiler: for
+//! randomized small float graphs, the analytic parameter gradients from
+//! `BackwardPlan` must match central differences of the scalar loss
+//! L = <p, y(θ)> (p a fixed random projection of the network output)
+//! within a relative-error bound.
+//!
+//! ReLU and MaxPool are only piecewise differentiable: a component whose
+//! one-sided differences disagree has a kink inside [θ−h, θ+h] and is
+//! skipped, but a minimum fraction of components must survive for a
+//! check to count. PACT's staircase forward is *not* FD-testable (its
+//! gradient is the STE by construction) — its analytic gradients are
+//! unit-tested in `engine::backward` instead.
+
+use nemo::engine::{BackwardPlan, FloatArena, FloatEngine, FloatPlan};
+use nemo::graph::grad::{gather_params, param_refs, scatter_params};
+use nemo::graph::{Graph, Op};
+use nemo::quant::bn::BnParams;
+use nemo::tensor::{Tensor, TensorF};
+use nemo::util::rng::Rng;
+
+fn rand_w(rng: &mut Rng, shape: &[usize]) -> TensorF {
+    let n: usize = shape.iter().product();
+    TensorF::from_vec(shape, (0..n).map(|_| rng.normal(0.0, 0.5) as f32).collect())
+}
+
+fn rand_bias(rng: &mut Rng, n: usize) -> Vec<f64> {
+    (0..n).map(|_| rng.normal(0.0, 0.2)).collect()
+}
+
+fn rand_bn(rng: &mut Rng, c: usize) -> BnParams {
+    BnParams {
+        gamma: (0..c).map(|_| rng.uniform(0.5, 1.5)).collect(),
+        sigma: (0..c).map(|_| rng.uniform(0.7, 1.3)).collect(),
+        beta: (0..c).map(|_| rng.normal(0.0, 0.1)).collect(),
+        mu: (0..c).map(|_| rng.normal(0.0, 0.1)).collect(),
+    }
+}
+
+fn rand_x(rng: &mut Rng, shape: &[usize]) -> TensorF {
+    let n: usize = shape.iter().product();
+    TensorF::from_vec(shape, (0..n).map(|_| rng.uniform(0.0, 1.0) as f32).collect())
+}
+
+/// L = <p, y(θ)> via the (unfused, always-available) float interpreter.
+fn loss(g: &Graph, x: &TensorF, p: &[f64]) -> f64 {
+    let y = FloatEngine::new().run(g, x);
+    y.data().iter().zip(p).map(|(&v, &pv)| v as f64 * pv).sum()
+}
+
+/// Flat analytic parameter gradients of L = <p, y(θ)> from the backward
+/// plan (seed dL/dy = p).
+fn analytic_grads(g: &Graph, x: &TensorF, p: &[f64]) -> Vec<f64> {
+    let batch = x.shape()[0];
+    let fwd = FloatPlan::compile_unfused(g).unwrap();
+    let flayout = fwd.layout(batch).unwrap();
+    let bwd = BackwardPlan::compile(g).unwrap();
+    let blayout = bwd.layout(g, batch).unwrap();
+    let mut arena = FloatArena::new();
+    let (out, tape) = fwd.execute_checkpointed(&flayout, &mut arena, x, bwd.tape_mask());
+    let seed = Tensor::from_vec(out.shape(), p.iter().map(|&v| v as f32).collect());
+    let grads = bwd.execute(g, &blayout, &mut arena, &tape, &seed);
+    grads.gather(&param_refs(g))
+}
+
+/// Central-difference check of every (or a sampled subset of) flat
+/// parameter component against the analytic gradient.
+fn check_fd(g: &mut Graph, x: &TensorF, seed: u64) {
+    g.validate().unwrap();
+    let mut rng = Rng::new(seed);
+    let y0 = FloatEngine::new().run(g, x);
+    let p: Vec<f64> = (0..y0.len()).map(|_| rng.normal(0.0, 1.0)).collect();
+    let ga = analytic_grads(g, x, &p);
+    let refs = param_refs(g);
+    let theta0 = gather_params(g, &refs);
+    let n = theta0.len();
+    assert_eq!(ga.len(), n);
+    let idxs: Vec<usize> = if n <= 80 {
+        (0..n).collect()
+    } else {
+        (0..80).map(|_| rng.int(0, n as i64) as usize).collect()
+    };
+    let l0 = loss(g, x, &p);
+    let mut checked = 0usize;
+    for &i in &idxs {
+        // h scaled to the parameter; large enough to stay above the f32
+        // forward's rounding noise, small enough for O(h^2) curvature.
+        let h = 5e-3 * theta0[i].abs().max(1.0);
+        let mut th = theta0.clone();
+        th[i] = theta0[i] + h;
+        scatter_params(g, &refs, &th);
+        let lp = loss(g, x, &p);
+        th[i] = theta0[i] - h;
+        scatter_params(g, &refs, &th);
+        let lm = loss(g, x, &p);
+        th[i] = theta0[i];
+        scatter_params(g, &refs, &th);
+        // disagreeing one-sided differences => a ReLU/MaxPool kink (or
+        // a max-pool argmax flip) inside the stencil: skip the component
+        let d_plus = (lp - l0) / h;
+        let d_minus = (l0 - lm) / h;
+        let kink_scale = d_plus.abs().max(d_minus.abs()).max(1.0);
+        if (d_plus - d_minus).abs() > 0.02 * kink_scale {
+            continue;
+        }
+        checked += 1;
+        let central = (lp - lm) / (2.0 * h);
+        let err = (central - ga[i]).abs();
+        // 2% relative, plus the worst-case residual of a kink small
+        // enough to pass the filter (|d+ − d−|/2 ≤ 0.01·kink_scale) and
+        // the f32 forward's rounding noise.
+        let tol = 2e-2 * central.abs().max(ga[i].abs()) + 0.012 * kink_scale;
+        assert!(
+            err <= tol,
+            "seed {seed} component {i}: analytic {} vs FD {central} (err {err:.3e} > tol {tol:.3e})",
+            ga[i]
+        );
+    }
+    // the kink filter must not hollow the test out
+    assert!(
+        checked * 3 >= idxs.len() * 2,
+        "seed {seed}: only {checked}/{} components were smooth enough to check",
+        idxs.len()
+    );
+}
+
+/// conv(+bias) -> bn -> relu -> gap -> fc(+bias) on a 6x6 input.
+fn conv_bn_relu_gap_fc(rng: &mut Rng) -> (Graph, TensorF) {
+    let mut g = Graph::new(1.0 / 255.0);
+    let x = g.push("in", Op::Input { shape: vec![1, 6, 6] }, &[]);
+    let w = rand_w(rng, &[4, 1, 3, 3]);
+    let bias = Some(rand_bias(rng, 4));
+    let c = g.push("conv", Op::Conv2d { w, bias, stride: 1, pad: 1 }, &[x]);
+    let b = g.push("bn", Op::BatchNorm { bn: rand_bn(rng, 4) }, &[c]);
+    let a = g.push("act", Op::ReLU, &[b]);
+    let gp = g.push("gap", Op::GlobalAvgPool, &[a]);
+    let wf = rand_w(rng, &[4, 3]);
+    g.push("fc", Op::Linear { w: wf, bias: Some(rand_bias(rng, 3)) }, &[gp]);
+    (g, rand_x(rng, &[2, 1, 6, 6]))
+}
+
+/// Flat-input MLP: linear -> relu -> linear (exercises the Input-node
+/// tape entry feeding a Linear weight gradient directly).
+fn mlp(rng: &mut Rng) -> (Graph, TensorF) {
+    let mut g = Graph::new(1.0 / 255.0);
+    let x = g.push("in", Op::Input { shape: vec![5] }, &[]);
+    let w1 = rand_w(rng, &[5, 7]);
+    let l1 = g.push("fc1", Op::Linear { w: w1, bias: Some(rand_bias(rng, 7)) }, &[x]);
+    let a = g.push("act", Op::ReLU, &[l1]);
+    let w2 = rand_w(rng, &[7, 4]);
+    g.push("fc2", Op::Linear { w: w2, bias: None }, &[a]);
+    (g, rand_x(rng, &[3, 5]))
+}
+
+/// Two conv stages with max pooling, a strided conv, and a flatten.
+fn conv_pool_conv_flatten_fc(rng: &mut Rng) -> (Graph, TensorF) {
+    let mut g = Graph::new(1.0 / 255.0);
+    let x = g.push("in", Op::Input { shape: vec![1, 8, 8] }, &[]);
+    let w1 = rand_w(rng, &[3, 1, 3, 3]);
+    let c1 = g.push("c1", Op::Conv2d { w: w1, bias: None, stride: 1, pad: 1 }, &[x]);
+    let a1 = g.push("a1", Op::ReLU, &[c1]);
+    let mp = g.push("mp", Op::MaxPool { k: 2 }, &[a1]);
+    let w2 = rand_w(rng, &[4, 3, 3, 3]);
+    let c2 = g.push("c2", Op::Conv2d { w: w2, bias: None, stride: 2, pad: 1 }, &[mp]);
+    let b2 = g.push("bn2", Op::BatchNorm { bn: rand_bn(rng, 4) }, &[c2]);
+    let a2 = g.push("a2", Op::ReLU, &[b2]);
+    let fl = g.push("fl", Op::Flatten, &[a2]);
+    let wf = rand_w(rng, &[4 * 2 * 2, 3]);
+    g.push("fc", Op::Linear { w: wf, bias: Some(rand_bias(rng, 3)) }, &[fl]);
+    (g, rand_x(rng, &[2, 1, 8, 8]))
+}
+
+/// Residual: a branch point at an activation and an Add join
+/// (the fan-out > 1 accumulation path of the backward plan).
+fn residual_add(rng: &mut Rng) -> (Graph, TensorF) {
+    let mut g = Graph::new(1.0 / 255.0);
+    let x = g.push("in", Op::Input { shape: vec![1, 6, 6] }, &[]);
+    let w0 = rand_w(rng, &[3, 1, 3, 3]);
+    let c0 = g.push("c0", Op::Conv2d { w: w0, bias: None, stride: 1, pad: 1 }, &[x]);
+    let b0 = g.push("bn0", Op::BatchNorm { bn: rand_bn(rng, 3) }, &[c0]);
+    let a0 = g.push("a0", Op::ReLU, &[b0]);
+    let w1 = rand_w(rng, &[3, 3, 3, 3]);
+    let c1 = g.push("c1", Op::Conv2d { w: w1, bias: None, stride: 1, pad: 1 }, &[a0]);
+    let b1 = g.push("bn1", Op::BatchNorm { bn: rand_bn(rng, 3) }, &[c1]);
+    let a1 = g.push("a1", Op::ReLU, &[b1]);
+    let add = g.push("add", Op::Add, &[a0, a1]);
+    let a2 = g.push("a2", Op::ReLU, &[add]);
+    let gp = g.push("gap", Op::GlobalAvgPool, &[a2]);
+    let wf = rand_w(rng, &[3, 3]);
+    g.push("fc", Op::Linear { w: wf, bias: None }, &[gp]);
+    (g, rand_x(rng, &[2, 1, 6, 6]))
+}
+
+/// Average pooling (everywhere-differentiable pooling path).
+fn conv_avgpool_fc(rng: &mut Rng) -> (Graph, TensorF) {
+    let mut g = Graph::new(1.0 / 255.0);
+    let x = g.push("in", Op::Input { shape: vec![1, 8, 8] }, &[]);
+    let w1 = rand_w(rng, &[3, 1, 3, 3]);
+    let c1 = g.push("c1", Op::Conv2d { w: w1, bias: None, stride: 1, pad: 1 }, &[x]);
+    let b1 = g.push("bn1", Op::BatchNorm { bn: rand_bn(rng, 3) }, &[c1]);
+    let a1 = g.push("a1", Op::ReLU, &[b1]);
+    let ap = g.push("ap", Op::AvgPool { k: 2 }, &[a1]);
+    let fl = g.push("fl", Op::Flatten, &[ap]);
+    let wf = rand_w(rng, &[3 * 4 * 4, 2]);
+    g.push("fc", Op::Linear { w: wf, bias: Some(rand_bias(rng, 2)) }, &[fl]);
+    (g, rand_x(rng, &[2, 1, 8, 8]))
+}
+
+#[test]
+fn fd_conv_bn_relu_gap_fc() {
+    for seed in [11u64, 12, 13] {
+        let mut rng = Rng::new(seed);
+        let (mut g, x) = conv_bn_relu_gap_fc(&mut rng);
+        check_fd(&mut g, &x, seed);
+    }
+}
+
+#[test]
+fn fd_mlp() {
+    for seed in [21u64, 22, 23] {
+        let mut rng = Rng::new(seed);
+        let (mut g, x) = mlp(&mut rng);
+        check_fd(&mut g, &x, seed);
+    }
+}
+
+#[test]
+fn fd_conv_pool_conv_flatten_fc() {
+    for seed in [31u64, 32] {
+        let mut rng = Rng::new(seed);
+        let (mut g, x) = conv_pool_conv_flatten_fc(&mut rng);
+        check_fd(&mut g, &x, seed);
+    }
+}
+
+#[test]
+fn fd_residual_add() {
+    for seed in [41u64, 42] {
+        let mut rng = Rng::new(seed);
+        let (mut g, x) = residual_add(&mut rng);
+        check_fd(&mut g, &x, seed);
+    }
+}
+
+#[test]
+fn fd_conv_avgpool_fc() {
+    for seed in [51u64, 52] {
+        let mut rng = Rng::new(seed);
+        let (mut g, x) = conv_avgpool_fc(&mut rng);
+        check_fd(&mut g, &x, seed);
+    }
+}
+
+#[test]
+fn fd_synthnet_fp_graph_samples() {
+    // The real model, FD-checked on a sampled subset of its ~6k params.
+    let mut rng = Rng::new(61);
+    let net = nemo::model::synthnet::SynthNet::init(&mut rng);
+    let mut g = net.to_fp_graph();
+    let x = rand_x(&mut rng, &[2, 1, 16, 16]);
+    check_fd(&mut g, &x, 61);
+}

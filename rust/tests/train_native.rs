@@ -1,0 +1,154 @@
+//! End-to-end native training: `train::native` must learn without any
+//! PJRT runtime, resume from its own checkpoints, and its trained model
+//! must deploy (FQ -> QD -> ID) and serve bit-identically across a
+//! checkpoint save/load round-trip.
+
+use nemo::coordinator::{Server, ServerConfig};
+use nemo::data::SynthDigits;
+use nemo::io::Checkpoint;
+use nemo::model::synthnet::{SynthNet, EPS_IN};
+use nemo::network::{IntegerDeployable, Network};
+use nemo::quant::quantize_input;
+use nemo::train::native::{train_fp, train_fq, OptState};
+use nemo::train::{eval_float, eval_integer, TrainConfig};
+use nemo::transform::DeployOptions;
+use nemo::util::rng::Rng;
+
+fn cfg(steps: usize, lr: f64, seed: u64) -> TrainConfig {
+    TrainConfig {
+        steps,
+        lr,
+        lr_decay: true,
+        seed,
+        log_every: 0,
+        batch: 32,
+        ..TrainConfig::default()
+    }
+}
+
+fn deploy(net: &SynthNet) -> Network<IntegerDeployable> {
+    net.to_network(8).unwrap().deploy(DeployOptions::default()).unwrap().integerize()
+}
+
+fn tmp_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("nemo_train_native_{tag}_{}.json", std::process::id()))
+}
+
+#[test]
+fn native_training_is_deterministic() {
+    let run = || {
+        let mut rng = Rng::new(43);
+        let mut net = SynthNet::init(&mut rng);
+        let mut data = SynthDigits::new(43);
+        let mut opt = OptState::default();
+        let rep = train_fp(&mut net, &mut data, &cfg(12, 0.1, 43), &mut opt).unwrap();
+        (rep.losses, net.fc_w.data().to_vec())
+    };
+    let (l1, w1) = run();
+    let (l2, w2) = run();
+    assert_eq!(l1, l2, "loss curves diverge across identical runs");
+    assert_eq!(w1, w2, "weights diverge across identical runs");
+}
+
+#[test]
+fn checkpoint_resume_restores_model_and_optimizer() {
+    let mut rng = Rng::new(17);
+    let mut net = SynthNet::init(&mut rng);
+    let mut data = SynthDigits::new(17);
+    let mut opt = OptState::default();
+
+    // a monolithic 20-step run must be closely reproduced by 10 steps,
+    // save/load (model + opt.* keys), 10 more over the same data stream.
+    // lr_decay is off so both see the same LR sequence.
+    let mut c = cfg(10, 0.1, 17);
+    c.lr_decay = false;
+    let mut cf = cfg(20, 0.1, 17);
+    cf.lr_decay = false;
+    let mut net_ref = net.clone();
+    let mut data_ref = SynthDigits::new(17);
+    let mut opt_ref = OptState::default();
+    train_fp(&mut net_ref, &mut data_ref, &cf, &mut opt_ref).unwrap();
+
+    train_fp(&mut net, &mut data, &c, &mut opt).unwrap();
+    let path = tmp_path("resume");
+    let mut ck = net.to_checkpoint();
+    opt.save(&mut ck);
+    ck.save(&path).unwrap();
+
+    let ck2 = Checkpoint::load(&path).unwrap();
+    let mut net2 = SynthNet::from_checkpoint(&ck2).unwrap();
+    let mut opt2 = OptState::load(&ck2);
+    assert_eq!(opt2.step, 10);
+    assert_eq!(opt2.v, opt.v, "momentum buffer must survive the round-trip");
+    train_fp(&mut net2, &mut data, &c, &mut opt2).unwrap();
+    assert_eq!(opt2.step, 20);
+
+    // Weights cross the checkpoint boundary through the graph's f32
+    // storage, so the resumed leg restarts from f32-rounded masters —
+    // close to, but not bit-equal with, the monolithic f64 masters.
+    let max_diff = net2
+        .fc_w
+        .data()
+        .iter()
+        .zip(net_ref.fc_w.data())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_diff < 1e-3, "resumed run diverged: max |dw| = {max_diff:e}");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn native_train_deploy_serve_bit_identical_roundtrip() {
+    let mut rng = Rng::new(7);
+    let mut net = SynthNet::init(&mut rng);
+    let mut data = SynthDigits::new(7);
+    let mut opt = OptState::default();
+
+    // FP leg must learn
+    let rep = train_fp(&mut net, &mut data, &cfg(80, 0.1, 7), &mut opt).unwrap();
+    let (head, tail) = rep.head_tail(10);
+    assert!(tail < head - 0.1, "native FP training did not learn: {head:.3} -> {tail:.3}");
+
+    // calibrate clips from the trained net, then a short QAT leg
+    let fp = Network::from_graph(net.to_fp_graph()).unwrap();
+    let (cal_x, _) = data.batch(64);
+    net.act_betas = fp.calibrate_percentile(&[cal_x], 0.995);
+    let rep2 = train_fq(&mut net, &mut data, 8, 8, &cfg(30, 0.02, 7), &mut opt).unwrap();
+    assert!(rep2.final_loss().is_finite());
+
+    // the trained model beats chance on held-out data, in float and int
+    let (ex, el) = SynthDigits::eval_set(7, 256);
+    let acc = eval_float(&net.to_fp_graph(), &ex, &el);
+    assert!(acc > 0.2, "trained FP accuracy {acc:.3} is chance-level");
+    let nid = deploy(&net);
+    let id_acc = eval_integer(nid.int_graph(), &ex, &el, EPS_IN);
+    assert!(id_acc > 0.2, "deployed ID accuracy {id_acc:.3} is chance-level");
+
+    // checkpoint round-trip, deploy both, serve both: bit-identical
+    let path = tmp_path("deploy");
+    net.to_checkpoint().save(&path).unwrap();
+    let net2 = SynthNet::from_checkpoint(&Checkpoint::load(&path).unwrap()).unwrap();
+    let nid2 = deploy(&net2);
+
+    let exec1 = nid.to_shared_executor(8).unwrap();
+    let exec2 = nid2.to_shared_executor(8).unwrap();
+    let server = Server::builder()
+        .default_config(ServerConfig::default())
+        .model("orig", exec1)
+        .model("reloaded", exec2)
+        .start()
+        .unwrap();
+    let h = server.handle();
+    let mut data = SynthDigits::new(99);
+    for _ in 0..16 {
+        let (x, _) = data.batch(1);
+        let qx = quantize_input(&x, EPS_IN);
+        let a = h.infer("orig", qx.clone()).unwrap();
+        let b = h.infer("reloaded", qx.clone()).unwrap();
+        assert_eq!(a.data(), b.data(), "served logits differ across save/load");
+        let local = nid.run(&qx);
+        assert_eq!(a.data(), local.data(), "serving changed the local result");
+    }
+    server.stop();
+    let _ = std::fs::remove_file(&path);
+}

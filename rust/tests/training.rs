@@ -25,7 +25,14 @@ fn fp_training_reduces_loss() {
     let mut rng = Rng::new(41);
     let mut net = SynthNet::init(&mut rng);
     let mut data = SynthDigits::new(41);
-    let cfg = TrainConfig { steps: 60, lr: 0.2, lr_decay: false, seed: 41, log_every: 0 };
+    let cfg = TrainConfig {
+        steps: 60,
+        lr: 0.2,
+        lr_decay: false,
+        seed: 41,
+        log_every: 0,
+        ..TrainConfig::default()
+    };
     let rep = train_fp(&rt, &mut net, &mut data, &cfg).unwrap();
     let (head, tail) = rep.head_tail(10);
     assert!(
@@ -43,7 +50,14 @@ fn fq_training_reduces_loss_and_updates_betas() {
     let mut net = SynthNet::init(&mut rng);
     let mut data = SynthDigits::new(42);
     let betas_before = net.act_betas.clone();
-    let cfg = TrainConfig { steps: 60, lr: 0.1, lr_decay: false, seed: 42, log_every: 0 };
+    let cfg = TrainConfig {
+        steps: 60,
+        lr: 0.1,
+        lr_decay: false,
+        seed: 42,
+        log_every: 0,
+        ..TrainConfig::default()
+    };
     let rep = train_fq(&rt, &mut net, &mut data, 4, 4, &cfg).unwrap();
     let (head, tail) = rep.head_tail(10);
     assert!(
@@ -61,8 +75,14 @@ fn training_is_deterministic() {
         let mut rng = Rng::new(43);
         let mut net = SynthNet::init(&mut rng);
         let mut data = SynthDigits::new(43);
-        let cfg =
-            TrainConfig { steps: 12, lr: 0.1, lr_decay: true, seed: 43, log_every: 0 };
+        let cfg = TrainConfig {
+            steps: 12,
+            lr: 0.1,
+            lr_decay: true,
+            seed: 43,
+            log_every: 0,
+            ..TrainConfig::default()
+        };
         let rep = train_fp(&rt, &mut net, &mut data, &cfg).unwrap();
         (rep.losses, net.fc_w.data().to_vec())
     };
@@ -79,7 +99,14 @@ fn all_fq_bitwidth_artifacts_are_usable() {
         let mut rng = Rng::new(44);
         let mut net = SynthNet::init(&mut rng);
         let mut data = SynthDigits::new(44);
-        let cfg = TrainConfig { steps: 3, lr: 0.05, lr_decay: false, seed: 44, log_every: 0 };
+        let cfg = TrainConfig {
+            steps: 3,
+            lr: 0.05,
+            lr_decay: false,
+            seed: 44,
+            log_every: 0,
+            ..TrainConfig::default()
+        };
         let rep = train_fq(&rt, &mut net, &mut data, wb, ab, &cfg).unwrap();
         assert!(rep.final_loss().is_finite(), "w{wb}a{ab} diverged");
     }
