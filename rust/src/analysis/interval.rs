@@ -1,0 +1,267 @@
+//! Interval abstract domain over [`IntGraph`].
+//!
+//! One forward pass propagates a sound `[lo, hi]` over-approximation of
+//! every node's runtime values, seeded from the input `QuantSpec` grid
+//! and the *actual* weight/bias magnitudes (not worst-case precision
+//! classes). The graph is a DAG in topological order (`IntGraph::push`
+//! asserts forward references), so a single pass with no widening is
+//! exact for this domain.
+//!
+//! All arithmetic runs in `i128` and saturates into `i64` at the
+//! interval boundary, so adversarial weights cannot overflow the
+//! analysis itself — the rules in [`super`] then compare the intervals
+//! against the `i32` datapath the integer engine actually executes.
+
+use crate::graph::int::{IntGraph, IntOp};
+use crate::quant::bn::{BnQuant, Thresholds};
+use crate::quant::requant::Requant;
+use crate::tensor::QTensor;
+
+/// Inclusive integer interval. `lo <= hi` by construction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Interval {
+    pub lo: i64,
+    pub hi: i64,
+}
+
+impl Interval {
+    pub fn new(lo: i64, hi: i64) -> Interval {
+        debug_assert!(lo <= hi, "interval [{lo}, {hi}] is inverted");
+        Interval { lo, hi }
+    }
+
+    /// Interval spanning two (unordered) endpoint images.
+    pub fn of_endpoints(a: i64, b: i64) -> Interval {
+        Interval { lo: a.min(b), hi: a.max(b) }
+    }
+
+    pub fn contains(&self, v: i64) -> bool {
+        self.lo <= v && v <= self.hi
+    }
+
+    /// Does every value in the interval fit the i32 datapath?
+    pub fn fits_i32(&self) -> bool {
+        self.lo >= i32::MIN as i64 && self.hi <= i32::MAX as i64
+    }
+
+    /// Largest absolute value reachable in the interval.
+    pub fn max_abs(&self) -> i64 {
+        self.lo.saturating_abs().max(self.hi.saturating_abs())
+    }
+
+    /// Extend to include a value (conv zero-padding injects 0s).
+    fn including(self, v: i64) -> Interval {
+        Interval { lo: self.lo.min(v), hi: self.hi.max(v) }
+    }
+}
+
+fn sat64(v: i128) -> i64 {
+    v.clamp(i64::MIN as i128, i64::MAX as i128) as i64
+}
+
+/// Worst-case GEMM accumulator interval over input interval `x`: per
+/// output channel, sum per-weight extremes (the checker-side mirror of
+/// deploy's range analysis, in i128 so huge adversarial weights
+/// saturate instead of wrapping). Weight layout is the paper's Eq. 16
+/// matrix `[rows, C_out]`.
+pub(crate) fn gemm_range(wq: &QTensor, x: Interval, bias: Option<&[i64]>) -> Interval {
+    let wide = wq.widen();
+    let (rows, co) = (wide.shape()[0], wide.shape()[1]);
+    let mut worst_lo = 0i128;
+    let mut worst_hi = 0i128;
+    for oc in 0..co {
+        let mut lo = 0i128;
+        let mut hi = 0i128;
+        for r in 0..rows {
+            let w = wide.at2(r, oc) as i128;
+            let a = w * x.lo as i128;
+            let b = w * x.hi as i128;
+            lo += a.min(b);
+            hi += a.max(b);
+        }
+        if let Some(bq) = bias {
+            lo += bq[oc] as i128;
+            hi += bq[oc] as i128;
+        }
+        worst_lo = worst_lo.min(lo);
+        worst_hi = worst_hi.max(hi);
+    }
+    Interval { lo: sat64(worst_lo), hi: sat64(worst_hi) }
+}
+
+/// Per-channel BN image (Eq. 22): `kappa_q[c]*q + lambda_q[c]` is
+/// monotone per channel, so channel extremes at the input endpoints
+/// bound the whole tensor. Tighter than a symmetric `|kappa|max*|q|max`
+/// bound and still sound.
+fn bn_range(bn: &BnQuant, x: Interval) -> Interval {
+    let mut lo = i128::MAX;
+    let mut hi = i128::MIN;
+    for c in 0..bn.kappa_q.len() {
+        let k = bn.kappa_q[c] as i128;
+        let l = bn.lambda_q[c] as i128;
+        let a = k * x.lo as i128 + l;
+        let b = k * x.hi as i128 + l;
+        lo = lo.min(a.min(b));
+        hi = hi.max(a.max(b));
+    }
+    if lo > hi {
+        // no channels: identity-free degenerate op, keep the input range
+        return x;
+    }
+    Interval { lo: sat64(lo), hi: sat64(hi) }
+}
+
+/// Requant image (Eq. 11): `clip((m*q) >> d, lo, hi)` is monotone in q
+/// for fixed m (non-increasing when m < 0), so the two endpoint images
+/// bound the interval exactly.
+pub(crate) fn requant_range(rq: &Requant, x: Interval) -> Interval {
+    Interval::of_endpoints(rq.apply(x.lo), rq.apply(x.hi))
+}
+
+/// Pre-clip requant product `(m*q) >> d` in i128 — what the clamp in
+/// [`Requant::apply`] would see. Used by the saturation rule to prove
+/// the clip never engages on pure-rescale requants.
+pub(crate) fn requant_preclip(rq: &Requant, x: Interval) -> (i128, i128) {
+    let a = (rq.m as i128 * x.lo as i128) >> rq.d;
+    let b = (rq.m as i128 * x.hi as i128) >> rq.d;
+    (a.min(b), a.max(b))
+}
+
+/// Threshold-activation image (Eq. 19-20): the count of thresholds
+/// `<= q` is monotone in q per channel, so channel extremes at the
+/// input endpoints bound the output.
+fn thresh_range(th: &Thresholds, x: Interval) -> Interval {
+    if th.th.is_empty() {
+        return Interval::new(0, 0);
+    }
+    let mut lo = i64::MAX;
+    let mut hi = i64::MIN;
+    for c in 0..th.th.len() {
+        lo = lo.min(th.apply(c, x.lo));
+        hi = hi.max(th.apply(c, x.hi));
+    }
+    Interval { lo, hi }
+}
+
+/// Average-pool image (Eq. 25): the kernel sums k*k inputs into an i64
+/// accumulator and rescales `(m*acc) >> d` with `m = 2^d / k^2`. The
+/// rescale is monotone in acc (m >= 0), so the endpoint accumulators
+/// `k^2*lo` / `k^2*hi` bound the output.
+fn avgpool_range(k: usize, d: u32, x: Interval) -> Interval {
+    let k2 = (k * k) as i128;
+    if k2 == 0 {
+        return x;
+    }
+    let m = (1i128 << d.min(126)) / k2;
+    let a = sat64((m * k2 * x.lo as i128) >> d);
+    let b = sat64((m * k2 * x.hi as i128) >> d);
+    Interval::of_endpoints(a, b)
+}
+
+/// Add-with-requant image (Eq. 24): branch 0 is the reference space;
+/// each further branch contributes its requantized interval to the sum.
+/// Summation in i128, saturated into i64.
+fn add_range(intervals: &[Interval], inputs: &[usize], rqs: &[Requant]) -> Interval {
+    let rf = intervals[inputs[0]];
+    let mut lo = rf.lo as i128;
+    let mut hi = rf.hi as i128;
+    for (i, rq) in rqs.iter().enumerate() {
+        let b = requant_range(rq, intervals[inputs[i + 1]]);
+        lo += b.lo as i128;
+        hi += b.hi as i128;
+    }
+    Interval { lo: sat64(lo), hi: sat64(hi) }
+}
+
+/// One forward abstract-interpretation pass. Returns one interval per
+/// node, indexed by node id. Call only on a graph that passed
+/// [`IntGraph::validate`] — input ids are assumed in bounds and
+/// backward-pointing.
+pub fn infer_intervals(g: &IntGraph) -> Vec<Interval> {
+    let mut out: Vec<Interval> = Vec::with_capacity(g.nodes.len());
+    for nd in &g.nodes {
+        let in0 = nd.inputs.first().map(|&i| out[i]);
+        let iv = match &nd.op {
+            IntOp::Input { spec, .. } => Interval::new(spec.lo.min(spec.hi), spec.hi.max(spec.lo)),
+            IntOp::ConvInt { wq, bias_q, pad, .. } => {
+                // zero padding injects 0s into the conv's input window
+                let mut x = in0.expect("conv has an input");
+                if *pad > 0 {
+                    x = x.including(0);
+                }
+                gemm_range(wq, x, bias_q.as_deref())
+            }
+            IntOp::LinearInt { wq, bias_q } => {
+                gemm_range(wq, in0.expect("linear has an input"), bias_q.as_deref())
+            }
+            IntOp::IntBn { bn } => bn_range(bn, in0.expect("bn has an input")),
+            IntOp::RequantAct { rq } => requant_range(rq, in0.expect("requant has an input")),
+            IntOp::ThreshAct { th } => thresh_range(th, in0.expect("thresh has an input")),
+            IntOp::AvgPoolInt { k, d } => avgpool_range(*k, *d, in0.expect("pool has an input")),
+            IntOp::MaxPoolInt { .. } | IntOp::Flatten => in0.expect("op has an input"),
+            IntOp::AddRequant { rqs } => add_range(&out, &nd.inputs, rqs),
+        };
+        out.push(iv);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::TensorI;
+
+    fn rq(m: i64, d: u32, lo: i64, hi: i64) -> Requant {
+        Requant { m, d, lo, hi }
+    }
+
+    #[test]
+    fn endpoint_interval_is_unordered_safe() {
+        let iv = Interval::of_endpoints(5, -3);
+        assert_eq!((iv.lo, iv.hi), (-3, 5));
+        assert!(iv.contains(0) && !iv.contains(6));
+        assert_eq!(iv.max_abs(), 5);
+    }
+
+    #[test]
+    fn gemm_range_matches_hand_computation() {
+        // weights [[2], [-3]] over x in [0, 10]: lo = -30, hi = 20
+        let w = TensorI::from_vec(&[2, 1], vec![2, -3]);
+        let iv = gemm_range(&QTensor::I32(w), Interval::new(0, 10), Some(&[5]));
+        assert_eq!((iv.lo, iv.hi), (-25, 25));
+    }
+
+    #[test]
+    fn gemm_range_saturates_instead_of_wrapping() {
+        let w = TensorI::from_vec(&[4, 1], vec![i32::MAX; 4]);
+        let iv = gemm_range(&QTensor::I32(w), Interval::new(i64::MIN / 2, i64::MAX / 2), None);
+        assert_eq!((iv.lo, iv.hi), (i64::MIN, i64::MAX));
+    }
+
+    #[test]
+    fn requant_range_is_sound_for_negative_multipliers() {
+        // m < 0 flips monotonicity; endpoints must still bound the image
+        let r = rq(-3, 1, i64::MIN, i64::MAX);
+        let iv = requant_range(&r, Interval::new(-4, 10));
+        for q in -4..=10 {
+            assert!(iv.contains(r.apply(q)), "q={q} escaped {iv:?}");
+        }
+    }
+
+    #[test]
+    fn avgpool_range_brackets_the_kernel_arithmetic() {
+        // k=2, d=8: m = 256/4 = 64; acc in [4*lo, 4*hi]
+        let iv = avgpool_range(2, 8, Interval::new(-7, 13));
+        let m = 64i64;
+        assert_eq!(iv.lo, (m * 4 * -7) >> 8);
+        assert_eq!(iv.hi, (m * 4 * 13) >> 8);
+    }
+
+    #[test]
+    fn preclip_sees_through_the_clamp() {
+        let r = rq(1 << 20, 0, i64::MIN, i64::MAX);
+        let (lo, hi) = requant_preclip(&r, Interval::new(0, 1 << 20));
+        assert_eq!(lo, 0);
+        assert_eq!(hi, 1i128 << 40);
+    }
+}

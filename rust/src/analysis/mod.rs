@@ -1,0 +1,767 @@
+//! Static soundness verification of IntegerDeployable graphs
+//! (`nemo check`, DESIGN.md §Static-verification).
+//!
+//! [`check_graph`] runs an interval abstract interpretation
+//! ([`interval`]) over an [`IntGraph`] and proves — or refutes, with a
+//! node-attributed diagnostic — that the paper's integer-only pipeline
+//! claim holds for the *actual* weights and grids in the model, not
+//! just the worst case of each precision class:
+//!
+//! * every GEMM/BN/add accumulator fits the i32 datapath
+//!   ([`rules::ACC_OVERFLOW`]);
+//! * every requant respects the 1/η bound `d <= D_MAX`, `m >= 1`
+//!   (Eq. 13-14, [`rules::REQUANT_PARAMS`]) and pure-rescale requants
+//!   never reach their clamp ([`rules::REQUANT_SATURATION`]);
+//! * every `Precision` stamp contains its node's inferred interval
+//!   ([`rules::PRECISION_UNSOUND`]), with provably-loose stamps flagged
+//!   as missed packing ([`rules::PRECISION_LOOSE`]);
+//! * structural hygiene: dead nodes, unused weight tensors, and
+//!   bit-serial-eligible GEMMs left on the MAC path
+//!   ([`rules::DEAD_NODE`], [`rules::UNUSED_WEIGHTS`],
+//!   [`rules::BITSERIAL_MISSED`]).
+//!
+//! The verifier is wired in at three layers: `transform::deploy` hard-
+//! errors on unsound graphs it would otherwise emit, the artifact
+//! loaders re-check untrusted files under [`CheckMode`], and the
+//! `nemo check` CLI verb renders [`CheckReport`] for operators (human
+//! or `--json`).
+
+pub mod interval;
+
+use crate::engine::plan::IntPlan;
+use crate::graph::int::{IntGraph, IntOp};
+use crate::graph::NodeId;
+use crate::quant::requant::{Requant, D_MAX};
+use crate::quant::Precision;
+use crate::util::json::{obj, Value};
+
+pub use interval::{infer_intervals, Interval};
+
+/// Stable rule identifiers, in report order. The `check --json` schema
+/// emits a count per rule — every id, every time — so downstream
+/// tooling can key on them.
+pub mod rules {
+    /// Graph fails structural validation or plan compilation.
+    pub const GRAPH_STRUCTURE: &str = "graph-structure";
+    /// An accumulator/result interval escapes the i32 datapath.
+    pub const ACC_OVERFLOW: &str = "acc-overflow";
+    /// Requant shift/multiplier outside the paper's legal range.
+    pub const REQUANT_PARAMS: &str = "requant-params";
+    /// A pure-rescale requant can reach its saturating clamp.
+    pub const REQUANT_SATURATION: &str = "requant-saturation";
+    /// A precision stamp does not contain the inferred interval.
+    pub const PRECISION_UNSOUND: &str = "precision-unsound";
+    /// A stamp is provably wider than the interval needs (missed packing).
+    pub const PRECISION_LOOSE: &str = "precision-loose";
+    /// A node is unreachable from the graph output.
+    pub const DEAD_NODE: &str = "dead-node";
+    /// A dead GEMM node carries a weight tensor that is never read.
+    pub const UNUSED_WEIGHTS: &str = "unused-weights";
+    /// A bit-serial-eligible GEMM is routed to the MAC kernels.
+    pub const BITSERIAL_MISSED: &str = "bitserial-missed";
+
+    pub const ALL: [&str; 9] = [
+        GRAPH_STRUCTURE,
+        ACC_OVERFLOW,
+        REQUANT_PARAMS,
+        REQUANT_SATURATION,
+        PRECISION_UNSOUND,
+        PRECISION_LOOSE,
+        DEAD_NODE,
+        UNUSED_WEIGHTS,
+        BITSERIAL_MISSED,
+    ];
+}
+
+/// How much the artifact loaders trust a checksum-valid file.
+///
+/// * `Off` — structural decode + precision re-proof only (the historic
+///   contract).
+/// * `Warn` — run the verifier, print findings to stderr, load anyway.
+/// * `Strict` — any `Error`-severity finding rejects the artifact; a
+///   checksum-valid file with adversarial weights must not load.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum CheckMode {
+    Off,
+    #[default]
+    Warn,
+    Strict,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+impl Severity {
+    pub fn name(self) -> &'static str {
+        match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// One rule violation, attributed to a node where one exists.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub severity: Severity,
+    pub node: Option<NodeId>,
+    /// Node name (or a structural location) for human rendering.
+    pub name: String,
+    pub message: String,
+}
+
+/// The verifier's structured result: findings plus the per-node
+/// intervals the proofs rest on (indexed by node id; empty when the
+/// graph failed structural validation before inference ran).
+#[derive(Clone, Debug, Default)]
+pub struct CheckReport {
+    pub findings: Vec<Finding>,
+    pub intervals: Vec<Interval>,
+    pub nodes_checked: usize,
+}
+
+impl CheckReport {
+    pub fn errors(&self) -> usize {
+        self.findings.iter().filter(|f| f.severity == Severity::Error).count()
+    }
+
+    pub fn warnings(&self) -> usize {
+        self.findings.iter().filter(|f| f.severity == Severity::Warning).count()
+    }
+
+    /// No `Error`-severity finding — warnings do not affect soundness.
+    pub fn is_sound(&self) -> bool {
+        self.errors() == 0
+    }
+
+    pub fn first_error(&self) -> Option<&Finding> {
+        self.findings.iter().find(|f| f.severity == Severity::Error)
+    }
+
+    fn rule_count(&self, rule: &str) -> usize {
+        self.findings.iter().filter(|f| f.rule == rule).count()
+    }
+
+    /// One-line operator summary: rule pass count + finding totals
+    /// (`nemo info`, end of `nemo check` output).
+    pub fn summary_line(&self) -> String {
+        let violated = rules::ALL.iter().filter(|r| self.rule_count(r) > 0).count();
+        let verdict = if self.is_sound() { "sound" } else { "UNSOUND" };
+        format!(
+            "{verdict} — {}/{} rules pass, {} errors, {} warnings, {} nodes",
+            rules::ALL.len() - violated,
+            rules::ALL.len(),
+            self.errors(),
+            self.warnings(),
+            self.nodes_checked
+        )
+    }
+
+    /// Multi-line human rendering: one line per finding, errors first.
+    pub fn render_human(&self) -> String {
+        let mut lines: Vec<String> = Vec::new();
+        for sev in [Severity::Error, Severity::Warning] {
+            for f in self.findings.iter().filter(|f| f.severity == sev) {
+                let loc = match f.node {
+                    Some(id) => format!("node {id} '{}'", f.name),
+                    None => f.name.clone(),
+                };
+                lines.push(format!("{} [{}] {}: {}", sev.name(), f.rule, loc, f.message));
+            }
+        }
+        lines.join("\n")
+    }
+
+    /// Stable JSON rendering (`nemo check --json`). Schema:
+    /// `format`/`version` tags, finding list, a count for *every* rule
+    /// id, and the per-node intervals. Keys serialize alphabetically
+    /// (BTreeMap), so the byte layout is deterministic.
+    pub fn to_json(&self, source: &str) -> String {
+        let findings: Vec<Value> = self
+            .findings
+            .iter()
+            .map(|f| {
+                obj(vec![
+                    ("message", Value::Str(f.message.clone())),
+                    ("name", Value::Str(f.name.clone())),
+                    (
+                        "node",
+                        match f.node {
+                            Some(id) => Value::Int(id as i64),
+                            None => Value::Null,
+                        },
+                    ),
+                    ("rule", Value::Str(f.rule.to_string())),
+                    ("severity", Value::Str(f.severity.name().to_string())),
+                ])
+            })
+            .collect();
+        let rule_counts: Vec<Value> = rules::ALL
+            .iter()
+            .map(|r| {
+                obj(vec![
+                    ("id", Value::Str(r.to_string())),
+                    ("violations", Value::Int(self.rule_count(r) as i64)),
+                ])
+            })
+            .collect();
+        let intervals: Vec<Value> = self
+            .intervals
+            .iter()
+            .map(|iv| Value::Arr(vec![Value::Int(iv.lo), Value::Int(iv.hi)]))
+            .collect();
+        let doc = obj(vec![
+            ("errors", Value::Int(self.errors() as i64)),
+            ("findings", Value::Arr(findings)),
+            ("format", Value::Str("nemo-check-report".to_string())),
+            ("intervals", Value::Arr(intervals)),
+            ("nodes", Value::Int(self.nodes_checked as i64)),
+            ("rules", Value::Arr(rule_counts)),
+            ("source", Value::Str(source.to_string())),
+            ("version", Value::Int(1)),
+        ]);
+        crate::util::json::write(&doc)
+    }
+}
+
+/// Is this requant a pure rescale — a clip so wide (the full i32
+/// datapath or beyond) that the paper's semantics say the clamp must
+/// never engage? Activation requants clip *by design* ([0, 2^Q-1]) and
+/// are exempt from the saturation rule.
+fn is_pure_rescale(rq: &Requant) -> bool {
+    rq.lo <= i32::MIN as i64 && rq.hi >= i32::MAX as i64
+}
+
+fn check_requant_params(
+    findings: &mut Vec<Finding>,
+    node: NodeId,
+    name: &str,
+    what: &str,
+    rq: &Requant,
+) {
+    if rq.d > D_MAX {
+        findings.push(Finding {
+            rule: rules::REQUANT_PARAMS,
+            severity: Severity::Error,
+            node: Some(node),
+            name: name.to_string(),
+            message: format!(
+                "{what} shift d={} exceeds D_MAX={D_MAX} (paper 1/\u{3b7} bound, Eq. 14)",
+                rq.d
+            ),
+        });
+    }
+    if rq.m < 1 {
+        findings.push(Finding {
+            rule: rules::REQUANT_PARAMS,
+            severity: Severity::Error,
+            node: Some(node),
+            name: name.to_string(),
+            message: format!("{what} multiplier m={} < 1 collapses the grid (Eq. 13)", rq.m),
+        });
+    }
+}
+
+fn check_requant_saturation(
+    findings: &mut Vec<Finding>,
+    node: NodeId,
+    name: &str,
+    what: &str,
+    rq: &Requant,
+    x: Interval,
+) {
+    if !is_pure_rescale(rq) {
+        return;
+    }
+    let (lo, hi) = interval::requant_preclip(rq, x);
+    if lo < rq.lo as i128 || hi > rq.hi as i128 {
+        findings.push(Finding {
+            rule: rules::REQUANT_SATURATION,
+            severity: Severity::Error,
+            node: Some(node),
+            name: name.to_string(),
+            message: format!(
+                "{what} pre-clip product spans [{lo}, {hi}] — saturation at \
+                 [{}, {}] is reachable (Eq. 11)",
+                rq.lo, rq.hi
+            ),
+        });
+    }
+}
+
+/// Node ids reachable backward from the output.
+fn reachable_set(g: &IntGraph) -> Vec<bool> {
+    let mut seen = vec![false; g.nodes.len()];
+    let mut stack = vec![g.output];
+    while let Some(id) = stack.pop() {
+        if std::mem::replace(&mut seen[id], true) {
+            continue;
+        }
+        stack.extend(g.nodes[id].inputs.iter().copied());
+    }
+    seen
+}
+
+/// Run every rule over `g` and return the structured report. Never
+/// panics on malformed graphs: structural validation failures become a
+/// single [`rules::GRAPH_STRUCTURE`] error and inference is skipped.
+pub fn check_graph(g: &IntGraph) -> CheckReport {
+    if let Err(e) = g.validate() {
+        return CheckReport {
+            findings: vec![Finding {
+                rule: rules::GRAPH_STRUCTURE,
+                severity: Severity::Error,
+                node: None,
+                name: "graph".to_string(),
+                message: format!("structural validation failed: {e}"),
+            }],
+            intervals: Vec::new(),
+            nodes_checked: g.nodes.len(),
+        };
+    }
+
+    let intervals = infer_intervals(g);
+    let reachable = reachable_set(g);
+    let mut findings: Vec<Finding> = Vec::new();
+    let i32_cap = i32::MAX as i64;
+
+    for nd in &g.nodes {
+        let iv = intervals[nd.id];
+        let in0 = nd.inputs.first().map(|&i| intervals[i]);
+        let mut overflowed = false;
+        let overflow = |findings: &mut Vec<Finding>, detail: String| {
+            findings.push(Finding {
+                rule: rules::ACC_OVERFLOW,
+                severity: Severity::Error,
+                node: Some(nd.id),
+                name: nd.name.clone(),
+                message: detail,
+            });
+        };
+
+        match &nd.op {
+            IntOp::Input { .. } => {
+                if !iv.fits_i32() {
+                    overflowed = true;
+                    overflow(
+                        &mut findings,
+                        format!(
+                            "input grid [{}, {}] does not fit the i32 datapath",
+                            iv.lo, iv.hi
+                        ),
+                    );
+                }
+            }
+            IntOp::ConvInt { .. } | IntOp::LinearInt { .. } | IntOp::IntBn { .. } => {
+                if !iv.fits_i32() {
+                    overflowed = true;
+                    overflow(
+                        &mut findings,
+                        format!(
+                            "{} accumulator interval [{}, {}] exceeds i32 for the \
+                             actual weight magnitudes",
+                            nd.op.name(),
+                            iv.lo,
+                            iv.hi
+                        ),
+                    );
+                }
+            }
+            IntOp::RequantAct { rq } => {
+                let x = in0.expect("requant has an input");
+                check_requant_params(&mut findings, nd.id, &nd.name, "requant", rq);
+                check_requant_saturation(&mut findings, nd.id, &nd.name, "requant", rq, x);
+                if !iv.fits_i32() {
+                    // the interpreter casts rq.apply() straight to i32
+                    overflowed = true;
+                    overflow(
+                        &mut findings,
+                        format!("requant output [{}, {}] escapes i32", iv.lo, iv.hi),
+                    );
+                }
+            }
+            IntOp::ThreshAct { th } => {
+                if th.n_levels > i32_cap {
+                    overflowed = true;
+                    overflow(
+                        &mut findings,
+                        format!("{} threshold levels exceed i32", th.n_levels),
+                    );
+                }
+            }
+            IntOp::AvgPoolInt { k, d } => {
+                let x = in0.expect("pool has an input");
+                let acc = (x.max_abs() as i128) * (*k as i128) * (*k as i128);
+                if acc > i32_cap as i128 || !iv.fits_i32() {
+                    overflowed = true;
+                    overflow(
+                        &mut findings,
+                        format!(
+                            "avg-pool accumulator reaches {acc} over k={k} window \
+                             (input [{}, {}])",
+                            x.lo, x.hi
+                        ),
+                    );
+                }
+                if *d > D_MAX {
+                    findings.push(Finding {
+                        rule: rules::REQUANT_PARAMS,
+                        severity: Severity::Error,
+                        node: Some(nd.id),
+                        name: nd.name.clone(),
+                        message: format!(
+                            "avg-pool shift d={d} exceeds D_MAX={D_MAX} (Eq. 25)"
+                        ),
+                    });
+                }
+            }
+            IntOp::AddRequant { rqs } => {
+                // The engine narrows the running sum to i32 after every
+                // branch, so each partial-sum interval must fit — not
+                // just the final one.
+                let rf = intervals[nd.inputs[0]];
+                let (mut lo, mut hi) = (rf.lo as i128, rf.hi as i128);
+                let (mut env_lo, mut env_hi) = (lo, hi);
+                for (i, rq) in rqs.iter().enumerate() {
+                    let bx = intervals[nd.inputs[i + 1]];
+                    let what = format!("add branch {}", i + 1);
+                    check_requant_params(&mut findings, nd.id, &nd.name, &what, rq);
+                    check_requant_saturation(&mut findings, nd.id, &nd.name, &what, rq, bx);
+                    let b = interval::requant_range(rq, bx);
+                    lo += b.lo as i128;
+                    hi += b.hi as i128;
+                    env_lo = env_lo.min(lo);
+                    env_hi = env_hi.max(hi);
+                }
+                if env_lo < i32::MIN as i128 || env_hi > i32_cap as i128 {
+                    overflowed = true;
+                    overflow(
+                        &mut findings,
+                        format!(
+                            "add partial-sum envelope [{env_lo}, {env_hi}] escapes \
+                             the per-branch i32 narrowing"
+                        ),
+                    );
+                }
+            }
+            IntOp::MaxPoolInt { .. } | IntOp::Flatten => {}
+        }
+
+        // Precision stamps: the stamp must contain the inferred
+        // interval (skip nodes already reported as overflowing — the
+        // stamp is the least of their problems), and clipped ops whose
+        // interval provably fits a narrower class are missed packing.
+        if !overflowed && !nd.precision.contains(iv.lo, iv.hi) {
+            findings.push(Finding {
+                rule: rules::PRECISION_UNSOUND,
+                severity: Severity::Error,
+                node: Some(nd.id),
+                name: nd.name.clone(),
+                message: format!(
+                    "stamped {} but inferred interval [{}, {}] escapes it",
+                    nd.precision.name(),
+                    iv.lo,
+                    iv.hi
+                ),
+            });
+        } else if matches!(
+            nd.op,
+            IntOp::Input { .. } | IntOp::RequantAct { .. } | IntOp::ThreshAct { .. }
+        ) {
+            let tight = Precision::for_range(iv.lo, iv.hi);
+            if tight.bits() < nd.precision.bits() {
+                findings.push(Finding {
+                    rule: rules::PRECISION_LOOSE,
+                    severity: Severity::Warning,
+                    node: Some(nd.id),
+                    name: nd.name.clone(),
+                    message: format!(
+                        "stamped {} but interval [{}, {}] fits {} — missed packing",
+                        nd.precision.name(),
+                        iv.lo,
+                        iv.hi,
+                        tight.name()
+                    ),
+                });
+            }
+        }
+
+        if !reachable[nd.id] {
+            let gemm = matches!(nd.op, IntOp::ConvInt { .. } | IntOp::LinearInt { .. });
+            findings.push(Finding {
+                rule: if gemm { rules::UNUSED_WEIGHTS } else { rules::DEAD_NODE },
+                severity: Severity::Warning,
+                node: Some(nd.id),
+                name: nd.name.clone(),
+                message: if gemm {
+                    format!(
+                        "{} is unreachable from the output — its weight tensor is \
+                         never read",
+                        nd.op.name()
+                    )
+                } else {
+                    format!("{} is unreachable from the output", nd.op.name())
+                },
+            });
+        }
+    }
+
+    // Routing facts come from the compiled plan: a GEMM whose weights
+    // fit a few-bit grid and whose *interval* fits 1-2 unsigned bits
+    // should be on the bit-serial AND+popcount path.
+    match IntPlan::compile(g) {
+        Ok(plan) => {
+            for r in plan.gemm_routing() {
+                if r.bitserial {
+                    continue;
+                }
+                let Some(bits) = r.weight_bits else { continue };
+                if bits > 4 {
+                    continue;
+                }
+                let x = intervals[r.input_node];
+                if x.lo >= 0 && x.hi <= 3 {
+                    let nd = g.node(r.node);
+                    findings.push(Finding {
+                        rule: rules::BITSERIAL_MISSED,
+                        severity: Severity::Warning,
+                        node: Some(r.node),
+                        name: nd.name.clone(),
+                        message: format!(
+                            "weights fit {bits} bits and input interval [{}, {}] \
+                             fits {}, but the GEMM is routed to the MAC kernels \
+                             (input stamped {})",
+                            x.lo,
+                            x.hi,
+                            Precision::for_range(x.lo, x.hi).name(),
+                            r.input_precision.name()
+                        ),
+                    });
+                }
+            }
+        }
+        Err(e) => findings.push(Finding {
+            rule: rules::GRAPH_STRUCTURE,
+            severity: Severity::Error,
+            node: None,
+            name: "plan".to_string(),
+            message: format!("plan compilation failed: {e}"),
+        }),
+    }
+
+    CheckReport { findings, intervals, nodes_checked: g.nodes.len() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::int::IntNode;
+    use crate::quant::QuantSpec;
+    use crate::tensor::{QTensor, TensorI};
+
+    fn input_node(bits: u32) -> IntNode {
+        let spec = QuantSpec::activation(1.0, bits);
+        IntNode {
+            id: 0,
+            op: IntOp::Input { shape: vec![4], spec },
+            inputs: vec![],
+            name: "in".into(),
+            precision: Precision::of_spec(&spec),
+        }
+    }
+
+    fn linear(id: usize, input: usize, w: Vec<i32>, co: usize, prec: Precision) -> IntNode {
+        let rows = w.len() / co;
+        IntNode {
+            id,
+            op: IntOp::LinearInt {
+                wq: QTensor::I32(TensorI::from_vec(&[rows, co], w)),
+                bias_q: None,
+            },
+            inputs: vec![input],
+            name: format!("fc{id}"),
+            precision: prec,
+        }
+    }
+
+    fn graph(nodes: Vec<IntNode>, output: usize) -> IntGraph {
+        IntGraph { nodes, output, eps_out: 1.0 }
+    }
+
+    #[test]
+    fn clean_two_layer_graph_is_sound() {
+        let g = graph(
+            vec![
+                input_node(8),
+                linear(1, 0, vec![1, -2, 3, -4], 1, Precision::I32),
+                IntNode {
+                    id: 2,
+                    op: IntOp::RequantAct { rq: Requant { m: 128, d: 8, lo: 0, hi: 255 } },
+                    inputs: vec![1],
+                    name: "act".into(),
+                    precision: Precision::U8,
+                },
+            ],
+            2,
+        );
+        let r = check_graph(&g);
+        assert!(r.is_sound(), "unexpected findings: {}", r.render_human());
+        assert_eq!(r.nodes_checked, 3);
+        // intervals: fc in [-6*255, 4*255], act clipped into [0, 255]
+        assert_eq!(r.intervals[0], Interval::new(0, 255));
+        assert!(r.intervals[2].lo >= 0 && r.intervals[2].hi <= 255);
+    }
+
+    #[test]
+    fn huge_weights_trip_acc_overflow() {
+        let g = graph(
+            vec![input_node(8), linear(1, 0, vec![100_000_000; 4], 1, Precision::I32)],
+            1,
+        );
+        let r = check_graph(&g);
+        assert!(!r.is_sound());
+        assert_eq!(r.first_error().unwrap().rule, rules::ACC_OVERFLOW);
+        assert_eq!(r.first_error().unwrap().node, Some(1));
+    }
+
+    #[test]
+    fn oversized_shift_trips_requant_params() {
+        let g = graph(
+            vec![
+                input_node(8),
+                linear(1, 0, vec![1, 1, 1, 1], 1, Precision::I32),
+                IntNode {
+                    id: 2,
+                    op: IntOp::RequantAct {
+                        rq: Requant { m: 1 << 41, d: D_MAX + 10, lo: 0, hi: 255 },
+                    },
+                    inputs: vec![1],
+                    name: "act".into(),
+                    precision: Precision::U8,
+                },
+            ],
+            2,
+        );
+        let r = check_graph(&g);
+        assert_eq!(r.first_error().unwrap().rule, rules::REQUANT_PARAMS);
+    }
+
+    #[test]
+    fn reachable_wide_rescale_trips_saturation() {
+        // pure-rescale requant (full-i32 clip) whose product escapes i32
+        let g = graph(
+            vec![
+                input_node(8),
+                IntNode {
+                    id: 1,
+                    op: IntOp::AddRequant {
+                        rqs: vec![Requant {
+                            m: 1 << 30,
+                            d: 0,
+                            lo: i32::MIN as i64,
+                            hi: i32::MAX as i64,
+                        }],
+                    },
+                    inputs: vec![0, 0],
+                    name: "add".into(),
+                    precision: Precision::I32,
+                },
+            ],
+            1,
+        );
+        let r = check_graph(&g);
+        let saturation =
+            r.findings.iter().any(|f| f.rule == rules::REQUANT_SATURATION);
+        assert!(saturation, "findings: {}", r.render_human());
+    }
+
+    #[test]
+    fn activation_clips_are_exempt_from_saturation() {
+        let rq = Requant { m: 1 << 20, d: 4, lo: 0, hi: 255 };
+        assert!(!super::is_pure_rescale(&rq));
+    }
+
+    #[test]
+    fn dead_gemm_reports_unused_weights() {
+        let g = graph(
+            vec![
+                input_node(4),
+                linear(1, 0, vec![1, 2, -1, 2], 1, Precision::I32),
+                linear(2, 0, vec![3, 4, -3, 4], 1, Precision::I32),
+            ],
+            2,
+        );
+        let r = check_graph(&g);
+        assert!(r.is_sound());
+        let f = r.findings.iter().find(|f| f.rule == rules::UNUSED_WEIGHTS).unwrap();
+        assert_eq!(f.node, Some(1));
+        assert_eq!(f.severity, Severity::Warning);
+    }
+
+    #[test]
+    fn loose_requant_stamp_warns_missed_packing() {
+        // clip [0, 3] fits U2 but the node is stamped I32
+        let g = graph(
+            vec![
+                input_node(8),
+                linear(1, 0, vec![1, -1, 1, -1], 1, Precision::I32),
+                IntNode {
+                    id: 2,
+                    op: IntOp::RequantAct { rq: Requant { m: 1, d: 8, lo: 0, hi: 3 } },
+                    inputs: vec![1],
+                    name: "act".into(),
+                    precision: Precision::I32,
+                },
+            ],
+            2,
+        );
+        let r = check_graph(&g);
+        assert!(r.is_sound());
+        let f = r.findings.iter().find(|f| f.rule == rules::PRECISION_LOOSE).unwrap();
+        assert_eq!(f.node, Some(2));
+    }
+
+    #[test]
+    fn structural_failure_short_circuits() {
+        let g = graph(vec![], 0);
+        let r = check_graph(&g);
+        assert_eq!(r.findings.len(), 1);
+        assert_eq!(r.findings[0].rule, rules::GRAPH_STRUCTURE);
+        assert!(r.intervals.is_empty());
+    }
+
+    #[test]
+    fn json_schema_is_stable() {
+        let g = graph(
+            vec![input_node(8), linear(1, 0, vec![1, 2, 3, 4], 1, Precision::I32)],
+            1,
+        );
+        let text = check_graph(&g).to_json("m.nemo.json");
+        let v = crate::util::json::parse(&text).unwrap();
+        assert_eq!(v.get("format").unwrap().as_str().unwrap(), "nemo-check-report");
+        assert_eq!(v.get("version").unwrap().as_i64().unwrap(), 1);
+        assert_eq!(v.get("nodes").unwrap().as_i64().unwrap(), 2);
+        assert_eq!(v.get("errors").unwrap().as_i64().unwrap(), 0);
+        let rules_arr = v.get("rules").unwrap().as_arr().unwrap();
+        assert_eq!(rules_arr.len(), rules::ALL.len());
+        for (rv, id) in rules_arr.iter().zip(rules::ALL) {
+            assert_eq!(rv.get("id").unwrap().as_str().unwrap(), id);
+        }
+        assert_eq!(v.get("intervals").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn summary_line_counts_rules() {
+        let g = graph(
+            vec![input_node(8), linear(1, 0, vec![100_000_000; 4], 1, Precision::I32)],
+            1,
+        );
+        let line = check_graph(&g).summary_line();
+        assert!(line.starts_with("UNSOUND"), "{line}");
+        assert!(line.contains("8/9 rules pass"), "{line}");
+    }
+}

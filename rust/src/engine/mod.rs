@@ -29,4 +29,4 @@ pub mod plan;
 pub use backward::{BackwardPlan, BwdLayout};
 pub use float::FloatEngine;
 pub use integer::IntegerEngine;
-pub use plan::{FloatArena, FloatPlan, IntPlan, PackedArena, PlanError, PlanLayout};
+pub use plan::{FloatArena, FloatPlan, GemmRouting, IntPlan, PackedArena, PlanError, PlanLayout};

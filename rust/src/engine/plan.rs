@@ -572,6 +572,10 @@ pub struct IntStep {
     op: IntStepOp,
     inputs: Vec<StepId>,
     pub node: NodeId,
+    /// The *first* graph node of the step — the base op the epilogue
+    /// chain was fused onto (equals `node` for unfused steps). This is
+    /// the id the static checker attributes routing facts to.
+    pub base: NodeId,
     pub name: String,
 }
 
@@ -585,6 +589,25 @@ impl IntStep {
             _ => 0,
         }
     }
+}
+
+/// Routing facts for one GEMM step, exposed for the static checker
+/// (`nemo check`): graph-node attribution plus the kernel-path decision
+/// [`IntPlan::compile`] made for it.
+#[derive(Clone, Debug)]
+pub struct GemmRouting {
+    /// Graph node id of the conv/linear itself (the step's base node).
+    pub node: NodeId,
+    /// Graph node id whose output feeds the GEMM (anchor of the
+    /// producing step).
+    pub input_node: NodeId,
+    /// Storage precision stamped on that producer.
+    pub input_precision: Precision,
+    /// Bit width of the weight grid if it decomposes into bit-planes
+    /// (`None` when the weights do not fit the bit-plane builder).
+    pub weight_bits: Option<u32>,
+    /// Whether the bit-serial AND+popcount kernel was selected.
+    pub bitserial: bool,
 }
 
 /// A compiled integer-graph execution plan. Compile once per graph;
@@ -729,6 +752,7 @@ impl IntPlan {
                 op,
                 inputs,
                 node: anchor,
+                base: nd.id,
                 name: g.nodes[anchor].name.clone(),
             });
         }
@@ -786,6 +810,37 @@ impl IntPlan {
     /// packed path (diagnostics / bench).
     pub fn bitserial_steps(&self) -> usize {
         self.bit_planes.iter().filter(|p| p.is_some()).count()
+    }
+
+    /// Kernel-routing facts for every GEMM step — which graph node it
+    /// is, what feeds it, and whether the bit-serial path took it. The
+    /// static checker (`analysis::check_graph`) consumes these to flag
+    /// bit-serial-eligible GEMMs left on the MAC kernels; the routing
+    /// policy itself lives in [`Self::compile`] and is not duplicated
+    /// here.
+    pub fn gemm_routing(&self) -> Vec<GemmRouting> {
+        self.steps
+            .iter()
+            .enumerate()
+            .filter_map(|(i, st)| {
+                let wq = match &st.op {
+                    IntStepOp::Conv { wq, .. } | IntStepOp::Linear { wq, .. } => wq,
+                    _ => return None,
+                };
+                let wide = match wq {
+                    QTensor::I8(w) => w.map(|v| v as i32),
+                    QTensor::I32(w) => w.clone(),
+                    packed => packed.widen(),
+                };
+                Some(GemmRouting {
+                    node: st.base,
+                    input_node: self.steps[st.inputs[0]].node,
+                    input_precision: self.step_prec[st.inputs[0]],
+                    weight_bits: ops::BitPlanes::build(&wide).map(|p| p.bits()),
+                    bitserial: self.bit_planes[i].is_some(),
+                })
+            })
+            .collect()
     }
 
     /// Whether any step (or the input) packs below full i32 width — if

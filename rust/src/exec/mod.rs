@@ -279,10 +279,17 @@ impl NativeIntExecutor {
         max_batch: usize,
     ) -> Result<(Self, crate::io::artifact::ArtifactProvenance)> {
         let path = path.as_ref();
-        let (art, prov) = crate::io::DeployedArtifact::load_with_provenance(path)
-            .with_context(|| {
-                format!("loading deployed model artifact {}", path.display())
-            })?;
+        // Warn-mode static check: serving keeps loading (the decode
+        // layer already rejected malformed files) but any soundness
+        // finding lands on stderr for the operator. `nemo check
+        // --strict` / `load_checked(.., Strict)` is the hard gate.
+        let (art, prov) = crate::io::DeployedArtifact::load_with_provenance_checked(
+            path,
+            crate::analysis::CheckMode::Warn,
+        )
+        .with_context(|| {
+            format!("loading deployed model artifact {}", path.display())
+        })?;
         Ok((Self::new(art.into_int_graph(), max_batch)?, prov))
     }
 

@@ -51,6 +51,7 @@
 use std::path::Path;
 use std::sync::Arc;
 
+use crate::analysis::{CheckMode, Severity};
 use crate::graph::int::{IntGraph, IntOp};
 use crate::graph::shape::{infer_precision, ShapeError};
 use crate::graph::Graph;
@@ -125,6 +126,16 @@ pub enum ArtifactError {
     Binary(String),
     #[error("precision re-proof failed on load: {0}")]
     Precision(#[from] ShapeError),
+    #[error(
+        "artifact failed the static soundness check [{rule}] at node \
+         '{node}': {detail} (checksum-valid file, adversarial or corrupt \
+         model content)"
+    )]
+    Unsound {
+        rule: &'static str,
+        node: String,
+        detail: String,
+    },
 }
 
 /// Identity of a loaded artifact file, surfaced alongside the decoded
@@ -313,6 +324,72 @@ impl DeployedArtifact {
         mode: BinLoadMode,
     ) -> Result<(Self, ArtifactProvenance, BinLoadStats), ArtifactError> {
         load_binary_impl(path.as_ref(), mode)
+    }
+
+    /// [`Self::load`] followed by the static soundness verifier
+    /// (`analysis::check_graph`) under the given [`CheckMode`]: `Off`
+    /// keeps the historic decode-only contract, `Warn` prints findings
+    /// to stderr and loads anyway, `Strict` rejects on any
+    /// error-severity finding — the gate that keeps a checksum-valid
+    /// artifact with adversarial weights out of the engines.
+    pub fn load_checked(
+        path: impl AsRef<Path>,
+        mode: CheckMode,
+    ) -> Result<Self, ArtifactError> {
+        Self::load_with_provenance_checked(path, mode).map(|(art, _)| art)
+    }
+
+    /// [`Self::load_with_provenance`] plus the [`CheckMode`] gate of
+    /// [`Self::load_checked`].
+    pub fn load_with_provenance_checked(
+        path: impl AsRef<Path>,
+        mode: CheckMode,
+    ) -> Result<(Self, ArtifactProvenance), ArtifactError> {
+        let (art, prov) = Self::load_with_provenance(path)?;
+        art.run_check(mode, &prov.path)?;
+        Ok((art, prov))
+    }
+
+    /// [`Self::load_binary`] plus the [`CheckMode`] gate of
+    /// [`Self::load_checked`].
+    pub fn load_binary_checked(
+        path: impl AsRef<Path>,
+        mode: BinLoadMode,
+        check: CheckMode,
+    ) -> Result<(Self, ArtifactProvenance, BinLoadStats), ArtifactError> {
+        let (art, prov, stats) = load_binary_impl(path.as_ref(), mode)?;
+        art.run_check(check, &prov.path)?;
+        Ok((art, prov, stats))
+    }
+
+    /// Run the static verifier over the decoded graph and apply the
+    /// [`CheckMode`] policy (see DESIGN.md §Static-verification).
+    pub fn run_check(&self, mode: CheckMode, origin: &str) -> Result<(), ArtifactError> {
+        if mode == CheckMode::Off {
+            return Ok(());
+        }
+        let report = crate::analysis::check_graph(&self.graph);
+        for f in &report.findings {
+            if mode == CheckMode::Warn || f.severity != Severity::Error {
+                eprintln!(
+                    "nemo check [{origin}]: {} [{}] '{}': {}",
+                    f.severity.name(),
+                    f.rule,
+                    f.name,
+                    f.message
+                );
+            }
+        }
+        if mode == CheckMode::Strict {
+            if let Some(f) = report.first_error() {
+                return Err(ArtifactError::Unsound {
+                    rule: f.rule,
+                    node: f.name.clone(),
+                    detail: f.message.clone(),
+                });
+            }
+        }
+        Ok(())
     }
 
     /// Decode a parsed artifact document (the inverse of [`Self::to_json`]).

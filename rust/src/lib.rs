@@ -37,6 +37,11 @@
 //! * a QAT training driver ([`train`], feature `pjrt`) that runs the
 //!   compiled FakeQuantized train step — Python is never on the request
 //!   path;
+//! * a static soundness verifier ([`analysis`]): an interval abstract
+//!   interpreter over the integer graph that proves accumulators fit
+//!   the i32 datapath, requants never saturate, and precision stamps
+//!   hold — wired into deploy (hard gate), artifact load
+//!   (`CheckMode::{Off,Warn,Strict}`) and the `nemo check` CLI verb;
 //! * model zoo, synthetic dataset, checkpoint/manifest I/O
 //!   ([`model`], [`data`], [`io`]).
 //!
@@ -46,6 +51,13 @@
 //! See DESIGN.md for the paper-to-module map and the typestate pipeline
 //! diagram, and EXPERIMENTS.md for the reproduced experiment suite.
 
+// The crate's small unsafe surface (mmap views, packed-storage casts,
+// wire-format scratch buffers) is audited: every unsafe operation sits
+// in an explicit block with a `// SAFETY:` justification.
+#![deny(unsafe_op_in_unsafe_fn)]
+#![deny(clippy::undocumented_unsafe_blocks)]
+
+pub mod analysis;
 pub mod cli;
 pub mod coordinator;
 pub mod data;

@@ -22,6 +22,11 @@
 //!             ping / list / metrics / infer / swap / load / unload
 //!   validate  re-run the cross-language golden checks
 //!   info      list artifacts and platform info
+//!   check     statically verify deployment artifacts: interval
+//!             abstract interpretation proves accumulators fit the i32
+//!             datapath, requants cannot saturate and precision stamps
+//!             hold (`--json` for the machine-readable report,
+//!             `--strict` to fail on warnings too)
 //!
 //! `nemo <sub> --help-less`: flags are documented in README.md.
 
@@ -69,6 +74,7 @@ fn main() {
         "client" => cmd_client(&args),
         "validate" => cmd_validate(&args),
         "info" => cmd_info(&args),
+        "check" => cmd_check(&args),
         "" => {
             eprintln!("{USAGE}");
             std::process::exit(2);
@@ -84,7 +90,7 @@ fn main() {
     }
 }
 
-const USAGE: &str = "usage: nemo <train|deploy|infer|serve|client|validate|info> [--flags]
+const USAGE: &str = "usage: nemo <train|deploy|infer|serve|client|validate|info|check> [--flags]
   train    --steps N --fq-steps N --bits B --lr F --batch B --seed N --out ck.json
            --backend native|pjrt (native needs no artifacts) --resume ck.json (continue a run)
   deploy   --ckpt ck.json --bits B --thresholds --save m.nemo.json --save-bin m.nemob
@@ -100,7 +106,11 @@ const USAGE: &str = "usage: nemo <train|deploy|infer|serve|client|validate|info>
            swap/load --model name=m.nemo.json   metrics/unload --model NAME
   validate
   info     --model m.nemo.json|m.nemob  (repeatable: inspect artifacts without serving them;
-                                         .nemob additionally prints the weight section table)";
+                                         .nemob additionally prints the weight section table)
+  check    --model m.nemo.json|m.nemob  (repeatable: run the static soundness verifier; exits
+                                         nonzero on any error finding)
+           --json     (machine-readable nemo-check-report v1, one document per artifact)
+           --strict   (warnings also fail the check)";
 
 fn load_or_init_net(args: &Args, rng: &mut Rng) -> Result<SynthNet> {
     match args.str_opt("ckpt") {
@@ -825,6 +835,50 @@ fn cmd_info(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_check(args: &Args) -> Result<()> {
+    // `nemo check --model m.nemo.json [--model m.nemob ...]`: run the
+    // static soundness verifier (interval abstract interpretation,
+    // DESIGN.md §Static-verification) over each artifact. Exit status
+    // is the gate: nonzero when any artifact has an error finding (or,
+    // under --strict, any finding at all).
+    let models = args.str_all("model");
+    if models.is_empty() {
+        bail!("check: pass at least one --model m.nemo.json|m.nemob");
+    }
+    let as_json = args.bool("json");
+    let strict = args.bool("strict");
+    let mut errors = 0usize;
+    let mut warnings = 0usize;
+    for (i, spec) in models.iter().enumerate() {
+        let (_, path) = model_spec(spec);
+        let art = DeployedArtifact::load(&path)
+            .with_context(|| format!("loading deployment artifact {path}"))?;
+        let report = nemo::analysis::check_graph(&art.graph);
+        errors += report.errors();
+        warnings += report.warnings();
+        if as_json {
+            println!("{}", report.to_json(&path));
+        } else {
+            if i > 0 {
+                println!();
+            }
+            println!("check {path}");
+            let human = report.render_human();
+            if !human.is_empty() {
+                println!("{human}");
+            }
+            println!("  {}", report.summary_line());
+        }
+    }
+    if errors > 0 {
+        bail!("check failed: {errors} error(s), {warnings} warning(s)");
+    }
+    if strict && warnings > 0 {
+        bail!("check failed under --strict: {warnings} warning(s)");
+    }
+    Ok(())
+}
+
 /// Print everything an operator needs to know about a deployment
 /// artifact before routing traffic at it (ROADMAP "Artifact tooling").
 fn info_artifact(path: &str) -> Result<()> {
@@ -890,6 +944,9 @@ fn info_artifact(path: &str) -> Result<()> {
     for n in &art.graph.nodes {
         println!("    {:<16} {:<12} {:>9}", n.name, n.op.name(), n.precision.name());
     }
+    // One-line soundness verdict next to the section table — the full
+    // findings live under `nemo check --model`.
+    println!("  check: {}", nemo::analysis::check_graph(&art.graph).summary_line());
     if !art.layers.is_empty() {
         println!("  layers (requant params, paper sec. 3):");
         println!(

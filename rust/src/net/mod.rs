@@ -103,6 +103,9 @@ fn install_handlers() {
     }
     const SIGINT: i32 = 2;
     const SIGTERM: i32 = 15;
+    // SAFETY: signal(2) with a valid signal number and an async-signal-
+    // safe extern "C" handler that only stores to an atomic; installing
+    // it twice (idempotent Once guard above) would still be sound.
     unsafe {
         signal(SIGINT, on_signal);
         signal(SIGTERM, on_signal);

@@ -61,6 +61,8 @@ pub struct Executable {
 // drop (after worker threads have joined — the Runtime cache outlives all
 // workers). Concurrent `run()` only calls Execute, which is thread-safe.
 unsafe impl Send for Executable {}
+// SAFETY: see the Send justification above — concurrent shared access
+// only reaches Execute, which the PJRT C API declares thread-safe.
 unsafe impl Sync for Executable {}
 
 impl Executable {
@@ -112,9 +114,11 @@ pub struct Runtime {
     cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
 }
 
-// The xla PJRT CPU client is internally synchronized; executables are
-// immutable after compilation. We gate shared access through Arc anyway.
+// SAFETY: the xla PJRT CPU client is internally synchronized; executables
+// are immutable after compilation. We gate shared access through Arc anyway.
 unsafe impl Send for Runtime {}
+// SAFETY: same argument — the client synchronizes internally and the
+// executable cache sits behind a Mutex.
 unsafe impl Sync for Runtime {}
 
 impl Runtime {

@@ -835,6 +835,9 @@ mod tests {
     impl AlignedSrc {
         fn new(bytes: &[u8]) -> Self {
             let mut buf = vec![0u64; bytes.len().div_ceil(8)];
+            // SAFETY: `buf` holds at least `bytes.len()` bytes (rounded
+            // up to whole u64 words) and the two allocations are
+            // disjoint, so the nonoverlapping copy stays in bounds.
             unsafe {
                 std::ptr::copy_nonoverlapping(
                     bytes.as_ptr(),
@@ -848,6 +851,8 @@ mod tests {
 
     impl ByteSource for AlignedSrc {
         fn bytes(&self) -> &[u8] {
+            // SAFETY: the u64 buffer is fully initialized and `len` is
+            // no larger than its byte size by construction in `new`.
             unsafe { std::slice::from_raw_parts(self.buf.as_ptr().cast(), self.len) }
         }
     }

@@ -547,6 +547,22 @@ pub(crate) fn deploy_impl(
             node_eps[i] = node_eps[i - 1];
         }
     }
+    // Static soundness gate (DESIGN.md §Static-verification): the
+    // abstract interpreter re-proves from the emitted graph what the
+    // walk above derived incrementally. Its analysis is at least as
+    // tight as deploy's per-node ranges, so a clean deploy never trips
+    // it — but any future transform bug that emits an overflowing
+    // accumulator or a saturating requant becomes a hard error here
+    // instead of a silent wrap on the MCU datapath.
+    let report = crate::analysis::check_graph(&id);
+    if let Some(f) = report.first_error() {
+        return Err(TransformError::Unsound {
+            node: f.name.clone(),
+            rule: f.rule,
+            detail: f.message.clone(),
+        });
+    }
+
     Ok(Deployed {
         qd,
         id,
@@ -770,5 +786,22 @@ mod tests {
         // use wbits=16 -> |Q_w| up to 32767, acc ~ 4.8e9 > 2^31.
         let err = deploy_impl(&g, DeployOptions { wbits: 16, ..Default::default() });
         assert!(matches!(err, Err(TransformError::RangeOverflow { .. })));
+    }
+
+    #[test]
+    fn deployed_graphs_pass_the_static_checker() {
+        // The deploy-time soundness gate must be a no-op on graphs
+        // deploy itself emits — the checker's analysis is tighter than
+        // the walk's, so a clean deploy implies a clean report (both
+        // requant and threshold variants).
+        for use_thresholds in [false, true] {
+            let (_, dep, _) = pipeline(use_thresholds);
+            let report = crate::analysis::check_graph(&dep.id);
+            assert!(
+                report.is_sound(),
+                "deploy emitted an unsound graph: {}",
+                report.render_human()
+            );
+        }
     }
 }

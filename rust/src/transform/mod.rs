@@ -55,6 +55,12 @@ pub enum TransformError {
         qmin: i64,
         qmax: i64,
     },
+    #[error("statically unsound integer graph at '{node}' [{rule}]: {detail}")]
+    Unsound {
+        node: String,
+        rule: &'static str,
+        detail: String,
+    },
     #[error("unsupported op in {0} representation: {1}")]
     Unsupported(&'static str, &'static str),
     #[error("graph error: {0}")]

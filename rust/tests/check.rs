@@ -1,0 +1,371 @@
+//! Static-verifier acceptance suite (`nemo check`, DESIGN.md
+//! §Static-verification).
+//!
+//! Two halves:
+//!
+//! * **No false alarms, no false safety.** Every randomized
+//!   property-test graph that deploys cleanly must produce a zero-error
+//!   `CheckReport`, and the intervals the checker derives must contain
+//!   the observed runtime values of every node on randomized inputs —
+//!   the checker is sound against the actual integer engine, not just
+//!   against deploy's own range walk.
+//! * **Adversarial artifacts.** Hand-built artifacts with *valid*
+//!   checksums but hostile content — out-of-range weights, saturating
+//!   or illegal requant parameters, loose precision stamps — decode
+//!   fine under the historic contract but must be rejected (or flagged)
+//!   by `CheckMode::Strict`, with the specific expected rule id, on
+//!   BOTH the JSON and the `.nemob` binary loaders.
+
+use nemo::analysis::{check_graph, rules, CheckMode};
+use nemo::engine::IntegerEngine;
+use nemo::graph::int::{IntGraph, IntOp};
+use nemo::graph::{Graph, Op};
+use nemo::io::artifact::{ArtifactError, DeployedArtifact};
+use nemo::io::BinLoadMode;
+use nemo::network::{Network, StageMeta};
+use nemo::quant::bn::BnParams;
+use nemo::quant::requant::Requant;
+use nemo::quant::{quantize_input, QuantSpec};
+use nemo::tensor::{QTensor, Tensor, TensorF};
+use nemo::transform::DeployOptions;
+use nemo::util::prop::prop_check;
+use nemo::util::rng::Rng;
+
+fn rand_w(rng: &mut Rng, shape: &[usize], std: f64) -> TensorF {
+    let n: usize = shape.iter().product();
+    Tensor::from_vec(shape, (0..n).map(|_| rng.normal(0.0, std) as f32).collect())
+}
+
+fn rand_bn(rng: &mut Rng, c: usize) -> BnParams {
+    BnParams {
+        gamma: (0..c).map(|_| rng.uniform(0.3, 1.6)).collect(),
+        sigma: (0..c).map(|_| rng.uniform(0.3, 1.6)).collect(),
+        beta: (0..c).map(|_| rng.normal(0.0, 0.2)).collect(),
+        mu: (0..c).map(|_| rng.normal(0.0, 0.2)).collect(),
+    }
+}
+
+/// Random FullPrecision net (same generator family as tests/plan.rs):
+/// conv blocks with optional BN / residual Add / pooling, finished by
+/// GlobalAvgPool-or-Flatten + Linear.
+fn random_net(rng: &mut Rng) -> (Graph, usize) {
+    let mut g = Graph::new(1.0 / 255.0);
+    let mut c = rng.int(1, 3) as usize;
+    let mut h = 8usize;
+    let mut prev = g.push("in", Op::Input { shape: vec![c, h, h] }, &[]);
+    let blocks = rng.int(1, 3) as usize;
+    for b in 0..blocks {
+        let cout = rng.int(2, 6) as usize;
+        let k = if rng.int(0, 2) == 0 { 1 } else { 3 };
+        let pad = k / 2;
+        let stride = if h % 2 == 0 && rng.int(0, 3) == 0 { 2 } else { 1 };
+        let std = (0.8 / (c * k * k) as f64).sqrt();
+        let w = rand_w(rng, &[cout, c, k, k], std);
+        prev = g.push(&format!("c{b}"), Op::Conv2d { w, bias: None, stride, pad }, &[prev]);
+        h = (h + 2 * pad - k) / stride + 1;
+        c = cout;
+        if rng.int(0, 2) == 0 {
+            prev = g.push(&format!("bn{b}"), Op::BatchNorm { bn: rand_bn(rng, c) }, &[prev]);
+        }
+        prev = g.push(&format!("a{b}"), Op::ReLU, &[prev]);
+        if rng.int(0, 3) == 0 {
+            let std2 = (0.8 / (c * 9) as f64).sqrt();
+            let w2 = rand_w(rng, &[c, c, 3, 3], std2);
+            let cb = g.push(
+                &format!("rc{b}"),
+                Op::Conv2d { w: w2, bias: None, stride: 1, pad: 1 },
+                &[prev],
+            );
+            let bb = g.push(&format!("rbn{b}"), Op::BatchNorm { bn: rand_bn(rng, c) }, &[cb]);
+            let ab = g.push(&format!("ra{b}"), Op::ReLU, &[bb]);
+            let add = g.push(&format!("radd{b}"), Op::Add, &[prev, ab]);
+            prev = g.push(&format!("rpa{b}"), Op::ReLU, &[add]);
+        }
+        if h % 2 == 0 && h > 2 && rng.int(0, 2) == 0 {
+            let pool = if rng.int(0, 2) == 0 { Op::MaxPool { k: 2 } } else { Op::AvgPool { k: 2 } };
+            prev = g.push(&format!("p{b}"), pool, &[prev]);
+            h /= 2;
+        }
+    }
+    let classes = rng.int(2, 6) as usize;
+    let (head_in, head) = if rng.int(0, 2) == 0 {
+        (c, g.push("gap", Op::GlobalAvgPool, &[prev]))
+    } else {
+        (c * h * h, g.push("fl", Op::Flatten, &[prev]))
+    };
+    let wf = rand_w(rng, &[head_in, classes], (1.0 / head_in as f64).sqrt());
+    g.push("fc", Op::Linear { w: wf, bias: None }, &[head]);
+    let in_c = match &g.nodes[0].op {
+        Op::Input { shape } => shape[0],
+        _ => unreachable!(),
+    };
+    (g, in_c)
+}
+
+fn rand_input(rng: &mut Rng, b: usize, c: usize) -> TensorF {
+    Tensor::from_vec(
+        &[b, c, 8, 8],
+        (0..b * c * 64).map(|_| rng.uniform(0.0, 1.0) as f32).collect(),
+    )
+}
+
+#[test]
+fn deployed_nets_check_clean_and_intervals_bound_runtime() {
+    prop_check(15, |rng| {
+        let (g, in_c) = random_net(rng);
+        let b = rng.int(1, 4) as usize;
+        let x = rand_input(rng, b, in_c);
+        let fp = Network::from_graph(g).map_err(|e| e.to_string())?;
+        let betas = fp.calibrate(&[x.clone()]);
+        let abits = [1u32, 2, 4, 8][rng.int(0, 4) as usize];
+        let wbits = [4u32, 8][rng.int(0, 2) as usize];
+        let opts = DeployOptions {
+            wbits,
+            abits,
+            use_thresholds: rng.int(0, 2) == 0,
+            ..DeployOptions::default()
+        };
+        let dep = fp
+            .quantize_pact(wbits, abits, &betas)
+            .map_err(|e| e.to_string())?
+            .deploy(opts)
+            .map_err(|e| e.to_string())?
+            .integerize()
+            .into_deployed();
+
+        // Zero errors on any graph deploy accepted (warnings — loose
+        // stamps, missed bit-serial routing — are legitimate findings).
+        let report = check_graph(&dep.id);
+        if !report.is_sound() {
+            return Err(format!(
+                "deployed graph flagged unsound:\n{}",
+                report.render_human()
+            ));
+        }
+        if report.intervals.len() != dep.id.nodes.len() {
+            return Err("one interval per node expected".into());
+        }
+
+        // Soundness against the real engine: every value every node
+        // produces on this random input must lie inside its interval —
+        // no false "safe" verdicts.
+        let qx = quantize_input(&x, 1.0 / 255.0);
+        let trace = IntegerEngine::new().run_traced(&dep.id, &qx);
+        for (id, t) in trace.iter().enumerate() {
+            let iv = report.intervals[id];
+            for &v in t.data() {
+                if !iv.contains(v as i64) {
+                    return Err(format!(
+                        "node {id} ({}) produced {v} outside derived interval \
+                         [{}, {}]",
+                        dep.id.nodes[id].name, iv.lo, iv.hi
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Adversarial artifacts: checksum-valid, decode-valid, statically wrong.
+// ---------------------------------------------------------------------
+
+fn tmp_path(tag: &str, ext: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("nemo_check_{tag}_{}.{ext}", std::process::id()))
+}
+
+fn u8_spec() -> QuantSpec {
+    QuantSpec { eps: 1.0 / 255.0, lo: 0, hi: 255 }
+}
+
+/// Wrap a hand-built graph in a full artifact image (the pub-field
+/// escape hatch deliberately bypasses deploy — that is the point: these
+/// files could come from anywhere).
+fn artifact_of(graph: IntGraph) -> DeployedArtifact {
+    let n = graph.nodes.len();
+    DeployedArtifact {
+        graph,
+        layers: vec![],
+        node_eps: vec![1.0; n],
+        worst_case: vec![1],
+        meta: StageMeta::default(),
+    }
+}
+
+/// Save both encodings, assert the decode layer accepts them, and
+/// return the Strict-mode rejection rule of each loader.
+fn strict_verdicts(art: &DeployedArtifact, tag: &str) -> (Option<&'static str>, Option<&'static str>) {
+    let jp = tmp_path(tag, "nemo.json");
+    let bp = tmp_path(tag, "nemob");
+    art.save(&jp).expect("save json");
+    art.save_binary(&bp).expect("save binary");
+
+    // The historic contract still holds: checksum + structural decode
+    // pass, so Off-mode loads succeed on both forms.
+    DeployedArtifact::load_checked(&jp, CheckMode::Off).expect("json decodes");
+    DeployedArtifact::load_binary_checked(&bp, BinLoadMode::Auto, CheckMode::Off)
+        .expect("binary decodes");
+
+    let rule_of = |r: Result<DeployedArtifact, ArtifactError>| match r {
+        Ok(_) => None,
+        Err(ArtifactError::Unsound { rule, .. }) => Some(rule),
+        Err(e) => panic!("expected Unsound or success, got {e}"),
+    };
+    let jr = rule_of(DeployedArtifact::load_checked(&jp, CheckMode::Strict));
+    let br = rule_of(
+        DeployedArtifact::load_binary_checked(&bp, BinLoadMode::Auto, CheckMode::Strict)
+            .map(|(a, _, _)| a),
+    );
+    let _ = std::fs::remove_file(jp);
+    let _ = std::fs::remove_file(bp);
+    (jr, br)
+}
+
+#[test]
+fn out_of_range_weights_are_rejected_as_acc_overflow() {
+    // 3x3 conv over a u8 input with 5e6-magnitude i32 weights: fan-in
+    // 9 * 5e6 * 255 ~ 1.1e10 >> i32::MAX. Every stamp is "valid" (the
+    // accumulator is honestly I32), the checksum is honest — only the
+    // interval analysis sees the wrap coming.
+    let mut g = IntGraph::default();
+    let x = g.push("in", IntOp::Input { shape: vec![1, 4, 4], spec: u8_spec() }, &[]);
+    let wq: QTensor = Tensor::from_vec(&[9, 8], vec![5_000_000i32; 72]).into();
+    g.push(
+        "conv",
+        IntOp::ConvInt { wq, bias_q: None, cin: 1, kh: 3, kw: 3, stride: 1, pad: 1 },
+        &[x],
+    );
+    let (jr, br) = strict_verdicts(&artifact_of(g), "hugew");
+    assert_eq!(jr, Some(rules::ACC_OVERFLOW));
+    assert_eq!(br, Some(rules::ACC_OVERFLOW));
+}
+
+#[test]
+fn oversized_requant_shift_is_rejected_as_requant_params() {
+    // The decode layer accepts any d in 0..=63; the paper's 1/eta bound
+    // stops at D_MAX = 40. d = 50 must be a Strict-mode error.
+    let mut g = IntGraph::default();
+    let x = g.push("in", IntOp::Input { shape: vec![4], spec: u8_spec() }, &[]);
+    let wq: QTensor = Tensor::from_vec(&[4, 2], vec![1i32, -1, 2, -2, 1, 1, -1, 2]).into();
+    let l = g.push("fc", IntOp::LinearInt { wq, bias_q: None }, &[x]);
+    g.push(
+        "act",
+        IntOp::RequantAct { rq: Requant { m: 1 << 45, d: 50, lo: 0, hi: 255 } },
+        &[l],
+    );
+    let (jr, br) = strict_verdicts(&artifact_of(g), "bigd");
+    assert_eq!(jr, Some(rules::REQUANT_PARAMS));
+    assert_eq!(br, Some(rules::REQUANT_PARAMS));
+}
+
+#[test]
+fn saturating_wide_requant_is_rejected_as_requant_saturation() {
+    // An Add whose branch requant is a pure rescale (full-i32 clip, so
+    // clipping is semantically "never happens") but whose pre-clip
+    // product reaches 255 * 2^24 ~ 4.3e9: saturation is reachable, the
+    // engine would silently clamp-and-wrap.
+    let mut g = IntGraph::default();
+    let x = g.push("in", IntOp::Input { shape: vec![8], spec: u8_spec() }, &[]);
+    g.push(
+        "add",
+        IntOp::AddRequant {
+            rqs: vec![Requant { m: 1 << 24, d: 0, lo: i32::MIN as i64, hi: i32::MAX as i64 }],
+        },
+        &[x, x],
+    );
+    let (jr, br) = strict_verdicts(&artifact_of(g), "satrq");
+    assert_eq!(jr, Some(rules::REQUANT_SATURATION));
+    assert_eq!(br, Some(rules::REQUANT_SATURATION));
+}
+
+#[test]
+fn loose_precision_stamp_warns_but_still_loads_under_strict() {
+    // A requant clipped to [0, 3] (fits U2) stamped I32: the decode
+    // re-proof accepts wider-than-natural stamps, so only the checker
+    // notices the missed packing. Warning severity — Strict loads it.
+    let mut g = IntGraph::default();
+    let x = g.push("in", IntOp::Input { shape: vec![4], spec: u8_spec() }, &[]);
+    let wq: QTensor = Tensor::from_vec(&[4, 2], vec![1i32, -1, 1, -1, 2, -2, 2, -2]).into();
+    let l = g.push("fc", IntOp::LinearInt { wq, bias_q: None }, &[x]);
+    let act = g.push(
+        "act",
+        IntOp::RequantAct { rq: Requant { m: 1, d: 8, lo: 0, hi: 3 } },
+        &[l],
+    );
+    g.stamp_precision(act, nemo::quant::Precision::I32);
+    let art = artifact_of(g);
+    let (jr, br) = strict_verdicts(&art, "loose");
+    assert_eq!(jr, None, "warnings must not fail Strict");
+    assert_eq!(br, None);
+    let report = check_graph(&art.graph);
+    let f = report
+        .findings
+        .iter()
+        .find(|f| f.rule == rules::PRECISION_LOOSE)
+        .expect("loose stamp flagged");
+    assert_eq!(f.node, Some(act));
+}
+
+#[test]
+fn loose_stamp_also_costs_the_bitserial_route() {
+    // Same loose-stamp graph extended by a second GEMM with few-bit
+    // weights: the interval [0, 3] would qualify it for the bit-serial
+    // path, but the U8 stamp keeps it on the MAC kernels — the checker
+    // connects the two with a bitserial-missed warning.
+    let mut g = IntGraph::default();
+    let x = g.push("in", IntOp::Input { shape: vec![4], spec: u8_spec() }, &[]);
+    let wq: QTensor = Tensor::from_vec(&[4, 4], vec![1i32; 16]).into();
+    let l = g.push("fc1", IntOp::LinearInt { wq, bias_q: None }, &[x]);
+    let act = g.push(
+        "act",
+        IntOp::RequantAct { rq: Requant { m: 1, d: 9, lo: 0, hi: 3 } },
+        &[l],
+    );
+    g.stamp_precision(act, nemo::quant::Precision::U8);
+    let wq2: QTensor = Tensor::from_vec(&[4, 2], vec![1i32, -1, 1, -1, 1, 1, -1, -1]).into();
+    let out = g.push("fc2", IntOp::LinearInt { wq: wq2, bias_q: None }, &[act]);
+    g.output = out;
+    let report = check_graph(&g);
+    assert!(report.is_sound(), "{}", report.render_human());
+    let f = report
+        .findings
+        .iter()
+        .find(|f| f.rule == rules::BITSERIAL_MISSED)
+        .expect("missed bit-serial routing flagged");
+    assert_eq!(f.node, Some(out));
+}
+
+#[test]
+fn check_json_schema_is_stable_on_a_real_artifact() {
+    // The CI round-trip job greps these exact fields out of
+    // `nemo check --json`; pin them here too so the schema cannot
+    // drift silently.
+    let mut rng = Rng::new(42);
+    let (g, in_c) = random_net(&mut rng);
+    let x = rand_input(&mut rng, 2, in_c);
+    let fp = Network::from_graph(g).unwrap();
+    let betas = fp.calibrate(&[x.clone()]);
+    let dep = fp
+        .quantize_pact(8, 8, &betas)
+        .unwrap()
+        .deploy(DeployOptions::default())
+        .unwrap()
+        .integerize()
+        .into_deployed();
+    let text = check_graph(&dep.id).to_json("m.nemo.json");
+    let v = nemo::util::json::parse(&text).unwrap();
+    assert_eq!(v.get("format").unwrap().as_str().unwrap(), "nemo-check-report");
+    assert_eq!(v.get("version").unwrap().as_i64().unwrap(), 1);
+    assert_eq!(v.get("errors").unwrap().as_i64().unwrap(), 0);
+    assert_eq!(v.get("source").unwrap().as_str().unwrap(), "m.nemo.json");
+    let rule_ids: Vec<&str> = v
+        .get("rules")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|r| r.get("id").unwrap().as_str().unwrap())
+        .collect();
+    assert_eq!(rule_ids, rules::ALL);
+}
